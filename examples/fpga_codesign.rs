@@ -1,0 +1,89 @@
+//! Co-design exploration: sweep the HLS configuration space of the FPGA
+//! simulator — pipelining, write-buffer depth (RegSize), inlining —
+//! across dataset shapes and print the Pareto frontier the paper's
+//! Table 11 samples three points of.
+//!
+//! ```sh
+//! cargo run --release --example fpga_codesign
+//! ```
+
+use dfr_edge::data::profiles::PROFILES;
+use dfr_edge::fpga::design::{DesignConfig, SystemModel};
+use dfr_edge::fpga::resource::XC7Z020;
+use dfr_edge::fpga::schedule::{
+    accumulation_ii, ridge_solve_cycles, ScheduleConfig, ShapeParams,
+};
+use dfr_edge::report;
+
+fn main() {
+    // 1. the paper's three design points on the jpvow workload
+    let prof = dfr_edge::data::profiles::Profile::by_name("jpvow").unwrap();
+    let shape = ShapeParams::new(30, prof.n_v as u64, prof.n_c as u64, prof.t_max as u64);
+    println!("## Table 11 configurations (jpvow)\n");
+    println!(
+        "{}",
+        report::table11_markdown(shape, prof.train as u64, 25, 4, prof.test as u64)
+    );
+
+    // 2. RegSize sweep: Fig. 10's dependence-breaking in numbers
+    println!("## write-buffer depth sweep (ridge solve, s = 931)\n");
+    println!("{:>8} {:>4} {:>14} {:>10}", "RegSize", "II", "cycles", "speedup");
+    let base = {
+        let cfg = ScheduleConfig {
+            pipelined: true,
+            reg_size: 1,
+            inline_state_update: false,
+        };
+        ridge_solve_cycles(&shape, &cfg)
+    };
+    for reg in [1u32, 2, 3, 4, 6, 8, 16] {
+        let cfg = ScheduleConfig {
+            pipelined: true,
+            reg_size: reg,
+            inline_state_update: false,
+        };
+        let c = ridge_solve_cycles(&shape, &cfg);
+        println!(
+            "{:>8} {:>4} {:>14} {:>9.2}x",
+            reg,
+            accumulation_ii(reg),
+            c,
+            base as f64 / c as f64
+        );
+    }
+
+    // 3. does every dataset shape fit the chip? (resource feasibility)
+    println!("\n## resource feasibility per dataset shape (standard config)\n");
+    println!(
+        "{:<8} {:>8} {:>6} {:>7} {:>8}",
+        "dataset", "LUT%", "DSP%", "BRAM%", "fits?"
+    );
+    for p in &PROFILES {
+        let shape = ShapeParams::new(30, p.n_v as u64, p.n_c as u64, p.t_max as u64);
+        let m = SystemModel::new(shape, DesignConfig::Standard);
+        let r = m.total_resources();
+        let u = r.utilization(&XC7Z020);
+        println!(
+            "{:<8} {:>7.1}% {:>5.1}% {:>6.1}% {:>8}",
+            p.name,
+            100.0 * u.lut,
+            100.0 * u.dsp,
+            100.0 * u.bram36,
+            if r.fits(&XC7Z020) { "yes" } else { "NO" }
+        );
+    }
+
+    // 4. training-time scaling across dataset shapes (HW standard config)
+    println!("\n## modelled HW training time per dataset (25 epochs, 4 betas)\n");
+    println!("{:<8} {:>12} {:>12}", "dataset", "train (s)", "infer (s)");
+    for p in &PROFILES {
+        let shape = ShapeParams::new(30, p.n_v as u64, p.n_c as u64, p.t_max as u64);
+        let m = SystemModel::new(shape, DesignConfig::Standard);
+        println!(
+            "{:<8} {:>12.2} {:>12.3}",
+            p.name,
+            m.training_seconds(p.train as u64, 25, 4),
+            m.inference_seconds(p.test as u64)
+        );
+    }
+}

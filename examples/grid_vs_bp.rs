@@ -1,0 +1,68 @@
+//! Optimization-method comparison on one dataset: the §4.1 protocol's
+//! truncated-BP against grid search at increasing resolution — a
+//! single-dataset, human-readable version of Table 5 / Fig. 7.
+//!
+//! ```sh
+//! cargo run --release --example grid_vs_bp -- ecg
+//! ```
+
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::grid;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::train::{train, TrainConfig};
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::timer::fmt_secs;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "ecg".to_string());
+    let Some(prof) = Profile::by_name(&name) else {
+        eprintln!("unknown dataset '{name}'");
+        std::process::exit(1);
+    };
+    let mut ds = synth::generate(prof, 42);
+    // keep the sweep interactive for big datasets
+    ds.train.truncate(200);
+    ds.test.truncate(200);
+
+    let cfg = TrainConfig::default();
+    println!("dataset {name}: {} train / {} test, V={}, C={}", ds.train.len(), ds.test.len(), ds.n_v, ds.n_c);
+
+    println!("\n== proposed: truncated-BP SGD ==");
+    let model = train(&ds, &cfg);
+    let bp_acc = model.test_accuracy(&ds);
+    let bp_time = model.bp_seconds + model.ridge_seconds;
+    println!(
+        "p={:.4} q={:.4} beta={:.0e} acc={:.3} in {}",
+        model.reservoir.p,
+        model.reservoir.q,
+        model.solution.beta,
+        bp_acc,
+        fmt_secs(bp_time)
+    );
+    println!("epoch losses: {:?}", &model.epoch_losses[..model.epoch_losses.len().min(8)]);
+
+    println!("\n== baseline: grid search ==");
+    let mask = Mask::random(cfg.nx, ds.n_v, &mut Pcg32::seed(cfg.seed));
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut cum = 0.0;
+    for divs in 1..=5 {
+        let r = grid::search(&ds, &mask, &cfg, divs, threads);
+        cum += r.seconds;
+        println!(
+            "divs {divs}: best p={:.4} q={:.4} acc={:.3}  (sweep {}, cumulative {})",
+            r.best.p,
+            r.best.q,
+            r.best.accuracy,
+            fmt_secs(r.seconds),
+            fmt_secs(cum)
+        );
+        if r.best.accuracy >= bp_acc {
+            println!(
+                "→ grid matched bp accuracy at divs={divs}; cumulative cost {:.1}x bp",
+                cum / bp_time
+            );
+            break;
+        }
+    }
+}

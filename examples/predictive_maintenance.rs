@@ -1,0 +1,160 @@
+//! End-to-end driver: the paper's motivating use case (§1) — online
+//! predictive maintenance of factory equipment — run through the FULL
+//! stack: synthetic sensor streams → the coordinator's Collect →
+//! BpOptimize → RidgeTrain → Serve lifecycle → live inference with
+//! latency metrics, over the PJRT artifact engine when `make artifacts`
+//! has run (fallback: the native engine), plus a drift event that
+//! triggers online retraining.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example predictive_maintenance
+//! ```
+//!
+//! This is the repo's headline validation run; its output is recorded in
+//! EXPERIMENTS.md §End-to-end.
+
+use dfr_edge::coordinator::{
+    Engine, NativeEngine, PjrtEngine, Request, Response, Server, ServerConfig, SessionConfig,
+};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::runtime::{DfrExecutor, Manifest};
+use dfr_edge::util::timer::{fmt_secs, Stopwatch};
+
+fn main() {
+    // scenario: vibration+current sensors on a machine, jpvow-shaped
+    // (V=12 channels, 9 equipment states: healthy + 8 fault modes)
+    let profile = Profile::by_name("jpvow").unwrap();
+    let ds = synth::generate(profile, 42);
+    println!(
+        "predictive-maintenance scenario: {} channels, {} machine states",
+        profile.n_v, profile.n_c
+    );
+
+    // engine: PJRT artifacts when available (the paper's deployment path)
+    let (engine, backend): (Box<dyn Engine>, &str) = match Manifest::load("artifacts")
+        .and_then(|m| DfrExecutor::new(m.profile("jpvow")?))
+    {
+        Ok(exec) => {
+            println!(
+                "engine: PJRT ({}) over AOT artifacts — python is not running",
+                exec.platform()
+            );
+            (Box::new(PjrtEngine::new(exec)), "pjrt")
+        }
+        Err(e) => {
+            println!("engine: native (artifacts unavailable: {e:#})");
+            (Box::new(NativeEngine::new(30, profile.n_c)), "native")
+        }
+    };
+
+    // keep the online run at edge scale: collect 120 labelled windows
+    let collect = 120;
+    let mut scfg = SessionConfig::new(profile.n_v, profile.n_c, collect);
+    let _ = backend;
+    scfg.train.epochs = 25; // the paper's full protocol on both engines
+    scfg.retrain_after = Some(60);
+    let srv = Server::spawn(
+        engine,
+        ServerConfig {
+            session: scfg,
+            queue_cap: 256,
+            seed: 42,
+        },
+    );
+
+    // phase 1: stream labelled maintenance windows (technician-verified)
+    let sw = Stopwatch::start();
+    let mut train_info = None;
+    for s in ds.train.iter().take(collect) {
+        match srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .expect("server alive")
+        {
+            Response::Trained {
+                p,
+                q,
+                beta,
+                train_seconds,
+            } => {
+                train_info = Some((p, q, beta, train_seconds));
+            }
+            Response::Rejected(m) => panic!("rejected: {m}"),
+            _ => {}
+        }
+    }
+    let (p, q, beta, tsecs) = train_info.expect("training triggered");
+    println!(
+        "online training done in {}: p={p:.4} q={q:.4} beta={beta:.0e}",
+        fmt_secs(tsecs)
+    );
+
+    // phase 2: serve live inference traffic, measure accuracy + latency
+    let n = ds.test.len();
+    let mut correct = 0;
+    let infer_sw = Stopwatch::start();
+    for s in &ds.test {
+        match srv
+            .call(Request::Infer {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            Response::Prediction { class, scores } => {
+                assert_eq!(scores.len(), profile.n_c);
+                if class == s.label {
+                    correct += 1;
+                }
+            }
+            other => panic!("inference failed: {other:?}"),
+        }
+    }
+    let infer_total = infer_sw.elapsed_secs();
+    println!(
+        "served {n} requests: accuracy {:.3}, throughput {:.0} req/s, mean latency {}",
+        correct as f64 / n as f64,
+        n as f64 / infer_total,
+        fmt_secs(infer_total / n as f64)
+    );
+
+    // phase 3: drift event — the machine is refurbished, signals shift;
+    // technicians stream fresh labelled windows and the session retrains
+    let drifted: Vec<Sample> = ds
+        .train
+        .iter()
+        .skip(collect)
+        .take(60)
+        .map(|s| {
+            let mut s = s.clone();
+            for x in s.u.iter_mut() {
+                *x = 0.8 * *x + 0.1; // gain + offset drift
+            }
+            s
+        })
+        .collect();
+    let mut retrained = false;
+    for s in &drifted {
+        if let Response::Trained { train_seconds, .. } = srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            println!("drift retraining completed in {}", fmt_secs(train_seconds));
+            retrained = true;
+        }
+    }
+    assert!(retrained, "drift retraining did not trigger");
+
+    if let Response::StatsText(t) = srv.call(Request::Stats).unwrap() {
+        println!("--- metrics ---\n{t}");
+    }
+    println!("total wall time {}", fmt_secs(sw.elapsed_secs()));
+    srv.shutdown();
+}

@@ -1,0 +1,205 @@
+"""AOT compiler: lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per dataset profile (V, C, T_pad, Nx) five entry points are emitted:
+
+  forward     (u[T,V], len, mask[Nx,V], p, q) -> (R, xT, xTm1, jT)
+  train_step  (u, len, e[C], mask, p, q, W[C,s-1], b[C], lr_res, lr_out)
+              -> (p', q', W', b', loss)
+  infer       (u, len, mask, p, q, Wt[C,s]) -> y[C]
+  features    (u, len, mask, p, q) -> r_tilde[s]
+  step        (x_prev[Nx], u_t[V], mask, p, q) -> x[Nx]
+
+plus `manifest.json` describing shapes and argument order — the contract
+consumed by `rust/src/runtime/artifacts.rs`.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--profiles jpvow,ecg]
+        python -m compile.aot --all
+Python runs only here (build time); the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .profiles import DEFAULT_PROFILES, PROFILES
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
+    side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points(prof):
+    """(name, python callable, arg specs, output names) per artifact."""
+    t, v, c, nx = prof.t_pad, prof.n_v, prof.n_c, prof.nx
+    s = prof.s
+    u = spec((t, v))
+    ln = spec((), I32)
+    mask = spec((nx, v))
+    sc = spec(())
+
+    return [
+        (
+            "forward",
+            lambda u, ln, m, p, q: model.forward(u, ln, m, p, q),
+            [("u", u), ("length", ln), ("mask", mask), ("p", sc), ("q", sc)],
+            ["r_mat", "x_t", "x_tm1", "j_t"],
+        ),
+        (
+            "train_step",
+            lambda u, ln, e, m, p, q, w, b, lr, lo: model.train_step(
+                u, ln, e, m, p, q, w, b, lr, lo
+            ),
+            [
+                ("u", u),
+                ("length", ln),
+                ("e", spec((c,))),
+                ("mask", mask),
+                ("p", sc),
+                ("q", sc),
+                ("w", spec((c, s - 1))),
+                ("b", spec((c,))),
+                ("lr_res", sc),
+                ("lr_out", sc),
+            ],
+            ["p_new", "q_new", "w_new", "b_new", "loss"],
+        ),
+        (
+            "infer",
+            lambda u, ln, m, p, q, wt: (model.infer(u, ln, m, p, q, wt),),
+            [
+                ("u", u),
+                ("length", ln),
+                ("mask", mask),
+                ("p", sc),
+                ("q", sc),
+                ("w_tilde", spec((c, s))),
+            ],
+            ["y"],
+        ),
+        (
+            "features",
+            lambda u, ln, m, p, q: (model.features(u, ln, m, p, q),),
+            [("u", u), ("length", ln), ("mask", mask), ("p", sc), ("q", sc)],
+            ["r_tilde"],
+        ),
+        (
+            "step",
+            lambda x, ut, m, p, q: (model.stream_step(x, ut, m, p, q),),
+            [
+                ("x_prev", spec((nx,))),
+                ("u_t", spec((v,))),
+                ("mask", mask),
+                ("p", sc),
+                ("q", sc),
+            ],
+            ["x"],
+        ),
+    ]
+
+
+def _shape_of(sds):
+    return {"dims": list(sds.shape), "dtype": str(sds.dtype)}
+
+
+def compile_profile(prof, out_dir, force=False):
+    entries = {}
+    for name, fn, args, outs in entry_points(prof):
+        fname = f"{name}_{prof.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        arg_specs = [a for _, a in args]
+        key = hashlib.sha256(
+            json.dumps(
+                [name, prof.name, [(n, _shape_of(a)) for n, a in args]]
+            ).encode()
+        ).hexdigest()[:16]
+        entries[name] = {
+            "file": fname,
+            "args": [{"name": n, **_shape_of(a)} for n, a in args],
+            "outputs": outs,
+            "key": key,
+        }
+        if not force and os.path.exists(path):
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  wrote {fname} ({len(text)} chars)")
+    return {
+        "name": prof.name,
+        "n_v": prof.n_v,
+        "n_c": prof.n_c,
+        "t_pad": prof.t_pad,
+        "nx": prof.nx,
+        "s": prof.s,
+        "train": prof.train,
+        "test": prof.test,
+        "t_min": prof.t_min,
+        "t_max": prof.t_max,
+        "entries": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--profiles",
+        default=",".join(DEFAULT_PROFILES),
+        help="comma-separated profile names (see profiles.py)",
+    )
+    ap.add_argument("--all", action="store_true", help="compile all 12 profiles")
+    ap.add_argument("--force", action="store_true", help="recompile even if fresh")
+    args = ap.parse_args()
+
+    names = list(PROFILES) if args.all else args.profiles.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"nx_default": 30, "profiles": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            try:
+                manifest = json.load(fh)
+            except json.JSONDecodeError:
+                pass
+
+    for n in names:
+        prof = PROFILES[n.strip()]
+        print(f"profile {prof.name}: V={prof.n_v} C={prof.n_c} T_pad={prof.t_pad}")
+        manifest["profiles"][prof.name] = compile_profile(
+            prof, args.out_dir, force=args.force
+        )
+
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"manifest: {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for the DFR hot paths + pure-jnp oracle."""
+
+from . import dprr, ref, reservoir  # noqa: F401

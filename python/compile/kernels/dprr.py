@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: DPRR accumulation as a tiled matmul.
+
+The paper computes the dot-product reservoir representation (Eqs. 27-28)
+on the FPGA as T rank-1 sum-of-products updates with a BRAM write buffer
+(Algorithm 5 / Fig. 10). On a TPU the same reduction is one matmul:
+
+    X      = [x(1); ...; x(T)]            in R^{T x Nx}
+    X'     = [[x(0),1]; ...; [x(T-1),1]]  in R^{T x (Nx+1)}
+    R      = X^T @ X'                     in R^{Nx x (Nx+1)}
+
+so r = vec(R) (row-major) reproduces r_{(i-1)Nx+j} = sum_k x(k)_i x(k-1)_j
+and r_{Nx^2+i} = sum_k x(k)_i in one MXU-shaped contraction.
+
+The kernel tiles the T (reduction) axis with BlockSpec so each grid step
+streams one [bt, Nx] / [bt, Nx+1] pair HBM->VMEM and accumulates the
+[Nx, Nx+1] output tile in place — the TPU analogue of the paper's write
+buffer (the output tile never leaves VMEM during the reduction).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dprr_kernel(x_ref, xprev_ref, o_ref):
+    """Grid step i accumulates chunk i of the T-reduction.
+
+    x_ref:     [bt, Nx]    chunk of X
+    xprev_ref: [bt, Nx+1]  chunk of X' (augmented with the ones column)
+    o_ref:     [Nx, Nx+1]  accumulator tile (same block every grid step)
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    xp = xprev_ref[...]
+    o_ref[...] += jnp.dot(
+        x.T, xp, preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def dprr(xs, block_t=128):
+    """DPRR matrix R = X^T X' from the state history.
+
+    xs: [T, Nx] with xs[k] = x(k+1); x(0) = 0 implicit.
+    Returns R: [Nx, Nx+1]. Matches `ref.dprr_ref`.
+    """
+    t, nx = xs.shape
+    dtype = xs.dtype
+    prev = jnp.concatenate([jnp.zeros((1, nx), dtype), xs[:-1]], axis=0)
+    prev_aug = jnp.concatenate([prev, jnp.ones((t, 1), dtype)], axis=1)
+
+    bt = min(block_t, t)
+    # pad T to a multiple of bt (zero rows contribute nothing)
+    t_pad = ((t + bt - 1) // bt) * bt
+    if t_pad != t:
+        pad = ((0, t_pad - t), (0, 0))
+        xs = jnp.pad(xs, pad)
+        prev_aug = jnp.pad(prev_aug, pad)
+
+    grid = (t_pad // bt,)
+    return pl.pallas_call(
+        _dprr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, nx), lambda i: (i, 0)),
+            pl.BlockSpec((bt, nx + 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nx, nx + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, nx + 1), dtype),
+        interpret=True,
+    )(xs, prev_aug)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def dprr_pairs(hx, hp, block_t=128):
+    """R = hx^T @ hp for pre-shifted/pre-gated history pairs.
+
+    hx: [T, Nx] rows x(k) (zeroed on padded steps), hp: [T, Nx+1] rows
+    [x(k-1), 1] (zeroed likewise). Used by `model.forward`, which builds
+    the pairs inside its scan so length-gating happens once.
+    """
+    t, nx = hx.shape
+    dtype = hx.dtype
+    bt = min(block_t, t)
+    t_pad = ((t + bt - 1) // bt) * bt
+    if t_pad != t:
+        pad = ((0, t_pad - t), (0, 0))
+        hx = jnp.pad(hx, pad)
+        hp = jnp.pad(hp, pad)
+    grid = (t_pad // bt,)
+    return pl.pallas_call(
+        _dprr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, nx), lambda i: (i, 0)),
+            pl.BlockSpec((bt, nx + 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nx, nx + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, nx + 1), dtype),
+        interpret=True,
+    )(hx, hp)
+
+
+def dprr_hw_estimate(t, nx, block_t=128, dtype_bytes=4):
+    """VMEM/MXU estimate for DESIGN.md §Perf (L1).
+
+    Working set per grid step: input chunk pair + resident accumulator.
+    """
+    bt = min(block_t, t)
+    in_bytes = bt * (2 * nx + 1) * dtype_bytes
+    acc_bytes = nx * (nx + 1) * dtype_bytes
+    flops = 2 * t * nx * (nx + 1)
+    return {
+        "vmem_bytes_per_step": in_bytes + acc_bytes,
+        "mxu_tile_utilization": min(1.0, (nx * (nx + 1)) / (128 * 128)),
+        "flops_total": flops,
+        "hbm_traffic_bytes": t * (2 * nx + 1) * dtype_bytes + acc_bytes,
+    }

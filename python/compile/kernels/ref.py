@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the Pallas kernels (L1 correctness reference).
+
+Implements the modular DFR recurrences exactly as written in the paper:
+
+  Eq. (14)   x(k)_n = p * f(j(k)_n + x(k-1)_n) + q * x(k)_{n-1}
+             with the feedback-loop wrap x(k)_0 = x(k-1)_{Nx}
+  Eqs. (27)  r_{(i-1)Nx+j} = sum_k x(k)_i * x(k-1)_j
+  and (28)   r_{Nx^2+i}    = sum_k x(k)_i
+
+as straightforward sequential loops — the gold standard the vectorized
+Pallas kernels in `reservoir.py` / `dprr.py` are tested against.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def f_linear(x, alpha=1.0):
+    """The nonlinear function used throughout the paper's evaluation
+    (Section 4: "f(x) = alpha * x ... as recommended in [11]")."""
+    return alpha * x
+
+
+def f_mackey_glass(x, p_exp=1.0, eta=1.0):
+    """Mackey–Glass nonlinearity (paper Eq. (3)) for the conventional
+    digital DFR baseline."""
+    ax = jnp.abs(x)
+    return eta * x / (1.0 + ax**p_exp)
+
+
+def reservoir_step_ref(x_prev, j, p, q, f=f_linear):
+    """One modular-DFR time step, sequential over virtual nodes.
+
+    x_prev: [Nx] reservoir state x(k-1);  j: [Nx] masked input j(k).
+    Returns x(k): [Nx].
+    """
+    nx = x_prev.shape[0]
+    c = p * f(j + x_prev)  # per-node drive, Eq. (14) first term
+
+    def body(carry, cn):
+        xn = cn + q * carry
+        return xn, xn
+
+    # wrap: x(k)_0 == x(k-1)_{Nx}
+    _, xs = jax.lax.scan(body, x_prev[nx - 1], c)
+    return xs
+
+
+def mackey_glass_step_ref(x_prev, j, gamma, eta, p_exp, theta):
+    """One time step of the conventional digital DFR (paper Eqs. (8)-(9)).
+
+    x(k)_1 = x(k-1)_{Nx} e^-theta + (1 - e^-theta) f(x(k-1)_1, j(k)_1)
+    x(k)_n = x(k)_{n-1} e^-theta + (1 - e^-theta) f(x(k-1)_n, j(k)_n)
+    with f the Mackey-Glass map of Eq. (3).
+    """
+    nx = x_prev.shape[0]
+    e = jnp.exp(-theta)
+    u = x_prev + gamma * j
+    fv = eta * u / (1.0 + jnp.abs(u) ** p_exp)
+
+    def body(carry, fn):
+        xn = carry * e + (1.0 - e) * fn
+        return xn, xn
+
+    _, xs = jax.lax.scan(body, x_prev[nx - 1], fv)
+    return xs
+
+
+def dprr_ref(xs):
+    """DPRR from the full state history, sequential over time.
+
+    xs: [T, Nx] with xs[k] = x(k+1) (x(0) = 0 is implicit).
+    Returns R: [Nx, Nx+1] where R[i, j<Nx] = sum_k x(k)_i x(k-1)_j and
+    R[i, Nx] = sum_k x(k)_i  (Eqs. (27)-(28) laid out as a matrix;
+    r = vec(R) row-major).
+    """
+    t, nx = xs.shape
+    prev = jnp.concatenate([jnp.zeros((1, nx), xs.dtype), xs[:-1]], axis=0)
+    prev_aug = jnp.concatenate([prev, jnp.ones((t, 1), xs.dtype)], axis=1)
+
+    def body(acc, kv):
+        xk, pk = kv
+        return acc + jnp.outer(xk, pk), None
+
+    acc0 = jnp.zeros((nx, nx + 1), xs.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (xs, prev_aug))
+    return acc
+
+
+def forward_ref(u, length, mask, p, q, f=f_linear):
+    """Full forward pass oracle over a padded series.
+
+    u: [T_pad, V], length: scalar int (valid prefix), mask: [Nx, V].
+    Returns (R [Nx,Nx+1], x_T [Nx], x_Tm1 [Nx], j_T [Nx]).
+    Padded steps (k >= length) leave all state untouched.
+    """
+    t_pad, _ = u.shape
+    nx = mask.shape[0]
+    dtype = u.dtype
+
+    x = jnp.zeros((nx,), dtype)
+    x_m1 = jnp.zeros((nx,), dtype)
+    j_last = jnp.zeros((nx,), dtype)
+    acc = jnp.zeros((nx, nx + 1), dtype)
+    for k in range(t_pad):
+        valid = k < length
+        jk = mask @ u[k]
+        x_new = reservoir_step_ref(x, jk, p, q, f)
+        prev_aug = jnp.concatenate([x, jnp.ones((1,), dtype)])
+        acc = jnp.where(valid, acc + jnp.outer(x_new, prev_aug), acc)
+        x_m1 = jnp.where(valid, x, x_m1)
+        j_last = jnp.where(valid, jk, j_last)
+        x = jnp.where(valid, x_new, x)
+    inv_t = 1.0 / jnp.maximum(jnp.asarray(length), 1).astype(dtype)
+    return acc * inv_t, x, x_m1, j_last

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: one modular-DFR time step over all Nx virtual nodes.
+
+The paper's FPGA pipelines the node cascade
+
+    x(k)_n = p * f(j(k)_n + x(k-1)_n) + q * x(k)_{n-1}     (Eq. 14)
+
+at II=1 over n. That schedule is meaningless on a TPU; the hardware
+adaptation (DESIGN.md §Hardware-Adaptation) re-expresses the first-order
+linear recurrence in closed form as a dense lower-triangular matvec that
+feeds the MXU:
+
+    c_n     = p * f(j_n + x(k-1)_n)                (vectorised, VPU)
+    x(k)_n  = q^n * x(k-1)_{Nx} + sum_{m<=n} q^{n-m} c_m
+            = qpow_n * x0 + (L @ c)_n              (MXU, L[n,m] = q^{n-m})
+
+The q-power matrix L is rebuilt from the traced scalar q each step; with
+Nx = 30 it is a 30x30 fp32 tile, far below one MXU pass — the whole state
+update lives in VMEM.
+
+Kernel runs `interpret=True` so the CPU PJRT plugin can execute the
+lowered HLO (real-TPU lowering emits a Mosaic custom-call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _powers_matrix(q, nx, dtype):
+    """L[n, m] = q^(n-m) for m <= n else 0, plus the q^n wrap vector.
+
+    Integer exponents so a negative q (reachable during SGD) stays exact.
+    """
+    n_idx = jax.lax.broadcasted_iota(jnp.int32, (nx, nx), 0)
+    m_idx = jax.lax.broadcasted_iota(jnp.int32, (nx, nx), 1)
+    diff = n_idx - m_idx
+    tri = (diff >= 0).astype(dtype)
+    # q^diff via exp/log is invalid for q<=0; use cumulative products:
+    # row of powers [q^0, q^1, ..., q^(nx-1)] then gather by diff.
+    pows = jnp.concatenate(
+        [jnp.ones((1,), dtype), jnp.cumprod(jnp.full((nx - 1,), q, dtype))]
+    )
+    l_mat = tri * pows[jnp.clip(diff, 0, nx - 1)]
+    # wrap coefficients q^n for n = 1..Nx
+    qpow = pows * q
+    return l_mat, qpow
+
+
+def _step_kernel(xprev_ref, j_ref, pq_ref, x_ref, *, nx, f):
+    """Pallas body: state update for one time step.
+
+    xprev_ref: [1, Nx]   x(k-1)
+    j_ref:     [1, Nx]   masked input j(k)
+    pq_ref:    [1, 2]    packed (p, q) scalars
+    x_ref:     [1, Nx]   out: x(k)
+    """
+    xprev = xprev_ref[0, :]
+    j = j_ref[0, :]
+    p = pq_ref[0, 0]
+    q = pq_ref[0, 1]
+    dtype = xprev.dtype
+
+    c = p * f(j + xprev)
+    l_mat, qpow = _powers_matrix(q, nx, dtype)
+    x0 = xprev[nx - 1]
+    x = qpow * x0 + l_mat @ c
+    x_ref[0, :] = x
+
+
+@functools.partial(jax.jit, static_argnames=("f",))
+def reservoir_step(x_prev, j, p, q, f=ref.f_linear):
+    """One modular-DFR time step via the Pallas kernel.
+
+    x_prev: [Nx], j: [Nx], p/q scalars. Returns x(k): [Nx].
+    Matches `ref.reservoir_step_ref` to fp32 round-off.
+    """
+    nx = x_prev.shape[0]
+    dtype = x_prev.dtype
+    pq = jnp.stack([jnp.asarray(p, dtype), jnp.asarray(q, dtype)]).reshape(1, 2)
+    out = pl.pallas_call(
+        functools.partial(_step_kernel, nx=nx, f=f),
+        out_shape=jax.ShapeDtypeStruct((1, nx), dtype),
+        interpret=True,
+    )(x_prev.reshape(1, nx), j.reshape(1, nx), pq)
+    return out[0]
+
+
+def reservoir_step_hw_estimate(nx, dtype_bytes=4):
+    """VMEM footprint / MXU-shape estimate for DESIGN.md §Perf (L1).
+
+    Returns a dict with the VMEM working set (bytes) and the MXU tile
+    occupancy of the triangular matvec, the quantities the paper budgets
+    as BRAM/DSP on the Zynq.
+    """
+    vecs = 5 * nx  # xprev, j, c, qpow, x
+    l_mat = nx * nx
+    vmem_bytes = (vecs + l_mat) * dtype_bytes
+    mxu = 128 * 128
+    return {
+        "vmem_bytes": vmem_bytes,
+        "mxu_tile_utilization": (nx * nx) / mxu,
+        "flops_per_step": 2 * nx * nx + 6 * nx,
+    }

@@ -1,0 +1,230 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Everything the FPGA datapath computes per sample lives here:
+
+  forward       mask -> modular reservoir (scan over time, Pallas step
+                kernel) -> DPRR (Pallas matmul kernel) -> (R, x_T, x_{T-1},
+                j_T) — paper Eqs. (14), (27), (28)
+  train_step    forward + softmax cross-entropy (Eqs. 24-25) + TRUNCATED
+                backpropagation (Eqs. 26, 33-36) + SGD update — the
+                paper's reservoir-parameter optimization contribution
+  infer         forward + output layer y = W̃_out r̃ (Eq. 17)
+  step          single streaming state update (online path)
+
+These functions are lowered ONCE per dataset profile by `aot.py` to HLO
+text; the Rust runtime executes them via PJRT. The in-place Cholesky ridge
+regression (Algorithms 1-5) intentionally does NOT live here — it is the
+paper's memory-layout contribution and is implemented natively in
+`rust/src/linalg/` (see DESIGN.md §2).
+
+Shapes are static per profile: u [T_pad, V] padded, `length` an int32
+scalar selecting the valid prefix; padded steps are fully gated so results
+are bit-identical to processing the unpadded series.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dprr as dprr_k
+from .kernels import ref
+from .kernels import reservoir as res_k
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward(u, length, mask, p, q, f=ref.f_linear, use_pallas=True):
+    """Reservoir forward pass over a padded series.
+
+    u: [T_pad, V] float32, length: int32 scalar, mask: [Nx, V], p/q scalars.
+    Returns (R [Nx, Nx+1], x_T [Nx], x_Tm1 [Nx], j_T [Nx]).
+    """
+    t_pad, _ = u.shape
+    nx = mask.shape[0]
+    dtype = u.dtype
+    step_fn = res_k.reservoir_step if use_pallas else ref.reservoir_step_ref
+
+    js = u @ mask.T  # [T_pad, Nx] masked inputs j(k) = M u(k)
+
+    def body(carry, inp):
+        x, x_m1, j_last = carry
+        jk, k = inp
+        valid = k < length
+        x_new = step_fn(x, jk, p, q, f)
+        # per-step DPRR rows, zeroed when padded (kills the contribution)
+        hist_x = jnp.where(valid, x_new, jnp.zeros_like(x_new))
+        hist_prev = jnp.where(
+            valid,
+            jnp.concatenate([x, jnp.ones((1,), dtype)]),
+            jnp.zeros((nx + 1,), dtype),
+        )
+        x_m1 = jnp.where(valid, x, x_m1)
+        j_last = jnp.where(valid, jk, j_last)
+        x = jnp.where(valid, x_new, x)
+        return (x, x_m1, j_last), (hist_x, hist_prev)
+
+    zero = jnp.zeros((nx,), dtype)
+    (x_t, x_tm1, j_t), (hx, hp) = jax.lax.scan(
+        body, (zero, zero, zero), (js, jnp.arange(t_pad, dtype=jnp.int32))
+    )
+    if use_pallas:
+        r_mat = dprr_k.dprr_pairs(hx, hp)
+    else:
+        r_mat = hx.T @ hp
+    # 1/T normalization: keeps feature magnitude (and the fixed β grid)
+    # independent of the series length — see rust/src/dfr/reservoir.rs
+    # and DESIGN.md §10.
+    inv_t = 1.0 / jnp.maximum(length, 1).astype(dtype)
+    return r_mat * inv_t, x_t, x_tm1, j_t
+
+
+# ---------------------------------------------------------------------------
+# output layer + loss (Eqs. 13, 24, 25)
+# ---------------------------------------------------------------------------
+
+
+def output_layer(r, w, b):
+    """y = softmax(W r + b). r: [s-1], w: [C, s-1], b: [C]."""
+    z = w @ r + b
+    z = z - jnp.max(z)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez)
+
+
+def cross_entropy(y, e, eps=1e-12):
+    """Paper Eq. (24)."""
+    return -jnp.sum(e * jnp.log(y + eps))
+
+
+# ---------------------------------------------------------------------------
+# truncated backpropagation (Eqs. 25-26, 33-36)
+# ---------------------------------------------------------------------------
+
+
+def truncated_grads(r_mat, x_t, x_tm1, j_t, e, p, q, w, b, t_len, f=ref.f_linear):
+    """Explicit truncated-BP gradients, the paper's formulas verbatim
+    (with the DPRR 1/T normalization carried through the chain rule).
+
+    Returns (loss, dp, dq, dW, db).
+    """
+    nx = x_t.shape[0]
+    r = r_mat.reshape(-1)  # row-major vec: r_{(i-1)Nx+j} then sums column
+
+    y = output_layer(r, w, b)
+    loss = cross_entropy(y, e)
+
+    dz = y - e  # Eq. (25), through softmax
+    db = dz  # Eq. (26)
+    dw = jnp.outer(dz, r)  # Eq. (26)
+    dr = (w.T @ dz).reshape(nx, nx + 1)  # Eq. (26)
+
+    # Eq. (33): bpv_n = sum_j x(T-1)_j dL/dr_{(n-1)Nx+j} + dL/dr_{Nx^2+n},
+    # scaled by the DPRR 1/T normalization
+    inv_t = 1.0 / jnp.maximum(t_len, 1).astype(r.dtype)
+    bpv = (dr[:, :nx] @ x_tm1 + dr[:, nx]) * inv_t
+
+    # Eq. (34): dL/dx(T)_n = bpv_n + q * dL/dx(T)_{n+1}, reverse over n
+    def rev_body(carry, b_n):
+        dx_n = b_n + q * carry
+        return dx_n, dx_n
+
+    _, dx_rev = jax.lax.scan(rev_body, jnp.zeros((), r.dtype), bpv[::-1])
+    dx = dx_rev[::-1]  # [Nx]
+
+    # Eq. (35): dL/dp = sum_n f(j(T)_n + x(T-1)_n) dL/dx(T)_n
+    dp = jnp.sum(f(j_t + x_tm1) * dx)
+
+    # Eq. (36): dL/dq = sum_n x(T)_{n-1} dL/dx(T)_n, x(T)_0 = x(T-1)_{Nx}
+    x_shift = jnp.concatenate([x_tm1[nx - 1 :], x_t[: nx - 1]])
+    dq = jnp.sum(x_shift * dx)
+
+    return loss, dp, dq, dw, db
+
+
+# Reservoir-parameter gradients are clipped to ±GRAD_CLIP before the SGD
+# update — mirrors rust/src/dfr/train.rs (f32 + per-sample SGD can spike
+# early gradients past the p+q<1 stability boundary).
+GRAD_CLIP = 1.0
+
+
+def train_step(
+    u, length, e, mask, p, q, w, b, lr_res, lr_out, f=ref.f_linear, use_pallas=True
+):
+    """One online SGD step (paper §4.1 protocol body).
+
+    Returns (p', q', W', b', loss).
+    """
+    r_mat, x_t, x_tm1, j_t = forward(u, length, mask, p, q, f, use_pallas)
+    loss, dp, dq, dw, db = truncated_grads(
+        r_mat, x_t, x_tm1, j_t, e, p, q, w, b, length, f
+    )
+    dp = jnp.clip(dp, -GRAD_CLIP, GRAD_CLIP)
+    dq = jnp.clip(dq, -GRAD_CLIP, GRAD_CLIP)
+    return (
+        p - lr_res * dp,
+        q - lr_res * dq,
+        w - lr_out * dw,
+        b - lr_out * db,
+        loss,
+    )
+
+
+def infer(u, length, mask, p, q, w_tilde, f=ref.f_linear, use_pallas=True):
+    """Inference with the ridge-trained output layer W̃_out (Eq. 17).
+
+    w_tilde: [C, s] acting on r̃ = [r, 1]. Returns class probabilities [C].
+    """
+    r_mat, _, _, _ = forward(u, length, mask, p, q, f, use_pallas)
+    r_tilde = jnp.concatenate([r_mat.reshape(-1), jnp.ones((1,), u.dtype)])
+    z = w_tilde @ r_tilde
+    z = z - jnp.max(z)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez)
+
+
+def features(u, length, mask, p, q, f=ref.f_linear, use_pallas=True):
+    """Reservoir representation r̃ = [r, 1] for the ridge accumulation
+    path (the Rust coordinator folds r̃ into A and packed B)."""
+    r_mat, _, _, _ = forward(u, length, mask, p, q, f, use_pallas)
+    return jnp.concatenate([r_mat.reshape(-1), jnp.ones((1,), u.dtype)])
+
+
+def stream_step(x_prev, u_t, mask, p, q, f=ref.f_linear, use_pallas=True):
+    """Single streaming state update for the online serving path."""
+    jk = mask @ u_t
+    step_fn = res_k.reservoir_step if use_pallas else ref.reservoir_step_ref
+    return step_fn(x_prev, jk, p, q, f)
+
+
+# ---------------------------------------------------------------------------
+# full-BPTT oracle (Eqs. 29-32) — used in tests to quantify what the
+# truncation discards; not exported as an artifact.
+# ---------------------------------------------------------------------------
+
+
+def full_loss(u, length, mask, p, q, w, b, f=ref.f_linear):
+    """Differentiable end-to-end loss for jax.grad (full BPTT oracle)."""
+    r_mat, _, _, _ = forward(u, length, mask, p, q, f, use_pallas=False)
+    return lambda e: cross_entropy(output_layer(r_mat.reshape(-1), w, b), e)
+
+
+def truncated_surrogate_loss(u, length, e, mask, p, q, w, b, f=ref.f_linear):
+    """Loss whose exact jax.grad wrt (p, q) equals the paper's truncated
+    formulas (Eqs. 33-36): gradients flow ONLY through the last time
+    step's contribution to r, with x(T-1) held constant.
+    """
+    sg = jax.lax.stop_gradient
+    r_mat, x_t, x_tm1, j_t = forward(u, length, mask, p, q, f, use_pallas=False)
+    # recompute x(T) differentiably from frozen x(T-1); the last-step
+    # contribution enters R with the same 1/T normalization as forward()
+    inv_t = 1.0 / jnp.maximum(length, 1).astype(u.dtype)
+    x_t_diff = ref.reservoir_step_ref(sg(x_tm1), sg(j_t), p, q, f)
+    prev_aug = jnp.concatenate([sg(x_tm1), jnp.ones((1,), u.dtype)])
+    last_contrib = jnp.outer(x_t_diff, prev_aug) * inv_t
+    r_sur = sg(r_mat - jnp.outer(x_t, prev_aug) * inv_t) + last_contrib
+    y = output_layer(r_sur.reshape(-1), sg(w), sg(b))
+    return cross_entropy(y, e)

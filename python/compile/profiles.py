@@ -1,0 +1,56 @@
+"""Dataset profiles (paper Table 4) shared by the AOT compiler and tests.
+
+Each profile fixes the static shapes an HLO artifact is specialized for:
+input dimension V, class count C, padded series length T_pad (= T_max of
+the dataset), and the reservoir size Nx (30 throughout the paper).
+
+The Rust side carries the same table in `rust/src/data/profiles.rs`; the
+`manifest.json` emitted by aot.py is the contract between the two.
+"""
+
+from dataclasses import dataclass
+
+
+NX_DEFAULT = 30
+
+
+@dataclass(frozen=True)
+class Profile:
+    name: str
+    n_v: int  # input dimension  (#V)
+    n_c: int  # output classes   (#C)
+    train: int  # training samples
+    test: int  # test samples
+    t_min: int
+    t_max: int
+    nx: int = NX_DEFAULT
+
+    @property
+    def t_pad(self) -> int:
+        return self.t_max
+
+    @property
+    def s(self) -> int:
+        """Ridge system size s = Nx^2 + Nx + 1 (paper Eq. 20)."""
+        return self.nx * self.nx + self.nx + 1
+
+
+# Table 4 of the paper (#V, #C, Train, Test, Tmin, Tmax).
+PROFILES = {
+    "arab": Profile("arab", 13, 10, 6600, 2200, 4, 93),
+    "aus": Profile("aus", 22, 95, 1140, 1425, 45, 136),
+    "char": Profile("char", 3, 20, 300, 2558, 109, 205),
+    "cmu": Profile("cmu", 62, 2, 29, 29, 127, 580),
+    "ecg": Profile("ecg", 2, 2, 100, 100, 39, 152),
+    "jpvow": Profile("jpvow", 12, 9, 270, 370, 7, 29),
+    "kick": Profile("kick", 62, 2, 16, 10, 274, 841),
+    "lib": Profile("lib", 2, 15, 180, 180, 45, 45),
+    "net": Profile("net", 4, 13, 803, 534, 50, 994),
+    "uwav": Profile("uwav", 3, 8, 200, 427, 315, 315),
+    "waf": Profile("waf", 6, 2, 298, 896, 104, 198),
+    "walk": Profile("walk", 62, 2, 28, 16, 128, 1918),
+}
+
+# Profiles compiled by default (`make artifacts`); jpvow is the paper's
+# hardware-evaluation dataset (Table 9).
+DEFAULT_PROFILES = ("jpvow", "ecg", "lib")

@@ -1,0 +1,95 @@
+"""Emit golden npz files for the Rust cross-language tests.
+
+Inputs are deterministic closed-form arrays (no PRNG to keep in sync):
+
+    u[k, v]    = sin(0.1 (k+1) (v+1)) + 0.05 cos(0.3 (k+1))
+    mask[n, v] = +1 if (7n + 3v) % 2 == 0 else -1
+
+so `rust/src/dfr/` regenerates the identical inputs and compares its
+forward pass / DPRR / truncated gradients against the JAX reference
+recorded here. Written by `make artifacts` into artifacts/golden/.
+"""
+
+import os
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model
+from compile.kernels import ref
+
+
+def inputs(t, v, nx):
+    k = np.arange(1, t + 1)[:, None]
+    vv = np.arange(1, v + 1)[None, :]
+    u = np.sin(0.1 * k * vv) + 0.05 * np.cos(0.3 * k)
+    n = np.arange(nx)[:, None]
+    vm = np.arange(v)[None, :]
+    mask = np.where((7 * n + 3 * vm) % 2 == 0, 1.0, -1.0)
+    return u.astype(np.float32), mask.astype(np.float32)
+
+
+def golden_case(t, v, nx, c, p, q, length):
+    u, mask = inputs(t, v, nx)
+    uj, maskj = jnp.asarray(u), jnp.asarray(mask)
+    r_mat, x_t, x_tm1, j_t = model.forward(
+        uj, jnp.int32(length), maskj, p, q, use_pallas=False
+    )
+    # deterministic output layer + one-hot target for the gradient check
+    s1 = nx * (nx + 1)
+    w = (0.01 * np.sin(0.05 * np.arange(c * s1))).reshape(c, s1).astype(np.float32)
+    b = np.linspace(-0.1, 0.1, c).astype(np.float32)
+    e = np.zeros(c, np.float32)
+    e[1 % c] = 1.0
+    loss, dp, dq, dw, db = model.truncated_grads(
+        r_mat, x_t, x_tm1, j_t, jnp.asarray(e), p, q, jnp.asarray(w),
+        jnp.asarray(b), jnp.int32(length),
+    )
+    return {
+        "t": np.int32(t),
+        "v": np.int32(v),
+        "nx": np.int32(nx),
+        "c": np.int32(c),
+        "p": np.float32(p),
+        "q": np.float32(q),
+        "length": np.int32(length),
+        "u": u,
+        "mask": mask,
+        "r_mat": np.asarray(r_mat),
+        "x_t": np.asarray(x_t),
+        "x_tm1": np.asarray(x_tm1),
+        "j_t": np.asarray(j_t),
+        "w": w,
+        "b": b,
+        "e": e,
+        "loss": np.float32(loss),
+        "dp": np.float32(dp),
+        "dq": np.float32(dq),
+        "dw": np.asarray(dw),
+        "db": np.asarray(db),
+    }
+
+
+CASES = [
+    ("small", dict(t=12, v=2, nx=5, c=3, p=0.2, q=0.15, length=12)),
+    ("padded", dict(t=40, v=3, nx=8, c=4, p=0.3, q=-0.2, length=23)),
+    ("paper_nx30", dict(t=29, v=12, nx=30, c=9, p=0.1, q=0.05, length=29)),
+]
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "golden"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    for name, kw in CASES:
+        path = os.path.join(out_dir, f"{name}.npz")
+        np.savez(path, **golden_case(**kw))
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

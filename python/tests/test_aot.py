@@ -1,0 +1,80 @@
+"""AOT path: HLO text emission, manifest contract, artifact freshness."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import aot  # noqa: E402
+from compile.profiles import PROFILES  # noqa: E402
+
+
+def test_hlo_text_emission_smallest_profile():
+    prof = PROFILES["jpvow"]
+    entries = aot.entry_points(prof)
+    names = [e[0] for e in entries]
+    assert names == ["forward", "train_step", "infer", "features", "step"]
+    # lower the cheapest entry and check it is parseable HLO text
+    name, fn, args, outs = entries[-1]
+    lowered = jax.jit(fn).lower(*[a for _, a in args])
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_roundtrip(tmp_path):
+    prof = PROFILES["jpvow"]
+    m = aot.compile_profile(prof, str(tmp_path))
+    assert m["s"] == 30 * 30 + 30 + 1 == 931
+    assert set(m["entries"]) == {"forward", "train_step", "infer", "features", "step"}
+    for e in m["entries"].values():
+        assert os.path.exists(tmp_path / e["file"])
+        assert all("dims" in a and "dtype" in a for a in e["args"])
+    # incremental: second run must not rewrite
+    mtimes = {e["file"]: os.path.getmtime(tmp_path / e["file"]) for e in m["entries"].values()}
+    aot.compile_profile(prof, str(tmp_path))
+    for f, t in mtimes.items():
+        assert os.path.getmtime(tmp_path / f) == t
+
+
+def test_profile_table_matches_paper_table4():
+    """Table 4 constants."""
+    expected = {
+        "arab": (13, 10, 6600, 2200, 4, 93),
+        "aus": (22, 95, 1140, 1425, 45, 136),
+        "char": (3, 20, 300, 2558, 109, 205),
+        "cmu": (62, 2, 29, 29, 127, 580),
+        "ecg": (2, 2, 100, 100, 39, 152),
+        "jpvow": (12, 9, 270, 370, 7, 29),
+        "kick": (62, 2, 16, 10, 274, 841),
+        "lib": (2, 15, 180, 180, 45, 45),
+        "net": (4, 13, 803, 534, 50, 994),
+        "uwav": (3, 8, 200, 427, 315, 315),
+        "waf": (6, 2, 298, 896, 104, 198),
+        "walk": (62, 2, 28, 16, 128, 1918),
+    }
+    assert set(PROFILES) == set(expected)
+    for k, (v, c, tr, te, tmin, tmax) in expected.items():
+        p = PROFILES[k]
+        assert (p.n_v, p.n_c, p.train, p.test, p.t_min, p.t_max) == (
+            v, c, tr, te, tmin, tmax,
+        ), k
+
+
+def test_repo_artifacts_manifest_if_present():
+    """If `make artifacts` has run, the manifest must be consistent."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as fh:
+        manifest = json.load(fh)
+    for prof in manifest["profiles"].values():
+        for e in prof["entries"].values():
+            assert os.path.exists(os.path.join(root, e["file"])), e["file"]

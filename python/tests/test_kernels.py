@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/params; assert_allclose against ref — the core
+correctness signal for everything the artifacts compute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import dprr, ref, reservoir  # noqa: E402
+
+F32 = jnp.float32
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# reservoir step kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    nx=st.integers(min_value=2, max_value=64),
+    p=st.floats(min_value=-1.0, max_value=1.0, allow_nan=False),
+    q=st.floats(min_value=-0.95, max_value=0.95, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_reservoir_step_matches_ref(nx, p, q, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x_prev = jax.random.normal(k1, (nx,), F32)
+    j = jax.random.normal(k2, (nx,), F32)
+    got = reservoir.reservoir_step(x_prev, j, p, q)
+    want = ref.reservoir_step_ref(x_prev, j, p, q)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("nx", [1, 2, 30])
+def test_reservoir_step_zero_state_zero_input(nx):
+    z = jnp.zeros((nx,), F32)
+    got = reservoir.reservoir_step(z, z, 0.3, 0.4)
+    np.testing.assert_allclose(got, np.zeros(nx), atol=0)
+
+
+def test_reservoir_step_wrap_feedback():
+    """x(k)_1 must see x(k-1)_{Nx} through q (Eq. 8 wrap)."""
+    nx = 4
+    x_prev = jnp.array([0.0, 0.0, 0.0, 2.0], F32)
+    j = jnp.zeros((nx,), F32)
+    q = 0.5
+    got = np.asarray(reservoir.reservoir_step(x_prev, j, 0.0, q))
+    # with p=0: x_1 = q * x_prev[Nx-1] = 1.0, x_n = q x_{n-1}
+    np.testing.assert_allclose(got, [1.0, 0.5, 0.25, 0.125], rtol=1e-6)
+
+
+def test_reservoir_step_negative_q():
+    """Integer q-powers must handle q < 0 (reachable during SGD)."""
+    nx = 8
+    x_prev = rand(0, (nx,))
+    j = rand(1, (nx,))
+    got = reservoir.reservoir_step(x_prev, j, 0.5, -0.7)
+    want = ref.reservoir_step_ref(x_prev, j, 0.5, -0.7)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_reservoir_step_mackey_glass_nl():
+    nx = 16
+    x_prev = rand(2, (nx,))
+    j = rand(3, (nx,))
+    f = lambda x: ref.f_mackey_glass(x, p_exp=2.0, eta=0.9)
+    got = reservoir.reservoir_step(x_prev, j, 0.4, 0.2, f=f)
+    want = ref.reservoir_step_ref(x_prev, j, 0.4, 0.2, f=f)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# DPRR kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=300),
+    nx=st.integers(min_value=2, max_value=40),
+    block_t=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dprr_matches_ref(t, nx, block_t, seed):
+    xs = jax.random.normal(jax.random.PRNGKey(seed), (t, nx), F32)
+    got = dprr.dprr(xs, block_t=block_t)
+    want = ref.dprr_ref(xs)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+def test_dprr_single_step():
+    """T=1: R = x(1) ⊗ [x(0)=0, 1] — only the sums column is nonzero."""
+    xs = jnp.array([[1.0, 2.0, 3.0]], F32)
+    r = np.asarray(dprr.dprr(xs))
+    np.testing.assert_allclose(r[:, :3], np.zeros((3, 3)), atol=0)
+    np.testing.assert_allclose(r[:, 3], [1.0, 2.0, 3.0], atol=0)
+
+
+def test_dprr_block_t_invariance():
+    xs = rand(7, (173, 13))
+    a = dprr.dprr(xs, block_t=16)
+    b = dprr.dprr(xs, block_t=173)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_dprr_pairs_equals_shifted():
+    xs = rand(9, (50, 6))
+    t, nx = xs.shape
+    prev = jnp.concatenate([jnp.zeros((1, nx), F32), xs[:-1]], axis=0)
+    hp = jnp.concatenate([prev, jnp.ones((t, 1), F32)], axis=1)
+    np.testing.assert_allclose(
+        dprr.dprr_pairs(xs, hp, block_t=32), ref.dprr_ref(xs), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mackey–Glass digital DFR reference (Eqs. 8-9) sanity
+# ---------------------------------------------------------------------------
+
+
+def test_mackey_glass_step_bounded():
+    nx = 20
+    x = jnp.zeros((nx,), F32)
+    for k in range(50):
+        j = rand(k, (nx,), scale=0.5)
+        x = ref.mackey_glass_step_ref(x, j, gamma=0.5, eta=0.9, p_exp=2.0, theta=0.2)
+    assert np.all(np.isfinite(np.asarray(x)))
+    assert np.max(np.abs(np.asarray(x))) < 10.0
+
+
+def test_hw_estimates_shapes():
+    est = reservoir.reservoir_step_hw_estimate(30)
+    assert est["vmem_bytes"] == (5 * 30 + 900) * 4
+    est2 = dprr.dprr_hw_estimate(500, 30)
+    assert est2["flops_total"] == 2 * 500 * 30 * 31

@@ -1,0 +1,47 @@
+//! Shared helpers for the bench targets (harness = false).
+//!
+//! The paper's evaluation runs full-size datasets for hours; the bench
+//! suite reproduces each table/figure's *shape* on subsampled datasets so
+//! `cargo bench` completes in minutes. `DFR_BENCH_FULL=1` lifts the caps
+//! (used for the EXPERIMENTS.md numbers).
+
+use dfr_edge::data::dataset::Dataset;
+use dfr_edge::data::{profiles::Profile, synth};
+
+/// Subsample caps for bench mode.
+pub const BENCH_TRAIN_CAP: usize = 160;
+pub const BENCH_TEST_CAP: usize = 160;
+
+pub fn full_mode() -> bool {
+    std::env::var("DFR_BENCH_FULL").as_deref() == Ok("1")
+}
+
+/// Dataset for bench runs: full shape statistics, subsampled counts.
+pub fn bench_dataset(name: &str, seed: u64) -> Dataset {
+    let prof = Profile::by_name(name).expect("profile");
+    let mut ds = synth::generate(prof, seed);
+    if !full_mode() {
+        ds.train.truncate(BENCH_TRAIN_CAP);
+        ds.test.truncate(BENCH_TEST_CAP);
+    }
+    ds
+}
+
+/// Threads for parallel sweeps.
+pub fn threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// CSV writer helper: rows of stringy cells.
+pub fn write_csv(file: &str, header: &str, rows: &[Vec<String>]) {
+    let mut s = String::from(header);
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    dfr_edge::util::bench::write_results_file(file, &s).expect("write results");
+    println!("→ results/{file}");
+}

@@ -1,0 +1,53 @@
+//! Fig. 7: accuracy versus optimization time on LIB — the proposed bp
+//! reaches its accuracy orders of magnitude before grid search, whose
+//! cumulative cost grows quadratically with the division count.
+
+mod common;
+
+use dfr_edge::dfr::grid;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::train::{train, TrainConfig};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    let ds = common::bench_dataset("lib", 42);
+    let cfg = TrainConfig::default();
+
+    println!("# Fig. 7 — accuracy vs computation time (LIB)\n");
+    let mut rows = Vec::new();
+
+    // proposed bp: single point (the paper plots the final result)
+    let model = train(&ds, &cfg);
+    let bp_acc = model.test_accuracy(&ds);
+    let bp_time = model.bp_seconds + model.ridge_seconds;
+    println!("bp:  acc {bp_acc:.3} at {bp_time:.2}s");
+    rows.push(vec![
+        "bp".into(),
+        "0".into(),
+        format!("{bp_time:.4}"),
+        format!("{bp_acc:.4}"),
+    ]);
+
+    // grid search: cumulative time/best accuracy per division count
+    let mask = Mask::random(cfg.nx, ds.n_v, &mut Pcg32::seed(cfg.seed));
+    let max_divs = if common::full_mode() { 12 } else { 6 };
+    let mut cum = 0.0;
+    let mut best = 0.0f64;
+    for divs in 1..=max_divs {
+        let r = grid::search(&ds, &mask, &cfg, divs, common::threads());
+        cum += r.seconds;
+        best = best.max(r.best.accuracy);
+        println!("gs {divs:>2} divs: best acc {best:.3} at cumulative {cum:.2}s");
+        rows.push(vec![
+            "gs".into(),
+            divs.to_string(),
+            format!("{cum:.4}"),
+            format!("{best:.4}"),
+        ]);
+    }
+    common::write_csv(
+        "fig7_acc_vs_time.csv",
+        "method,divs,cumulative_time_s,best_accuracy",
+        &rows,
+    );
+}

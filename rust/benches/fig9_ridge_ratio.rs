@@ -1,0 +1,76 @@
+//! Fig. 9: measured runtime ratio of Gaussian elimination to 1-D
+//! Cholesky over the (Nx, Ny) plane.
+//!
+//! Shape target: the proposed method wins consistently for Nx > 10, by
+//! ≈7× when Ny < 10, with the advantage shrinking as Ny grows (the
+//! substitutions are Ny-proportional while the decomposition is not).
+
+mod common;
+
+use dfr_edge::linalg::ridge::{RidgeAccumulator, RidgeMethod};
+use dfr_edge::util::bench::Bencher;
+use dfr_edge::util::prng::Pcg32;
+
+fn accumulator(s: usize, ny: usize, rng: &mut Pcg32) -> RidgeAccumulator {
+    let mut acc = RidgeAccumulator::new(s, ny);
+    // enough rank + a solid diagonal for a well-posed solve
+    for i in 0..(s + 5) {
+        let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+        acc.accumulate(&r, i % ny);
+    }
+    acc
+}
+
+fn main() {
+    let nxs: &[usize] = if common::full_mode() {
+        &[2, 6, 10, 14, 18, 22, 26, 30, 34, 38]
+    } else {
+        &[2, 6, 10, 14, 18, 22]
+    };
+    let nys: &[usize] = &[1, 2, 5, 10, 25, 50, 95];
+
+    println!("# Fig. 9 — runtime ratio Gaussian / Cholesky\n");
+    print!("{:>5}", "Nx\\Ny");
+    for ny in nys {
+        print!("{ny:>8}");
+    }
+    println!();
+
+    let mut rows = Vec::new();
+    let mut rng = Pcg32::seed(0xF19);
+    for &nx in nxs {
+        let s = nx * nx + nx + 1;
+        print!("{nx:>5}");
+        for &ny in nys {
+            let acc = accumulator(s, ny, &mut rng);
+            let mut b = Bencher::with_target_time(0.12);
+            b.quiet = true;
+            let tg = b
+                .bench(&format!("gauss_nx{nx}_ny{ny}"), || {
+                    acc.solve(0.5, RidgeMethod::Gaussian)
+                })
+                .median;
+            let tc = b
+                .bench(&format!("chol_nx{nx}_ny{ny}"), || {
+                    acc.solve(0.5, RidgeMethod::Cholesky1d)
+                })
+                .median;
+            let ratio = tg / tc;
+            print!("{ratio:>8.2}");
+            rows.push(vec![
+                nx.to_string(),
+                ny.to_string(),
+                format!("{tg:.6e}"),
+                format!("{tc:.6e}"),
+                format!("{ratio:.3}"),
+            ]);
+        }
+        println!();
+    }
+    common::write_csv(
+        "fig9_ridge_ratio.csv",
+        "nx,ny,gaussian_s,cholesky_s,ratio",
+        &rows,
+    );
+    println!("\n(paper: ≈7x for Ny<10 at practical Nx; consistent wins for Nx>10)");
+}

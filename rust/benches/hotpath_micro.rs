@@ -1,0 +1,117 @@
+//! Hot-path microbenchmarks — the §Perf working set (EXPERIMENTS.md).
+//!
+//! Covers every loop the profile says matters: the reservoir step, the
+//! DPRR rank-1 push, the packed ridge rank-1 update, the in-place
+//! Cholesky solve at paper scale (s = 931), the whole per-sample
+//! forward, one truncated-BP step, and (when artifacts are built) the
+//! per-call PJRT overhead of the step/forward artifacts.
+
+mod common;
+
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
+use dfr_edge::dfr::dprr::DprrAccumulator;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
+use dfr_edge::linalg::ridge::{rank1_update_packed, RidgeAccumulator, RidgeMethod};
+use dfr_edge::linalg::tri_len;
+use dfr_edge::util::bench::{bb, Bencher};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::with_target_time(0.4);
+    let mut rng = Pcg32::seed(0xBEEF);
+    let nx = 30;
+    let v = 12;
+    let t = 29;
+
+    let res = Reservoir {
+        mask: Mask::random(nx, v, &mut rng),
+        p: 0.2,
+        q: 0.1,
+        f: Nonlinearity::Linear { alpha: 1.0 },
+    };
+    let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+    let sample = Sample { u: u.clone(), t, label: 3 };
+
+    // reservoir step (Eq. 14 over 30 nodes)
+    let j: Vec<f32> = (0..nx).map(|_| rng.normal()).collect();
+    let mut x = vec![0.1f32; nx];
+    b.bench("reservoir_step_nx30", || {
+        res.step(bb(&mut x), bb(&j));
+    });
+
+    // DPRR rank-1 push
+    let xa: Vec<f32> = (0..nx).map(|_| rng.normal()).collect();
+    let xb: Vec<f32> = (0..nx).map(|_| rng.normal()).collect();
+    let mut acc = DprrAccumulator::new(nx);
+    b.bench("dprr_push_nx30", || {
+        acc.push(bb(&xa), bb(&xb));
+    });
+
+    // full per-sample forward (jpvow shape)
+    b.bench("forward_jpvow_t29", || res.forward(bb(&u), t));
+
+    // truncated-BP gradients
+    let out = OutputLayer::zeros(9, nx);
+    let fwd = res.forward(&u, t);
+    b.bench("truncated_grads_jpvow", || {
+        truncated_grads(bb(&fwd), 3, 0.2, 0.1, res.f, bb(&out))
+    });
+
+    // packed ridge rank-1 update at paper scale (s = 931)
+    let s_dim = nx * nx + nx + 1;
+    let r_t: Vec<f32> = (0..s_dim).map(|_| rng.normal()).collect();
+    let mut packed = vec![0.0f32; tri_len(s_dim)];
+    b.bench("ridge_rank1_packed_s931", || {
+        rank1_update_packed(bb(&mut packed), bb(&r_t));
+    });
+
+    // in-place Cholesky solve at paper scale
+    let mut racc = RidgeAccumulator::new(s_dim, 9);
+    for i in 0..64 {
+        let r: Vec<f32> = (0..s_dim).map(|_| rng.normal()).collect();
+        racc.accumulate(&r, i % 9);
+    }
+    let mut b_slow = Bencher::with_target_time(1.2);
+    b_slow.bench("cholesky_solve_s931_ny9", || {
+        racc.solve(0.5, RidgeMethod::Cholesky1d)
+    });
+    b_slow.bench("cholesky_buffered_s931_ny9", || {
+        racc.solve(0.5, RidgeMethod::CholeskyBuffered)
+    });
+
+    // PJRT per-call overhead (needs artifacts)
+    if let Ok(manifest) = dfr_edge::runtime::Manifest::load("artifacts") {
+        if let Ok(prof) = manifest.profile("jpvow") {
+            if let Ok(exec) = dfr_edge::runtime::DfrExecutor::new(prof) {
+                let mask = Mask::random(nx, v, &mut rng);
+                let x0 = vec![0.0f32; nx];
+                let u_t: Vec<f32> = (0..v).map(|_| rng.normal()).collect();
+                b.bench("pjrt_step_call", || {
+                    exec.step(bb(&x0), bb(&u_t), &mask, 0.2, 0.1).unwrap()
+                });
+                b.bench("pjrt_forward_call_t29", || {
+                    exec.forward(bb(&sample), &mask, 0.2, 0.1).unwrap()
+                });
+                b.bench("pjrt_features_call_t29", || {
+                    exec.features(bb(&sample), &mask, 0.2, 0.1).unwrap()
+                });
+            }
+        }
+    } else {
+        println!("(artifacts not built — skipping PJRT call benches)");
+    }
+
+    let mut all = Bencher::new();
+    std::mem::swap(&mut all, &mut b);
+    let mut rows: Vec<Vec<String>> = all
+        .results()
+        .iter()
+        .map(|s| vec![s.name.clone(), format!("{:.6e}", s.median), format!("{:.6e}", s.mad)])
+        .collect();
+    rows.extend(b_slow.results().iter().map(|s| {
+        vec![s.name.clone(), format!("{:.6e}", s.median), format!("{:.6e}", s.mad)]
+    }));
+    common::write_csv("hotpath_micro.csv", "name,median_s,mad_s", &rows);
+}

@@ -1,0 +1,87 @@
+//! Table 11 (+ Fig. 10): synthesis-configuration Pareto front and the
+//! write-buffer ablation.
+//!
+//! Shape targets: non-pipelined < standard < inlined in area;
+//! inlined < standard < non-pipelined in calc time; and the RegSize
+//! sweep shows the Algorithm-5 buffer collapsing the substitution II
+//! (Fig. 10's story).
+
+mod common;
+
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::fpga::design::{DesignConfig, SystemModel};
+use dfr_edge::fpga::schedule::{accumulation_ii, ridge_solve_cycles, ScheduleConfig, ShapeParams};
+use dfr_edge::report;
+
+fn main() {
+    let prof = Profile::by_name("jpvow").unwrap();
+    let shape = ShapeParams::new(30, prof.n_v as u64, prof.n_c as u64, prof.t_max as u64);
+    let (n_train, epochs, n_betas, n_test) =
+        (prof.train as u64, 25u64, 1u64, prof.test as u64);
+
+    println!("# Table 11 — synthesis configurations\n");
+    println!(
+        "{}",
+        report::table11_markdown(shape, n_train, epochs, n_betas, n_test)
+    );
+
+    let mut rows = Vec::new();
+    for cfg in [
+        DesignConfig::NonPipelined,
+        DesignConfig::Standard,
+        DesignConfig::Inlined,
+    ] {
+        let r = SystemModel::new(shape, cfg).report(n_train, epochs, n_betas, n_test);
+        rows.push(vec![
+            r.name.to_string(),
+            r.resources.lut.to_string(),
+            r.resources.ff.to_string(),
+            format!("{:.1}", r.resources.bram36),
+            r.resources.dsp.to_string(),
+            format!("{:.3}", r.power_w),
+            format!("{:.3}", r.calc_s()),
+            format!("{:.3}", r.energy_j),
+        ]);
+    }
+    common::write_csv(
+        "table11_configs.csv",
+        "config,lut,ff,bram,dsp,power_w,calc_s,energy_j",
+        &rows,
+    );
+
+    // Fig. 10 ablation: RegSize vs substitution II and ridge-solve time
+    println!("## Fig. 10 ablation — write-buffer depth (RegSize)\n");
+    println!(
+        "{:>8} {:>4} {:>16} {:>12}",
+        "RegSize", "II", "solve cycles", "solve ms"
+    );
+    let mut arows = Vec::new();
+    for reg in [1u32, 2, 4, 8] {
+        let cfg = ScheduleConfig {
+            pipelined: true,
+            reg_size: reg,
+            inline_state_update: false,
+        };
+        let ii = accumulation_ii(reg);
+        let cycles = ridge_solve_cycles(&shape, &cfg);
+        println!(
+            "{:>8} {:>4} {:>16} {:>12.2}",
+            reg,
+            ii,
+            cycles,
+            cycles as f64 / 100e6 * 1e3
+        );
+        arows.push(vec![
+            reg.to_string(),
+            ii.to_string(),
+            cycles.to_string(),
+            format!("{:.3}", cycles as f64 / 100e6 * 1e3),
+        ]);
+    }
+    common::write_csv(
+        "fig10_regsize_ablation.csv",
+        "reg_size,ii,solve_cycles,solve_ms",
+        &arows,
+    );
+    println!("\n(paper: RegSize=4 chosen; naive RMW loop cannot reach II=1 — Fig. 10)");
+}

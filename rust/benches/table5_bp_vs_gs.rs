@@ -1,0 +1,81 @@
+//! Table 5: proposed backpropagation vs grid search — accuracy, time,
+//! and the divisions grid search needs to match bp.
+//!
+//! Reproduced shape: bp reaches accuracy comparable to the best grid
+//! point while grid-search time grows quadratically with the division
+//! count (the paper's 0.3×–700× span). Bench mode subsamples datasets;
+//! `DFR_BENCH_FULL=1` uses the full Table 4 sizes.
+
+mod common;
+
+use dfr_edge::baselines::published::TABLE5;
+use dfr_edge::dfr::grid;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::train::{train, TrainConfig};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    let datasets: &[&str] = if common::full_mode() {
+        &["arab", "aus", "char", "cmu", "ecg", "jpvow", "kick", "lib", "net", "uwav", "waf", "walk"]
+    } else {
+        &["jpvow", "ecg", "cmu", "lib", "waf", "walk", "kick"]
+    };
+    let max_divs = if common::full_mode() { 10 } else { 5 };
+
+    let mut rows = Vec::new();
+    println!("# Table 5 — bp vs grid search\n");
+    println!(
+        "{:<8} {:>7} {:>9} {:>5} {:>9} {:>9}  (paper: acc/divs)",
+        "dataset", "bp acc", "bp time", "divs", "gs time", "gs/bp"
+    );
+    for name in datasets {
+        let ds = common::bench_dataset(name, 42);
+        let cfg = TrainConfig::default();
+
+        // proposed: truncated-BP SGD + ridge
+        let model = train(&ds, &cfg);
+        let bp_acc = model.test_accuracy(&ds);
+        let bp_time = model.bp_seconds + model.ridge_seconds;
+
+        // baseline: grid search until it matches bp accuracy
+        let mask = Mask::random(cfg.nx, ds.n_v, &mut Pcg32::seed(cfg.seed));
+        let sweeps = grid::search_until_match(
+            &ds,
+            &mask,
+            &cfg,
+            bp_acc,
+            max_divs,
+            common::threads(),
+        );
+        let gs_time: f64 = sweeps.iter().map(|s| s.seconds).sum();
+        let last = sweeps.last().unwrap();
+        let paper = TABLE5.iter().find(|(n, ..)| n == name).unwrap();
+        println!(
+            "{:<8} {:>7.3} {:>8.2}s {:>5} {:>8.2}s {:>8.1}x  (paper {:.3}/{})",
+            name,
+            bp_acc,
+            bp_time,
+            last.divs,
+            gs_time,
+            gs_time / bp_time,
+            paper.1,
+            paper.3,
+        );
+        rows.push(vec![
+            name.to_string(),
+            format!("{bp_acc:.4}"),
+            format!("{bp_time:.3}"),
+            format!("{}", last.divs),
+            format!("{:.4}", last.best.accuracy),
+            format!("{gs_time:.3}"),
+            format!("{:.2}", gs_time / bp_time),
+            format!("{:.3}", paper.1),
+            format!("{}", paper.3),
+        ]);
+    }
+    common::write_csv(
+        "table5_bp_vs_gs.csv",
+        "dataset,bp_acc,bp_time_s,gs_divs,gs_acc,gs_time_s,gs_over_bp,paper_bp_acc,paper_gs_divs",
+        &rows,
+    );
+}

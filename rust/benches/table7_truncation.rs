@@ -1,0 +1,64 @@
+//! Table 7: storage reduction by truncated backpropagation.
+//!
+//! The formulas reproduce the paper's printed words **exactly** (see
+//! `dfr::backprop::memory_words_*`, verified in unit tests); this bench
+//! prints the full table and cross-checks with live measurements of the
+//! history buffers on one sample.
+
+mod common;
+
+use dfr_edge::data::profiles::PROFILES;
+use dfr_edge::dfr::backprop::{memory_words_naive, memory_words_truncated};
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    println!("# Table 7 — storage reduction by truncated backpropagation\n");
+    println!(
+        "{:<8} {:>9} {:>11} {:>10}",
+        "dataset", "naive", "simplified", "reduction"
+    );
+    let nx = 30;
+    let mut rows = Vec::new();
+    for p in &PROFILES {
+        let naive = memory_words_naive(p.t_max, nx, p.n_c);
+        let simp = memory_words_truncated(nx, p.n_c);
+        let red = 100.0 * (naive - simp) as f64 / naive as f64;
+        println!("{:<8} {:>9} {:>11} {:>9.0}%", p.name, naive, simp, red);
+        rows.push(vec![
+            p.name.to_string(),
+            naive.to_string(),
+            simp.to_string(),
+            format!("{red:.1}"),
+        ]);
+    }
+    common::write_csv(
+        "table7_truncation.csv",
+        "dataset,naive_words,simplified_words,reduction_pct",
+        &rows,
+    );
+
+    // live cross-check: the full-BPTT history buffer really holds T·Nx
+    // state words while the streaming forward holds 2·Nx
+    let mut rng = Pcg32::seed(1);
+    let t = 200;
+    let v = 4;
+    let res = Reservoir {
+        mask: Mask::random(nx, v, &mut rng),
+        p: 0.2,
+        q: 0.1,
+        f: Nonlinearity::Linear { alpha: 1.0 },
+    };
+    let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+    let hist = res.forward_history(&u, t);
+    assert_eq!(hist.xs.len(), t * nx, "history stores T*Nx words");
+    let fwd = res.forward(&u, t);
+    let live = fwd.x_t.len() + fwd.x_tm1.len();
+    assert_eq!(live, 2 * nx, "streaming stores 2*Nx state words");
+    println!(
+        "\nlive check: history {} words vs streaming {} words (T={t})",
+        hist.xs.len(),
+        live
+    );
+}

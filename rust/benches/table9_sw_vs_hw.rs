@@ -1,0 +1,73 @@
+//! Table 9 (+ Table 10): full HW/SW comparison on the JPVOW workload —
+//! the paper's headline edge-system result (1/13 time, 1/27 energy).
+//!
+//! HW comes from the co-design simulator (schedules + resources +
+//! power); SW from the calibrated Cortex-A9 model. The measured Rust
+//! pipeline on this host is also reported for context.
+
+mod common;
+
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::dfr::train::{train, TrainConfig};
+use dfr_edge::fpga::design::{sw_report, DesignConfig, SystemModel};
+use dfr_edge::fpga::schedule::ShapeParams;
+use dfr_edge::report;
+
+fn main() {
+    let prof = Profile::by_name("jpvow").unwrap();
+    let shape = ShapeParams::new(30, prof.n_v as u64, prof.n_c as u64, prof.t_max as u64);
+    let (n_train, epochs, n_betas, n_test) =
+        (prof.train as u64, 25u64, 1u64, prof.test as u64);
+
+    println!("# Table 9 — SW-only vs HW-only (jpvow workload)\n");
+    println!(
+        "{}",
+        report::table9_markdown(shape, n_train, epochs, n_betas, n_test)
+    );
+
+    let hw = SystemModel::new(shape, DesignConfig::Standard).report(n_train, epochs, n_betas, n_test);
+    let sw = sw_report(&shape, n_train, epochs, n_betas, n_test);
+    let rows = vec![vec![
+        format!("{:.3}", sw.calc_s()),
+        format!("{:.3}", hw.calc_s()),
+        format!("{:.2}", sw.calc_s() / hw.calc_s()),
+        format!("{:.3}", sw.energy_j),
+        format!("{:.3}", hw.energy_j),
+        format!("{:.2}", sw.energy_j / hw.energy_j),
+        format!("{:.3}", hw.power_w),
+        format!("{}", hw.resources.lut),
+        format!("{}", hw.resources.dsp),
+    ]];
+    common::write_csv(
+        "table9_sw_vs_hw.csv",
+        "sw_calc_s,hw_calc_s,time_ratio,sw_energy_j,hw_energy_j,energy_ratio,hw_power_w,hw_lut,hw_dsp",
+        &rows,
+    );
+
+    println!("## Table 10 — per-module resources\n");
+    let model = SystemModel::new(shape, DesignConfig::Standard);
+    println!("{:<18} {:>8} {:>8} {:>6}", "module", "LUT", "FF", "DSP");
+    let mut mrows = Vec::new();
+    for m in model.modules() {
+        let r = m.resources();
+        println!("{:<18} {:>8} {:>8} {:>6}", m.name, r.lut, r.ff, r.dsp);
+        mrows.push(vec![
+            m.name.to_string(),
+            r.lut.to_string(),
+            r.ff.to_string(),
+            r.dsp.to_string(),
+        ]);
+    }
+    common::write_csv("table10_modules.csv", "module,lut,ff,dsp", &mrows);
+    println!("\n(paper Table 10: dfr_core 8764/11266/15, bp 12245/10125/57, ridge 7827/8228/20)");
+
+    // measured Rust pipeline on this host for context (not the A9!)
+    let ds = common::bench_dataset("jpvow", 42);
+    let model = train(&ds, &TrainConfig::default());
+    println!(
+        "\ncontext: this host's Rust pipeline on the subsampled workload: bp {:.2}s + ridge {:.2}s, acc {:.3}",
+        model.bp_seconds,
+        model.ridge_seconds,
+        model.test_accuracy(&ds)
+    );
+}

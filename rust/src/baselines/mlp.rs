@@ -1,0 +1,247 @@
+//! Multi-layer perceptron baseline (Table 6 "MLP", after Wang et al.
+//! [23]): flattened (padded) series → two hidden ReLU layers → softmax,
+//! trained with SGD + momentum from scratch.
+
+use crate::data::dataset::{accuracy, Dataset};
+use crate::util::prng::Pcg32;
+
+/// MLP hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig {
+            hidden: 64,
+            epochs: 30,
+            lr: 0.01,
+            momentum: 0.9,
+            seed: 0x317,
+        }
+    }
+}
+
+/// A trained 2-hidden-layer MLP.
+pub struct Mlp {
+    pub d_in: usize,
+    pub n_c: usize,
+    pub hidden: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    w3: Vec<f32>,
+    b3: Vec<f32>,
+}
+
+fn matvec(w: &[f32], x: &[f32], b: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = &w[i * d..(i + 1) * d];
+        *o = b[i] + row.iter().zip(x).map(|(w, x)| w * x).sum::<f32>();
+    }
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+impl Mlp {
+    /// Flatten a sample into the fixed input window (pad/truncate to
+    /// `d_in` = t_fix × V).
+    fn flatten(&self, u: &[f32]) -> Vec<f32> {
+        let mut x = vec![0.0f32; self.d_in];
+        let n = u.len().min(self.d_in);
+        x[..n].copy_from_slice(&u[..n]);
+        x
+    }
+
+    pub fn forward(&self, u: &[f32]) -> Vec<f32> {
+        let x = self.flatten(u);
+        let mut h1 = vec![0.0f32; self.hidden];
+        matvec(&self.w1, &x, &self.b1, &mut h1);
+        relu(&mut h1);
+        let mut h2 = vec![0.0f32; self.hidden];
+        matvec(&self.w2, &h1, &self.b2, &mut h2);
+        relu(&mut h2);
+        let mut z = vec![0.0f32; self.n_c];
+        matvec(&self.w3, &h2, &self.b3, &mut z);
+        crate::dfr::backprop::softmax_inplace(&mut z);
+        z
+    }
+
+    pub fn predict(&self, u: &[f32]) -> usize {
+        crate::linalg::ridge::argmax(&self.forward(u))
+    }
+}
+
+/// Train on a dataset; the input window is the dataset's T_max.
+pub fn train_mlp(ds: &Dataset, cfg: &MlpConfig) -> Mlp {
+    let d_in = ds.t_max() * ds.n_v;
+    let h = cfg.hidden;
+    let c = ds.n_c;
+    let mut rng = Pcg32::new(cfg.seed, 0x313);
+    let glorot = |fan_in: usize, fan_out: usize, rng: &mut Pcg32| -> f32 {
+        let s = (6.0 / (fan_in + fan_out) as f32).sqrt();
+        rng.uniform_in(-s, s)
+    };
+    let mut net = Mlp {
+        d_in,
+        n_c: c,
+        hidden: h,
+        w1: (0..h * d_in).map(|_| glorot(d_in, h, &mut rng)).collect(),
+        b1: vec![0.0; h],
+        w2: (0..h * h).map(|_| glorot(h, h, &mut rng)).collect(),
+        b2: vec![0.0; h],
+        w3: (0..c * h).map(|_| glorot(h, c, &mut rng)).collect(),
+        b3: vec![0.0; c],
+    };
+    // momentum buffers
+    let mut v1 = vec![0.0f32; net.w1.len()];
+    let mut vb1 = vec![0.0f32; h];
+    let mut v2 = vec![0.0f32; net.w2.len()];
+    let mut vb2 = vec![0.0f32; h];
+    let mut v3 = vec![0.0f32; net.w3.len()];
+    let mut vb3 = vec![0.0f32; c];
+
+    let mut order: Vec<usize> = (0..ds.train.len()).collect();
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let s = &ds.train[i];
+            let x = net.flatten(&s.u);
+            // forward with caches
+            let mut h1 = vec![0.0f32; h];
+            matvec(&net.w1, &x, &net.b1, &mut h1);
+            let a1: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
+            let mut h2 = vec![0.0f32; h];
+            matvec(&net.w2, &a1, &net.b2, &mut h2);
+            let a2: Vec<f32> = h2.iter().map(|&v| v.max(0.0)).collect();
+            let mut z = vec![0.0f32; c];
+            matvec(&net.w3, &a2, &net.b3, &mut z);
+            crate::dfr::backprop::softmax_inplace(&mut z);
+
+            // backward
+            let mut dz = z;
+            dz[s.label] -= 1.0;
+            let mut da2 = vec![0.0f32; h];
+            for (i, &d) in dz.iter().enumerate() {
+                for (j, g) in da2.iter_mut().enumerate() {
+                    *g += net.w3[i * h + j] * d;
+                }
+            }
+            let dh2: Vec<f32> = da2
+                .iter()
+                .zip(&h2)
+                .map(|(&g, &pre)| if pre > 0.0 { g } else { 0.0 })
+                .collect();
+            let mut da1 = vec![0.0f32; h];
+            for (i, &d) in dh2.iter().enumerate() {
+                for (j, g) in da1.iter_mut().enumerate() {
+                    *g += net.w2[i * h + j] * d;
+                }
+            }
+            let dh1: Vec<f32> = da1
+                .iter()
+                .zip(&h1)
+                .map(|(&g, &pre)| if pre > 0.0 { g } else { 0.0 })
+                .collect();
+
+            // updates (momentum SGD)
+            let step = |w: &mut [f32], v: &mut [f32], grad_row: &dyn Fn(usize) -> f32| {
+                for (k, (wk, vk)) in w.iter_mut().zip(v.iter_mut()).enumerate() {
+                    *vk = cfg.momentum * *vk - cfg.lr * grad_row(k);
+                    *wk += *vk;
+                }
+            };
+            step(&mut net.w3, &mut v3, &|k| dz[k / h] * a2[k % h]);
+            step(&mut net.b3, &mut vb3, &|k| dz[k]);
+            step(&mut net.w2, &mut v2, &|k| dh2[k / h] * a1[k % h]);
+            step(&mut net.b2, &mut vb2, &|k| dh2[k]);
+            step(&mut net.w1, &mut v1, &|k| dh1[k / d_in] * x[k % d_in]);
+            step(&mut net.b1, &mut vb1, &|k| dh1[k]);
+        }
+    }
+    net
+}
+
+/// Convenience: train and report test accuracy.
+pub fn evaluate(ds: &Dataset, cfg: &MlpConfig) -> f64 {
+    let net = train_mlp(ds, cfg);
+    let preds: Vec<usize> = ds.test.iter().map(|s| net.predict(&s.u)).collect();
+    accuracy(&preds, &ds.test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::Profile;
+    use crate::data::synth;
+
+    #[test]
+    fn learns_separable_toy() {
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 2,
+            train: 60,
+            test: 40,
+            t_min: 10,
+            t_max: 12,
+        };
+        let ds = synth::generate_with(
+            &prof,
+            synth::SynthConfig {
+                noise: 0.2,
+                freq_sep: 0.25,
+                ar: 0.2,
+            },
+            3,
+        );
+        let acc = evaluate(
+            &ds,
+            &MlpConfig {
+                hidden: 24,
+                epochs: 20,
+                ..Default::default()
+            },
+        );
+        assert!(acc > 0.8, "MLP accuracy {acc}");
+    }
+
+    #[test]
+    fn probabilities_valid() {
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 3,
+            train: 12,
+            test: 6,
+            t_min: 8,
+            t_max: 8,
+        };
+        let ds = synth::generate(&prof, 1);
+        let net = train_mlp(
+            &ds,
+            &MlpConfig {
+                hidden: 8,
+                epochs: 2,
+                ..Default::default()
+            },
+        );
+        let y = net.forward(&ds.test[0].u);
+        let sum: f32 = y.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+        assert!(y.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}

@@ -1,0 +1,12 @@
+//! Machine-learning comparators for Table 6.
+//!
+//! The paper compares its DFR against seven methods, quoting their
+//! accuracies from Ismail Fawaz et al. [12]. We implement the two that
+//! are feasible and meaningful at edge scale from scratch — an [`mlp`]
+//! trained by backprop and a [`twiesn`]-style echo state network — and
+//! carry the remaining rows as published constants ([`published`]), as
+//! the paper itself did.
+
+pub mod mlp;
+pub mod published;
+pub mod twiesn;

@@ -1,0 +1,86 @@
+//! Published comparator accuracies (Table 6).
+//!
+//! The paper itself copies these rows from Ismail Fawaz et al. [12]
+//! ("Deep learning for time series classification: a review"); we carry
+//! the same constants so the Table 6 bench can print the full comparison
+//! next to our measured DFR/MLP/ESN numbers.
+
+/// (dataset, MLP, FCN, ResNet, Encoder, MCDCNN, Time-CNN, TWIESN,
+/// prop. bp) — Table 6 of the paper, in its row order.
+pub const TABLE6: [(&str, [f64; 8]); 12] = [
+    ("arab", [0.969, 0.994, 0.996, 0.981, 0.959, 0.958, 0.853, 0.981]),
+    ("aus", [0.933, 0.975, 0.974, 0.938, 0.854, 0.726, 0.724, 0.954]),
+    ("char", [0.969, 0.990, 0.990, 0.971, 0.938, 0.960, 0.920, 0.918]),
+    ("cmu", [0.600, 1.000, 0.997, 0.983, 0.514, 0.976, 0.893, 0.931]),
+    ("ecg", [0.748, 0.872, 0.867, 0.872, 0.500, 0.841, 0.737, 0.850]),
+    ("jpvow", [0.976, 0.993, 0.992, 0.976, 0.944, 0.956, 0.965, 0.978]),
+    ("kick", [0.610, 0.540, 0.510, 0.610, 0.560, 0.620, 0.670, 0.800]),
+    ("lib", [0.780, 0.964, 0.954, 0.783, 0.651, 0.637, 0.794, 0.806]),
+    ("net", [0.550, 0.891, 0.627, 0.777, 0.630, 0.890, 0.945, 0.783]),
+    ("uwav", [0.901, 0.934, 0.926, 0.908, 0.845, 0.859, 0.754, 0.850]),
+    ("waf", [0.894, 0.982, 0.989, 0.986, 0.658, 0.948, 0.949, 0.983]),
+    ("walk", [0.700, 1.000, 1.000, 1.000, 0.450, 1.000, 0.944, 1.000]),
+];
+
+/// Column labels matching [`TABLE6`].
+pub const TABLE6_METHODS: [&str; 8] = [
+    "MLP", "FCN", "ResNet", "Encoder", "MCDCNN", "Time-CNN", "TWIESN", "prop. bp",
+];
+
+/// Paper Table 5 reference rows: (dataset, bp acc, bp time s, gs divs,
+/// gs time s) — the shape target for `benches/table5_bp_vs_gs`.
+pub const TABLE5: [(&str, f64, f64, usize, f64); 12] = [
+    ("arab", 0.981, 245.0, 8, 25_040.0),
+    ("aus", 0.954, 54.0, 8, 5_535.0),
+    ("char", 0.918, 44.0, 10, 4_820.0),
+    ("cmu", 0.931, 4.0, 1, 3.0),
+    ("ecg", 0.850, 11.0, 16, 4_977.0),
+    ("jpvow", 0.978, 4.0, 4, 106.0),
+    ("kick", 0.800, 7.0, 1, 2.0),
+    ("lib", 0.806, 12.0, 18, 8_423.0),
+    ("net", 0.783, 45.0, 1, 49.0),
+    ("uwav", 0.850, 65.0, 10, 6_322.0),
+    ("waf", 0.983, 14.0, 3, 188.0),
+    ("walk", 1.000, 4.0, 1, 3.0),
+];
+
+/// Table 12: qualitative comparison with existing FPGA DFR systems.
+pub const TABLE12: [(&str, &str, &str, usize, usize); 3] = [
+    ("prop.", "both", "fully digital", 12, 9),
+    ("[1] Alomar+15", "inference only", "fully digital", 1, 3),
+    ("[19] Shears+21", "inference only", "digital/analog hybrid", 1, 1),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_rows_everywhere() {
+        assert_eq!(TABLE6.len(), 12);
+        assert_eq!(TABLE5.len(), 12);
+        let names: Vec<&str> = TABLE6.iter().map(|(n, _)| *n).collect();
+        for (n, ..) in TABLE5 {
+            assert!(names.contains(&n), "{n}");
+        }
+    }
+
+    #[test]
+    fn accuracies_are_probabilities() {
+        for (name, row) in TABLE6 {
+            for a in row {
+                assert!((0.0..=1.0).contains(&a), "{name}: {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_bp_speedup_reaches_700x() {
+        // Table 5's headline: up to ~700x faster than grid search
+        let max_ratio = TABLE5
+            .iter()
+            .map(|(_, _, bp_t, _, gs_t)| gs_t / bp_t)
+            .fold(0.0f64, f64::max);
+        assert!((690.0..=720.0).contains(&max_ratio), "{max_ratio}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Compute engines behind the coordinator: the PJRT artifact executor
+//! (production) and the pure-Rust reference (tests / grid search).
+//!
+//! Both implement [`Engine`] — the coordinator is engine-agnostic, which
+//! is also how the benches compare "SW-only" vs artifact-backed runs on
+//! identical workloads.
+
+use anyhow::Result;
+
+use crate::data::dataset::Sample;
+use crate::dfr::backprop::{truncated_grads, OutputLayer};
+use crate::dfr::mask::Mask;
+use crate::dfr::reservoir::{Nonlinearity, Reservoir};
+use crate::runtime::executor::{DfrExecutor, TrainState};
+
+/// The operations a session needs from its compute backend.
+pub trait Engine: Send {
+    /// One truncated-BP SGD step; mutates the train state, returns loss.
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32>;
+
+    /// Ridge feature vector r̃ = [r, 1].
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>>;
+
+    /// Class scores with a ridge output layer W̃ (row-major n_c × s).
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32])
+        -> Result<Vec<f32>>;
+
+    /// Human-readable backend name (metrics/logs).
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// native engine
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust engine over `dfr::*` — bit-compatible with the JAX model
+/// (golden-tested), no artifacts required.
+pub struct NativeEngine {
+    pub nx: usize,
+    pub n_c: usize,
+    pub f: Nonlinearity,
+}
+
+impl NativeEngine {
+    pub fn new(nx: usize, n_c: usize) -> Self {
+        NativeEngine {
+            nx,
+            n_c,
+            f: Nonlinearity::Linear { alpha: 1.0 },
+        }
+    }
+
+    fn reservoir(&self, mask: &Mask, p: f32, q: f32) -> Reservoir {
+        Reservoir {
+            mask: mask.clone(),
+            p,
+            q,
+            f: self.f,
+        }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        let res = self.reservoir(mask, state.p, state.q);
+        let fwd = res.forward(&s.u, s.t);
+        let out = OutputLayer {
+            w: state.w.clone(),
+            b: state.b.clone(),
+            ny: self.n_c,
+            nr: self.nx * (self.nx + 1),
+        };
+        let g = truncated_grads(&fwd, s.label, state.p, state.q, self.f, &out);
+        // same ±1 clip as the train_step artifact (model.GRAD_CLIP)
+        let clip = 1.0f32;
+        let (dp, dq) = (g.dp.clamp(-clip, clip), g.dq.clamp(-clip, clip));
+        if dp.is_finite() && dq.is_finite() {
+            state.p -= lr_res * dp;
+            state.q -= lr_res * dq;
+        }
+        if g.loss.is_finite() {
+            for (w, d) in state.w.iter_mut().zip(&g.dw) {
+                *w -= lr_out * d;
+            }
+            for (b, d) in state.b.iter_mut().zip(&g.db) {
+                *b -= lr_out * d;
+            }
+        }
+        Ok(g.loss)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        Ok(self.reservoir(mask, p, q).forward(&s.u, s.t).r_tilde())
+    }
+
+    fn infer(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+    ) -> Result<Vec<f32>> {
+        let rt = self.features(s, mask, p, q)?;
+        let sdim = rt.len();
+        let ny = w_tilde.len() / sdim;
+        let mut z: Vec<f32> = (0..ny)
+            .map(|i| {
+                w_tilde[i * sdim..(i + 1) * sdim]
+                    .iter()
+                    .zip(&rt)
+                    .map(|(w, r)| w * r)
+                    .sum()
+            })
+            .collect();
+        crate::dfr::backprop::softmax_inplace(&mut z);
+        Ok(z)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine
+// ---------------------------------------------------------------------------
+
+/// Artifact-backed engine: every operation is a PJRT execution of the
+/// HLO compiled from the L2 JAX model (which itself calls the L1 Pallas
+/// kernels). The request path is pure Rust + XLA.
+pub struct PjrtEngine {
+    pub exec: DfrExecutor,
+}
+
+impl PjrtEngine {
+    pub fn new(exec: DfrExecutor) -> Self {
+        PjrtEngine { exec }
+    }
+}
+
+// SAFETY: the xla crate wraps the PJRT client in `Rc` (not thread-safe
+// reference counting), so `DfrExecutor` is !Send by construction. The
+// coordinator moves the engine into the event-loop thread exactly once
+// and never aliases it across threads afterwards (Engine methods take
+// &self but the server holds the sole owner); the underlying PJRT CPU
+// client itself is a single-process C API object that tolerates use from
+// the one thread that owns it. Moving ownership between threads is
+// therefore sound.
+unsafe impl Send for PjrtEngine {}
+
+impl Engine for PjrtEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        self.exec.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.exec.features(s, mask, p, q)
+    }
+
+    fn infer(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.exec.infer(s, mask, p, q, w_tilde)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn sample(t: usize, v: usize, seed: u64, label: usize) -> Sample {
+        let mut rng = Pcg32::seed(seed);
+        Sample {
+            u: (0..t * v).map(|_| rng.normal()).collect(),
+            t,
+            label,
+        }
+    }
+
+    #[test]
+    fn native_train_step_moves_state() {
+        let eng = NativeEngine::new(8, 3);
+        let mask = Mask::golden(8, 2);
+        let mut st = TrainState::init(3, 8, 0.1, 0.1);
+        let s = sample(12, 2, 1, 1);
+        // after a first step W becomes nonzero, after a second p/q move
+        let l1 = eng.train_step(&s, &mask, &mut st, 0.1, 0.1).unwrap();
+        assert!(l1.is_finite());
+        assert!(st.w.iter().any(|&w| w != 0.0));
+        let before = (st.p, st.q);
+        eng.train_step(&s, &mask, &mut st, 0.1, 0.1).unwrap();
+        assert!((st.p, st.q) != before);
+    }
+
+    #[test]
+    fn native_infer_is_probability() {
+        let eng = NativeEngine::new(6, 2);
+        let mask = Mask::golden(6, 2);
+        let s = sample(9, 2, 2, 0);
+        let sdim = 6 * 7 + 1;
+        let w = vec![0.01f32; 2 * sdim];
+        let y = eng.infer(&s, &mask, 0.2, 0.1, &w).unwrap();
+        assert_eq!(y.len(), 2);
+        assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn native_matches_train_module_forward() {
+        // engine features == dfr::train sample features
+        let eng = NativeEngine::new(5, 2);
+        let mask = Mask::golden(5, 3);
+        let s = sample(7, 3, 3, 0);
+        let f1 = eng.features(&s, &mask, 0.25, 0.2).unwrap();
+        let res = Reservoir {
+            mask: mask.clone(),
+            p: 0.25,
+            q: 0.2,
+            f: Nonlinearity::Linear { alpha: 1.0 },
+        };
+        let f2 = res.forward(&s.u, s.t).r_tilde();
+        assert_eq!(f1, f2);
+    }
+}

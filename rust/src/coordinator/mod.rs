@@ -1,0 +1,26 @@
+//! The online edge training & inference coordinator — the paper's system
+//! contribution (§3.1) as a deployable service.
+//!
+//! A [`session::Session`] is one online deployment (e.g. one machine
+//! under predictive maintenance). Its lifecycle is the paper's protocol:
+//!
+//! ```text
+//! Collect ──(enough labelled samples)──► BpOptimize ──(25 epochs)──►
+//! RidgeTrain ──(β sweep + in-place Cholesky)──► Serve ──(drift)──► …
+//! ```
+//!
+//! The [`server::Server`] owns the event loop: requests enter through a
+//! bounded queue (backpressure), a router dispatches them to per-session
+//! state, and compute runs on an [`engine::Engine`] — either the PJRT
+//! executor over the AOT artifacts (production path; Python never runs)
+//! or the pure-Rust reference (tests, grid search, FPGA-sim workloads).
+
+pub mod engine;
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use protocol::{Request, Response};
+pub use server::{Server, ServerConfig};
+pub use session::{Phase, Session, SessionConfig};

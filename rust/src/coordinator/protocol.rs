@@ -1,0 +1,67 @@
+//! Request/response protocol of the online edge service.
+
+use crate::data::dataset::Sample;
+
+/// Client-visible requests.
+#[derive(Debug)]
+pub enum Request {
+    /// A labelled sample for online training (Collect/BpOptimize phases).
+    Labelled { session: u64, sample: Sample },
+    /// An unlabelled sample for inference (Serve phase).
+    Infer { session: u64, sample: Sample },
+    /// Force the session to finish collecting and train now.
+    Finalize { session: u64 },
+    /// Metrics snapshot.
+    Stats,
+    /// Graceful shutdown.
+    Shutdown,
+}
+
+/// Responses (sent back over the per-request channel).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Sample accepted; current phase echoed.
+    Accepted { phase: &'static str, buffered: usize },
+    /// Prediction with class scores.
+    Prediction { class: usize, scores: Vec<f32> },
+    /// Session transitioned into Serve (training finished).
+    Trained {
+        p: f32,
+        q: f32,
+        beta: f32,
+        train_seconds: f64,
+    },
+    /// Metrics text.
+    StatsText(String),
+    /// Request rejected (backpressure or bad session state).
+    Rejected(String),
+    /// Acknowledged shutdown.
+    Bye,
+}
+
+impl Request {
+    pub fn session_id(&self) -> Option<u64> {
+        match self {
+            Request::Labelled { session, .. }
+            | Request::Infer { session, .. }
+            | Request::Finalize { session } => Some(*session),
+            Request::Stats | Request::Shutdown => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_routing_key() {
+        let s = Sample {
+            u: vec![0.0],
+            t: 1,
+            label: 0,
+        };
+        assert_eq!(Request::Labelled { session: 7, sample: s }.session_id(), Some(7));
+        assert_eq!(Request::Stats.session_id(), None);
+    }
+}

@@ -1,0 +1,322 @@
+//! The event loop: bounded request queue, per-session router, worker
+//! execution, metrics — Rust owns the process (no tokio; see
+//! `util::runtimex`).
+//!
+//! Sessions are sharded by id across the router's map; requests carry a
+//! reply channel. Backpressure is two-level: the global bounded queue
+//! (`try_submit` refuses when saturated) and each session's buffer cap.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::protocol::{Request, Response};
+use super::session::{FeedOutcome, Session, SessionConfig};
+use crate::util::metrics::Registry;
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    /// template for newly-created sessions
+    pub session: SessionConfig,
+    /// request queue capacity (global backpressure)
+    pub queue_cap: usize,
+    pub seed: u64,
+}
+
+/// Handle to a running server (owns the event-loop thread).
+pub struct Server {
+    tx: mpsc::SyncSender<(Request, mpsc::Sender<Response>)>,
+    handle: Option<thread::JoinHandle<()>>,
+    pub metrics: Arc<Registry>,
+}
+
+impl Server {
+    /// Spawn the event loop over an engine.
+    pub fn spawn(engine: Box<dyn Engine>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = mpsc::sync_channel::<(Request, mpsc::Sender<Response>)>(cfg.queue_cap);
+        let metrics = Arc::new(Registry::default());
+        let m = Arc::clone(&metrics);
+        let handle = thread::spawn(move || event_loop(engine, cfg, rx, m));
+        Server {
+            tx,
+            handle: Some(handle),
+            metrics,
+        }
+    }
+
+    /// Send a request and wait for the response.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send((req, rtx))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rrx.recv()?)
+    }
+
+    /// Non-blocking send; `Err` means the queue is saturated
+    /// (backpressure) — the caller should retry or shed load.
+    pub fn try_call(&self, req: Request) -> Result<Option<mpsc::Receiver<Response>>> {
+        let (rtx, rrx) = mpsc::channel();
+        match self.tx.try_send((req, rtx)) {
+            Ok(()) => Ok(Some(rrx)),
+            Err(mpsc::TrySendError::Full(_)) => Ok(None),
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(anyhow::anyhow!("server stopped"))
+            }
+        }
+    }
+
+    /// Graceful shutdown (drains the queue).
+    pub fn shutdown(mut self) {
+        let _ = self.call(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let (rtx, _rrx) = mpsc::channel();
+            let _ = self.tx.send((Request::Shutdown, rtx));
+            let _ = h.join();
+        }
+    }
+}
+
+fn event_loop(
+    engine: Box<dyn Engine>,
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<(Request, mpsc::Sender<Response>)>,
+    metrics: Arc<Registry>,
+) {
+    let sessions: Mutex<BTreeMap<u64, Session>> = Mutex::new(BTreeMap::new());
+    let req_counter = metrics.counter("requests_total");
+    let infer_hist = metrics.histogram("infer_latency");
+    let train_hist = metrics.histogram("train_latency");
+
+    while let Ok((req, reply)) = rx.recv() {
+        req_counter.inc();
+        let resp = match req {
+            Request::Shutdown => {
+                let _ = reply.send(Response::Bye);
+                break;
+            }
+            Request::Stats => Response::StatsText(metrics.render()),
+            Request::Labelled { session, sample } => {
+                let mut map = sessions.lock().unwrap();
+                let sess = map.entry(session).or_insert_with(|| {
+                    Session::new(session, cfg.session.clone(), cfg.seed)
+                });
+                let sw = crate::util::timer::Stopwatch::start();
+                match sess.feed_labelled(engine.as_ref(), sample) {
+                    Ok(FeedOutcome::Buffered(n)) => Response::Accepted {
+                        phase: sess.phase.name(),
+                        buffered: n,
+                    },
+                    Ok(FeedOutcome::Trained {
+                        p,
+                        q,
+                        beta,
+                        train_seconds,
+                    }) => {
+                        train_hist.record_secs(sw.elapsed_secs());
+                        metrics.counter("trainings_total").inc();
+                        Response::Trained {
+                            p,
+                            q,
+                            beta,
+                            train_seconds,
+                        }
+                    }
+                    Ok(FeedOutcome::Rejected(msg)) => {
+                        metrics.counter("rejected_total").inc();
+                        Response::Rejected(msg)
+                    }
+                    Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                }
+            }
+            Request::Infer { session, sample } => {
+                let map = sessions.lock().unwrap();
+                match map.get(&session) {
+                    None => Response::Rejected(format!("unknown session {session}")),
+                    Some(sess) => {
+                        let sw = crate::util::timer::Stopwatch::start();
+                        match sess.infer(engine.as_ref(), &sample) {
+                            Ok(Ok((class, scores))) => {
+                                infer_hist.record_secs(sw.elapsed_secs());
+                                metrics.counter("inferences_total").inc();
+                                Response::Prediction { class, scores }
+                            }
+                            Ok(Err(msg)) => Response::Rejected(msg),
+                            Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                        }
+                    }
+                }
+            }
+            Request::Finalize { session } => {
+                let mut map = sessions.lock().unwrap();
+                match map.get_mut(&session) {
+                    None => Response::Rejected(format!("unknown session {session}")),
+                    Some(sess) => match sess.finalize(engine.as_ref()) {
+                        Ok(FeedOutcome::Trained {
+                            p,
+                            q,
+                            beta,
+                            train_seconds,
+                        }) => Response::Trained {
+                            p,
+                            q,
+                            beta,
+                            train_seconds,
+                        },
+                        Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
+                        Ok(FeedOutcome::Buffered(_)) => unreachable!(),
+                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                    },
+                }
+            }
+        };
+        let _ = reply.send(resp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::data::profiles::Profile;
+    use crate::data::synth;
+
+    fn server() -> (Server, crate::data::dataset::Dataset) {
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 2,
+            train: 20,
+            test: 10,
+            t_min: 10,
+            t_max: 12,
+        };
+        let ds = synth::generate_with(
+            &prof,
+            synth::SynthConfig {
+                noise: 0.3,
+                freq_sep: 0.2,
+                ar: 0.3,
+            },
+            13,
+        );
+        let mut scfg = SessionConfig::new(2, 2, 20);
+        scfg.train.nx = 8;
+        scfg.train.epochs = 3;
+        scfg.train.res_decay_epochs = vec![2];
+        scfg.train.out_decay_epochs = vec![2];
+        let cfg = ServerConfig {
+            session: scfg,
+            queue_cap: 64,
+            seed: 0xFEED,
+        };
+        (Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg), ds)
+    }
+
+    #[test]
+    fn end_to_end_train_then_serve() {
+        let (srv, ds) = server();
+        let mut last = None;
+        for s in &ds.train {
+            last = Some(
+                srv.call(Request::Labelled {
+                    session: 1,
+                    sample: s.clone(),
+                })
+                .unwrap(),
+            );
+        }
+        assert!(matches!(last, Some(Response::Trained { .. })), "{last:?}");
+        let mut correct = 0;
+        for s in &ds.test {
+            match srv
+                .call(Request::Infer {
+                    session: 1,
+                    sample: s.clone(),
+                })
+                .unwrap()
+            {
+                Response::Prediction { class, .. } => {
+                    if class == s.label {
+                        correct += 1;
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(correct >= 7, "{correct}/10");
+        let stats = srv.call(Request::Stats).unwrap();
+        match stats {
+            Response::StatsText(t) => {
+                assert!(t.contains("inferences_total 10"), "{t}");
+                assert!(t.contains("trainings_total 1"), "{t}");
+            }
+            other => panic!("{other:?}"),
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        let (srv, ds) = server();
+        // session 2 never trained → inference rejected
+        for s in ds.train.iter().take(3) {
+            srv.call(Request::Labelled {
+                session: 2,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+        let r = srv
+            .call(Request::Infer {
+                session: 2,
+                sample: ds.test[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Rejected(_)), "{r:?}");
+        // unknown session
+        let r = srv
+            .call(Request::Infer {
+                session: 99,
+                sample: ds.test[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Rejected(_)));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn finalize_then_predict() {
+        let (srv, ds) = server();
+        for s in ds.train.iter().take(10) {
+            srv.call(Request::Labelled {
+                session: 5,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+        let r = srv.call(Request::Finalize { session: 5 }).unwrap();
+        assert!(matches!(r, Response::Trained { .. }), "{r:?}");
+        let r = srv
+            .call(Request::Infer {
+                session: 5,
+                sample: ds.test[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Prediction { .. }));
+        srv.shutdown();
+    }
+}

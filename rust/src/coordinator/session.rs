@@ -1,0 +1,383 @@
+//! Per-deployment session: the paper's online protocol as a state
+//! machine over an [`Engine`].
+//!
+//! ```text
+//! Collect ─► BpOptimize ─► RidgeTrain ─► Serve
+//! ```
+//!
+//! * **Collect** buffers labelled samples up to `collect_target` (bounded
+//!   — edge memory budget).
+//! * **BpOptimize** runs the §4.1 SGD protocol over the buffer via
+//!   `Engine::train_step` (per-sample = true online SGD), with the LR
+//!   decay schedule.
+//! * **RidgeTrain** streams r̃ through the packed accumulator and solves
+//!   with the in-place 1-D Cholesky per β, selecting by held-out loss.
+//! * **Serve** answers inference requests; labelled samples arriving in
+//!   Serve are buffered for periodic re-training (drift adaptation).
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use crate::data::dataset::Sample;
+use crate::dfr::mask::Mask;
+use crate::dfr::train::{ridge_phase_from_features, TrainConfig};
+use crate::linalg::ridge::RidgeSolution;
+use crate::runtime::executor::TrainState;
+use crate::util::prng::Pcg32;
+
+/// Session lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Collect,
+    BpOptimize,
+    RidgeTrain,
+    Serve,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Collect => "collect",
+            Phase::BpOptimize => "bp_optimize",
+            Phase::RidgeTrain => "ridge_train",
+            Phase::Serve => "serve",
+        }
+    }
+}
+
+/// Session knobs.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// labelled samples to buffer before training starts
+    pub collect_target: usize,
+    /// hard cap on the buffer (backpressure boundary)
+    pub buffer_cap: usize,
+    /// the §4.1 protocol parameters
+    pub train: TrainConfig,
+    /// classes
+    pub n_c: usize,
+    /// input channels
+    pub n_v: usize,
+    /// retrain after this many new labelled samples arrive in Serve
+    /// (None = never)
+    pub retrain_after: Option<usize>,
+}
+
+impl SessionConfig {
+    pub fn new(n_v: usize, n_c: usize, collect_target: usize) -> Self {
+        SessionConfig {
+            collect_target,
+            buffer_cap: collect_target * 2,
+            train: TrainConfig::default(),
+            n_c,
+            n_v,
+            retrain_after: None,
+        }
+    }
+}
+
+/// Result of feeding a sample.
+#[derive(Debug, PartialEq)]
+pub enum FeedOutcome {
+    Buffered(usize),
+    /// training ran and the session is now serving
+    Trained {
+        p: f32,
+        q: f32,
+        beta: f32,
+        train_seconds: f64,
+    },
+    Rejected(String),
+}
+
+/// One online deployment.
+pub struct Session {
+    pub id: u64,
+    pub cfg: SessionConfig,
+    pub phase: Phase,
+    pub mask: Mask,
+    buffer: Vec<Sample>,
+    new_since_train: usize,
+    state: TrainState,
+    solution: Option<RidgeSolution>,
+    rng: Pcg32,
+    /// mean SGD loss per epoch of the last training run
+    pub epoch_losses: Vec<f32>,
+}
+
+impl Session {
+    pub fn new(id: u64, cfg: SessionConfig, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, id);
+        let mask = Mask::random(cfg.train.nx, cfg.n_v, &mut rng);
+        let state = TrainState::init(cfg.n_c, cfg.train.nx, cfg.train.p_init, cfg.train.q_init);
+        Session {
+            id,
+            cfg,
+            phase: Phase::Collect,
+            mask,
+            buffer: Vec::new(),
+            new_since_train: 0,
+            state,
+            solution: None,
+            rng,
+            epoch_losses: Vec::new(),
+        }
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    pub fn solution(&self) -> Option<&RidgeSolution> {
+        self.solution.as_ref()
+    }
+
+    pub fn params(&self) -> (f32, f32) {
+        (self.state.p, self.state.q)
+    }
+
+    /// Feed one labelled sample. May trigger the full training pipeline.
+    pub fn feed_labelled(&mut self, engine: &dyn Engine, sample: Sample) -> Result<FeedOutcome> {
+        if sample.label >= self.cfg.n_c {
+            return Ok(FeedOutcome::Rejected(format!(
+                "label {} out of range ({})",
+                sample.label, self.cfg.n_c
+            )));
+        }
+        if sample.v() != self.cfg.n_v {
+            return Ok(FeedOutcome::Rejected(format!(
+                "channel count {} != {}",
+                sample.v(),
+                self.cfg.n_v
+            )));
+        }
+        if self.buffer.len() >= self.cfg.buffer_cap {
+            return Ok(FeedOutcome::Rejected("buffer full (backpressure)".into()));
+        }
+        self.buffer.push(sample);
+        self.new_since_train += 1;
+
+        let should_train = match self.phase {
+            Phase::Collect => self.buffer.len() >= self.cfg.collect_target,
+            Phase::Serve => self
+                .cfg
+                .retrain_after
+                .is_some_and(|n| self.new_since_train >= n),
+            _ => false,
+        };
+        if should_train {
+            let t = self.train(engine)?;
+            return Ok(t);
+        }
+        Ok(FeedOutcome::Buffered(self.buffer.len()))
+    }
+
+    /// Force training with whatever is buffered.
+    pub fn finalize(&mut self, engine: &dyn Engine) -> Result<FeedOutcome> {
+        if self.buffer.is_empty() {
+            return Ok(FeedOutcome::Rejected("no samples buffered".into()));
+        }
+        self.train(engine)
+    }
+
+    /// The full §4.1 pipeline over the buffer.
+    fn train(&mut self, engine: &dyn Engine) -> Result<FeedOutcome> {
+        let sw = crate::util::timer::Stopwatch::start();
+        self.phase = Phase::BpOptimize;
+        let cfg = self.cfg.train.clone();
+        self.state = TrainState::init(self.cfg.n_c, cfg.nx, cfg.p_init, cfg.q_init);
+
+        let mut lr_res = cfg.lr_init;
+        let mut lr_out = cfg.lr_init;
+        let mut order: Vec<usize> = (0..self.buffer.len()).collect();
+        self.epoch_losses.clear();
+        for epoch in 0..cfg.epochs {
+            if cfg.res_decay_epochs.contains(&epoch) {
+                lr_res *= 0.1;
+            }
+            if cfg.out_decay_epochs.contains(&epoch) {
+                lr_out *= 0.1;
+            }
+            self.rng.shuffle(&mut order);
+            let mut loss_sum = 0.0f64;
+            for &i in &order {
+                let s = &self.buffer[i];
+                let loss = engine.train_step(s, &self.mask, &mut self.state, lr_res, lr_out)?;
+                loss_sum += f64::from(loss);
+                if cfg.project_to_search_range {
+                    let (plo, phi) = crate::dfr::grid::P_EXP_RANGE;
+                    let (qlo, qhi) = crate::dfr::grid::Q_EXP_RANGE;
+                    self.state.p = self.state.p.clamp(10f32.powf(plo), 10f32.powf(phi));
+                    self.state.q = self.state.q.clamp(10f32.powf(qlo), 10f32.powf(qhi));
+                }
+            }
+            self.epoch_losses
+                .push((loss_sum / self.buffer.len() as f64) as f32);
+        }
+
+        self.phase = Phase::RidgeTrain;
+        let feats: Result<Vec<(Vec<f32>, usize)>> = self
+            .buffer
+            .iter()
+            .map(|s| {
+                engine
+                    .features(s, &self.mask, self.state.p, self.state.q)
+                    .map(|f| (f, s.label))
+            })
+            .collect();
+        let sol = ridge_phase_from_features(&feats?, self.cfg.n_c, &cfg);
+        let beta = sol.beta;
+        self.solution = Some(sol);
+        self.phase = Phase::Serve;
+        self.new_since_train = 0;
+        Ok(FeedOutcome::Trained {
+            p: self.state.p,
+            q: self.state.q,
+            beta,
+            train_seconds: sw.elapsed_secs(),
+        })
+    }
+
+    /// Inference; only valid in Serve.
+    pub fn infer(&self, engine: &dyn Engine, sample: &Sample) -> Result<Result<(usize, Vec<f32>), String>> {
+        if self.phase != Phase::Serve {
+            return Ok(Err(format!(
+                "session {} not serving (phase {})",
+                self.id,
+                self.phase.name()
+            )));
+        }
+        let sol = self.solution.as_ref().expect("serve implies solution");
+        let scores = engine.infer(
+            sample,
+            &self.mask,
+            self.state.p,
+            self.state.q,
+            &sol.w_tilde,
+        )?;
+        let class = crate::linalg::ridge::argmax(&scores);
+        Ok(Ok((class, scores)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::data::profiles::Profile;
+    use crate::data::synth;
+
+    fn setup() -> (NativeEngine, Session, crate::data::dataset::Dataset) {
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 2,
+            train: 30,
+            test: 10,
+            t_min: 10,
+            t_max: 14,
+        };
+        let ds = synth::generate_with(
+            &prof,
+            synth::SynthConfig {
+                noise: 0.3,
+                freq_sep: 0.2,
+                ar: 0.3,
+            },
+            9,
+        );
+        let mut cfg = SessionConfig::new(2, 2, 30);
+        cfg.train.nx = 8;
+        cfg.train.epochs = 4;
+        cfg.train.res_decay_epochs = vec![2];
+        cfg.train.out_decay_epochs = vec![2];
+        let sess = Session::new(1, cfg, 0xABC);
+        (NativeEngine::new(8, 2), sess, ds)
+    }
+
+    #[test]
+    fn lifecycle_collect_to_serve() {
+        let (eng, mut sess, ds) = setup();
+        assert_eq!(sess.phase, Phase::Collect);
+        let n = ds.train.len();
+        for (i, s) in ds.train.iter().enumerate() {
+            let out = sess.feed_labelled(&eng, s.clone()).unwrap();
+            if i + 1 < n {
+                assert_eq!(out, FeedOutcome::Buffered(i + 1));
+            } else {
+                assert!(matches!(out, FeedOutcome::Trained { .. }), "{out:?}");
+            }
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        // inference works and is decent on this easy problem
+        let mut ok = 0;
+        for s in &ds.test {
+            let (class, scores) = sess.infer(&eng, s).unwrap().unwrap();
+            assert_eq!(scores.len(), 2);
+            if class == s.label {
+                ok += 1;
+            }
+        }
+        assert!(ok >= 7, "{ok}/10");
+    }
+
+    #[test]
+    fn infer_rejected_before_training() {
+        let (eng, sess, ds) = setup();
+        let r = sess.infer(&eng, &ds.test[0]).unwrap();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_label_rejected() {
+        let (eng, mut sess, ds) = setup();
+        let mut s = ds.train[0].clone();
+        s.label = 99;
+        let out = sess.feed_labelled(&eng, s).unwrap();
+        assert!(matches!(out, FeedOutcome::Rejected(_)));
+    }
+
+    #[test]
+    fn buffer_cap_backpressure() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.collect_target = usize::MAX; // never train
+        sess.cfg.buffer_cap = 5;
+        for i in 0..7 {
+            let out = sess
+                .feed_labelled(&eng, ds.train[i % ds.train.len()].clone())
+                .unwrap();
+            if i < 5 {
+                assert!(matches!(out, FeedOutcome::Buffered(_)));
+            } else {
+                assert!(matches!(out, FeedOutcome::Rejected(_)));
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_trains_early() {
+        let (eng, mut sess, ds) = setup();
+        for s in ds.train.iter().take(8) {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        let out = sess.finalize(&eng).unwrap();
+        assert!(matches!(out, FeedOutcome::Trained { .. }));
+        assert_eq!(sess.phase, Phase::Serve);
+    }
+
+    #[test]
+    fn retrain_on_drift() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.retrain_after = Some(4);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        // 4 more labelled samples trigger a retrain
+        let mut outcomes = Vec::new();
+        for s in ds.train.iter().take(4) {
+            outcomes.push(sess.feed_labelled(&eng, s.clone()).unwrap());
+        }
+        assert!(matches!(outcomes.last().unwrap(), FeedOutcome::Trained { .. }));
+    }
+}

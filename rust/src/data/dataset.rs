@@ -1,0 +1,194 @@
+//! In-memory dataset representation: variable-length multivariate series
+//! with integer class labels, plus normalization and padding utilities.
+
+/// One labelled multivariate time series.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// row-major T×V
+    pub u: Vec<f32>,
+    /// series length T
+    pub t: usize,
+    /// label in [0, n_c)
+    pub label: usize,
+}
+
+impl Sample {
+    pub fn v(&self) -> usize {
+        if self.t == 0 {
+            0
+        } else {
+            self.u.len() / self.t
+        }
+    }
+
+    /// Row at time step k.
+    pub fn row(&self, k: usize, v: usize) -> &[f32] {
+        &self.u[k * v..(k + 1) * v]
+    }
+
+    /// Copy into a zero-padded buffer of t_pad rows (artifact input).
+    pub fn padded(&self, v: usize, t_pad: usize) -> Vec<f32> {
+        assert!(self.t <= t_pad, "series longer than pad ({} > {t_pad})", self.t);
+        let mut out = vec![0.0f32; t_pad * v];
+        out[..self.t * v].copy_from_slice(&self.u);
+        out
+    }
+}
+
+/// A train/test split of samples with shared metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub name: String,
+    pub n_v: usize,
+    pub n_c: usize,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+impl Dataset {
+    /// Longest series in either split.
+    pub fn t_max(&self) -> usize {
+        self.train
+            .iter()
+            .chain(&self.test)
+            .map(|s| s.t)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn t_min(&self) -> usize {
+        self.train
+            .iter()
+            .chain(&self.test)
+            .map(|s| s.t)
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Standardize every channel to zero mean / unit variance using
+    /// statistics of the training split only (no test leakage).
+    pub fn standardize(&mut self) {
+        let v = self.n_v;
+        let mut mean = vec![0.0f64; v];
+        let mut count = 0u64;
+        for s in &self.train {
+            for k in 0..s.t {
+                for (m, x) in mean.iter_mut().zip(s.row(k, v)) {
+                    *m += f64::from(*x);
+                }
+            }
+            count += s.t as u64;
+        }
+        if count == 0 {
+            return;
+        }
+        for m in mean.iter_mut() {
+            *m /= count as f64;
+        }
+        let mut var = vec![0.0f64; v];
+        for s in &self.train {
+            for k in 0..s.t {
+                for (vv, (x, m)) in var.iter_mut().zip(s.row(k, v).iter().zip(&mean)) {
+                    let d = f64::from(*x) - m;
+                    *vv += d * d;
+                }
+            }
+        }
+        let std: Vec<f64> = var
+            .iter()
+            .map(|&x| (x / count as f64).sqrt().max(1e-8))
+            .collect();
+        for s in self.train.iter_mut().chain(self.test.iter_mut()) {
+            for k in 0..s.t {
+                let row = &mut s.u[k * v..(k + 1) * v];
+                for (x, (m, sd)) in row.iter_mut().zip(mean.iter().zip(&std)) {
+                    *x = ((f64::from(*x) - m) / sd) as f32;
+                }
+            }
+        }
+    }
+
+    /// Class histogram of the training split.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_c];
+        for s in &self.train {
+            c[s.label] += 1;
+        }
+        c
+    }
+}
+
+/// Classification accuracy of predictions vs labels.
+pub fn accuracy(pred: &[usize], samples: &[Sample]) -> f64 {
+    assert_eq!(pred.len(), samples.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let ok = pred
+        .iter()
+        .zip(samples)
+        .filter(|(p, s)| **p == s.label)
+        .count();
+    ok as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(t: usize, v: usize, fill: f32, label: usize) -> Sample {
+        Sample {
+            u: vec![fill; t * v],
+            t,
+            label,
+        }
+    }
+
+    #[test]
+    fn padded_zero_extends() {
+        let s = Sample {
+            u: vec![1.0, 2.0, 3.0, 4.0],
+            t: 2,
+            label: 0,
+        };
+        let p = s.padded(2, 4);
+        assert_eq!(p, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn standardize_train_stats() {
+        let mut d = Dataset {
+            name: "t".into(),
+            n_v: 1,
+            n_c: 2,
+            train: vec![sample(2, 1, 1.0, 0), sample(2, 1, 3.0, 1)],
+            test: vec![sample(1, 1, 2.0, 0)],
+        };
+        d.standardize();
+        // train mean 2, std 1 → values ±1; test value 2 → 0
+        assert!((d.train[0].u[0] + 1.0).abs() < 1e-6);
+        assert!((d.train[1].u[0] - 1.0).abs() < 1e-6);
+        assert!(d.test[0].u[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn tmax_tmin_counts() {
+        let d = Dataset {
+            name: "t".into(),
+            n_v: 1,
+            n_c: 2,
+            train: vec![sample(5, 1, 0.0, 1), sample(2, 1, 0.0, 1)],
+            test: vec![sample(9, 1, 0.0, 0)],
+        };
+        assert_eq!(d.t_max(), 9);
+        assert_eq!(d.t_min(), 2);
+        assert_eq!(d.class_counts(), vec![0, 2]);
+    }
+
+    #[test]
+    fn accuracy_counts_matches() {
+        let samples = vec![sample(1, 1, 0.0, 0), sample(1, 1, 0.0, 1)];
+        assert_eq!(accuracy(&[0, 0], &samples), 0.5);
+        assert_eq!(accuracy(&[0, 1], &samples), 1.0);
+    }
+}

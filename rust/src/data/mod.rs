@@ -1,0 +1,18 @@
+//! Datasets: Table 4 profiles, synthetic generators substituting the
+//! UEA/UCR npz benchmark sets, and npy/npz IO.
+//!
+//! The paper evaluates on 12 multivariate time-series classification
+//! datasets distributed as npz files by Bianchi et al. [6]. Those files
+//! are not redistributable here, so [`synth`] generates class-conditional
+//! surrogates with **exactly** the shape statistics of Table 4 (#V, #C,
+//! Train, Test, T_min, T_max) — see DESIGN.md §3 for why that preserves
+//! each experiment's behaviour. [`npz`] reads/writes real npy/npz so the
+//! pipeline also accepts the original files when available.
+
+pub mod dataset;
+pub mod npz;
+pub mod profiles;
+pub mod synth;
+
+pub use dataset::{Dataset, Sample};
+pub use profiles::{Profile, PROFILES};

@@ -1,0 +1,287 @@
+//! npy / npz reading and writing.
+//!
+//! The paper's datasets ship as npz files ([6]); this module implements
+//! the npy v1 format and the npz (zip) container so the Rust side can
+//! load the original files when present, exchange golden test vectors
+//! with `python/tests/make_golden.py`, and export datasets for numpy.
+//!
+//! Supported dtypes: `<f4`, `<f8`, `<i4`, `<i8` (read), `<f4`/`<i4`
+//! (write). C-order only.
+
+use std::collections::BTreeMap;
+use std::io::{Cursor, Read, Seek, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// An n-dimensional array loaded from npy (f32 storage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Array {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Array {
+    pub fn scalar(&self) -> Result<f32> {
+        if self.data.len() == 1 {
+            Ok(self.data[0])
+        } else {
+            bail!("expected scalar, shape {:?}", self.shape)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// npy
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// Parse one npy buffer.
+pub fn parse_npy(buf: &[u8]) -> Result<Array> {
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let major = buf[6];
+    let header_len: usize = match major {
+        1 => u16::from_le_bytes([buf[8], buf[9]]) as usize,
+        2 | 3 => u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header_start = if major == 1 { 10 } else { 12 };
+    let header = std::str::from_utf8(&buf[header_start..header_start + header_len])
+        .context("npy header not utf-8")?;
+    let descr = dict_value(header, "descr").ok_or_else(|| anyhow!("no descr"))?;
+    let fortran = dict_value(header, "fortran_order").unwrap_or_else(|| "False".into());
+    if fortran.trim() == "True" {
+        bail!("fortran-order npy not supported");
+    }
+    let shape_str = dict_value(header, "shape").ok_or_else(|| anyhow!("no shape"))?;
+    let shape: Vec<usize> = shape_str
+        .trim_matches(|c| c == '(' || c == ')')
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<usize>().context("bad shape"))
+        .collect::<Result<_>>()?;
+    let count: usize = shape.iter().product::<usize>().max(1) * usize::from(!shape.is_empty())
+        + usize::from(shape.is_empty()); // scalar npy: shape ()
+    let payload = &buf[header_start + header_len..];
+
+    let descr = descr.trim_matches(|c| c == '\'' || c == '"');
+    let data = match descr {
+        "<f4" | "|f4" | "=f4" => read_vec::<4>(payload, count)?
+            .iter()
+            .map(|b| f32::from_le_bytes(*b))
+            .collect(),
+        "<f8" => read_vec::<8>(payload, count)?
+            .iter()
+            .map(|b| f64::from_le_bytes(*b) as f32)
+            .collect(),
+        "<i4" => read_vec::<4>(payload, count)?
+            .iter()
+            .map(|b| i32::from_le_bytes(*b) as f32)
+            .collect(),
+        "<i8" => read_vec::<8>(payload, count)?
+            .iter()
+            .map(|b| i64::from_le_bytes(*b) as f32)
+            .collect(),
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(Array { shape, data })
+}
+
+fn read_vec<const N: usize>(payload: &[u8], count: usize) -> Result<Vec<[u8; N]>> {
+    if payload.len() < count * N {
+        bail!("npy payload truncated: {} < {}", payload.len(), count * N);
+    }
+    Ok(payload[..count * N]
+        .chunks_exact(N)
+        .map(|c| {
+            let mut a = [0u8; N];
+            a.copy_from_slice(c);
+            a
+        })
+        .collect())
+}
+
+/// Extract `'key': value` from the ad-hoc python-dict header.
+fn dict_value(header: &str, key: &str) -> Option<String> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    if rest.starts_with('(') {
+        let end = rest.find(')')?;
+        return Some(rest[..=end].to_string());
+    }
+    let end = rest.find(|c| c == ',' || c == '}')?;
+    Some(rest[..end].trim().to_string())
+}
+
+/// Serialize an f32 array to npy v1 bytes.
+pub fn write_npy_f32(shape: &[usize], data: &[f32]) -> Vec<u8> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad header so that data start is 64-byte aligned
+    let base = MAGIC.len() + 4;
+    let total = ((base + header.len() + 1 + 63) / 64) * 64;
+    header.push_str(&" ".repeat(total - base - header.len() - 1));
+    header.push('\n');
+
+    let mut out = Vec::with_capacity(total + data.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.push(1);
+    out.push(0);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// npz (zip container)
+// ---------------------------------------------------------------------------
+
+/// Read every array of an npz file.
+pub fn read_npz(path: impl AsRef<Path>) -> Result<BTreeMap<String, Array>> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    read_npz_from(file)
+}
+
+/// Read npz from any reader.
+pub fn read_npz_from<R: Read + Seek>(reader: R) -> Result<BTreeMap<String, Array>> {
+    let mut zip = zip::ZipArchive::new(reader).context("not a zip/npz")?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip.by_index(i)?;
+        let name = entry
+            .name()
+            .trim_end_matches(".npy")
+            .to_string();
+        let mut buf = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut buf)?;
+        out.insert(name, parse_npy(&buf)?);
+    }
+    Ok(out)
+}
+
+/// Write arrays as an npz file (stored, no compression — these are small
+/// and numpy reads them either way).
+pub fn write_npz(
+    path: impl AsRef<Path>,
+    arrays: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut zip = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Stored);
+    for (name, (shape, data)) in arrays {
+        zip.start_file(format!("{name}.npy"), opts)?;
+        zip.write_all(&write_npy_f32(shape, data))?;
+    }
+    zip.finish()?;
+    Ok(())
+}
+
+/// Round-trip helper used by tests: npz bytes in memory.
+pub fn write_npz_bytes(arrays: &BTreeMap<String, (Vec<usize>, Vec<f32>)>) -> Result<Vec<u8>> {
+    let mut cur = Cursor::new(Vec::new());
+    {
+        let mut zip = zip::ZipWriter::new(&mut cur);
+        let opts = zip::write::FileOptions::default()
+            .compression_method(zip::CompressionMethod::Stored);
+        for (name, (shape, data)) in arrays {
+            zip.start_file(format!("{name}.npy"), opts)?;
+            zip.write_all(&write_npy_f32(shape, data))?;
+        }
+        zip.finish()?;
+    }
+    Ok(cur.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip_2d() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32 * 0.5).collect();
+        let bytes = write_npy_f32(&[3, 4], &data);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![3, 4]);
+        assert_eq!(arr.data, data);
+    }
+
+    #[test]
+    fn npy_roundtrip_scalar_and_1d() {
+        let bytes = write_npy_f32(&[], &[7.5]);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, Vec::<usize>::new());
+        assert_eq!(arr.scalar().unwrap(), 7.5);
+
+        let bytes = write_npy_f32(&[3], &[1.0, 2.0, 3.0]);
+        let arr = parse_npy(&bytes).unwrap();
+        assert_eq!(arr.shape, vec![3]);
+    }
+
+    #[test]
+    fn npz_roundtrip_in_memory() {
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), (vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        m.insert("b".to_string(), (vec![1], vec![9.0]));
+        let bytes = write_npz_bytes(&m).unwrap();
+        let back = read_npz_from(Cursor::new(bytes)).unwrap();
+        assert_eq!(back["a"].shape, vec![2, 2]);
+        assert_eq!(back["a"].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["b"].data, vec![9.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_npy(b"not npy at all").is_err());
+    }
+
+    #[test]
+    fn data_alignment_64() {
+        let bytes = write_npy_f32(&[1], &[1.0]);
+        // header block (magic..newline) must end on a 64-byte boundary
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+
+    #[test]
+    fn reads_python_golden_npz_if_built() {
+        let path = std::path::Path::new("artifacts/golden/small.npz");
+        if !path.exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = read_npz(path).unwrap();
+        assert_eq!(m["nx"].scalar().unwrap(), 5.0);
+        assert_eq!(m["u"].shape, vec![12, 2]);
+        assert_eq!(m["r_mat"].shape, vec![5, 6]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Dataset profiles — the paper's Table 4, mirrored from
+//! `python/compile/profiles.py` (the manifest emitted by aot.py is the
+//! runtime contract; this table drives synthesis and benches).
+
+/// Shape statistics of one benchmark dataset (Table 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Profile {
+    pub name: &'static str,
+    /// input dimension #V
+    pub n_v: usize,
+    /// classes #C
+    pub n_c: usize,
+    pub train: usize,
+    pub test: usize,
+    pub t_min: usize,
+    pub t_max: usize,
+}
+
+impl Profile {
+    /// Padded length the AOT artifacts are specialised to.
+    pub fn t_pad(&self) -> usize {
+        self.t_max
+    }
+
+    /// Ridge system size s = Nx² + Nx + 1 for the default Nx.
+    pub fn s(&self, nx: usize) -> usize {
+        nx * nx + nx + 1
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static Profile> {
+        PROFILES.iter().find(|p| p.name == name)
+    }
+}
+
+/// Table 4 of the paper (#V, #C, Train, Test, T_min, T_max).
+pub const PROFILES: [Profile; 12] = [
+    Profile { name: "arab", n_v: 13, n_c: 10, train: 6600, test: 2200, t_min: 4, t_max: 93 },
+    Profile { name: "aus", n_v: 22, n_c: 95, train: 1140, test: 1425, t_min: 45, t_max: 136 },
+    Profile { name: "char", n_v: 3, n_c: 20, train: 300, test: 2558, t_min: 109, t_max: 205 },
+    Profile { name: "cmu", n_v: 62, n_c: 2, train: 29, test: 29, t_min: 127, t_max: 580 },
+    Profile { name: "ecg", n_v: 2, n_c: 2, train: 100, test: 100, t_min: 39, t_max: 152 },
+    Profile { name: "jpvow", n_v: 12, n_c: 9, train: 270, test: 370, t_min: 7, t_max: 29 },
+    Profile { name: "kick", n_v: 62, n_c: 2, train: 16, test: 10, t_min: 274, t_max: 841 },
+    Profile { name: "lib", n_v: 2, n_c: 15, train: 180, test: 180, t_min: 45, t_max: 45 },
+    Profile { name: "net", n_v: 4, n_c: 13, train: 803, test: 534, t_min: 50, t_max: 994 },
+    Profile { name: "uwav", n_v: 3, n_c: 8, train: 200, test: 427, t_min: 315, t_max: 315 },
+    Profile { name: "waf", n_v: 6, n_c: 2, train: 298, test: 896, t_min: 104, t_max: 198 },
+    Profile { name: "walk", n_v: 62, n_c: 2, train: 28, test: 16, t_min: 128, t_max: 1918 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_profiles_lookup() {
+        assert_eq!(PROFILES.len(), 12);
+        let j = Profile::by_name("jpvow").unwrap();
+        assert_eq!((j.n_v, j.n_c, j.train, j.test), (12, 9, 270, 370));
+        assert!(Profile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn s_dim_paper() {
+        assert_eq!(Profile::by_name("jpvow").unwrap().s(30), 931);
+    }
+
+    #[test]
+    fn tmin_le_tmax() {
+        for p in &PROFILES {
+            assert!(p.t_min <= p.t_max, "{}", p.name);
+        }
+    }
+}

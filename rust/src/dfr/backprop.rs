@@ -1,0 +1,458 @@
+//! Backpropagation through output layer → DPRR layer → reservoir layer
+//! (paper §3.2–3.5).
+//!
+//! Two variants:
+//!
+//! * [`truncated_grads`] — the paper's contribution (Eqs. 33–36): only
+//!   the last time step's contribution to `r` is differentiated, so just
+//!   `x(T-1)`, `x(T)` and `j(T)` are stored. This is what runs online.
+//! * [`full_bptt_grads`] — the oracle (Eqs. 29–32, plus the feedback-loop
+//!   wrap term the paper elides): exact gradients from the recorded
+//!   history, used to validate the truncation and quantify what it
+//!   discards. Memory O(T·Nx) — the cost Table 7 eliminates.
+//!
+//! Plus the Table 7 memory accounting ([`memory_words_naive`] /
+//! [`memory_words_truncated`], verified against all 12 printed rows).
+
+use super::reservoir::{Forward, History, Nonlinearity};
+
+/// Output layer parameters during the SGD phase: `y = softmax(W r + b)`.
+#[derive(Clone, Debug)]
+pub struct OutputLayer {
+    /// row-major ny × Nx(Nx+1)
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub ny: usize,
+    pub nr: usize,
+}
+
+impl OutputLayer {
+    /// Zero-initialised, as in the paper's protocol (§4.1).
+    pub fn zeros(ny: usize, nx: usize) -> Self {
+        let nr = nx * (nx + 1);
+        OutputLayer {
+            w: vec![0.0; ny * nr],
+            b: vec![0.0; ny],
+            ny,
+            nr,
+        }
+    }
+
+    /// Class probabilities for a feature vector r (Eq. 13 + softmax).
+    pub fn probs(&self, r: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(r.len(), self.nr);
+        let mut z: Vec<f32> = (0..self.ny)
+            .map(|i| {
+                let row = &self.w[i * self.nr..(i + 1) * self.nr];
+                row.iter().zip(r).map(|(w, r)| w * r).sum::<f32>() + self.b[i]
+            })
+            .collect();
+        softmax_inplace(&mut z);
+        z
+    }
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax_inplace(z: &mut [f32]) {
+    let m = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in z.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Cross-entropy loss (Eq. 24) for a one-hot target class.
+pub fn cross_entropy(y: &[f32], class: usize) -> f32 {
+    -(y[class] + 1e-12).ln()
+}
+
+/// Gradients produced by one backward pass.
+#[derive(Clone, Debug)]
+pub struct Grads {
+    pub loss: f32,
+    pub dp: f32,
+    pub dq: f32,
+    /// same layout as `OutputLayer::w`
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+/// Truncated backpropagation (Eqs. 25–26, 33–36) from a streaming
+/// [`Forward`] result — the online training kernel.
+///
+/// Mirrors `python/compile/model.py::truncated_grads` exactly (same
+/// association order), so the golden tests compare bitwise-close.
+pub fn truncated_grads(
+    fwd: &Forward,
+    class: usize,
+    // p is part of the formula set's signature for symmetry with
+    // full_bptt_grads (Eq. 35 uses f and the stored forward values only)
+    _p: f32,
+    q: f32,
+    f: Nonlinearity,
+    out: &OutputLayer,
+) -> Grads {
+    let nx = fwd.x_t.len();
+    let nr = out.nr;
+    debug_assert_eq!(fwd.r_mat.len(), nr);
+
+    // forward through the output layer
+    let y = out.probs(&fwd.r_mat);
+    let loss = cross_entropy(&y, class);
+
+    // Eq. (25): dL/dz = y - e
+    let mut dz = y;
+    dz[class] -= 1.0;
+
+    // Eq. (26): db, dW = dz ⊗ r, dr = Wᵀ dz
+    let db = dz.clone();
+    let mut dw = vec![0.0f32; out.ny * nr];
+    for (i, &d) in dz.iter().enumerate() {
+        let row = &mut dw[i * nr..(i + 1) * nr];
+        for (w, &r) in row.iter_mut().zip(&fwd.r_mat) {
+            *w = d * r;
+        }
+    }
+    let mut dr = vec![0.0f32; nr]; // laid out as dR[n][j], row-major Nx×(Nx+1)
+    for (i, &d) in dz.iter().enumerate() {
+        let row = &out.w[i * nr..(i + 1) * nr];
+        for (g, &w) in dr.iter_mut().zip(row) {
+            *g += w * d;
+        }
+    }
+
+    // Eq. (33): bpv_n = Σ_j x(T-1)_j dR[n][j] + dR[n][Nx], scaled by the
+    // DPRR 1/T normalization (∂R_norm/∂(x(T)·) carries the 1/T factor)
+    let w1 = nx + 1;
+    let inv_t = 1.0 / fwd.t_len.max(1) as f32;
+    let bpv: Vec<f32> = (0..nx)
+        .map(|n| {
+            let row = &dr[n * w1..(n + 1) * w1];
+            (row[..nx]
+                .iter()
+                .zip(&fwd.x_tm1)
+                .map(|(g, x)| g * x)
+                .sum::<f32>()
+                + row[nx])
+                * inv_t
+        })
+        .collect();
+
+    // Eq. (34): dx_n = bpv_n + q·dx_{n+1}, reverse over n
+    let mut dx = vec![0.0f32; nx];
+    let mut carry = 0.0f32;
+    for n in (0..nx).rev() {
+        carry = bpv[n] + q * carry;
+        dx[n] = carry;
+    }
+
+    // Eq. (35): dp = Σ_n f(j(T)_n + x(T-1)_n) dx_n
+    let dp = (0..nx)
+        .map(|n| f.eval(fwd.j_t[n] + fwd.x_tm1[n]) * dx[n])
+        .sum();
+
+    // Eq. (36): dq = Σ_n x(T)_{n-1} dx_n, with x(T)_0 = x(T-1)_{Nx}
+    let dq = (0..nx)
+        .map(|n| {
+            let prev = if n == 0 {
+                fwd.x_tm1[nx - 1]
+            } else {
+                fwd.x_t[n - 1]
+            };
+            prev * dx[n]
+        })
+        .sum();
+
+    Grads {
+        loss,
+        dp,
+        dq,
+        dw,
+        db,
+    }
+}
+
+/// Full backpropagation-through-time (Eqs. 29–32) from a recorded
+/// [`History`] — the exact-gradient oracle.
+///
+/// Includes the feedback-loop wrap term (`x(k)_{Nx}` feeds `x(k+1)_1`
+/// through q) that the paper's Eq. 30 elides; finite-difference tests
+/// confirm exactness.
+pub fn full_bptt_grads(
+    hist: &History,
+    class: usize,
+    p: f32,
+    q: f32,
+    f: Nonlinearity,
+    out: &OutputLayer,
+) -> Grads {
+    let nx = hist.nx;
+    let t = hist.t;
+    let nr = out.nr;
+    let w1 = nx + 1;
+
+    let y = out.probs(&hist.r_mat);
+    let loss = cross_entropy(&y, class);
+    let mut dz = y;
+    dz[class] -= 1.0;
+
+    let db = dz.clone();
+    let mut dw = vec![0.0f32; out.ny * nr];
+    for (i, &d) in dz.iter().enumerate() {
+        let row = &mut dw[i * nr..(i + 1) * nr];
+        for (w, &r) in row.iter_mut().zip(&hist.r_mat) {
+            *w = d * r;
+        }
+    }
+    let mut dr = vec![0.0f32; nr];
+    for (i, &d) in dz.iter().enumerate() {
+        let row = &out.w[i * nr..(i + 1) * nr];
+        for (g, &w) in dr.iter_mut().zip(row) {
+            *g += w * d;
+        }
+    }
+
+    let mut dp = 0.0f32;
+    let mut dq = 0.0f32;
+    // dL/dx(k+1): the row for the time step above the current one
+    let mut dx_next = vec![0.0f32; nx];
+    let mut dx = vec![0.0f32; nx];
+    let inv_t = 1.0 / t.max(1) as f32; // DPRR 1/T normalization
+
+    for k in (1..=t).rev() {
+        // Eq. (29): bpv over both product roots + the sum feature
+        for n in 0..nx {
+            let mut b = dr[n * w1 + nx]; // dL/dr_{Nx²+n}
+            for j in 0..nx {
+                b += hist.x(k - 1, j) * dr[n * w1 + j];
+            }
+            if k < t {
+                for i in 0..nx {
+                    b += hist.x(k + 1, i) * dr[i * w1 + n];
+                }
+            }
+            dx[n] = b * inv_t;
+        }
+        // Eq. (30) + wrap: reverse over n within the step
+        for n in (0..nx).rev() {
+            let mut v = dx[n];
+            if n + 1 < nx {
+                v += q * dx[n + 1];
+            } else if k < t {
+                // wrap: x(k)_{Nx} = x(k+1)_0 feeds x(k+1)_1 through q
+                v += q * dx_next[0];
+            }
+            if k < t {
+                // f' evaluated at the argument used to compute x(k+1)_n
+                v += p * f.deriv(hist.j(k + 1, n) + hist.x(k, n)) * dx_next[n];
+            }
+            dx[n] = v;
+        }
+        // Eqs. (31)-(32): accumulate parameter grads for this k
+        for n in 0..nx {
+            dp += f.eval(hist.j(k, n) + hist.x(k - 1, n)) * dx[n];
+            let prev = if n == 0 {
+                hist.x(k - 1, nx - 1)
+            } else {
+                hist.x(k, n - 1)
+            };
+            dq += prev * dx[n];
+        }
+        std::mem::swap(&mut dx_next, &mut dx);
+    }
+
+    Grads {
+        loss,
+        dp,
+        dq,
+        dw,
+        db,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 memory accounting
+// ---------------------------------------------------------------------------
+
+/// Words stored by naive (non-truncated) backpropagation: the full state
+/// history `T·Nx`, the reservoir representation `Nx(Nx+1)`, and the
+/// output weights `N_y·Nx(Nx+1) + N_y` (verified against every row of
+/// Table 7 with T = T_max).
+pub fn memory_words_naive(t: usize, nx: usize, ny: usize) -> usize {
+    t * nx + nx * (nx + 1) + ny * nx * (nx + 1) + ny
+}
+
+/// Words stored with the §3.5 truncation: only `x(T-1)` and `x(T)`
+/// survive of the history.
+pub fn memory_words_truncated(nx: usize, ny: usize) -> usize {
+    2 * nx + nx * (nx + 1) + ny * nx * (nx + 1) + ny
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfr::mask::Mask;
+    use crate::dfr::reservoir::Reservoir;
+    use crate::util::prng::Pcg32;
+
+    fn setup(nx: usize, v: usize, t: usize, seed: u64) -> (Reservoir, Vec<f32>, OutputLayer) {
+        let mut rng = Pcg32::seed(seed);
+        let res = Reservoir {
+            mask: Mask::random(nx, v, &mut rng),
+            p: 0.25,
+            q: 0.2,
+            f: Nonlinearity::Linear { alpha: 1.0 },
+        };
+        let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+        let ny = 3;
+        let mut out = OutputLayer::zeros(ny, nx);
+        for w in out.w.iter_mut() {
+            *w = 0.05 * rng.normal();
+        }
+        (res, u, out)
+    }
+
+    #[test]
+    fn softmax_normalises() {
+        let mut z = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut z);
+        let s: f32 = z.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(z[2] > z[1] && z[1] > z[0]);
+    }
+
+    #[test]
+    fn full_bptt_matches_finite_difference() {
+        let (res, u, out) = setup(4, 2, 6, 50);
+        let t = 6;
+        let class = 1;
+        let hist = res.forward_history(&u, t);
+        let g = full_bptt_grads(&hist, class, res.p, res.q, res.f, &out);
+
+        let loss_at = |p: f32, q: f32| {
+            let mut r2 = res.clone();
+            r2.p = p;
+            r2.q = q;
+            let fw = r2.forward(&u, t);
+            cross_entropy(&out.probs(&fw.r_mat), class)
+        };
+        let h = 1e-3;
+        let fd_p = (loss_at(res.p + h, res.q) - loss_at(res.p - h, res.q)) / (2.0 * h);
+        let fd_q = (loss_at(res.p, res.q + h) - loss_at(res.p, res.q - h)) / (2.0 * h);
+        assert!(
+            (g.dp - fd_p).abs() < 2e-2 * fd_p.abs().max(1.0),
+            "dp {} vs fd {}",
+            g.dp,
+            fd_p
+        );
+        assert!(
+            (g.dq - fd_q).abs() < 2e-2 * fd_q.abs().max(1.0),
+            "dq {} vs fd {}",
+            g.dq,
+            fd_q
+        );
+    }
+
+    #[test]
+    fn full_bptt_fd_nonlinear_f() {
+        let mut rng = Pcg32::seed(51);
+        let res = Reservoir {
+            mask: Mask::random(3, 2, &mut rng),
+            p: 0.4,
+            q: 0.3,
+            f: Nonlinearity::Tanh,
+        };
+        let t = 5;
+        let u: Vec<f32> = (0..t * 2).map(|_| rng.normal()).collect();
+        let mut out = OutputLayer::zeros(2, 3);
+        for w in out.w.iter_mut() {
+            *w = 0.1 * rng.normal();
+        }
+        let hist = res.forward_history(&u, t);
+        let g = full_bptt_grads(&hist, 0, res.p, res.q, res.f, &out);
+        let loss_at = |p: f32, q: f32| {
+            let mut r2 = res.clone();
+            r2.p = p;
+            r2.q = q;
+            cross_entropy(&out.probs(&r2.forward(&u, t).r_mat), 0)
+        };
+        let h = 1e-3;
+        let fd_p = (loss_at(res.p + h, res.q) - loss_at(res.p - h, res.q)) / (2.0 * h);
+        let fd_q = (loss_at(res.p, res.q + h) - loss_at(res.p, res.q - h)) / (2.0 * h);
+        assert!((g.dp - fd_p).abs() < 3e-2 * fd_p.abs().max(1.0), "{} vs {}", g.dp, fd_p);
+        assert!((g.dq - fd_q).abs() < 3e-2 * fd_q.abs().max(1.0), "{} vs {}", g.dq, fd_q);
+    }
+
+    #[test]
+    fn truncated_equals_full_on_single_step_series() {
+        // with T = 1 the truncation discards nothing
+        let (res, u, out) = setup(5, 2, 1, 52);
+        let fw = res.forward(&u, 1);
+        let hist = res.forward_history(&u, 1);
+        let gt = truncated_grads(&fw, 0, res.p, res.q, res.f, &out);
+        let gf = full_bptt_grads(&hist, 0, res.p, res.q, res.f, &out);
+        assert!((gt.dp - gf.dp).abs() < 1e-5);
+        assert!((gt.dq - gf.dq).abs() < 1e-5);
+        assert_eq!(gt.loss, gf.loss);
+    }
+
+    #[test]
+    fn output_grads_match_finite_difference() {
+        let (res, u, out) = setup(4, 2, 8, 53);
+        let fw = res.forward(&u, 8);
+        let g = truncated_grads(&fw, 2, res.p, res.q, res.f, &out);
+        // db via fd
+        let h = 1e-3;
+        for i in 0..out.ny {
+            let mut o2 = out.clone();
+            o2.b[i] += h;
+            let lp = cross_entropy(&o2.probs(&fw.r_mat), 2);
+            o2.b[i] -= 2.0 * h;
+            let lm = cross_entropy(&o2.probs(&fw.r_mat), 2);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((g.db[i] - fd).abs() < 1e-3, "db[{i}] {} vs {}", g.db[i], fd);
+        }
+        // a few dW entries
+        for &idx in &[0usize, 7, 33] {
+            let mut o2 = out.clone();
+            o2.w[idx] += h;
+            let lp = cross_entropy(&o2.probs(&fw.r_mat), 2);
+            o2.w[idx] -= 2.0 * h;
+            let lm = cross_entropy(&o2.probs(&fw.r_mat), 2);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (g.dw[idx] - fd).abs() < 2e-2 * fd.abs().max(1.0),
+                "dw[{idx}] {} vs {}",
+                g.dw[idx],
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn table7_memory_words_exact() {
+        // every row of Table 7, with T = T_max and Nx = 30
+        let rows: &[(&str, usize, usize, usize, usize)] = &[
+            ("arab", 93, 10, 13_030, 10_300),
+            ("aus", 136, 95, 93_455, 89_435),
+            ("char", 205, 20, 25_700, 19_610),
+            ("cmu", 580, 2, 20_192, 2_852),
+            ("ecg", 152, 2, 7_352, 2_852),
+            ("jpvow", 29, 9, 10_179, 9_369),
+            ("kick", 841, 2, 28_022, 2_852),
+            ("lib", 45, 15, 16_245, 14_955),
+            ("net", 994, 13, 42_853, 13_093),
+            ("uwav", 315, 8, 17_828, 8_438),
+            ("waf", 198, 2, 8_732, 2_852),
+            ("walk", 1918, 2, 60_332, 2_852),
+        ];
+        for &(name, t, ny, naive, simplified) in rows {
+            assert_eq!(memory_words_naive(t, 30, ny), naive, "{name} naive");
+            assert_eq!(memory_words_truncated(30, ny), simplified, "{name} simplified");
+        }
+    }
+}

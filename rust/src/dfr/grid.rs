@@ -1,0 +1,259 @@
+//! Grid search over (p, q, β) — the conventional offline optimization the
+//! paper's backpropagation replaces (Table 5, Figs. 7–8).
+//!
+//! The search space follows §4.1: p ∈ [10^-3.75, 10^-0.25],
+//! q ∈ [10^-2.75, 10^-0.25], divided *equidistantly* (in the exponent,
+//! since the ranges are specified as powers of ten) into `divs` points
+//! per axis; β swept over the same four values as the proposed method.
+//! The paper increases `divs` from 1 until grid-search accuracy matches
+//! backpropagation — [`search_until_match`] reproduces that protocol.
+
+use super::mask::Mask;
+use super::train::{evaluate_params, TrainConfig};
+use crate::data::dataset::Dataset;
+use crate::util::runtimex::parallel_map;
+
+/// §4.1 exponent ranges.
+pub const P_EXP_RANGE: (f32, f32) = (-3.75, -0.25);
+pub const Q_EXP_RANGE: (f32, f32) = (-2.75, -0.25);
+
+/// One evaluated grid point.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    pub p: f32,
+    pub q: f32,
+    pub accuracy: f64,
+    pub beta: f32,
+}
+
+/// Result of a full grid sweep at a given division count.
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub divs: usize,
+    pub points: Vec<GridPoint>,
+    pub best: GridPoint,
+    pub seconds: f64,
+}
+
+/// Grid coordinates for `divs` divisions of an exponent range:
+/// equidistant inclusive of the endpoints (divs = 1 → midpoint).
+pub fn grid_coords(range: (f32, f32), divs: usize) -> Vec<f32> {
+    let (lo, hi) = range;
+    if divs <= 1 {
+        return vec![10f32.powf((lo + hi) / 2.0)];
+    }
+    (0..divs)
+        .map(|i| {
+            let e = lo + (hi - lo) * i as f32 / (divs - 1) as f32;
+            10f32.powf(e)
+        })
+        .collect()
+}
+
+/// Exhaustive sweep at `divs` divisions per axis (divs² ridge trainings),
+/// parallelised across `threads` workers.
+pub fn search(
+    ds: &Dataset,
+    mask: &Mask,
+    cfg: &TrainConfig,
+    divs: usize,
+    threads: usize,
+) -> GridResult {
+    let sw = crate::util::timer::Stopwatch::start();
+    let ps = grid_coords(P_EXP_RANGE, divs);
+    let qs = grid_coords(Q_EXP_RANGE, divs);
+    let mut jobs = Vec::with_capacity(ps.len() * qs.len());
+    for &p in &ps {
+        for &q in &qs {
+            jobs.push((p, q));
+        }
+    }
+    // each worker clones the dataset reference context; evaluate_params is
+    // read-only over ds/mask so share via Arc
+    let ds = std::sync::Arc::new(ds.clone());
+    let mask = std::sync::Arc::new(mask.clone());
+    let cfg = std::sync::Arc::new(cfg.clone());
+    let points = parallel_map(jobs, threads, move |(p, q)| {
+        let (acc, sol) = evaluate_params(&ds, &mask, p, q, &cfg);
+        GridPoint {
+            p,
+            q,
+            accuracy: acc,
+            beta: sol.beta,
+        }
+    });
+    let best = points
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .expect("non-empty grid");
+    GridResult {
+        divs,
+        points,
+        best,
+        seconds: sw.elapsed_secs(),
+    }
+}
+
+/// The paper's stopping protocol: increase `divs` from 1 until the best
+/// grid accuracy reaches `target_acc` (the backpropagation accuracy), or
+/// `max_divs` is hit. Returns every sweep, cumulative time included —
+/// exactly the data behind Table 5's "gs divs"/"gs time" columns and
+/// Fig. 7's trace.
+pub fn search_until_match(
+    ds: &Dataset,
+    mask: &Mask,
+    cfg: &TrainConfig,
+    target_acc: f64,
+    max_divs: usize,
+    threads: usize,
+) -> Vec<GridResult> {
+    let mut sweeps = Vec::new();
+    for divs in 1..=max_divs {
+        let r = search(ds, mask, cfg, divs, threads);
+        let done = r.best.accuracy >= target_acc;
+        sweeps.push(r);
+        if done {
+            break;
+        }
+    }
+    sweeps
+}
+
+/// Recursive refinement (the Fig. 8 alternative): subdivide the best cell
+/// of a coarse sweep. Returns (level-1 result, level-2 result) so the
+/// bench can show the failure mode the paper illustrates (level 2 locks
+/// onto a suboptimal basin when the coarse grid misses the global one).
+pub fn recursive_refine(
+    ds: &Dataset,
+    mask: &Mask,
+    cfg: &TrainConfig,
+    coarse_divs: usize,
+    threads: usize,
+) -> (GridResult, GridResult) {
+    let level1 = search(ds, mask, cfg, coarse_divs, threads);
+    // subdivide around the best coarse point: a window one coarse cell
+    // wide, searched at the same division count
+    let (p_lo, p_hi) = P_EXP_RANGE;
+    let (q_lo, q_hi) = Q_EXP_RANGE;
+    let cell_p = (p_hi - p_lo) / coarse_divs.max(1) as f32;
+    let cell_q = (q_hi - q_lo) / coarse_divs.max(1) as f32;
+    let bp = level1.best.p.log10();
+    let bq = level1.best.q.log10();
+    let sub_p = (bp - cell_p / 2.0, bp + cell_p / 2.0);
+    let sub_q = (bq - cell_q / 2.0, bq + cell_q / 2.0);
+
+    let sw = crate::util::timer::Stopwatch::start();
+    let ps = grid_coords(sub_p, coarse_divs);
+    let qs = grid_coords(sub_q, coarse_divs);
+    let mut jobs = Vec::new();
+    for &p in &ps {
+        for &q in &qs {
+            jobs.push((p, q));
+        }
+    }
+    let dsa = std::sync::Arc::new(ds.clone());
+    let ma = std::sync::Arc::new(mask.clone());
+    let ca = std::sync::Arc::new(cfg.clone());
+    let points = parallel_map(jobs, threads, move |(p, q)| {
+        let (acc, sol) = evaluate_params(&dsa, &ma, p, q, &ca);
+        GridPoint {
+            p,
+            q,
+            accuracy: acc,
+            beta: sol.beta,
+        }
+    });
+    let best = points
+        .iter()
+        .cloned()
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .unwrap();
+    let level2 = GridResult {
+        divs: coarse_divs,
+        points,
+        best,
+        seconds: sw.elapsed_secs(),
+    };
+    (level1, level2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::profiles::Profile;
+    use crate::data::synth;
+    use crate::util::prng::Pcg32;
+
+    fn tiny() -> (Dataset, Mask, TrainConfig) {
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 2,
+            train: 24,
+            test: 16,
+            t_min: 15,
+            t_max: 20,
+        };
+        let ds = synth::generate_with(
+            &prof,
+            synth::SynthConfig {
+                noise: 0.3,
+                freq_sep: 0.15,
+                ar: 0.3,
+            },
+            11,
+        );
+        let cfg = TrainConfig {
+            nx: 8,
+            betas: vec![1e-4, 1e-2],
+            ..Default::default()
+        };
+        let mask = Mask::random(cfg.nx, ds.n_v, &mut Pcg32::seed(3));
+        (ds, mask, cfg)
+    }
+
+    #[test]
+    fn coords_midpoint_and_endpoints() {
+        let c1 = grid_coords((-2.0, -1.0), 1);
+        assert_eq!(c1.len(), 1);
+        assert!((c1[0] - 10f32.powf(-1.5)).abs() < 1e-6);
+        let c3 = grid_coords((-2.0, -1.0), 3);
+        assert_eq!(c3.len(), 3);
+        assert!((c3[0] - 0.01).abs() < 1e-6);
+        assert!((c3[2] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn search_evaluates_divs_squared_points() {
+        let (ds, mask, cfg) = tiny();
+        let r = search(&ds, &mask, &cfg, 3, 4);
+        assert_eq!(r.points.len(), 9);
+        assert!(r.best.accuracy >= r.points[0].accuracy);
+        assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn until_match_stops_when_target_met() {
+        let (ds, mask, cfg) = tiny();
+        // target 0 accuracy → stops after the very first sweep
+        let sweeps = search_until_match(&ds, &mask, &cfg, 0.0, 5, 2);
+        assert_eq!(sweeps.len(), 1);
+        assert_eq!(sweeps[0].divs, 1);
+    }
+
+    #[test]
+    fn until_match_caps_at_max_divs() {
+        let (ds, mask, cfg) = tiny();
+        let sweeps = search_until_match(&ds, &mask, &cfg, 1.01, 3, 2);
+        assert_eq!(sweeps.len(), 3);
+    }
+
+    #[test]
+    fn recursive_refine_produces_two_levels() {
+        let (ds, mask, cfg) = tiny();
+        let (l1, l2) = recursive_refine(&ds, &mask, &cfg, 2, 2);
+        assert_eq!(l1.points.len(), 4);
+        assert_eq!(l2.points.len(), 4);
+    }
+}

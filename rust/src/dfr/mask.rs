@@ -1,0 +1,97 @@
+//! Input masking (paper Fig. 2 / §2.2).
+//!
+//! The digital DFR multiplies each input sample by a mask that varies per
+//! virtual node: `j(k) = M u(k)` with `M ∈ R^{Nx×V}` whose entries are
+//! drawn from ±1 (pseudo-random bit sequence, the paper's standard
+//! choice). The mask is fixed at deployment and shared between training
+//! and inference — it is part of the artifact inputs on the JAX path and
+//! of [`super::Reservoir`] on the Rust path.
+
+use crate::util::prng::Pcg32;
+
+/// A fixed ±1 mask matrix, row-major `Nx×V`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub nx: usize,
+    pub v: usize,
+    pub m: Vec<f32>,
+}
+
+impl Mask {
+    /// Pseudo-random binary mask (the paper's default, after [3]).
+    pub fn random(nx: usize, v: usize, rng: &mut Pcg32) -> Self {
+        let m = (0..nx * v).map(|_| rng.sign()).collect();
+        Mask { nx, v, m }
+    }
+
+    /// Deterministic parity mask — mirrors
+    /// `python/tests/make_golden.py::inputs` so cross-language golden
+    /// tests regenerate identical inputs.
+    pub fn golden(nx: usize, v: usize) -> Self {
+        let mut m = Vec::with_capacity(nx * v);
+        for n in 0..nx {
+            for vv in 0..v {
+                m.push(if (7 * n + 3 * vv) % 2 == 0 { 1.0 } else { -1.0 });
+            }
+        }
+        Mask { nx, v, m }
+    }
+
+    /// Apply the mask: `j = M u` for one time step (`u` has V entries,
+    /// result has Nx entries).
+    pub fn apply(&self, u_t: &[f32], j_out: &mut [f32]) {
+        debug_assert_eq!(u_t.len(), self.v);
+        debug_assert_eq!(j_out.len(), self.nx);
+        for (n, j) in j_out.iter_mut().enumerate() {
+            let row = &self.m[n * self.v..(n + 1) * self.v];
+            *j = row.iter().zip(u_t).map(|(m, u)| m * u).sum();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_mask_is_pm_one() {
+        let mut rng = Pcg32::seed(7);
+        let m = Mask::random(30, 12, &mut rng);
+        assert_eq!(m.m.len(), 360);
+        assert!(m.m.iter().all(|&x| x == 1.0 || x == -1.0));
+        // roughly balanced
+        let pos = m.m.iter().filter(|&&x| x > 0.0).count();
+        assert!((120..=240).contains(&pos));
+    }
+
+    #[test]
+    fn golden_mask_matches_python_formula() {
+        let m = Mask::golden(3, 4);
+        // (7n+3v) % 2 == 0 → +1
+        let expect = [
+            1.0, -1.0, 1.0, -1.0, // n=0: 0,3,6,9
+            -1.0, 1.0, -1.0, 1.0, // n=1: 7,10,13,16
+            1.0, -1.0, 1.0, -1.0, // n=2: 14,17,20,23
+        ];
+        assert_eq!(m.m, expect);
+    }
+
+    #[test]
+    fn apply_is_matvec() {
+        let m = Mask {
+            nx: 2,
+            v: 3,
+            m: vec![1.0, -1.0, 1.0, -1.0, 1.0, 1.0],
+        };
+        let mut j = [0.0f32; 2];
+        m.apply(&[1.0, 2.0, 3.0], &mut j);
+        assert_eq!(j, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Mask::random(8, 2, &mut Pcg32::seed(5));
+        let b = Mask::random(8, 2, &mut Pcg32::seed(5));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,32 @@
+//! Pure-Rust DFR stack — the software reference implementation.
+//!
+//! Mirrors the L2 JAX model bit-for-bit in structure (same equations,
+//! same truncation) and serves three roles:
+//!
+//! 1. the **SW-only baseline** the paper compares its FPGA against
+//!    (Table 9) — timed through `fpga::sw_model` and the benches;
+//! 2. the **grid-search baseline** (Table 5, Figs. 7–8), which would be
+//!    prohibitively slow through per-sample PJRT round-trips;
+//! 3. the **golden cross-check** against `python/tests/make_golden.py`
+//!    (the same closed-form inputs must give the same forward/backward
+//!    numbers in both languages).
+//!
+//! Modules: [`mask`] (input masking, Fig. 2), [`reservoir`] (modular DFR
+//! Eq. 14 and the conventional Mackey–Glass digital DFR Eqs. 8–9),
+//! [`dprr`] (Eqs. 27–28), [`backprop`] (full BPTT Eqs. 29–32 and the
+//! truncated Eqs. 33–36 + Table 7 memory accounting), [`train`] (the
+//! paper's §4.1 SGD protocol + ridge finalization), [`grid`] (the 3-D
+//! grid-search baseline).
+
+pub mod backprop;
+pub mod dprr;
+pub mod grid;
+pub mod mask;
+pub mod reservoir;
+pub mod train;
+
+pub use reservoir::{Nonlinearity, Reservoir};
+
+/// Reservoir size used throughout the paper's evaluation (§4: "The
+/// reservoir size Nx was set to 30").
+pub const NX_PAPER: usize = 30;

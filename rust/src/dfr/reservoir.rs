@@ -1,0 +1,385 @@
+//! Reservoir layer: the modular DFR model (Eq. 14) and the conventional
+//! Mackey–Glass digital DFR (Eqs. 8–9).
+//!
+//! The modular model decomposes the nonlinear element into a one-input
+//! one-output function `f` plus two scalar parameters:
+//!
+//! ```text
+//! x(k)_n = p · f(j(k)_n + x(k-1)_n) + q · x(k)_{n-1},   x(k)_0 ≡ x(k-1)_{Nx}
+//! ```
+//!
+//! Forward processing is streaming: the full state history is never
+//! stored (only `x(k-1)`, `x(k)` and the DPRR accumulator), matching the
+//! paper's edge memory budget (§3.5). A history-recording variant exists
+//! for the full-BPTT oracle.
+
+use super::dprr::DprrAccumulator;
+use super::mask::Mask;
+
+/// The one-input one-output nonlinearity `f` of the modular DFR.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Nonlinearity {
+    /// `f(x) = α·x` — used for all datasets in the paper's evaluation
+    /// (§4, "as recommended in [11]").
+    Linear { alpha: f32 },
+    /// `f(x) = tanh(x)` — a common alternative the modular model admits.
+    Tanh,
+    /// `f(x) = η·x / (1 + |x|^p)` — Mackey–Glass-style saturating map
+    /// (Eq. 3).
+    MackeyGlass { eta: f32, p_exp: f32 },
+}
+
+impl Nonlinearity {
+    #[inline(always)]
+    pub fn eval(self, x: f32) -> f32 {
+        match self {
+            Nonlinearity::Linear { alpha } => alpha * x,
+            Nonlinearity::Tanh => x.tanh(),
+            Nonlinearity::MackeyGlass { eta, p_exp } => {
+                eta * x / (1.0 + x.abs().powf(p_exp))
+            }
+        }
+    }
+
+    /// Derivative f'(x) — needed by full BPTT (Eq. 30).
+    #[inline(always)]
+    pub fn deriv(self, x: f32) -> f32 {
+        match self {
+            Nonlinearity::Linear { alpha } => alpha,
+            Nonlinearity::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Nonlinearity::MackeyGlass { eta, p_exp } => {
+                // d/dx [η x (1+|x|^p)^-1]
+                let a = x.abs().powf(p_exp);
+                let denom = 1.0 + a;
+                eta * (1.0 + a - p_exp * a) / (denom * denom)
+            }
+        }
+    }
+}
+
+/// Result of a forward pass — everything truncated BP and ridge need.
+#[derive(Clone, Debug)]
+pub struct Forward {
+    /// DPRR matrix, row-major Nx×(Nx+1), **normalized by 1/T**; `vec(R)`
+    /// is the feature vector r.
+    ///
+    /// The 1/T normalization is a diagonal rescaling of Eqs. (27)–(28)
+    /// that makes the feature magnitude — and hence the meaning of the
+    /// fixed β grid {1e-6..1} — independent of the series length
+    /// (T spans 29..1918 across Table 4, i.e. raw-B magnitudes spanning
+    /// ~4 000×, which f32 Cholesky cannot absorb). Documented deviation
+    /// (DESIGN.md §10).
+    pub r_mat: Vec<f32>,
+    /// final reservoir state x(T)
+    pub x_t: Vec<f32>,
+    /// previous state x(T-1)
+    pub x_tm1: Vec<f32>,
+    /// last masked input j(T)
+    pub j_t: Vec<f32>,
+    /// series length T (the normalization factor; backprop needs it)
+    pub t_len: usize,
+}
+
+impl Forward {
+    /// r̃ = [vec(R), 1] — the ridge feature vector (Eq. 16).
+    pub fn r_tilde(&self) -> Vec<f32> {
+        let mut r = Vec::with_capacity(self.r_mat.len() + 1);
+        r.extend_from_slice(&self.r_mat);
+        r.push(1.0);
+        r
+    }
+}
+
+/// A configured modular-DFR reservoir (mask + parameters + nonlinearity).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    pub mask: Mask,
+    pub p: f32,
+    pub q: f32,
+    pub f: Nonlinearity,
+}
+
+impl Reservoir {
+    pub fn nx(&self) -> usize {
+        self.mask.nx
+    }
+
+    /// One time step (Eq. 14) in place: `x` is x(k-1) on entry, x(k) on
+    /// exit. `j` must already hold j(k).
+    #[inline]
+    pub fn step(&self, x: &mut [f32], j: &[f32]) {
+        let nx = x.len();
+        let mut prev_node = x[nx - 1]; // wrap: x(k)_0 = x(k-1)_{Nx}
+        for n in 0..nx {
+            let xn = self.p * self.f.eval(j[n] + x[n]) + self.q * prev_node;
+            prev_node = xn;
+            x[n] = xn;
+        }
+    }
+
+    /// Streaming forward pass over a series `u` (row-major T×V).
+    ///
+    /// O(Nx²) memory total (the DPRR accumulator), independent of T.
+    pub fn forward(&self, u: &[f32], t: usize) -> Forward {
+        let nx = self.nx();
+        let v = self.mask.v;
+        assert_eq!(u.len(), t * v, "series shape mismatch");
+        let mut x = vec![0.0f32; nx];
+        let mut x_prev = vec![0.0f32; nx];
+        let mut j = vec![0.0f32; nx];
+        let mut acc = DprrAccumulator::new(nx);
+        for k in 0..t {
+            x_prev.copy_from_slice(&x);
+            self.mask.apply(&u[k * v..(k + 1) * v], &mut j);
+            self.step(&mut x, &j);
+            acc.push(&x, &x_prev);
+        }
+        let mut r_mat = acc.into_matrix();
+        let inv_t = 1.0 / t.max(1) as f32;
+        for r in r_mat.iter_mut() {
+            *r *= inv_t;
+        }
+        Forward {
+            r_mat,
+            x_t: x,
+            x_tm1: x_prev,
+            j_t: j,
+            t_len: t,
+        }
+    }
+
+    /// Forward pass that records the whole state and input history —
+    /// required by the full-BPTT oracle (Eqs. 29–32). Memory O(T·Nx),
+    /// exactly the cost §3.5's truncation eliminates.
+    pub fn forward_history(&self, u: &[f32], t: usize) -> History {
+        let nx = self.nx();
+        let v = self.mask.v;
+        assert_eq!(u.len(), t * v);
+        let mut x = vec![0.0f32; nx];
+        let mut xs = Vec::with_capacity(t * nx);
+        let mut js = Vec::with_capacity(t * nx);
+        let mut j = vec![0.0f32; nx];
+        let mut acc = DprrAccumulator::new(nx);
+        let mut x_prev = vec![0.0f32; nx];
+        for k in 0..t {
+            x_prev.copy_from_slice(&x);
+            self.mask.apply(&u[k * v..(k + 1) * v], &mut j);
+            self.step(&mut x, &j);
+            js.extend_from_slice(&j);
+            xs.extend_from_slice(&x);
+            acc.push(&x, &x_prev);
+        }
+        let mut r_mat = acc.into_matrix();
+        let inv_t = 1.0 / t.max(1) as f32;
+        for r in r_mat.iter_mut() {
+            *r *= inv_t;
+        }
+        History { nx, t, xs, js, r_mat }
+    }
+}
+
+/// Full state/input history (full-BPTT oracle only).
+#[derive(Clone, Debug)]
+pub struct History {
+    pub nx: usize,
+    pub t: usize,
+    /// xs[k*nx + n] = x(k+1)_{n+1}
+    pub xs: Vec<f32>,
+    /// js[k*nx + n] = j(k+1)_{n+1}
+    pub js: Vec<f32>,
+    pub r_mat: Vec<f32>,
+}
+
+impl History {
+    /// x(k)_n with 1-based k (x(0) = 0).
+    #[inline]
+    pub fn x(&self, k: usize, n: usize) -> f32 {
+        if k == 0 {
+            0.0
+        } else {
+            self.xs[(k - 1) * self.nx + n]
+        }
+    }
+
+    #[inline]
+    pub fn j(&self, k: usize, n: usize) -> f32 {
+        self.js[(k - 1) * self.nx + n]
+    }
+
+    pub fn state(&self, k: usize) -> &[f32] {
+        &self.xs[(k - 1) * self.nx..k * self.nx]
+    }
+}
+
+/// The conventional fully-digital Mackey–Glass DFR (Eqs. 8–9) — the
+/// baseline architecture the modular model replaces. Exposed for the
+/// design-space comparisons in `benches/` and the examples.
+#[derive(Clone, Debug)]
+pub struct MackeyGlassDfr {
+    pub mask: Mask,
+    pub gamma: f32,
+    pub eta: f32,
+    pub p_exp: f32,
+    /// virtual-node interval θ (Nx·θ = τ)
+    pub theta: f32,
+}
+
+impl MackeyGlassDfr {
+    /// One time step of Eqs. (8)–(9) in place.
+    pub fn step(&self, x: &mut [f32], j: &[f32]) {
+        let nx = x.len();
+        let e = (-self.theta).exp();
+        let one_e = 1.0 - e;
+        let mut cascade = x[nx - 1];
+        for n in 0..nx {
+            let arg = x[n] + self.gamma * j[n];
+            let f = self.eta * arg / (1.0 + arg.abs().powf(self.p_exp));
+            let xn = cascade * e + one_e * f;
+            cascade = xn;
+            x[n] = xn;
+        }
+    }
+
+    /// Streaming forward with DPRR — same output contract as
+    /// [`Reservoir::forward`] so both plug into the same output layer.
+    pub fn forward(&self, u: &[f32], t: usize) -> Forward {
+        let nx = self.mask.nx;
+        let v = self.mask.v;
+        assert_eq!(u.len(), t * v);
+        let mut x = vec![0.0f32; nx];
+        let mut x_prev = vec![0.0f32; nx];
+        let mut j = vec![0.0f32; nx];
+        let mut acc = DprrAccumulator::new(nx);
+        for k in 0..t {
+            x_prev.copy_from_slice(&x);
+            self.mask.apply(&u[k * v..(k + 1) * v], &mut j);
+            self.step(&mut x, &j);
+            acc.push(&x, &x_prev);
+        }
+        let mut r_mat = acc.into_matrix();
+        let inv_t = 1.0 / t.max(1) as f32;
+        for r in r_mat.iter_mut() {
+            *r *= inv_t;
+        }
+        Forward {
+            r_mat,
+            x_t: x,
+            x_tm1: x_prev,
+            j_t: j,
+            t_len: t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn toy_reservoir(nx: usize, v: usize, p: f32, q: f32) -> Reservoir {
+        Reservoir {
+            mask: Mask::golden(nx, v),
+            p,
+            q,
+            f: Nonlinearity::Linear { alpha: 1.0 },
+        }
+    }
+
+    #[test]
+    fn step_matches_recurrence_by_hand() {
+        let r = toy_reservoir(3, 1, 0.5, 0.25);
+        let mut x = vec![0.1, 0.2, 0.4];
+        let j = vec![1.0, -1.0, 1.0];
+        r.step(&mut x, &j);
+        // x1 = 0.5*(1.0+0.1) + 0.25*0.4 = 0.65
+        assert!((x[0] - 0.65).abs() < 1e-6);
+        // x2 = 0.5*(-1.0+0.2) + 0.25*0.65
+        assert!((x[1] - (-0.4 + 0.1625)).abs() < 1e-6);
+        // x3 = 0.5*(1.0+0.4) + 0.25*x2
+        assert!((x[2] - (0.7 + 0.25 * x[1])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forward_state_independent_of_history_storage() {
+        let r = toy_reservoir(5, 2, 0.3, 0.2);
+        let mut rng = Pcg32::seed(1);
+        let t = 17;
+        let u: Vec<f32> = (0..t * 2).map(|_| rng.normal()).collect();
+        let f = r.forward(&u, t);
+        let h = r.forward_history(&u, t);
+        assert_eq!(f.x_t, h.state(t));
+        assert_eq!(f.r_mat, h.r_mat);
+    }
+
+    #[test]
+    fn r_tilde_appends_one() {
+        let r = toy_reservoir(2, 1, 0.3, 0.2);
+        let f = r.forward(&[1.0, -1.0, 0.5], 3);
+        let rt = f.r_tilde();
+        assert_eq!(rt.len(), 2 * 3 + 1);
+        assert_eq!(*rt.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn nonlinearity_derivs_match_finite_difference() {
+        let fs = [
+            Nonlinearity::Linear { alpha: 0.8 },
+            Nonlinearity::Tanh,
+            Nonlinearity::MackeyGlass {
+                eta: 0.9,
+                p_exp: 2.0,
+            },
+        ];
+        for f in fs {
+            for x in [-1.5f32, -0.3, 0.2, 1.1] {
+                let h = 1e-3;
+                let fd = (f.eval(x + h) - f.eval(x - h)) / (2.0 * h);
+                let an = f.deriv(x);
+                assert!(
+                    (fd - an).abs() < 5e-3,
+                    "{f:?} at {x}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stability_region_bounded_state() {
+        // |q| < 1 with small p keeps the linear reservoir bounded
+        let r = toy_reservoir(10, 2, 0.1, 0.5);
+        let mut rng = Pcg32::seed(2);
+        let t = 500;
+        let u: Vec<f32> = (0..t * 2).map(|_| rng.normal()).collect();
+        let f = r.forward(&u, t);
+        assert!(f.x_t.iter().all(|x| x.abs() < 100.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn mackey_glass_dfr_bounded_and_nonlinear() {
+        let d = MackeyGlassDfr {
+            mask: Mask::golden(8, 2),
+            gamma: 0.5,
+            eta: 0.9,
+            p_exp: 2.0,
+            theta: 0.2,
+        };
+        let mut rng = Pcg32::seed(3);
+        let t = 100;
+        let u: Vec<f32> = (0..t * 2).map(|_| rng.normal()).collect();
+        let f = d.forward(&u, t);
+        assert!(f.x_t.iter().all(|x| x.is_finite() && x.abs() < 10.0));
+        // doubling the input must NOT double the state (nonlinearity)
+        let u2: Vec<f32> = u.iter().map(|x| 2.0 * x).collect();
+        let f2 = d.forward(&u2, t);
+        let lin_err: f32 = f
+            .x_t
+            .iter()
+            .zip(&f2.x_t)
+            .map(|(a, b)| (2.0 * a - b).abs())
+            .sum();
+        assert!(lin_err > 1e-3, "Mackey-Glass DFR behaved linearly");
+    }
+}

@@ -1,0 +1,31 @@
+//! HLS-like FPGA co-design simulator — the substitute for the paper's
+//! Zynq-7000 (xc7z020clg400-1) + Vitis HLS 2021.1 testbed (DESIGN.md §3).
+//!
+//! The paper's hardware results (Tables 9–11, Fig. 10) compare
+//! *schedules*: pipelined vs non-pipelined loops, inlined vs shared
+//! modules, write-buffered vs memory-conflicting substitutions, and an
+//! ARM Cortex-A9 software reference. This module models exactly those
+//! quantities:
+//!
+//! * [`resource`] — the xc7z020 budget (LUT/FF/BRAM/DSP) and per-operator
+//!   costs of the f32 datapath HLS instantiates;
+//! * [`schedule`] — loop-nest cycle models with initiation intervals,
+//!   pipeline fill, the `RegSize` write buffer of Algorithm 5, and the
+//!   dependence-limited IIs Fig. 10 illustrates;
+//! * [`power`] — static + activity-based dynamic power calibrated to the
+//!   paper's Vivado reports (0.734 W HW @ 100 MHz, 1.53 W A9);
+//! * [`design`] — the three synthesis configurations of Tables 9/11
+//!   (standard pipelined, non-pipelined, inlined) assembled from the
+//!   per-module schedules, plus the SW-only reference model.
+//!
+//! Absolute seconds are a model, not a measurement; the deliverable is
+//! the *shape*: who wins, by what factor, and how the Pareto frontier of
+//! Table 11 moves with the configuration.
+
+pub mod design;
+pub mod power;
+pub mod resource;
+pub mod schedule;
+
+pub use design::{DesignConfig, DesignReport, SystemModel};
+pub use resource::{ResourceBudget, ResourceUsage, XC7Z020};

@@ -1,0 +1,222 @@
+//! FPGA resource model: the xc7z020 budget and the LUT/FF/DSP/BRAM cost
+//! of the f32 operators and memories HLS instantiates.
+//!
+//! Operator costs follow Xilinx 7-series floating-point IP synthesis
+//! (the same cores Vitis HLS 2021.1 instantiates at 100 MHz): an f32
+//! adder ≈ 2 DSP + ~360 LUT, multiplier ≈ 3 DSP + ~130 LUT, divider and
+//! square root are LUT-heavy iterative cores. BRAM is counted in 36 kb
+//! blocks (the paper's unit; a half block counts 0.5).
+
+/// Device budget (what 100% means in Tables 9/11).
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceBudget {
+    pub lut: u32,
+    pub lutram: u32,
+    pub ff: u32,
+    /// 36 kb BRAM blocks
+    pub bram36: f32,
+    pub dsp: u32,
+    pub bufg: u32,
+}
+
+/// Zynq-7000 xc7z020clg400-1 (Zedboard/Pynq-Z1 class), the paper's part.
+pub const XC7Z020: ResourceBudget = ResourceBudget {
+    lut: 53_200,
+    lutram: 17_400,
+    ff: 106_400,
+    bram36: 140.0,
+    dsp: 220,
+    bufg: 32,
+};
+
+/// Aggregate usage of a module or a whole design.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub lut: u32,
+    pub lutram: u32,
+    pub ff: u32,
+    pub bram36: f32,
+    pub dsp: u32,
+    pub bufg: u32,
+}
+
+impl ResourceUsage {
+    pub fn add(&mut self, other: &ResourceUsage) {
+        self.lut += other.lut;
+        self.lutram += other.lutram;
+        self.ff += other.ff;
+        self.bram36 += other.bram36;
+        self.dsp += other.dsp;
+        self.bufg = self.bufg.max(other.bufg);
+    }
+
+    pub fn scaled(&self, n: u32) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut * n,
+            lutram: self.lutram * n,
+            ff: self.ff * n,
+            bram36: self.bram36 * n as f32,
+            dsp: self.dsp * n,
+            bufg: self.bufg,
+        }
+    }
+
+    /// Utilisation fractions against a budget (Tables 9/11 percentages).
+    pub fn utilization(&self, b: &ResourceBudget) -> Utilization {
+        Utilization {
+            lut: self.lut as f32 / b.lut as f32,
+            lutram: self.lutram as f32 / b.lutram as f32,
+            ff: self.ff as f32 / b.ff as f32,
+            bram36: self.bram36 / b.bram36,
+            dsp: self.dsp as f32 / b.dsp as f32,
+        }
+    }
+
+    pub fn fits(&self, b: &ResourceBudget) -> bool {
+        let u = self.utilization(b);
+        u.lut <= 1.0 && u.lutram <= 1.0 && u.ff <= 1.0 && u.bram36 <= 1.0 && u.dsp <= 1.0
+    }
+}
+
+/// Utilisation fractions.
+#[derive(Clone, Copy, Debug)]
+pub struct Utilization {
+    pub lut: f32,
+    pub lutram: f32,
+    pub ff: f32,
+    pub bram36: f32,
+    pub dsp: f32,
+}
+
+/// f32 operator cores (per parallel instance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    Add,
+    Mul,
+    Div,
+    Sqrt,
+    /// fused compare/select & control (cheap)
+    Cmp,
+}
+
+impl FpOp {
+    /// Synthesis cost of one pipelined instance.
+    pub fn cost(self) -> ResourceUsage {
+        match self {
+            FpOp::Add => ResourceUsage {
+                lut: 360,
+                ff: 400,
+                dsp: 2,
+                ..Default::default()
+            },
+            FpOp::Mul => ResourceUsage {
+                lut: 130,
+                ff: 150,
+                dsp: 3,
+                ..Default::default()
+            },
+            FpOp::Div => ResourceUsage {
+                lut: 780,
+                ff: 1_450,
+                dsp: 0,
+                ..Default::default()
+            },
+            FpOp::Sqrt => ResourceUsage {
+                lut: 420,
+                ff: 820,
+                dsp: 0,
+                ..Default::default()
+            },
+            FpOp::Cmp => ResourceUsage {
+                lut: 70,
+                ff: 90,
+                dsp: 0,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Pipeline latency in cycles at 100 MHz (7-series FP IP defaults).
+    pub fn latency(self) -> u32 {
+        match self {
+            // 4-stage adder (medium-latency 7-series FP config at
+            // 100 MHz) — chosen so RegSize=4 legalises II=1, which is
+            // what the paper reports achieving with its write buffer
+            FpOp::Add => 4,
+            FpOp::Mul => 4,
+            FpOp::Div => 28,
+            FpOp::Sqrt => 28,
+            FpOp::Cmp => 1,
+        }
+    }
+}
+
+/// BRAM blocks needed for `words` f32 words (36 kb block = 1024 words,
+/// used in true-dual-port 18 kb halves like HLS does → count halves).
+pub fn bram_for_words(words: usize) -> f32 {
+    // one 18 kb half holds 512 f32 words
+    let halves = words.div_ceil(512);
+    halves as f32 * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_is_xc7z020() {
+        assert_eq!(XC7Z020.lut, 53_200);
+        assert_eq!(XC7Z020.dsp, 220);
+        assert_eq!(XC7Z020.bram36, 140.0);
+    }
+
+    #[test]
+    fn usage_accumulates() {
+        let mut u = ResourceUsage::default();
+        u.add(&FpOp::Add.cost());
+        u.add(&FpOp::Mul.cost());
+        assert_eq!(u.dsp, 5);
+        assert_eq!(u.lut, 490);
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let u = ResourceUsage {
+            lut: 26_600,
+            dsp: 110,
+            ..Default::default()
+        };
+        let f = u.utilization(&XC7Z020);
+        assert!((f.lut - 0.5).abs() < 1e-6);
+        assert!((f.dsp - 0.5).abs() < 1e-6);
+        assert!(u.fits(&XC7Z020));
+    }
+
+    #[test]
+    fn overbudget_detected() {
+        let u = ResourceUsage {
+            dsp: 221,
+            ..Default::default()
+        };
+        assert!(!u.fits(&XC7Z020));
+    }
+
+    #[test]
+    fn bram_sizing() {
+        assert_eq!(bram_for_words(0), 0.0);
+        assert_eq!(bram_for_words(512), 0.5);
+        assert_eq!(bram_for_words(513), 1.0);
+        assert_eq!(bram_for_words(1024), 1.0);
+        // packed B for Nx=30: s(s+1)/2 = 433,846 words → ~424 blocks
+        // (exceeds the chip: the design must keep it in DDR; the paper's
+        // 26.5 BRAM confirms the ridge arrays are partially streamed)
+        assert!(bram_for_words(433_846) > 140.0);
+    }
+
+    #[test]
+    fn div_sqrt_are_lut_heavy_not_dsp() {
+        assert_eq!(FpOp::Div.cost().dsp, 0);
+        assert!(FpOp::Div.cost().lut > FpOp::Mul.cost().lut);
+        assert!(FpOp::Sqrt.latency() > FpOp::Mul.latency());
+    }
+}

@@ -1,0 +1,28 @@
+//! # dfr-edge
+//!
+//! Online training and inference system for delayed feedback reservoirs
+//! (DFR), reproducing Ikeda, Awano & Sato, *"Online Training and Inference
+//! System on Edge FPGA Using Delayed Feedback Reservoir"*, IEEE TCAD 2025.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`coordinator`] — the online edge system: session FSM, router, batcher.
+//! - [`runtime`] — PJRT client for AOT artifacts produced by `python/compile`.
+//! - [`linalg`] — the paper's in-place 1-D Cholesky ridge regression
+//!   (Algorithms 1–5) with op/memory counters (Tables 2–3).
+//! - [`dfr`] — pure-Rust DFR stack: masking, modular reservoir, DPRR,
+//!   truncated backpropagation, SGD, grid search.
+//! - [`fpga`] — HLS-like co-design simulator substituting the Zynq board.
+//! - [`data`] — synthetic dataset generators (Table 4 profiles) + npz IO.
+//! - [`baselines`] — MLP / ESN comparators for Table 6.
+//! - [`util`] — substrates: PRNG, arg parser, JSON, mini runtime, bench
+//!   harness, property-test driver.
+
+pub mod util;
+pub mod data;
+pub mod dfr;
+pub mod linalg;
+pub mod fpga;
+pub mod baselines;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;

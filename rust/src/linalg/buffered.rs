@@ -1,0 +1,230 @@
+//! Algorithm 5: write-buffered substitution for HLS pipelining.
+//!
+//! On the FPGA, line 4 of Algorithm 3 (`Q[i][j] -= Q[i][k] * P[..]`)
+//! re-reads the address written on the previous iteration, forcing the
+//! multiply+subtract+write to fit one clock period and blocking II=1
+//! pipelining. The paper inserts a small shift-register write buffer
+//! (`RegSize = 4`): partial products accumulate round-robin into
+//! `RegSize` independent registers — breaking the loop-carried dependence
+//! to distance `RegSize` — and are folded into `Q[i][j]` afterwards
+//! (lines 18–20). Fig. 10 shows the relaxed timing.
+//!
+//! Numerically this only reassociates the subtraction order; this module
+//! reproduces the exact buffered association so the software result is
+//! bit-identical to what the FPGA computes, and the `fpga::schedule`
+//! model uses `RegSize` to derive the achievable II and clock.
+
+use super::counters::Ops;
+use super::tri;
+
+/// Default buffer depth chosen in the paper after balancing parallelism
+/// against the fold-up cost and memory conflicts.
+pub const REG_SIZE: usize = 4;
+
+/// Algorithm 5: `D = A C⁻ᵀ` with a `REG`-deep write buffer.
+///
+/// Semantics match [`super::cholesky1d::solve_ct_inplace`] up to fp32
+/// reassociation: term k of the inner reduction lands in register
+/// `k % REG`, and the registers are subtracted from `Q[i][j]` in order.
+pub fn solve_ct_buffered<O: Ops, const REG: usize>(
+    q: &mut [f32],
+    p: &[f32],
+    s: usize,
+    ny: usize,
+    ops: &mut O,
+) {
+    debug_assert_eq!(q.len(), ny * s);
+    let mut reg = [0.0f32; REG];
+    for i in 0..ny {
+        let row = &mut q[i * s..(i + 1) * s];
+        for j in 0..s {
+            let row_j = tri(j, 0);
+            reg.fill(0.0);
+            // lines 3-17: round-robin partial accumulation (pipelined at
+            // II=1 on the FPGA because each register is touched every
+            // REG-th iteration)
+            for k in 0..j {
+                reg[k % REG] += row[k] * p[row_j + k];
+            }
+            // lines 18-20: fold the buffer into Q[i][j]
+            let mut acc = row[j];
+            for r in reg.iter() {
+                acc -= *r;
+            }
+            row[j] = acc / p[row_j + j];
+            ops.add((j + REG) as u64);
+            ops.mul(j as u64);
+            ops.div(1);
+        }
+    }
+}
+
+/// The "similar optimization applied to Algorithm 4": buffered forward
+/// substitution `W̃_out = D C⁻¹`.
+pub fn solve_c_buffered<O: Ops, const REG: usize>(
+    q: &mut [f32],
+    p: &[f32],
+    s: usize,
+    ny: usize,
+    ops: &mut O,
+) {
+    debug_assert_eq!(q.len(), ny * s);
+    let mut reg = [0.0f32; REG];
+    for i in 0..ny {
+        let row = &mut q[i * s..(i + 1) * s];
+        for j in (0..s).rev() {
+            reg.fill(0.0);
+            for (t, k) in (j + 1..s).rev().enumerate() {
+                reg[t % REG] += row[k] * p[tri(k, j)];
+            }
+            let mut acc = row[j];
+            for r in reg.iter() {
+                acc -= *r;
+            }
+            row[j] = acc / p[tri(j, j)];
+            ops.add((s - 1 - j + REG) as u64);
+            ops.mul((s - 1 - j) as u64);
+            ops.div(1);
+        }
+    }
+}
+
+/// Full buffered pipeline (Algorithm 2 is already conflict-free and is
+/// reused unchanged, as in the paper).
+pub fn ridge_cholesky_buffered<O: Ops>(
+    p: &mut [f32],
+    q: &mut [f32],
+    s: usize,
+    ny: usize,
+    ops: &mut O,
+) {
+    super::cholesky1d::cholesky_1d(p, s, ops);
+    solve_ct_buffered::<O, REG_SIZE>(q, p, s, ny, ops);
+    solve_c_buffered::<O, REG_SIZE>(q, p, s, ny, ops);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::counters::NoCount;
+    use super::super::pack_lower;
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn random_spd_dense(s: usize, beta: f32, rng: &mut Pcg32) -> Vec<f32> {
+        let g: Vec<f32> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = 0.0;
+                for k in 0..s {
+                    acc += g[i * s + k] * g[j * s + k];
+                }
+                b[i * s + j] = acc / s as f32 + if i == j { beta } else { 0.0 };
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn buffered_matches_unbuffered_closely() {
+        let mut rng = Pcg32::seed(31);
+        for s in [3, 10, 27] {
+            let ny = 2;
+            let b = random_spd_dense(s, 0.8, &mut rng);
+            let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+
+            let mut p1 = pack_lower(&b, s);
+            let mut q1 = a.clone();
+            super::super::cholesky1d::ridge_cholesky_1d(&mut p1, &mut q1, s, ny, &mut NoCount);
+
+            let mut p2 = pack_lower(&b, s);
+            let mut q2 = a.clone();
+            ridge_cholesky_buffered(&mut p2, &mut q2, s, ny, &mut NoCount);
+
+            for (x, y) in q1.iter().zip(&q2) {
+                assert!(
+                    (x - y).abs() < 1e-3 * y.abs().max(1.0),
+                    "s={s}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn buffered_solution_satisfies_system() {
+        let mut rng = Pcg32::seed(32);
+        let s = 21;
+        let ny = 3;
+        let b = random_spd_dense(s, 1.0, &mut rng);
+        let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+        let mut p = pack_lower(&b, s);
+        let mut q = a.clone();
+        ridge_cholesky_buffered(&mut p, &mut q, s, ny, &mut NoCount);
+        for i in 0..ny {
+            for j in 0..s {
+                let mut acc = 0.0f32;
+                for k in 0..s {
+                    acc += q[i * s + k] * b[k * s + j];
+                }
+                assert!(
+                    (acc - a[i * s + j]).abs() < 2e-3,
+                    "({i},{j}): {acc} vs {}",
+                    a[i * s + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn regsize_one_is_bitwise_equal_to_sequential() {
+        // with REG = 1 the buffered association degenerates to... a single
+        // accumulator, which still reassociates (sum then subtract) — so
+        // check exact agreement only on short reductions where both orders
+        // coincide for j <= 1.
+        let s = 2;
+        let ny = 1;
+        let b = [[4.0f32, 1.0], [1.0, 3.0]];
+        let dense: Vec<f32> = b.iter().flatten().copied().collect();
+        let a = vec![1.0f32, 2.0];
+
+        let mut p1 = pack_lower(&dense, s);
+        let mut q1 = a.clone();
+        super::super::cholesky1d::ridge_cholesky_1d(&mut p1, &mut q1, s, ny, &mut NoCount);
+
+        let mut p2 = pack_lower(&dense, s);
+        let mut q2 = a.clone();
+        super::super::cholesky1d::cholesky_1d(&mut p2, s, &mut NoCount);
+        solve_ct_buffered::<NoCount, 1>(&mut q2, &p2, s, ny, &mut NoCount);
+        solve_c_buffered::<NoCount, 1>(&mut q2, &p2, s, ny, &mut NoCount);
+
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn various_regsizes_agree() {
+        let mut rng = Pcg32::seed(33);
+        let s = 15;
+        let ny = 2;
+        let b = random_spd_dense(s, 1.0, &mut rng);
+        let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+        let mut outs = Vec::new();
+        macro_rules! run {
+            ($reg:literal) => {{
+                let mut p = pack_lower(&b, s);
+                let mut q = a.clone();
+                super::super::cholesky1d::cholesky_1d(&mut p, s, &mut NoCount);
+                solve_ct_buffered::<NoCount, $reg>(&mut q, &p, s, ny, &mut NoCount);
+                solve_c_buffered::<NoCount, $reg>(&mut q, &p, s, ny, &mut NoCount);
+                outs.push(q);
+            }};
+        }
+        run!(2);
+        run!(4);
+        run!(8);
+        for o in &outs[1..] {
+            for (x, y) in o.iter().zip(&outs[0]) {
+                assert!((x - y).abs() < 1e-4 * y.abs().max(1.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Algorithms 2–4: in-place Ridge regression via 1-D Cholesky
+//! decomposition — the paper's proposed method.
+//!
+//! `B` is SPD (Eqs. 37–39), so only its lower triangle is stored, packed
+//! row-sequentially into a 1-D array `P[s(s+1)/2]` (Eq. 41). Algorithm 2
+//! decomposes `B = C Cᵀ` **in place** in `P`; Algorithm 3 computes
+//! `D = A C⁻ᵀ` in place in the array `Q` that initially holds `A`;
+//! Algorithm 4 computes `W̃_out = D C⁻¹` in place in `Q`. No memory beyond
+//! `P`, `Q` and a few registers is used — that is the whole point.
+
+use super::counters::Ops;
+use super::tri;
+
+/// Dot product with 4 independent accumulator lanes so LLVM emits SIMD
+/// (a single serial `sum()` is dependence-limited) — the decomposition's
+/// inner kernel, s³/6 invocations' worth of work.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 4];
+    let ac = a.chunks_exact(4);
+    let bc = b.chunks_exact(4);
+    let ra = ac.remainder();
+    let rb = bc.remainder();
+    for (ca, cb) in ac.zip(bc) {
+        lanes[0] += ca[0] * cb[0];
+        lanes[1] += ca[1] * cb[1];
+        lanes[2] += ca[2] * cb[2];
+        lanes[3] += ca[3] * cb[3];
+    }
+    let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for (x, y) in ra.iter().zip(rb) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Algorithm 2: in-place Cholesky decomposition in the packed 1-D array.
+///
+/// On entry `p` holds the lower triangle of `B` (with the βI shift already
+/// applied to the diagonal); on exit it holds `C` with `B = C Cᵀ`.
+///
+/// The update order is the one the paper proves dependence-safe: for each
+/// column i, first the diagonal `C[i][i]` (lines 2–5), then the
+/// sub-diagonal column entries `C[j][i]`, j > i (lines 7–12), each reading
+/// only already-final values of `P`.
+pub fn cholesky_1d<O: Ops>(p: &mut [f32], s: usize, ops: &mut O) {
+    debug_assert_eq!(p.len(), s * (s + 1) / 2);
+    for i in 0..s {
+        // lines 2-4: diagonal accumulation (slice dot lets LLVM
+        // vectorize; indexing form was 1.9x slower — see §Perf)
+        let row_i = tri(i, 0);
+        let (head, tail) = p.split_at_mut(row_i + i);
+        let ri = &head[row_i..];
+        let mut diag = tail[0];
+        diag -= dot(ri, ri);
+        ops.add(i as u64);
+        ops.mul(i as u64);
+        // line 5: sqrt (guarded: B is SPD in exact arithmetic; f32
+        // round-off with tiny β can graze zero)
+        diag = diag.max(f32::MIN_POSITIVE).sqrt();
+        tail[0] = diag;
+        ops.sqrt(1);
+        // line 6
+        let buf = 1.0 / diag;
+        ops.div(1);
+        // lines 7-12: column below the diagonal
+        for j in i + 1..s {
+            let row_j = tri(j, 0);
+            // row_i+i < row_j always (j > i), so split once per j
+            let (head, tail) = p.split_at_mut(row_j);
+            let ri = &head[row_i..row_i + i];
+            let rj = &tail[..i];
+            let mut acc = tail[i];
+            acc -= dot(ri, rj);
+            tail[i] = acc * buf;
+            ops.add(i as u64);
+            ops.mul(i as u64 + 1);
+        }
+    }
+}
+
+/// Algorithm 3: in-place backward substitution `D = A C⁻ᵀ`.
+///
+/// `q` (ny×s row-major) holds `A` on entry and `D` on exit; `p` holds `C`
+/// from [`cholesky_1d`]. Row-major traversal left→right: every value read
+/// on the right-hand side is already final (the in-place property).
+pub fn solve_ct_inplace<O: Ops>(q: &mut [f32], p: &[f32], s: usize, ny: usize, ops: &mut O) {
+    debug_assert_eq!(q.len(), ny * s);
+    for i in 0..ny {
+        let row = &mut q[i * s..(i + 1) * s];
+        for j in 0..s {
+            let row_j = tri(j, 0);
+            let cj = &p[row_j..row_j + j];
+            let mut acc = row[j];
+            acc -= dot(&row[..j], cj);
+            row[j] = acc / p[row_j + j];
+            ops.add(j as u64);
+            ops.mul(j as u64);
+            ops.div(1);
+        }
+    }
+}
+
+/// Algorithm 4: in-place forward substitution `W̃_out = D C⁻¹`.
+///
+/// `q` holds `D` on entry and `W̃_out` on exit; traversal right→left.
+pub fn solve_c_inplace<O: Ops>(q: &mut [f32], p: &[f32], s: usize, ny: usize, ops: &mut O) {
+    debug_assert_eq!(q.len(), ny * s);
+    for i in 0..ny {
+        let row = &mut q[i * s..(i + 1) * s];
+        for j in (0..s).rev() {
+            let mut acc = row[j];
+            for k in (j + 1..s).rev() {
+                acc -= row[k] * p[tri(k, j)];
+            }
+            row[j] = acc / p[tri(j, j)];
+            ops.add((s - 1 - j) as u64);
+            ops.mul((s - 1 - j) as u64);
+            ops.div(1);
+        }
+    }
+}
+
+/// Full proposed pipeline: Algorithms 2 → 3 → 4.
+///
+/// `p` holds packed `B` (β already on the diagonal) and is destroyed;
+/// `q` holds `A` and receives `W̃_out`.
+pub fn ridge_cholesky_1d<O: Ops>(p: &mut [f32], q: &mut [f32], s: usize, ny: usize, ops: &mut O) {
+    cholesky_1d(p, s, ops);
+    solve_ct_inplace(q, p, s, ny, ops);
+    solve_c_inplace(q, p, s, ny, ops);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::counters::{NoCount, OpCount};
+    use super::super::{pack_lower, tri_len};
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn random_spd_dense(s: usize, beta: f32, rng: &mut Pcg32) -> Vec<f32> {
+        let g: Vec<f32> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = 0.0;
+                for k in 0..s {
+                    acc += g[i * s + k] * g[j * s + k];
+                }
+                b[i * s + j] = acc / s as f32 + if i == j { beta } else { 0.0 };
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn decomposition_reconstructs_b() {
+        let mut rng = Pcg32::seed(21);
+        for s in [1, 2, 5, 13, 29] {
+            let b = random_spd_dense(s, 0.3, &mut rng);
+            let mut p = pack_lower(&b, s);
+            cholesky_1d(&mut p, s, &mut NoCount);
+            // check C C^T == B on the lower triangle
+            for i in 0..s {
+                for j in 0..=i {
+                    let mut acc = 0.0f32;
+                    for k in 0..=j {
+                        acc += p[tri(i, k)] * p[tri(j, k)];
+                    }
+                    let want = b[i * s + j];
+                    assert!(
+                        (acc - want).abs() < 1e-3 * want.abs().max(1.0),
+                        "s={s} ({i},{j}): {acc} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ridge_matches_gaussian_baseline() {
+        use super::super::gaussian::{ridge_gaussian, GaussianWorkspace};
+        let mut rng = Pcg32::seed(22);
+        for s in [4, 9, 23] {
+            let ny = 3;
+            let b = random_spd_dense(s, 0.5, &mut rng);
+            let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+
+            let mut ws = GaussianWorkspace::new(s, ny);
+            ridge_gaussian(&a, &b, &mut ws, &mut NoCount);
+
+            let mut p = pack_lower(&b, s);
+            let mut q = a.clone();
+            ridge_cholesky_1d(&mut p, &mut q, s, ny, &mut NoCount);
+
+            for (idx, (x, y)) in q.iter().zip(&ws.w_out).enumerate() {
+                assert!(
+                    (x - y).abs() < 2e-2 * y.abs().max(1.0),
+                    "s={s} idx={idx}: cholesky {x} vs gaussian {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solve_verifies_w_b_equals_a() {
+        let mut rng = Pcg32::seed(23);
+        let s = 17;
+        let ny = 4;
+        let b = random_spd_dense(s, 1.0, &mut rng);
+        let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+        let mut p = pack_lower(&b, s);
+        let mut q = a.clone();
+        ridge_cholesky_1d(&mut p, &mut q, s, ny, &mut NoCount);
+        for i in 0..ny {
+            for j in 0..s {
+                let mut acc = 0.0f32;
+                for k in 0..s {
+                    acc += q[i * s + k] * b[k * s + j];
+                }
+                assert!(
+                    (acc - a[i * s + j]).abs() < 2e-3,
+                    "({i},{j}): {acc} vs {}",
+                    a[i * s + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_is_exactly_packed_plus_q() {
+        // the in-place property: the pipeline allocates nothing
+        let s = 31;
+        let ny = 2;
+        let words = tri_len(s) + ny * s;
+        assert_eq!(
+            words,
+            super::super::counters::memory_words_proposed(s, ny)
+        );
+    }
+
+    #[test]
+    fn op_counts_match_table3_proposed() {
+        let s = 20;
+        let ny = 3;
+        let b = random_spd_dense(s, 1.0, &mut Pcg32::seed(5));
+        let a = vec![0.25f32; ny * s];
+        let mut p = pack_lower(&b, s);
+        let mut q = a;
+        let mut ops = OpCount::default();
+        ridge_cholesky_1d(&mut p, &mut q, s, ny, &mut ops);
+        let expect = super::super::counters::ops_proposed(s as u64, ny as u64);
+        assert_eq!(ops, expect);
+    }
+
+    #[test]
+    fn property_random_spd_solutions_valid() {
+        crate::util::proptest::run_prop(
+            "cholesky solves SPD",
+            crate::util::proptest::Config {
+                cases: 48,
+                max_size: 20,
+                ..Default::default()
+            },
+            |rng, size| {
+                let s = size as usize + 1;
+                let ny = 1 + (rng.below(3) as usize);
+                let b = random_spd_dense(s, 0.5 + rng.uniform(), rng);
+                let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+                let mut p = pack_lower(&b, s);
+                let mut q = a.clone();
+                ridge_cholesky_1d(&mut p, &mut q, s, ny, &mut NoCount);
+                // residual ||W B - A||_inf must be small
+                for i in 0..ny {
+                    for j in 0..s {
+                        let mut acc = 0.0f32;
+                        for k in 0..s {
+                            acc += q[i * s + k] * b[k * s + j];
+                        }
+                        let want = a[i * s + j];
+                        if (acc - want).abs() > 5e-3 * want.abs().max(1.0) {
+                            return Err(format!(
+                                "s={s} ny={ny} ({i},{j}): {acc} vs {want}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

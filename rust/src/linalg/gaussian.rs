@@ -1,0 +1,203 @@
+//! Algorithm 1: Ridge regression via Gauss–Jordan elimination — the
+//! paper's "naive" baseline (after Arias-García et al. [5]).
+//!
+//! Inverts the dense s×s matrix `B` with an explicit identity-seeded
+//! inverse, then multiplies `W̃_out = A B⁻¹`. Requires
+//! `2s(s+N_y)+1` words (Table 2) and `~4s³` flops (Table 3).
+
+use super::counters::Ops;
+
+/// Workspace for Algorithm 1 (sized once, reused across β sweeps).
+pub struct GaussianWorkspace {
+    pub s: usize,
+    pub ny: usize,
+    /// dense B (row-major s×s) — consumed during elimination
+    pub b: Vec<f32>,
+    /// dense B⁻¹ (row-major s×s)
+    pub b_inv: Vec<f32>,
+    /// W̃_out (row-major ny×s)
+    pub w_out: Vec<f32>,
+}
+
+impl GaussianWorkspace {
+    pub fn new(s: usize, ny: usize) -> Self {
+        GaussianWorkspace {
+            s,
+            ny,
+            b: vec![0.0; s * s],
+            b_inv: vec![0.0; s * s],
+            w_out: vec![0.0; ny * s],
+        }
+    }
+
+    /// Memory words actually held (matches Table 2 naive up to the scalar
+    /// `buf` register).
+    pub fn memory_words(&self) -> usize {
+        self.b.len() + self.b_inv.len() + 2 * self.w_out.len() + 1
+    }
+}
+
+/// Algorithm 1 verbatim: given `A` (ny×s, row-major) and `B` (s×s dense,
+/// already including the `βI` shift) compute `W̃_out = A B⁻¹`.
+///
+/// `ws.b` is overwritten (becomes the identity up to round-off) and
+/// `ws.b_inv` receives B⁻¹; the result lands in `ws.w_out`.
+pub fn ridge_gaussian<O: Ops>(
+    a: &[f32],
+    b: &[f32],
+    ws: &mut GaussianWorkspace,
+    ops: &mut O,
+) {
+    let s = ws.s;
+    let ny = ws.ny;
+    assert_eq!(a.len(), ny * s);
+    assert_eq!(b.len(), s * s);
+    ws.b.copy_from_slice(b);
+
+    // lines 1-9: B^-1 <- I
+    ws.b_inv.fill(0.0);
+    for i in 0..s {
+        ws.b_inv[i * s + i] = 1.0;
+    }
+
+    // lines 10-25: Gauss-Jordan with explicit inverse
+    for i in 0..s {
+        let buf = 1.0 / ws.b[i * s + i];
+        ops.div(1);
+        for j in 0..s {
+            ws.b[i * s + j] *= buf;
+            ws.b_inv[i * s + j] *= buf;
+        }
+        ops.mul(2 * s as u64);
+        for j in 0..s {
+            if i != j {
+                let buf = ws.b[j * s + i];
+                // row_j -= row_i * buf (both matrices)
+                let (bi, bj) = row_pair(&mut ws.b, s, i, j);
+                for k in 0..s {
+                    bj[k] -= bi[k] * buf;
+                }
+                let (ii, ij) = row_pair(&mut ws.b_inv, s, i, j);
+                for k in 0..s {
+                    ij[k] -= ii[k] * buf;
+                }
+                ops.mul(2 * s as u64);
+                ops.add(2 * s as u64);
+            }
+        }
+    }
+
+    // lines 26-33: W_out = A * B^-1
+    for i in 0..ny {
+        for j in 0..s {
+            let mut acc = 0.0f32;
+            for k in 0..s {
+                acc += a[i * s + k] * ws.b_inv[k * s + j];
+            }
+            ws.w_out[i * s + j] = acc;
+        }
+    }
+    ops.mul((ny * s * s) as u64);
+    ops.add((ny * s * s) as u64);
+}
+
+/// Borrow two distinct rows of a row-major matrix mutably.
+fn row_pair(m: &mut [f32], s: usize, i: usize, j: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert_ne!(i, j);
+    if i < j {
+        let (lo, hi) = m.split_at_mut(j * s);
+        (&mut lo[i * s..i * s + s], &mut hi[..s])
+    } else {
+        let (lo, hi) = m.split_at_mut(i * s);
+        let a = &mut hi[..s];
+        (a, &mut lo[j * s..j * s + s])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::counters::{NoCount, OpCount};
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// Random SPD system B = G Gᵀ + βI with known right-hand side.
+    pub fn random_spd(s: usize, beta: f32, rng: &mut Pcg32) -> Vec<f32> {
+        let g: Vec<f32> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = 0.0;
+                for k in 0..s {
+                    acc += g[i * s + k] * g[j * s + k];
+                }
+                b[i * s + j] = acc / s as f32 + if i == j { beta } else { 0.0 };
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn inverts_identity() {
+        let s = 6;
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            b[i * s + i] = 2.0;
+        }
+        let a = vec![1.0f32; s]; // ny = 1
+        let mut ws = GaussianWorkspace::new(s, 1);
+        ridge_gaussian(&a, &b, &mut ws, &mut NoCount);
+        for j in 0..s {
+            assert!((ws.w_out[j] - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn solves_random_spd_system() {
+        let mut rng = Pcg32::seed(11);
+        for s in [3, 8, 17] {
+            let b = random_spd(s, 0.5, &mut rng);
+            let ny = 2;
+            let a: Vec<f32> = (0..ny * s).map(|_| rng.normal()).collect();
+            let mut ws = GaussianWorkspace::new(s, ny);
+            ridge_gaussian(&a, &b, &mut ws, &mut NoCount);
+            // check W B = A
+            for i in 0..ny {
+                for j in 0..s {
+                    let mut acc = 0.0f32;
+                    for k in 0..s {
+                        acc += ws.w_out[i * s + k] * b[k * s + j];
+                    }
+                    assert!(
+                        (acc - a[i * s + j]).abs() < 1e-3,
+                        "s={s} ({i},{j}): {acc} vs {}",
+                        a[i * s + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_counts_match_table3_naive() {
+        let s = 20u64;
+        let ny = 3u64;
+        let b = random_spd(s as usize, 1.0, &mut Pcg32::seed(3));
+        let a = vec![0.5f32; (ny * s) as usize];
+        let mut ws = GaussianWorkspace::new(s as usize, ny as usize);
+        let mut ops = OpCount::default();
+        ridge_gaussian(&a, &b, &mut ws, &mut ops);
+        let expect = super::super::counters::ops_naive(s, ny);
+        assert_eq!(ops.div, expect.div);
+        assert_eq!(ops.mul, expect.mul);
+        assert_eq!(ops.add, expect.add);
+    }
+
+    #[test]
+    fn memory_words_match_table2() {
+        let ws = GaussianWorkspace::new(931, 9);
+        assert_eq!(
+            ws.memory_words(),
+            super::super::counters::memory_words_naive(931, 9)
+        );
+    }
+}

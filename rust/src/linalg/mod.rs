@@ -1,0 +1,96 @@
+//! Ridge-regression linear algebra — the paper's memory contribution.
+//!
+//! The output layer of the DFR is trained by Ridge regression
+//! `W̃_out = A B⁻¹` with `A = E R̃ᵀ` and `B = R̃ R̃ᵀ + βI` (Eqs. 19–23).
+//! The paper proves `B` symmetric positive definite (Eqs. 37–39) and
+//! replaces the conventional Gaussian-elimination inversion
+//! ([`gaussian`], Algorithm 1) with an **in-place Cholesky decomposition
+//! over a packed 1-D array** ([`cholesky1d`], Algorithms 2–4), cutting
+//! memory ≈4× (Table 2/8) and multiplies/adds ≈12× (Table 3) at the cost
+//! of `s` square roots, and adds a small **write buffer** that breaks the
+//! read-modify-write recurrence for HLS pipelining ([`buffered`],
+//! Algorithm 5 / Fig. 10).
+//!
+//! All routines are f32 (the FPGA word) and are generic over an [`Ops`]
+//! counter so the same code path yields Table 3's operation counts.
+
+pub mod buffered;
+pub mod cholesky1d;
+pub mod counters;
+pub mod gaussian;
+pub mod ridge;
+
+pub use counters::{NoCount, OpCount, Ops};
+pub use ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution};
+
+/// Index into the packed lower-triangular 1-D array: element (i, j), i ≥ j,
+/// lives at `P[i(i+1)/2 + j]` (paper Eq. 41).
+#[inline(always)]
+pub fn tri(i: usize, j: usize) -> usize {
+    debug_assert!(j <= i);
+    i * (i + 1) / 2 + j
+}
+
+/// Number of words in the packed representation of an s×s symmetric matrix.
+#[inline]
+pub fn tri_len(s: usize) -> usize {
+    s * (s + 1) / 2
+}
+
+/// Pack a dense symmetric matrix (row-major s×s) into the 1-D lower
+/// triangle (Eq. 41).
+pub fn pack_lower(dense: &[f32], s: usize) -> Vec<f32> {
+    let mut p = vec![0.0f32; tri_len(s)];
+    for i in 0..s {
+        for j in 0..=i {
+            p[tri(i, j)] = dense[i * s + j];
+        }
+    }
+    p
+}
+
+/// Expand a packed lower triangle back to a dense symmetric matrix.
+pub fn unpack_symmetric(p: &[f32], s: usize) -> Vec<f32> {
+    let mut d = vec![0.0f32; s * s];
+    for i in 0..s {
+        for j in 0..=i {
+            d[i * s + j] = p[tri(i, j)];
+            d[j * s + i] = p[tri(i, j)];
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tri_indexing_row_major_sequential() {
+        // paper: "components of the lower triangle are stored sequentially
+        // in the row direction"
+        let mut expect = 0;
+        for i in 0..10 {
+            for j in 0..=i {
+                assert_eq!(tri(i, j), expect);
+                expect += 1;
+            }
+        }
+        assert_eq!(tri_len(10), expect);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = 5;
+        let mut dense = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let v = (1 + i.min(j) * s + i.max(j)) as f32;
+                dense[i * s + j] = v;
+            }
+        }
+        let p = pack_lower(&dense, s);
+        assert_eq!(p.len(), 15);
+        assert_eq!(unpack_symmetric(&p, s), dense);
+    }
+}

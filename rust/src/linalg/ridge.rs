@@ -1,0 +1,324 @@
+//! Online Ridge-regression driver: streaming accumulation of `A`/`B` and
+//! β-swept solving — what the coordinator's RidgeTrain phase runs.
+//!
+//! Accumulates `A = E R̃ᵀ` (ny×s) and the packed lower triangle of
+//! `B₀ = R̃ R̃ᵀ` **sample by sample** as rank-1 updates — the edge device
+//! never stores the design matrix `R̃` (which would be Train×s words).
+//! Solving copies `B₀`, shifts the diagonal by β, and runs either the
+//! proposed Cholesky pipeline or the Gaussian baseline.
+
+use super::buffered::ridge_cholesky_buffered;
+use super::cholesky1d::ridge_cholesky_1d;
+use super::counters::{NoCount, Ops};
+use super::gaussian::{ridge_gaussian, GaussianWorkspace};
+use super::{tri, tri_len, unpack_symmetric};
+
+/// Which solver backs the ridge solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RidgeMethod {
+    /// Algorithm 1 (Gauss–Jordan) — the paper's naive baseline.
+    Gaussian,
+    /// Algorithms 2–4 (in-place 1-D Cholesky) — the proposed method.
+    Cholesky1d,
+    /// Algorithms 2 + 5 (Cholesky with the write-buffered substitutions)
+    /// — what the FPGA executes.
+    CholeskyBuffered,
+}
+
+/// Streaming accumulator for the ridge system.
+pub struct RidgeAccumulator {
+    pub s: usize,
+    pub ny: usize,
+    /// packed lower triangle of B₀ = Σ r̃ r̃ᵀ (no β)
+    pub b_packed: Vec<f32>,
+    /// A = Σ e r̃ᵀ, row-major ny×s
+    pub a: Vec<f32>,
+    /// number of samples folded in
+    pub count: usize,
+}
+
+impl RidgeAccumulator {
+    pub fn new(s: usize, ny: usize) -> Self {
+        RidgeAccumulator {
+            s,
+            ny,
+            b_packed: vec![0.0; tri_len(s)],
+            a: vec![0.0; ny * s],
+            count: 0,
+        }
+    }
+
+    /// Fold one sample: `B₀ += r̃ r̃ᵀ` (lower triangle), `A[class] += r̃`
+    /// (Eq. 38; `e` one-hot makes A's update a single-row add).
+    pub fn accumulate(&mut self, r_tilde: &[f32], class: usize) {
+        assert_eq!(r_tilde.len(), self.s);
+        assert!(class < self.ny);
+        rank1_update_packed(&mut self.b_packed, r_tilde);
+        let row = &mut self.a[class * self.s..(class + 1) * self.s];
+        for (a, r) in row.iter_mut().zip(r_tilde) {
+            *a += r;
+        }
+        self.count += 1;
+    }
+
+    pub fn reset(&mut self) {
+        self.b_packed.fill(0.0);
+        self.a.fill(0.0);
+        self.count = 0;
+    }
+
+    /// Solve for `W̃_out` with the given β. Returns the solution and the
+    /// number of memory words the chosen method required.
+    pub fn solve(&self, beta: f32, method: RidgeMethod) -> RidgeSolution {
+        self.solve_counted(beta, method, &mut NoCount)
+    }
+
+    /// Solve with operation counting (Table 3 / Fig. 9 benches).
+    pub fn solve_counted<O: Ops>(
+        &self,
+        beta: f32,
+        method: RidgeMethod,
+        ops: &mut O,
+    ) -> RidgeSolution {
+        let s = self.s;
+        let ny = self.ny;
+        match method {
+            RidgeMethod::Gaussian => {
+                let mut b = unpack_symmetric(&self.b_packed, s);
+                for i in 0..s {
+                    b[i * s + i] += beta;
+                }
+                let mut ws = GaussianWorkspace::new(s, ny);
+                ridge_gaussian(&self.a, &b, &mut ws, ops);
+                RidgeSolution {
+                    w_tilde: ws.w_out,
+                    s,
+                    ny,
+                    beta,
+                    memory_words: super::counters::memory_words_naive(s, ny),
+                }
+            }
+            RidgeMethod::Cholesky1d | RidgeMethod::CholeskyBuffered => {
+                let mut p = self.b_packed.clone();
+                for i in 0..s {
+                    p[tri(i, i)] += beta;
+                }
+                let mut q = self.a.clone();
+                match method {
+                    RidgeMethod::Cholesky1d => ridge_cholesky_1d(&mut p, &mut q, s, ny, ops),
+                    _ => ridge_cholesky_buffered(&mut p, &mut q, s, ny, ops),
+                }
+                RidgeSolution {
+                    w_tilde: q,
+                    s,
+                    ny,
+                    beta,
+                    memory_words: super::counters::memory_words_proposed(s, ny),
+                }
+            }
+        }
+    }
+
+    /// Sweep β values (the paper's {1e-6, 1e-4, 1e-2, 1}), returning the
+    /// solution with the lowest loss under `loss_fn(w_tilde) -> f32`.
+    pub fn solve_best_beta(
+        &self,
+        betas: &[f32],
+        method: RidgeMethod,
+        mut loss_fn: impl FnMut(&RidgeSolution) -> f32,
+    ) -> (RidgeSolution, f32) {
+        assert!(!betas.is_empty());
+        let mut best: Option<(RidgeSolution, f32)> = None;
+        for &beta in betas {
+            let sol = self.solve(beta, method);
+            // non-finite loss means the f32 factorization degenerated at
+            // this β (rank-deficient B with β ≪ diag); treat as +inf so
+            // the sweep can never select it
+            let raw = loss_fn(&sol);
+            let loss = if raw.is_finite() { raw } else { f32::INFINITY };
+            if best.as_ref().map_or(true, |(_, l)| loss < *l) {
+                best = Some((sol, loss));
+            }
+        }
+        best.unwrap()
+    }
+}
+
+/// `P += r rᵀ` on the packed lower triangle — the ridge hot loop
+/// (s(s+1)/2 MACs per sample). Row-wise to stay cache-friendly.
+#[inline]
+pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
+    let mut idx = 0;
+    for i in 0..r.len() {
+        let ri = r[i];
+        let row = &mut p[idx..idx + i + 1];
+        let rj = &r[..i + 1];
+        // 4-wide axpy lanes (see dfr::dprr::push / §Perf)
+        let mut rc = row.chunks_exact_mut(4);
+        let mut xc = rj.chunks_exact(4);
+        for (p4, x4) in rc.by_ref().zip(xc.by_ref()) {
+            p4[0] += ri * x4[0];
+            p4[1] += ri * x4[1];
+            p4[2] += ri * x4[2];
+            p4[3] += ri * x4[3];
+        }
+        for (pe, &re) in rc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *pe += ri * re;
+        }
+        idx += i + 1;
+    }
+}
+
+/// The β-selection values used throughout the paper's evaluation (§4.1).
+pub const PAPER_BETAS: [f32; 4] = [1e-6, 1e-4, 1e-2, 1.0];
+
+/// A solved output layer.
+#[derive(Clone, Debug)]
+pub struct RidgeSolution {
+    /// W̃_out, row-major ny×s, acting on r̃ = [r, 1]
+    pub w_tilde: Vec<f32>,
+    pub s: usize,
+    pub ny: usize,
+    pub beta: f32,
+    /// memory words the method holds during the solve (Table 2)
+    pub memory_words: usize,
+}
+
+impl RidgeSolution {
+    /// y = W̃_out r̃ (Eq. 17), returning raw scores.
+    pub fn predict(&self, r_tilde: &[f32]) -> Vec<f32> {
+        assert_eq!(r_tilde.len(), self.s);
+        (0..self.ny)
+            .map(|i| {
+                let row = &self.w_tilde[i * self.s..(i + 1) * self.s];
+                row.iter().zip(r_tilde).map(|(w, r)| w * r).sum()
+            })
+            .collect()
+    }
+
+    pub fn predict_class(&self, r_tilde: &[f32]) -> usize {
+        let y = self.predict(r_tilde);
+        argmax(&y)
+    }
+}
+
+/// Index of the maximum element (ties → first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// Build an accumulator from synthetic linearly-separable features.
+    fn toy_system(s: usize, ny: usize, n: usize, rng: &mut Pcg32) -> (RidgeAccumulator, Vec<(Vec<f32>, usize)>) {
+        let mut acc = RidgeAccumulator::new(s, ny);
+        let mut data = Vec::new();
+        for i in 0..n {
+            let class = i % ny;
+            let mut r: Vec<f32> = (0..s).map(|_| 0.3 * rng.normal()).collect();
+            r[class] += 2.0; // separable signal
+            *r.last_mut().unwrap() = 1.0; // the tilde 1
+            acc.accumulate(&r, class);
+            data.push((r, class));
+        }
+        (acc, data)
+    }
+
+    #[test]
+    fn accumulate_builds_b_and_a() {
+        let mut acc = RidgeAccumulator::new(3, 2);
+        acc.accumulate(&[1.0, 2.0, 1.0], 0);
+        acc.accumulate(&[0.5, -1.0, 1.0], 1);
+        assert_eq!(acc.count, 2);
+        // B[1][0] = 1*2 + 0.5*-1 = 1.5
+        assert_eq!(acc.b_packed[tri(1, 0)], 1.5);
+        // A row 0 = first sample, row 1 = second
+        assert_eq!(&acc.a[0..3], &[1.0, 2.0, 1.0]);
+        assert_eq!(&acc.a[3..6], &[0.5, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn all_methods_classify_separable_data() {
+        let mut rng = Pcg32::seed(41);
+        let (acc, data) = toy_system(12, 3, 60, &mut rng);
+        for method in [
+            RidgeMethod::Gaussian,
+            RidgeMethod::Cholesky1d,
+            RidgeMethod::CholeskyBuffered,
+        ] {
+            let sol = acc.solve(1e-2, method);
+            let correct = data
+                .iter()
+                .filter(|(r, c)| sol.predict_class(r) == *c)
+                .count();
+            assert!(
+                correct as f64 / data.len() as f64 > 0.95,
+                "{method:?}: {correct}/{}",
+                data.len()
+            );
+        }
+    }
+
+    #[test]
+    fn methods_agree_numerically() {
+        let mut rng = Pcg32::seed(42);
+        let (acc, _) = toy_system(10, 2, 40, &mut rng);
+        let g = acc.solve(0.1, RidgeMethod::Gaussian);
+        let c = acc.solve(0.1, RidgeMethod::Cholesky1d);
+        let b = acc.solve(0.1, RidgeMethod::CholeskyBuffered);
+        for ((x, y), z) in g.w_tilde.iter().zip(&c.w_tilde).zip(&b.w_tilde) {
+            assert!((x - y).abs() < 5e-3 * y.abs().max(1.0), "{x} vs {y}");
+            assert!((y - z).abs() < 5e-3 * z.abs().max(1.0), "{y} vs {z}");
+        }
+    }
+
+    #[test]
+    fn beta_sweep_picks_lowest_loss() {
+        let mut rng = Pcg32::seed(43);
+        let (acc, data) = toy_system(8, 2, 30, &mut rng);
+        let (sol, _) = acc.solve_best_beta(&PAPER_BETAS, RidgeMethod::Cholesky1d, |sol| {
+            // 0-1 loss over the training data
+            data.iter()
+                .filter(|(r, c)| sol.predict_class(r) != *c)
+                .count() as f32
+        });
+        assert!(PAPER_BETAS.contains(&sol.beta));
+    }
+
+    #[test]
+    fn memory_words_reported() {
+        let acc = RidgeAccumulator::new(31, 2);
+        let g = acc.solve(0.1, RidgeMethod::Gaussian);
+        let c = acc.solve(0.1, RidgeMethod::Cholesky1d);
+        assert!(g.memory_words > 3 * c.memory_words);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn rank1_matches_dense() {
+        let mut rng = Pcg32::seed(44);
+        let s = 9;
+        let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+        let mut p = vec![0.0f32; tri_len(s)];
+        rank1_update_packed(&mut p, &r);
+        for i in 0..s {
+            for j in 0..=i {
+                assert_eq!(p[tri(i, j)], r[i] * r[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! dfr-edge CLI: the leader entry point for the online edge DFR system.
+//!
+//! Subcommands
+//!   train       — run the §4.1 protocol on a synthetic dataset (native engine)
+//!   serve       — online demo: stream a dataset through the coordinator
+//!   grid        — grid-search baseline (Table 5 comparison)
+//!   fpga        — print the co-design simulator reports (Tables 9-12)
+//!   gen-data    — export a synthetic dataset as npz
+//!   artifacts   — check the AOT artifact manifest / compile smoke test
+
+use std::process::ExitCode;
+
+use dfr_edge::coordinator::{NativeEngine, PjrtEngine, Request, Response, Server, ServerConfig, SessionConfig};
+use dfr_edge::data::{profiles::Profile, synth};
+use dfr_edge::dfr::grid;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::train::{train, TrainConfig};
+use dfr_edge::fpga::schedule::ShapeParams;
+use dfr_edge::log_info;
+use dfr_edge::report;
+use dfr_edge::runtime::{DfrExecutor, Manifest};
+use dfr_edge::util::args::Command;
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::timer::fmt_secs;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        eprintln!("{}", top_usage());
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match cmd {
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "grid" => cmd_grid(rest),
+        "fpga" => cmd_fpga(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "dfr-edge — online training and inference system for delayed feedback reservoirs\n\
+     \n\
+     commands:\n\
+       train      run the paper's training protocol on a synthetic dataset\n\
+       serve      stream a dataset through the online coordinator\n\
+       grid       grid-search baseline over (p, q, beta)\n\
+       fpga       FPGA co-design simulator reports (Tables 9-12)\n\
+       gen-data   export a synthetic dataset as npz\n\
+       artifacts  verify the AOT artifact manifest (PJRT smoke test)\n\
+     \n\
+     run `dfr-edge <command> --help` for options"
+        .to_string()
+}
+
+fn profile_arg(p: &dfr_edge::util::args::Parsed) -> Result<&'static Profile, String> {
+    let name = p.get("dataset");
+    Profile::by_name(name).ok_or_else(|| format!("unknown dataset '{name}' (see Table 4 names)"))
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("train", "run the §4.1 protocol (truncated-BP SGD + in-place Cholesky ridge)")
+        .opt("dataset", "jpvow", "Table 4 dataset profile")
+        .opt("seed", "42", "dataset + protocol seed")
+        .opt("epochs", "25", "SGD epochs")
+        .opt("nx", "30", "reservoir size");
+    let p = cmd.parse(argv)?;
+    let prof = profile_arg(&p)?;
+    let ds = synth::generate(prof, p.get_u64("seed")?);
+    let cfg = TrainConfig {
+        epochs: p.get_usize("epochs")?,
+        nx: p.get_usize("nx")?,
+        seed: p.get_u64("seed")?,
+        ..Default::default()
+    };
+    log_info!("training on {} (train={}, test={})", prof.name, ds.train.len(), ds.test.len());
+    let model = train(&ds, &cfg);
+    println!(
+        "p={:.4} q={:.4} beta={:.0e} | bp {} + ridge {} | test accuracy {:.3}",
+        model.reservoir.p,
+        model.reservoir.q,
+        model.solution.beta,
+        fmt_secs(model.bp_seconds),
+        fmt_secs(model.ridge_seconds),
+        model.test_accuracy(&ds)
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("serve", "online demo: collect -> train -> serve over the coordinator")
+        .opt("dataset", "jpvow", "Table 4 dataset profile")
+        .opt("seed", "42", "seed")
+        .opt("epochs", "25", "SGD epochs")
+        .opt("engine", "native", "compute engine: native | pjrt")
+        .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
+        .opt("collect", "0", "collect target (0 = whole training split)");
+    let p = cmd.parse(argv)?;
+    let prof = profile_arg(&p)?;
+    let ds = synth::generate(prof, p.get_u64("seed")?);
+    let collect = match p.get_usize("collect")? {
+        0 => ds.train.len(),
+        n => n,
+    };
+    let mut scfg = SessionConfig::new(prof.n_v, prof.n_c, collect);
+    scfg.train.epochs = p.get_usize("epochs")?;
+
+    let engine: Box<dyn dfr_edge::coordinator::Engine> = match p.get("engine") {
+        "native" => Box::new(NativeEngine::new(scfg.train.nx, prof.n_c)),
+        "pjrt" => {
+            let manifest = Manifest::load(p.get("artifacts")).map_err(|e| format!("{e:#}"))?;
+            let pa = manifest.profile(prof.name).map_err(|e| format!("{e:#}"))?;
+            let exec = DfrExecutor::new(pa).map_err(|e| format!("{e:#}"))?;
+            log_info!("PJRT platform: {}", exec.platform());
+            Box::new(PjrtEngine::new(exec))
+        }
+        other => return Err(format!("unknown engine '{other}'")),
+    };
+
+    let srv = Server::spawn(
+        engine,
+        ServerConfig {
+            session: scfg,
+            queue_cap: 256,
+            seed: p.get_u64("seed")?,
+        },
+    );
+    let sw = dfr_edge::util::timer::Stopwatch::start();
+    let mut trained = false;
+    for s in &ds.train {
+        match srv
+            .call(Request::Labelled { session: 1, sample: s.clone() })
+            .map_err(|e| e.to_string())?
+        {
+            Response::Trained { p, q, beta, train_seconds } => {
+                trained = true;
+                println!(
+                    "trained: p={p:.4} q={q:.4} beta={beta:.0e} in {}",
+                    fmt_secs(train_seconds)
+                );
+            }
+            Response::Rejected(m) => return Err(format!("rejected: {m}")),
+            _ => {}
+        }
+    }
+    if !trained {
+        match srv.call(Request::Finalize { session: 1 }).map_err(|e| e.to_string())? {
+            Response::Trained { p, q, beta, train_seconds } => println!(
+                "trained: p={p:.4} q={q:.4} beta={beta:.0e} in {}",
+                fmt_secs(train_seconds)
+            ),
+            other => return Err(format!("finalize failed: {other:?}")),
+        }
+    }
+    let mut correct = 0;
+    for s in &ds.test {
+        if let Response::Prediction { class, .. } = srv
+            .call(Request::Infer { session: 1, sample: s.clone() })
+            .map_err(|e| e.to_string())?
+        {
+            if class == s.label {
+                correct += 1;
+            }
+        }
+    }
+    println!(
+        "served {} inferences, accuracy {:.3}, wall {}",
+        ds.test.len(),
+        correct as f64 / ds.test.len() as f64,
+        fmt_secs(sw.elapsed_secs())
+    );
+    if let Response::StatsText(t) = srv.call(Request::Stats).map_err(|e| e.to_string())? {
+        print!("{t}");
+    }
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_grid(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("grid", "grid search over (p, q, beta) — the Table 5 baseline")
+        .opt("dataset", "jpvow", "Table 4 dataset profile")
+        .opt("seed", "42", "seed")
+        .opt("divs", "4", "grid divisions per axis")
+        .opt("threads", "8", "worker threads");
+    let p = cmd.parse(argv)?;
+    let prof = profile_arg(&p)?;
+    let ds = synth::generate(prof, p.get_u64("seed")?);
+    let cfg = TrainConfig::default();
+    let mask = Mask::random(cfg.nx, ds.n_v, &mut Pcg32::seed(p.get_u64("seed")?));
+    let r = grid::search(&ds, &mask, &cfg, p.get_usize("divs")?, p.get_usize("threads")?);
+    println!(
+        "grid {}x{} best: p={:.4} q={:.4} beta={:.0e} accuracy={:.3} in {}",
+        r.divs,
+        r.divs,
+        r.best.p,
+        r.best.q,
+        r.best.beta,
+        r.best.accuracy,
+        fmt_secs(r.seconds)
+    );
+    Ok(())
+}
+
+fn cmd_fpga(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("fpga", "co-design simulator reports (Tables 9-12)")
+        .opt("dataset", "jpvow", "Table 4 dataset profile")
+        .opt("epochs", "25", "training epochs in the workload");
+    let p = cmd.parse(argv)?;
+    let prof = profile_arg(&p)?;
+    let shape = ShapeParams::new(30, prof.n_v as u64, prof.n_c as u64, prof.t_max as u64);
+    let epochs = p.get_usize("epochs")? as u64;
+    println!("## Table 9 — SW vs HW ({} workload)\n", prof.name);
+    println!("{}", report::table9_markdown(shape, prof.train as u64, epochs, 4, prof.test as u64));
+    println!("## Table 11 — configurations\n");
+    println!("{}", report::table11_markdown(shape, prof.train as u64, epochs, 4, prof.test as u64));
+    println!("## Table 12 — existing FPGA DFR systems\n");
+    println!("{}", report::table12_markdown());
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("gen-data", "export a synthetic dataset as npz (train/test splits)")
+        .opt("dataset", "jpvow", "Table 4 dataset profile")
+        .opt("seed", "42", "seed")
+        .req("out", "output .npz path");
+    let p = cmd.parse(argv)?;
+    let prof = profile_arg(&p)?;
+    let ds = synth::generate(prof, p.get_u64("seed")?);
+    let mut arrays = std::collections::BTreeMap::new();
+    for (split, samples) in [("train", &ds.train), ("test", &ds.test)] {
+        let t_max = prof.t_max;
+        let mut x = Vec::with_capacity(samples.len() * t_max * prof.n_v);
+        let mut labels = Vec::with_capacity(samples.len());
+        let mut lengths = Vec::with_capacity(samples.len());
+        for s in samples.iter() {
+            x.extend_from_slice(&s.padded(prof.n_v, t_max));
+            labels.push(s.label as f32);
+            lengths.push(s.t as f32);
+        }
+        arrays.insert(
+            format!("{split}_x"),
+            (vec![samples.len(), t_max, prof.n_v], x),
+        );
+        arrays.insert(format!("{split}_y"), (vec![samples.len()], labels));
+        arrays.insert(format!("{split}_len"), (vec![samples.len()], lengths));
+    }
+    dfr_edge::data::npz::write_npz(p.get("out"), &arrays).map_err(|e| format!("{e:#}"))?;
+    println!("wrote {}", p.get("out"));
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("artifacts", "verify the AOT manifest and compile one profile on PJRT")
+        .opt("artifacts", "artifacts", "artifact dir")
+        .opt("dataset", "jpvow", "profile to smoke-test");
+    let p = cmd.parse(argv)?;
+    let manifest = Manifest::load(p.get("artifacts")).map_err(|e| format!("{e:#}"))?;
+    println!("profiles: {:?}", manifest.profiles.keys().collect::<Vec<_>>());
+    let pa = manifest.profile(p.get("dataset")).map_err(|e| format!("{e:#}"))?;
+    let exec = DfrExecutor::new(pa).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "compiled 5 entry points for '{}' on {} (V={}, C={}, T_pad={}, s={})",
+        pa.name,
+        exec.platform(),
+        pa.n_v,
+        pa.n_c,
+        pa.t_pad,
+        pa.s
+    );
+    Ok(())
+}

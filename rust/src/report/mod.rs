@@ -1,0 +1,120 @@
+//! Report generators: render measured results and the paper's reference
+//! tables as markdown/CSV into `results/`.
+
+use crate::fpga::design::{sw_report, DesignConfig, DesignReport, SystemModel};
+use crate::fpga::schedule::ShapeParams;
+use crate::util::bench::markdown_table;
+
+/// Table 12: qualitative comparison with existing FPGA DFR systems.
+pub fn table12_markdown() -> String {
+    let rows: Vec<Vec<String>> = crate::baselines::published::TABLE12
+        .iter()
+        .map(|(m, tr, imp, v, c)| {
+            vec![
+                m.to_string(),
+                tr.to_string(),
+                imp.to_string(),
+                v.to_string(),
+                c.to_string(),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &["method", "training/inference on HW", "implementation", "#V", "#C"],
+        &rows,
+    )
+}
+
+/// Render a Table 9-style HW/SW comparison for a workload.
+pub fn table9_markdown(
+    shape: ShapeParams,
+    n_train: u64,
+    epochs: u64,
+    n_betas: u64,
+    n_test: u64,
+) -> String {
+    let hw = SystemModel::new(shape, DesignConfig::Standard).report(n_train, epochs, n_betas, n_test);
+    let sw = sw_report(&shape, n_train, epochs, n_betas, n_test);
+    let rows = vec![
+        row3("LUT", "-", &format!("{} ({:.1}%)", hw.resources.lut, 100.0 * hw.resources.utilization(&hw.budget).lut)),
+        row3("LUTRAM", "-", &format!("{} ({:.1}%)", hw.resources.lutram, 100.0 * hw.resources.utilization(&hw.budget).lutram)),
+        row3("FF", "-", &format!("{} ({:.1}%)", hw.resources.ff, 100.0 * hw.resources.utilization(&hw.budget).ff)),
+        row3("BRAM", "-", &format!("{:.1} ({:.1}%)", hw.resources.bram36, 100.0 * hw.resources.utilization(&hw.budget).bram36)),
+        row3("DSP", "-", &format!("{} ({:.1}%)", hw.resources.dsp, 100.0 * hw.resources.utilization(&hw.budget).dsp)),
+        row3("Clock frequency", "667 MHz", "100 MHz"),
+        row3("Power", &format!("{:.3} W", sw.power_w), &format!("{:.3} W", hw.power_w)),
+        row3("Calculation time", &format!("{:.2} s", sw.calc_s()), &format!("{:.2} s", hw.calc_s())),
+        row3("Training time", &format!("{:.2} s", sw.train_s), &format!("{:.2} s", hw.train_s)),
+        row3("Inference time", &format!("{:.2} s", sw.infer_s), &format!("{:.2} s", hw.infer_s)),
+        row3("Energy", &format!("{:.2} J", sw.energy_j), &format!("{:.2} J", hw.energy_j)),
+        row3(
+            "ratio SW/HW (time)",
+            "-",
+            &format!("{:.1}x", sw.calc_s() / hw.calc_s()),
+        ),
+        row3(
+            "ratio SW/HW (energy)",
+            "-",
+            &format!("{:.1}x", sw.energy_j / hw.energy_j),
+        ),
+    ];
+    markdown_table(&["", "SW only", "HW only"], &rows)
+}
+
+/// Render the three Table 11 configuration rows.
+pub fn table11_markdown(
+    shape: ShapeParams,
+    n_train: u64,
+    epochs: u64,
+    n_betas: u64,
+    n_test: u64,
+) -> String {
+    let reps: Vec<DesignReport> = [
+        DesignConfig::NonPipelined,
+        DesignConfig::Standard,
+        DesignConfig::Inlined,
+    ]
+    .into_iter()
+    .map(|c| SystemModel::new(shape, c).report(n_train, epochs, n_betas, n_test))
+    .collect();
+    let rows: Vec<Vec<String>> = reps
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                format!("{} ({:.1}%)", r.resources.lut, 100.0 * r.resources.utilization(&r.budget).lut),
+                format!("{}", r.resources.ff),
+                format!("{:.1}", r.resources.bram36),
+                format!("{}", r.resources.dsp),
+                format!("{:.3} W", r.power_w),
+                format!("{:.2} s", r.calc_s()),
+                format!("{:.2} J", r.energy_j),
+            ]
+        })
+        .collect();
+    markdown_table(
+        &["config", "LUT", "FF", "BRAM", "DSP", "power", "calc time", "energy"],
+        &rows,
+    )
+}
+
+fn row3(a: &str, b: &str, c: &str) -> Vec<String> {
+    vec![a.to_string(), b.to_string(), c.to_string()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let t12 = table12_markdown();
+        assert!(t12.contains("prop."));
+        let shape = ShapeParams::new(30, 12, 9, 29);
+        let t9 = table9_markdown(shape, 270, 25, 4, 370);
+        assert!(t9.contains("ratio SW/HW"));
+        let t11 = table11_markdown(shape, 270, 25, 4, 370);
+        assert!(t11.contains("non-pipelined"));
+        assert_eq!(t11.lines().count(), 2 + 3);
+    }
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! Rust runtime: which HLO files exist, for which dataset profile, with
+//! which argument shapes and order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// (arg name, dims, dtype) in call order
+    pub args: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<String>,
+}
+
+/// All artifacts for one dataset profile.
+#[derive(Clone, Debug)]
+pub struct ProfileArtifacts {
+    pub name: String,
+    pub n_v: usize,
+    pub n_c: usize,
+    pub t_pad: usize,
+    pub nx: usize,
+    pub s: usize,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl ProfileArtifacts {
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact entry '{name}' missing for profile {}", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profiles: BTreeMap<String, ProfileArtifacts>,
+}
+
+impl Manifest {
+    /// Load from `artifacts/` (or any directory holding manifest.json).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("manifest.json parse")?;
+        let mut profiles = BTreeMap::new();
+        let profs = v
+            .get("profiles")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'profiles'"))?;
+        for (name, p) in profs {
+            let get = |k: &str| -> Result<usize> {
+                p.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("profile {name}: missing {k}"))
+            };
+            let mut entries = BTreeMap::new();
+            let ents = p
+                .get("entries")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("profile {name}: missing entries"))?;
+            for (ename, e) in ents {
+                let file = e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry {ename}: missing file"))?;
+                let args = e
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {ename}: missing args"))?
+                    .iter()
+                    .map(|a| {
+                        let an = a.get("name").and_then(Json::as_str).unwrap_or("?");
+                        let dims = a
+                            .get("dims")
+                            .and_then(Json::as_arr)
+                            .map(|d| d.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default();
+                        let dt = a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string();
+                        (an.to_string(), dims, dt)
+                    })
+                    .collect();
+                let outputs = e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                entries.insert(
+                    ename.clone(),
+                    ArtifactEntry {
+                        name: ename.clone(),
+                        file: dir.join(file),
+                        args,
+                        outputs,
+                    },
+                );
+            }
+            profiles.insert(
+                name.clone(),
+                ProfileArtifacts {
+                    name: name.clone(),
+                    n_v: get("n_v")?,
+                    n_c: get("n_c")?,
+                    t_pad: get("t_pad")?,
+                    nx: get("nx")?,
+                    s: get("s")?,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { dir, profiles })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&ProfileArtifacts> {
+        self.profiles
+            .get(name)
+            .ok_or_else(|| anyhow!("profile '{name}' not in manifest (have: {:?})",
+                self.profiles.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn parses_repo_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            return; // `make artifacts` not run — skip
+        };
+        let p = m.profile("jpvow").unwrap();
+        assert_eq!(p.n_v, 12);
+        assert_eq!(p.n_c, 9);
+        assert_eq!(p.s, 931);
+        for name in ["forward", "train_step", "infer", "features", "step"] {
+            let e = p.entry(name).unwrap();
+            assert!(e.file.exists(), "{:?}", e.file);
+            assert!(!e.args.is_empty());
+        }
+        // argument order of train_step is the aot.py contract
+        let ts = p.entry("train_step").unwrap();
+        let names: Vec<&str> = ts.args.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            ["u", "length", "e", "mask", "p", "q", "w", "b", "lr_res", "lr_out"]
+        );
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the HLO-text artifacts compiled by
+//! `python/compile/aot.py` and executes them from the request path.
+//!
+//! Python never runs here — the artifacts are self-contained HLO modules
+//! compiled once per dataset profile. The interchange format is HLO
+//! *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos; the
+//! text parser reassigns instruction ids — see /opt/xla-example).
+//!
+//! [`manifest`] parses `artifacts/manifest.json` (the shape contract),
+//! [`executor`] wraps `PjRtClient` with typed entry points for the five
+//! artifact kinds (forward / train_step / infer / features / step).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{DfrExecutor, TrainState};
+pub use manifest::{ArtifactEntry, Manifest, ProfileArtifacts};

@@ -1,0 +1,274 @@
+//! Declarative command-line parser (no clap in the image).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments; generates `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declarative command: name, help, options.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Command {
+            name,
+            help,
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    /// Parse `argv` (without the subcommand itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+
+        // defaults + required checks
+        for o in &self.opts {
+            if o.is_flag || values.contains_key(o.name) {
+                continue;
+            }
+            match o.default {
+                Some(d) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+                None => return Err(format!("missing required option --{}", o.name)),
+            }
+        }
+        if pos.len() < self.positional.len() {
+            return Err(format!(
+                "missing positional argument <{}>\n{}",
+                self.positional[pos.len()].0,
+                self.usage()
+            ));
+        }
+        Ok(Parsed { values, flags, pos })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: dfr-edge {} [options]", self.name);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(&format!("\n\n{}\n", self.help));
+        if !self.positional.is_empty() {
+            s.push_str("\npositional:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\noptions:\n");
+            for o in &self.opts {
+                let d = match (o.is_flag, o.default) {
+                    (true, _) => String::new(),
+                    (false, Some(d)) => format!(" (default: {d})"),
+                    (false, None) => " (required)".to_string(),
+                };
+                s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+            }
+        }
+        s
+    }
+}
+
+/// Result of parsing.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub pos: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(String::as_str)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected float, got '{}'", self.get(name)))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("dataset", "jpvow", "dataset profile")
+            .opt("epochs", "25", "SGD epochs")
+            .req("out", "output path")
+            .flag("verbose", "log more")
+            .pos("input", "input file")
+    }
+
+    #[test]
+    fn parses_defaults_and_values() {
+        let p = cmd()
+            .parse(&argv(&["--out", "w.bin", "data.npz", "--epochs=10"]))
+            .unwrap();
+        assert_eq!(p.get("dataset"), "jpvow");
+        assert_eq!(p.get_usize("epochs").unwrap(), 10);
+        assert_eq!(p.get("out"), "w.bin");
+        assert_eq!(p.pos, vec!["data.npz"]);
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_and_equals() {
+        let p = cmd()
+            .parse(&argv(&["--verbose", "--out=o", "x"]))
+            .unwrap();
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.get("out"), "o");
+    }
+
+    #[test]
+    fn missing_required() {
+        let e = cmd().parse(&argv(&["x"])).unwrap_err();
+        assert!(e.contains("--out"), "{e}");
+    }
+
+    #[test]
+    fn unknown_option() {
+        let e = cmd().parse(&argv(&["--nope", "1", "x"])).unwrap_err();
+        assert!(e.contains("unknown option"), "{e}");
+    }
+
+    #[test]
+    fn missing_positional() {
+        let e = cmd().parse(&argv(&["--out", "o"])).unwrap_err();
+        assert!(e.contains("positional"), "{e}");
+    }
+
+    #[test]
+    fn bad_number() {
+        let p = cmd()
+            .parse(&argv(&["--out", "o", "--epochs", "abc", "x"]))
+            .unwrap();
+        assert!(p.get_usize("epochs").is_err());
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let u = cmd().usage();
+        for needle in ["--dataset", "--epochs", "--out", "--verbose", "<input>"] {
+            assert!(u.contains(needle), "{needle} missing in\n{u}");
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Micro/macro benchmark harness (no criterion in the image).
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`). Provides
+//! warm-up, adaptive iteration counts, robust statistics (median + MAD),
+//! and CSV/markdown emission into `results/`.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Instant;
+
+pub use std::hint::black_box as bb;
+
+/// Statistics of one benchmark in seconds.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub mad: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median
+    }
+}
+
+/// Benchmark runner with adaptive iteration count.
+pub struct Bencher {
+    /// target wall time per benchmark (seconds)
+    pub target_time: f64,
+    /// max samples collected
+    pub max_samples: usize,
+    /// suppress the per-bench println (table-style benches)
+    pub quiet: bool,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            target_time: 0.6,
+            max_samples: 61,
+            quiet: false,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_target_time(secs: f64) -> Self {
+        Bencher {
+            target_time: secs,
+            ..Default::default()
+        }
+    }
+
+    /// Benchmark `f`, printing and recording the stats.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // estimate cost with a single call
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+
+        // choose per-sample iterations so one sample is ~target/samples
+        let samples = self.max_samples.min(((self.target_time / once) as usize).max(1));
+        let iters_per_sample =
+            ((self.target_time / samples as f64 / once).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            times.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: iters_per_sample * samples as u64,
+            mean,
+            median,
+            min: times[0],
+            max: *times.last().unwrap(),
+            mad,
+        };
+        if !self.quiet {
+            println!(
+                "bench {:<42} median {:>12} (±{:>10}, {} iters)",
+                stats.name,
+                super::timer::fmt_secs(stats.median),
+                super::timer::fmt_secs(stats.mad),
+                stats.iters
+            );
+        }
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Time a one-shot (non-repeatable) measurement, recording it alongside
+    /// the adaptive benches (used for long end-to-end runs).
+    pub fn once<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> (T, &Stats) {
+        let t = Instant::now();
+        let v = black_box(f());
+        let secs = t.elapsed().as_secs_f64();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: 1,
+            mean: secs,
+            median: secs,
+            min: secs,
+            max: secs,
+            mad: 0.0,
+        };
+        println!(
+            "bench {:<42} once   {:>12}",
+            stats.name,
+            super::timer::fmt_secs(secs)
+        );
+        self.results.push(stats);
+        (v, self.results.last().unwrap())
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Write collected stats to `results/<file>.csv`.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        let mut s = String::from("name,iters,median_s,mean_s,min_s,max_s,mad_s\n");
+        for r in &self.results {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{}",
+                r.name, r.iters, r.median, r.mean, r.min, r.max, r.mad
+            );
+        }
+        write_results_file(file, &s)
+    }
+}
+
+/// Write any text artifact into `results/` (creating the dir).
+pub fn write_results_file(file: &str, contents: &str) -> std::io::Result<()> {
+    let dir = Path::new("results");
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join(file), contents)
+}
+
+/// Render rows as a GitHub-flavoured markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| {} |", headers.join(" | "));
+    let _ = writeln!(
+        s,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        let _ = writeln!(s, "| {} |", row.join(" | "));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_stats() {
+        let mut b = Bencher::with_target_time(0.02);
+        let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bencher::new();
+        let (v, s) = b.once("x", || 7);
+        assert_eq!(v, 7);
+        assert_eq!(s.iters, 1);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert_eq!(t.lines().count(), 4);
+        assert!(t.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Leveled logger writing to stderr, controlled by `DFR_LOG`
+//! (error|warn|info|debug|trace; default info).
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level_from_env() -> u8 {
+    match std::env::var("DFR_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    }
+}
+
+/// Current log level (lazily initialized from the environment).
+pub fn level() -> Level {
+    let mut l = LEVEL.load(Ordering::Relaxed);
+    if l == 255 {
+        l = level_from_env();
+        LEVEL.store(l, Ordering::Relaxed);
+    }
+    match l {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Core log call — prefer the macros.
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if l <= level() {
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{} {}] {}", l.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+    }
+}

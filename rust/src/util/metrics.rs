@@ -1,0 +1,162 @@
+//! Lightweight metrics: counters and latency histograms for the
+//! coordinator (queue depths, batch sizes, per-stage latencies).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Default, Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-scale latency histogram (microsecond buckets, powers of two up to
+/// ~67 s). Lock-free recording.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 27],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_secs(&self, secs: f64) {
+        let us = (secs * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of bucket).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << i) as f64 / 1e6;
+            }
+        }
+        (1u64 << (self.buckets.len() - 1)) as f64 / 1e6
+    }
+}
+
+/// A named registry of counters and histograms.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as text lines (`name value`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} {}\n", c.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {k} count {} mean_s {:.6} p50_s {:.6} p99_s {:.6}\n",
+                h.count(),
+                h.mean_secs(),
+                h.quantile_secs(0.5),
+                h.quantile_secs(0.99),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_secs(0.5);
+        let p99 = h.quantile_secs(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean_secs() > 0.0);
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.counter("a").inc();
+        assert_eq!(r.counter("a").get(), 2);
+        assert!(r.render().contains("counter a 2"));
+    }
+}

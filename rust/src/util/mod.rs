@@ -1,0 +1,17 @@
+//! Substrate utilities built from scratch for the edge binary.
+//!
+//! The deployment image vendors no general-purpose crates (no `rand`,
+//! `clap`, `serde`, `tokio`, `criterion`, `proptest`), so the pieces the
+//! system needs are implemented here: a PCG PRNG, a declarative argument
+//! parser, a minimal JSON reader/writer, a thread-pool event loop, a
+//! timing/benchmark harness and a tiny property-testing driver.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod metrics;
+pub mod prng;
+pub mod proptest;
+pub mod runtimex;
+pub mod timer;

@@ -1,0 +1,113 @@
+//! Tiny property-testing driver (no proptest crate in the image).
+//!
+//! Runs a property over N generated cases with deterministic seeds and, on
+//! failure, performs a simple halving shrink on the seed's size parameter
+//! to report the smallest failing size. Used for the linalg, dfr and
+//! coordinator invariant suites.
+
+use super::prng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    /// maximum "size" hint passed to the generator (e.g. matrix dim)
+    pub max_size: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xDF12_ED6E_u64,
+            max_size: 24,
+        }
+    }
+}
+
+/// Run `prop(rng, size)`; the property returns `Err(msg)` on violation.
+///
+/// Panics with a reproduction line on failure.
+pub fn run_prop<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg32, u32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let size = 1 + (case % cfg.max_size);
+        let mut rng = Pcg32::new(cfg.seed.wrapping_add(u64::from(case)), u64::from(case));
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: try smaller sizes with the same seed
+            let mut min_fail = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 =
+                    Pcg32::new(cfg.seed.wrapping_add(u64::from(case)), u64::from(case));
+                match prop(&mut rng2, s) {
+                    Err(m) => {
+                        min_fail = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, size {}, seed {}): {}",
+                min_fail.0,
+                cfg.seed.wrapping_add(u64::from(case)),
+                min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run_prop("trivial", Config::default(), |_, _| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_repro() {
+        run_prop("fails", Config::default(), |_, size| {
+            if size >= 3 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+    }
+}

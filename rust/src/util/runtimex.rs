@@ -1,0 +1,217 @@
+//! Minimal thread-pool / event-loop runtime (no tokio in the image).
+//!
+//! The coordinator's event loop and executor pool are built on this:
+//! a fixed-size worker pool consuming a bounded MPMC queue (backpressure
+//! by blocking send), plus a `JoinSet`-style completion channel.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    q: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Fixed-size thread pool with a bounded queue.
+///
+/// `submit` blocks when the queue is full — that is the system's
+/// backpressure mechanism (the paper's edge device must bound memory).
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_capacity: usize) -> Self {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: queue_capacity.max(1),
+        });
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                thread::spawn(move || loop {
+                    let job = {
+                        let mut st = q.jobs.lock().unwrap();
+                        loop {
+                            if let Some(j) = st.q.pop_front() {
+                                q.not_full.notify_one();
+                                break j;
+                            }
+                            if st.closed {
+                                return;
+                            }
+                            st = q.not_empty.wait(st).unwrap();
+                        }
+                    };
+                    job();
+                })
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    /// Submit a job; blocks while the queue is at capacity (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.queue.jobs.lock().unwrap();
+        while st.q.len() >= self.queue.capacity {
+            st = self.queue.not_full.wait(st).unwrap();
+        }
+        assert!(!st.closed, "submit on closed pool");
+        st.q.push_back(Box::new(job));
+        drop(st);
+        self.queue.not_empty.notify_one();
+    }
+
+    /// Try to submit without blocking; returns false when saturated.
+    pub fn try_submit(&self, job: impl FnOnce() + Send + 'static) -> bool {
+        let mut st = self.queue.jobs.lock().unwrap();
+        if st.q.len() >= self.queue.capacity || st.closed {
+            return false;
+        }
+        st.q.push_back(Box::new(job));
+        drop(st);
+        self.queue.not_empty.notify_one();
+        true
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.jobs.lock().unwrap().q.len()
+    }
+
+    /// Close the queue and join all workers (drains pending jobs first).
+    pub fn shutdown(self) {
+        {
+            let mut st = self.queue.jobs.lock().unwrap();
+            st.closed = true;
+        }
+        self.queue.not_empty.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over items on `threads` workers, preserving input order of
+/// results. A tiny rayon-par_iter substitute for benches and grid search.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let work: Arc<Mutex<VecDeque<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().collect()));
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let work = Arc::clone(&work);
+        let tx = tx.clone();
+        let f = Arc::clone(&f);
+        handles.push(thread::spawn(move || loop {
+            let next = work.lock().unwrap().pop_front();
+            match next {
+                Some((i, item)) => {
+                    let r = f(item);
+                    if tx.send((i, r)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let n = Arc::clone(&n);
+            pool.submit(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(n.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn try_submit_backpressure() {
+        let pool = ThreadPool::new(1, 1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        // block the single worker
+        pool.submit(move || {
+            let (m, c) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = c.wait(open).unwrap();
+            }
+        });
+        // fill the queue; eventually try_submit must refuse
+        let mut refused = false;
+        for _ in 0..10 {
+            if !pool.try_submit(|| {}) {
+                refused = true;
+                break;
+            }
+        }
+        assert!(refused, "queue never saturated");
+        {
+            let (m, c) = &*gate;
+            *m.lock().unwrap() = true;
+            c.notify_all();
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..64).collect::<Vec<_>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,275 @@
+//! Property-based invariants of the coordinator (routing, batching/
+//! buffering, state machine) and the linalg core, via the in-house
+//! `util::proptest` driver.
+
+use dfr_edge::coordinator::engine::NativeEngine;
+use dfr_edge::coordinator::session::{FeedOutcome, Phase, Session, SessionConfig};
+use dfr_edge::coordinator::{Request, Response, Server, ServerConfig};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::linalg::ridge::{RidgeAccumulator, RidgeMethod};
+use dfr_edge::linalg::{tri, tri_len};
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::proptest::{run_prop, Config};
+
+fn sample(rng: &mut Pcg32, t: usize, v: usize, n_c: usize) -> Sample {
+    Sample {
+        u: (0..t * v).map(|_| rng.normal()).collect(),
+        t,
+        label: rng.below(n_c as u32) as usize,
+    }
+}
+
+fn mini_session(collect: usize, cap: usize) -> (NativeEngine, Session) {
+    let mut cfg = SessionConfig::new(2, 2, collect);
+    cfg.buffer_cap = cap;
+    cfg.train.nx = 6;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    (NativeEngine::new(6, 2), Session::new(1, cfg, 0x11))
+}
+
+#[test]
+fn prop_session_phase_machine_is_sound() {
+    // invariants under arbitrary labelled-feed sequences:
+    //  - phase only moves Collect -> Serve (never backwards without retrain)
+    //  - buffer never exceeds cap
+    //  - inference succeeds iff phase == Serve
+    run_prop(
+        "session FSM",
+        Config {
+            cases: 24,
+            max_size: 12,
+            ..Default::default()
+        },
+        |rng, size| {
+            let collect = 2 + (size as usize % 8);
+            let cap = collect + 3;
+            let (eng, mut sess) = mini_session(collect, cap);
+            for step in 0..(size as usize + collect) {
+                let s = sample(rng, 5 + (step % 4), 2, 2);
+                let before = sess.phase;
+                let out = sess
+                    .feed_labelled(&eng, s)
+                    .map_err(|e| format!("engine: {e:#}"))?;
+                if sess.buffered() > cap {
+                    return Err(format!("buffer {} exceeds cap {cap}", sess.buffered()));
+                }
+                match (before, sess.phase) {
+                    (Phase::Collect, Phase::Collect) | (Phase::Collect, Phase::Serve) => {}
+                    (Phase::Serve, Phase::Serve) => {}
+                    (a, b) => return Err(format!("illegal transition {a:?} -> {b:?}")),
+                }
+                if matches!(out, FeedOutcome::Trained { .. }) && sess.phase != Phase::Serve {
+                    return Err("Trained outcome but not serving".into());
+                }
+                let infer_ok = {
+                    let probe = sample(rng, 5, 2, 2);
+                    sess.infer(&eng, &probe)
+                        .map_err(|e| format!("{e:#}"))?
+                        .is_ok()
+                };
+                if infer_ok != (sess.phase == Phase::Serve) {
+                    return Err(format!(
+                        "infer availability {infer_ok} inconsistent with {:?}",
+                        sess.phase
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_server_routes_by_session_id() {
+    // requests for distinct sessions never interfere: training session A
+    // does not make session B servable
+    run_prop(
+        "server routing",
+        Config {
+            cases: 10,
+            max_size: 4,
+            ..Default::default()
+        },
+        |rng, size| {
+            let mut scfg = SessionConfig::new(2, 2, 4);
+            scfg.train.nx = 6;
+            scfg.train.epochs = 1;
+            scfg.train.res_decay_epochs = vec![];
+            scfg.train.out_decay_epochs = vec![];
+            let srv = Server::spawn(
+                Box::new(NativeEngine::new(6, 2)),
+                ServerConfig {
+                    session: scfg,
+                    queue_cap: 32,
+                    seed: 3,
+                },
+            );
+            let n_sessions = 1 + u64::from(size % 3);
+            // train session 0 fully; feed others only one sample
+            for i in 0..4 {
+                let s = sample(rng, 6, 2, 2);
+                let _ = srv
+                    .call(Request::Labelled { session: 0, sample: s })
+                    .map_err(|e| e.to_string())?;
+                let _ = i;
+            }
+            for sid in 1..=n_sessions {
+                let s = sample(rng, 6, 2, 2);
+                let _ = srv
+                    .call(Request::Labelled { session: sid, sample: s })
+                    .map_err(|e| e.to_string())?;
+            }
+            // session 0 serves
+            let probe = sample(rng, 6, 2, 2);
+            match srv
+                .call(Request::Infer { session: 0, sample: probe })
+                .map_err(|e| e.to_string())?
+            {
+                Response::Prediction { .. } => {}
+                other => return Err(format!("session 0 should serve: {other:?}")),
+            }
+            // the others must not
+            for sid in 1..=n_sessions {
+                let probe = sample(rng, 6, 2, 2);
+                match srv
+                    .call(Request::Infer { session: sid, sample: probe })
+                    .map_err(|e| e.to_string())?
+                {
+                    Response::Rejected(_) => {}
+                    other => return Err(format!("session {sid} leaked training: {other:?}")),
+                }
+            }
+            srv.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ridge_accumulator_order_invariant() {
+    // B and A accumulation is a sum — sample order must not matter
+    run_prop(
+        "ridge order invariance",
+        Config {
+            cases: 32,
+            max_size: 10,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 3 + size as usize;
+            let n = 8;
+            let ny = 2;
+            let samples: Vec<(Vec<f32>, usize)> = (0..n)
+                .map(|i| {
+                    (
+                        (0..s).map(|_| rng.normal()).collect(),
+                        i % ny,
+                    )
+                })
+                .collect();
+            let mut fwd = RidgeAccumulator::new(s, ny);
+            for (r, c) in &samples {
+                fwd.accumulate(r, *c);
+            }
+            let mut rev = RidgeAccumulator::new(s, ny);
+            for (r, c) in samples.iter().rev() {
+                rev.accumulate(r, *c);
+            }
+            for i in 0..tri_len(s) {
+                if (fwd.b_packed[i] - rev.b_packed[i]).abs() > 1e-3 {
+                    return Err(format!("B[{i}] differs"));
+                }
+            }
+            for i in 0..ny * s {
+                if (fwd.a[i] - rev.a[i]).abs() > 1e-3 {
+                    return Err(format!("A[{i}] differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_b_is_gram_matrix() {
+    // after accumulation, B equals the Gram matrix of the samples
+    run_prop(
+        "packed B = Σ r rᵀ",
+        Config {
+            cases: 24,
+            max_size: 8,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 2 + size as usize;
+            let n = 5;
+            let rs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..s).map(|_| rng.normal()).collect())
+                .collect();
+            let mut acc = RidgeAccumulator::new(s, 1);
+            for r in &rs {
+                acc.accumulate(r, 0);
+            }
+            for i in 0..s {
+                for j in 0..=i {
+                    let want: f32 = rs.iter().map(|r| r[i] * r[j]).sum();
+                    let got = acc.b_packed[tri(i, j)];
+                    if (got - want).abs() > 1e-3 * want.abs().max(1.0) {
+                        return Err(format!("B[{i}][{j}] {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solution_residual_small_for_all_methods() {
+    run_prop(
+        "ridge residual",
+        Config {
+            cases: 18,
+            max_size: 9,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 3 + size as usize;
+            let ny = 1 + rng.below(2) as usize;
+            let mut acc = RidgeAccumulator::new(s, ny);
+            for i in 0..(2 * s) {
+                let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+                acc.accumulate(&r, i % ny);
+            }
+            let beta = 0.5;
+            for m in [
+                RidgeMethod::Gaussian,
+                RidgeMethod::Cholesky1d,
+                RidgeMethod::CholeskyBuffered,
+            ] {
+                let sol = acc.solve(beta, m);
+                // check W (B + βI) == A row-wise
+                let b = dfr_edge::linalg::unpack_symmetric(&acc.b_packed, s);
+                for i in 0..ny {
+                    for j in 0..s {
+                        let mut acc_v = 0.0f32;
+                        for k in 0..s {
+                            let bkj =
+                                b[k * s + j] + if k == j { beta } else { 0.0 };
+                            acc_v += sol.w_tilde[i * s + k] * bkj;
+                        }
+                        let want = acc.a[i * s + j];
+                        if (acc_v - want).abs() > 2e-2 * want.abs().max(1.0) {
+                            return Err(format!(
+                                "{m:?} s={s} residual at ({i},{j}): {acc_v} vs {want}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

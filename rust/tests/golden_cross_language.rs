@@ -1,0 +1,120 @@
+//! Cross-language golden tests: the Rust `dfr` stack must reproduce the
+//! JAX reference numbers recorded by `python/tests/make_golden.py`
+//! (closed-form inputs, so both sides regenerate identical data).
+//!
+//! Skips with a notice when `make artifacts` hasn't produced
+//! `artifacts/golden/*.npz`.
+
+use std::path::Path;
+
+use dfr_edge::data::npz;
+use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
+
+fn golden(name: &str) -> Option<std::collections::BTreeMap<String, npz::Array>> {
+    let path = format!("artifacts/golden/{name}.npz");
+    if !Path::new(&path).exists() {
+        eprintln!("skipped: {path} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(npz::read_npz(path).expect("golden npz parses"))
+}
+
+/// Regenerate the closed-form inputs exactly as make_golden.py does.
+fn inputs(t: usize, v: usize) -> Vec<f32> {
+    // computed in f64 then cast, exactly as numpy does in make_golden.py
+    let mut u = Vec::with_capacity(t * v);
+    for k in 1..=t {
+        for vv in 1..=v {
+            let x = (0.1f64 * k as f64 * vv as f64).sin() + 0.05 * (0.3f64 * k as f64).cos();
+            u.push(x as f32);
+        }
+    }
+    u
+}
+
+fn run_case(name: &str) {
+    let Some(g) = golden(name) else { return };
+    let t = g["t"].scalar().unwrap() as usize;
+    let v = g["v"].scalar().unwrap() as usize;
+    let nx = g["nx"].scalar().unwrap() as usize;
+    let c = g["c"].scalar().unwrap() as usize;
+    let p = g["p"].scalar().unwrap();
+    let q = g["q"].scalar().unwrap();
+    let length = g["length"].scalar().unwrap() as usize;
+
+    // inputs must regenerate bit-identically
+    let u = inputs(t, v);
+    assert_eq!(u.len(), g["u"].data.len());
+    for (a, b) in u.iter().zip(&g["u"].data) {
+        assert!((a - b).abs() < 1e-6, "input mismatch {a} vs {b}");
+    }
+    let mask = Mask::golden(nx, v);
+    for (a, b) in mask.m.iter().zip(&g["mask"].data) {
+        assert_eq!(a, b, "mask mismatch");
+    }
+
+    // forward over the valid prefix
+    let res = Reservoir {
+        mask,
+        p,
+        q,
+        f: Nonlinearity::Linear { alpha: 1.0 },
+    };
+    let fwd = res.forward(&u[..length * v], length);
+    close(&fwd.r_mat, &g["r_mat"].data, 5e-4, "r_mat");
+    close(&fwd.x_t, &g["x_t"].data, 5e-5, "x_t");
+    close(&fwd.x_tm1, &g["x_tm1"].data, 5e-5, "x_tm1");
+    close(&fwd.j_t, &g["j_t"].data, 5e-5, "j_t");
+
+    // truncated gradients
+    let out = OutputLayer {
+        w: g["w"].data.clone(),
+        b: g["b"].data.clone(),
+        ny: c,
+        nr: nx * (nx + 1),
+    };
+    let label = g["e"]
+        .data
+        .iter()
+        .position(|&x| x == 1.0)
+        .expect("one-hot");
+    let grads = truncated_grads(&fwd, label, p, q, res.f, &out);
+    let loss = g["loss"].scalar().unwrap();
+    assert!(
+        (grads.loss - loss).abs() < 5e-4 * loss.abs().max(1.0),
+        "loss {} vs {}",
+        grads.loss,
+        loss
+    );
+    let dp = g["dp"].scalar().unwrap();
+    let dq = g["dq"].scalar().unwrap();
+    assert!((grads.dp - dp).abs() < 5e-4 * dp.abs().max(1e-3), "dp {} vs {dp}", grads.dp);
+    assert!((grads.dq - dq).abs() < 5e-4 * dq.abs().max(1e-3), "dq {} vs {dq}", grads.dq);
+    close(&grads.dw, &g["dw"].data, 1e-3, "dw");
+    close(&grads.db, &g["db"].data, 1e-4, "db");
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let t = tol * y.abs().max(1.0);
+        assert!((x - y).abs() <= t, "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn golden_small() {
+    run_case("small");
+}
+
+#[test]
+fn golden_padded_negative_q() {
+    run_case("padded");
+}
+
+#[test]
+fn golden_paper_scale_nx30() {
+    run_case("paper_nx30");
+}

@@ -1,0 +1,231 @@
+//! Integration tests over the PJRT runtime + coordinator: the artifact
+//! path (JAX/Pallas-lowered HLO executed by the Rust binary) must agree
+//! with the pure-Rust reference numerically, and the coordinator must
+//! train and serve through it end to end.
+//!
+//! Requires `make artifacts`; every test skips with a notice otherwise.
+//! PJRT's CPU client is process-global, so all tests share one executor
+//! behind a OnceLock.
+
+use dfr_edge::coordinator::{NativeEngine, PjrtEngine, Request, Response, Server, ServerConfig, SessionConfig};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::data::{profiles::Profile, synth};
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
+use dfr_edge::runtime::executor::TrainState;
+use dfr_edge::runtime::{DfrExecutor, Manifest};
+use dfr_edge::util::prng::Pcg32;
+
+// The xla crate's client is Rc-based (!Sync), so each test builds its own
+// executor (compilation of the five jpvow entry points is ~1 s).
+fn executor() -> Option<DfrExecutor> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let prof = manifest.profile("jpvow").ok()?;
+    match DfrExecutor::new(prof) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e:#}");
+            None
+        }
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match executor() {
+            Some(e) => e,
+            None => {
+                eprintln!("skipped: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn jpvow_sample(seed: u64, t: usize) -> Sample {
+    let mut rng = Pcg32::seed(seed);
+    Sample {
+        u: (0..t * 12).map(|_| rng.normal()).collect(),
+        t,
+        label: (seed % 9) as usize,
+    }
+}
+
+fn jpvow_mask(seed: u64) -> Mask {
+    Mask::random(30, 12, &mut Pcg32::seed(seed))
+}
+
+#[test]
+fn forward_matches_native_reference() {
+    let exec = require_artifacts!();
+    let mask = jpvow_mask(1);
+    for (seed, t) in [(1u64, 29usize), (2, 7), (3, 15)] {
+        let s = jpvow_sample(seed, t);
+        let (p, q) = (0.21f32, 0.13f32);
+        let out = exec.forward(&s, &mask, p, q).expect("pjrt forward");
+        let res = Reservoir {
+            mask: mask.clone(),
+            p,
+            q,
+            f: Nonlinearity::Linear { alpha: 1.0 },
+        };
+        let native = res.forward(&s.u, s.t);
+        assert_close(&out.r_mat, &native.r_mat, 2e-3, "r_mat t={t}");
+        assert_close(&out.x_t, &native.x_t, 1e-4, "x_t");
+        assert_close(&out.x_tm1, &native.x_tm1, 1e-4, "x_tm1");
+        assert_close(&out.j_t, &native.j_t, 1e-4, "j_t");
+    }
+}
+
+#[test]
+fn features_match_native_r_tilde() {
+    let exec = require_artifacts!();
+    let mask = jpvow_mask(2);
+    let s = jpvow_sample(5, 20);
+    let feats = exec.features(&s, &mask, 0.15, 0.1).unwrap();
+    let res = Reservoir {
+        mask: mask.clone(),
+        p: 0.15,
+        q: 0.1,
+        f: Nonlinearity::Linear { alpha: 1.0 },
+    };
+    let native = res.forward(&s.u, s.t).r_tilde();
+    assert_eq!(feats.len(), 931);
+    assert_close(&feats, &native, 2e-3, "features");
+    assert_eq!(*feats.last().unwrap(), 1.0);
+}
+
+#[test]
+fn train_step_matches_native_engine() {
+    use dfr_edge::coordinator::Engine;
+    let exec = require_artifacts!();
+    let mask = jpvow_mask(3);
+    let s = jpvow_sample(7, 25);
+
+    let mut st_p = TrainState::init(9, 30, 0.1, 0.1);
+    // seed W so reservoir grads are nonzero
+    let mut rng = Pcg32::seed(11);
+    for w in st_p.w.iter_mut() {
+        *w = 0.01 * rng.normal();
+    }
+    let mut st_n = st_p.clone();
+
+    let native = NativeEngine::new(30, 9);
+    let loss_p = exec
+        .train_step(&s, &mask, &mut st_p, 0.05, 0.05)
+        .expect("pjrt train_step");
+    let loss_n = native
+        .train_step(&s, &mask, &mut st_n, 0.05, 0.05)
+        .unwrap();
+
+    assert!((loss_p - loss_n).abs() < 2e-3 * loss_n.abs().max(1.0), "{loss_p} vs {loss_n}");
+    assert!((st_p.p - st_n.p).abs() < 1e-4, "{} vs {}", st_p.p, st_n.p);
+    assert!((st_p.q - st_n.q).abs() < 1e-4, "{} vs {}", st_p.q, st_n.q);
+    assert_close(&st_p.b, &st_n.b, 1e-4, "b");
+    // W is large; spot-check norm agreement
+    let norm = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let (np_, nn) = (norm(&st_p.w), norm(&st_n.w));
+    assert!((np_ - nn).abs() < 2e-3 * nn.max(1.0), "{np_} vs {nn}");
+}
+
+#[test]
+fn stream_step_chain_matches_forward() {
+    let exec = require_artifacts!();
+    let mask = jpvow_mask(4);
+    let s = jpvow_sample(9, 12);
+    let (p, q) = (0.2f32, 0.15f32);
+    let mut x = vec![0.0f32; 30];
+    for k in 0..s.t {
+        x = exec.step(&x, s.row(k, 12), &mask, p, q).unwrap();
+    }
+    let fwd = exec.forward(&s, &mask, p, q).unwrap();
+    assert_close(&x, &fwd.x_t, 1e-4, "streamed x_t");
+}
+
+#[test]
+fn infer_probabilities_sum_to_one() {
+    let exec = require_artifacts!();
+    let mask = jpvow_mask(5);
+    let s = jpvow_sample(11, 18);
+    let mut rng = Pcg32::seed(13);
+    let w_tilde: Vec<f32> = (0..9 * 931).map(|_| 0.01 * rng.normal()).collect();
+    let y = exec.infer(&s, &mask, 0.2, 0.1, &w_tilde).unwrap();
+    assert_eq!(y.len(), 9);
+    assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+}
+
+#[test]
+fn coordinator_end_to_end_over_pjrt() {
+    // build a fresh executor for the server (it takes ownership)
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let prof_art = manifest.profile("jpvow").unwrap();
+    let exec = match DfrExecutor::new(prof_art) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipped: {e:#}");
+            return;
+        }
+    };
+    let profile = Profile::by_name("jpvow").unwrap();
+    let ds = synth::generate(profile, 42);
+
+    // small online run: 60 collected samples, 3 epochs
+    let mut scfg = SessionConfig::new(12, 9, 60);
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    let srv = Server::spawn(
+        Box::new(PjrtEngine::new(exec)),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 128,
+            seed: 7,
+        },
+    );
+    let mut trained = false;
+    for s in ds.train.iter().take(60) {
+        if let Response::Trained { .. } = srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            trained = true;
+        }
+    }
+    assert!(trained, "session never trained");
+    let mut ok = 0;
+    let n = 40;
+    for s in ds.test.iter().take(n) {
+        if let Response::Prediction { class, .. } = srv
+            .call(Request::Infer {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            if class == s.label {
+                ok += 1;
+            }
+        }
+    }
+    // chance is 1/9 ≈ 4.4/40; require clear learning through the
+    // full PJRT path
+    assert!(ok > 20, "pjrt end-to-end accuracy {ok}/{n}");
+    srv.shutdown();
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let t = tol * y.abs().max(1.0);
+        assert!(
+            (x - y).abs() <= t,
+            "{what}[{i}]: {x} vs {y} (tol {t})"
+        );
+    }
+}
