@@ -61,6 +61,9 @@ fn main() {
             session: scfg,
             queue_cap: 256,
             seed: 42,
+            // one machine = one session = one shard; see
+            // benches/coordinator_throughput.rs for the multi-shard fleet
+            shards: 1,
         },
     );
 

@@ -1,0 +1,184 @@
+//! Coordinator scaling bench — req/s and latency percentiles of the
+//! sharded server at 1/2/4/8 shards (the ISSUE's "measured, not
+//! asserted" scaling claim).
+//!
+//! Multi-threaded clients fan blocking `call`s into the shard queues:
+//! 16 pre-trained sessions spread across shards, 8 client threads each
+//! issuing inference requests round-robin over the sessions. Per-request
+//! latency is recorded client-side into `util::metrics` histograms and
+//! merged; throughput is total requests over wall time. Results land in
+//! `results/coordinator_throughput.{csv,md}`.
+//!
+//! `DFR_BENCH_FULL=1` quadruples the request count (EXPERIMENTS-grade
+//! numbers); the default keeps the whole sweep under ~30 s.
+
+mod common;
+
+use std::thread;
+
+use dfr_edge::coordinator::{NativeEngine, Request, Response, Server, ServerConfig, SessionConfig};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::util::bench::{markdown_table, write_results_file};
+use dfr_edge::util::metrics::{Histogram, HistogramSnapshot};
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::timer::{fmt_secs, Stopwatch};
+
+// workload shape: heavy enough per request (T=120 reservoir steps, s=601
+// features) that compute, not channel traffic, dominates
+const N_V: usize = 8;
+const N_C: usize = 4;
+const NX: usize = 24;
+const T: usize = 120;
+const SESSIONS: usize = 16;
+const CLIENTS: usize = 8;
+const TRAIN_PER_SESSION: usize = 24;
+
+fn sample(rng: &mut Pcg32) -> Sample {
+    Sample {
+        u: (0..T * N_V).map(|_| rng.normal()).collect(),
+        t: T,
+        label: rng.below(N_C as u32) as usize,
+    }
+}
+
+struct RunResult {
+    shards_effective: usize,
+    req_s: f64,
+    p50_s: f64,
+    p99_s: f64,
+    stats_text: String,
+}
+
+fn run_config(shards: usize, reqs_per_client: usize) -> RunResult {
+    let mut scfg = SessionConfig::new(N_V, N_C, TRAIN_PER_SESSION);
+    scfg.train.nx = NX;
+    scfg.train.epochs = 2;
+    scfg.train.res_decay_epochs = vec![1];
+    scfg.train.out_decay_epochs = vec![1];
+    // single β: warm-up trains 16 sessions per config — skip the sweep,
+    // the bench measures serving, not β selection
+    scfg.train.betas = vec![1e-2];
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(NX, N_C)),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 4096,
+            seed: 7,
+            shards,
+        },
+    );
+
+    // warm-up: train every session (the last collected sample triggers
+    // the full §4.1 pipeline)
+    let mut rng = Pcg32::seed(42);
+    let train_samples: Vec<Sample> = (0..TRAIN_PER_SESSION).map(|_| sample(&mut rng)).collect();
+    for sid in 0..SESSIONS as u64 {
+        let mut trained = false;
+        for s in &train_samples {
+            if let Response::Trained { .. } = srv
+                .call(Request::Labelled {
+                    session: sid,
+                    sample: s.clone(),
+                })
+                .expect("server alive")
+            {
+                trained = true;
+            }
+        }
+        assert!(trained, "session {sid} never trained");
+    }
+
+    // measurement: CLIENTS threads × reqs_per_client blocking inferences
+    let sw = Stopwatch::start();
+    let latencies = thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for c in 0..CLIENTS {
+            let srv = &srv;
+            workers.push(scope.spawn(move || {
+                let mut rng = Pcg32::seed(0xC11E57 + c as u64);
+                let probes: Vec<Sample> = (0..32).map(|_| sample(&mut rng)).collect();
+                let hist = Histogram::default();
+                for i in 0..reqs_per_client {
+                    let sid = ((c + i * CLIENTS) % SESSIONS) as u64;
+                    let req_sw = Stopwatch::start();
+                    let resp = srv
+                        .call(Request::Infer {
+                            session: sid,
+                            sample: probes[i % probes.len()].clone(),
+                        })
+                        .expect("server alive");
+                    hist.record_secs(req_sw.elapsed_secs());
+                    assert!(matches!(resp, Response::Prediction { .. }), "{resp:?}");
+                }
+                hist.snapshot()
+            }));
+        }
+        let mut merged = HistogramSnapshot::default();
+        for w in workers {
+            merged.merge(&w.join().expect("client thread"));
+        }
+        merged
+    });
+    let wall = sw.elapsed_secs();
+
+    let stats_text = match srv.call(Request::Stats).expect("stats") {
+        Response::StatsText(t) => t,
+        other => panic!("{other:?}"),
+    };
+    let shards_effective = srv.shards();
+    srv.shutdown();
+
+    RunResult {
+        shards_effective,
+        req_s: (CLIENTS * reqs_per_client) as f64 / wall,
+        p50_s: latencies.quantile_secs(0.5),
+        p99_s: latencies.quantile_secs(0.99),
+        stats_text,
+    }
+}
+
+fn main() {
+    let reqs_per_client = if common::full_mode() { 6000 } else { 1500 };
+    println!(
+        "coordinator throughput: {CLIENTS} clients × {reqs_per_client} req, \
+         {SESSIONS} sessions, {} cores",
+        common::threads()
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut base_req_s = None;
+    let mut last_stats = String::new();
+    for shards in [1usize, 2, 4, 8] {
+        let r = run_config(shards, reqs_per_client);
+        let base = *base_req_s.get_or_insert(r.req_s);
+        println!(
+            "shards {shards} (effective {}): {:>9.0} req/s  p50 {:>10}  p99 {:>10}  ({:.2}x vs 1 shard)",
+            r.shards_effective,
+            r.req_s,
+            fmt_secs(r.p50_s),
+            fmt_secs(r.p99_s),
+            r.req_s / base
+        );
+        rows.push(vec![
+            shards.to_string(),
+            r.shards_effective.to_string(),
+            format!("{:.0}", r.req_s),
+            format!("{:.6e}", r.p50_s),
+            format!("{:.6e}", r.p99_s),
+            format!("{:.2}", r.req_s / base),
+        ]);
+        last_stats = r.stats_text;
+    }
+
+    common::write_csv(
+        "coordinator_throughput.csv",
+        "shards,shards_effective,req_s,p50_s,p99_s,speedup",
+        &rows,
+    );
+    let md = markdown_table(
+        &["shards", "effective", "req/s", "p50 (s)", "p99 (s)", "speedup"],
+        &rows,
+    );
+    write_results_file("coordinator_throughput.md", &md).expect("write results");
+    println!("\nper-shard metrics of the 8-shard run (Request::Stats):\n{last_stats}");
+}

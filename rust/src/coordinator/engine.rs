@@ -34,6 +34,14 @@ pub trait Engine: Send {
 
     /// Human-readable backend name (metrics/logs).
     fn name(&self) -> &'static str;
+
+    /// Create an independent replica of this engine for another shard
+    /// thread (see `coordinator::server`). Engines whose backend cannot
+    /// be replicated return `None`, and the server degrades to fewer
+    /// shards. The default is `None` — sharing is opt-in.
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -134,6 +142,15 @@ impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        // stateless apart from its dimensions — replicas are free
+        Some(Box::new(NativeEngine {
+            nx: self.nx,
+            n_c: self.n_c,
+            f: self.f,
+        }))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -155,12 +172,13 @@ impl PjrtEngine {
 
 // SAFETY: the xla crate wraps the PJRT client in `Rc` (not thread-safe
 // reference counting), so `DfrExecutor` is !Send by construction. The
-// coordinator moves the engine into the event-loop thread exactly once
+// coordinator moves each engine replica into exactly one shard thread
 // and never aliases it across threads afterwards (Engine methods take
-// &self but the server holds the sole owner); the underlying PJRT CPU
-// client itself is a single-process C API object that tolerates use from
-// the one thread that owns it. Moving ownership between threads is
-// therefore sound.
+// &self but each shard holds the sole owner of its replica; `fork`
+// compiles a fresh client rather than sharing this one); the underlying
+// PJRT CPU client itself is a single-process C API object that tolerates
+// use from the one thread that owns it. Moving ownership between threads
+// is therefore sound.
 unsafe impl Send for PjrtEngine {}
 
 impl Engine for PjrtEngine {
@@ -192,6 +210,16 @@ impl Engine for PjrtEngine {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        // The Rc-based PJRT client cannot be shared across threads, but a
+        // replica can be compiled from the same artifacts — each shard
+        // then owns a whole client. Compilation failure (or a stub
+        // build) just means fewer shards.
+        DfrExecutor::new(&self.exec.profile)
+            .ok()
+            .map(|exec| Box::new(PjrtEngine::new(exec)) as Box<dyn Engine>)
     }
 }
 

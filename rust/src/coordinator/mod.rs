@@ -9,11 +9,15 @@
 //! RidgeTrain ──(β sweep + in-place Cholesky)──► Serve ──(drift)──► …
 //! ```
 //!
-//! The [`server::Server`] owns the event loop: requests enter through a
-//! bounded queue (backpressure), a router dispatches them to per-session
-//! state, and compute runs on an [`engine::Engine`] — either the PJRT
-//! executor over the AOT artifacts (production path; Python never runs)
-//! or the pure-Rust reference (tests, grid search, FPGA-sim workloads).
+//! The [`server::Server`] owns a pool of shard worker threads: requests
+//! are routed to shard `session_id % shards` at submit time, enter that
+//! shard's bounded queue (backpressure), and run against the shard's
+//! exclusively-owned session map — no cross-shard locking. Compute runs
+//! on a per-shard [`engine::Engine`] replica — either the PJRT executor
+//! over the AOT artifacts (production path; Python never runs) or the
+//! pure-Rust reference (tests, grid search, FPGA-sim workloads). See
+//! DESIGN.md §Sharded coordinator for the routing, backpressure, and
+//! shutdown protocol.
 
 pub mod engine;
 pub mod protocol;

@@ -1,4 +1,10 @@
 //! Request/response protocol of the online edge service.
+//!
+//! Requests that carry a session id ([`Request::session_id`]) are routed
+//! to shard `id % shards` by the server. `Stats` is answered inline by
+//! the server handle from the shared metrics registry (which aggregates
+//! every shard's labelled instruments) without entering any queue;
+//! `Shutdown` markers are delivered per shard by `Server::shutdown`.
 
 use crate::data::dataset::Sample;
 
@@ -13,7 +19,11 @@ pub enum Request {
     Finalize { session: u64 },
     /// Metrics snapshot.
     Stats,
-    /// Graceful shutdown.
+    /// Drain marker used by `Server::shutdown`: the receiving shard
+    /// answers everything queued ahead of it, acks with `Bye`, and keeps
+    /// serving until the server drops its queue. Sending this through
+    /// `call` only drains/acks one shard — use `Server::shutdown` to
+    /// actually stop the server.
     Shutdown,
 }
 

@@ -1,14 +1,43 @@
-//! The event loop: bounded request queue, per-session router, worker
-//! execution, metrics — Rust owns the process (no tokio; see
-//! `util::runtimex`).
+//! The sharded event loop: an N-shard worker pool, per-shard bounded
+//! request queues, per-session routing, metrics — Rust owns the process
+//! (no tokio; see `util::runtimex`).
 //!
-//! Sessions are sharded by id across the router's map; requests carry a
-//! reply channel. Backpressure is two-level: the global bounded queue
-//! (`try_submit` refuses when saturated) and each session's buffer cap.
+//! # Sharding
+//!
+//! [`Server::spawn`] starts `ServerConfig::shards` worker threads. Each
+//! shard thread *exclusively owns* its `BTreeMap<u64, Session>` — there
+//! is no cross-shard locking anywhere on the request path. A request for
+//! session `id` is routed to shard `id % shards` at submit time, so all
+//! requests for one session are serialized on one thread (the paper's
+//! per-deployment protocol is inherently sequential) while distinct
+//! sessions scale across cores.
+//!
+//! Each shard gets its own engine via [`Engine::fork`]; engines that
+//! cannot be replicated (e.g. a single-owner PJRT client without
+//! recompilable artifacts) degrade gracefully to fewer shards — the
+//! effective count is exported as the `shards_active` metric.
+//!
+//! # Backpressure
+//!
+//! Two-level, as in the paper's bounded-memory edge design:
+//! 1. every shard has a bounded request queue (`queue_cap` split evenly
+//!    across shards); [`Server::try_call`] refuses (`None`) when the
+//!    target shard's queue is saturated, and [`Server::call`] blocks;
+//! 2. each session's collect buffer is capped
+//!    (`SessionConfig::buffer_cap`) — overflowing samples are `Rejected`.
+//!
+//! # Shutdown
+//!
+//! [`Server::shutdown`] drains every shard in order: it enqueues a
+//! `Shutdown` marker behind the shard's pending requests and waits for
+//! the `Bye` ack, which the shard only sends after answering everything
+//! ahead of the marker. Shards then keep serving stragglers until the
+//! server drops their queue senders, so no accepted request ever loses
+//! its reply.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::Result;
@@ -18,51 +47,140 @@ use super::protocol::{Request, Response};
 use super::session::{FeedOutcome, Session, SessionConfig};
 use crate::util::metrics::Registry;
 
+/// A queued request with its reply channel.
+type Envelope = (Request, mpsc::Sender<Response>);
+
 /// Server configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
     /// template for newly-created sessions
     pub session: SessionConfig,
-    /// request queue capacity (global backpressure)
+    /// total request-queue capacity, split evenly across shards
+    /// (global backpressure)
     pub queue_cap: usize,
     pub seed: u64,
+    /// worker shards; sessions are routed by `session_id % shards`.
+    /// Clamped to ≥ 1, and reduced when the engine cannot [`Engine::fork`]
+    /// enough replicas.
+    pub shards: usize,
 }
 
-/// Handle to a running server (owns the event-loop thread).
+impl ServerConfig {
+    /// Config with the defaults used by the CLI: queue of 256, one shard
+    /// per available core.
+    pub fn new(session: SessionConfig) -> Self {
+        ServerConfig {
+            session,
+            queue_cap: 256,
+            seed: 0,
+            shards: default_shards(),
+        }
+    }
+}
+
+/// One shard per available core (the bench's sweet spot for the
+/// compute-bound native engine).
+pub fn default_shards() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Handle to a running server (owns the shard worker threads).
 pub struct Server {
-    tx: mpsc::SyncSender<(Request, mpsc::Sender<Response>)>,
-    handle: Option<thread::JoinHandle<()>>,
+    txs: Vec<mpsc::SyncSender<Envelope>>,
+    handles: Vec<thread::JoinHandle<()>>,
     pub metrics: Arc<Registry>,
 }
 
 impl Server {
-    /// Spawn the event loop over an engine.
+    /// Spawn the shard pool over an engine.
+    ///
+    /// The engine is forked once per extra shard; if the engine cannot be
+    /// replicated the server runs with however many replicas it got
+    /// (at least one — the engine passed in).
+    ///
+    /// Forks run serially on the spawning thread. For `NativeEngine`
+    /// that is free; for `PjrtEngine` every fork recompiles the five HLO
+    /// entry points (~1 s each), so with the one-shard-per-core default
+    /// startup cost scales with core count — size `shards` deliberately
+    /// for PJRT deployments.
     pub fn spawn(engine: Box<dyn Engine>, cfg: ServerConfig) -> Server {
-        let (tx, rx) = mpsc::sync_channel::<(Request, mpsc::Sender<Response>)>(cfg.queue_cap);
+        let want = cfg.shards.max(1);
+        let mut engines: Vec<Box<dyn Engine>> = vec![engine];
+        while engines.len() < want {
+            match engines[0].fork() {
+                Some(e) => engines.push(e),
+                None => break,
+            }
+        }
+        let shards = engines.len();
         let metrics = Arc::new(Registry::default());
-        let m = Arc::clone(&metrics);
-        let handle = thread::spawn(move || event_loop(engine, cfg, rx, m));
+        metrics.counter("shards_active").add(shards as u64);
+        let per_shard_cap = (cfg.queue_cap.max(1) + shards - 1) / shards;
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for (i, eng) in engines.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<Envelope>(per_shard_cap);
+            let m = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            let h = thread::Builder::new()
+                .name(format!("dfr-shard-{i}"))
+                .spawn(move || shard_loop(i, eng, cfg, rx, m))
+                .expect("spawn shard thread");
+            txs.push(tx);
+            handles.push(h);
+        }
         Server {
-            tx,
-            handle: Some(handle),
+            txs,
+            handles,
             metrics,
         }
     }
 
-    /// Send a request and wait for the response.
+    /// Number of live shards (may be fewer than requested if the engine
+    /// could not be forked).
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// The shard a request will be routed to.
+    fn route(&self, req: &Request) -> usize {
+        match req.session_id() {
+            Some(id) => (id % self.txs.len() as u64) as usize,
+            // remaining session-less requests (Shutdown via `call`) go to
+            // shard 0; Stats never reaches here (answered inline).
+            None => 0,
+        }
+    }
+
+    /// Send a request and wait for the response (blocks under
+    /// backpressure).
+    ///
+    /// `Stats` is answered directly from the shared registry without
+    /// entering any shard queue — monitoring stays instant even when
+    /// every shard is saturated with slow trainings.
     pub fn call(&self, req: Request) -> Result<Response> {
+        if matches!(req, Request::Stats) {
+            return Ok(Response::StatsText(self.metrics.render()));
+        }
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        let shard = self.route(&req);
+        self.txs[shard]
             .send((req, rtx))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rrx.recv()?)
     }
 
-    /// Non-blocking send; `Err` means the queue is saturated
-    /// (backpressure) — the caller should retry or shed load.
+    /// Non-blocking send; `Ok(None)` means the target shard's queue is
+    /// saturated (backpressure) — the caller should retry or shed load.
+    /// `Stats` never sheds: the receiver already holds the snapshot.
     pub fn try_call(&self, req: Request) -> Result<Option<mpsc::Receiver<Response>>> {
         let (rtx, rrx) = mpsc::channel();
-        match self.tx.try_send((req, rtx)) {
+        if matches!(req, Request::Stats) {
+            let _ = rtx.send(Response::StatsText(self.metrics.render()));
+            return Ok(Some(rrx));
+        }
+        let shard = self.route(&req);
+        match self.txs[shard].try_send((req, rtx)) {
             Ok(()) => Ok(Some(rrx)),
             Err(mpsc::TrySendError::Full(_)) => Ok(None),
             Err(mpsc::TrySendError::Disconnected(_)) => {
@@ -71,10 +189,29 @@ impl Server {
         }
     }
 
-    /// Graceful shutdown (drains the queue).
+    /// Graceful shutdown: drain every shard queue in order, then join the
+    /// worker threads. All requests accepted before this call are
+    /// answered first.
     pub fn shutdown(mut self) {
-        let _ = self.call(Request::Shutdown);
-        if let Some(h) = self.handle.take() {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        for tx in &self.txs {
+            let (rtx, rrx) = mpsc::channel();
+            if tx.send((Request::Shutdown, rtx)).is_ok() {
+                // Bye arrives only after everything queued ahead of the
+                // marker has been answered.
+                let _ = rrx.recv();
+            }
+        }
+        // Dropping the senders disconnects the queues; shards drain any
+        // requests that raced in behind the markers, then exit.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -82,36 +219,44 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if let Some(h) = self.handle.take() {
-            let (rtx, _rrx) = mpsc::channel();
-            let _ = self.tx.send((Request::Shutdown, rtx));
-            let _ = h.join();
-        }
+        self.stop();
     }
 }
 
-fn event_loop(
+/// One shard: exclusively owns its session map and engine replica, and
+/// registers `shard`-labelled instruments in the shared registry.
+fn shard_loop(
+    shard: usize,
     engine: Box<dyn Engine>,
     cfg: ServerConfig,
-    rx: mpsc::Receiver<(Request, mpsc::Sender<Response>)>,
+    rx: mpsc::Receiver<Envelope>,
     metrics: Arc<Registry>,
 ) {
-    let sessions: Mutex<BTreeMap<u64, Session>> = Mutex::new(BTreeMap::new());
-    let req_counter = metrics.counter("requests_total");
-    let infer_hist = metrics.histogram("infer_latency");
-    let train_hist = metrics.histogram("train_latency");
+    let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+    let shard_label = shard.to_string();
+    let labels: [(&str, &str); 1] = [("shard", shard_label.as_str())];
+    let req_counter = metrics.counter_labelled("requests_total", &labels);
+    let infer_hist = metrics.histogram_labelled("infer_latency", &labels);
+    let train_hist = metrics.histogram_labelled("train_latency", &labels);
+    let trainings = metrics.counter_labelled("trainings_total", &labels);
+    let inferences = metrics.counter_labelled("inferences_total", &labels);
+    let rejected = metrics.counter_labelled("rejected_total", &labels);
 
     while let Ok((req, reply)) = rx.recv() {
         req_counter.inc();
         let resp = match req {
             Request::Shutdown => {
+                // Ack the drain marker, then keep serving: anything still
+                // queued (or racing in) is answered until the server
+                // drops our sender and `recv` disconnects.
                 let _ = reply.send(Response::Bye);
-                break;
+                continue;
             }
+            // unreachable through `call`/`try_call` (answered inline by
+            // the server handle); kept so a queued Stats still works
             Request::Stats => Response::StatsText(metrics.render()),
             Request::Labelled { session, sample } => {
-                let mut map = sessions.lock().unwrap();
-                let sess = map.entry(session).or_insert_with(|| {
+                let sess = sessions.entry(session).or_insert_with(|| {
                     Session::new(session, cfg.session.clone(), cfg.seed)
                 });
                 let sw = crate::util::timer::Stopwatch::start();
@@ -127,7 +272,7 @@ fn event_loop(
                         train_seconds,
                     }) => {
                         train_hist.record_secs(sw.elapsed_secs());
-                        metrics.counter("trainings_total").inc();
+                        trainings.inc();
                         Response::Trained {
                             p,
                             q,
@@ -136,52 +281,46 @@ fn event_loop(
                         }
                     }
                     Ok(FeedOutcome::Rejected(msg)) => {
-                        metrics.counter("rejected_total").inc();
+                        rejected.inc();
                         Response::Rejected(msg)
                     }
                     Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                 }
             }
-            Request::Infer { session, sample } => {
-                let map = sessions.lock().unwrap();
-                match map.get(&session) {
-                    None => Response::Rejected(format!("unknown session {session}")),
-                    Some(sess) => {
-                        let sw = crate::util::timer::Stopwatch::start();
-                        match sess.infer(engine.as_ref(), &sample) {
-                            Ok(Ok((class, scores))) => {
-                                infer_hist.record_secs(sw.elapsed_secs());
-                                metrics.counter("inferences_total").inc();
-                                Response::Prediction { class, scores }
-                            }
-                            Ok(Err(msg)) => Response::Rejected(msg),
-                            Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+            Request::Infer { session, sample } => match sessions.get(&session) {
+                None => Response::Rejected(format!("unknown session {session}")),
+                Some(sess) => {
+                    let sw = crate::util::timer::Stopwatch::start();
+                    match sess.infer(engine.as_ref(), &sample) {
+                        Ok(Ok((class, scores))) => {
+                            infer_hist.record_secs(sw.elapsed_secs());
+                            inferences.inc();
+                            Response::Prediction { class, scores }
                         }
+                        Ok(Err(msg)) => Response::Rejected(msg),
+                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                     }
                 }
-            }
-            Request::Finalize { session } => {
-                let mut map = sessions.lock().unwrap();
-                match map.get_mut(&session) {
-                    None => Response::Rejected(format!("unknown session {session}")),
-                    Some(sess) => match sess.finalize(engine.as_ref()) {
-                        Ok(FeedOutcome::Trained {
-                            p,
-                            q,
-                            beta,
-                            train_seconds,
-                        }) => Response::Trained {
-                            p,
-                            q,
-                            beta,
-                            train_seconds,
-                        },
-                        Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
-                        Ok(FeedOutcome::Buffered(_)) => unreachable!(),
-                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+            },
+            Request::Finalize { session } => match sessions.get_mut(&session) {
+                None => Response::Rejected(format!("unknown session {session}")),
+                Some(sess) => match sess.finalize(engine.as_ref()) {
+                    Ok(FeedOutcome::Trained {
+                        p,
+                        q,
+                        beta,
+                        train_seconds,
+                    }) => Response::Trained {
+                        p,
+                        q,
+                        beta,
+                        train_seconds,
                     },
-                }
-            }
+                    Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
+                    Ok(FeedOutcome::Buffered(_)) => unreachable!(),
+                    Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                },
+            },
         };
         let _ = reply.send(resp);
     }
@@ -194,7 +333,7 @@ mod tests {
     use crate::data::profiles::Profile;
     use crate::data::synth;
 
-    fn server() -> (Server, crate::data::dataset::Dataset) {
+    fn server_with_shards(shards: usize) -> (Server, crate::data::dataset::Dataset) {
         let prof = Profile {
             name: "mini",
             n_v: 2,
@@ -222,8 +361,13 @@ mod tests {
             session: scfg,
             queue_cap: 64,
             seed: 0xFEED,
+            shards,
         };
         (Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg), ds)
+    }
+
+    fn server() -> (Server, crate::data::dataset::Dataset) {
+        server_with_shards(2)
     }
 
     #[test]
@@ -263,6 +407,8 @@ mod tests {
             Response::StatsText(t) => {
                 assert!(t.contains("inferences_total 10"), "{t}");
                 assert!(t.contains("trainings_total 1"), "{t}");
+                // session 1 lives on shard 1 % 2
+                assert!(t.contains("inferences_total{shard=\"1\"} 10"), "{t}");
             }
             other => panic!("{other:?}"),
         }
@@ -317,6 +463,43 @@ mod tests {
             })
             .unwrap();
         assert!(matches!(r, Response::Prediction { .. }));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shard_count_clamps_to_at_least_one() {
+        let (srv, ds) = server_with_shards(0);
+        assert_eq!(srv.shards(), 1);
+        let r = srv
+            .call(Request::Labelled {
+                session: 7,
+                sample: ds.train[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Accepted { .. }), "{r:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn same_session_same_shard_across_requests() {
+        // a session fed on a 4-shard server trains and serves exactly as
+        // on a single shard — routing is stable
+        let (srv, ds) = server_with_shards(4);
+        assert_eq!(srv.shards(), 4);
+        for s in &ds.train {
+            srv.call(Request::Labelled {
+                session: 6,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+        let r = srv
+            .call(Request::Infer {
+                session: 6,
+                sample: ds.test[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
         srv.shutdown();
     }
 }

@@ -14,6 +14,10 @@
 //!   with the in-place 1-D Cholesky per β, selecting by held-out loss.
 //! * **Serve** answers inference requests; labelled samples arriving in
 //!   Serve are buffered for periodic re-training (drift adaptation).
+//!
+//! A `Session` is single-threaded by design: the server routes all
+//! requests for one session id to the same shard thread, which owns the
+//! session exclusively — no locking appears anywhere in this module.
 
 use anyhow::Result;
 

@@ -5,8 +5,10 @@
 //! System on Edge FPGA Using Delayed Feedback Reservoir"*, IEEE TCAD 2025.
 //!
 //! Layer map (see DESIGN.md):
-//! - [`coordinator`] — the online edge system: session FSM, router, batcher.
-//! - [`runtime`] — PJRT client for AOT artifacts produced by `python/compile`.
+//! - [`coordinator`] — the online edge system: session FSM, sharded
+//!   worker pool, per-session routing, metrics.
+//! - [`runtime`] — PJRT client for AOT artifacts produced by
+//!   `python/compile` (cargo feature `pjrt`; stubbed otherwise).
 //! - [`linalg`] — the paper's in-place 1-D Cholesky ridge regression
 //!   (Algorithms 1–5) with op/memory counters (Tables 2–3).
 //! - [`dfr`] — pure-Rust DFR stack: masking, modular reservoir, DPRR,

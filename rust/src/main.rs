@@ -10,7 +10,9 @@
 
 use std::process::ExitCode;
 
-use dfr_edge::coordinator::{NativeEngine, PjrtEngine, Request, Response, Server, ServerConfig, SessionConfig};
+use dfr_edge::coordinator::{
+    NativeEngine, PjrtEngine, Request, Response, Server, ServerConfig, SessionConfig,
+};
 use dfr_edge::data::{profiles::Profile, synth};
 use dfr_edge::dfr::grid;
 use dfr_edge::dfr::mask::Mask;
@@ -108,7 +110,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("epochs", "25", "SGD epochs")
         .opt("engine", "native", "compute engine: native | pjrt")
         .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
-        .opt("collect", "0", "collect target (0 = whole training split)");
+        .opt("collect", "0", "collect target (0 = whole training split)")
+        .opt("shards", "0", "coordinator worker shards (0 = one per core)");
     let p = cmd.parse(argv)?;
     let prof = profile_arg(&p)?;
     let ds = synth::generate(prof, p.get_u64("seed")?);
@@ -131,14 +134,14 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         other => return Err(format!("unknown engine '{other}'")),
     };
 
-    let srv = Server::spawn(
-        engine,
-        ServerConfig {
-            session: scfg,
-            queue_cap: 256,
-            seed: p.get_u64("seed")?,
-        },
-    );
+    let mut server_cfg = ServerConfig::new(scfg);
+    server_cfg.seed = p.get_u64("seed")?;
+    match p.get_usize("shards")? {
+        0 => {} // keep the one-shard-per-core default
+        n => server_cfg.shards = n,
+    }
+    let srv = Server::spawn(engine, server_cfg);
+    log_info!("coordinator: {} shard(s)", srv.shards());
     let sw = dfr_edge::util::timer::Stopwatch::start();
     let mut trained = false;
     for s in &ds.train {

@@ -5,12 +5,12 @@
 //! the five entry points with concrete Rust signatures. One compiled
 //! executable per entry point, compiled lazily and cached; buffers are
 //! rebuilt per call (PJRT owns device memory).
-
-use anyhow::{anyhow, Context, Result};
-
-use super::manifest::{ArtifactEntry, ProfileArtifacts};
-use crate::data::dataset::Sample;
-use crate::dfr::mask::Mask;
+//!
+//! The `xla` bindings are vendored into the deployment image, not pulled
+//! from a registry, so the real executor is gated behind the `pjrt`
+//! cargo feature. Without it, [`DfrExecutor::new`] returns an error and
+//! every caller falls back to the pure-Rust
+//! [`NativeEngine`](crate::coordinator::NativeEngine) path.
 
 /// Mutable training state mirrored across PJRT calls (the artifact is
 /// pure; the coordinator owns the state).
@@ -45,197 +45,284 @@ pub struct ForwardOut {
     pub j_t: Vec<f32>,
 }
 
-/// Compiled executables for one dataset profile.
-pub struct DfrExecutor {
-    pub profile: ProfileArtifacts,
-    client: xla::PjRtClient,
-    forward: xla::PjRtLoadedExecutable,
-    train_step: xla::PjRtLoadedExecutable,
-    infer: xla::PjRtLoadedExecutable,
-    features: xla::PjRtLoadedExecutable,
-    step: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{anyhow, Context, Result};
 
-impl DfrExecutor {
-    /// Compile all five entry points for a profile on the CPU client.
-    pub fn new(profile: &ProfileArtifacts) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let compile = |entry: &ArtifactEntry| -> Result<xla::PjRtLoadedExecutable> {
-            let path = entry
-                .file
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {:?}", entry.file))?;
-            let proto = xla::HloModuleProto::from_text_file(path)
+    use super::{ForwardOut, TrainState};
+    use crate::data::dataset::Sample;
+    use crate::dfr::mask::Mask;
+    use crate::runtime::manifest::{ArtifactEntry, ProfileArtifacts};
+
+    /// Compiled executables for one dataset profile.
+    pub struct DfrExecutor {
+        pub profile: ProfileArtifacts,
+        client: xla::PjRtClient,
+        forward: xla::PjRtLoadedExecutable,
+        train_step: xla::PjRtLoadedExecutable,
+        infer: xla::PjRtLoadedExecutable,
+        features: xla::PjRtLoadedExecutable,
+        step: xla::PjRtLoadedExecutable,
+    }
+
+    impl DfrExecutor {
+        /// Compile all five entry points for a profile on the CPU client.
+        pub fn new(profile: &ProfileArtifacts) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+            let compile = |entry: &ArtifactEntry| -> Result<xla::PjRtLoadedExecutable> {
+                let path = entry
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", entry.file))?;
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .map_err(to_anyhow)
+                    .with_context(|| format!("parsing {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(to_anyhow)
+                    .with_context(|| format!("compiling {path}"))
+            };
+            Ok(DfrExecutor {
+                forward: compile(profile.entry("forward")?)?,
+                train_step: compile(profile.entry("train_step")?)?,
+                infer: compile(profile.entry("infer")?)?,
+                features: compile(profile.entry("features")?)?,
+                step: compile(profile.entry("step")?)?,
+                client,
+                profile: profile.clone(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn mat(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+            debug_assert_eq!(data.len(), rows * cols);
+            xla::Literal::vec1(data)
+                .reshape(&[rows as i64, cols as i64])
                 .map_err(to_anyhow)
-                .with_context(|| format!("parsing {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .map_err(to_anyhow)
-                .with_context(|| format!("compiling {path}"))
-        };
-        Ok(DfrExecutor {
-            forward: compile(profile.entry("forward")?)?,
-            train_step: compile(profile.entry("train_step")?)?,
-            infer: compile(profile.entry("infer")?)?,
-            features: compile(profile.entry("features")?)?,
-            step: compile(profile.entry("step")?)?,
-            client,
-            profile: profile.clone(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn mat(&self, data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        debug_assert_eq!(data.len(), rows * cols);
-        xla::Literal::vec1(data)
-            .reshape(&[rows as i64, cols as i64])
-            .map_err(to_anyhow)
-    }
-
-    /// Pad a sample into the profile's [T_pad, V] window.
-    fn padded_u(&self, s: &Sample) -> Result<xla::Literal> {
-        let p = &self.profile;
-        if s.t > p.t_pad {
-            return Err(anyhow!(
-                "sample length {} exceeds artifact T_pad {}",
-                s.t,
-                p.t_pad
-            ));
         }
-        self.mat(&s.padded(p.n_v, p.t_pad), p.t_pad, p.n_v)
-    }
 
-    fn run(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let result = exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
-        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        lit.to_tuple().map_err(to_anyhow)
-    }
-
-    /// Forward pass: (R, x_T, x_Tm1, j_T).
-    pub fn forward(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<ForwardOut> {
-        let prof = &self.profile;
-        let args = [
-            self.padded_u(s)?,
-            xla::Literal::scalar(s.t as i32),
-            self.mat(&mask.m, prof.nx, prof.n_v)?,
-            xla::Literal::scalar(p),
-            xla::Literal::scalar(q),
-        ];
-        let out = self.run(&self.forward, &args)?;
-        if out.len() != 4 {
-            return Err(anyhow!("forward returned {} outputs", out.len()));
+        /// Pad a sample into the profile's [T_pad, V] window.
+        fn padded_u(&self, s: &Sample) -> Result<xla::Literal> {
+            let p = &self.profile;
+            if s.t > p.t_pad {
+                return Err(anyhow!(
+                    "sample length {} exceeds artifact T_pad {}",
+                    s.t,
+                    p.t_pad
+                ));
+            }
+            self.mat(&s.padded(p.n_v, p.t_pad), p.t_pad, p.n_v)
         }
-        Ok(ForwardOut {
-            r_mat: out[0].to_vec::<f32>().map_err(to_anyhow)?,
-            x_t: out[1].to_vec::<f32>().map_err(to_anyhow)?,
-            x_tm1: out[2].to_vec::<f32>().map_err(to_anyhow)?,
-            j_t: out[3].to_vec::<f32>().map_err(to_anyhow)?,
-        })
-    }
 
-    /// One truncated-BP SGD step; updates `state` in place and returns
-    /// the loss.
-    pub fn train_step(
-        &self,
-        s: &Sample,
-        mask: &Mask,
-        state: &mut TrainState,
-        lr_res: f32,
-        lr_out: f32,
-    ) -> Result<f32> {
-        let prof = &self.profile;
-        let mut e = vec![0.0f32; prof.n_c];
-        e[s.label] = 1.0;
-        let args = [
-            self.padded_u(s)?,
-            xla::Literal::scalar(s.t as i32),
-            xla::Literal::vec1(&e),
-            self.mat(&mask.m, prof.nx, prof.n_v)?,
-            xla::Literal::scalar(state.p),
-            xla::Literal::scalar(state.q),
-            self.mat(&state.w, prof.n_c, prof.s - 1)?,
-            xla::Literal::vec1(&state.b),
-            xla::Literal::scalar(lr_res),
-            xla::Literal::scalar(lr_out),
-        ];
-        let out = self.run(&self.train_step, &args)?;
-        if out.len() != 5 {
-            return Err(anyhow!("train_step returned {} outputs", out.len()));
+        fn run(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::Literal],
+        ) -> Result<Vec<xla::Literal>> {
+            let result = exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
+            let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+            lit.to_tuple().map_err(to_anyhow)
         }
-        state.p = out[0].get_first_element::<f32>().map_err(to_anyhow)?;
-        state.q = out[1].get_first_element::<f32>().map_err(to_anyhow)?;
-        state.w = out[2].to_vec::<f32>().map_err(to_anyhow)?;
-        state.b = out[3].to_vec::<f32>().map_err(to_anyhow)?;
-        out[4].get_first_element::<f32>().map_err(to_anyhow)
+
+        /// Forward pass: (R, x_T, x_Tm1, j_T).
+        pub fn forward(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<ForwardOut> {
+            let prof = &self.profile;
+            let args = [
+                self.padded_u(s)?,
+                xla::Literal::scalar(s.t as i32),
+                self.mat(&mask.m, prof.nx, prof.n_v)?,
+                xla::Literal::scalar(p),
+                xla::Literal::scalar(q),
+            ];
+            let out = self.run(&self.forward, &args)?;
+            if out.len() != 4 {
+                return Err(anyhow!("forward returned {} outputs", out.len()));
+            }
+            Ok(ForwardOut {
+                r_mat: out[0].to_vec::<f32>().map_err(to_anyhow)?,
+                x_t: out[1].to_vec::<f32>().map_err(to_anyhow)?,
+                x_tm1: out[2].to_vec::<f32>().map_err(to_anyhow)?,
+                j_t: out[3].to_vec::<f32>().map_err(to_anyhow)?,
+            })
+        }
+
+        /// One truncated-BP SGD step; updates `state` in place and returns
+        /// the loss.
+        pub fn train_step(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            state: &mut TrainState,
+            lr_res: f32,
+            lr_out: f32,
+        ) -> Result<f32> {
+            let prof = &self.profile;
+            let mut e = vec![0.0f32; prof.n_c];
+            e[s.label] = 1.0;
+            let args = [
+                self.padded_u(s)?,
+                xla::Literal::scalar(s.t as i32),
+                xla::Literal::vec1(&e),
+                self.mat(&mask.m, prof.nx, prof.n_v)?,
+                xla::Literal::scalar(state.p),
+                xla::Literal::scalar(state.q),
+                self.mat(&state.w, prof.n_c, prof.s - 1)?,
+                xla::Literal::vec1(&state.b),
+                xla::Literal::scalar(lr_res),
+                xla::Literal::scalar(lr_out),
+            ];
+            let out = self.run(&self.train_step, &args)?;
+            if out.len() != 5 {
+                return Err(anyhow!("train_step returned {} outputs", out.len()));
+            }
+            state.p = out[0].get_first_element::<f32>().map_err(to_anyhow)?;
+            state.q = out[1].get_first_element::<f32>().map_err(to_anyhow)?;
+            state.w = out[2].to_vec::<f32>().map_err(to_anyhow)?;
+            state.b = out[3].to_vec::<f32>().map_err(to_anyhow)?;
+            out[4].get_first_element::<f32>().map_err(to_anyhow)
+        }
+
+        /// Inference with the ridge output layer: class probabilities.
+        pub fn infer(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            p: f32,
+            q: f32,
+            w_tilde: &[f32],
+        ) -> Result<Vec<f32>> {
+            let prof = &self.profile;
+            let args = [
+                self.padded_u(s)?,
+                xla::Literal::scalar(s.t as i32),
+                self.mat(&mask.m, prof.nx, prof.n_v)?,
+                xla::Literal::scalar(p),
+                xla::Literal::scalar(q),
+                self.mat(w_tilde, prof.n_c, prof.s)?,
+            ];
+            let out = self.run(&self.infer, &args)?;
+            out[0].to_vec::<f32>().map_err(to_anyhow)
+        }
+
+        /// Ridge feature vector r̃ = [r, 1] for one sample.
+        pub fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+            let args = [
+                self.padded_u(s)?,
+                xla::Literal::scalar(s.t as i32),
+                self.mat(&mask.m, self.profile.nx, self.profile.n_v)?,
+                xla::Literal::scalar(p),
+                xla::Literal::scalar(q),
+            ];
+            let out = self.run(&self.features, &args)?;
+            out[0].to_vec::<f32>().map_err(to_anyhow)
+        }
+
+        /// Streaming single-step state update.
+        pub fn step(
+            &self,
+            x_prev: &[f32],
+            u_t: &[f32],
+            mask: &Mask,
+            p: f32,
+            q: f32,
+        ) -> Result<Vec<f32>> {
+            let args = [
+                xla::Literal::vec1(x_prev),
+                xla::Literal::vec1(u_t),
+                self.mat(&mask.m, self.profile.nx, self.profile.n_v)?,
+                xla::Literal::scalar(p),
+                xla::Literal::scalar(q),
+            ];
+            let out = self.run(&self.step, &args)?;
+            out[0].to_vec::<f32>().map_err(to_anyhow)
+        }
     }
 
-    /// Inference with the ridge output layer: class probabilities.
-    pub fn infer(
-        &self,
-        s: &Sample,
-        mask: &Mask,
-        p: f32,
-        q: f32,
-        w_tilde: &[f32],
-    ) -> Result<Vec<f32>> {
-        let prof = &self.profile;
-        let args = [
-            self.padded_u(s)?,
-            xla::Literal::scalar(s.t as i32),
-            self.mat(&mask.m, prof.nx, prof.n_v)?,
-            xla::Literal::scalar(p),
-            xla::Literal::scalar(q),
-            self.mat(w_tilde, prof.n_c, prof.s)?,
-        ];
-        let out = self.run(&self.infer, &args)?;
-        out[0].to_vec::<f32>().map_err(to_anyhow)
-    }
-
-    /// Ridge feature vector r̃ = [r, 1] for one sample.
-    pub fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
-        let args = [
-            self.padded_u(s)?,
-            xla::Literal::scalar(s.t as i32),
-            self.mat(&mask.m, self.profile.nx, self.profile.n_v)?,
-            xla::Literal::scalar(p),
-            xla::Literal::scalar(q),
-        ];
-        let out = self.run(&self.features, &args)?;
-        out[0].to_vec::<f32>().map_err(to_anyhow)
-    }
-
-    /// Streaming single-step state update.
-    pub fn step(
-        &self,
-        x_prev: &[f32],
-        u_t: &[f32],
-        mask: &Mask,
-        p: f32,
-        q: f32,
-    ) -> Result<Vec<f32>> {
-        let args = [
-            xla::Literal::vec1(x_prev),
-            xla::Literal::vec1(u_t),
-            self.mat(&mask.m, self.profile.nx, self.profile.n_v)?,
-            xla::Literal::scalar(p),
-            xla::Literal::scalar(q),
-        ];
-        let out = self.run(&self.step, &args)?;
-        out[0].to_vec::<f32>().map_err(to_anyhow)
+    fn to_anyhow(e: xla::Error) -> anyhow::Error {
+        anyhow!("{e}")
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow!("{e}")
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{bail, Result};
+
+    use super::{ForwardOut, TrainState};
+    use crate::data::dataset::Sample;
+    use crate::dfr::mask::Mask;
+    use crate::runtime::manifest::ProfileArtifacts;
+
+    /// Stub executor used when the crate is built without the `pjrt`
+    /// feature (no vendored `xla` bindings). [`DfrExecutor::new`] always
+    /// fails, so the instance methods are unreachable; they exist only to
+    /// keep call sites compiling identically in both configurations.
+    pub struct DfrExecutor {
+        pub profile: ProfileArtifacts,
+    }
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: dfr_edge was built without the `pjrt` feature \
+         (vendored xla bindings) — use the native engine";
+
+    impl DfrExecutor {
+        /// Always fails in this configuration; callers fall back to
+        /// [`NativeEngine`](crate::coordinator::NativeEngine).
+        pub fn new(_profile: &ProfileArtifacts) -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn forward(&self, _s: &Sample, _mask: &Mask, _p: f32, _q: f32) -> Result<ForwardOut> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn train_step(
+            &self,
+            _s: &Sample,
+            _mask: &Mask,
+            _state: &mut TrainState,
+            _lr_res: f32,
+            _lr_out: f32,
+        ) -> Result<f32> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn infer(
+            &self,
+            _s: &Sample,
+            _mask: &Mask,
+            _p: f32,
+            _q: f32,
+            _w_tilde: &[f32],
+        ) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn features(&self, _s: &Sample, _mask: &Mask, _p: f32, _q: f32) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn step(
+            &self,
+            _x_prev: &[f32],
+            _u_t: &[f32],
+            _mask: &Mask,
+            _p: f32,
+            _q: f32,
+        ) -> Result<Vec<f32>> {
+            bail!(UNAVAILABLE)
+        }
+    }
 }
+
+pub use imp::DfrExecutor;
 
 #[cfg(test)]
 mod tests {

@@ -9,6 +9,11 @@
 //! [`manifest`] parses `artifacts/manifest.json` (the shape contract),
 //! [`executor`] wraps `PjRtClient` with typed entry points for the five
 //! artifact kinds (forward / train_step / infer / features / step).
+//!
+//! The `xla` bindings are vendored into the deployment image (not a
+//! registry dependency), so the real executor is gated behind the `pjrt`
+//! cargo feature; default builds get a stub whose constructor errors and
+//! callers fall back to the native engine (see DESIGN.md §7).
 
 pub mod executor;
 pub mod manifest;

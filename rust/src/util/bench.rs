@@ -3,6 +3,12 @@
 //! Used by every `rust/benches/*.rs` target (`harness = false`). Provides
 //! warm-up, adaptive iteration counts, robust statistics (median + MAD),
 //! and CSV/markdown emission into `results/`.
+//!
+//! Concurrency benches (e.g. `coordinator_throughput`) that measure
+//! many-threaded request latency rather than a repeatable closure record
+//! client-side into [`crate::util::metrics::Histogram`]s, merge the
+//! snapshots, and emit through [`markdown_table`] /
+//! [`write_results_file`] here.
 
 use std::fmt::Write as _;
 use std::fs;

@@ -1,9 +1,19 @@
 //! Lightweight metrics: counters and latency histograms for the
-//! coordinator (queue depths, batch sizes, per-stage latencies).
+//! coordinator (request counts, per-stage latencies, queue rejections).
+//!
+//! Metrics may carry labels (e.g. `shard="2"`): every shard of the
+//! coordinator registers its own labelled instruments in one shared
+//! [`Registry`], and [`Registry::render`] emits both the per-label lines
+//! and an aggregated line per metric name (counter values summed,
+//! histogram buckets merged), so a single `Request::Stats` snapshot shows
+//! the whole server *and* each shard.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Number of log-scale buckets (microsecond powers of two up to ~67 s).
+const BUCKETS: usize = 27;
 
 /// Monotonic counter.
 #[derive(Default, Debug)]
@@ -27,7 +37,7 @@ impl Counter {
 /// ~67 s). Lock-free recording.
 #[derive(Debug)]
 pub struct Histogram {
-    buckets: [AtomicU64; 27],
+    buckets: [AtomicU64; BUCKETS],
     sum_us: AtomicU64,
     count: AtomicU64,
 }
@@ -45,7 +55,7 @@ impl Default for Histogram {
 impl Histogram {
     pub fn record_secs(&self, secs: f64) {
         let us = (secs * 1e6).max(0.0) as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -56,71 +66,235 @@ impl Histogram {
     }
 
     pub fn mean_secs(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+        self.snapshot().mean_secs()
     }
 
     /// Approximate quantile from the log buckets (upper bound of bucket).
     pub fn quantile_secs(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
+        self.snapshot().quantile_secs(q)
+    }
+
+    /// Consistent-enough point-in-time copy (individual loads are relaxed;
+    /// recording concurrently with a snapshot may skew one sample).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a [`Histogram`]; snapshots of different histograms
+/// (e.g. one per shard) can be merged into an aggregate view.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    buckets: [u64; BUCKETS],
+    sum_us: u64,
+    count: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: [0; BUCKETS],
+            sum_us: 0,
+            count: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Add another snapshot's samples into this one.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.sum_us += other.sum_us;
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        self.sum_us as f64 / self.count as f64 / 1e6
+    }
+
+    /// Approximate quantile from the log buckets (upper bound of bucket).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
         let mut acc = 0;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
+            acc += b;
             if acc >= target {
                 return (1u64 << i) as f64 / 1e6;
             }
         }
-        (1u64 << (self.buckets.len() - 1)) as f64 / 1e6
+        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+    }
+
+    fn render_line(&self, key: &str) -> String {
+        format!(
+            "hist {key} count {} mean_s {:.6} p50_s {:.6} p99_s {:.6}\n",
+            self.count,
+            self.mean_secs(),
+            self.quantile_secs(0.5),
+            self.quantile_secs(0.99),
+        )
     }
 }
 
-/// A named registry of counters and histograms.
+/// Metric identity: a name plus optional `key="value"` labels. Ordering is
+/// name-major, so a [`BTreeMap`] keyed by `MetricKey` groups all labelled
+/// variants of one name together.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct MetricKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+impl MetricKey {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        MetricKey {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        }
+    }
+
+    /// Rendering used for per-variant lines inside a name group. The
+    /// unlabelled variant renders as `name{}` so it can never be confused
+    /// with the group's aggregate `name` line.
+    fn render_in_group(&self) -> String {
+        let l: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{v}\""))
+            .collect();
+        format!("{}{{{}}}", self.name, l.join(","))
+    }
+}
+
+/// Group a name-sorted metric map into per-name runs (`BTreeMap` keyed by
+/// [`MetricKey`] is name-major, so one linear pass suffices).
+fn groups<V>(map: &BTreeMap<MetricKey, V>) -> Vec<(&str, Vec<(&MetricKey, &V)>)> {
+    let mut out: Vec<(&str, Vec<(&MetricKey, &V)>)> = Vec::new();
+    for (k, v) in map {
+        match out.last_mut() {
+            Some((name, group)) if *name == k.name => group.push((k, v)),
+            _ => out.push((k.name.as_str(), vec![(k, v)])),
+        }
+    }
+    out
+}
+
+/// A named registry of counters and histograms, shared across threads.
 #[derive(Default)]
 pub struct Registry {
-    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
-    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<MetricKey, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<MetricKey, Arc<Histogram>>>,
 }
 
 impl Registry {
-    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+    /// Unlabelled counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counter_labelled(name, &[])
+    }
+
+    /// Counter with labels, e.g. `counter_labelled("requests_total", &[("shard", "0")])`.
+    pub fn counter_labelled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
         self.counters
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(MetricKey::new(name, labels))
             .or_default()
             .clone()
     }
 
-    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+    /// Unlabelled histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_labelled(name, &[])
+    }
+
+    /// Histogram with labels.
+    pub fn histogram_labelled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
         self.histograms
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(MetricKey::new(name, labels))
             .or_default()
             .clone()
     }
 
-    /// Render all metrics as text lines (`name value`).
+    /// Sum of all counters registered under `name`, across labels.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, c)| c.get())
+            .sum()
+    }
+
+    /// Merged snapshot of all histograms registered under `name`.
+    pub fn histogram_total(&self, name: &str) -> HistogramSnapshot {
+        let mut total = HistogramSnapshot::default();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            if k.name == name {
+                total.merge(&h.snapshot());
+            }
+        }
+        total
+    }
+
+    /// Render all metrics as text lines.
+    ///
+    /// Each metric name gets one aggregated line (`counter name value` /
+    /// `hist name count … p99_s …`); when labelled variants exist they
+    /// follow the aggregate, e.g. `counter requests_total{shard="1"} 42`.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (k, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("counter {k} {}\n", c.get()));
+        {
+            let counters = self.counters.lock().unwrap();
+            for (name, group) in groups(&counters) {
+                let total: u64 = group.iter().map(|(_, c)| c.get()).sum();
+                out.push_str(&format!("counter {name} {total}\n"));
+                if group.len() > 1 || !group[0].0.labels.is_empty() {
+                    for (k, c) in group {
+                        out.push_str(&format!(
+                            "counter {} {}\n",
+                            k.render_in_group(),
+                            c.get()
+                        ));
+                    }
+                }
+            }
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "hist {k} count {} mean_s {:.6} p50_s {:.6} p99_s {:.6}\n",
-                h.count(),
-                h.mean_secs(),
-                h.quantile_secs(0.5),
-                h.quantile_secs(0.99),
-            ));
+        {
+            let histograms = self.histograms.lock().unwrap();
+            for (name, group) in groups(&histograms) {
+                let mut total = HistogramSnapshot::default();
+                for (_, h) in &group {
+                    total.merge(&h.snapshot());
+                }
+                out.push_str(&total.render_line(name));
+                if group.len() > 1 || !group[0].0.labels.is_empty() {
+                    for (k, h) in group {
+                        out.push_str(&h.snapshot().render_line(&k.render_in_group()));
+                    }
+                }
+            }
         }
         out
     }
@@ -158,5 +332,63 @@ mod tests {
         r.counter("a").inc();
         assert_eq!(r.counter("a").get(), 2);
         assert!(r.render().contains("counter a 2"));
+    }
+
+    #[test]
+    fn labelled_counters_aggregate_in_render() {
+        let r = Registry::default();
+        r.counter_labelled("req", &[("shard", "0")]).add(3);
+        r.counter_labelled("req", &[("shard", "1")]).add(4);
+        r.counter("other").inc();
+        assert_eq!(r.counter_total("req"), 7);
+        let text = r.render();
+        assert!(text.contains("counter req 7\n"), "{text}");
+        assert!(text.contains("counter req{shard=\"0\"} 3\n"), "{text}");
+        assert!(text.contains("counter req{shard=\"1\"} 4\n"), "{text}");
+        // unlabelled metrics keep the legacy single-line format
+        assert!(text.contains("counter other 1\n"), "{text}");
+        assert!(!text.contains("other{"), "{text}");
+    }
+
+    #[test]
+    fn mixed_labelled_and_unlabelled_render_unambiguously() {
+        let r = Registry::default();
+        r.counter("req").add(5);
+        r.counter_labelled("req", &[("shard", "0")]).add(3);
+        let text = r.render();
+        // one aggregate line; the unlabelled variant renders as `req{}`
+        // so no two `counter req ...` lines can carry different values
+        assert!(text.contains("counter req 8\n"), "{text}");
+        assert!(text.contains("counter req{} 5\n"), "{text}");
+        assert!(text.contains("counter req{shard=\"0\"} 3\n"), "{text}");
+        assert!(!text.contains("counter req 5"), "{text}");
+    }
+
+    #[test]
+    fn labelled_histograms_merge() {
+        let r = Registry::default();
+        r.histogram_labelled("lat", &[("shard", "0")]).record_secs(1e-4);
+        r.histogram_labelled("lat", &[("shard", "1")]).record_secs(1e-2);
+        let total = r.histogram_total("lat");
+        assert_eq!(total.count(), 2);
+        assert!(total.mean_secs() > 1e-4 && total.mean_secs() < 1e-2);
+        let text = r.render();
+        assert!(text.contains("hist lat count 2"), "{text}");
+        assert!(text.contains("hist lat{shard=\"0\"} count 1"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_merge_is_additive() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for i in 1..=50 {
+            a.record_secs(i as f64 * 1e-5);
+            b.record_secs(i as f64 * 1e-3);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count(), 100);
+        // merged p99 reflects the slow histogram's tail
+        assert!(m.quantile_secs(0.99) >= b.snapshot().quantile_secs(0.5));
     }
 }

@@ -1,8 +1,12 @@
-//! Minimal thread-pool / event-loop runtime (no tokio in the image).
+//! Minimal thread-pool runtime (no tokio in the image).
 //!
-//! The coordinator's event loop and executor pool are built on this:
-//! a fixed-size worker pool consuming a bounded MPMC queue (backpressure
-//! by blocking send), plus a `JoinSet`-style completion channel.
+//! A fixed-size worker pool consuming a bounded MPMC queue (backpressure
+//! by blocking send), plus [`parallel_map`], a tiny `par_iter`
+//! substitute. Grid search and the bench sweeps run on these. The
+//! coordinator's shard pool (`coordinator::server`) uses dedicated
+//! per-shard queues instead — sessions must be pinned to one thread,
+//! which a work-stealing MPMC pool cannot guarantee — but shares the
+//! same backpressure idiom (`submit` blocks, `try_submit` refuses).
 
 use std::collections::VecDeque;
 use std::sync::mpsc;

@@ -104,6 +104,7 @@ fn prop_server_routes_by_session_id() {
                     session: scfg,
                     queue_cap: 32,
                     seed: 3,
+                    shards: 2,
                 },
             );
             let n_sessions = 1 + u64::from(size % 3);

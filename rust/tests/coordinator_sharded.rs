@@ -1,0 +1,364 @@
+//! Integration tests for the sharded coordinator: concurrent clients
+//! across shards, queue saturation (`try_call` backpressure), graceful
+//! shutdown draining, and per-shard metrics in the `Stats` snapshot.
+
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::coordinator::{Request, Response, Server, ServerConfig, SessionConfig};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::runtime::executor::TrainState;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+/// An engine that sleeps in the hot operations — makes queue saturation
+/// and drain ordering deterministic to test.
+struct SlowEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl SlowEngine {
+    fn new(nx: usize, n_c: usize, delay: Duration) -> Self {
+        SlowEngine {
+            inner: NativeEngine::new(nx, n_c),
+            delay,
+        }
+    }
+}
+
+impl Engine for SlowEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        thread::sleep(self.delay);
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+
+    fn infer(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+    ) -> Result<Vec<f32>> {
+        thread::sleep(self.delay);
+        self.inner.infer(s, mask, p, q, w_tilde)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        Some(Box::new(SlowEngine::new(
+            self.inner.nx,
+            self.inner.n_c,
+            self.delay,
+        )))
+    }
+}
+
+#[test]
+fn concurrent_clients_across_shards() {
+    let ds = mini_dataset(21);
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        ServerConfig {
+            session: mini_session_config(ds.train.len()),
+            queue_cap: 256,
+            seed: 0xFEED,
+            shards: 4,
+        },
+    );
+    assert_eq!(srv.shards(), 4);
+
+    // 4 client threads, each driving two sessions that land on the same
+    // shard (k and k + 4) — full train-then-serve lifecycle per session
+    thread::scope(|scope| {
+        for k in 0..4u64 {
+            let srv = &srv;
+            let ds = &ds;
+            scope.spawn(move || {
+                for session in [k, k + 4] {
+                    let mut trained = false;
+                    for s in &ds.train {
+                        if let Response::Trained { .. } = srv
+                            .call(Request::Labelled {
+                                session,
+                                sample: s.clone(),
+                            })
+                            .unwrap()
+                        {
+                            trained = true;
+                        }
+                    }
+                    assert!(trained, "session {session} never trained");
+                    for s in &ds.test {
+                        let r = srv
+                            .call(Request::Infer {
+                                session,
+                                sample: s.clone(),
+                            })
+                            .unwrap();
+                        assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+                    }
+                }
+            });
+        }
+    });
+
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            // 8 sessions × 10 test samples, aggregated across shards
+            assert!(t.contains("counter inferences_total 80"), "{t}");
+            assert!(t.contains("counter trainings_total 8"), "{t}");
+            // every shard served exactly 2 sessions
+            for shard in 0..4 {
+                assert!(
+                    t.contains(&format!("trainings_total{{shard=\"{shard}\"}} 2")),
+                    "{t}"
+                );
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn try_call_sheds_load_when_shard_queue_saturated() {
+    let ds = mini_dataset(22);
+    // collect_target 1 → every labelled sample triggers a (slow) training
+    let mut scfg = mini_session_config(1);
+    scfg.retrain_after = Some(1);
+    // keep the session buffer from capping out first — this test is about
+    // the *queue* level of backpressure, not the buffer level
+    scfg.buffer_cap = 10_000;
+    let srv = Server::spawn(
+        Box::new(SlowEngine::new(8, 2, Duration::from_millis(30))),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 1, // per-shard queue of 1
+            seed: 1,
+            shards: 1,
+        },
+    );
+
+    // keep submitting slow trainings; with a queue of one and a busy
+    // shard, try_call must eventually refuse
+    let mut accepted = Vec::new();
+    let mut saturated = false;
+    for _ in 0..200 {
+        match srv
+            .try_call(Request::Labelled {
+                session: 0,
+                sample: ds.train[0].clone(),
+            })
+            .unwrap()
+        {
+            Some(rx) => accepted.push(rx),
+            None => {
+                saturated = true;
+                break;
+            }
+        }
+    }
+    assert!(saturated, "queue never saturated after 200 try_calls");
+    assert!(!accepted.is_empty(), "nothing was accepted before saturation");
+    // every accepted request still gets a real reply
+    for rx in accepted {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("accepted request lost its reply");
+        assert!(
+            matches!(resp, Response::Trained { .. } | Response::Accepted { .. }),
+            "{resp:?}"
+        );
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn shutdown_drains_all_shards_without_lost_replies() {
+    let ds = mini_dataset(23);
+    let srv = Server::spawn(
+        Box::new(SlowEngine::new(8, 2, Duration::from_millis(20))),
+        ServerConfig {
+            session: mini_session_config(1),
+            queue_cap: 16, // 8 per shard
+            seed: 2,
+            shards: 2,
+        },
+    );
+
+    // queue slow trainings on both shards, then shut down immediately —
+    // the drain protocol must answer every accepted request first
+    let mut pending = Vec::new();
+    for session in 0..6u64 {
+        if let Some(rx) = srv
+            .try_call(Request::Labelled {
+                session,
+                sample: ds.train[0].clone(),
+            })
+            .unwrap()
+        {
+            pending.push((session, rx));
+        }
+    }
+    assert!(pending.len() >= 4, "expected most requests queued");
+    srv.shutdown();
+    for (session, rx) in pending {
+        let resp = rx.recv().unwrap_or_else(|_| {
+            panic!("session {session}: reply lost during shutdown")
+        });
+        assert!(matches!(resp, Response::Trained { .. }), "{resp:?}");
+    }
+}
+
+#[test]
+fn stats_exposes_per_shard_and_aggregate_metrics() {
+    let ds = mini_dataset(24);
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        ServerConfig {
+            session: mini_session_config(50), // never trains
+            queue_cap: 64,
+            seed: 3,
+            shards: 4,
+        },
+    );
+    // one labelled sample per shard
+    for session in 0..4u64 {
+        let r = srv
+            .call(Request::Labelled {
+                session,
+                sample: ds.train[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Accepted { .. }), "{r:?}");
+    }
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            assert!(t.contains("counter shards_active 4"), "{t}");
+            // the 4 labelled requests; Stats itself is answered inline by
+            // the server handle and does not hit any shard
+            assert!(t.contains("counter requests_total 4"), "{t}");
+            for shard in 0..4 {
+                assert!(
+                    t.contains(&format!("requests_total{{shard=\"{shard}\"}} 1")),
+                    "{t}"
+                );
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn engine_without_fork_degrades_to_single_shard() {
+    /// NativeEngine wrapper that refuses to fork (the default trait impl).
+    struct Unforkable(NativeEngine);
+    impl Engine for Unforkable {
+        fn train_step(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            state: &mut TrainState,
+            lr_res: f32,
+            lr_out: f32,
+        ) -> Result<f32> {
+            self.0.train_step(s, mask, state, lr_res, lr_out)
+        }
+        fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+            self.0.features(s, mask, p, q)
+        }
+        fn infer(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            p: f32,
+            q: f32,
+            w: &[f32],
+        ) -> Result<Vec<f32>> {
+            self.0.infer(s, mask, p, q, w)
+        }
+        fn name(&self) -> &'static str {
+            "unforkable"
+        }
+    }
+
+    let ds = mini_dataset(25);
+    let srv = Server::spawn(
+        Box::new(Unforkable(NativeEngine::new(8, 2))),
+        ServerConfig {
+            session: mini_session_config(ds.train.len()),
+            queue_cap: 64,
+            seed: 4,
+            shards: 8,
+        },
+    );
+    assert_eq!(srv.shards(), 1, "unforkable engine must fall back to 1 shard");
+    // still fully functional
+    for s in &ds.train {
+        srv.call(Request::Labelled {
+            session: 11,
+            sample: s.clone(),
+        })
+        .unwrap();
+    }
+    let r = srv
+        .call(Request::Infer {
+            session: 11,
+            sample: ds.test[0].clone(),
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+    srv.shutdown();
+}

@@ -183,6 +183,9 @@ fn coordinator_end_to_end_over_pjrt() {
             session: scfg,
             queue_cap: 128,
             seed: 7,
+            // PJRT replicas recompile the artifacts per shard; keep the
+            // smoke test single-shard
+            shards: 1,
         },
     );
     let mut trained = false;
