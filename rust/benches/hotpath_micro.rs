@@ -1,10 +1,17 @@
 //! Hot-path microbenchmarks — the §Perf working set (EXPERIMENTS.md).
 //!
 //! Covers every loop the profile says matters: the reservoir step, the
-//! DPRR rank-1 push, the packed ridge rank-1 update, the in-place
-//! Cholesky solve at paper scale (s = 931), the whole per-sample
-//! forward, one truncated-BP step, and (when artifacts are built) the
-//! per-call PJRT overhead of the step/forward artifacts.
+//! DPRR rank-1 push, the packed ridge rank-1 update and its rank-k
+//! blocked counterpart (B ∈ {1, 8, 32}), the whole per-sample forward
+//! (allocating vs workspace), the in-place Cholesky solve at paper scale
+//! (s = 931), the β sweep (per-β clone vs shared workspace), one
+//! truncated-BP step, the serial-vs-parallel ridge phase, and (when
+//! artifacts are built) the per-call PJRT overhead.
+//!
+//! Besides the CSV, this bench writes `results/BENCH_hotpath.json`
+//! pairing each optimized path with its baseline and the measured
+//! speedup — the numbers quoted in DESIGN.md §Perf. Set
+//! `DFR_BENCH_SMOKE=1` for a few-iteration CI smoke run.
 
 mod common;
 
@@ -12,14 +19,19 @@ use dfr_edge::data::dataset::Sample;
 use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
 use dfr_edge::dfr::dprr::DprrAccumulator;
 use dfr_edge::dfr::mask::Mask;
-use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
-use dfr_edge::linalg::ridge::{rank1_update_packed, RidgeAccumulator, RidgeMethod};
+use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+use dfr_edge::dfr::train::{ridge_phase, TrainConfig};
+use dfr_edge::linalg::ridge::{
+    rank1_update_packed, RidgeAccumulator, RidgeMethod, SolveWorkspace, PAPER_BETAS,
+};
 use dfr_edge::linalg::tri_len;
-use dfr_edge::util::bench::{bb, Bencher};
+use dfr_edge::util::bench::{bb, write_results_file, Bencher, Stats};
 use dfr_edge::util::prng::Pcg32;
 
 fn main() {
-    let mut b = Bencher::with_target_time(0.4);
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    let (fast_target, slow_target) = if smoke { (0.02, 0.05) } else { (0.4, 1.2) };
+    let mut b = Bencher::with_target_time(fast_target);
     let mut rng = Pcg32::seed(0xBEEF);
     let nx = 30;
     let v = 12;
@@ -49,8 +61,12 @@ fn main() {
         acc.push(bb(&xa), bb(&xb));
     });
 
-    // full per-sample forward (jpvow shape)
+    // full per-sample forward (jpvow shape): allocating vs workspace
     b.bench("forward_jpvow_t29", || res.forward(bb(&u), t));
+    let mut fscratch = ForwardScratch::new(nx);
+    b.bench("forward_scratch_jpvow_t29", || {
+        res.forward_into(bb(&u), t, bb(&mut fscratch));
+    });
 
     // truncated-BP gradients
     let out = OutputLayer::zeros(9, nx);
@@ -59,27 +75,76 @@ fn main() {
         truncated_grads(bb(&fwd), 3, 0.2, 0.1, res.f, bb(&out))
     });
 
-    // packed ridge rank-1 update at paper scale (s = 931)
+    // packed ridge Gram update at paper scale (s = 931): rank-1 per
+    // sample vs rank-k blocks of 8 and 32 (same MAC count per sample;
+    // the block reuses every triangle cache line B times)
     let s_dim = nx * nx + nx + 1;
     let r_t: Vec<f32> = (0..s_dim).map(|_| rng.normal()).collect();
     let mut packed = vec![0.0f32; tri_len(s_dim)];
     b.bench("ridge_rank1_packed_s931", || {
         rank1_update_packed(bb(&mut packed), bb(&r_t));
     });
+    let mut gacc = RidgeAccumulator::new(s_dim, 9);
+    for (name, bs) in [
+        ("gram_block_b1_s931", 1usize),
+        ("gram_block_b8_s931", 8),
+        ("gram_block_b32_s931", 32),
+    ] {
+        let block: Vec<f32> = (0..bs * s_dim).map(|_| rng.normal()).collect();
+        let labels: Vec<usize> = (0..bs).map(|i| i % 9).collect();
+        b.bench(name, || {
+            gacc.accumulate_block(bb(&block), bb(&labels));
+        });
+    }
 
-    // in-place Cholesky solve at paper scale
+    // in-place Cholesky solve at paper scale + the β sweep both ways
     let mut racc = RidgeAccumulator::new(s_dim, 9);
     for i in 0..64 {
         let r: Vec<f32> = (0..s_dim).map(|_| rng.normal()).collect();
         racc.accumulate(&r, i % 9);
     }
-    let mut b_slow = Bencher::with_target_time(1.2);
+    let mut b_slow = Bencher::with_target_time(slow_target);
     b_slow.bench("cholesky_solve_s931_ny9", || {
         racc.solve(0.5, RidgeMethod::Cholesky1d)
     });
     b_slow.bench("cholesky_buffered_s931_ny9", || {
         racc.solve(0.5, RidgeMethod::CholeskyBuffered)
     });
+    b_slow.bench("beta_sweep_clone_s931", || {
+        // the pre-workspace path: a fresh 1.7 MB triangle clone per β
+        for &beta in &PAPER_BETAS {
+            bb(racc.solve(beta, RidgeMethod::Cholesky1d));
+        }
+    });
+    let mut sweep_ws = SolveWorkspace::new(s_dim, 9);
+    b_slow.bench("beta_sweep_workspace_s931", || {
+        for &beta in &PAPER_BETAS {
+            bb(racc.solve_with_workspace(beta, RidgeMethod::Cholesky1d, bb(&mut sweep_ws)));
+        }
+    });
+
+    // ridge phase end-to-end: serial vs parallel (features + β solves)
+    let ds = common::bench_dataset("jpvow", 0x51D);
+    let threads = common::threads();
+    let mut cfg = TrainConfig { nx, ..Default::default() };
+    let ridge_res = Reservoir {
+        mask: Mask::random(nx, ds.n_v, &mut rng),
+        p: 0.2,
+        q: 0.1,
+        f: cfg.f,
+    };
+    cfg.threads = 1;
+    let serial_stats = b_slow
+        .once("ridge_phase_serial_jpvow", || ridge_phase(&ds, &ridge_res, &cfg))
+        .1
+        .clone();
+    cfg.threads = threads;
+    let parallel_stats = b_slow
+        .once(&format!("ridge_phase_parallel{threads}_jpvow"), || {
+            ridge_phase(&ds, &ridge_res, &cfg)
+        })
+        .1
+        .clone();
 
     // PJRT per-call overhead (needs artifacts)
     if let Ok(manifest) = dfr_edge::runtime::Manifest::load("artifacts") {
@@ -103,15 +168,43 @@ fn main() {
         println!("(artifacts not built — skipping PJRT call benches)");
     }
 
-    let mut all = Bencher::new();
-    std::mem::swap(&mut all, &mut b);
-    let mut rows: Vec<Vec<String>> = all
-        .results()
+    let mut stats: Vec<Stats> = b.results().to_vec();
+    stats.extend_from_slice(b_slow.results());
+    let rows: Vec<Vec<String>> = stats
         .iter()
         .map(|s| vec![s.name.clone(), format!("{:.6e}", s.median), format!("{:.6e}", s.mad)])
         .collect();
-    rows.extend(b_slow.results().iter().map(|s| {
-        vec![s.name.clone(), format!("{:.6e}", s.median), format!("{:.6e}", s.mad)]
-    }));
     common::write_csv("hotpath_micro.csv", "name,median_s,mad_s", &rows);
+
+    // before/after pairs → results/BENCH_hotpath.json (DESIGN.md §Perf)
+    let med = |name: &str| -> f64 {
+        stats
+            .iter()
+            .find(|s| s.name.starts_with(name))
+            .map(|s| s.median)
+            .unwrap_or(f64::NAN)
+    };
+    let fwd_alloc = med("forward_jpvow_t29");
+    let fwd_scratch = med("forward_scratch_jpvow_t29");
+    let rank1 = med("ridge_rank1_packed_s931");
+    let blk8 = med("gram_block_b8_s931") / 8.0;
+    let blk32 = med("gram_block_b32_s931") / 32.0;
+    let sweep_clone = med("beta_sweep_clone_s931");
+    let sweep_ws_t = med("beta_sweep_workspace_s931");
+    let json = format!(
+        "{{\n  \"scale\": {{\"nx\": {nx}, \"s\": {s_dim}, \"t\": {t}, \"ny\": 9, \"threads\": {threads}, \"smoke\": {smoke}}},\n  \
+         \"forward\": {{\"alloc_median_s\": {fwd_alloc:.6e}, \"scratch_median_s\": {fwd_scratch:.6e}, \"speedup\": {:.3}}},\n  \
+         \"gram_accumulate\": {{\"rank1_per_sample_s\": {rank1:.6e}, \"block8_per_sample_s\": {blk8:.6e}, \"block32_per_sample_s\": {blk32:.6e}, \"speedup_b8\": {:.3}, \"speedup_b32\": {:.3}}},\n  \
+         \"beta_sweep\": {{\"clone_median_s\": {sweep_clone:.6e}, \"workspace_median_s\": {sweep_ws_t:.6e}, \"speedup\": {:.3}}},\n  \
+         \"ridge_phase\": {{\"serial_s\": {:.6e}, \"parallel_s\": {:.6e}, \"speedup\": {:.3}}}\n}}\n",
+        fwd_alloc / fwd_scratch,
+        rank1 / blk8,
+        rank1 / blk32,
+        sweep_clone / sweep_ws_t,
+        serial_stats.median,
+        parallel_stats.median,
+        serial_stats.median / parallel_stats.median,
+    );
+    write_results_file("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("→ results/BENCH_hotpath.json (copy to repo root to refresh the committed snapshot)");
 }

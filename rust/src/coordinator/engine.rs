@@ -5,12 +5,14 @@
 //! is also how the benches compare "SW-only" vs artifact-backed runs on
 //! identical workloads.
 
+use std::cell::RefCell;
+
 use anyhow::Result;
 
 use crate::data::dataset::Sample;
-use crate::dfr::backprop::{truncated_grads, OutputLayer};
+use crate::dfr::backprop::{softmax_inplace, truncated_grads_ref, OutputLayer};
 use crate::dfr::mask::Mask;
-use crate::dfr::reservoir::{Nonlinearity, Reservoir};
+use crate::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
 use crate::runtime::executor::{DfrExecutor, TrainState};
 
 /// The operations a session needs from its compute backend.
@@ -28,9 +30,43 @@ pub trait Engine: Send {
     /// Ridge feature vector r̃ = [r, 1].
     fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>>;
 
+    /// Ridge feature vector into a caller-owned buffer. Engines that
+    /// support a zero-allocation steady state override this (the default
+    /// delegates to [`features`](Self::features) and copies).
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let f = self.features(s, mask, p, q)?;
+        out.clear();
+        out.extend_from_slice(&f);
+        Ok(())
+    }
+
     /// Class scores with a ridge output layer W̃ (row-major n_c × s).
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32])
         -> Result<Vec<f32>>;
+
+    /// Class scores into a caller-owned buffer (see
+    /// [`features_into`](Self::features_into) for the contract).
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        let z = self.infer(s, mask, p, q, w_tilde)?;
+        scores.clear();
+        scores.extend_from_slice(&z);
+        Ok(())
+    }
 
     /// Human-readable backend name (metrics/logs).
     fn name(&self) -> &'static str;
@@ -50,28 +86,73 @@ pub trait Engine: Send {
 
 /// Pure-Rust engine over `dfr::*` — bit-compatible with the JAX model
 /// (golden-tested), no artifacts required.
+///
+/// Holds a per-replica [`EngineScratch`] so that steady-state
+/// `features`/`infer` requests perform **zero heap allocations** beyond
+/// the returned vector (and *none at all* through the `_into` variants)
+/// — asserted by the counting-allocator test in `tests/zero_alloc.rs`.
 pub struct NativeEngine {
     pub nx: usize,
     pub n_c: usize,
     pub f: Nonlinearity,
+    /// Each shard exclusively owns its engine replica (`Engine: Send`,
+    /// not `Sync`), so this RefCell is never contended — it exists only
+    /// because `Engine` methods take `&self`.
+    scratch: RefCell<EngineScratch>,
+}
+
+/// Reusable per-replica buffers: a reservoir whose mask is refreshed in
+/// place, the forward workspace, r̃, and an output-layer copy for the
+/// backward pass.
+struct EngineScratch {
+    res: Reservoir,
+    fwd: ForwardScratch,
+    r_tilde: Vec<f32>,
+    out: OutputLayer,
 }
 
 impl NativeEngine {
     pub fn new(nx: usize, n_c: usize) -> Self {
+        Self::with_nonlinearity(nx, n_c, Nonlinearity::Linear { alpha: 1.0 })
+    }
+
+    pub fn with_nonlinearity(nx: usize, n_c: usize, f: Nonlinearity) -> Self {
         NativeEngine {
             nx,
             n_c,
-            f: Nonlinearity::Linear { alpha: 1.0 },
+            f,
+            scratch: RefCell::new(EngineScratch {
+                res: Reservoir {
+                    mask: Mask {
+                        nx,
+                        v: 0,
+                        m: Vec::new(),
+                    },
+                    p: 0.0,
+                    q: 0.0,
+                    f,
+                },
+                fwd: ForwardScratch::new(nx),
+                r_tilde: Vec::new(),
+                out: OutputLayer::zeros(n_c, nx),
+            }),
         }
     }
 
-    fn reservoir(&self, mask: &Mask, p: f32, q: f32) -> Reservoir {
-        Reservoir {
-            mask: mask.clone(),
-            p,
-            q,
-            f: self.f,
+    /// Run the reservoir forward into the replica workspace. Zero heap
+    /// allocations in steady state: the session's mask is copied in
+    /// place (derived `Clone::clone_from` would reallocate), and a
+    /// reallocation happens only when the mask *shape* changes.
+    fn forward_scratch(&self, s: &Sample, mask: &Mask, p: f32, q: f32, sc: &mut EngineScratch) {
+        if sc.res.mask.nx != mask.nx || sc.res.mask.v != mask.v {
+            sc.res.mask = mask.clone();
+        } else if sc.res.mask.m != mask.m {
+            sc.res.mask.m.copy_from_slice(&mask.m);
         }
+        sc.res.p = p;
+        sc.res.q = q;
+        sc.res.f = self.f;
+        sc.res.forward_into(&s.u, s.t, &mut sc.fwd);
     }
 }
 
@@ -84,15 +165,27 @@ impl Engine for NativeEngine {
         lr_res: f32,
         lr_out: f32,
     ) -> Result<f32> {
-        let res = self.reservoir(mask, state.p, state.q);
-        let fwd = res.forward(&s.u, s.t);
-        let out = OutputLayer {
-            w: state.w.clone(),
-            b: state.b.clone(),
-            ny: self.n_c,
-            nr: self.nx * (self.nx + 1),
-        };
-        let g = truncated_grads(&fwd, s.label, state.p, state.q, self.f, &out);
+        let mut sc = self.scratch.borrow_mut();
+        self.forward_scratch(s, mask, state.p, state.q, &mut sc);
+        // refresh the output-layer copy in place (no per-step clone)
+        if sc.out.w.len() != state.w.len() {
+            sc.out.w.resize(state.w.len(), 0.0);
+        }
+        sc.out.w.copy_from_slice(&state.w);
+        if sc.out.b.len() != state.b.len() {
+            sc.out.b.resize(state.b.len(), 0.0);
+        }
+        sc.out.b.copy_from_slice(&state.b);
+        sc.out.ny = self.n_c;
+        sc.out.nr = self.nx * (self.nx + 1);
+        let g = truncated_grads_ref(
+            sc.fwd.as_forward_ref(),
+            s.label,
+            state.p,
+            state.q,
+            self.f,
+            &sc.out,
+        );
         // same ±1 clip as the train_step artifact (model.GRAD_CLIP)
         let clip = 1.0f32;
         let (dp, dq) = (g.dp.clamp(-clip, clip), g.dq.clamp(-clip, clip));
@@ -112,7 +205,23 @@ impl Engine for NativeEngine {
     }
 
     fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
-        Ok(self.reservoir(mask, p, q).forward(&s.u, s.t).r_tilde())
+        let mut out = Vec::new();
+        self.features_into(s, mask, p, q, &mut out)?;
+        Ok(out)
+    }
+
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut sc = self.scratch.borrow_mut();
+        self.forward_scratch(s, mask, p, q, &mut sc);
+        sc.fwd.r_tilde_into(out);
+        Ok(())
     }
 
     fn infer(
@@ -123,20 +232,35 @@ impl Engine for NativeEngine {
         q: f32,
         w_tilde: &[f32],
     ) -> Result<Vec<f32>> {
-        let rt = self.features(s, mask, p, q)?;
-        let sdim = rt.len();
-        let ny = w_tilde.len() / sdim;
-        let mut z: Vec<f32> = (0..ny)
-            .map(|i| {
-                w_tilde[i * sdim..(i + 1) * sdim]
-                    .iter()
-                    .zip(&rt)
-                    .map(|(w, r)| w * r)
-                    .sum()
-            })
-            .collect();
-        crate::dfr::backprop::softmax_inplace(&mut z);
+        let mut z = Vec::new();
+        self.infer_into(s, mask, p, q, w_tilde, &mut z)?;
         Ok(z)
+    }
+
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut sc = self.scratch.borrow_mut();
+        self.forward_scratch(s, mask, p, q, &mut sc);
+        // split borrow: r̃ buffer and forward workspace are distinct fields
+        let EngineScratch { fwd, r_tilde, .. } = &mut *sc;
+        fwd.r_tilde_into(r_tilde);
+        let sdim = r_tilde.len();
+        let ny = w_tilde.len() / sdim;
+        scores.clear();
+        scores.reserve(ny);
+        for i in 0..ny {
+            let row = &w_tilde[i * sdim..(i + 1) * sdim];
+            scores.push(row.iter().zip(r_tilde.iter()).map(|(w, r)| w * r).sum());
+        }
+        softmax_inplace(scores);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -144,12 +268,11 @@ impl Engine for NativeEngine {
     }
 
     fn fork(&self) -> Option<Box<dyn Engine>> {
-        // stateless apart from its dimensions — replicas are free
-        Some(Box::new(NativeEngine {
-            nx: self.nx,
-            n_c: self.n_c,
-            f: self.f,
-        }))
+        // stateless apart from its dimensions (each replica gets its own
+        // workspace) — replicas are free
+        Some(Box::new(NativeEngine::with_nonlinearity(
+            self.nx, self.n_c, self.f,
+        )))
     }
 }
 

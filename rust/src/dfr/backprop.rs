@@ -14,7 +14,7 @@
 //! Plus the Table 7 memory accounting ([`memory_words_naive`] /
 //! [`memory_words_truncated`], verified against all 12 printed rows).
 
-use super::reservoir::{Forward, History, Nonlinearity};
+use super::reservoir::{Forward, ForwardRef, History, Nonlinearity};
 
 /// Output layer parameters during the SGD phase: `y = softmax(W r + b)`.
 #[derive(Clone, Debug)]
@@ -89,6 +89,21 @@ pub struct Grads {
 pub fn truncated_grads(
     fwd: &Forward,
     class: usize,
+    p: f32,
+    q: f32,
+    f: Nonlinearity,
+    out: &OutputLayer,
+) -> Grads {
+    truncated_grads_ref(fwd.as_view(), class, p, q, f, out)
+}
+
+/// [`truncated_grads`] over a borrowed [`ForwardRef`] — the same math
+/// without requiring an owned `Forward` snapshot, so engines can
+/// backpropagate straight out of a reusable
+/// [`ForwardScratch`](super::reservoir::ForwardScratch).
+pub fn truncated_grads_ref(
+    fwd: ForwardRef<'_>,
+    class: usize,
     // p is part of the formula set's signature for symmetry with
     // full_bptt_grads (Eq. 35 uses f and the stored forward values only)
     _p: f32,
@@ -101,7 +116,7 @@ pub fn truncated_grads(
     debug_assert_eq!(fwd.r_mat.len(), nr);
 
     // forward through the output layer
-    let y = out.probs(&fwd.r_mat);
+    let y = out.probs(fwd.r_mat);
     let loss = cross_entropy(&y, class);
 
     // Eq. (25): dL/dz = y - e
@@ -113,7 +128,7 @@ pub fn truncated_grads(
     let mut dw = vec![0.0f32; out.ny * nr];
     for (i, &d) in dz.iter().enumerate() {
         let row = &mut dw[i * nr..(i + 1) * nr];
-        for (w, &r) in row.iter_mut().zip(&fwd.r_mat) {
+        for (w, &r) in row.iter_mut().zip(fwd.r_mat) {
             *w = d * r;
         }
     }
@@ -134,7 +149,7 @@ pub fn truncated_grads(
             let row = &dr[n * w1..(n + 1) * w1];
             (row[..nx]
                 .iter()
-                .zip(&fwd.x_tm1)
+                .zip(fwd.x_tm1)
                 .map(|(g, x)| g * x)
                 .sum::<f32>()
                 + row[nx])

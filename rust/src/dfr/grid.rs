@@ -11,7 +11,7 @@
 use super::mask::Mask;
 use super::train::{evaluate_params, TrainConfig};
 use crate::data::dataset::Dataset;
-use crate::util::runtimex::parallel_map;
+use crate::util::scoped_pool::scoped_map;
 
 /// §4.1 exponent ranges.
 pub const P_EXP_RANGE: (f32, f32) = (-3.75, -0.25);
@@ -68,13 +68,10 @@ pub fn search(
             jobs.push((p, q));
         }
     }
-    // each worker clones the dataset reference context; evaluate_params is
-    // read-only over ds/mask so share via Arc
-    let ds = std::sync::Arc::new(ds.clone());
-    let mask = std::sync::Arc::new(mask.clone());
-    let cfg = std::sync::Arc::new(cfg.clone());
-    let points = parallel_map(jobs, threads, move |(p, q)| {
-        let (acc, sol) = evaluate_params(&ds, &mask, p, q, &cfg);
+    // evaluate_params is read-only over ds/mask/cfg — scoped workers
+    // borrow them directly (no Arc, no dataset clone per sweep)
+    let points = scoped_map(&jobs, threads, |&(p, q)| {
+        let (acc, sol) = evaluate_params(ds, mask, p, q, cfg);
         GridPoint {
             p,
             q,
@@ -152,11 +149,8 @@ pub fn recursive_refine(
             jobs.push((p, q));
         }
     }
-    let dsa = std::sync::Arc::new(ds.clone());
-    let ma = std::sync::Arc::new(mask.clone());
-    let ca = std::sync::Arc::new(cfg.clone());
-    let points = parallel_map(jobs, threads, move |(p, q)| {
-        let (acc, sol) = evaluate_params(&dsa, &ma, p, q, &ca);
+    let points = scoped_map(&jobs, threads, |&(p, q)| {
+        let (acc, sol) = evaluate_params(ds, mask, p, q, cfg);
         GridPoint {
             p,
             q,

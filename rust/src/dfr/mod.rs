@@ -25,7 +25,7 @@ pub mod mask;
 pub mod reservoir;
 pub mod train;
 
-pub use reservoir::{Nonlinearity, Reservoir};
+pub use reservoir::{ForwardScratch, Nonlinearity, Reservoir};
 
 /// Reservoir size used throughout the paper's evaluation (§4: "The
 /// reservoir size Nx was set to 30").

@@ -16,6 +16,19 @@
 use super::dprr::DprrAccumulator;
 use super::mask::Mask;
 
+/// `|x|^p` with an integer fast path: the paper's default exponent
+/// p = 2 becomes a single multiply (`|x|² = x·x` exactly in IEEE
+/// arithmetic) instead of a `powf` libm call — the Mackey–Glass step
+/// evaluates this once per virtual node per time step.
+#[inline(always)]
+fn pow_abs(x: f32, p: f32) -> f32 {
+    if p == 2.0 {
+        x * x
+    } else {
+        x.abs().powf(p)
+    }
+}
+
 /// The one-input one-output nonlinearity `f` of the modular DFR.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Nonlinearity {
@@ -36,7 +49,7 @@ impl Nonlinearity {
             Nonlinearity::Linear { alpha } => alpha * x,
             Nonlinearity::Tanh => x.tanh(),
             Nonlinearity::MackeyGlass { eta, p_exp } => {
-                eta * x / (1.0 + x.abs().powf(p_exp))
+                eta * x / (1.0 + pow_abs(x, p_exp))
             }
         }
     }
@@ -52,7 +65,7 @@ impl Nonlinearity {
             }
             Nonlinearity::MackeyGlass { eta, p_exp } => {
                 // d/dx [η x (1+|x|^p)^-1]
-                let a = x.abs().powf(p_exp);
+                let a = pow_abs(x, p_exp);
                 let denom = 1.0 + a;
                 eta * (1.0 + a - p_exp * a) / (denom * denom)
             }
@@ -91,6 +104,141 @@ impl Forward {
         r.push(1.0);
         r
     }
+
+    /// r̃ into a caller-owned buffer; retains `out`'s capacity, so the
+    /// steady state performs no heap allocation.
+    pub fn r_tilde_into(&self, out: &mut Vec<f32>) {
+        self.as_view().r_tilde_into(out);
+    }
+
+    /// Borrowed view — what the backward pass reads.
+    pub fn as_view(&self) -> ForwardRef<'_> {
+        ForwardRef {
+            r_mat: &self.r_mat,
+            x_t: &self.x_t,
+            x_tm1: &self.x_tm1,
+            j_t: &self.j_t,
+            t_len: self.t_len,
+        }
+    }
+}
+
+/// Borrowed view of a forward result, with the same field contract as
+/// [`Forward`]. Produced by [`Forward::as_view`] (owned result) or
+/// [`ForwardScratch::as_forward_ref`] (workspace, allocation-free) —
+/// lets `truncated_grads` run without an owned `Forward` snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct ForwardRef<'a> {
+    /// DPRR matrix, row-major Nx×(Nx+1), normalized by 1/T.
+    pub r_mat: &'a [f32],
+    pub x_t: &'a [f32],
+    pub x_tm1: &'a [f32],
+    pub j_t: &'a [f32],
+    pub t_len: usize,
+}
+
+impl ForwardRef<'_> {
+    /// r̃ = [vec(R), 1] into a caller-owned buffer (capacity reused; no
+    /// heap allocation once `out` has been sized) — the single
+    /// definition behind `Forward::r_tilde_into` and
+    /// `ForwardScratch::r_tilde_into`.
+    pub fn r_tilde_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.r_mat.len() + 1);
+        out.extend_from_slice(self.r_mat);
+        out.push(1.0);
+    }
+}
+
+/// Reusable forward-pass workspace: every buffer a streaming forward
+/// touches — x(k), x(k-1), j(k), the DPRR accumulator and the normalized
+/// DPRR matrix — allocated once and reused across samples. A steady-state
+/// `forward_into` performs **zero heap allocations** (DESIGN.md §9;
+/// asserted by `tests/zero_alloc.rs` through the engine layer).
+#[derive(Clone, Debug)]
+pub struct ForwardScratch {
+    nx: usize,
+    x: Vec<f32>,
+    x_prev: Vec<f32>,
+    j: Vec<f32>,
+    acc: DprrAccumulator,
+    r_mat: Vec<f32>,
+    t_len: usize,
+}
+
+impl ForwardScratch {
+    pub fn new(nx: usize) -> Self {
+        ForwardScratch {
+            nx,
+            x: vec![0.0; nx],
+            x_prev: vec![0.0; nx],
+            j: vec![0.0; nx],
+            acc: DprrAccumulator::new(nx),
+            r_mat: vec![0.0; nx * (nx + 1)],
+            t_len: 0,
+        }
+    }
+
+    /// Re-size for a different reservoir dimension; allocates only on
+    /// change, a no-op in steady state.
+    pub fn ensure(&mut self, nx: usize) {
+        if self.nx != nx {
+            *self = ForwardScratch::new(nx);
+        }
+    }
+
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    /// Normalized DPRR matrix of the last `forward_into`.
+    pub fn r_mat(&self) -> &[f32] {
+        &self.r_mat
+    }
+
+    pub fn x_t(&self) -> &[f32] {
+        &self.x
+    }
+
+    pub fn x_tm1(&self) -> &[f32] {
+        &self.x_prev
+    }
+
+    pub fn j_t(&self) -> &[f32] {
+        &self.j
+    }
+
+    pub fn t_len(&self) -> usize {
+        self.t_len
+    }
+
+    /// r̃ = [vec(R), 1] into a caller-owned buffer (capacity reused).
+    pub fn r_tilde_into(&self, out: &mut Vec<f32>) {
+        self.as_forward_ref().r_tilde_into(out);
+    }
+
+    /// Borrowed view with the [`Forward`] field contract (allocation-free).
+    pub fn as_forward_ref(&self) -> ForwardRef<'_> {
+        ForwardRef {
+            r_mat: &self.r_mat,
+            x_t: &self.x,
+            x_tm1: &self.x_prev,
+            j_t: &self.j,
+            t_len: self.t_len,
+        }
+    }
+
+    /// Consume the workspace into an owned [`Forward`] (moves, no copy) —
+    /// the compatibility path behind the allocating `forward` wrappers.
+    pub fn into_forward(self) -> Forward {
+        Forward {
+            r_mat: self.r_mat,
+            x_t: self.x,
+            x_tm1: self.x_prev,
+            j_t: self.j,
+            t_len: self.t_len,
+        }
+    }
 }
 
 /// A configured modular-DFR reservoir (mask + parameters + nonlinearity).
@@ -123,32 +271,37 @@ impl Reservoir {
     /// Streaming forward pass over a series `u` (row-major T×V).
     ///
     /// O(Nx²) memory total (the DPRR accumulator), independent of T.
+    /// Thin wrapper over [`forward_into`](Self::forward_into) — hot
+    /// callers hold a [`ForwardScratch`] and skip the allocations.
     pub fn forward(&self, u: &[f32], t: usize) -> Forward {
+        let mut scratch = ForwardScratch::new(self.nx());
+        self.forward_into(u, t, &mut scratch);
+        scratch.into_forward()
+    }
+
+    /// Allocation-free streaming forward: identical recurrence and
+    /// op order as [`forward`](Self::forward) (results are bitwise
+    /// equal), writing into a caller-owned reusable workspace.
+    pub fn forward_into(&self, u: &[f32], t: usize, s: &mut ForwardScratch) {
         let nx = self.nx();
         let v = self.mask.v;
         assert_eq!(u.len(), t * v, "series shape mismatch");
-        let mut x = vec![0.0f32; nx];
-        let mut x_prev = vec![0.0f32; nx];
-        let mut j = vec![0.0f32; nx];
-        let mut acc = DprrAccumulator::new(nx);
+        s.ensure(nx);
+        s.x.fill(0.0);
+        s.x_prev.fill(0.0);
+        s.j.fill(0.0);
+        s.acc.reset();
         for k in 0..t {
-            x_prev.copy_from_slice(&x);
-            self.mask.apply(&u[k * v..(k + 1) * v], &mut j);
-            self.step(&mut x, &j);
-            acc.push(&x, &x_prev);
+            s.x_prev.copy_from_slice(&s.x);
+            self.mask.apply(&u[k * v..(k + 1) * v], &mut s.j);
+            self.step(&mut s.x, &s.j);
+            s.acc.push(&s.x, &s.x_prev);
         }
-        let mut r_mat = acc.into_matrix();
         let inv_t = 1.0 / t.max(1) as f32;
-        for r in r_mat.iter_mut() {
-            *r *= inv_t;
+        for (r, &a) in s.r_mat.iter_mut().zip(s.acc.matrix()) {
+            *r = a * inv_t;
         }
-        Forward {
-            r_mat,
-            x_t: x,
-            x_tm1: x_prev,
-            j_t: j,
-            t_len: t,
-        }
+        s.t_len = t;
     }
 
     /// Forward pass that records the whole state and input history —
@@ -228,15 +381,29 @@ pub struct MackeyGlassDfr {
 }
 
 impl MackeyGlassDfr {
+    /// The virtual-node decay `e = exp(−θ)` — constant over a series, so
+    /// the forward loop hoists it instead of recomputing per step.
+    #[inline]
+    pub fn decay(&self) -> f32 {
+        (-self.theta).exp()
+    }
+
     /// One time step of Eqs. (8)–(9) in place.
     pub fn step(&self, x: &mut [f32], j: &[f32]) {
+        let e = self.decay();
+        self.step_with_decay(x, j, e, 1.0 - e);
+    }
+
+    /// Eqs. (8)–(9) with the decay `e = exp(−θ)` (and `1 − e`) supplied
+    /// by the caller — the forward loop computes them once per series
+    /// rather than once per time step.
+    #[inline]
+    pub fn step_with_decay(&self, x: &mut [f32], j: &[f32], e: f32, one_e: f32) {
         let nx = x.len();
-        let e = (-self.theta).exp();
-        let one_e = 1.0 - e;
         let mut cascade = x[nx - 1];
         for n in 0..nx {
             let arg = x[n] + self.gamma * j[n];
-            let f = self.eta * arg / (1.0 + arg.abs().powf(self.p_exp));
+            let f = self.eta * arg / (1.0 + pow_abs(arg, self.p_exp));
             let xn = cascade * e + one_e * f;
             cascade = xn;
             x[n] = xn;
@@ -246,31 +413,36 @@ impl MackeyGlassDfr {
     /// Streaming forward with DPRR — same output contract as
     /// [`Reservoir::forward`] so both plug into the same output layer.
     pub fn forward(&self, u: &[f32], t: usize) -> Forward {
+        let mut scratch = ForwardScratch::new(self.mask.nx);
+        self.forward_into(u, t, &mut scratch);
+        scratch.into_forward()
+    }
+
+    /// Allocation-free streaming forward into a reusable workspace —
+    /// same contract as [`Reservoir::forward_into`], with the per-step
+    /// `exp(−θ)` hoisted out of the time loop.
+    pub fn forward_into(&self, u: &[f32], t: usize, s: &mut ForwardScratch) {
         let nx = self.mask.nx;
         let v = self.mask.v;
         assert_eq!(u.len(), t * v);
-        let mut x = vec![0.0f32; nx];
-        let mut x_prev = vec![0.0f32; nx];
-        let mut j = vec![0.0f32; nx];
-        let mut acc = DprrAccumulator::new(nx);
+        s.ensure(nx);
+        s.x.fill(0.0);
+        s.x_prev.fill(0.0);
+        s.j.fill(0.0);
+        s.acc.reset();
+        let e = self.decay();
+        let one_e = 1.0 - e;
         for k in 0..t {
-            x_prev.copy_from_slice(&x);
-            self.mask.apply(&u[k * v..(k + 1) * v], &mut j);
-            self.step(&mut x, &j);
-            acc.push(&x, &x_prev);
+            s.x_prev.copy_from_slice(&s.x);
+            self.mask.apply(&u[k * v..(k + 1) * v], &mut s.j);
+            self.step_with_decay(&mut s.x, &s.j, e, one_e);
+            s.acc.push(&s.x, &s.x_prev);
         }
-        let mut r_mat = acc.into_matrix();
         let inv_t = 1.0 / t.max(1) as f32;
-        for r in r_mat.iter_mut() {
-            *r *= inv_t;
+        for (r, &a) in s.r_mat.iter_mut().zip(s.acc.matrix()) {
+            *r = a * inv_t;
         }
-        Forward {
-            r_mat,
-            x_t: x,
-            x_tm1: x_prev,
-            j_t: j,
-            t_len: t,
-        }
+        s.t_len = t;
     }
 }
 
@@ -324,13 +496,69 @@ mod tests {
     }
 
     #[test]
+    fn forward_into_matches_forward_and_reuses_scratch() {
+        let r = toy_reservoir(6, 3, 0.3, 0.2);
+        let mut rng = Pcg32::seed(11);
+        let mut scratch = ForwardScratch::new(6);
+        // two different series through ONE scratch — catches stale state
+        for t in [13usize, 7] {
+            let u: Vec<f32> = (0..t * 3).map(|_| rng.normal()).collect();
+            let f = r.forward(&u, t);
+            r.forward_into(&u, t, &mut scratch);
+            assert_eq!(f.r_mat, scratch.r_mat());
+            assert_eq!(f.x_t, scratch.x_t());
+            assert_eq!(f.x_tm1, scratch.x_tm1());
+            assert_eq!(f.j_t, scratch.j_t());
+            assert_eq!(f.t_len, scratch.t_len());
+            let mut rt = Vec::new();
+            scratch.r_tilde_into(&mut rt);
+            assert_eq!(rt, f.r_tilde());
+        }
+    }
+
+    #[test]
+    fn scratch_ensure_resizes_on_dim_change() {
+        let mut s = ForwardScratch::new(4);
+        s.ensure(9);
+        assert_eq!(s.nx(), 9);
+        assert_eq!(s.r_mat().len(), 9 * 10);
+        let r = toy_reservoir(9, 2, 0.2, 0.1);
+        // forward_into itself ensures, so a wrongly-sized scratch is fine
+        let mut s2 = ForwardScratch::new(3);
+        let u = vec![0.5f32; 10 * 2];
+        r.forward_into(&u, 10, &mut s2);
+        assert_eq!(s2.nx(), 9);
+    }
+
+    #[test]
+    fn mackey_glass_integer_exponent_fast_path() {
+        let f2 = Nonlinearity::MackeyGlass { eta: 0.9, p_exp: 2.0 };
+        for x in [-2.5f32, -0.7, 0.0, 0.3, 1.9] {
+            // the fast path computes |x|² as x·x — exact by definition
+            assert_eq!(f2.eval(x), 0.9 * x / (1.0 + x * x), "eval({x})");
+            // and stays within rounding of the generic powf form
+            let powf_form = 0.9 * x / (1.0 + x.abs().powf(2.0));
+            assert!(
+                (f2.eval(x) - powf_form).abs() <= 1e-6 * powf_form.abs().max(1.0),
+                "eval({x}): {} vs powf form {powf_form}",
+                f2.eval(x)
+            );
+        }
+    }
+
+    #[test]
     fn nonlinearity_derivs_match_finite_difference() {
         let fs = [
             Nonlinearity::Linear { alpha: 0.8 },
             Nonlinearity::Tanh,
+            // integer fast path and the powf path
             Nonlinearity::MackeyGlass {
                 eta: 0.9,
                 p_exp: 2.0,
+            },
+            Nonlinearity::MackeyGlass {
+                eta: 0.7,
+                p_exp: 2.5,
             },
         ];
         for f in fs {

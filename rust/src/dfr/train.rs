@@ -13,9 +13,9 @@
 //! This module is the software reference; the coordinator drives the same
 //! protocol through the PJRT `train_step` artifacts.
 
-use super::backprop::{cross_entropy, truncated_grads, OutputLayer};
+use super::backprop::{cross_entropy, truncated_grads_ref, OutputLayer};
 use super::mask::Mask;
-use super::reservoir::{Forward, Nonlinearity, Reservoir};
+use super::reservoir::{Forward, ForwardScratch, Nonlinearity, Reservoir};
 use crate::data::dataset::{accuracy, Dataset, Sample};
 use crate::linalg::ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution, PAPER_BETAS};
 use crate::util::prng::Pcg32;
@@ -47,6 +47,13 @@ pub struct TrainConfig {
     /// inside its stability region (p+q < 1), which lr=1 SGD can
     /// otherwise overshoot in f32. Documented deviation (DESIGN.md §10).
     pub project_to_search_range: bool,
+    /// worker threads for the ridge phase (feature extraction and the
+    /// independent per-β solves). 1 = fully serial. Results are
+    /// identical at any thread count: extraction preserves sample order
+    /// and the β sweep's selection rule is order-stable. Keep at 1 when
+    /// the caller is already parallel (e.g. inside a grid-search sweep)
+    /// to avoid oversubscription.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -71,6 +78,7 @@ impl Default for TrainConfig {
             seed: 0xD0_5E1,
             grad_clip: Some(1.0),
             project_to_search_range: true,
+            threads: 1,
         }
     }
 }
@@ -150,6 +158,9 @@ pub fn sgd_phase(
     let mut lr_out = cfg.lr_init;
     let mut order: Vec<usize> = (0..ds.train.len()).collect();
     let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+    // one workspace for the whole SGD phase — the per-sample forward
+    // passes allocate nothing
+    let mut scratch = ForwardScratch::new(cfg.nx);
 
     for epoch in 0..cfg.epochs {
         if cfg.res_decay_epochs.contains(&epoch) {
@@ -162,8 +173,9 @@ pub fn sgd_phase(
         let mut loss_sum = 0.0f64;
         for &i in &order {
             let s = &ds.train[i];
-            let fwd = res.forward(&s.u, s.t);
-            let g = truncated_grads(&fwd, s.label, res.p, res.q, res.f, &out);
+            res.forward_into(&s.u, s.t, &mut scratch);
+            let g =
+                truncated_grads_ref(scratch.as_forward_ref(), s.label, res.p, res.q, res.f, &out);
             loss_sum += f64::from(g.loss);
             let (mut dp, mut dq) = (g.dp, g.dq);
             if let Some(c) = cfg.grad_clip {
@@ -197,12 +209,27 @@ pub fn sgd_phase(
 /// Phase 2: ridge regression with β selection by training loss (Eq. 24
 /// evaluated with softmax over the ridge scores).
 pub fn ridge_phase(ds: &Dataset, reservoir: &Reservoir, cfg: &TrainConfig) -> RidgeSolution {
-    // forward features once, reuse across β
-    let feats: Vec<(Vec<f32>, usize)> = ds
-        .train
-        .iter()
-        .map(|s| (reservoir.forward(&s.u, s.t).r_tilde(), s.label))
-        .collect();
+    // forward features once, reuse across β. Extraction is read-only per
+    // sample and order-preserving, so the serial and parallel paths
+    // produce identical feature lists; the serial path additionally
+    // reuses one ForwardScratch across all samples (no per-sample state
+    // allocations).
+    let feats: Vec<(Vec<f32>, usize)> = if cfg.threads > 1 {
+        crate::util::scoped_pool::scoped_map(&ds.train, cfg.threads, |s| {
+            (reservoir.forward(&s.u, s.t).r_tilde(), s.label)
+        })
+    } else {
+        let mut scratch = ForwardScratch::new(reservoir.nx());
+        ds.train
+            .iter()
+            .map(|s| {
+                reservoir.forward_into(&s.u, s.t, &mut scratch);
+                let mut r = Vec::new();
+                scratch.r_tilde_into(&mut r);
+                (r, s.label)
+            })
+            .collect()
+    };
     ridge_phase_from_features(&feats, ds.n_c, cfg)
 }
 
@@ -230,13 +257,9 @@ pub fn ridge_phase_from_features(
 
     let held: Vec<&(Vec<f32>, usize)> = feats[split..].iter().collect();
     let mut fit_acc = RidgeAccumulator::new(s, n_c);
-    for (r, label) in &feats[..split] {
-        fit_acc.accumulate(r, *label);
-    }
+    accumulate_blocked(&mut fit_acc, &feats[..split]);
     if fit_acc.count == 0 {
-        for (r, label) in feats {
-            fit_acc.accumulate(r, *label);
-        }
+        accumulate_blocked(&mut fit_acc, feats);
     }
     // Selection metric: held-out error count first (argmax prediction is
     // what deployment uses), cross-entropy as tie-break. Betas iterate
@@ -245,7 +268,7 @@ pub fn ridge_phase_from_features(
     // held-out split while being numerically meaningless.
     let mut betas_desc = cfg.betas.clone();
     betas_desc.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let (sel, _) = fit_acc.solve_best_beta(&betas_desc, cfg.ridge_method, |sol| {
+    let score = |sol: &RidgeSolution| {
         let mut errors = 0u32;
         let mut ce = 0.0f32;
         for (r, label) in &held {
@@ -257,10 +280,44 @@ pub fn ridge_phase_from_features(
             ce += cross_entropy(&z, *label);
         }
         errors as f32 * 1e3 + ce.min(999.0)
-    });
+    };
+    // the per-β solves are independent; both paths share one scratch
+    // triangle per worker instead of cloning B₀ per β, and apply the
+    // same order-stable selection rule
+    let (sel, _) = if cfg.threads > 1 {
+        fit_acc.solve_best_beta_parallel(&betas_desc, cfg.ridge_method, cfg.threads, &score)
+    } else {
+        fit_acc.solve_best_beta(&betas_desc, cfg.ridge_method, &score)
+    };
 
     // the deployed layer is the selection-consistent fit-split solution
     sel
+}
+
+/// Gram-block size for the streamed accumulation: 32 feature vectors of
+/// s = 931 floats stage ~119 KB (fits L2) while the packed triangle is
+/// swept once per block instead of once per sample (DESIGN.md §9).
+const GRAM_BLOCK: usize = 32;
+
+/// Stream features into the accumulator through the rank-k blocked
+/// kernel: stage up to [`GRAM_BLOCK`] r̃ vectors contiguously, then fold
+/// them in one pass over the packed triangle. The staging copy is O(B·s)
+/// against the O(B·s²/2) Gram MACs it unlocks.
+fn accumulate_blocked(acc: &mut RidgeAccumulator, feats: &[(Vec<f32>, usize)]) {
+    let mut block: Vec<f32> = Vec::with_capacity(GRAM_BLOCK * acc.s);
+    let mut labels: Vec<usize> = Vec::with_capacity(GRAM_BLOCK);
+    for (r, label) in feats {
+        block.extend_from_slice(r);
+        labels.push(*label);
+        if labels.len() == GRAM_BLOCK {
+            acc.accumulate_block(&block, &labels);
+            block.clear();
+            labels.clear();
+        }
+    }
+    if !labels.is_empty() {
+        acc.accumulate_block(&block, &labels);
+    }
 }
 
 /// Evaluate reservoir parameters (p, q) by ridge-training an output

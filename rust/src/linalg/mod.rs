@@ -21,7 +21,7 @@ pub mod gaussian;
 pub mod ridge;
 
 pub use counters::{NoCount, OpCount, Ops};
-pub use ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution};
+pub use ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution, SolveWorkspace};
 
 /// Index into the packed lower-triangular 1-D array: element (i, j), i ≥ j,
 /// lives at `P[i(i+1)/2 + j]` (paper Eq. 41).

@@ -4,7 +4,8 @@
 //! `clap`, `serde`, `tokio`, `criterion`, `proptest`), so the pieces the
 //! system needs are implemented here: a PCG PRNG, a declarative argument
 //! parser, a minimal JSON reader/writer, a thread-pool event loop, a
-//! timing/benchmark harness and a tiny property-testing driver.
+//! scoped (borrow-friendly) worker pool, a timing/benchmark harness and
+//! a tiny property-testing driver.
 
 pub mod args;
 pub mod bench;
@@ -14,4 +15,5 @@ pub mod metrics;
 pub mod prng;
 pub mod proptest;
 pub mod runtimex;
+pub mod scoped_pool;
 pub mod timer;

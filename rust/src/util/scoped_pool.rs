@@ -1,0 +1,113 @@
+//! Scoped worker pool: borrow-friendly data parallelism over `&[T]`.
+//!
+//! [`runtimex::parallel_map`](super::runtimex::parallel_map) requires
+//! `'static` items, which forces callers (grid search, ridge training)
+//! to `Arc`-clone whole datasets before fanning out. [`scoped_map`] uses
+//! `std::thread::scope` instead, so workers borrow the input slice and
+//! every captured reference directly — no cloning, no `Arc`, no heap
+//! beyond the result vector. Work is distributed by an atomic cursor
+//! (cheap work stealing: a slow item never stalls the other workers) and
+//! results are returned in input order, so `scoped_map` is a drop-in
+//! deterministic replacement for a serial `iter().map().collect()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+/// Map `f` over `items` on up to `threads` scoped workers, preserving
+/// input order of the results.
+///
+/// `threads <= 1` (or a single item) runs inline on the caller with no
+/// thread spawned, so the serial and parallel paths produce identical
+/// results element-for-element. A panic inside `f` propagates to the
+/// caller when the scope joins.
+pub fn scoped_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        // receive while the workers run — the scope joins them after
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter()
+        .map(|r| r.expect("scoped_map worker died before finishing"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..97).collect();
+        let out = scoped_map(&items, 8, |&x| x * 3);
+        assert_eq!(out, (0..97).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrows_without_static() {
+        // the whole point: captured references, no Arc / 'static
+        let data = vec![String::from("a"), String::from("bb"), String::from("ccc")];
+        let prefix = String::from("len=");
+        let out = scoped_map(&data, 2, |s| format!("{prefix}{}", s.len()));
+        assert_eq!(out, vec!["len=1", "len=2", "len=3"]);
+    }
+
+    #[test]
+    fn empty_and_serial_paths() {
+        let out: Vec<i32> = scoped_map(&[], 4, |x: &i32| *x);
+        assert!(out.is_empty());
+        let out = scoped_map(&[5, 6], 1, |&x| x + 1);
+        assert_eq!(out, vec![6, 7]);
+    }
+
+    #[test]
+    fn thread_count_larger_than_items() {
+        let out = scoped_map(&[1, 2, 3], 64, |&x| x);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let items: Vec<u32> = (0..8).collect();
+        scoped_map(&items, 4, |&x| {
+            if x == 5 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Property tests: the zero-allocation / blocked hot paths introduced
+//! for the §Perf work are numerically equivalent to the simple
+//! per-sample reference paths, over random shapes.
+//!
+//! * `forward_into` (reused workspace) ≡ `forward` — bitwise, both for
+//!   the modular reservoir and the Mackey–Glass DFR;
+//! * `accumulate_block` (rank-k Gram) ≡ sequential `accumulate` within
+//!   1e-5 relative (the blocked kernel reassociates f32 sums);
+//! * β sweep with a shared workspace ≡ per-β cloned solves — bitwise,
+//!   serial and parallel.
+
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{ForwardScratch, MackeyGlassDfr, Nonlinearity, Reservoir};
+use dfr_edge::linalg::ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution, PAPER_BETAS};
+use dfr_edge::util::proptest::{assert_close, run_prop, Config};
+
+#[test]
+fn forward_into_equals_forward_reservoir() {
+    run_prop("forward_into == forward (modular)", Config::default(), |rng, size| {
+        let nx = 1 + (size as usize % 12);
+        let v = 1 + (size as usize % 4);
+        let res = Reservoir {
+            mask: Mask::random(nx, v, rng),
+            p: rng.uniform_in(0.05, 0.4),
+            q: rng.uniform_in(0.05, 0.4),
+            f: if size % 2 == 0 {
+                Nonlinearity::Linear { alpha: 1.0 }
+            } else {
+                Nonlinearity::Tanh
+            },
+        };
+        // one scratch reused across several series of different lengths —
+        // catches stale state between samples
+        let mut scratch = ForwardScratch::new(nx);
+        for round in 0..3u32 {
+            let t = 1 + ((size + round) as usize * 5) % 37;
+            let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+            let want = res.forward(&u, t);
+            res.forward_into(&u, t, &mut scratch);
+            if want.r_mat != scratch.r_mat() {
+                return Err(format!("r_mat mismatch at nx={nx} t={t}"));
+            }
+            if want.x_t != scratch.x_t() || want.x_tm1 != scratch.x_tm1() {
+                return Err(format!("state mismatch at nx={nx} t={t}"));
+            }
+            if want.j_t != scratch.j_t() || want.t_len != scratch.t_len() {
+                return Err(format!("j/t mismatch at nx={nx} t={t}"));
+            }
+            let mut rt = Vec::new();
+            scratch.r_tilde_into(&mut rt);
+            if rt != want.r_tilde() {
+                return Err(format!("r_tilde mismatch at nx={nx} t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forward_into_equals_forward_mackey_glass() {
+    run_prop("forward_into == forward (MG)", Config::default(), |rng, size| {
+        let nx = 1 + (size as usize % 10);
+        let v = 1 + (size as usize % 3);
+        let dfr = MackeyGlassDfr {
+            mask: Mask::random(nx, v, rng),
+            gamma: rng.uniform_in(0.2, 0.8),
+            eta: rng.uniform_in(0.5, 1.0),
+            // exercise both the x*x fast path and the powf path
+            p_exp: if size % 2 == 0 { 2.0 } else { 2.5 },
+            theta: rng.uniform_in(0.1, 0.5),
+        };
+        let mut scratch = ForwardScratch::new(nx);
+        for round in 0..2u32 {
+            let t = 1 + ((size + round) as usize * 7) % 29;
+            let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+            let want = dfr.forward(&u, t);
+            dfr.forward_into(&u, t, &mut scratch);
+            if want.r_mat != scratch.r_mat() || want.x_t != scratch.x_t() {
+                return Err(format!("MG mismatch at nx={nx} t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn accumulate_block_equals_sequential() {
+    run_prop("accumulate_block == accumulate", Config::default(), |rng, size| {
+        let s = 2 + (size as usize % 23);
+        let ny = 1 + (size as usize % 4);
+        let n = 1 + (size as usize * 3) % 13;
+        let rs: Vec<f32> = (0..n * s).map(|_| rng.normal()).collect();
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(ny as u32) as usize).collect();
+        let mut seq = RidgeAccumulator::new(s, ny);
+        for (r, &c) in rs.chunks_exact(s).zip(&labels) {
+            seq.accumulate(r, c);
+        }
+        let mut blk = RidgeAccumulator::new(s, ny);
+        blk.accumulate_block(&rs, &labels);
+        if blk.count != seq.count {
+            return Err(format!("count {} vs {}", blk.count, seq.count));
+        }
+        // A is a plain per-sample row add in both paths — exact
+        if blk.a != seq.a {
+            return Err("A mismatch".into());
+        }
+        // the blocked Gram reassociates sums: 1e-5 relative
+        assert_close(&blk.b_packed, &seq.b_packed, 1e-5, 1e-5)
+            .map_err(|e| format!("B (s={s} n={n}): {e}"))
+    });
+}
+
+#[test]
+fn beta_sweep_workspace_equals_per_beta_clone() {
+    run_prop("sweep workspace == per-β clone", Config::default(), |rng, size| {
+        let s = 3 + (size as usize % 12);
+        let ny = 1 + (size as usize % 3);
+        let n = s + 2; // enough samples that B is well-conditioned-ish
+        let mut acc = RidgeAccumulator::new(s, ny);
+        for i in 0..n {
+            let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+            acc.accumulate(&r, i % ny);
+        }
+        let loss = |sol: &RidgeSolution| sol.w_tilde.iter().map(|w| w * w).sum::<f32>();
+
+        // reference: the pre-workspace behavior — a fresh clone per β
+        let mut ref_best: Option<(RidgeSolution, f32)> = None;
+        for &beta in &PAPER_BETAS {
+            let sol = acc.solve(beta, RidgeMethod::Cholesky1d);
+            let raw = loss(&sol);
+            let l = if raw.is_finite() { raw } else { f32::INFINITY };
+            if ref_best.as_ref().map_or(true, |(_, b)| l < *b) {
+                ref_best = Some((sol, l));
+            }
+        }
+        let (ref_sol, ref_loss) = ref_best.unwrap();
+
+        let (ws_sol, ws_loss) = acc.solve_best_beta(&PAPER_BETAS, RidgeMethod::Cholesky1d, loss);
+        if ws_sol.beta != ref_sol.beta || ws_sol.w_tilde != ref_sol.w_tilde || ws_loss != ref_loss
+        {
+            return Err(format!("workspace sweep diverged (s={s} ny={ny})"));
+        }
+
+        let (par_sol, par_loss) =
+            acc.solve_best_beta_parallel(&PAPER_BETAS, RidgeMethod::Cholesky1d, 4, loss);
+        if par_sol.beta != ref_sol.beta || par_sol.w_tilde != ref_sol.w_tilde || par_loss != ref_loss
+        {
+            return Err(format!("parallel sweep diverged (s={s} ny={ny})"));
+        }
+        Ok(())
+    });
+}

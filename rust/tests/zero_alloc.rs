@@ -1,0 +1,116 @@
+//! Counting-allocator proof of the zero-allocation steady state
+//! (DESIGN.md §9): after one warmup call has sized every reusable
+//! buffer, `NativeEngine::features_into` and `infer_into` perform **no
+//! heap allocation at all**, and the whole masking → reservoir → DPRR →
+//! r̃ pipeline runs out of the per-replica workspace.
+//!
+//! The counter is thread-local, so allocations made concurrently by the
+//! libtest harness or sibling test threads cannot pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::util::prng::Pcg32;
+
+std::thread_local! {
+    static TRACKING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the bookkeeping only
+// touches const-initialized thread-locals (no allocation, no recursion)
+// and `try_with` tolerates TLS teardown.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TRACKING.try_with(|t| {
+            if t.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Count heap allocations performed by `f` on this thread.
+fn allocations_in(f: impl FnOnce()) -> u64 {
+    ALLOCS.with(|a| a.set(0));
+    TRACKING.with(|t| t.set(true));
+    f();
+    TRACKING.with(|t| t.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+#[test]
+fn features_and_infer_are_allocation_free_after_warmup() {
+    // paper scale: Nx = 30, V = 12 (jpvow shape), 9 classes
+    let (nx, v, n_c, t) = (30usize, 12usize, 9usize, 29usize);
+    let mut rng = Pcg32::seed(0xA110C);
+    let eng = NativeEngine::new(nx, n_c);
+    let mask = Mask::random(nx, v, &mut rng);
+    let sample = Sample {
+        u: (0..t * v).map(|_| rng.normal()).collect(),
+        t,
+        label: 0,
+    };
+    let s_dim = nx * nx + nx + 1;
+    let w_tilde: Vec<f32> = (0..n_c * s_dim).map(|_| 0.01 * rng.normal()).collect();
+
+    let mut feat = Vec::new();
+    let mut scores = Vec::new();
+    // warmup: sizes the engine workspace and the caller buffers
+    eng.features_into(&sample, &mask, 0.2, 0.1, &mut feat).unwrap();
+    eng.infer_into(&sample, &mask, 0.2, 0.1, &w_tilde, &mut scores)
+        .unwrap();
+
+    let n = allocations_in(|| {
+        for _ in 0..50 {
+            eng.features_into(&sample, &mask, 0.2, 0.1, &mut feat).unwrap();
+            eng.infer_into(&sample, &mask, 0.2, 0.1, &w_tilde, &mut scores)
+                .unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state features_into/infer_into performed {n} heap allocations"
+    );
+
+    // the zero-allocation path still computes the real thing
+    assert_eq!(feat.len(), s_dim);
+    assert_eq!(*feat.last().unwrap(), 1.0);
+    assert_eq!(scores.len(), n_c);
+    assert!((scores.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn forward_scratch_is_allocation_free_after_warmup() {
+    use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+    let mut rng = Pcg32::seed(0xA110D);
+    let res = Reservoir {
+        mask: Mask::random(30, 12, &mut rng),
+        p: 0.2,
+        q: 0.1,
+        f: Nonlinearity::Linear { alpha: 1.0 },
+    };
+    let t = 29;
+    let u: Vec<f32> = (0..t * 12).map(|_| rng.normal()).collect();
+    let mut scratch = ForwardScratch::new(30);
+    res.forward_into(&u, t, &mut scratch); // warmup (no-op resize)
+    let n = allocations_in(|| {
+        for _ in 0..20 {
+            res.forward_into(&u, t, &mut scratch);
+        }
+    });
+    assert_eq!(n, 0, "forward_into allocated {n} times in steady state");
+}
