@@ -1,0 +1,135 @@
+//! Streaming online ridge: incremental per-sample retrain (rank-1
+//! Cholesky update/downdate + in-place re-solve, `linalg::OnlineRidge`)
+//! vs the from-scratch batch retrain (re-accumulate the window's packed
+//! Gram + full `cholesky_1d` solve) across window sizes — the cost the
+//! Serve-phase drift adaptation used to pay per `retrain_after` batch.
+//!
+//! Writes `results/BENCH_streaming.json` with the per-window medians
+//! and speedups (the repo-root `BENCH_streaming.json` is the committed
+//! snapshot). The acceptance bar is incremental ≥ 10× from-scratch at
+//! window N = 1024; the operation-count ratio predicts ~50× at paper
+//! scale (N·s²/2 + s³/6 vs (2 + N_y)·s²), so the measured margin is
+//! wide. Set `DFR_BENCH_SMOKE=1` for a few-iteration CI run at reduced
+//! scale.
+
+use std::fmt::Write as _;
+
+use dfr_edge::linalg::ridge::{
+    OnlineRidge, OnlineRidgeConfig, RidgeAccumulator, RidgeMethod,
+};
+use dfr_edge::util::bench::{bb, write_results_file, Bencher};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    // s = Nx² + Nx + 1: paper scale Nx = 30 → 931; smoke uses a small
+    // odd s so the remainder lanes still run
+    let (s, ny, windows, target): (usize, usize, &[usize], f64) = if smoke {
+        (191, 5, &[32, 64], 0.02)
+    } else {
+        (931, 9, &[128, 256, 1024], 0.5)
+    };
+    let beta = 0.5f32;
+    let mut rng = Pcg32::seed(0x051AE);
+    let mut b = Bencher::with_target_time(target);
+
+    let max_n = *windows.iter().max().unwrap();
+    // one flat pool reused by every window size: n + spare samples for
+    // the incremental stream to slide over
+    let pool_len = max_n + 64;
+    let flat: Vec<f32> = (0..pool_len * s).map(|_| rng.normal()).collect();
+    let labels: Vec<usize> = (0..pool_len).map(|i| i % ny).collect();
+    let sample = |i: usize| &flat[i * s..(i + 1) * s];
+
+    let mut json_rows: Vec<String> = Vec::new();
+    for &n in windows {
+        // --- incremental: window accumulator pre-filled to steady state,
+        // then one labelled sample per iteration (evict-downdate + update
+        // + in-place re-solve; the default refactor cadence stays on so
+        // the drift bound's amortized cost is part of the measurement)
+        let mut online = OnlineRidge::new(
+            s,
+            ny,
+            OnlineRidgeConfig {
+                beta,
+                lambda: 1.0,
+                window: Some(n),
+                refactor_every: 64,
+            },
+        );
+        for i in 0..n {
+            online.fold(sample(i), labels[i]);
+        }
+        online.solve_now();
+        let mut next = n;
+        let inc = b
+            .bench(&format!("incremental_observe_w{n}_s{s}"), || {
+                let i = next % pool_len;
+                online.observe(sample(i), labels[i]);
+                next += 1;
+            })
+            .median;
+
+        // --- from-scratch: what a Serve-phase batch retrain pays for the
+        // ridge system alone — re-stream the window through the blocked
+        // Gram accumulator and run the full 1-D Cholesky solve at ONE β
+        // (the real retrain sweeps four, so this understates the gap)
+        let scratch = b
+            .bench(&format!("from_scratch_retrain_w{n}_s{s}"), || {
+                let mut acc = RidgeAccumulator::new(s, ny);
+                for (chunk, lab) in flat[..n * s].chunks(32 * s).zip(labels[..n].chunks(32)) {
+                    acc.accumulate_block(chunk, lab);
+                }
+                bb(acc.solve(beta, RidgeMethod::Cholesky1d))
+            })
+            .median;
+
+        let speedup = scratch / inc;
+        println!(
+            "window {n:>5}: incremental {inc:.3e} s vs from-scratch {scratch:.3e} s  → {speedup:.1}×"
+        );
+        let mut row = String::new();
+        let _ = write!(
+            row,
+            "    {{\"window\": {n}, \"incremental_median_s\": {inc:.6e}, \
+             \"from_scratch_median_s\": {scratch:.6e}, \"speedup\": {speedup:.3}}}"
+        );
+        json_rows.push(row);
+    }
+
+    // --- λ-forgetting flavour (no eviction; √λ factor scaling instead)
+    let mut forget = OnlineRidge::new(
+        s,
+        ny,
+        OnlineRidgeConfig {
+            beta,
+            lambda: 0.99,
+            window: None,
+            refactor_every: 64,
+        },
+    );
+    for i in 0..64 {
+        forget.fold(sample(i), labels[i]);
+    }
+    forget.solve_now();
+    let mut next = 64usize;
+    let lam = b
+        .bench(&format!("forgetting_observe_s{s}"), || {
+            let i = next % pool_len;
+            forget.observe(sample(i), labels[i]);
+            next += 1;
+        })
+        .median;
+
+    b.write_csv("streaming_online.csv").expect("write csv");
+    let rows = json_rows.join(",\n");
+    let json = format!(
+        "{{\n  \"scale\": {{\"s\": {s}, \"ny\": {ny}, \"beta\": {beta}, \"smoke\": {smoke}}},\n  \
+         \"windows\": [\n{rows}\n  ],\n  \
+         \"forgetting_observe_median_s\": {lam:.6e}\n}}\n"
+    );
+    write_results_file("BENCH_streaming.json", &json).expect("write BENCH_streaming.json");
+    println!(
+        "→ results/BENCH_streaming.json (copy to repo root to refresh the committed snapshot)"
+    );
+}

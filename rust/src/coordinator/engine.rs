@@ -33,6 +33,11 @@ pub trait Engine: Send {
     /// Ridge feature vector into a caller-owned buffer. Engines that
     /// support a zero-allocation steady state override this (the default
     /// delegates to [`features`](Self::features) and copies).
+    ///
+    /// This is also the extraction path of the Serve-phase streaming
+    /// ridge (`Session::observe_online`): with the native override, one
+    /// labelled sample costs a forward pass plus O(s²) rank-1 algebra
+    /// and **no heap allocations** end to end.
     fn features_into(
         &self,
         s: &Sample,

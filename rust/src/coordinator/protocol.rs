@@ -41,6 +41,14 @@ pub enum Response {
         beta: f32,
         train_seconds: f64,
     },
+    /// Serve-phase streaming update applied: the labelled sample was
+    /// folded into the session's online ridge accumulator (rank-1
+    /// Cholesky update + in-place re-solve) without leaving Serve.
+    /// `updates` counts the accumulator's lifetime folds; `window` is
+    /// the ring occupancy in sliding-window mode and equals the
+    /// lifetime fold count in λ-forgetting mode (where every past
+    /// sample remains in the system at geometrically decayed weight).
+    Observed { updates: u64, window: usize },
     /// Metrics text.
     StatsText(String),
     /// Request rejected (backpressure or bad session state).

@@ -25,6 +25,11 @@
 //!    target shard's queue is saturated, and [`Server::call`] blocks;
 //! 2. each session's collect buffer is capped
 //!    (`SessionConfig::buffer_cap`) — overflowing samples are `Rejected`.
+//!    Sessions on the streaming Serve path (`TrainConfig::forgetting` /
+//!    `::window`) never reject labelled samples at this level: each one
+//!    is folded in O(s²) and answered `Observed` (counted by the
+//!    per-shard `online_updates_total` metric), and the recent-sample
+//!    buffer recycles as a bounded FIFO.
 //!
 //! # Shutdown
 //!
@@ -241,6 +246,7 @@ fn shard_loop(
     let trainings = metrics.counter_labelled("trainings_total", &labels);
     let inferences = metrics.counter_labelled("inferences_total", &labels);
     let rejected = metrics.counter_labelled("rejected_total", &labels);
+    let online_updates = metrics.counter_labelled("online_updates_total", &labels);
 
     while let Ok((req, reply)) = rx.recv() {
         req_counter.inc();
@@ -280,6 +286,10 @@ fn shard_loop(
                             train_seconds,
                         }
                     }
+                    Ok(FeedOutcome::Observed { updates, window }) => {
+                        online_updates.inc();
+                        Response::Observed { updates, window }
+                    }
                     Ok(FeedOutcome::Rejected(msg)) => {
                         rejected.inc();
                         Response::Rejected(msg)
@@ -317,7 +327,8 @@ fn shard_loop(
                         train_seconds,
                     },
                     Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
-                    Ok(FeedOutcome::Buffered(_)) => unreachable!(),
+                    // finalize always runs the batch pipeline
+                    Ok(FeedOutcome::Buffered(_) | FeedOutcome::Observed { .. }) => unreachable!(),
                     Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                 },
             },

@@ -12,20 +12,30 @@
 //!   decay schedule.
 //! * **RidgeTrain** streams r̃ through the packed accumulator and solves
 //!   with the in-place 1-D Cholesky per β, selecting by held-out loss.
-//! * **Serve** answers inference requests; labelled samples arriving in
-//!   Serve are buffered for periodic re-training (drift adaptation).
+//! * **Serve** answers inference requests. Labelled samples arriving in
+//!   Serve adapt the model to drift by one of two paths:
+//!   - **streaming** (when `TrainConfig::forgetting` or `::window` is
+//!     set): each sample rank-1-updates the packed Cholesky factor and
+//!     re-solves the output layer in place — O(s²) per sample, zero
+//!     allocations, answered with `Observed` (the session never leaves
+//!     Serve). A rolling-error fallback can still force the full batch
+//!     pipeline when the online model stops tracking.
+//!   - **batch** (otherwise): samples are buffered and `retrain_after`
+//!     triggers the full §4.1 pipeline again.
 //!
 //! A `Session` is single-threaded by design: the server routes all
 //! requests for one session id to the same shard thread, which owns the
 //! session exclusively — no locking appears anywhere in this module.
+
+use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use super::engine::Engine;
 use crate::data::dataset::Sample;
 use crate::dfr::mask::Mask;
-use crate::dfr::train::{ridge_phase_from_features, TrainConfig};
-use crate::linalg::ridge::RidgeSolution;
+use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, TrainConfig};
+use crate::linalg::ridge::{OnlineRidge, RidgeSolution};
 use crate::runtime::executor::TrainState;
 use crate::util::prng::Pcg32;
 
@@ -63,8 +73,20 @@ pub struct SessionConfig {
     /// input channels
     pub n_v: usize,
     /// retrain after this many new labelled samples arrive in Serve
-    /// (None = never)
+    /// (None = never). Ignored while the streaming path is active
+    /// (`train.forgetting` / `train.window`) — there every labelled
+    /// sample already updates the model.
     pub retrain_after: Option<usize>,
+    /// Streaming-path fallback: when the rolling error rate of the
+    /// online model over the last [`fallback_window`](Self::fallback_window)
+    /// labelled samples exceeds this, the session runs the full batch
+    /// pipeline over its recent-sample buffer (`None` = never fall
+    /// back). The error is *prequential* — each sample is scored by the
+    /// model **before** it updates it, so the estimate is honest.
+    pub fallback_error_rate: Option<f32>,
+    /// size of the rolling error window (also the minimum number of
+    /// streamed samples before the fallback can trigger)
+    pub fallback_window: usize,
 }
 
 impl SessionConfig {
@@ -76,6 +98,8 @@ impl SessionConfig {
             n_c,
             n_v,
             retrain_after: None,
+            fallback_error_rate: None,
+            fallback_window: 32,
         }
     }
 }
@@ -91,6 +115,11 @@ pub enum FeedOutcome {
         beta: f32,
         train_seconds: f64,
     },
+    /// Serve-phase streaming update applied: the output layer was
+    /// rank-1-updated and re-solved in place (no retrain, no phase
+    /// change). `updates` is the accumulator's lifetime fold count,
+    /// `window` its current occupancy.
+    Observed { updates: u64, window: usize },
     Rejected(String),
 }
 
@@ -100,10 +129,22 @@ pub struct Session {
     pub cfg: SessionConfig,
     pub phase: Phase,
     pub mask: Mask,
-    buffer: Vec<Sample>,
+    /// labelled-sample buffer: append-only during Collect, bounded FIFO
+    /// (O(1) pop_front) on the streaming Serve path
+    buffer: VecDeque<Sample>,
     new_since_train: usize,
     state: TrainState,
     solution: Option<RidgeSolution>,
+    /// Serve-phase streaming accumulator (present iff the config enables
+    /// forgetting/window); reseeded by every batch train
+    online: Option<OnlineRidge>,
+    /// reusable r̃ buffer for the streaming path (zero-alloc steady state)
+    feat_scratch: Vec<f32>,
+    /// rolling prequential-error ring for the batch fallback
+    err_ring: Vec<bool>,
+    err_head: usize,
+    err_len: usize,
+    err_count: usize,
     rng: Pcg32,
     /// mean SGD loss per epoch of the last training run
     pub epoch_losses: Vec<f32>,
@@ -114,15 +155,22 @@ impl Session {
         let mut rng = Pcg32::new(seed, id);
         let mask = Mask::random(cfg.train.nx, cfg.n_v, &mut rng);
         let state = TrainState::init(cfg.n_c, cfg.train.nx, cfg.train.p_init, cfg.train.q_init);
+        let err_ring = vec![false; cfg.fallback_window];
         Session {
             id,
             cfg,
             phase: Phase::Collect,
             mask,
-            buffer: Vec::new(),
+            buffer: VecDeque::new(),
             new_since_train: 0,
             state,
             solution: None,
+            online: None,
+            feat_scratch: Vec::new(),
+            err_ring,
+            err_head: 0,
+            err_len: 0,
+            err_count: 0,
             rng,
             epoch_losses: Vec::new(),
         }
@@ -136,8 +184,35 @@ impl Session {
         self.solution.as_ref()
     }
 
+    /// The Serve-phase streaming accumulator, when active.
+    pub fn online(&self) -> Option<&OnlineRidge> {
+        self.online.as_ref()
+    }
+
     pub fn params(&self) -> (f32, f32) {
         (self.state.p, self.state.q)
+    }
+
+    fn push_err(&mut self, is_err: bool) {
+        let cap = self.err_ring.len();
+        if cap == 0 {
+            return;
+        }
+        if self.err_len == cap {
+            self.err_count -= self.err_ring[self.err_head] as usize;
+            self.err_ring[self.err_head] = is_err;
+            self.err_head = (self.err_head + 1) % cap;
+        } else {
+            self.err_ring[(self.err_head + self.err_len) % cap] = is_err;
+            self.err_len += 1;
+        }
+        self.err_count += is_err as usize;
+    }
+
+    fn reset_err(&mut self) {
+        self.err_head = 0;
+        self.err_len = 0;
+        self.err_count = 0;
     }
 
     /// Feed one labelled sample. May trigger the full training pipeline.
@@ -155,10 +230,15 @@ impl Session {
                 self.cfg.n_v
             )));
         }
+        // streaming Serve path: O(s²) in-place adaptation, no buffering
+        // backpressure (the recent-sample buffer is a bounded FIFO there)
+        if self.phase == Phase::Serve && self.online.is_some() {
+            return self.observe_online(engine, sample);
+        }
         if self.buffer.len() >= self.cfg.buffer_cap {
             return Ok(FeedOutcome::Rejected("buffer full (backpressure)".into()));
         }
-        self.buffer.push(sample);
+        self.buffer.push_back(sample);
         self.new_since_train += 1;
 
         let should_train = match self.phase {
@@ -174,6 +254,49 @@ impl Session {
             return Ok(t);
         }
         Ok(FeedOutcome::Buffered(self.buffer.len()))
+    }
+
+    /// The Serve-phase streaming update: extract r̃ into the session
+    /// scratch, score the sample against the **pre-update** model
+    /// (prequential error, feeds the fallback trigger), fold it into the
+    /// online accumulator, and refresh the served `W̃_out` in place.
+    /// Zero heap allocations in steady state (`tests/zero_alloc.rs`).
+    fn observe_online(&mut self, engine: &dyn Engine, sample: Sample) -> Result<FeedOutcome> {
+        engine.features_into(
+            &sample,
+            &self.mask,
+            self.state.p,
+            self.state.q,
+            &mut self.feat_scratch,
+        )?;
+        let (stats, mispredicted) = {
+            let online = self.online.as_mut().expect("streaming serve path");
+            let mispredicted = online.predict_class(&self.feat_scratch) != sample.label;
+            (online.observe(&self.feat_scratch, sample.label), mispredicted)
+        };
+        self.push_err(mispredicted);
+        if let Some(sol) = self.solution.as_mut() {
+            sol.w_tilde
+                .copy_from_slice(self.online.as_ref().expect("just used").w_tilde());
+        }
+        // keep a bounded FIFO of recent labelled samples so the batch
+        // fallback has something to retrain on
+        if !self.buffer.is_empty() && self.buffer.len() >= self.cfg.buffer_cap {
+            self.buffer.pop_front();
+        }
+        self.buffer.push_back(sample);
+        self.new_since_train += 1;
+        if let Some(threshold) = self.cfg.fallback_error_rate {
+            let cap = self.err_ring.len();
+            if cap > 0 && self.err_len == cap && self.err_count as f32 > threshold * cap as f32 {
+                self.reset_err();
+                return self.train(engine);
+            }
+        }
+        Ok(FeedOutcome::Observed {
+            updates: stats.updates,
+            window: stats.window_len,
+        })
     }
 
     /// Force training with whatever is buffered.
@@ -229,8 +352,13 @@ impl Session {
                     .map(|f| (f, s.label))
             })
             .collect();
-        let sol = ridge_phase_from_features(&feats?, self.cfg.n_c, &cfg);
+        let feats = feats?;
+        let sol = ridge_phase_from_features(&feats, self.cfg.n_c, &cfg);
         let beta = sol.beta;
+        // (re)seed the streaming accumulator at the selected β; every
+        // batch train resets the online state and the fallback ring
+        self.online = online_ridge_from_features(&feats, self.cfg.n_c, &cfg, beta);
+        self.reset_err();
         self.solution = Some(sol);
         self.phase = Phase::Serve;
         self.new_since_train = 0;
@@ -383,5 +511,66 @@ mod tests {
             outcomes.push(sess.feed_labelled(&eng, s.clone()).unwrap());
         }
         assert!(matches!(outcomes.last().unwrap(), FeedOutcome::Trained { .. }));
+    }
+
+    #[test]
+    fn streaming_serve_answers_observed_and_updates_solution() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        assert!(sess.online().is_some(), "streaming accumulator seeded");
+        let seeded_updates = sess.online().unwrap().updates();
+        let w_before = sess.solution().unwrap().w_tilde.clone();
+        let mut saw_change = false;
+        for (i, s) in ds.train.iter().take(6).enumerate() {
+            match sess.feed_labelled(&eng, s.clone()).unwrap() {
+                FeedOutcome::Observed { updates, window } => {
+                    assert_eq!(updates, seeded_updates + i as u64 + 1);
+                    assert!(window <= 16);
+                }
+                other => panic!("expected Observed, got {other:?}"),
+            }
+            assert_eq!(sess.phase, Phase::Serve);
+            if sess.solution().unwrap().w_tilde != w_before {
+                saw_change = true;
+            }
+        }
+        assert!(saw_change, "served W̃ never refreshed");
+        // inference still works against the refreshed layer
+        let r = sess.infer(&eng, &ds.test[0]).unwrap();
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn streaming_fallback_retrains_on_sustained_errors() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.forgetting = Some(0.98);
+        sess.cfg.fallback_error_rate = Some(0.6);
+        sess.cfg.fallback_window = 6;
+        // the ring was sized at construction; rebuild the session with
+        // the final config (Session::new reads fallback_window)
+        let cfg = sess.cfg.clone();
+        let mut sess = Session::new(1, cfg, 0xABC);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        // feed deliberately mislabelled samples: the prequential error
+        // climbs above the threshold and forces a batch retrain
+        let mut fell_back = false;
+        for i in 0..24 {
+            let mut s = ds.train[i % ds.train.len()].clone();
+            s.label = 1 - s.label; // systematic label flip = drift
+            if let FeedOutcome::Trained { .. } = sess.feed_labelled(&eng, s).unwrap() {
+                fell_back = true;
+                break;
+            }
+        }
+        assert!(fell_back, "sustained errors never triggered the batch fallback");
+        assert_eq!(sess.phase, Phase::Serve);
+        assert!(sess.online().is_some(), "fallback retrain reseeds the accumulator");
     }
 }

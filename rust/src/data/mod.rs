@@ -13,6 +13,7 @@ pub mod dataset;
 pub mod npz;
 pub mod profiles;
 pub mod synth;
+pub mod zipstore;
 
 pub use dataset::{Dataset, Sample};
 pub use profiles::{Profile, PROFILES};

@@ -9,7 +9,7 @@
 //! (write). C-order only.
 
 use std::collections::BTreeMap;
-use std::io::{Cursor, Read, Seek, Write};
+use std::io::Read;
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -162,7 +162,7 @@ pub fn write_npy_f32(shape: &[usize], data: &[f32]) -> Vec<u8> {
 }
 
 // ---------------------------------------------------------------------------
-// npz (zip container)
+// npz (zip container — see `super::zipstore` for the stored-zip subset)
 // ---------------------------------------------------------------------------
 
 /// Read every array of an npz file.
@@ -172,19 +172,18 @@ pub fn read_npz(path: impl AsRef<Path>) -> Result<BTreeMap<String, Array>> {
     read_npz_from(file)
 }
 
-/// Read npz from any reader.
-pub fn read_npz_from<R: Read + Seek>(reader: R) -> Result<BTreeMap<String, Array>> {
-    let mut zip = zip::ZipArchive::new(reader).context("not a zip/npz")?;
+/// Read npz from any reader (the whole archive is buffered; no `Seek`
+/// needed, so pipes and network streams work too).
+pub fn read_npz_from<R: Read>(mut reader: R) -> Result<BTreeMap<String, Array>> {
+    let mut buf = Vec::new();
+    reader.read_to_end(&mut buf).context("read npz bytes")?;
     let mut out = BTreeMap::new();
-    for i in 0..zip.len() {
-        let mut entry = zip.by_index(i)?;
-        let name = entry
-            .name()
-            .trim_end_matches(".npy")
-            .to_string();
-        let mut buf = Vec::with_capacity(entry.size() as usize);
-        entry.read_to_end(&mut buf)?;
-        out.insert(name, parse_npy(&buf)?);
+    for entry in super::zipstore::read_archive(&buf).context("not a zip/npz")? {
+        let name = entry.name.trim_end_matches(".npy").to_string();
+        out.insert(
+            name,
+            parse_npy(&entry.data).with_context(|| format!("entry {:?}", entry.name))?,
+        );
     }
     Ok(out)
 }
@@ -195,37 +194,26 @@ pub fn write_npz(
     path: impl AsRef<Path>,
     arrays: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
 ) -> Result<()> {
-    let file = std::fs::File::create(path.as_ref())?;
-    let mut zip = zip::ZipWriter::new(file);
-    let opts = zip::write::FileOptions::default()
-        .compression_method(zip::CompressionMethod::Stored);
-    for (name, (shape, data)) in arrays {
-        zip.start_file(format!("{name}.npy"), opts)?;
-        zip.write_all(&write_npy_f32(shape, data))?;
-    }
-    zip.finish()?;
+    std::fs::write(path.as_ref(), write_npz_bytes(arrays)?)?;
     Ok(())
 }
 
 /// Round-trip helper used by tests: npz bytes in memory.
 pub fn write_npz_bytes(arrays: &BTreeMap<String, (Vec<usize>, Vec<f32>)>) -> Result<Vec<u8>> {
-    let mut cur = Cursor::new(Vec::new());
-    {
-        let mut zip = zip::ZipWriter::new(&mut cur);
-        let opts = zip::write::FileOptions::default()
-            .compression_method(zip::CompressionMethod::Stored);
-        for (name, (shape, data)) in arrays {
-            zip.start_file(format!("{name}.npy"), opts)?;
-            zip.write_all(&write_npy_f32(shape, data))?;
-        }
-        zip.finish()?;
-    }
-    Ok(cur.into_inner())
+    let entries: Vec<super::zipstore::Entry> = arrays
+        .iter()
+        .map(|(name, (shape, data))| super::zipstore::Entry {
+            name: format!("{name}.npy"),
+            data: write_npy_f32(shape, data),
+        })
+        .collect();
+    Ok(super::zipstore::write_archive(&entries))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
 
     #[test]
     fn npy_roundtrip_2d() {
@@ -274,11 +262,15 @@ mod tests {
     }
 
     #[test]
-    fn reads_python_golden_npz_if_built() {
+    fn reads_python_golden_npz() {
+        // the committed fixture (rust/artifacts/golden) — regenerate with
+        // `python3 python/tests/make_golden.py rust/artifacts/golden`
         let path = std::path::Path::new("artifacts/golden/small.npz");
-        if !path.exists() {
-            return; // `make artifacts` not run yet
-        }
+        assert!(
+            path.exists(),
+            "committed golden fixture missing: {path:?} (cwd {:?})",
+            std::env::current_dir().ok()
+        );
         let m = read_npz(path).unwrap();
         assert_eq!(m["nx"].scalar().unwrap(), 5.0);
         assert_eq!(m["u"].shape, vec![12, 2]);

@@ -1,0 +1,250 @@
+//! Minimal zip container for npz files — stored (method 0) entries only.
+//!
+//! The crate's only npz producers/consumers are `numpy.savez` (which
+//! writes STORED entries — `np.savez_compressed` is the deflated
+//! variant) and our own golden/test fixtures, so a dependency-free
+//! subset of the zip format suffices: the reader walks the end-of-
+//! central-directory record and the central directory (the local
+//! headers are consulted only for their variable-length name/extra
+//! fields, because `zipfile` with `force_zip64` pads local headers with
+//! a zip64 extra that the central directory does not carry), verifies
+//! CRC-32, and rejects any compression method other than stored with a
+//! pointed error. The writer emits local headers with exact sizes (no
+//! data descriptors, no zip64 — fixtures are far below 4 GiB), a
+//! central directory and the EOCD, which CPython's `zipfile`/numpy read
+//! back verbatim.
+
+use anyhow::{bail, Context, Result};
+
+/// One stored entry.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+const LOCAL_SIG: u32 = 0x0403_4b50;
+const CENTRAL_SIG: u32 = 0x0201_4b50;
+const EOCD_SIG: u32 = 0x0605_4b50;
+
+#[inline]
+fn u16le(b: &[u8], at: usize) -> usize {
+    u16::from_le_bytes([b[at], b[at + 1]]) as usize
+}
+
+#[inline]
+fn u32le(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Parse a zip archive held in memory into its stored entries.
+pub fn read_archive(buf: &[u8]) -> Result<Vec<Entry>> {
+    // EOCD: fixed 22 bytes + trailing comment; scan backwards for the
+    // signature (the comment, if any, is at most 64 KiB).
+    if buf.len() < 22 {
+        bail!("zip too short ({} bytes)", buf.len());
+    }
+    let floor = buf.len().saturating_sub(22 + u16::MAX as usize);
+    let mut eocd = None;
+    let mut at = buf.len() - 22;
+    loop {
+        if u32le(buf, at) == EOCD_SIG {
+            eocd = Some(at);
+            break;
+        }
+        if at == floor {
+            break;
+        }
+        at -= 1;
+    }
+    let eocd = eocd.context("zip: end-of-central-directory record not found")?;
+    let entries = u16le(buf, eocd + 10);
+    let cd_off = u32le(buf, eocd + 16) as usize;
+    if cd_off > buf.len() {
+        bail!("zip: central directory offset {cd_off} out of range");
+    }
+
+    let mut out = Vec::with_capacity(entries);
+    let mut cd = cd_off;
+    for _ in 0..entries {
+        if cd + 46 > buf.len() || u32le(buf, cd) != CENTRAL_SIG {
+            bail!("zip: bad central-directory entry at {cd}");
+        }
+        let method = u16le(buf, cd + 10);
+        let crc = u32le(buf, cd + 16);
+        let csize = u32le(buf, cd + 20) as usize;
+        let usize_ = u32le(buf, cd + 24) as usize;
+        let name_len = u16le(buf, cd + 28);
+        let extra_len = u16le(buf, cd + 30);
+        let comment_len = u16le(buf, cd + 32);
+        let local_off = u32le(buf, cd + 42) as usize;
+        if cd + 46 + name_len > buf.len() {
+            bail!("zip: central-directory name truncated at {cd}");
+        }
+        let name = std::str::from_utf8(&buf[cd + 46..cd + 46 + name_len])
+            .context("zip: entry name not utf-8")?
+            .to_string();
+        if method != 0 {
+            bail!(
+                "zip entry {name:?} uses compression method {method}; only stored \
+                 (method 0) npz is supported — re-save with np.savez, not \
+                 np.savez_compressed"
+            );
+        }
+        if csize != usize_ {
+            bail!("zip entry {name:?}: stored sizes disagree ({csize} vs {usize_})");
+        }
+        // local header: skip its own (possibly zip64-padded) name+extra
+        if local_off + 30 > buf.len() || u32le(buf, local_off) != LOCAL_SIG {
+            bail!("zip entry {name:?}: bad local header at {local_off}");
+        }
+        let l_name = u16le(buf, local_off + 26);
+        let l_extra = u16le(buf, local_off + 28);
+        let data_at = local_off + 30 + l_name + l_extra;
+        if data_at + csize > buf.len() {
+            bail!("zip entry {name:?}: payload truncated");
+        }
+        let data = buf[data_at..data_at + csize].to_vec();
+        if crc32(&data) != crc {
+            bail!("zip entry {name:?}: CRC-32 mismatch (corrupt archive)");
+        }
+        out.push(Entry { name, data });
+        cd += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+/// Serialize entries as a stored zip archive (what `zipfile` reads back).
+pub fn write_archive(entries: &[Entry]) -> Vec<u8> {
+    let payload: usize = entries.iter().map(|e| 30 + e.name.len() + e.data.len()).sum();
+    let central: usize = entries.iter().map(|e| 46 + e.name.len()).sum();
+    let mut buf = Vec::with_capacity(payload + central + 22);
+    let mut offsets = Vec::with_capacity(entries.len());
+    for e in entries {
+        offsets.push(buf.len() as u32);
+        let crc = crc32(&e.data);
+        buf.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        buf.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        buf.extend_from_slice(&0u16.to_le_bytes()); // flags
+        buf.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        buf.extend_from_slice(&0u32.to_le_bytes()); // mod time+date
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&(e.data.len() as u32).to_le_bytes()); // csize
+        buf.extend_from_slice(&(e.data.len() as u32).to_le_bytes()); // usize
+        buf.extend_from_slice(&(e.name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        buf.extend_from_slice(e.name.as_bytes());
+        buf.extend_from_slice(&e.data);
+    }
+    let cd_off = buf.len() as u32;
+    for (e, off) in entries.iter().zip(&offsets) {
+        let crc = crc32(&e.data);
+        buf.extend_from_slice(&CENTRAL_SIG.to_le_bytes());
+        buf.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        buf.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        buf.extend_from_slice(&0u16.to_le_bytes()); // flags
+        buf.extend_from_slice(&0u16.to_le_bytes()); // method
+        buf.extend_from_slice(&0u32.to_le_bytes()); // mod time+date
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&(e.data.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(e.data.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(e.name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes()); // extra
+        buf.extend_from_slice(&0u16.to_le_bytes()); // comment
+        buf.extend_from_slice(&0u16.to_le_bytes()); // disk
+        buf.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        buf.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        buf.extend_from_slice(&off.to_le_bytes());
+        buf.extend_from_slice(e.name.as_bytes());
+    }
+    let cd_size = buf.len() as u32 - cd_off;
+    buf.extend_from_slice(&EOCD_SIG.to_le_bytes());
+    buf.extend_from_slice(&0u16.to_le_bytes()); // this disk
+    buf.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+    buf.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+    buf.extend_from_slice(&cd_size.to_le_bytes());
+    buf.extend_from_slice(&cd_off.to_le_bytes());
+    buf.extend_from_slice(&0u16.to_le_bytes()); // comment len
+    buf
+}
+
+/// CRC-32 (IEEE 802.3, the zip polynomial), bytewise with a lazily-built
+/// 256-entry table — fixture-sized archives don't justify slicing-by-8.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard test vectors for the IEEE polynomial
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn roundtrip_multiple_entries() {
+        let entries = vec![
+            Entry { name: "a.npy".into(), data: vec![1, 2, 3, 4, 5] },
+            Entry { name: "b.npy".into(), data: vec![] },
+            Entry { name: "dir/c.npy".into(), data: (0..=255).collect() },
+        ];
+        let buf = write_archive(&entries);
+        let back = read_archive(&buf).unwrap();
+        assert_eq!(back.len(), 3);
+        for (e, b) in entries.iter().zip(&back) {
+            assert_eq!(e.name, b.name);
+            assert_eq!(e.data, b.data);
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let entries = vec![Entry { name: "x".into(), data: vec![9; 64] }];
+        let mut buf = write_archive(&entries);
+        // flip a payload byte (local header is 30 bytes + 1-byte name)
+        buf[31 + 7] ^= 0x40;
+        let err = read_archive(&buf).unwrap_err().to_string();
+        assert!(err.contains("CRC-32"), "{err}");
+    }
+
+    #[test]
+    fn rejects_deflate_method() {
+        let entries = vec![Entry { name: "x".into(), data: vec![1, 2, 3] }];
+        let mut buf = write_archive(&entries);
+        // patch method field in both local header (offset 8) and the
+        // central directory entry (offset 10 within the CD record)
+        buf[8] = 8;
+        let cd = 30 + 1 + 3; // one local header + name + data
+        buf[cd + 10] = 8;
+        let err = read_archive(&buf).unwrap_err().to_string();
+        assert!(err.contains("method 8"), "{err}");
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(read_archive(b"PK").is_err());
+        assert!(read_archive(&[0u8; 64]).is_err());
+    }
+}

@@ -17,7 +17,9 @@ use super::backprop::{cross_entropy, truncated_grads_ref, OutputLayer};
 use super::mask::Mask;
 use super::reservoir::{Forward, ForwardScratch, Nonlinearity, Reservoir};
 use crate::data::dataset::{accuracy, Dataset, Sample};
-use crate::linalg::ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution, PAPER_BETAS};
+use crate::linalg::ridge::{
+    OnlineRidge, OnlineRidgeConfig, RidgeAccumulator, RidgeMethod, RidgeSolution, PAPER_BETAS,
+};
 use crate::util::prng::Pcg32;
 
 /// Hyper-protocol of §4.1 (all defaults are the paper's).
@@ -54,6 +56,23 @@ pub struct TrainConfig {
     /// the caller is already parallel (e.g. inside a grid-search sweep)
     /// to avoid oversubscription.
     pub threads: usize,
+    /// Serve-phase streaming ridge: exponential forgetting factor
+    /// λ ∈ (0, 1) for the incremental output-layer updates. `None`
+    /// keeps every sample at full weight. Enabling either this or
+    /// [`window`](Self::window) switches the session's Serve phase from
+    /// buffer-and-retrain to per-sample O(s²) rank-1 Cholesky updates
+    /// (`linalg::OnlineRidge`).
+    pub forgetting: Option<f32>,
+    /// Serve-phase streaming ridge: sliding window — each labelled
+    /// sample past this count downdates the oldest one back out of the
+    /// factor. Takes precedence over [`forgetting`](Self::forgetting)
+    /// when both are set (the two are mutually exclusive in the
+    /// accumulator).
+    pub window: Option<usize>,
+    /// drift bound for the incremental factor: fully re-factorize from
+    /// the exact Gram shadow every K updates (0 = only when a downdate
+    /// loses positive definiteness).
+    pub refactor_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -79,6 +98,9 @@ impl Default for TrainConfig {
             grad_clip: Some(1.0),
             project_to_search_range: true,
             threads: 1,
+            forgetting: None,
+            window: None,
+            refactor_every: 64,
         }
     }
 }
@@ -294,6 +316,57 @@ pub fn ridge_phase_from_features(
     sel
 }
 
+/// Seed the Serve-phase streaming accumulator from the batch-training
+/// features, at the β the batch sweep selected. Returns `None` unless
+/// the config enables streaming (`forgetting` or `window`).
+///
+/// Window mode folds only the **last** `window` training samples, so
+/// the maintained system slides cleanly over the subsequent labelled
+/// stream (older training samples are gone, not merely unevictable);
+/// λ mode folds every sample in arrival order, giving the training set
+/// the same geometric down-weighting it would have received live. The
+/// first streamed update therefore re-solves against this seeded system
+/// rather than the batch hold-out fit — a deliberate, documented
+/// handoff discontinuity (DESIGN.md §11).
+pub fn online_ridge_from_features(
+    feats: &[(Vec<f32>, usize)],
+    n_c: usize,
+    cfg: &TrainConfig,
+    beta: f32,
+) -> Option<OnlineRidge> {
+    // Some(0) would trip the accumulator's `window ≥ 1` assert on a
+    // shard thread; treat it as "no window" like the other clamps below
+    let window = cfg.window.filter(|&w| w > 0);
+    if cfg.forgetting.is_none() && window.is_none() {
+        return None;
+    }
+    let s = feats.first().map(|(r, _)| r.len())?;
+    let lambda = if window.is_some() {
+        1.0 // window takes precedence; the accumulator forbids both
+    } else {
+        // the accumulator asserts λ ∈ (0, 1]; clamp misconfigurations
+        // rather than panic a shard thread
+        cfg.forgetting.unwrap_or(1.0).clamp(1e-6, 1.0)
+    };
+    let mut online = OnlineRidge::new(
+        s,
+        n_c,
+        OnlineRidgeConfig {
+            // βI seeds the factor, so it must be strictly positive
+            beta: beta.max(1e-6),
+            lambda,
+            window,
+            refactor_every: cfg.refactor_every,
+        },
+    );
+    let start = window.map_or(0, |w| feats.len().saturating_sub(w));
+    for (r, label) in &feats[start..] {
+        online.fold(r, *label);
+    }
+    online.solve_now();
+    Some(online)
+}
+
 /// Gram-block size for the streamed accumulation: 32 feature vectors of
 /// s = 931 floats stage ~119 KB (fits L2) while the packed triangle is
 /// swept once per block instead of once per sample (DESIGN.md §9).
@@ -445,5 +518,53 @@ mod tests {
         assert_eq!(a.reservoir.p, b.reservoir.p);
         assert_eq!(a.reservoir.q, b.reservoir.q);
         assert_eq!(a.epoch_losses, b.epoch_losses);
+    }
+
+    #[test]
+    fn online_seeding_respects_config() {
+        use crate::util::prng::Pcg32;
+        let mut rng = Pcg32::seed(77);
+        let s = 7;
+        let n_c = 2;
+        let feats: Vec<(Vec<f32>, usize)> = (0..12)
+            .map(|i| ((0..s).map(|_| rng.normal()).collect(), i % n_c))
+            .collect();
+
+        // streaming disabled → no accumulator
+        let cfg = small_cfg();
+        assert!(online_ridge_from_features(&feats, n_c, &cfg, 0.1).is_none());
+
+        // window mode folds only the tail `window` samples
+        let cfg = TrainConfig {
+            window: Some(5),
+            ..small_cfg()
+        };
+        let online = online_ridge_from_features(&feats, n_c, &cfg, 0.1).unwrap();
+        assert_eq!(online.updates(), 5);
+        assert_eq!(online.window_len(), 5);
+
+        // λ mode folds everything
+        let cfg = TrainConfig {
+            forgetting: Some(0.95),
+            ..small_cfg()
+        };
+        let online = online_ridge_from_features(&feats, n_c, &cfg, 0.1).unwrap();
+        assert_eq!(online.updates(), 12);
+
+        // both set → window wins (no panic from the exclusivity assert)
+        let cfg = TrainConfig {
+            forgetting: Some(0.9),
+            window: Some(4),
+            ..small_cfg()
+        };
+        let online = online_ridge_from_features(&feats, n_c, &cfg, 0.1).unwrap();
+        assert_eq!(online.window_len(), 4);
+
+        // empty features → None rather than a panic
+        let cfg = TrainConfig {
+            window: Some(4),
+            ..small_cfg()
+        };
+        assert!(online_ridge_from_features(&[], n_c, &cfg, 0.1).is_none());
     }
 }

@@ -1,0 +1,267 @@
+//! Rank-1 Cholesky **update** and **downdate** over the packed 1-D
+//! triangle — the streaming-online extension of Algorithm 2.
+//!
+//! Given `C` with `B = C Cᵀ` stored exactly as [`super::cholesky1d`]
+//! leaves it (lower triangle packed row-sequentially, Eq. 41), these
+//! routines produce in place the factor of `B ± x xᵀ` in O(s²)
+//! operations — against O(s³/6) for re-running the decomposition. The
+//! update sweeps a Givens rotation per column; the downdate sweeps the
+//! *hyperbolic* counterpart (same recurrence with the sign of `x[k]²`
+//! flipped), which is the numerically delicate one: when `B − x xᵀ`
+//! grazes the positive-definite boundary the pivot `C[k][k]² − x[k]²`
+//! goes non-positive and the routine reports [`DowndateError`] instead
+//! of emitting a poisoned factor. Callers (see `ridge::OnlineRidge`)
+//! respond by re-factorizing from their exact Gram shadow.
+//!
+//! Both routines destroy the caller's `x` (it carries the rotated
+//! residual between columns), which is what makes them allocation-free:
+//! the only state is `P` and `x` itself.
+//!
+//! The column walk over the packed layout is strided — element `(i, k)`
+//! lives at `i(i+1)/2 + k`, so consecutive column entries are `i + 1`
+//! apart. The stride grows row by row, but every iteration still
+//! touches each triangle word exactly once, so the O(s²) bound is also
+//! the memory-traffic bound.
+
+use super::counters::Ops;
+use super::tri;
+
+/// Downdate left the matrix indefinite: `B − x xᵀ` has no real Cholesky
+/// factor (or sits too close to the boundary for f32). The packed
+/// factor is left partially rotated and must be restored by the caller
+/// (refactor from the Gram, or discard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DowndateError {
+    /// column at which the pivot went non-positive
+    pub column: usize,
+}
+
+impl std::fmt::Display for DowndateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rank-1 downdate lost positive definiteness at column {}",
+            self.column
+        )
+    }
+}
+
+impl std::error::Error for DowndateError {}
+
+/// Rank-1 **update**: replace the packed factor `C` of `B` with the
+/// factor of `B + x xᵀ`. `x` is destroyed (used as the rotation
+/// residual). O(s²) mul/add, `s` div/sqrt.
+pub fn chol_update_1d<O: Ops>(p: &mut [f32], s: usize, x: &mut [f32], ops: &mut O) {
+    debug_assert_eq!(p.len(), s * (s + 1) / 2);
+    debug_assert_eq!(x.len(), s);
+    for k in 0..s {
+        let dk = tri(k, k);
+        let ckk = p[dk];
+        let xk = x[k];
+        // Givens: r = √(C[k][k]² + x[k]²), c = r/C[k][k], s = x[k]/C[k][k]
+        let r = (ckk * ckk + xk * xk).sqrt();
+        let c = r / ckk;
+        let inv_c = ckk / r; // 1/c — multiply instead of dividing per row
+        let sn = xk / ckk;
+        p[dk] = r;
+        ops.mul(2);
+        ops.add(1);
+        ops.sqrt(1);
+        ops.div(3);
+        // column k below the diagonal: stride i+1 in the packed layout
+        let mut idx = tri(k + 1, k);
+        for i in k + 1..s {
+            let lik = (p[idx] + sn * x[i]) * inv_c;
+            p[idx] = lik;
+            // rotated residual reads the NEW C[i][k]
+            x[i] = c * x[i] - sn * lik;
+            idx += i + 1;
+        }
+        // per inner iteration: sn·x, ·inv_c, c·x, sn·lik = 4 muls, 2 adds
+        ops.mul(4 * (s - k - 1) as u64);
+        ops.add(2 * (s - k - 1) as u64);
+    }
+}
+
+/// Rank-1 **downdate**: replace the packed factor `C` of `B` with the
+/// factor of `B − x xᵀ`, via hyperbolic rotations. `x` is destroyed.
+///
+/// Errors when a pivot `C[k][k]² − x[k]²` is not comfortably positive —
+/// the caller must then re-factorize (the triangle's columns `0..k` have
+/// already been rotated). The guard uses a relative margin rather than
+/// `> 0.0`: an f32 pivot that survives at `1e-12·C[k][k]²` produces a
+/// factor whose forward error is unbounded, which is worse than the
+/// honest refusal.
+pub fn chol_downdate_1d<O: Ops>(
+    p: &mut [f32],
+    s: usize,
+    x: &mut [f32],
+    ops: &mut O,
+) -> Result<(), DowndateError> {
+    debug_assert_eq!(p.len(), s * (s + 1) / 2);
+    debug_assert_eq!(x.len(), s);
+    // minimum surviving fraction of the squared pivot (f32: ~2⁻¹² of the
+    // original magnitude keeps ~half the mantissa in the new pivot)
+    const PIVOT_FLOOR: f32 = 2.44e-4;
+    for k in 0..s {
+        let dk = tri(k, k);
+        let ckk = p[dk];
+        let xk = x[k];
+        let d = ckk * ckk - xk * xk;
+        ops.mul(2);
+        ops.add(1);
+        if !(d > PIVOT_FLOOR * ckk * ckk) {
+            return Err(DowndateError { column: k });
+        }
+        let r = d.sqrt();
+        let c = r / ckk;
+        let inv_c = ckk / r;
+        let sn = xk / ckk;
+        p[dk] = r;
+        ops.sqrt(1);
+        ops.div(3);
+        let mut idx = tri(k + 1, k);
+        for i in k + 1..s {
+            let lik = (p[idx] - sn * x[i]) * inv_c;
+            p[idx] = lik;
+            x[i] = c * x[i] - sn * lik;
+            idx += i + 1;
+        }
+        // same 4-mul/2-add inner kernel as the update
+        ops.mul(4 * (s - k - 1) as u64);
+        ops.add(2 * (s - k - 1) as u64);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::counters::{NoCount, OpCount};
+    use super::super::{cholesky1d::cholesky_1d, pack_lower, tri, tri_len};
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn random_spd_packed(s: usize, beta: f32, rng: &mut Pcg32) -> Vec<f32> {
+        let g: Vec<f32> = (0..s * s).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                let mut acc = 0.0;
+                for k in 0..s {
+                    acc += g[i * s + k] * g[j * s + k];
+                }
+                b[i * s + j] = acc / s as f32 + if i == j { beta } else { 0.0 };
+            }
+        }
+        pack_lower(&b, s)
+    }
+
+    /// C Cᵀ on the packed factor, densified lower triangle.
+    fn reconstruct(p: &[f32], s: usize) -> Vec<f32> {
+        let mut b = vec![0.0f32; s * s];
+        for i in 0..s {
+            for j in 0..=i {
+                let mut acc = 0.0f32;
+                for k in 0..=j {
+                    acc += p[tri(i, k)] * p[tri(j, k)];
+                }
+                b[i * s + j] = acc;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn update_matches_refactorization() {
+        let mut rng = Pcg32::seed(61);
+        // sizes straddling the dot-kernel quad boundary
+        for s in [1usize, 2, 3, 5, 8, 13] {
+            let b0 = random_spd_packed(s, 0.4, &mut rng);
+            let mut factor = b0.clone();
+            cholesky_1d(&mut factor, s, &mut NoCount);
+            let mut b_exact = b0;
+            for round in 0..4 {
+                let x: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+                for i in 0..s {
+                    for j in 0..=i {
+                        b_exact[tri(i, j)] += x[i] * x[j];
+                    }
+                }
+                let mut xr = x;
+                chol_update_1d(&mut factor, s, &mut xr, &mut NoCount);
+                let got = reconstruct(&factor, s);
+                for i in 0..s {
+                    for j in 0..=i {
+                        let want = b_exact[tri(i, j)];
+                        let g = got[i * s + j];
+                        assert!(
+                            (g - want).abs() < 5e-4 * want.abs().max(1.0),
+                            "s={s} round={round} ({i},{j}): {g} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_inverts_update() {
+        let mut rng = Pcg32::seed(62);
+        for s in [1usize, 4, 7, 11] {
+            let b0 = random_spd_packed(s, 1.0, &mut rng);
+            let mut factor = b0.clone();
+            cholesky_1d(&mut factor, s, &mut NoCount);
+            let reference = factor.clone();
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..s).map(|_| rng.normal()).collect())
+                .collect();
+            for x in &xs {
+                let mut xr = x.clone();
+                chol_update_1d(&mut factor, s, &mut xr, &mut NoCount);
+            }
+            for x in xs.iter().rev() {
+                let mut xr = x.clone();
+                chol_downdate_1d(&mut factor, s, &mut xr, &mut NoCount).unwrap();
+            }
+            for (i, (a, b)) in factor.iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                    "s={s} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_of_foreign_vector_errors() {
+        let mut rng = Pcg32::seed(63);
+        let s = 6;
+        // B = 0.01 I: subtracting any O(1) x xᵀ leaves it indefinite
+        let mut factor = vec![0.0f32; tri_len(s)];
+        for i in 0..s {
+            factor[tri(i, i)] = 0.1; // C = 0.1 I → B = 0.01 I
+        }
+        let mut x: Vec<f32> = (0..s).map(|_| 1.0 + rng.uniform()).collect();
+        let err = chol_downdate_1d(&mut factor, s, &mut x, &mut NoCount).unwrap_err();
+        assert_eq!(err.column, 0);
+        assert!(err.to_string().contains("positive definiteness"));
+    }
+
+    #[test]
+    fn update_is_quadratic_not_cubic() {
+        // op counts: the whole point is O(s²) per rank-1 fold
+        let mut rng = Pcg32::seed(64);
+        let s = 24;
+        let mut factor = random_spd_packed(s, 0.5, &mut rng);
+        cholesky_1d(&mut factor, s, &mut NoCount);
+        let mut x: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+        let mut ops = OpCount::default();
+        chol_update_1d(&mut factor, s, &mut x, &mut ops);
+        let su = s as u64;
+        // ≤ c·s² with a small constant, and ≫ below the s³/6 refactor
+        assert!(ops.mul <= 3 * su * su, "mul {}", ops.mul);
+        assert!(ops.sqrt == su);
+        let refactor = super::super::counters::ops_proposed(su, 1);
+        assert!(ops.total() * 2 < refactor.total(), "{} vs {}", ops.total(), refactor.total());
+    }
+}

@@ -11,17 +11,26 @@
 //! read-modify-write recurrence for HLS pipelining ([`buffered`],
 //! Algorithm 5 / Fig. 10).
 //!
+//! Beyond the paper: [`cholupdate`] advances the packed factor by
+//! rank-1 updates/downdates in O(s²), and [`ridge::OnlineRidge`] builds
+//! on it to keep a **solved** output layer current sample-by-sample —
+//! the streaming Serve-phase path (DESIGN.md §11).
+//!
 //! All routines are f32 (the FPGA word) and are generic over an [`Ops`]
 //! counter so the same code path yields Table 3's operation counts.
 
 pub mod buffered;
 pub mod cholesky1d;
+pub mod cholupdate;
 pub mod counters;
 pub mod gaussian;
 pub mod ridge;
 
+pub use cholupdate::{chol_downdate_1d, chol_update_1d, DowndateError};
 pub use counters::{NoCount, OpCount, Ops};
-pub use ridge::{RidgeAccumulator, RidgeMethod, RidgeSolution, SolveWorkspace};
+pub use ridge::{
+    OnlineRidge, OnlineRidgeConfig, RidgeAccumulator, RidgeMethod, RidgeSolution, SolveWorkspace,
+};
 
 /// Index into the packed lower-triangular 1-D array: element (i, j), i ≥ j,
 /// lives at `P[i(i+1)/2 + j]` (paper Eq. 41).

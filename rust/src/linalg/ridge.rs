@@ -8,7 +8,8 @@
 //! proposed Cholesky pipeline or the Gaussian baseline.
 
 use super::buffered::ridge_cholesky_buffered;
-use super::cholesky1d::ridge_cholesky_1d;
+use super::cholesky1d::{cholesky_1d, ridge_cholesky_1d, solve_c_inplace, solve_ct_inplace};
+use super::cholupdate::{chol_downdate_1d, chol_update_1d};
 use super::counters::{NoCount, Ops};
 use super::gaussian::{ridge_gaussian, GaussianWorkspace};
 use super::{tri, tri_len, unpack_symmetric};
@@ -283,16 +284,305 @@ impl SolveWorkspace {
     }
 }
 
-/// `P += r rᵀ` on the packed lower triangle — the ridge hot loop
-/// (s(s+1)/2 MACs per sample). Row-wise to stay cache-friendly.
-#[inline]
-pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
+// ---------------------------------------------------------------------------
+// streaming online ridge
+// ---------------------------------------------------------------------------
+
+/// Knobs of the [`OnlineRidge`] streaming accumulator.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineRidgeConfig {
+    /// ridge shift β, baked into the maintained system at construction
+    /// (`B = βI` before the first fold)
+    pub beta: f32,
+    /// exponential forgetting factor λ ∈ (0, 1]; every fold first scales
+    /// `B ← λB`, `A ← λA` (so the βI term decays too, as in classic
+    /// RLS). 1.0 disables decay. Mutually exclusive with `window`.
+    pub lambda: f32,
+    /// sliding window: once this many samples are held, each fold first
+    /// **downdates** the oldest sample out of the factor (and subtracts
+    /// it exactly from the Gram shadow). `None` = grow forever.
+    pub window: Option<usize>,
+    /// drift bound: fully re-factorize the Cholesky factor from the
+    /// exact Gram shadow every K folds (0 = only on downdate failure).
+    pub refactor_every: usize,
+}
+
+impl Default for OnlineRidgeConfig {
+    fn default() -> Self {
+        OnlineRidgeConfig {
+            beta: 1e-2,
+            lambda: 1.0,
+            window: None,
+            refactor_every: 64,
+        }
+    }
+}
+
+/// What one [`OnlineRidge::observe`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObserveStats {
+    /// total samples folded in over the accumulator's lifetime
+    pub updates: u64,
+    /// samples currently inside the maintained system (ring occupancy in
+    /// window mode; total folds otherwise)
+    pub window_len: usize,
+    /// whether this fold triggered a full re-factorization (periodic
+    /// cadence or downdate failure)
+    pub refactored: bool,
+}
+
+/// Streaming online ridge: maintains the **solved** output layer under a
+/// per-sample cost of O(s²) — against the O(N·s²/2 + s³/6) of
+/// re-accumulating and re-factorizing from scratch.
+///
+/// State (all fixed-size, allocated once in [`new`](Self::new); the
+/// steady-state [`observe`](Self::observe) performs **zero heap
+/// allocations** — asserted in `tests/zero_alloc.rs`):
+///
+/// * `chol` — packed Cholesky factor of `M = B + βI` (same 1-D layout as
+///   `cholesky1d`), advanced by rank-1 [`chol_update_1d`] /
+///   [`chol_downdate_1d`] rotations;
+/// * `b` — the exact Gram **shadow** of the same `M`, advanced by plain
+///   rank-1 adds/subtracts. The factor's float drift is bounded by
+///   re-factorizing from this shadow every `refactor_every` folds, and
+///   it doubles as the recovery source when a downdate reports loss of
+///   positive definiteness;
+/// * `a` — the right-hand side `A = Σ e r̃ᵀ` (one-hot targets → row add);
+/// * `w` — the current `W̃_out`, re-solved in place (Algorithms 3–4,
+///   O(N_y·s²)) after each fold;
+/// * the sample ring (window mode only) holding the raw `r̃` vectors
+///   that will eventually be downdated back out.
+pub struct OnlineRidge {
+    s: usize,
+    ny: usize,
+    cfg: OnlineRidgeConfig,
+    /// packed factor C with C Cᵀ = B + (decayed) βI
+    chol: Vec<f32>,
+    /// exact Gram shadow of the same matrix
+    b: Vec<f32>,
+    /// A, row-major ny×s
+    a: Vec<f32>,
+    /// solved W̃_out, row-major ny×s
+    w: Vec<f32>,
+    /// rotation scratch (destroyed by update/downdate)
+    x: Vec<f32>,
+    /// flat ring of window samples (window mode), window·s words
+    ring: Vec<f32>,
+    ring_labels: Vec<usize>,
+    ring_head: usize,
+    ring_len: usize,
+    updates: u64,
+    since_refactor: usize,
+    refactors: u64,
+}
+
+impl OnlineRidge {
+    pub fn new(s: usize, ny: usize, cfg: OnlineRidgeConfig) -> Self {
+        assert!(s > 0 && ny > 0, "degenerate system {s}x{ny}");
+        assert!(cfg.beta > 0.0, "online ridge needs β > 0 (factor of βI seeds the state)");
+        assert!(
+            cfg.lambda > 0.0 && cfg.lambda <= 1.0,
+            "forgetting factor λ must be in (0, 1], got {}",
+            cfg.lambda
+        );
+        assert!(
+            cfg.window.is_none() || cfg.lambda == 1.0,
+            "sliding window and λ-forgetting are mutually exclusive (an evicted \
+             sample would need its decayed weight tracked to downdate exactly)"
+        );
+        let window = cfg.window.unwrap_or(0);
+        assert!(cfg.window.is_none() || window > 0, "window must be ≥ 1");
+        let mut chol = vec![0.0f32; tri_len(s)];
+        let mut b = vec![0.0f32; tri_len(s)];
+        for i in 0..s {
+            b[tri(i, i)] = cfg.beta;
+            chol[tri(i, i)] = cfg.beta.sqrt();
+        }
+        OnlineRidge {
+            s,
+            ny,
+            cfg,
+            chol,
+            b,
+            a: vec![0.0; ny * s],
+            w: vec![0.0; ny * s],
+            x: vec![0.0; s],
+            ring: vec![0.0; window * s],
+            ring_labels: vec![0; window],
+            ring_head: 0,
+            ring_len: 0,
+            updates: 0,
+            since_refactor: 0,
+            refactors: 0,
+        }
+    }
+
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.cfg.beta
+    }
+
+    /// Total samples folded in.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Samples currently inside the maintained system (see
+    /// [`ObserveStats::window_len`]).
+    pub fn window_len(&self) -> usize {
+        if self.cfg.window.is_some() {
+            self.ring_len
+        } else {
+            self.updates as usize
+        }
+    }
+
+    /// Full re-factorizations performed (periodic + recovery).
+    pub fn refactors(&self) -> u64 {
+        self.refactors
+    }
+
+    /// The current solution W̃_out (row-major ny×s) — valid after
+    /// [`observe`](Self::observe) or [`solve_now`](Self::solve_now).
+    pub fn w_tilde(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// argmax of `W̃_out r̃` under the current solution (no allocation,
+    /// no softmax — monotone-equivalent for classification).
+    pub fn predict_class(&self, r_tilde: &[f32]) -> usize {
+        assert_eq!(r_tilde.len(), self.s);
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for i in 0..self.ny {
+            let row = &self.w[i * self.s..(i + 1) * self.s];
+            let score: f32 = row.iter().zip(r_tilde).map(|(w, r)| w * r).sum();
+            if score > best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        best
+    }
+
+    /// Fold one labelled sample **without** re-solving — the seeding
+    /// path (batch → online handoff folds N samples, then solves once).
+    /// Returns whether a full re-factorization happened.
+    pub fn fold(&mut self, r_tilde: &[f32], class: usize) -> bool {
+        assert_eq!(r_tilde.len(), self.s);
+        assert!(class < self.ny);
+        let mut refactored = false;
+
+        // 1. evict the sample sliding out of the window: subtract it
+        //    exactly from the shadow + RHS, hyperbolically rotate it out
+        //    of the factor (recover from the shadow if that degenerates)
+        if let Some(cap) = self.cfg.window {
+            if self.ring_len == cap {
+                let slot = self.ring_head;
+                let old_class = self.ring_labels[slot];
+                self.x.copy_from_slice(&self.ring[slot * self.s..(slot + 1) * self.s]);
+                rank1_sub_packed(&mut self.b, &self.x);
+                let row = &mut self.a[old_class * self.s..(old_class + 1) * self.s];
+                for (a, r) in row.iter_mut().zip(&self.x) {
+                    *a -= r;
+                }
+                self.ring_len -= 1;
+                self.ring_head = (self.ring_head + 1) % cap;
+                if chol_downdate_1d(&mut self.chol, self.s, &mut self.x, &mut NoCount).is_err() {
+                    // the shadow already has the eviction applied
+                    // exactly — rebuild the factor from it
+                    self.refactor();
+                    refactored = true;
+                }
+            }
+        }
+
+        // 2. exponential forgetting: B ← λB (factor scales by √λ)
+        if self.cfg.lambda < 1.0 {
+            let sqrt_l = self.cfg.lambda.sqrt();
+            for c in self.chol.iter_mut() {
+                *c *= sqrt_l;
+            }
+            for b in self.b.iter_mut() {
+                *b *= self.cfg.lambda;
+            }
+            for a in self.a.iter_mut() {
+                *a *= self.cfg.lambda;
+            }
+        }
+
+        // 3. fold the new sample into shadow, RHS, ring, and factor
+        rank1_update_packed(&mut self.b, r_tilde);
+        let row = &mut self.a[class * self.s..(class + 1) * self.s];
+        for (a, r) in row.iter_mut().zip(r_tilde) {
+            *a += r;
+        }
+        if let Some(cap) = self.cfg.window {
+            let slot = (self.ring_head + self.ring_len) % cap;
+            self.ring[slot * self.s..(slot + 1) * self.s].copy_from_slice(r_tilde);
+            self.ring_labels[slot] = class;
+            self.ring_len += 1;
+        }
+        self.x.copy_from_slice(r_tilde);
+        chol_update_1d(&mut self.chol, self.s, &mut self.x, &mut NoCount);
+        self.updates += 1;
+        self.since_refactor += 1;
+
+        // 4. drift bound: periodic refactor from the exact shadow
+        if self.cfg.refactor_every > 0 && self.since_refactor >= self.cfg.refactor_every {
+            self.refactor();
+            refactored = true;
+        }
+        refactored
+    }
+
+    /// Re-solve W̃_out from the current factor and RHS (Algorithms 3–4
+    /// in place over the `w` buffer, O(N_y·s²), no allocation).
+    pub fn solve_now(&mut self) {
+        self.w.copy_from_slice(&self.a);
+        solve_ct_inplace(&mut self.w, &self.chol, self.s, self.ny, &mut NoCount);
+        solve_c_inplace(&mut self.w, &self.chol, self.s, self.ny, &mut NoCount);
+    }
+
+    /// The Serve-phase hot path: fold one labelled sample and refresh
+    /// the solved output layer. O(s²) + O(N_y·s²), zero allocations.
+    pub fn observe(&mut self, r_tilde: &[f32], class: usize) -> ObserveStats {
+        let refactored = self.fold(r_tilde, class);
+        self.solve_now();
+        ObserveStats {
+            updates: self.updates,
+            window_len: self.window_len(),
+            refactored,
+        }
+    }
+
+    /// Rebuild the factor from the exact Gram shadow (O(s³/6)).
+    fn refactor(&mut self) {
+        self.chol.copy_from_slice(&self.b);
+        cholesky_1d(&mut self.chol, self.s, &mut NoCount);
+        self.since_refactor = 0;
+        self.refactors += 1;
+    }
+}
+
+/// Shared core of [`rank1_update_packed`] / [`rank1_sub_packed`]: the
+/// sign is applied to the broadcast `r[i]` once per row (an exact IEEE
+/// sign flip), so both directions run the identical 4-wide axpy kernel
+/// (see `dfr::dprr::push` / §Perf) and can never drift apart.
+#[inline(always)]
+fn rank1_fold_packed<const SUB: bool>(p: &mut [f32], r: &[f32]) {
     let mut idx = 0;
     for i in 0..r.len() {
-        let ri = r[i];
+        let ri = if SUB { -r[i] } else { r[i] };
         let row = &mut p[idx..idx + i + 1];
         let rj = &r[..i + 1];
-        // 4-wide axpy lanes (see dfr::dprr::push / §Perf)
         let mut rc = row.chunks_exact_mut(4);
         let mut xc = rj.chunks_exact(4);
         for (p4, x4) in rc.by_ref().zip(xc.by_ref()) {
@@ -306,6 +596,21 @@ pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
         }
         idx += i + 1;
     }
+}
+
+/// `P += r rᵀ` on the packed lower triangle — the ridge hot loop
+/// (s(s+1)/2 MACs per sample). Row-wise to stay cache-friendly.
+#[inline]
+pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
+    rank1_fold_packed::<false>(p, r);
+}
+
+/// `P −= r rᵀ` on the packed lower triangle — the eviction mirror of
+/// [`rank1_update_packed`], used by [`OnlineRidge`]'s sliding window to
+/// keep the Gram shadow exact as samples leave.
+#[inline]
+pub fn rank1_sub_packed(p: &mut [f32], r: &[f32]) {
+    rank1_fold_packed::<true>(p, r);
 }
 
 /// `P += Σ_b r_b r_bᵀ` on the packed lower triangle from a row-major
@@ -546,6 +851,115 @@ mod tests {
         assert_eq!(a.beta, b.beta);
         assert_eq!(a.w_tilde, b.w_tilde);
         assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn online_ridge_grow_matches_batch() {
+        // no window, no forgetting: after N observes the solution must
+        // match the batch accumulator solved at the same β
+        let mut rng = Pcg32::seed(48);
+        let s = 9;
+        let ny = 2;
+        let beta = 0.5f32;
+        let mut online = OnlineRidge::new(
+            s,
+            ny,
+            OnlineRidgeConfig {
+                beta,
+                lambda: 1.0,
+                window: None,
+                refactor_every: 0,
+            },
+        );
+        let mut batch = RidgeAccumulator::new(s, ny);
+        for i in 0..24 {
+            let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+            let class = i % ny;
+            batch.accumulate(&r, class);
+            let stats = online.observe(&r, class);
+            assert_eq!(stats.updates, i as u64 + 1);
+        }
+        let sol = batch.solve(beta, RidgeMethod::Cholesky1d);
+        for (k, (x, y)) in online.w_tilde().iter().zip(&sol.w_tilde).enumerate() {
+            assert!(
+                (x - y).abs() < 5e-3 * y.abs().max(1.0),
+                "elem {k}: online {x} vs batch {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn online_ridge_window_evicts() {
+        let mut rng = Pcg32::seed(49);
+        let s = 5;
+        let mut online = OnlineRidge::new(
+            s,
+            2,
+            OnlineRidgeConfig {
+                beta: 0.3,
+                window: Some(4),
+                ..Default::default()
+            },
+        );
+        for i in 0..10 {
+            let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+            let stats = online.observe(&r, i % 2);
+            assert_eq!(stats.window_len, (i + 1).min(4));
+        }
+        assert_eq!(online.updates(), 10);
+        assert_eq!(online.window_len(), 4);
+    }
+
+    #[test]
+    fn online_ridge_predicts_separable() {
+        let mut rng = Pcg32::seed(50);
+        let (_, data) = toy_system(8, 2, 40, &mut rng);
+        let mut online = OnlineRidge::new(
+            8,
+            2,
+            OnlineRidgeConfig {
+                beta: 1e-2,
+                ..Default::default()
+            },
+        );
+        for (r, c) in &data {
+            online.observe(r, *c);
+        }
+        let correct = data
+            .iter()
+            .filter(|(r, c)| online.predict_class(r) == *c)
+            .count();
+        assert!(correct as f64 / data.len() as f64 > 0.9, "{correct}/40");
+    }
+
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn online_ridge_rejects_window_plus_forgetting() {
+        OnlineRidge::new(
+            4,
+            2,
+            OnlineRidgeConfig {
+                beta: 0.1,
+                lambda: 0.9,
+                window: Some(8),
+                refactor_every: 0,
+            },
+        );
+    }
+
+    #[test]
+    fn rank1_sub_inverts_update() {
+        let mut rng = Pcg32::seed(51);
+        for s in [3usize, 7, 12] {
+            let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+            let orig: Vec<f32> = (0..tri_len(s)).map(|_| rng.normal()).collect();
+            let mut p = orig.clone();
+            rank1_update_packed(&mut p, &r);
+            rank1_sub_packed(&mut p, &r);
+            for (i, (a, b)) in p.iter().zip(&orig).enumerate() {
+                assert!((a - b).abs() < 1e-5, "s={s} elem {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

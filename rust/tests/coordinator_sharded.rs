@@ -302,6 +302,102 @@ fn stats_exposes_per_shard_and_aggregate_metrics() {
 }
 
 #[test]
+fn streaming_session_adapts_to_drift_without_retrain() {
+    // Serve-phase drift: after batch training, the label semantics flip
+    // (class 0's signal starts meaning class 1 and vice versa — the
+    // strongest concept drift a 2-class stream can exhibit). With
+    // λ-forgetting enabled the session must (a) answer every labelled
+    // sample with `Observed`, (b) never re-enter the batch pipeline, and
+    // (c) recover post-drift accuracy purely through rank-1 updates.
+    let ds = mini_dataset(26);
+    let mut scfg = mini_session_config(ds.train.len());
+    scfg.train.forgetting = Some(0.92);
+    scfg.train.refactor_every = 16;
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 64,
+            seed: 5,
+            shards: 2,
+        },
+    );
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            trained = true;
+        }
+    }
+    assert!(trained);
+
+    let flip = |s: &Sample| {
+        let mut s2 = s.clone();
+        s2.label = 1 - s2.label;
+        s2
+    };
+    // accuracy under the flipped labels BEFORE adaptation
+    let accuracy_flipped = |srv: &Server| -> usize {
+        ds.test
+            .iter()
+            .filter(|s| {
+                matches!(
+                    srv.call(Request::Infer { session: 1, sample: s.clone() }).unwrap(),
+                    Response::Prediction { class, .. } if class == 1 - s.label
+                )
+            })
+            .count()
+    };
+    let pre = accuracy_flipped(&srv);
+
+    // drift stream: three passes of flipped labelled samples — every
+    // response must be the streaming ack, never Trained/Rejected
+    let mut observed = 0u64;
+    for _ in 0..3 {
+        for s in &ds.train {
+            match srv
+                .call(Request::Labelled {
+                    session: 1,
+                    sample: flip(s),
+                })
+                .unwrap()
+            {
+                Response::Observed { updates, .. } => {
+                    observed += 1;
+                    assert!(updates > 0);
+                }
+                other => panic!("expected Observed during drift stream, got {other:?}"),
+            }
+        }
+    }
+    assert_eq!(observed, 3 * ds.train.len() as u64);
+
+    let post = accuracy_flipped(&srv);
+    assert!(
+        post >= 6 && post > pre,
+        "post-drift accuracy did not recover: {pre}/10 -> {post}/10"
+    );
+
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            // exactly the one batch training; all adaptation was online
+            assert!(t.contains("counter trainings_total 1"), "{t}");
+            assert!(
+                t.contains(&format!("counter online_updates_total {observed}")),
+                "{t}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
 fn engine_without_fork_degrades_to_single_shard() {
     /// NativeEngine wrapper that refuses to fork (the default trait impl).
     struct Unforkable(NativeEngine);

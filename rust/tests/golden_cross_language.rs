@@ -2,8 +2,14 @@
 //! JAX reference numbers recorded by `python/tests/make_golden.py`
 //! (closed-form inputs, so both sides regenerate identical data).
 //!
-//! Skips with a notice when `make artifacts` hasn't produced
-//! `artifacts/golden/*.npz`.
+//! The fixtures are **committed** under `rust/artifacts/golden/` (small,
+//! stored npz), so this suite always runs under tier-1 — a missing
+//! fixture is a hard failure, not a skip. Regenerate after touching the
+//! JAX model with:
+//!
+//! ```text
+//! python3 python/tests/make_golden.py rust/artifacts/golden
+//! ```
 
 use std::path::Path;
 
@@ -12,13 +18,16 @@ use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
 use dfr_edge::dfr::mask::Mask;
 use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
 
-fn golden(name: &str) -> Option<std::collections::BTreeMap<String, npz::Array>> {
+fn golden(name: &str) -> std::collections::BTreeMap<String, npz::Array> {
+    // cargo runs test binaries with cwd = the package root (rust/)
     let path = format!("artifacts/golden/{name}.npz");
-    if !Path::new(&path).exists() {
-        eprintln!("skipped: {path} missing (run `make artifacts`)");
-        return None;
-    }
-    Some(npz::read_npz(path).expect("golden npz parses"))
+    assert!(
+        Path::new(&path).exists(),
+        "golden fixture {path} missing (cwd {:?}) — the fixtures are committed; \
+         regenerate with `python3 python/tests/make_golden.py rust/artifacts/golden`",
+        std::env::current_dir().ok()
+    );
+    npz::read_npz(path).expect("golden npz parses")
 }
 
 /// Regenerate the closed-form inputs exactly as make_golden.py does.
@@ -35,7 +44,7 @@ fn inputs(t: usize, v: usize) -> Vec<f32> {
 }
 
 fn run_case(name: &str) {
-    let Some(g) = golden(name) else { return };
+    let g = golden(name);
     let t = g["t"].scalar().unwrap() as usize;
     let v = g["v"].scalar().unwrap() as usize;
     let nx = g["nx"].scalar().unwrap() as usize;

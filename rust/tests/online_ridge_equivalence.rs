@@ -1,0 +1,249 @@
+//! Property tests: the streaming online ridge (rank-1 Cholesky
+//! update/downdate + in-place re-solve, `linalg::OnlineRidge`) is
+//! equivalent to from-scratch batch solving within f32 tolerance:
+//!
+//! * a growing stream matches the batch accumulator at every step;
+//! * a sliding window (update + downdate) matches a from-scratch packed
+//!   Gram + `cholesky_1d` over exactly the window samples;
+//! * λ-forgetting matches an explicitly λ-weighted Gram built in f64;
+//! * the every-K re-factorization cadence is numerically transparent.
+//!
+//! Sizes deliberately sweep every residue of s mod 4 — the `dot`
+//! kernel's remainder lanes are the classic place for a packed-layout
+//! off-by-one to hide.
+
+use dfr_edge::linalg::ridge::{OnlineRidge, OnlineRidgeConfig, RidgeAccumulator, RidgeMethod};
+use dfr_edge::linalg::{tri, tri_len};
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::proptest::{assert_close, run_prop, Config};
+
+fn stream(rng: &mut Pcg32, n: usize, s: usize, ny: usize) -> Vec<(Vec<f32>, usize)> {
+    (0..n)
+        .map(|i| ((0..s).map(|_| rng.normal()).collect(), i % ny))
+        .collect()
+}
+
+#[test]
+fn growing_stream_matches_batch_every_step() {
+    run_prop(
+        "grow online == batch",
+        Config {
+            cases: 24,
+            max_size: 13,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = size as usize; // 1..=13 — all residues mod 4
+            let ny = 1 + (size as usize % 3);
+            let beta = 0.5f32;
+            let data = stream(rng, 18, s, ny);
+            let mut online = OnlineRidge::new(
+                s,
+                ny,
+                OnlineRidgeConfig {
+                    beta,
+                    lambda: 1.0,
+                    window: None,
+                    refactor_every: 0,
+                },
+            );
+            let mut batch = RidgeAccumulator::new(s, ny);
+            for (i, (r, c)) in data.iter().enumerate() {
+                let stats = online.observe(r, *c);
+                if stats.updates != i as u64 + 1 {
+                    return Err(format!("updates {} at step {i}", stats.updates));
+                }
+                batch.accumulate(r, *c);
+                let sol = batch.solve(beta, RidgeMethod::Cholesky1d);
+                assert_close(online.w_tilde(), &sol.w_tilde, 1e-2, 2e-3)
+                    .map_err(|e| format!("s={s} ny={ny} step {i}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sliding_window_matches_from_scratch() {
+    run_prop(
+        "window online == batch over window",
+        Config {
+            cases: 28,
+            max_size: 12,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 2 + size as usize; // 3..=14
+            let ny = 1 + (size as usize % 3);
+            let w = 3 + (size as usize % 6); // 3..=8
+            let beta = 0.4f32;
+            let data = stream(rng, w + 12, s, ny);
+            let mut online = OnlineRidge::new(
+                s,
+                ny,
+                OnlineRidgeConfig {
+                    beta,
+                    lambda: 1.0,
+                    window: Some(w),
+                    refactor_every: 0,
+                },
+            );
+            for (i, (r, c)) in data.iter().enumerate() {
+                let stats = online.observe(r, *c);
+                if stats.window_len != (i + 1).min(w) {
+                    return Err(format!(
+                        "window occupancy {} at step {i} (cap {w})",
+                        stats.window_len
+                    ));
+                }
+                // from scratch over exactly the window samples
+                let lo = (i + 1).saturating_sub(w);
+                let mut batch = RidgeAccumulator::new(s, ny);
+                for (rb, cb) in &data[lo..=i] {
+                    batch.accumulate(rb, *cb);
+                }
+                let sol = batch.solve(beta, RidgeMethod::Cholesky1d);
+                assert_close(online.w_tilde(), &sol.w_tilde, 2e-2, 5e-3)
+                    .map_err(|e| format!("s={s} ny={ny} w={w} step {i}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forgetting_matches_weighted_from_scratch() {
+    run_prop(
+        "λ online == λ-weighted batch",
+        Config {
+            cases: 20,
+            max_size: 10,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 2 + size as usize; // 3..=12
+            let ny = 1 + (size as usize % 2);
+            let lambda = 0.85 + 0.1 * rng.uniform();
+            let beta = 0.5f32;
+            let n = 16usize;
+            let data = stream(rng, n, s, ny);
+            let mut online = OnlineRidge::new(
+                s,
+                ny,
+                OnlineRidgeConfig {
+                    beta,
+                    lambda,
+                    window: None,
+                    refactor_every: 0,
+                },
+            );
+            for (r, c) in &data {
+                online.observe(r, *c);
+            }
+            // explicit λ-weighted system, accumulated in f64: sample i
+            // (0-based) carries weight λ^{n-1-i}, the βI seed λ^n
+            let mut bw = vec![0.0f64; tri_len(s)];
+            let mut aw = vec![0.0f64; ny * s];
+            for (i, (r, &c)) in data.iter().enumerate() {
+                let wgt = f64::from(lambda).powi((n - 1 - i) as i32);
+                for a in 0..s {
+                    for b in 0..=a {
+                        bw[tri(a, b)] += wgt * f64::from(r[a]) * f64::from(r[b]);
+                    }
+                }
+                for (dst, &x) in aw[c * s..(c + 1) * s].iter_mut().zip(r) {
+                    *dst += wgt * f64::from(x);
+                }
+            }
+            let mut batch = RidgeAccumulator::new(s, ny);
+            batch.b_packed = bw.iter().map(|&x| x as f32).collect();
+            batch.a = aw.iter().map(|&x| x as f32).collect();
+            batch.count = n;
+            let beta_eff = (f64::from(lambda).powi(n as i32) * f64::from(beta)) as f32;
+            let sol = batch.solve(beta_eff, RidgeMethod::Cholesky1d);
+            assert_close(online.w_tilde(), &sol.w_tilde, 2e-2, 5e-3)
+                .map_err(|e| format!("s={s} ny={ny} λ={lambda}: {e}"))
+        },
+    );
+}
+
+#[test]
+fn periodic_refactor_is_transparent() {
+    run_prop(
+        "refactor-every-K == never",
+        Config {
+            cases: 16,
+            max_size: 9,
+            ..Default::default()
+        },
+        |rng, size| {
+            let s = 2 + size as usize;
+            let ny = 2;
+            let w = 4 + (size as usize % 4);
+            let beta = 0.3f32;
+            let data = stream(rng, w + 12, s, ny);
+            let mk = |k: usize| {
+                OnlineRidge::new(
+                    s,
+                    ny,
+                    OnlineRidgeConfig {
+                        beta,
+                        lambda: 1.0,
+                        window: Some(w),
+                        refactor_every: k,
+                    },
+                )
+            };
+            let mut never = mk(0);
+            let mut every3 = mk(3);
+            for (i, (r, c)) in data.iter().enumerate() {
+                never.observe(r, *c);
+                every3.observe(r, *c);
+                assert_close(never.w_tilde(), every3.w_tilde(), 1e-2, 2e-3)
+                    .map_err(|e| format!("s={s} w={w} step {i}: {e}"))?;
+            }
+            if every3.refactors() == 0 {
+                return Err("refactor cadence never fired".into());
+            }
+            if never.refactors() != 0 {
+                return Err(format!(
+                    "refactor_every=0 re-factorized {} times (downdates degenerated)",
+                    never.refactors()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn window_equivalence_survives_long_streams_with_refactor() {
+    // drift-bounding in action: 300 folds through an 8-sample window,
+    // refactor every 32 — the final solution still matches from-scratch
+    let mut rng = Pcg32::seed(0x57AB1E);
+    let s = 11; // 3 mod 4
+    let ny = 3;
+    let w = 8;
+    let beta = 0.4f32;
+    let data = stream(&mut rng, 300, s, ny);
+    let mut online = OnlineRidge::new(
+        s,
+        ny,
+        OnlineRidgeConfig {
+            beta,
+            lambda: 1.0,
+            window: Some(w),
+            refactor_every: 32,
+        },
+    );
+    for (r, c) in &data {
+        online.observe(r, *c);
+    }
+    assert!(online.refactors() >= 9, "refactors {}", online.refactors());
+    let mut batch = RidgeAccumulator::new(s, ny);
+    for (rb, cb) in &data[300 - w..] {
+        batch.accumulate(rb, *cb);
+    }
+    let sol = batch.solve(beta, RidgeMethod::Cholesky1d);
+    assert_close(online.w_tilde(), &sol.w_tilde, 2e-2, 5e-3).unwrap();
+}

@@ -94,6 +94,106 @@ fn features_and_infer_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn online_ridge_observe_is_allocation_free_after_warmup() {
+    use dfr_edge::linalg::ridge::{OnlineRidge, OnlineRidgeConfig};
+    // moderate scale, odd s to exercise the kernels' remainder lanes;
+    // window + refactor cadence so the measured section crosses every
+    // sub-path: eviction downdate, rank-1 update, periodic refactor,
+    // in-place re-solve
+    let (s, ny) = (301usize, 5usize);
+    let mut rng = Pcg32::seed(0xA110E);
+    let mut online = OnlineRidge::new(
+        s,
+        ny,
+        OnlineRidgeConfig {
+            beta: 0.5,
+            lambda: 1.0,
+            window: Some(24),
+            refactor_every: 8,
+        },
+    );
+    let samples: Vec<Vec<f32>> = (0..40)
+        .map(|_| (0..s).map(|_| rng.normal()).collect())
+        .collect();
+    // warmup fills the window and crosses at least one refactor
+    for (i, r) in samples.iter().take(30).enumerate() {
+        online.observe(r, i % ny);
+    }
+    let n = allocations_in(|| {
+        for (i, r) in samples.iter().enumerate().skip(30) {
+            let stats = online.observe(r, i % ny);
+            assert_eq!(stats.window_len, 24);
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state OnlineRidge::observe performed {n} heap allocations"
+    );
+    assert!(online.refactors() >= 4, "refactor cadence exercised");
+    assert_eq!(online.updates(), 40);
+}
+
+#[test]
+fn session_streaming_feed_is_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+    use dfr_edge::data::profiles::Profile;
+    use dfr_edge::data::synth;
+
+    let prof = Profile {
+        name: "mini",
+        n_v: 2,
+        n_c: 2,
+        train: 20,
+        test: 5,
+        t_min: 10,
+        t_max: 12,
+    };
+    let ds = synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        31,
+    );
+    let mut cfg = SessionConfig::new(2, 2, ds.train.len());
+    cfg.train.nx = 8;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    cfg.train.window = Some(12);
+    cfg.train.refactor_every = 6;
+    // recent-sample FIFO recycles from the first streamed feed
+    cfg.buffer_cap = ds.train.len();
+    let eng = NativeEngine::new(8, 2);
+    let mut sess = Session::new(1, cfg, 0xF00D);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert!(sess.online().is_some(), "streaming path active");
+
+    // pre-clone the streamed samples OUTSIDE the measured region (the
+    // server clones per request; the session itself must not allocate)
+    let warm: Vec<_> = ds.train.iter().take(8).cloned().collect();
+    let hot: Vec<_> = ds.train.iter().skip(8).take(8).cloned().collect();
+    for s in warm {
+        let out = sess.feed_labelled(&eng, s).unwrap();
+        assert!(matches!(out, FeedOutcome::Observed { .. }), "{out:?}");
+    }
+    let n = allocations_in(|| {
+        for s in hot {
+            let out = sess.feed_labelled(&eng, s).unwrap();
+            assert!(matches!(out, FeedOutcome::Observed { .. }), "{out:?}");
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state streaming feed_labelled performed {n} heap allocations"
+    );
+}
+
+#[test]
 fn forward_scratch_is_allocation_free_after_warmup() {
     use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
     let mut rng = Pcg32::seed(0xA110D);
