@@ -9,10 +9,12 @@
 
 use dfr_edge::data::profiles::PROFILES;
 use dfr_edge::fpga::design::{DesignConfig, SystemModel};
-use dfr_edge::fpga::resource::XC7Z020;
+use dfr_edge::fpga::power::power_saving_fraction;
+use dfr_edge::fpga::resource::{Arith, XC7Z020};
 use dfr_edge::fpga::schedule::{
-    accumulation_ii, ridge_solve_cycles, ScheduleConfig, ShapeParams,
+    accumulation_ii, accumulation_ii_arith, ridge_solve_cycles, ScheduleConfig, ShapeParams,
 };
+use dfr_edge::quant::{error_budget_sweep, QFormat};
 use dfr_edge::report;
 
 fn main() {
@@ -86,4 +88,50 @@ fn main() {
             m.inference_seconds(p.test as u64)
         );
     }
+
+    // 5. quantization: the Q-format error-budget sweep (measured
+    //    deviation vs analytic bound vs accuracy) and its width-aware
+    //    resource/power pricing on the Zynq
+    println!("\n## Q-format error budget sweep (quant::sweep)\n");
+    let formats = [QFormat::q4_12(), QFormat::q6_10(), QFormat::q8_8()];
+    let rep = error_budget_sweep(&formats, 6, 0xC0DE);
+    println!("{}", rep.markdown());
+    let chosen = rep.choose(1e-2).map(|r| r.format).unwrap_or(QFormat::q6_10());
+    println!("chosen width (bound ≤ 1e-2, no saturation): {}\n", chosen.name());
+
+    // 6. the Table 11 Pareto story, width-aware: the paper's standard
+    //    design on an f32 datapath vs the chosen fixed-point word
+    println!("## width-aware resources/power (standard config, jpvow)\n");
+    let f32_model = SystemModel::new(shape, DesignConfig::Standard);
+    let q_model = SystemModel::with_arith(
+        shape,
+        DesignConfig::Standard,
+        Arith::Fixed { bits: chosen.bits },
+    );
+    let rf = f32_model.total_resources();
+    let rq = q_model.total_resources();
+    println!(
+        "{:<10} {:>8} {:>8} {:>8} {:>9} {:>9}",
+        "datapath", "LUT", "FF", "DSP", "BRAM36", "power(W)"
+    );
+    for (name, r, p) in [
+        ("f32", &rf, f32_model.power_w()),
+        (chosen.name().as_str(), &rq, q_model.power_w()),
+    ] {
+        println!(
+            "{:<10} {:>8} {:>8} {:>8} {:>9.1} {:>9.3}",
+            name, r.lut, r.ff, r.dsp, r.bram36, p
+        );
+    }
+    println!(
+        "\n{} vs f32: LUT −{:.0}%, DSP −{:.0}%, power −{:.0}%; \
+         RMW accumulation II {} → {} at RegSize=1 (1-cycle integer add \
+         makes Algorithm 5's write buffer unnecessary)",
+        chosen.name(),
+        100.0 * (1.0 - rq.lut as f64 / rf.lut as f64),
+        100.0 * (1.0 - rq.dsp as f64 / rf.dsp as f64),
+        100.0 * f64::from(power_saving_fraction(&rf, &rq, 100e6)),
+        accumulation_ii(1),
+        accumulation_ii_arith(1, Arith::Fixed { bits: chosen.bits }),
+    );
 }

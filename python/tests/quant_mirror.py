@@ -1,0 +1,305 @@
+"""Loop-level Python mirror of `rust/src/quant/` — the validation artifact
+for the fixed-point DFR datapath.
+
+The authoring container has no Rust toolchain, so the quantized forward
+pass, the PWL-LUT nonlinearity, and the analytic error budget are
+mirrored here integer-for-integer and checked against an f64 reference
+on the golden-fixture configurations (closed-form inputs, identical to
+python/tests/make_golden.py). The committed Rust test tolerances in
+rust/tests/quant_equivalence.rs were chosen from this script's output.
+
+Run: python3 python/tests/quant_mirror.py
+"""
+
+import math
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fixed-point core (mirror of rust/src/quant/fixed.rs)
+# ---------------------------------------------------------------------------
+
+class QFormat:
+    def __init__(self, bits, frac):
+        assert 2 <= bits <= 24 and frac < bits
+        self.bits = bits
+        self.frac = frac
+        self.max_raw = (1 << (bits - 1)) - 1
+        self.min_raw = -(1 << (bits - 1))
+
+    @property
+    def lsb(self):
+        return 2.0 ** -self.frac
+
+    def name(self):
+        return f"Q{self.bits - self.frac}.{self.frac}"
+
+
+class QArith:
+    """Nearest (half-up) rounding + saturation — HLS AP_RND/AP_SAT."""
+
+    def __init__(self, fmt):
+        self.fmt = fmt
+        self.saturations = 0
+
+    def clamp(self, x):
+        f = self.fmt
+        if x > f.max_raw:
+            self.saturations += 1
+            return f.max_raw
+        if x < f.min_raw:
+            self.saturations += 1
+            return f.min_raw
+        return x
+
+    def rescale(self, wide, shift):
+        # divide by 2^shift, round half up (add half then floor-shift)
+        return self.clamp((wide + (1 << (shift - 1))) >> shift)
+
+    def quantize(self, x):
+        if math.isnan(x):
+            return 0
+        scaled = float(x) * (1 << self.fmt.frac)
+        if math.isinf(scaled):
+            return self.clamp(self.fmt.max_raw + 1 if scaled > 0 else self.fmt.min_raw - 1)
+        return self.clamp(math.floor(scaled + 0.5))
+
+    def dequantize(self, raw):
+        return raw / (1 << self.fmt.frac)
+
+    def add(self, a, b):
+        return self.clamp(a + b)
+
+    def mul(self, a, b):
+        return self.rescale(a * b, self.fmt.frac)
+
+
+# ---------------------------------------------------------------------------
+# PWL LUT (mirror of rust/src/quant/lut.rs)
+# ---------------------------------------------------------------------------
+
+class PwlLut:
+    def __init__(self, f, arith, log2_segments):
+        fmt = arith.fmt
+        assert log2_segments <= fmt.bits
+        self.arith = arith
+        self.seg_shift = fmt.bits - log2_segments
+        self.lo_raw = fmt.min_raw
+        segs = 1 << log2_segments
+        self.table = []
+        for i in range(segs + 1):
+            node_raw = self.lo_raw + (i << self.seg_shift)
+            self.table.append(arith.quantize(f(node_raw / (1 << fmt.frac))))
+        # measured sup-error over the range (dense sampling)
+        self.max_err = 0.0
+        for i in range(segs):
+            for j in range(8):
+                raw = self.lo_raw + (i << self.seg_shift) + (j * (1 << self.seg_shift)) // 8
+                x = raw / (1 << fmt.frac)
+                self.max_err = max(self.max_err, abs(self.eval_value(raw) - f(x)))
+
+    def eval(self, x_raw):
+        off = x_raw - self.lo_raw  # >= 0 (format-clamped input)
+        idx = off >> self.seg_shift
+        segs = len(self.table) - 1
+        if idx >= segs:
+            idx = segs - 1
+        rem = off - (idx << self.seg_shift)
+        y0 = self.table[idx]
+        y1 = self.table[idx + 1]
+        y = y0 + (((y1 - y0) * rem + (1 << (self.seg_shift - 1))) >> self.seg_shift)
+        return self.arith.clamp(y)
+
+    def eval_value(self, x_raw):
+        return self.arith.dequantize(self.eval(x_raw))
+
+
+# ---------------------------------------------------------------------------
+# quantized forward (mirror of rust/src/quant/reservoir.rs)
+# ---------------------------------------------------------------------------
+
+def quant_forward(u, t, v, nx, mask, p, q, arith, lut):
+    """Returns r_tilde (dequantized floats) for the modular DFR with
+    Linear{alpha=1} nonlinearity evaluated through the LUT."""
+    fmt = arith.fmt
+    p_raw = arith.quantize(p)
+    q_raw = arith.quantize(q)
+    x = [0] * nx
+    x_prev = [0] * nx
+    acc = [0] * (nx * (nx + 1))  # wide, scale 2^(2 frac)
+    w = nx + 1
+    for k in range(t):
+        x_prev[:] = x
+        qu = [arith.quantize(u[k * v + vv]) for vv in range(v)]
+        j = []
+        for n in range(nx):
+            s = 0
+            for vv in range(v):
+                s += qu[vv] if mask[n * v + vv] > 0 else -qu[vv]
+            j.append(arith.clamp(s))
+        prev_node = x[nx - 1]
+        for n in range(nx):
+            arg = arith.add(j[n], x[n])
+            fx = lut.eval(arg)
+            xn = arith.add(arith.mul(p_raw, fx), arith.mul(q_raw, prev_node))
+            prev_node = xn
+            x[n] = xn
+        for i in range(nx):
+            for jj in range(nx):
+                acc[i * w + jj] += x[i] * x_prev[jj]
+            acc[i * w + nx] += x[i] << fmt.frac
+    # r = acc * (1/T); reciprocal held at 2*frac fractional bits
+    inv_t_raw = ((1 << (2 * fmt.frac)) + t // 2) // t
+    r = [arith.rescale(a * inv_t_raw, 3 * fmt.frac) for a in acc]
+    r_tilde = [arith.dequantize(x) for x in r] + [1.0]
+    return r_tilde, max(abs(xx) / (1 << fmt.frac) for xx in x)
+
+
+def f64_forward(u, t, v, nx, mask, p, q):
+    x = np.zeros(nx)
+    x_prev = np.zeros(nx)
+    acc = np.zeros(nx * (nx + 1))
+    w = nx + 1
+    x_abs_max = 0.0
+    for k in range(t):
+        x_prev[:] = x
+        j = [sum(mask[n * v + vv] * u[k * v + vv] for vv in range(v)) for n in range(nx)]
+        prev_node = x[nx - 1]
+        for n in range(nx):
+            xn = p * (j[n] + x[n]) + q * prev_node
+            prev_node = xn
+            x[n] = xn
+        x_abs_max = max(x_abs_max, np.max(np.abs(x)))
+        for i in range(nx):
+            for jj in range(nx):
+                acc[i * w + jj] += x[i] * x_prev[jj]
+            acc[i * w + nx] += x[i]
+    r = acc / t
+    return list(r) + [1.0], x_abs_max
+
+
+# ---------------------------------------------------------------------------
+# analytic error budget (mirror of rust/src/quant/budget.rs)
+# ---------------------------------------------------------------------------
+
+def r_tilde_error_bound(fmt, p, q, lf, eps_f, t, nx, v, x_max, u_max, f_max):
+    """Worst-case first-order error propagation through the quantized
+    forward pass; see rust/src/quant/budget.rs for the derivation."""
+    lsb = fmt.lsb
+    half = lsb / 2.0
+    ap, aq = abs(p), abs(q)
+    # range check: saturation voids the linear error model
+    j_max = v * u_max
+    if max(x_max, j_max, j_max + x_max, f_max) * 1.05 > fmt.max_raw / (1 << fmt.frac):
+        return float("inf")
+    if ap * lf + aq >= 1.0:
+        return float("inf")
+    e_j = v * half
+    e_state = 0.0
+    for _ in range(t):
+        e_prev_node = e_state
+        worst = 0.0
+        for _ in range(nx):
+            e_n = (
+                ap * lf * (e_j + e_state)
+                + ap * eps_f
+                + (f_max + x_max) * half  # p/q quantization error
+                + lsb  # two product rescales, half-LSB each
+                + aq * e_prev_node
+            )
+            e_prev_node = e_n
+            worst = max(worst, e_n)
+        e_state = worst
+        if e_state > 1e6:
+            return float("inf")
+    inv_t_term = x_max * x_max * t * (2.0 ** -(2 * fmt.frac)) / 2.0
+    return 2.0 * x_max * e_state + e_state * e_state + inv_t_term + half
+
+
+# ---------------------------------------------------------------------------
+# the golden-fixture configurations (make_golden.py CASES)
+# ---------------------------------------------------------------------------
+
+def closed_form_inputs(t, v, nx):
+    k = np.arange(1, t + 1)[:, None]
+    vv = np.arange(1, v + 1)[None, :]
+    u = np.sin(0.1 * k * vv) + 0.05 * np.cos(0.3 * k)
+    n = np.arange(nx)[:, None]
+    vm = np.arange(v)[None, :]
+    mask = np.where((7 * n + 3 * vm) % 2 == 0, 1.0, -1.0)
+    return u.astype(np.float64).ravel(), mask.astype(np.float64).ravel()
+
+
+CASES = [
+    ("small", dict(t=12, v=2, nx=5, p=0.2, q=0.15)),
+    ("padded", dict(t=23, v=3, nx=8, p=0.3, q=-0.2)),
+    ("paper_nx30", dict(t=29, v=12, nx=30, p=0.1, q=0.05)),
+]
+
+FORMATS = [QFormat(16, 12), QFormat(16, 10), QFormat(16, 8)]
+
+
+def random_property_cases(n_cases=200, seed=7):
+    """Mirror of the rust property test's workload distribution
+    (tests/quant_equivalence.rs::property_quant_forward_within_bound_…):
+    p + |q| <= 0.6, |u| <= 1, v in 1..3, nx in 3..12, Q4.12."""
+    rng = np.random.default_rng(seed)
+    fmt = QFormat(16, 12)
+    worst_margin = float("inf")
+    for case in range(n_cases):
+        nx = int(rng.integers(3, 13))
+        v = int(rng.integers(1, 4))
+        t = int(rng.integers(5, 35))
+        p = 0.05 + 0.45 * rng.random()
+        q = (0.6 - p) * rng.random() * (1 if rng.random() < 0.5 else -1)
+        u = rng.uniform(-1, 1, t * v)
+        mask = np.where(rng.random(nx * v) < 0.5, 1.0, -1.0)
+        arith = QArith(fmt)
+        lut = PwlLut(lambda x: x, arith, log2_segments=6)
+        arith.saturations = 0  # discount LUT construction-time clamps
+        got, _ = quant_forward(u, t, v, nx, mask, p, q, arith, lut)
+        assert arith.saturations == 0, f"case {case}: saturated (p={p} q={q})"
+        ref, x_max = f64_forward(u, t, v, nx, mask, p, q)
+        dev = max(abs(a - b) for a, b in zip(got, ref))
+        u_max = float(np.max(np.abs(u)))
+        f_max = v * u_max + x_max
+        bound = r_tilde_error_bound(fmt, p, q, 1.0, lut.max_err, t, nx, v, x_max, u_max, f_max)
+        assert dev <= bound, f"case {case}: dev {dev} > bound {bound} (p={p} q={q} nx={nx} v={v} t={t})"
+        if dev > 0:
+            worst_margin = min(worst_margin, bound / dev)
+    print(f"random property cases: {n_cases} OK, worst bound/dev margin {worst_margin:.1f}x")
+
+
+def main():
+    random_property_cases()
+    ok = True
+    for name, kw in CASES:
+        t, v, nx, p, q = kw["t"], kw["v"], kw["nx"], kw["p"], kw["q"]
+        u, mask = closed_form_inputs(t, v, nx)
+        ref, x_max = f64_forward(u, t, v, nx, mask, p, q)
+        u_max = float(np.max(np.abs(u)))
+        j_max = v * u_max
+        f_max = j_max + x_max  # Linear alpha=1
+        for fmt in FORMATS:
+            arith = QArith(fmt)
+            lut = PwlLut(lambda x: x, arith, log2_segments=6)
+            got, _ = quant_forward(u, t, v, nx, mask, p, q, arith, lut)
+            dev = max(abs(a - b) for a, b in zip(got, ref))
+            bound = r_tilde_error_bound(
+                fmt, p, q, 1.0, lut.max_err, t, nx, v, x_max, u_max, f_max
+            )
+            status = "OK" if dev <= bound else "FAIL"
+            if dev > bound:
+                ok = False
+            print(
+                f"{name:<11} {fmt.name():>6}: dev {dev:.3e}  bound {bound:.3e}  "
+                f"margin {bound / dev if dev > 0 else float('inf'):6.1f}x  "
+                f"sat {arith.saturations:>3}  x_max {x_max:.3f} j_max {j_max:.2f}  {status}"
+            )
+    print("ALL OK" if ok else "BOUND VIOLATIONS FOUND")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

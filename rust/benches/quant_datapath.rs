@@ -1,0 +1,127 @@
+//! Quantized vs f32 datapath throughput at paper scale (jpvow shape:
+//! Nx = 30, V = 12, T = 29, 9 classes, s = 931).
+//!
+//! The fixed-point engine exists for bit-accuracy (modelling what the
+//! FPGA computes), not for software speed — integer ops with explicit
+//! rounding/saturation typically run *slower* than the vectorized f32
+//! hot path on a CPU. This bench quantifies that modelling overhead so
+//! the engine choice is an informed one, and writes
+//! `results/BENCH_quant.json` (committed snapshot at repo root
+//! `BENCH_quant.json`). Set `DFR_BENCH_SMOKE=1` for a few-iteration CI
+//! run.
+
+use std::fmt::Write as _;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+use dfr_edge::quant::{QFormat, QuantConfig, QuantEngine, QuantForwardScratch, QuantReservoir};
+use dfr_edge::util::bench::{bb, write_results_file, Bencher};
+use dfr_edge::util::prng::Pcg32;
+
+fn main() {
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    let target = if smoke { 0.02 } else { 0.4 };
+    let mut b = Bencher::with_target_time(target);
+    let mut rng = Pcg32::seed(0x9_0B17);
+    let (nx, v, t, ny) = (30usize, 12usize, 29usize, 9usize);
+    let mask = Mask::random(nx, v, &mut rng);
+    let f = Nonlinearity::Linear { alpha: 1.0 };
+    // inputs pre-scaled into the narrow formats' word range (the AXI
+    // front-end shift — see quant::sweep); identical series for both
+    // datapaths
+    let u: Vec<f32> = (0..t * v).map(|_| 0.25 * rng.normal()).collect();
+    let sample = Sample {
+        u: u.clone(),
+        t,
+        label: 3,
+    };
+    let s_dim = nx * nx + nx + 1;
+    let w_tilde: Vec<f32> = (0..ny * s_dim).map(|_| 0.01 * rng.normal()).collect();
+    let (p, q) = (0.2f32, 0.1f32);
+
+    // --- reservoir-level forward: f32 workspace vs quantized datapath
+    let res = Reservoir {
+        mask: mask.clone(),
+        p,
+        q,
+        f,
+    };
+    let mut fs = ForwardScratch::new(nx);
+    let fwd_f32 = b
+        .bench("forward_f32_jpvow_t29", || {
+            res.forward_into(bb(&u), t, bb(&mut fs));
+        })
+        .median;
+    let mut fwd_by_format: Vec<(String, f64)> = Vec::new();
+    for fmt in [QFormat::q4_12(), QFormat::q6_10(), QFormat::q8_8()] {
+        let mut qres = QuantReservoir::new(
+            mask.clone(),
+            f,
+            dfr_edge::quant::QArith::new(fmt),
+            6,
+        );
+        qres.set_params(p, q);
+        let mut qs = QuantForwardScratch::new(nx, v);
+        let m = b
+            .bench(&format!("forward_quant_{}_jpvow_t29", fmt.name()), || {
+                qres.forward_into(bb(&u), t, bb(&mut qs));
+            })
+            .median;
+        fwd_by_format.push((fmt.name(), m));
+    }
+    let fwd_quant = fwd_by_format[0].1;
+
+    // --- engine-level infer (forward + output MAC + softmax)
+    let native = NativeEngine::with_nonlinearity(nx, ny, f);
+    let quant = QuantEngine::with_config(nx, ny, f, QuantConfig::with_format(QFormat::q4_12()));
+    let mut scores = Vec::new();
+    native
+        .infer_into(&sample, &mask, p, q, &w_tilde, &mut scores)
+        .unwrap();
+    let inf_f32 = b
+        .bench("infer_f32_jpvow_ny9", || {
+            native
+                .infer_into(bb(&sample), &mask, p, q, bb(&w_tilde), &mut scores)
+                .unwrap();
+        })
+        .median;
+    quant
+        .infer_into(&sample, &mask, p, q, &w_tilde, &mut scores)
+        .unwrap();
+    let inf_quant = b
+        .bench("infer_quant_q4_12_jpvow_ny9", || {
+            quant
+                .infer_into(bb(&sample), &mask, p, q, bb(&w_tilde), &mut scores)
+                .unwrap();
+        })
+        .median;
+
+    b.write_csv("quant_datapath.csv").expect("write csv");
+
+    let mut fmt_rows = String::new();
+    for (i, (name, m)) in fwd_by_format.iter().enumerate() {
+        let _ = write!(
+            fmt_rows,
+            "    {{\"format\": \"{name}\", \"forward_median_s\": {m:.6e}}}{}",
+            if i + 1 < fwd_by_format.len() { ",\n" } else { "" }
+        );
+    }
+    let json = format!(
+        "{{\n  \"scale\": {{\"nx\": {nx}, \"v\": {v}, \"t\": {t}, \"ny\": {ny}, \"s\": {s_dim}, \"smoke\": {smoke}}},\n  \
+         \"forward\": {{\"f32_median_s\": {fwd_f32:.6e}, \"quant_median_s\": {fwd_quant:.6e}, \"quant_over_f32\": {:.3}}},\n  \
+         \"infer\": {{\"f32_median_s\": {inf_f32:.6e}, \"quant_median_s\": {inf_quant:.6e}, \"quant_over_f32\": {:.3}}},\n  \
+         \"formats\": [\n{fmt_rows}\n  ]\n}}\n",
+        fwd_quant / fwd_f32,
+        inf_quant / inf_f32,
+    );
+    write_results_file("BENCH_quant.json", &json).expect("write BENCH_quant.json");
+    println!(
+        "forward: f32 {fwd_f32:.3e} s vs quant {fwd_quant:.3e} s ({:.2}x); \
+         infer: f32 {inf_f32:.3e} s vs quant {inf_quant:.3e} s ({:.2}x)",
+        fwd_quant / fwd_f32,
+        inf_quant / inf_f32,
+    );
+    println!("→ results/BENCH_quant.json (copy to repo root to refresh the committed snapshot)");
+}

@@ -247,4 +247,73 @@ mod tests {
         assert!(read_archive(b"PK").is_err());
         assert!(read_archive(&[0u8; 64]).is_err());
     }
+
+    #[test]
+    fn empty_archive_roundtrips() {
+        // a 22-byte EOCD-only archive is a VALID zip with zero entries
+        // (numpy never writes one, but tooling may) — tolerate, not panic
+        let buf = write_archive(&[]);
+        assert_eq!(buf.len(), 22);
+        let back = read_archive(&buf).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn truncated_eocd_is_an_error() {
+        let buf = write_archive(&[]);
+        for cut in [0usize, 1, 10, 21] {
+            assert!(read_archive(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn zero_length_member_roundtrips_and_detects_crc_tamper() {
+        let entries = vec![
+            Entry { name: "empty.npy".into(), data: vec![] },
+            Entry { name: "tail".into(), data: vec![7; 9] },
+        ];
+        let buf = write_archive(&entries);
+        let back = read_archive(&buf).unwrap();
+        assert_eq!(back[0].name, "empty.npy");
+        assert!(back[0].data.is_empty());
+        assert_eq!(back[1].data, vec![7; 9]);
+        // corrupt the central-directory CRC of the zero-length member:
+        // CRC-32 of b"" is 0, so flip a byte → mismatch error, no panic
+        let cd_off = {
+            let eocd = buf.len() - 22;
+            u32::from_le_bytes([buf[eocd + 16], buf[eocd + 17], buf[eocd + 18], buf[eocd + 19]])
+                as usize
+        };
+        let mut bad = buf.clone();
+        bad[cd_off + 16] ^= 0x01; // first CRC byte of entry 0
+        let err = read_archive(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC-32"), "{err}");
+    }
+
+    #[test]
+    fn lying_entry_count_is_an_error_not_a_panic() {
+        let entries = vec![Entry { name: "x".into(), data: vec![1, 2, 3] }];
+        let mut buf = write_archive(&entries);
+        // EOCD total-entry count at offset 10: claim 5 entries where the
+        // central directory holds 1 — the reader must bail on the walk
+        let eocd = buf.len() - 22;
+        buf[eocd + 10] = 5;
+        assert!(read_archive(&buf).is_err());
+    }
+
+    #[test]
+    fn out_of_range_central_directory_offset_is_an_error() {
+        let entries = vec![Entry { name: "x".into(), data: vec![1] }];
+        let mut buf = write_archive(&entries);
+        let eocd = buf.len() - 22;
+        // point the CD offset past the end of the buffer
+        buf[eocd + 16..eocd + 20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_archive(&buf).is_err());
+        // and at the EOCD itself (not a CD signature)
+        let mut buf2 = write_archive(&entries);
+        let off = (buf2.len() - 22) as u32;
+        let eocd2 = buf2.len() - 22;
+        buf2[eocd2 + 16..eocd2 + 20].copy_from_slice(&off.to_le_bytes());
+        assert!(read_archive(&buf2).is_err());
+    }
 }

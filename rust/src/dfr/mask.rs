@@ -37,6 +37,21 @@ impl Mask {
         Mask { nx, v, m }
     }
 
+    /// The closed-form input series paired with [`golden`](Self::golden)
+    /// — mirrors `python/tests/make_golden.py::inputs` (computed in f64
+    /// then cast, exactly as numpy does), so every cross-language golden
+    /// suite regenerates identical data from ONE definition.
+    pub fn golden_inputs(t: usize, v: usize) -> Vec<f32> {
+        let mut u = Vec::with_capacity(t * v);
+        for k in 1..=t {
+            for vv in 1..=v {
+                let x = (0.1f64 * k as f64 * vv as f64).sin() + 0.05 * (0.3f64 * k as f64).cos();
+                u.push(x as f32);
+            }
+        }
+        u
+    }
+
     /// Apply the mask: `j = M u` for one time step (`u` has V entries,
     /// result has Nx entries).
     pub fn apply(&self, u_t: &[f32], j_out: &mut [f32]) {

@@ -54,6 +54,33 @@ impl Nonlinearity {
         }
     }
 
+    /// Upper bound on |f'| over the whole real line — the Lipschitz
+    /// constant the quantized datapath's error budget propagates input
+    /// error through (`quant::budget`).
+    #[inline]
+    pub fn lipschitz_bound(self) -> f32 {
+        match self {
+            Nonlinearity::Linear { alpha } => alpha.abs(),
+            Nonlinearity::Tanh => 1.0,
+            // |f'| = η|1 + (1−p)a|/(1+a)² with a = |x|^p ≥ 0 peaks at
+            // η at a = 0 for p ≤ 2; η·(p−1) majorizes the tail beyond
+            Nonlinearity::MackeyGlass { eta, p_exp } => {
+                eta.abs() * 1.0f32.max(p_exp - 1.0)
+            }
+        }
+    }
+
+    /// Upper bound on |f(x)| over |x| ≤ `m` (error-budget input).
+    #[inline]
+    pub fn abs_bound(self, m: f32) -> f32 {
+        match self {
+            Nonlinearity::Linear { alpha } => alpha.abs() * m,
+            Nonlinearity::Tanh => 1.0f32.min(m),
+            // |x|/(1 + |x|^p) ≤ |x|
+            Nonlinearity::MackeyGlass { eta, .. } => eta.abs() * m,
+        }
+    }
+
     /// Derivative f'(x) — needed by full BPTT (Eq. 30).
     #[inline(always)]
     pub fn deriv(self, x: f32) -> f32 {

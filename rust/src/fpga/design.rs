@@ -15,7 +15,7 @@
 //! being asserted (their baseline was scalar, unvectorised HLS C++).
 
 use super::power::{energy_j, fpga_power_w, CORTEX_A9_POWER_W};
-use super::resource::{bram_for_words, FpOp, ResourceBudget, ResourceUsage, XC7Z020};
+use super::resource::{bram_for_words_arith, Arith, FpOp, ResourceBudget, ResourceUsage, XC7Z020};
 use super::schedule::{
     infer_cycles, ridge_accumulate_cycles, ridge_solve_cycles, train_step_cycles,
     ScheduleConfig, ShapeParams,
@@ -33,14 +33,22 @@ pub struct Module {
 
 impl Module {
     pub fn resources(&self) -> ResourceUsage {
+        self.resources_arith(Arith::F32)
+    }
+
+    /// Module resources on the given datapath: operator cores swap for
+    /// their width-scaled variants and the BRAM word storage packs
+    /// denser; the control/interface overhead (state machines, AXI) is
+    /// width-independent and carries over unchanged.
+    pub fn resources_arith(&self, a: Arith) -> ResourceUsage {
         let mut u = ResourceUsage {
             lut: self.control_lut,
             ff: self.control_ff,
-            bram36: bram_for_words(self.bram_words),
+            bram36: bram_for_words_arith(self.bram_words, a),
             ..Default::default()
         };
         for (op, n) in &self.ops {
-            u.add(&op.cost().scaled(*n));
+            u.add(&op.cost_arith(a).scaled(*n));
         }
         u
     }
@@ -93,14 +101,27 @@ pub struct SystemModel {
     pub shape: ShapeParams,
     pub config: DesignConfig,
     pub clock_hz: f64,
+    /// datapath word ([`Arith::F32`] keeps the seed model's numbers; a
+    /// `quant::sweep`-chosen fixed-point width makes Tables 9/11
+    /// width-aware)
+    pub arith: Arith,
 }
 
 impl SystemModel {
     pub fn new(shape: ShapeParams, config: DesignConfig) -> Self {
+        Self::with_arith(shape, config, Arith::F32)
+    }
+
+    /// Model the same design on a different datapath word — resources
+    /// and power scale with width; the cycle schedule stays the paper's
+    /// (conservative for fixed point, whose 1-cycle adds would also lift
+    /// the RMW-limited IIs — see `schedule::accumulation_ii_arith`).
+    pub fn with_arith(shape: ShapeParams, config: DesignConfig, arith: Arith) -> Self {
         SystemModel {
             shape,
             config,
             clock_hz: 100e6, // the paper's achieved clock
+            arith,
         }
     }
 
@@ -166,7 +187,7 @@ impl SystemModel {
             ..Default::default()
         };
         for m in self.modules() {
-            u.add(&m.resources());
+            u.add(&m.resources_arith(self.arith));
         }
         u
     }
@@ -393,5 +414,35 @@ mod tests {
     fn power_in_paper_band() {
         let p = SystemModel::new(jpvow(), DesignConfig::Standard).power_w();
         assert!((0.5..=1.1).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn fixed_point_datapath_shrinks_resources_and_power() {
+        let shape = jpvow();
+        let f32_m = SystemModel::new(shape, DesignConfig::Standard);
+        let fx16 = SystemModel::with_arith(
+            shape,
+            DesignConfig::Standard,
+            Arith::Fixed { bits: 16 },
+        );
+        let rf = f32_m.total_resources();
+        let rq = fx16.total_resources();
+        assert!(rq.lut < rf.lut, "lut {} vs {}", rq.lut, rf.lut);
+        assert!(rq.dsp < rf.dsp, "dsp {} vs {}", rq.dsp, rf.dsp);
+        assert!(rq.bram36 <= rf.bram36, "bram {} vs {}", rq.bram36, rf.bram36);
+        assert!(fx16.power_w() < f32_m.power_w());
+        assert!(rq.fits(&XC7Z020));
+        // timing model unchanged (schedule is width-agnostic here)
+        assert_eq!(
+            f32_m.training_seconds(270, 25, 4),
+            fx16.training_seconds(270, 25, 4)
+        );
+        // widening back to 32-bit fixed point costs more than 16-bit
+        let fx32 = SystemModel::with_arith(
+            shape,
+            DesignConfig::Standard,
+            Arith::Fixed { bits: 32 },
+        );
+        assert!(fx32.total_resources().dsp > rq.dsp);
     }
 }

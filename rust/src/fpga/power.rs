@@ -32,6 +32,14 @@ pub fn fpga_power_w(usage: &ResourceUsage, clock_hz: f64) -> f32 {
     STATIC_W + dynamic * f_scale
 }
 
+/// Fractional power saving of a narrower datapath vs a baseline at the
+/// same clock — what `quant::sweep` reports per candidate width (the
+/// dynamic term scales with the width-dependent resource usage; the
+/// static floor is shared, so savings saturate below 1).
+pub fn power_saving_fraction(base: &ResourceUsage, narrow: &ResourceUsage, clock_hz: f64) -> f32 {
+    1.0 - fpga_power_w(narrow, clock_hz) / fpga_power_w(base, clock_hz)
+}
+
 /// Cortex-A9 (dual-core, 667 MHz) active power running the SW pipeline —
 /// the paper measures 1.530 W processor power.
 pub const CORTEX_A9_POWER_W: f32 = 1.530;
@@ -87,5 +95,14 @@ mod tests {
     #[test]
     fn energy_product() {
         assert_eq!(energy_j(2.0, 3.0), 6.0);
+    }
+
+    #[test]
+    fn narrower_datapath_saves_power_but_not_the_static_floor() {
+        let base = usage(33_674, 49_596, 143, 26.5);
+        let narrow = usage(12_000, 18_000, 40, 14.0);
+        let s = power_saving_fraction(&base, &narrow, 100e6);
+        assert!(s > 0.0 && s < 1.0, "{s}");
+        assert_eq!(power_saving_fraction(&base, &base, 100e6), 0.0);
     }
 }

@@ -88,7 +88,35 @@ pub struct Utilization {
     pub dsp: f32,
 }
 
-/// f32 operator cores (per parallel instance).
+/// Datapath arithmetic: the f32 IP cores the seed model assumed, or a
+/// W-bit fixed-point word (`quant::QFormat::bits`) — what the paper's
+/// actual FPGA datapath uses and what `quant::sweep` selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arith {
+    F32,
+    /// two's-complement fixed point, `bits` total width
+    Fixed { bits: u32 },
+}
+
+impl Arith {
+    pub fn bits(self) -> u32 {
+        match self {
+            Arith::F32 => 32,
+            Arith::Fixed { bits } => bits,
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Arith::F32 => "f32".to_string(),
+            Arith::Fixed { bits } => format!("fx{bits}"),
+        }
+    }
+}
+
+/// Operator cores (per parallel instance). Costs/latencies depend on the
+/// datapath [`Arith`]; the argument-less accessors keep the seed model's
+/// f32 numbers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FpOp {
     Add,
@@ -100,8 +128,60 @@ pub enum FpOp {
 }
 
 impl FpOp {
-    /// Synthesis cost of one pipelined instance.
+    /// Synthesis cost of one pipelined f32 instance.
     pub fn cost(self) -> ResourceUsage {
+        self.cost_arith(Arith::F32)
+    }
+
+    /// Synthesis cost of one pipelined instance on the given datapath.
+    ///
+    /// Fixed-point numbers follow 7-series synthesis practice: an add is
+    /// a W-bit carry chain (no DSP), a W×W multiply maps onto DSP48E1
+    /// slices (25×18 — one slice up to 18 bits, two to 25, four beyond),
+    /// and div/sqrt are W-stage non-restoring arrays whose area grows
+    /// ~W² (still far below the iterative f32 cores at W ≤ 18).
+    pub fn cost_arith(self, a: Arith) -> ResourceUsage {
+        if let Arith::Fixed { bits } = a {
+            let w = bits;
+            return match self {
+                FpOp::Add => ResourceUsage {
+                    lut: w,
+                    ff: w,
+                    dsp: 0,
+                    ..Default::default()
+                },
+                FpOp::Mul => ResourceUsage {
+                    lut: 30,
+                    ff: w,
+                    dsp: if w <= 18 {
+                        1
+                    } else if w <= 25 {
+                        2
+                    } else {
+                        4
+                    },
+                    ..Default::default()
+                },
+                FpOp::Div => ResourceUsage {
+                    lut: w * w / 2,
+                    ff: w * w / 2,
+                    dsp: 0,
+                    ..Default::default()
+                },
+                FpOp::Sqrt => ResourceUsage {
+                    lut: w * w / 4,
+                    ff: w * w / 4,
+                    dsp: 0,
+                    ..Default::default()
+                },
+                FpOp::Cmp => ResourceUsage {
+                    lut: w / 2 + 4,
+                    ff: w / 2,
+                    dsp: 0,
+                    ..Default::default()
+                },
+            };
+        }
         match self {
             FpOp::Add => ResourceUsage {
                 lut: 360,
@@ -138,6 +218,29 @@ impl FpOp {
 
     /// Pipeline latency in cycles at 100 MHz (7-series FP IP defaults).
     pub fn latency(self) -> u32 {
+        self.latency_arith(Arith::F32)
+    }
+
+    /// Latency on the given datapath. Fixed-point adds close in one
+    /// cycle (this is what collapses the read-modify-write II that the
+    /// paper's Algorithm-5 write buffer exists to hide — see
+    /// `schedule::accumulation_ii_arith`); multiplies take the DSP48
+    /// pipeline, div/sqrt one cycle per result bit.
+    pub fn latency_arith(self, a: Arith) -> u32 {
+        if let Arith::Fixed { bits } = a {
+            return match self {
+                FpOp::Add | FpOp::Cmp => 1,
+                FpOp::Mul => {
+                    if bits <= 18 {
+                        3
+                    } else {
+                        4
+                    }
+                }
+                FpOp::Div => bits + 3,
+                FpOp::Sqrt => bits / 2 + 3,
+            };
+        }
         match self {
             // 4-stage adder (medium-latency 7-series FP config at
             // 100 MHz) — chosen so RegSize=4 legalises II=1, which is
@@ -154,8 +257,21 @@ impl FpOp {
 /// BRAM blocks needed for `words` f32 words (36 kb block = 1024 words,
 /// used in true-dual-port 18 kb halves like HLS does → count halves).
 pub fn bram_for_words(words: usize) -> f32 {
-    // one 18 kb half holds 512 f32 words
-    let halves = words.div_ceil(512);
+    bram_for_words_arith(words, Arith::F32)
+}
+
+/// BRAM blocks for `words` datapath words of the given [`Arith`]. A
+/// 7-series 18 kb half provides 18 432 bits in 9-bit parity lanes, so a
+/// word occupies its width rounded up to a multiple of 9: 512 f32 words
+/// per half (32→36 bits), 1024 16-bit words (16→18), 2048 8-bit words —
+/// narrower datapaths halve the memory footprint alongside the logic.
+pub fn bram_for_words_arith(words: usize, a: Arith) -> f32 {
+    if words == 0 {
+        return 0.0;
+    }
+    let phys_bits = a.bits().div_ceil(9).max(1) * 9;
+    let words_per_half = (18_432 / phys_bits).max(1) as usize;
+    let halves = words.div_ceil(words_per_half);
     halves as f32 * 0.5
 }
 
@@ -218,5 +334,42 @@ mod tests {
         assert_eq!(FpOp::Div.cost().dsp, 0);
         assert!(FpOp::Div.cost().lut > FpOp::Mul.cost().lut);
         assert!(FpOp::Sqrt.latency() > FpOp::Mul.latency());
+    }
+
+    #[test]
+    fn fixed_point_is_cheaper_than_f32_at_16_bits() {
+        let fx = Arith::Fixed { bits: 16 };
+        for op in [FpOp::Add, FpOp::Mul, FpOp::Div, FpOp::Sqrt, FpOp::Cmp] {
+            let f = op.cost_arith(Arith::F32);
+            let q = op.cost_arith(fx);
+            assert!(q.lut <= f.lut, "{op:?} lut {} vs {}", q.lut, f.lut);
+            assert!(q.dsp <= f.dsp, "{op:?} dsp");
+            assert!(op.latency_arith(fx) <= op.latency_arith(Arith::F32), "{op:?}");
+        }
+        // the add is a 1-cycle carry chain: no RMW recurrence to buffer
+        assert_eq!(FpOp::Add.latency_arith(fx), 1);
+        assert_eq!(FpOp::Mul.cost_arith(fx).dsp, 1);
+        // width scaling of the multiplier's DSP mapping
+        assert_eq!(FpOp::Mul.cost_arith(Arith::Fixed { bits: 24 }).dsp, 2);
+        assert_eq!(FpOp::Mul.cost_arith(Arith::Fixed { bits: 32 }).dsp, 4);
+    }
+
+    #[test]
+    fn arith_names_and_bits() {
+        assert_eq!(Arith::F32.bits(), 32);
+        assert_eq!(Arith::Fixed { bits: 16 }.name(), "fx16");
+        assert_eq!(Arith::F32.name(), "f32");
+    }
+
+    #[test]
+    fn bram_width_scaling() {
+        // f32 path unchanged
+        assert_eq!(bram_for_words_arith(512, Arith::F32), bram_for_words(512));
+        // 16-bit words pack 2x denser (18-bit parity lanes)
+        assert_eq!(bram_for_words_arith(1024, Arith::Fixed { bits: 16 }), 0.5);
+        assert_eq!(bram_for_words_arith(1025, Arith::Fixed { bits: 16 }), 1.0);
+        // 8-bit words 4x denser
+        assert_eq!(bram_for_words_arith(2048, Arith::Fixed { bits: 8 }), 0.5);
+        assert_eq!(bram_for_words_arith(0, Arith::Fixed { bits: 16 }), 0.0);
     }
 }

@@ -46,7 +46,15 @@ impl Loop {
 /// f32 adder with an optional write buffer of depth `reg_size`
 /// (Algorithm 5; `reg_size = 1` models the naive Algorithm 3/4 loop).
 pub fn accumulation_ii(reg_size: u32) -> u32 {
-    let dep = FpOp::Add.latency(); // the loop-carried add
+    accumulation_ii_arith(reg_size, super::resource::Arith::F32)
+}
+
+/// [`accumulation_ii`] on an explicit datapath. A fixed-point add closes
+/// in one cycle, so the loop-carried dependence that motivates the
+/// paper's Algorithm-5 write buffer disappears (II = 1 at RegSize = 1) —
+/// the quantized datapath gets the Fig. 10 speedup for free.
+pub fn accumulation_ii_arith(reg_size: u32, a: super::resource::Arith) -> u32 {
+    let dep = FpOp::Add.latency_arith(a); // the loop-carried add
     dep.div_ceil(reg_size.max(1))
 }
 
@@ -327,6 +335,9 @@ mod tests {
         assert_eq!(accumulation_ii(1), FpOp::Add.latency());
         assert!(accumulation_ii(4) < accumulation_ii(1));
         assert_eq!(accumulation_ii(8), 1);
+        // fixed-point 1-cycle add: no buffer needed for II=1
+        let fx = super::super::resource::Arith::Fixed { bits: 16 };
+        assert_eq!(accumulation_ii_arith(1, fx), 1);
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //!   (Algorithms 1–5) with op/memory counters (Tables 2–3).
 //! - [`dfr`] — pure-Rust DFR stack: masking, modular reservoir, DPRR,
 //!   truncated backpropagation, SGD, grid search.
+//! - [`quant`] — bit-accurate fixed-point datapath: Q-format words,
+//!   PWL-LUT nonlinearity, quantized forward + MAC inference behind the
+//!   same `Engine` trait, analytic error budgeting and width sweeps.
 //! - [`fpga`] — HLS-like co-design simulator substituting the Zynq board.
 //! - [`data`] — synthetic dataset generators (Table 4 profiles) + npz IO.
 //! - [`baselines`] — MLP / ESN comparators for Table 6.
@@ -27,4 +30,5 @@ pub mod fpga;
 pub mod baselines;
 pub mod runtime;
 pub mod coordinator;
+pub mod quant;
 pub mod report;

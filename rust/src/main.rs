@@ -108,7 +108,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("dataset", "jpvow", "Table 4 dataset profile")
         .opt("seed", "42", "seed")
         .opt("epochs", "25", "SGD epochs")
-        .opt("engine", "native", "compute engine: native | pjrt")
+        .opt("engine", "native", "compute engine: native | quant | pjrt")
+        .opt("qformat", "q4.12", "fixed-point word for the quant engine (q4.12 | q6.10 | q8.8 | qI.F)")
         .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
         .opt("collect", "0", "collect target (0 = whole training split)")
         .opt("shards", "0", "coordinator worker shards (0 = one per core)");
@@ -124,6 +125,17 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
 
     let engine: Box<dyn dfr_edge::coordinator::Engine> = match p.get("engine") {
         "native" => Box::new(NativeEngine::new(scfg.train.nx, prof.n_c)),
+        "quant" => {
+            let fmt = dfr_edge::quant::QFormat::parse(p.get("qformat"))
+                .ok_or_else(|| format!("bad --qformat '{}' (try q4.12)", p.get("qformat")))?;
+            log_info!("quant engine: {} datapath (PWL-LUT nonlinearity)", fmt.name());
+            Box::new(dfr_edge::quant::QuantEngine::with_config(
+                scfg.train.nx,
+                prof.n_c,
+                scfg.train.f,
+                dfr_edge::quant::QuantConfig::with_format(fmt),
+            ))
+        }
         "pjrt" => {
             let manifest = Manifest::load(p.get("artifacts")).map_err(|e| format!("{e:#}"))?;
             let pa = manifest.profile(prof.name).map_err(|e| format!("{e:#}"))?;

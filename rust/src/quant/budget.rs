@@ -1,0 +1,187 @@
+//! Analytic error budget of the quantized datapath.
+//!
+//! Answers "how far can the Q-format forward pass drift from the f32
+//! reference?" with a worst-case first-order bound — the number the
+//! equivalence tests assert against and the width-selection sweep ranks
+//! formats by. Validated against an exact integer mirror of the datapath
+//! in `python/tests/quant_mirror.py` (observed margins 2–40× on the
+//! golden-fixture configurations).
+//!
+//! # Derivation
+//!
+//! Let δ = 2⁻ᶠ be the LSB and write e(·) for worst-case absolute error
+//! vs exact real arithmetic over f32 inputs. Per forward step:
+//!
+//! * input quantization: e(u) ≤ δ/2, so the ±1 add tree gives
+//!   e(j) ≤ V·δ/2 (the i64 accumulation itself is exact);
+//! * node update `x_n = p·f(j + x_n) + q·x_{n−1}` accrues
+//!   - `p·(ε_f + L_f·(e(j) + e(x)))` — LUT sup-error ε_f (measured at
+//!     construction) plus input error through f's Lipschitz bound L_f,
+//!   - `(|f|_max + x_max)·δ/2` — quantization of p and q themselves,
+//!   - `δ` — the two product rescales (half-LSB each),
+//!   - `|q|·e(x_{n−1})` — the cascade recurrence *within* the step;
+//! * the DPRR wide accumulation is exact; normalization adds the
+//!   reciprocal's resolution (`x_max²·T·2⁻²ᶠ/2`) and one final rescale
+//!   (δ/2); each accumulated product contributes `2·x_max·e(x) + e(x)²`.
+//!
+//! The within-step cascade and the across-step state recurrences are
+//! iterated *numerically* (T × Nx scalar steps) rather than solved in
+//! closed form — for `p·L_f + |q| < 1` they converge geometrically; when
+//! the contraction fails, or when the workload's dynamic range does not
+//! fit the format's integer bits (saturation voids a linear error
+//! model), the bound is `+∞`, which the sweep reads as "this format is
+//! unusable here".
+
+use super::fixed::QFormat;
+
+/// Workload description the bound is evaluated against. The magnitudes
+/// (`x_max`, `u_max`, `f_max`) come from the f32 reference trajectory —
+/// the bound is per-workload, which is what makes it tight enough to be
+/// useful (a range-free bound would have to assume full-scale signals).
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetInputs {
+    pub p: f32,
+    pub q: f32,
+    /// Lipschitz bound of the nonlinearity
+    /// ([`Nonlinearity::lipschitz_bound`](crate::dfr::reservoir::Nonlinearity::lipschitz_bound))
+    pub lf: f32,
+    /// measured LUT sup-error ([`PwlLut::max_err`](super::lut::PwlLut::max_err))
+    pub eps_f: f32,
+    pub t: usize,
+    pub nx: usize,
+    pub v: usize,
+    /// max |x(k)_n| of the f32 reference trajectory
+    pub x_max: f32,
+    /// max |u| of the series
+    pub u_max: f32,
+    /// max |f(arg)| over the trajectory (e.g. `f.abs_bound(x_max + j_max)`)
+    pub f_max: f32,
+}
+
+/// Worst-case |r̃_quant − r̃_f32| per element, or `+∞` when the format
+/// cannot represent the workload (range overflow or no contraction).
+pub fn r_tilde_error_bound(fmt: QFormat, inp: &BudgetInputs) -> f32 {
+    let lsb = fmt.lsb();
+    let half = 0.5 * lsb;
+    let (ap, aq) = (inp.p.abs(), inp.q.abs());
+    // range check: every word the datapath forms must fit the format
+    // (5% headroom for the quantization error itself); saturation breaks
+    // the linear error model, so an out-of-range workload gets +∞
+    let j_max = inp.v as f32 * inp.u_max;
+    let word_max = inp
+        .x_max
+        .max(j_max)
+        .max(j_max + inp.x_max)
+        .max(inp.f_max);
+    if word_max * 1.05 > fmt.max_value() {
+        return f32::INFINITY;
+    }
+    if ap * inp.lf + aq >= 1.0 {
+        return f32::INFINITY;
+    }
+    let e_j = inp.v as f32 * half;
+    let mut e_state = 0.0f32;
+    for _ in 0..inp.t {
+        let mut e_prev_node = e_state;
+        let mut worst = 0.0f32;
+        for _ in 0..inp.nx {
+            let e_n = ap * inp.lf * (e_j + e_state)
+                + ap * inp.eps_f
+                + (inp.f_max + inp.x_max) * half // p/q quantization
+                + lsb // two product rescales, half-LSB each
+                + aq * e_prev_node;
+            e_prev_node = e_n;
+            if e_n > worst {
+                worst = e_n;
+            }
+        }
+        e_state = worst;
+        if !e_state.is_finite() || e_state > 1e6 {
+            return f32::INFINITY;
+        }
+    }
+    let inv_t_term =
+        inp.x_max * inp.x_max * inp.t as f32 * (-2.0 * fmt.frac as f64).exp2() as f32 / 2.0;
+    2.0 * inp.x_max * e_state + e_state * e_state + inv_t_term + half
+}
+
+/// Worst-case error of one quantized ridge score `Σ_k w_k·r̃_k` given a
+/// per-element feature bound `r_bound` (from [`r_tilde_error_bound`]):
+/// weights are quantized to δ/2, features carry `r_bound`, the wide MAC
+/// is exact, and one rescale closes the sum.
+pub fn score_error_bound(fmt: QFormat, s: usize, w_max: f32, r_max: f32, r_bound: f32) -> f32 {
+    let half = 0.5 * fmt.lsb();
+    if !r_bound.is_finite() {
+        return f32::INFINITY;
+    }
+    s as f32 * (w_max * r_bound + (r_max + r_bound) * half) + half
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> BudgetInputs {
+        BudgetInputs {
+            p: 0.2,
+            q: 0.15,
+            lf: 1.0,
+            eps_f: 0.0,
+            t: 12,
+            nx: 5,
+            v: 2,
+            x_max: 0.2,
+            u_max: 1.05,
+            f_max: 2.5,
+        }
+    }
+
+    #[test]
+    fn bound_is_finite_and_small_in_the_stable_region() {
+        let b = r_tilde_error_bound(QFormat::q4_12(), &base());
+        assert!(b.is_finite());
+        // python/tests/quant_mirror.py measures ~1.3e-4 deviation and a
+        // ~3.2e-4 bound on this configuration
+        assert!(b > 1e-5 && b < 2e-3, "{b}");
+    }
+
+    #[test]
+    fn bound_grows_with_coarser_formats() {
+        let inp = base();
+        let fine = r_tilde_error_bound(QFormat::q4_12(), &inp);
+        let mid = r_tilde_error_bound(QFormat::q6_10(), &inp);
+        let coarse = r_tilde_error_bound(QFormat::q8_8(), &inp);
+        assert!(fine < mid && mid < coarse, "{fine} {mid} {coarse}");
+    }
+
+    #[test]
+    fn bound_infinite_outside_contraction() {
+        let inp = BudgetInputs {
+            p: 0.7,
+            q: 0.5,
+            ..base()
+        };
+        assert!(r_tilde_error_bound(QFormat::q4_12(), &inp).is_infinite());
+    }
+
+    #[test]
+    fn bound_infinite_when_range_overflows() {
+        // V=12 channels of |u| ≤ 1.05 → j up to 12.6, beyond Q4.12's ±8
+        let inp = BudgetInputs {
+            v: 12,
+            ..base()
+        };
+        assert!(r_tilde_error_bound(QFormat::q4_12(), &inp).is_infinite());
+        // Q6.10 (±32) absorbs it
+        assert!(r_tilde_error_bound(QFormat::q6_10(), &inp).is_finite());
+    }
+
+    #[test]
+    fn score_bound_scales_with_dimension() {
+        let f = QFormat::q4_12();
+        let a = score_error_bound(f, 31, 0.5, 2.0, 1e-4);
+        let b = score_error_bound(f, 931, 0.5, 2.0, 1e-4);
+        assert!(b > a);
+        assert!(score_error_bound(f, 10, 1.0, 1.0, f32::INFINITY).is_infinite());
+    }
+}

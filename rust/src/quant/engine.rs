@@ -1,0 +1,294 @@
+//! [`QuantEngine`] — the quantized datapath behind the sharded
+//! coordinator.
+//!
+//! Implements [`Engine`] so quantized serving is a config switch, not a
+//! code path: `features`/`infer` run the bit-accurate Q-format forward
+//! pass + integer MAC output layer, while `train_step` delegates to the
+//! f32 [`NativeEngine`] — mirroring the deployment split where the
+//! truncated-BP parameter search runs on the PS (ARM) side in float and
+//! the serving datapath is the PL's fixed-point pipeline. The ridge
+//! phase therefore trains on **quantized** features (what the hardware
+//! will actually produce at inference time), which is the
+//! quantization-aware choice.
+//!
+//! Steady-state `features_into`/`infer_into` perform **zero heap
+//! allocations** (per-replica workspace + in-place mask refresh +
+//! grow-only quantized-weight cache) — asserted by the counting
+//! allocator in `tests/zero_alloc.rs`.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, NativeEngine};
+use crate::data::dataset::Sample;
+use crate::dfr::backprop::softmax_inplace;
+use crate::dfr::mask::Mask;
+use crate::dfr::reservoir::Nonlinearity;
+use crate::runtime::executor::TrainState;
+
+use super::reservoir::{QuantForwardScratch, QuantReservoir};
+use super::QuantConfig;
+
+/// The fixed-point compute engine (see module docs).
+pub struct QuantEngine {
+    pub nx: usize,
+    pub n_c: usize,
+    pub f: Nonlinearity,
+    pub cfg: QuantConfig,
+    /// f32 reference backing `train_step` (PS-side SGD)
+    native: NativeEngine,
+    /// per-replica workspace; never contended — each shard exclusively
+    /// owns its engine replica (`Engine: Send`, not `Sync`)
+    scratch: RefCell<QuantScratch>,
+}
+
+struct QuantScratch {
+    res: QuantReservoir,
+    fwd: QuantForwardScratch,
+    /// quantized output-layer cache, refreshed in place per infer
+    qw: Vec<i32>,
+}
+
+impl QuantEngine {
+    pub fn new(nx: usize, n_c: usize) -> Self {
+        Self::with_config(
+            nx,
+            n_c,
+            Nonlinearity::Linear { alpha: 1.0 },
+            QuantConfig::default(),
+        )
+    }
+
+    pub fn with_config(nx: usize, n_c: usize, f: Nonlinearity, cfg: QuantConfig) -> Self {
+        let placeholder = Mask {
+            nx,
+            v: 0,
+            m: Vec::new(),
+        };
+        // a segment must span at least one raw unit: narrow words (e.g.
+        // a parsed --qformat q2.3) clamp the LUT size instead of
+        // tripping PwlLut's assert
+        let lut_segments = cfg.lut_log2_segments.min(cfg.arith.fmt.bits).max(1);
+        QuantEngine {
+            nx,
+            n_c,
+            f,
+            cfg,
+            native: NativeEngine::with_nonlinearity(nx, n_c, f),
+            scratch: RefCell::new(QuantScratch {
+                res: QuantReservoir::new(placeholder, f, cfg.arith, lut_segments),
+                fwd: QuantForwardScratch::new(nx, 0),
+                qw: Vec::new(),
+            }),
+        }
+    }
+
+    /// Saturation count of the most recent forward pass — 0 means the
+    /// error budget's no-overflow assumption held for that sample.
+    pub fn last_saturations(&self) -> u64 {
+        self.scratch.borrow().fwd.saturations()
+    }
+
+    /// Run the quantized forward into the replica workspace (in-place
+    /// mask refresh, reallocation only on shape change — zero
+    /// steady-state allocations).
+    fn forward_scratch(&self, s: &Sample, mask: &Mask, p: f32, q: f32, sc: &mut QuantScratch) {
+        if sc.res.mask.nx != mask.nx || sc.res.mask.v != mask.v {
+            sc.res.mask = mask.clone();
+        } else if sc.res.mask.m != mask.m {
+            sc.res.mask.m.copy_from_slice(&mask.m);
+        }
+        sc.res.set_params(p, q);
+        sc.res.forward_into(&s.u, s.t, &mut sc.fwd);
+    }
+}
+
+impl Engine for QuantEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        // PS-side f32 SGD (see module docs) — the quantized datapath
+        // only serves features/inference
+        self.native.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.features_into(s, mask, p, q, &mut out)?;
+        Ok(out)
+    }
+
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut sc = self.scratch.borrow_mut();
+        self.forward_scratch(s, mask, p, q, &mut sc);
+        sc.fwd.r_tilde_into(self.cfg.arith, out);
+        Ok(())
+    }
+
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {
+        let mut z = Vec::new();
+        self.infer_into(s, mask, p, q, w_tilde, &mut z)?;
+        Ok(z)
+    }
+
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut sc = self.scratch.borrow_mut();
+        self.forward_scratch(s, mask, p, q, &mut sc);
+        let arith = self.cfg.arith;
+        let frac = arith.fmt.frac;
+        // requantize the served layer into the grow-only cache — O(ny·s)
+        // compares-and-stores, cheaper than the forward pass it follows
+        if sc.qw.len() != w_tilde.len() {
+            sc.qw.resize(w_tilde.len(), 0);
+        }
+        for (qw, &w) in sc.qw.iter_mut().zip(w_tilde) {
+            *qw = arith.quantize(w);
+        }
+        // integer MAC per class: products at scale 2²ᶠ accumulated in
+        // i64 (exact), one dequantizing rescale per output score
+        let sc_ref = &*sc;
+        let n_r = sc_ref.fwd.r_mat_raw().len();
+        let sdim = n_r + 1;
+        let ny = w_tilde.len() / sdim;
+        scores.clear();
+        scores.reserve(ny);
+        let inv_scale = (-2.0 * f64::from(frac)).exp2();
+        for i in 0..ny {
+            let row = &sc_ref.qw[i * sdim..(i + 1) * sdim];
+            let mut acc: i64 = 0;
+            for (&w, &r) in row[..n_r].iter().zip(sc_ref.fwd.r_mat_raw()) {
+                acc += i64::from(w) * i64::from(r);
+            }
+            // the tilde-1 feature: constant 1.0 is exactly 1 << frac
+            acc += i64::from(row[n_r]) << frac;
+            scores.push((acc as f64 * inv_scale) as f32);
+        }
+        softmax_inplace(scores);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "quant"
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        // configuration-only state: replicas rebuild their own LUT and
+        // workspace
+        Some(Box::new(QuantEngine::with_config(
+            self.nx, self.n_c, self.f, self.cfg,
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fixed::{QArith, QFormat};
+    use crate::util::prng::Pcg32;
+
+    fn sample(t: usize, v: usize, seed: u64, label: usize) -> Sample {
+        let mut rng = Pcg32::seed(seed);
+        Sample {
+            u: (0..t * v).map(|_| 0.5 * rng.normal()).collect(),
+            t,
+            label,
+        }
+    }
+
+    #[test]
+    fn infer_is_probability() {
+        let eng = QuantEngine::new(6, 2);
+        let mask = Mask::golden(6, 2);
+        let s = sample(9, 2, 2, 0);
+        let sdim = 6 * 7 + 1;
+        let w = vec![0.01f32; 2 * sdim];
+        let y = eng.infer(&s, &mask, 0.2, 0.1, &w).unwrap();
+        assert_eq!(y.len(), 2);
+        assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(eng.last_saturations(), 0);
+    }
+
+    #[test]
+    fn features_close_to_native_and_end_with_one() {
+        let eng = QuantEngine::new(5, 2);
+        let nat = NativeEngine::new(5, 2);
+        let mask = Mask::golden(5, 2);
+        let s = sample(11, 2, 3, 0);
+        let fq = eng.features(&s, &mask, 0.2, 0.15).unwrap();
+        let ff = nat.features(&s, &mask, 0.2, 0.15).unwrap();
+        assert_eq!(fq.len(), ff.len());
+        assert_eq!(*fq.last().unwrap(), 1.0);
+        for (i, (a, b)) in fq.iter().zip(&ff).enumerate() {
+            // loose sanity here; the tight analytic-bound assertion
+            // lives in tests/quant_equivalence.rs
+            assert!((a - b).abs() < 5e-3, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn train_step_delegates_to_f32_reference() {
+        let eng = QuantEngine::new(8, 3);
+        let mask = Mask::golden(8, 2);
+        let mut st = TrainState::init(3, 8, 0.1, 0.1);
+        let s = sample(12, 2, 1, 1);
+        let l = eng.train_step(&s, &mask, &mut st, 0.1, 0.1).unwrap();
+        assert!(l.is_finite());
+        assert!(st.w.iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn narrow_parsed_format_builds_and_serves() {
+        // a CLI-parsed 5-bit word must clamp the LUT size, not panic
+        let fmt = QFormat::parse("q2.3").unwrap();
+        let eng = QuantEngine::with_config(
+            4,
+            2,
+            Nonlinearity::Linear { alpha: 1.0 },
+            QuantConfig::with_format(fmt),
+        );
+        let mask = Mask::golden(4, 2);
+        let s = sample(6, 2, 9, 0);
+        let w = vec![0.01f32; 2 * (4 * 5 + 1)];
+        let y = eng.infer(&s, &mask, 0.2, 0.1, &w).unwrap();
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn fork_replicates_config() {
+        let cfg = QuantConfig {
+            arith: QArith::new(QFormat::q6_10()),
+            lut_log2_segments: 7,
+        };
+        let eng = QuantEngine::with_config(6, 2, Nonlinearity::Tanh, cfg);
+        let replica = eng.fork().expect("quant engines fork freely");
+        assert_eq!(replica.name(), "quant");
+        // identical results through the replica
+        let mask = Mask::golden(6, 2);
+        let s = sample(9, 2, 5, 0);
+        let a = eng.features(&s, &mask, 0.2, 0.1).unwrap();
+        let b = replica.features(&s, &mask, 0.2, 0.1).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,346 @@
+//! Runtime Q-format fixed-point arithmetic — the FPGA datapath word.
+//!
+//! HLS designs pick one `ap_fixed<W, I>` word per datapath; this module
+//! is the bit-accurate software model of that word: two's-complement
+//! `W`-bit raw values (stored in `i32`, computed through `i64`), a
+//! runtime [`QFormat`] carrying the total/fractional split, and the two
+//! HLS quantization knobs — [`Rounding`] (`AP_RND` half-up vs `AP_TRN`
+//! truncation) and [`Overflow`] (`AP_SAT` saturation vs `AP_WRAP`
+//! two's-complement wrap).
+//!
+//! Every operation is exact integer arithmetic: a product of two raw
+//! values is formed in `i64` at scale `2^(2F)` and brought back to the
+//! word with **one** rounding — the same single-rounding semantics the
+//! synthesized multiplier has, which is what makes the software model
+//! bit-accurate rather than "f32 but noisier".
+
+/// Runtime Q-format: `bits` total (two's complement, sign included) with
+/// `frac` fractional bits — the classic `Q<I>.<F>` notation has
+/// `I = bits − frac` (sign included). `Q4.12` ⇒ 16-bit word, 12
+/// fractional bits, range [−8, 8) at resolution 2⁻¹².
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    /// total word width (2..=24; products and the T-long DPRR
+    /// accumulation must fit i64 — see [`QFormat::new`])
+    pub bits: u32,
+    /// fractional bits (1..bits — the datapath's product rescale rounds
+    /// by half an LSB, which needs at least one fractional bit)
+    pub frac: u32,
+}
+
+impl QFormat {
+    pub const fn new(bits: u32, frac: u32) -> Self {
+        assert!(bits >= 2 && bits <= 24, "word width out of the modelled range");
+        assert!(frac >= 1, "the product rescale needs at least one fractional bit");
+        assert!(frac < bits, "need at least the sign bit above the fraction");
+        QFormat { bits, frac }
+    }
+
+    /// Q4.12 — 16-bit word, range [−8, 8), resolution 2⁻¹².
+    pub const fn q4_12() -> Self {
+        QFormat::new(16, 12)
+    }
+
+    /// Q6.10 — 16-bit word, range [−32, 32), resolution 2⁻¹⁰.
+    pub const fn q6_10() -> Self {
+        QFormat::new(16, 10)
+    }
+
+    /// Q8.8 — 16-bit word, range [−128, 128), resolution 2⁻⁸.
+    pub const fn q8_8() -> Self {
+        QFormat::new(16, 8)
+    }
+
+    /// Parse "q4.12" / "Q6.10"-style names (the CLI `--qformat` values).
+    pub fn parse(name: &str) -> Option<QFormat> {
+        let rest = name.strip_prefix('q').or_else(|| name.strip_prefix('Q'))?;
+        let (int_s, frac_s) = rest.split_once('.')?;
+        let int_bits: u32 = int_s.parse().ok()?;
+        let frac: u32 = frac_s.parse().ok()?;
+        let bits = int_bits.checked_add(frac)?;
+        if !(2..=24).contains(&bits) || frac == 0 || frac >= bits {
+            return None;
+        }
+        Some(QFormat::new(bits, frac))
+    }
+
+    /// "Q4.12"-style display name.
+    pub fn name(&self) -> String {
+        format!("Q{}.{}", self.bits - self.frac, self.frac)
+    }
+
+    /// One unit in the last place, 2⁻ᶠ.
+    pub fn lsb(&self) -> f32 {
+        (-(self.frac as f64)).exp2() as f32
+    }
+
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Largest representable value (max_raw · 2⁻ᶠ).
+    pub fn max_value(&self) -> f32 {
+        self.max_raw() as f32 * self.lsb()
+    }
+
+    pub fn min_value(&self) -> f32 {
+        self.min_raw() as f32 * self.lsb()
+    }
+}
+
+/// Rounding applied whenever precision is dropped (requantization and
+/// post-product rescale).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Rounding {
+    /// round to nearest, ties up (add half, floor-shift) — HLS `AP_RND`
+    #[default]
+    Nearest,
+    /// truncate toward −∞ (plain arithmetic shift) — HLS `AP_TRN`
+    Floor,
+}
+
+/// Overflow handling whenever a result leaves the representable range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Overflow {
+    /// clamp to [min_raw, max_raw] — HLS `AP_SAT`
+    #[default]
+    Saturate,
+    /// keep the low `bits` bits (two's complement) — HLS `AP_WRAP`
+    Wrap,
+}
+
+/// A format plus its rounding/overflow modes: everything needed to
+/// evaluate one fixed-point operation. Copy-cheap; kernels pass it by
+/// value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QArith {
+    pub fmt: QFormat,
+    pub round: Rounding,
+    pub overflow: Overflow,
+}
+
+impl QArith {
+    pub fn new(fmt: QFormat) -> Self {
+        QArith {
+            fmt,
+            round: Rounding::default(),
+            overflow: Overflow::default(),
+        }
+    }
+
+    /// Bring an out-of-range wide value back into the word. `sats`
+    /// counts range violations (saturation in `Saturate` mode, wraps in
+    /// `Wrap` mode) — the error budget is only valid while this stays 0.
+    #[inline]
+    pub fn clamp_counting(&self, x: i64, sats: &mut u64) -> i32 {
+        let (lo, hi) = (self.fmt.min_raw(), self.fmt.max_raw());
+        if x >= lo && x <= hi {
+            return x as i32;
+        }
+        *sats += 1;
+        match self.overflow {
+            Overflow::Saturate => x.clamp(lo, hi) as i32,
+            Overflow::Wrap => {
+                let m = 1i64 << self.fmt.bits;
+                let w = x.rem_euclid(m);
+                (if w > hi { w - m } else { w }) as i32
+            }
+        }
+    }
+
+    #[inline]
+    pub fn clamp(&self, x: i64) -> i32 {
+        let mut sats = 0;
+        self.clamp_counting(x, &mut sats)
+    }
+
+    /// Drop `shift` low bits of a wide intermediate (one rounding), then
+    /// range-handle — the single-rounding product semantics.
+    #[inline]
+    pub fn rescale_counting(&self, wide: i64, shift: u32, sats: &mut u64) -> i32 {
+        debug_assert!(shift >= 1 && shift < 63);
+        let r = match self.round {
+            Rounding::Nearest => (wide + (1i64 << (shift - 1))) >> shift,
+            Rounding::Floor => wide >> shift,
+        };
+        self.clamp_counting(r, sats)
+    }
+
+    #[inline]
+    pub fn rescale(&self, wide: i64, shift: u32) -> i32 {
+        let mut sats = 0;
+        self.rescale_counting(wide, shift, &mut sats)
+    }
+
+    /// [`rescale_counting`](Self::rescale_counting) for the extra-wide
+    /// normalization product (accumulator × reciprocal, scale 2⁴ᶠ) — the
+    /// worst-case magnitude exceeds i64 for wide formats, so the shift
+    /// happens in i128. After the shift the value is ≤ 2^(2·bits−2−frac),
+    /// far inside i64 for every supported format.
+    #[inline]
+    pub fn rescale_wide_counting(&self, wide: i128, shift: u32, sats: &mut u64) -> i32 {
+        debug_assert!(shift >= 1 && shift < 127);
+        let r = match self.round {
+            Rounding::Nearest => (wide + (1i128 << (shift - 1))) >> shift,
+            Rounding::Floor => wide >> shift,
+        };
+        self.clamp_counting(r as i64, sats)
+    }
+
+    /// f32 → raw. NaN maps to 0; ±∞ saturates. Scaling runs in f64 so
+    /// the 2ᶠ factor is exact.
+    pub fn quantize(&self, x: f32) -> i32 {
+        let mut sats = 0;
+        self.quantize_counting(x, &mut sats)
+    }
+
+    /// [`quantize`](Self::quantize) with range-violation counting — the
+    /// datapath's input conversion uses this so that an out-of-range
+    /// input series shows up in the forward pass's saturation counter.
+    pub fn quantize_counting(&self, x: f32, sats: &mut u64) -> i32 {
+        if x.is_nan() {
+            return 0;
+        }
+        let scaled = f64::from(x) * (1i64 << self.fmt.frac) as f64;
+        // beyond ±2^40 the word is out of range for every supported
+        // format; pre-clamp so the f64→i64 cast stays in range
+        let r = match self.round {
+            Rounding::Nearest => (scaled + 0.5).floor(),
+            Rounding::Floor => scaled.floor(),
+        }
+        .clamp(-(2f64.powi(40)), 2f64.powi(40));
+        self.clamp_counting(r as i64, sats)
+    }
+
+    /// raw → f32 (exact: raw · 2⁻ᶠ is representable for all ≤24-bit raws).
+    #[inline]
+    pub fn dequantize(&self, raw: i32) -> f32 {
+        raw as f32 * self.fmt.lsb()
+    }
+
+    /// Word-width addition.
+    #[inline]
+    pub fn add_counting(&self, a: i32, b: i32, sats: &mut u64) -> i32 {
+        self.clamp_counting(i64::from(a) + i64::from(b), sats)
+    }
+
+    /// Word-width product: i64 intermediate at scale 2²ᶠ, one rescale.
+    #[inline]
+    pub fn mul_counting(&self, a: i32, b: i32, sats: &mut u64) -> i32 {
+        self.rescale_counting(i64::from(a) * i64::from(b), self.fmt.frac, sats)
+    }
+
+    pub fn add(&self, a: i32, b: i32) -> i32 {
+        let mut sats = 0;
+        self.add_counting(a, b, &mut sats)
+    }
+
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        let mut sats = 0;
+        self.mul_counting(a, b, &mut sats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_formats() {
+        assert_eq!(QFormat::q4_12().name(), "Q4.12");
+        assert_eq!(QFormat::q6_10().name(), "Q6.10");
+        assert_eq!(QFormat::q8_8().name(), "Q8.8");
+        assert_eq!(QFormat::parse("q4.12"), Some(QFormat::q4_12()));
+        assert_eq!(QFormat::parse("Q6.10"), Some(QFormat::q6_10()));
+        assert_eq!(QFormat::parse("nope"), None);
+        assert_eq!(QFormat::parse("q40.12"), None);
+        // frac = 0 would underflow the product rescale's half-LSB shift
+        assert_eq!(QFormat::parse("q16.0"), None);
+        // narrow-but-valid words parse (the engine clamps its LUT size)
+        assert_eq!(QFormat::parse("q2.3"), Some(QFormat::new(5, 3)));
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_on_grid() {
+        let a = QArith::new(QFormat::q4_12());
+        for raw in [-32768i32, -1000, -1, 0, 1, 999, 32767] {
+            let v = a.dequantize(raw);
+            assert_eq!(a.quantize(v), raw, "raw {raw}");
+        }
+    }
+
+    #[test]
+    fn quantize_rounds_and_saturates() {
+        let a = QArith::new(QFormat::q4_12());
+        // 2^-12 grid: 0.00013 → rounds to 1 raw
+        assert_eq!(a.quantize(1.4 * a.fmt.lsb()), 1);
+        assert_eq!(a.quantize(1.6 * a.fmt.lsb()), 2);
+        // half-up ties
+        assert_eq!(a.quantize(1.5 * a.fmt.lsb()), 2);
+        assert_eq!(a.quantize(-1.5 * a.fmt.lsb()), -1);
+        // saturation at ±8
+        assert_eq!(a.quantize(100.0), a.fmt.max_raw() as i32);
+        assert_eq!(a.quantize(-100.0), a.fmt.min_raw() as i32);
+        assert_eq!(a.quantize(f32::NAN), 0);
+        assert_eq!(a.quantize(f32::INFINITY), a.fmt.max_raw() as i32);
+    }
+
+    #[test]
+    fn floor_rounding_truncates() {
+        let mut a = QArith::new(QFormat::q4_12());
+        a.round = Rounding::Floor;
+        assert_eq!(a.quantize(1.9 * a.fmt.lsb()), 1);
+        assert_eq!(a.quantize(-0.1 * a.fmt.lsb()), -1);
+    }
+
+    #[test]
+    fn mul_single_rounding() {
+        let a = QArith::new(QFormat::q4_12());
+        // 1.5 * 2.25 = 3.375, exactly representable at F=12
+        let x = a.quantize(1.5);
+        let y = a.quantize(2.25);
+        assert_eq!(a.dequantize(a.mul(x, y)), 3.375);
+        // 3 * 3 = 9 saturates to ~8
+        let t = a.quantize(3.0);
+        let mut sats = 0;
+        let r = a.mul_counting(t, t, &mut sats);
+        assert_eq!(sats, 1);
+        assert_eq!(r, a.fmt.max_raw() as i32);
+    }
+
+    #[test]
+    fn wrap_mode_wraps_two_complement() {
+        let mut a = QArith::new(QFormat::new(8, 4));
+        a.overflow = Overflow::Wrap;
+        // max_raw 127; 130 wraps to -126
+        assert_eq!(a.clamp(130), -126);
+        assert_eq!(a.clamp(-130), 126);
+        assert_eq!(a.clamp(127), 127);
+        assert_eq!(a.clamp(-128), -128);
+    }
+
+    #[test]
+    fn add_saturates() {
+        let a = QArith::new(QFormat::q4_12());
+        let big = a.quantize(6.0);
+        let mut sats = 0;
+        let r = a.add_counting(big, big, &mut sats);
+        assert_eq!(sats, 1);
+        assert_eq!(r, a.fmt.max_raw() as i32);
+        assert_eq!(a.add(a.quantize(1.0), a.quantize(2.0)), a.quantize(3.0));
+    }
+
+    #[test]
+    fn lsb_and_ranges() {
+        let f = QFormat::q6_10();
+        assert_eq!(f.lsb(), 1.0 / 1024.0);
+        assert_eq!(f.max_raw(), 32767);
+        assert_eq!(f.min_raw(), -32768);
+        assert!((f.max_value() - 31.999).abs() < 1e-2);
+        assert_eq!(f.min_value(), -32.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Piecewise-linear LUT nonlinearity — what HLS instantiates for `f`.
+//!
+//! An FPGA datapath does not call `tanh`/`powf`; it reads a small BRAM
+//! table of segment endpoints and linearly interpolates. This module
+//! models exactly that: `2^k` equal-width segments spanning the **whole
+//! representable range** of the Q-format (so the segment index is a bit
+//! slice of the raw input — no comparator tree), endpoint values stored
+//! as raw words, and an integer interpolation
+//! `y = y₀ + ((y₁ − y₀)·rem) >> seg_shift` with one rounding.
+//!
+//! For `Linear { alpha: 1 }` (the paper's evaluation nonlinearity) the
+//! interpolation is exact to the LSB, so the quantized reservoir pays no
+//! nonlinearity-approximation cost on the golden fixtures; for
+//! `Tanh`/`MackeyGlass` the construction-time measured sup-error
+//! ([`PwlLut::max_err`]) feeds the error budget directly — a measured
+//! number, not an assumption.
+
+use crate::dfr::reservoir::Nonlinearity;
+
+use super::fixed::{QArith, Rounding};
+
+/// An integer piecewise-linear approximation of a scalar nonlinearity
+/// over the full Q-format range.
+#[derive(Clone, Debug)]
+pub struct PwlLut {
+    arith: QArith,
+    /// log₂(segment width in raw units) = bits − log₂(segments)
+    seg_shift: u32,
+    lo_raw: i64,
+    /// segment endpoint values (raw), `segments + 1` entries
+    table: Vec<i32>,
+    /// measured sup |LUT(x) − f(x)| over the range (dense sampling at
+    /// construction) — the ε_f term of the error budget
+    max_err: f32,
+}
+
+impl PwlLut {
+    /// Build a `2^log2_segments`-segment table for `f`. BRAM cost is
+    /// `segments + 1` words; `log2_segments` must not exceed the word
+    /// width (a segment spans at least one raw unit).
+    pub fn new(f: Nonlinearity, arith: QArith, log2_segments: u32) -> Self {
+        assert!(
+            log2_segments >= 1 && log2_segments <= arith.fmt.bits,
+            "segment count must be in [2, 2^bits]"
+        );
+        let seg_shift = arith.fmt.bits - log2_segments;
+        let lo_raw = arith.fmt.min_raw();
+        let segments = 1usize << log2_segments;
+        let lsb = arith.fmt.lsb();
+        let table: Vec<i32> = (0..=segments)
+            .map(|i| {
+                let node_raw = lo_raw + ((i as i64) << seg_shift);
+                arith.quantize(f.eval(node_raw as f32 * lsb))
+            })
+            .collect();
+        let mut lut = PwlLut {
+            arith,
+            seg_shift,
+            lo_raw,
+            table,
+            max_err: 0.0,
+        };
+        // measure the approximation sup-error: 8 probes per segment
+        let mut max_err = 0.0f32;
+        for i in 0..segments {
+            for j in 0..8u32 {
+                let raw = lo_raw
+                    + ((i as i64) << seg_shift)
+                    + ((u64::from(j) << seg_shift) / 8) as i64;
+                let x = raw as f32 * lsb;
+                let err = (lut.eval_value(raw as i32) - f.eval(x)).abs();
+                if err.is_finite() && err > max_err {
+                    max_err = err;
+                }
+            }
+        }
+        lut.max_err = max_err;
+        lut
+    }
+
+    /// Measured sup-error of the approximation (error-budget input).
+    pub fn max_err(&self) -> f32 {
+        self.max_err
+    }
+
+    /// Table words (BRAM sizing).
+    pub fn words(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Evaluate at a raw input (must be a valid word of the format).
+    #[inline]
+    pub fn eval(&self, x_raw: i32) -> i32 {
+        // the offset is a plain bit-slice: idx = high bits, rem = low bits
+        let off = (i64::from(x_raw) - self.lo_raw) as u64;
+        let segments = self.table.len() - 1;
+        let mut idx = (off >> self.seg_shift) as usize;
+        if idx >= segments {
+            idx = segments - 1; // x == max_raw lands in the top segment
+        }
+        let rem = (off - ((idx as u64) << self.seg_shift)) as i64;
+        let y0 = i64::from(self.table[idx]);
+        if self.seg_shift == 0 {
+            // one raw unit per segment: the node value IS the answer
+            return self.arith.clamp(y0);
+        }
+        let y1 = i64::from(self.table[idx + 1]);
+        let half = match self.arith.round {
+            Rounding::Nearest => 1i64 << (self.seg_shift - 1),
+            Rounding::Floor => 0,
+        };
+        let y = y0 + (((y1 - y0) * rem + half) >> self.seg_shift);
+        self.arith.clamp(y)
+    }
+
+    /// Evaluate and dequantize (tests / error measurement).
+    pub fn eval_value(&self, x_raw: i32) -> f32 {
+        self.arith.dequantize(self.eval(x_raw))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fixed::QFormat;
+
+    fn arith() -> QArith {
+        QArith::new(QFormat::q4_12())
+    }
+
+    #[test]
+    fn linear_lut_is_exact_off_the_top_segment() {
+        let a = arith();
+        let lut = PwlLut::new(Nonlinearity::Linear { alpha: 1.0 }, a, 6);
+        // identity: LUT(x) == x exactly everywhere below the top segment
+        // (whose upper node's true value max+lsb saturates by one raw
+        // unit, shaving the interpolated values there by ≤ 1 raw)
+        for raw in [-32768i32, -12345, -1, 0, 1, 4095, 20000, 31743] {
+            assert_eq!(lut.eval(raw), raw, "raw {raw}");
+        }
+        // top segment: within one raw unit of exact
+        assert!((i64::from(lut.eval(32255)) - 32255).abs() <= 1);
+        assert!(lut.max_err() <= 2.0 * a.fmt.lsb(), "{}", lut.max_err());
+    }
+
+    #[test]
+    fn scaled_linear_lut_tracks_alpha() {
+        let a = arith();
+        let lut = PwlLut::new(Nonlinearity::Linear { alpha: 0.5 }, a, 6);
+        for v in [-6.0f32, -1.25, 0.0, 0.7, 3.5] {
+            let raw = a.quantize(v);
+            let got = lut.eval_value(raw);
+            assert!((got - 0.5 * v).abs() <= 2.0 * a.fmt.lsb(), "{v}: {got}");
+        }
+    }
+
+    #[test]
+    fn tanh_lut_error_shrinks_with_segments() {
+        let a = arith();
+        let coarse = PwlLut::new(Nonlinearity::Tanh, a, 4);
+        let fine = PwlLut::new(Nonlinearity::Tanh, a, 8);
+        assert!(fine.max_err() < coarse.max_err());
+        // 256 segments over [-8, 8): chord error of tanh on a 1/16-wide
+        // segment is ~1e-4, plus quantization
+        assert!(fine.max_err() < 5e-3, "{}", fine.max_err());
+        for v in [-3.0f32, -0.4, 0.0, 0.4, 3.0] {
+            let got = fine.eval_value(a.quantize(v));
+            assert!((got - v.tanh()).abs() <= fine.max_err() + a.fmt.lsb());
+        }
+    }
+
+    #[test]
+    fn mackey_glass_lut_bounded() {
+        let a = arith();
+        let f = Nonlinearity::MackeyGlass { eta: 0.9, p_exp: 2.0 };
+        let lut = PwlLut::new(f, a, 8);
+        for v in [-7.9f32, -1.0, 0.0, 1.0, 7.9] {
+            let got = lut.eval_value(a.quantize(v));
+            assert!((got - f.eval(v)).abs() <= lut.max_err() + a.fmt.lsb(), "{v}");
+        }
+        assert_eq!(lut.words(), 257);
+    }
+
+    #[test]
+    fn extreme_inputs_stay_in_range() {
+        let a = arith();
+        let lut = PwlLut::new(Nonlinearity::Linear { alpha: 1.0 }, a, 6);
+        let lo = a.fmt.min_raw() as i32;
+        let hi = a.fmt.max_raw() as i32;
+        for raw in [lo, lo + 1, hi - 1, hi] {
+            let y = i64::from(lut.eval(raw));
+            assert!(y >= a.fmt.min_raw() && y <= a.fmt.max_raw());
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Bit-accurate fixed-point (quantized) DFR engine + error budgeting.
+//!
+//! The paper's hardware claims (1/13 time, 1/27 power on the Zynq-7000)
+//! rest on a fixed-point FPGA datapath, but the rest of this repo
+//! computes in f32 — the `fpga` module models *when* the hardware
+//! computes, this module models *what* it computes:
+//!
+//! * [`fixed`] — runtime Q-format words ([`QFormat`], [`QArith`]) with
+//!   HLS rounding/overflow modes (`AP_RND`/`AP_TRN`, `AP_SAT`/`AP_WRAP`)
+//!   and single-rounding product semantics;
+//! * [`lut`] — the piecewise-linear LUT nonlinearity HLS instantiates
+//!   (bit-slice segment index, integer interpolation, measured
+//!   sup-error);
+//! * [`reservoir`] — the quantized masking → cascade → DPRR forward pass
+//!   with a wide integer accumulator and per-pass saturation counting;
+//! * [`budget`] — the analytic worst-case error bound the equivalence
+//!   tests assert (validated by `python/tests/quant_mirror.py`);
+//! * [`engine`] — [`QuantEngine`], a drop-in
+//!   [`coordinator::Engine`](crate::coordinator::Engine) so quantized
+//!   serving runs behind the sharded server unchanged (zero
+//!   steady-state allocations, `tests/zero_alloc.rs`);
+//! * [`sweep`] — the width-selection sweep: measured deviation vs
+//!   analytic bound vs end-task accuracy vs width-aware Zynq cost
+//!   (`fpga::resource::Arith`), per candidate format.
+//!
+//! Motivated by the hardware-friendly quantization argument of
+//! "Modular DFR" (arXiv:2307.11094) and FPGA reservoir practice in
+//! Penkovsky et al. (arXiv:1805.03033). See DESIGN.md §12.
+
+pub mod budget;
+pub mod engine;
+pub mod fixed;
+pub mod lut;
+pub mod reservoir;
+pub mod sweep;
+
+pub use budget::{r_tilde_error_bound, score_error_bound, BudgetInputs};
+pub use engine::QuantEngine;
+pub use fixed::{Overflow, QArith, QFormat, Rounding};
+pub use lut::PwlLut;
+pub use reservoir::{QuantForwardScratch, QuantReservoir};
+pub use sweep::{error_budget_sweep, SweepReport, SweepRow};
+
+/// Engine-level quantization knobs: the datapath word + the LUT size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    pub arith: QArith,
+    /// log₂ of the PWL-LUT segment count (6 → 64 segments ≈ one BRAM
+    /// half for the table)
+    pub lut_log2_segments: u32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            arith: QArith::new(QFormat::q4_12()),
+            lut_log2_segments: 6,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn with_format(fmt: QFormat) -> Self {
+        QuantConfig {
+            arith: QArith::new(fmt),
+            ..Default::default()
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Bit-accurate quantized DFR forward pass — the FPGA datapath model.
+//!
+//! Mirrors `dfr::reservoir::Reservoir::forward_into` operation for
+//! operation, but in Q-format integer arithmetic:
+//!
+//! * **masking** — the ±1 mask makes `j = M u` a signed add tree over
+//!   the quantized inputs, accumulated exactly in i64 and clamped once
+//!   (no multipliers, exactly like the HLS datapath);
+//! * **node cascade** — `x_n = p ⊗ f_LUT(j_n ⊕ x_n) ⊕ q ⊗ x_{n−1}` with
+//!   word-width saturating ops and the PWL-LUT nonlinearity;
+//! * **DPRR** — rank-1 products accumulated in a *wide* i64 accumulator
+//!   at scale 2²ᶠ (the HLS pattern: narrow multipliers, wide adder
+//!   chain), normalized by a reciprocal `1/T` held at 2F fractional
+//!   bits, with a **single** rescale per output element.
+//!
+//! Saturation events are counted per forward pass
+//! ([`QuantForwardScratch::saturations`]); the analytic error budget
+//! (`quant::budget`) is valid exactly while that counter stays 0, and
+//! the equivalence tests assert both together.
+
+use crate::dfr::mask::Mask;
+use crate::dfr::reservoir::Nonlinearity;
+
+use super::fixed::QArith;
+use super::lut::PwlLut;
+
+/// Reusable workspace of the quantized forward: every buffer is sized by
+/// (Nx, V) only, so steady-state `forward_into` performs **zero heap
+/// allocations** regardless of the series length T (asserted through the
+/// engine layer in `tests/zero_alloc.rs`).
+#[derive(Clone, Debug)]
+pub struct QuantForwardScratch {
+    nx: usize,
+    v: usize,
+    /// quantized input sample of the current step (V words)
+    qu: Vec<i32>,
+    /// state x(k) raw
+    x: Vec<i32>,
+    /// state x(k-1) raw
+    x_prev: Vec<i32>,
+    /// masked input j(k) raw
+    j: Vec<i32>,
+    /// wide DPRR accumulator, scale 2²ᶠ, row-major Nx×(Nx+1)
+    acc: Vec<i64>,
+    /// normalized DPRR matrix (raw words, scale 2ᶠ)
+    r_mat: Vec<i32>,
+    t_len: usize,
+    /// range violations (saturations/wraps) of the last forward pass
+    saturations: u64,
+}
+
+impl QuantForwardScratch {
+    pub fn new(nx: usize, v: usize) -> Self {
+        QuantForwardScratch {
+            nx,
+            v,
+            qu: vec![0; v],
+            x: vec![0; nx],
+            x_prev: vec![0; nx],
+            j: vec![0; nx],
+            acc: vec![0; nx * (nx + 1)],
+            r_mat: vec![0; nx * (nx + 1)],
+            t_len: 0,
+            saturations: 0,
+        }
+    }
+
+    /// Re-size for a different shape; allocates only on change.
+    pub fn ensure(&mut self, nx: usize, v: usize) {
+        if self.nx != nx || self.v != v {
+            *self = QuantForwardScratch::new(nx, v);
+        }
+    }
+
+    /// Normalized DPRR matrix of the last forward (raw Q words).
+    pub fn r_mat_raw(&self) -> &[i32] {
+        &self.r_mat
+    }
+
+    pub fn t_len(&self) -> usize {
+        self.t_len
+    }
+
+    /// Range violations of the last forward pass. The error budget
+    /// assumes this is 0 — a positive count means the chosen Q-format's
+    /// integer bits cannot hold this workload's dynamic range.
+    pub fn saturations(&self) -> u64 {
+        self.saturations
+    }
+
+    /// Dequantized r̃ = [vec(R), 1] into a caller-owned f32 buffer
+    /// (capacity reused — no allocation once sized).
+    pub fn r_tilde_into(&self, arith: QArith, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.r_mat.len() + 1);
+        out.extend(self.r_mat.iter().map(|&r| arith.dequantize(r)));
+        out.push(1.0);
+    }
+}
+
+/// A configured quantized modular-DFR reservoir.
+///
+/// Holds the mask plus the quantized parameters and the LUT; `p`/`q` are
+/// requantized via [`set_params`](Self::set_params) when the session's
+/// f32 training state moves (one quantize each — negligible next to the
+/// forward pass).
+#[derive(Clone, Debug)]
+pub struct QuantReservoir {
+    pub mask: Mask,
+    pub arith: QArith,
+    p_raw: i32,
+    q_raw: i32,
+    lut: PwlLut,
+}
+
+impl QuantReservoir {
+    pub fn new(mask: Mask, f: Nonlinearity, arith: QArith, log2_segments: u32) -> Self {
+        let lut = PwlLut::new(f, arith, log2_segments);
+        QuantReservoir {
+            mask,
+            arith,
+            p_raw: 0,
+            q_raw: 0,
+            lut,
+        }
+    }
+
+    pub fn nx(&self) -> usize {
+        self.mask.nx
+    }
+
+    /// Quantize (p, q) into the datapath words.
+    pub fn set_params(&mut self, p: f32, q: f32) {
+        self.p_raw = self.arith.quantize(p);
+        self.q_raw = self.arith.quantize(q);
+    }
+
+    /// The LUT (error-budget inputs: `max_err`, `words`).
+    pub fn lut(&self) -> &PwlLut {
+        &self.lut
+    }
+
+    /// Bit-accurate streaming forward over a series `u` (row-major T×V).
+    ///
+    /// Same structure as `Reservoir::forward_into`: per step the mask
+    /// add-tree, the node cascade, and the DPRR push; at the end one
+    /// reciprocal multiply + rescale per DPRR element. The f32 inputs
+    /// are quantized on the fly (one word per channel per step).
+    pub fn forward_into(&self, u: &[f32], t: usize, s: &mut QuantForwardScratch) {
+        let nx = self.mask.nx;
+        let v = self.mask.v;
+        assert_eq!(u.len(), t * v, "series shape mismatch");
+        let a = self.arith;
+        let frac = a.fmt.frac;
+        s.ensure(nx, v);
+        s.x.fill(0);
+        s.x_prev.fill(0);
+        s.j.fill(0);
+        s.acc.fill(0);
+        s.saturations = 0;
+        let sats = &mut s.saturations;
+        let w = nx + 1;
+        for k in 0..t {
+            s.x_prev.copy_from_slice(&s.x);
+            // quantize this step's input sample (clipped inputs count as
+            // range violations — they void the error budget too)
+            for (qu, &uv) in s.qu.iter_mut().zip(&u[k * v..(k + 1) * v]) {
+                *qu = a.quantize_counting(uv, sats);
+            }
+            // masking: ±1 add tree, exact in i64, one clamp per node
+            for (n, j) in s.j.iter_mut().enumerate() {
+                let row = &self.mask.m[n * v..(n + 1) * v];
+                let mut acc = 0i64;
+                for (&m, &qu) in row.iter().zip(&s.qu) {
+                    acc += if m > 0.0 { i64::from(qu) } else { -i64::from(qu) };
+                }
+                *j = a.clamp_counting(acc, sats);
+            }
+            // node cascade (Eq. 14), word-width ops + LUT
+            let mut prev_node = s.x[nx - 1];
+            for n in 0..nx {
+                let arg = a.add_counting(s.j[n], s.x[n], sats);
+                let fx = self.lut.eval(arg);
+                let xn = a.add_counting(
+                    a.mul_counting(self.p_raw, fx, sats),
+                    a.mul_counting(self.q_raw, prev_node, sats),
+                    sats,
+                );
+                prev_node = xn;
+                s.x[n] = xn;
+            }
+            // DPRR push into the wide accumulator (exact)
+            for i in 0..nx {
+                let xi = i64::from(s.x[i]);
+                let row = &mut s.acc[i * w..(i + 1) * w];
+                for (r, &xp) in row[..nx].iter_mut().zip(&s.x_prev) {
+                    *r += xi * i64::from(xp);
+                }
+                row[nx] += xi << frac;
+            }
+        }
+        // normalize by 1/T: reciprocal at 2F fractional bits, one
+        // multiply + one rescale (4F → F) per element
+        let t_div = t.max(1) as i64;
+        let inv_t_raw = ((1i64 << (2 * frac)) + t_div / 2) / t_div;
+        for (r, &acc) in s.r_mat.iter_mut().zip(&s.acc) {
+            let wide = i128::from(acc) * i128::from(inv_t_raw);
+            *r = a.rescale_wide_counting(wide, 3 * frac, sats);
+        }
+        s.t_len = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfr::reservoir::{ForwardScratch, Reservoir};
+    use crate::quant::fixed::QFormat;
+    use crate::util::prng::Pcg32;
+
+    fn pair(nx: usize, v: usize, p: f32, q: f32, fmt: QFormat) -> (Reservoir, QuantReservoir) {
+        let mask = Mask::golden(nx, v);
+        let f = Nonlinearity::Linear { alpha: 1.0 };
+        let res = Reservoir {
+            mask: mask.clone(),
+            p,
+            q,
+            f,
+        };
+        let mut qres = QuantReservoir::new(mask, f, QArith::new(fmt), 6);
+        qres.set_params(p, q);
+        (res, qres)
+    }
+
+    #[test]
+    fn tracks_f32_reference_closely_at_wide_format() {
+        // Q8.14 (22-bit): quantization error ~6e-5 per op — the quant
+        // forward must sit within a small multiple of that of f32
+        let (res, qres) = pair(6, 2, 0.25, 0.2, QFormat::new(22, 14));
+        let mut rng = Pcg32::seed(71);
+        let t = 40;
+        let u: Vec<f32> = (0..t * 2).map(|_| rng.normal()).collect();
+        let mut fs = ForwardScratch::new(6);
+        res.forward_into(&u, t, &mut fs);
+        let mut qs = QuantForwardScratch::new(6, 2);
+        qres.forward_into(&u, t, &mut qs);
+        assert_eq!(qs.saturations(), 0);
+        let mut rt = Vec::new();
+        qs.r_tilde_into(qres.arith, &mut rt);
+        let mut rt_f = Vec::new();
+        fs.r_tilde_into(&mut rt_f);
+        assert_eq!(rt.len(), rt_f.len());
+        for (i, (a, b)) in rt.iter().zip(&rt_f).enumerate() {
+            assert!((a - b).abs() < 2e-3, "elem {i}: {a} vs {b}");
+        }
+        assert_eq!(*rt.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let (_, qres) = pair(5, 3, 0.2, 0.1, QFormat::q4_12());
+        let mut rng = Pcg32::seed(72);
+        let u: Vec<f32> = (0..15 * 3).map(|_| rng.normal() * 0.3).collect();
+        let mut s1 = QuantForwardScratch::new(5, 3);
+        qres.forward_into(&u, 15, &mut s1);
+        let first: Vec<i32> = s1.r_mat_raw().to_vec();
+        // a different series through the same scratch, then the original
+        // again — stale state would break bit-identity
+        let u2: Vec<f32> = (0..7 * 3).map(|_| rng.normal()).collect();
+        qres.forward_into(&u2, 7, &mut s1);
+        qres.forward_into(&u, 15, &mut s1);
+        assert_eq!(s1.r_mat_raw(), &first[..]);
+        assert_eq!(s1.t_len(), 15);
+    }
+
+    #[test]
+    fn saturation_counter_fires_on_overdriven_input() {
+        // Q6.2 (8-bit, range ±32): inputs of 100 clip at the input
+        // quantizer itself — counted as range violations
+        let (_, qres) = pair(4, 4, 0.2, 0.1, QFormat::new(8, 2));
+        let u = vec![100.0f32; 6 * 4];
+        let mut s = QuantForwardScratch::new(4, 4);
+        qres.forward_into(&u, 6, &mut s);
+        assert!(s.saturations() > 0);
+        // in-range inputs on the same shape stay clean
+        let u_ok = vec![1.0f32; 6 * 4];
+        qres.forward_into(&u_ok, 6, &mut s);
+        assert_eq!(s.saturations(), 0);
+    }
+
+    #[test]
+    fn zero_input_gives_zero_features() {
+        let (_, qres) = pair(5, 2, 0.3, 0.2, QFormat::q4_12());
+        let u = vec![0.0f32; 9 * 2];
+        let mut s = QuantForwardScratch::new(5, 2);
+        qres.forward_into(&u, 9, &mut s);
+        assert!(s.r_mat_raw().iter().all(|&r| r == 0));
+        assert_eq!(s.saturations(), 0);
+    }
+
+    #[test]
+    fn ensure_resizes_on_shape_change() {
+        let mut s = QuantForwardScratch::new(4, 2);
+        s.ensure(9, 3);
+        assert_eq!(s.r_mat_raw().len(), 9 * 10);
+        let (_, qres) = pair(9, 3, 0.2, 0.1, QFormat::q4_12());
+        // forward_into itself ensures, so a wrongly-sized scratch is fine
+        let mut s2 = QuantForwardScratch::new(2, 1);
+        let u = vec![0.25f32; 8 * 3];
+        qres.forward_into(&u, 8, &mut s2);
+        assert_eq!(s2.r_mat_raw().len(), 9 * 10);
+    }
+}

@@ -30,17 +30,10 @@ fn golden(name: &str) -> std::collections::BTreeMap<String, npz::Array> {
     npz::read_npz(path).expect("golden npz parses")
 }
 
-/// Regenerate the closed-form inputs exactly as make_golden.py does.
+/// Regenerate the closed-form inputs exactly as make_golden.py does
+/// (single definition shared with the quant equivalence suite).
 fn inputs(t: usize, v: usize) -> Vec<f32> {
-    // computed in f64 then cast, exactly as numpy does in make_golden.py
-    let mut u = Vec::with_capacity(t * v);
-    for k in 1..=t {
-        for vv in 1..=v {
-            let x = (0.1f64 * k as f64 * vv as f64).sin() + 0.05 * (0.3f64 * k as f64).cos();
-            u.push(x as f32);
-        }
-    }
-    u
+    Mask::golden_inputs(t, v)
 }
 
 fn run_case(name: &str) {

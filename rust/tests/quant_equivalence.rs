@@ -1,0 +1,389 @@
+//! Quantized-vs-f32 equivalence under the analytic Q-format bound.
+//!
+//! The committed golden fixtures (`rust/artifacts/golden/*.npz`) pin the
+//! f32 stack to the JAX reference; this suite pins the fixed-point stack
+//! to the f32 one: on every fixture configuration the quantized forward
+//! pass and the engine-level features/inference must agree with the f32
+//! `NativeEngine` within the worst-case bound derived in
+//! `quant::budget` (validated against an exact integer mirror in
+//! `python/tests/quant_mirror.py` — observed margins 2–40×), with zero
+//! saturations (the budget's validity condition).
+//!
+//! Q4.12 is checked on the fixtures whose dynamic range it holds;
+//! `paper_nx30` (V=12 → masked inputs up to ~12.6) exceeds Q4.12's ±8
+//! and is covered at Q6.10 — the same conclusion the width sweep
+//! reaches, and exactly the failure mode the budget's `+∞` encodes.
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::data::npz;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{Nonlinearity, Reservoir};
+use dfr_edge::quant::{
+    r_tilde_error_bound, score_error_bound, BudgetInputs, QArith, QFormat, QuantConfig,
+    QuantEngine, QuantForwardScratch, QuantReservoir,
+};
+use dfr_edge::util::prng::Pcg32;
+use dfr_edge::util::proptest::{run_prop, Config};
+
+/// Fixture configurations of make_golden.py (p/q live in the npz too;
+/// reading them keeps this in sync with regenerated fixtures).
+const FIXTURES: &[(&str, &[QFormat])] = &[
+    ("small", &[QFormat::q4_12(), QFormat::q6_10()]),
+    ("padded", &[QFormat::q4_12(), QFormat::q6_10()]),
+    // V=12 masked inputs overflow Q4.12's ±8 → Q6.10 only
+    ("paper_nx30", &[QFormat::q6_10()]),
+];
+
+fn golden(name: &str) -> std::collections::BTreeMap<String, npz::Array> {
+    let path = format!("artifacts/golden/{name}.npz");
+    npz::read_npz(&path).unwrap_or_else(|e| panic!("golden fixture {path}: {e:#}"))
+}
+
+/// Regenerate the closed-form inputs exactly as make_golden.py does
+/// (single definition next to the matching `Mask::golden`).
+fn inputs(t: usize, v: usize) -> Vec<f32> {
+    Mask::golden_inputs(t, v)
+}
+
+/// Budget inputs for one fixture workload: trajectory magnitudes from
+/// the f32 reference (`forward_history`), LUT error from the built LUT.
+fn budget_for(
+    res: &Reservoir,
+    u: &[f32],
+    t: usize,
+    v: usize,
+    eps_f: f32,
+) -> BudgetInputs {
+    let h = res.forward_history(u, t);
+    let x_max = h.xs.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let u_max = u.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let j_max = v as f32 * u_max;
+    BudgetInputs {
+        p: res.p,
+        q: res.q,
+        lf: res.f.lipschitz_bound(),
+        eps_f,
+        t,
+        nx: res.nx(),
+        v,
+        x_max,
+        u_max,
+        f_max: res.f.abs_bound(x_max + j_max),
+    }
+}
+
+#[test]
+fn quant_forward_within_bound_on_golden_fixtures() {
+    for &(name, formats) in FIXTURES {
+        let g = golden(name);
+        let t = g["length"].scalar().unwrap() as usize;
+        let v = g["v"].scalar().unwrap() as usize;
+        let nx = g["nx"].scalar().unwrap() as usize;
+        let p = g["p"].scalar().unwrap();
+        let q = g["q"].scalar().unwrap();
+        let u = inputs(g["t"].scalar().unwrap() as usize, v);
+        let u = &u[..t * v];
+        let mask = Mask::golden(nx, v);
+        let f = Nonlinearity::Linear { alpha: 1.0 };
+        let res = Reservoir {
+            mask: mask.clone(),
+            p,
+            q,
+            f,
+        };
+        let fwd = res.forward(u, t);
+        let mut rt_f32 = Vec::new();
+        fwd.r_tilde_into(&mut rt_f32);
+
+        for &fmt in formats {
+            let arith = QArith::new(fmt);
+            let mut qres = QuantReservoir::new(mask.clone(), f, arith, 6);
+            qres.set_params(p, q);
+            let mut qs = QuantForwardScratch::new(nx, v);
+            qres.forward_into(u, t, &mut qs);
+            assert_eq!(
+                qs.saturations(),
+                0,
+                "{name}/{}: saturated — budget assumption violated",
+                fmt.name()
+            );
+            let inp = budget_for(&res, u, t, v, qres.lut().max_err());
+            let bound = r_tilde_error_bound(fmt, &inp);
+            assert!(
+                bound.is_finite() && bound < 0.5,
+                "{name}/{}: vacuous bound {bound}",
+                fmt.name()
+            );
+            let mut rt_q = Vec::new();
+            qs.r_tilde_into(arith, &mut rt_q);
+            assert_eq!(rt_q.len(), rt_f32.len());
+            for (i, (a, b)) in rt_q.iter().zip(&rt_f32).enumerate() {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "{name}/{} elem {i}: quant {a} vs f32 {b} exceeds bound {bound}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_engine_matches_native_within_bound_on_golden_fixtures() {
+    for &(name, formats) in FIXTURES {
+        let g = golden(name);
+        let t = g["length"].scalar().unwrap() as usize;
+        let v = g["v"].scalar().unwrap() as usize;
+        let nx = g["nx"].scalar().unwrap() as usize;
+        let c = g["c"].scalar().unwrap() as usize;
+        let p = g["p"].scalar().unwrap();
+        let q = g["q"].scalar().unwrap();
+        let u = inputs(g["t"].scalar().unwrap() as usize, v);
+        let sample = Sample {
+            u: u[..t * v].to_vec(),
+            t,
+            label: 0,
+        };
+        let mask = Mask::golden(nx, v);
+        let f = Nonlinearity::Linear { alpha: 1.0 };
+        let res = Reservoir {
+            mask: mask.clone(),
+            p,
+            q,
+            f,
+        };
+        let native = NativeEngine::with_nonlinearity(nx, c, f);
+        let feats_f32 = native.features(&sample, &mask, p, q).unwrap();
+        let sdim = feats_f32.len();
+        // a deterministic non-trivial output layer (same recipe as
+        // make_golden.py's w, extended to the tilde column)
+        let w_tilde: Vec<f32> = (0..c * sdim)
+            .map(|i| 0.01 * (0.05 * i as f32).sin())
+            .collect();
+        let scores_f32 = native.infer(&sample, &mask, p, q, &w_tilde).unwrap();
+
+        for &fmt in formats {
+            let eng = QuantEngine::with_config(nx, c, f, QuantConfig::with_format(fmt));
+            let feats_q = eng.features(&sample, &mask, p, q).unwrap();
+            assert_eq!(eng.last_saturations(), 0, "{name}/{}", fmt.name());
+            let inp = budget_for(&res, &sample.u, t, v, {
+                // LUT error for this format (engine's internal LUT uses
+                // the same construction)
+                dfr_edge::quant::PwlLut::new(f, QArith::new(fmt), 6).max_err()
+            });
+            let r_bound = r_tilde_error_bound(fmt, &inp);
+            assert!(r_bound.is_finite(), "{name}/{}", fmt.name());
+            for (i, (a, b)) in feats_q.iter().zip(&feats_f32).enumerate() {
+                assert!(
+                    (a - b).abs() <= r_bound,
+                    "{name}/{} feature {i}: {a} vs {b} (bound {r_bound})",
+                    fmt.name()
+                );
+            }
+            // inference: pre-softmax scores deviate by at most the MAC
+            // bound; softmax is 1-Lipschitz per coordinate in the ∞ norm
+            // up to the shared normalizer, so 2× covers the probabilities
+            let r_max = feats_f32.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let w_max = w_tilde.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            let s_bound = score_error_bound(fmt, sdim, w_max, r_max, r_bound);
+            let scores_q = eng.infer(&sample, &mask, p, q, &w_tilde).unwrap();
+            for (i, (a, b)) in scores_q.iter().zip(&scores_f32).enumerate() {
+                assert!(
+                    (a - b).abs() <= 2.0 * s_bound,
+                    "{name}/{} score {i}: {a} vs {b} (2·bound {})",
+                    fmt.name(),
+                    2.0 * s_bound
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_quant_forward_within_bound_random_workloads() {
+    run_prop(
+        "quant forward ≤ analytic bound",
+        Config {
+            cases: 48,
+            max_size: 10,
+            ..Default::default()
+        },
+        |rng, size| {
+            let nx = 2 + size as usize; // 3..=12
+            let v = 1 + (rng.below(3) as usize);
+            let t = 5 + (rng.below(30) as usize);
+            // contraction with margin (p + |q| ≤ 0.6): keeps the worst
+            // state magnitude p·j_max/(1−(p+|q|)) ≤ 3.75, comfortably
+            // inside Q4.12's ±8 — no saturation, finite bound
+            let p = 0.05 + 0.45 * rng.uniform();
+            let q = (0.6 - p) * rng.uniform() * if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            // inputs bounded so Q4.12's ±8 holds the V-channel add tree
+            let u: Vec<f32> = (0..t * v)
+                .map(|_| 2.0 * (rng.uniform() - 0.5))
+                .collect();
+            let mask = Mask::random(nx, v, rng);
+            let f = Nonlinearity::Linear { alpha: 1.0 };
+            let res = Reservoir {
+                mask: mask.clone(),
+                p,
+                q,
+                f,
+            };
+            let fmt = QFormat::q4_12();
+            let arith = QArith::new(fmt);
+            let mut qres = QuantReservoir::new(mask, f, arith, 6);
+            qres.set_params(p, q);
+            let mut qs = QuantForwardScratch::new(nx, v);
+            qres.forward_into(&u, t, &mut qs);
+            if qs.saturations() > 0 {
+                return Err(format!(
+                    "saturated ({} events) at p={p} q={q} v={v}",
+                    qs.saturations()
+                ));
+            }
+            let inp = budget_for(&res, &u, t, v, qres.lut().max_err());
+            let bound = r_tilde_error_bound(fmt, &inp);
+            if !bound.is_finite() {
+                // range-check rejection is allowed (not a violation),
+                // but saturation must then have been impossible anyway
+                return Ok(());
+            }
+            let fwd = res.forward(&u, t);
+            let mut rt_f32 = Vec::new();
+            fwd.r_tilde_into(&mut rt_f32);
+            let mut rt_q = Vec::new();
+            qs.r_tilde_into(arith, &mut rt_q);
+            for (i, (a, b)) in rt_q.iter().zip(&rt_f32).enumerate() {
+                if (a - b).abs() > bound {
+                    return Err(format!(
+                        "elem {i}: quant {a} vs f32 {b} exceeds bound {bound} \
+                         (p={p} q={q} nx={nx} v={v} t={t})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quant_engine_serves_through_the_sharded_coordinator() {
+    use dfr_edge::coordinator::{Request, Response, Server, ServerConfig, SessionConfig};
+    use dfr_edge::data::profiles::Profile;
+    use dfr_edge::data::synth;
+
+    let prof = Profile {
+        name: "mini",
+        n_v: 2,
+        n_c: 2,
+        train: 30,
+        test: 10,
+        t_min: 10,
+        t_max: 14,
+    };
+    let ds = synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        17,
+    );
+    let mut scfg = SessionConfig::new(2, 2, ds.train.len());
+    scfg.train.nx = 8;
+    scfg.train.epochs = 4;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    let cfg = ServerConfig {
+        session: scfg,
+        queue_cap: 64,
+        seed: 0xFACE,
+        shards: 2,
+    };
+    // Q6.10 (±32): holds the standardized synthetic inputs' V=2 add
+    // tree without front-end scaling, so this is the native server test
+    // with only the engine swapped
+    let eng = QuantEngine::with_config(
+        8,
+        2,
+        Nonlinearity::Linear { alpha: 1.0 },
+        QuantConfig::with_format(QFormat::q6_10()),
+    );
+    let srv = Server::spawn(Box::new(eng), cfg);
+    assert_eq!(srv.shards(), 2, "quant engine must fork across shards");
+    let mut last = None;
+    for s in &ds.train {
+        last = Some(
+            srv.call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap(),
+        );
+    }
+    assert!(matches!(last, Some(Response::Trained { .. })), "{last:?}");
+    let mut correct = 0;
+    for s in &ds.test {
+        match srv
+            .call(Request::Infer {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            Response::Prediction { class, scores } => {
+                assert_eq!(scores.len(), 2);
+                if class == s.label {
+                    correct += 1;
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    assert!(correct >= 7, "quantized serving accuracy {correct}/10");
+    srv.shutdown();
+}
+
+#[test]
+fn formats_rank_by_resolution() {
+    // a quick deterministic cross-format ordering on one workload
+    let mut rng = Pcg32::seed(0x0F0F);
+    let nx = 6;
+    let v = 2;
+    let t = 20;
+    let u: Vec<f32> = (0..t * v).map(|_| 1.5 * (rng.uniform() - 0.5)).collect();
+    let mask = Mask::golden(nx, v);
+    let f = Nonlinearity::Linear { alpha: 1.0 };
+    let res = Reservoir {
+        mask: mask.clone(),
+        p: 0.25,
+        q: 0.2,
+        f,
+    };
+    let fwd = res.forward(&u, t);
+    let mut rt_f32 = Vec::new();
+    fwd.r_tilde_into(&mut rt_f32);
+    let mut devs = Vec::new();
+    for fmt in [QFormat::q4_12(), QFormat::q6_10(), QFormat::q8_8()] {
+        let arith = QArith::new(fmt);
+        let mut qres = QuantReservoir::new(mask.clone(), f, arith, 6);
+        qres.set_params(0.25, 0.2);
+        let mut qs = QuantForwardScratch::new(nx, v);
+        qres.forward_into(&u, t, &mut qs);
+        let mut rt = Vec::new();
+        qs.r_tilde_into(arith, &mut rt);
+        let dev = rt
+            .iter()
+            .zip(&rt_f32)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        devs.push(dev);
+    }
+    assert!(
+        devs[0] < devs[2],
+        "Q4.12 ({}) must beat Q8.8 ({})",
+        devs[0],
+        devs[2]
+    );
+}

@@ -94,6 +94,47 @@ fn features_and_infer_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn quant_engine_features_and_infer_are_allocation_free_after_warmup() {
+    use dfr_edge::quant::QuantEngine;
+    // paper scale, same shapes as the native test: the quantized
+    // steady state (mask refresh, input quantization, LUT cascade, wide
+    // DPRR, weight requantization, integer MAC) must also be alloc-free
+    let (nx, v, n_c, t) = (30usize, 12usize, 9usize, 29usize);
+    let mut rng = Pcg32::seed(0xA110F);
+    let eng = QuantEngine::new(nx, n_c);
+    let mask = Mask::random(nx, v, &mut rng);
+    let sample = Sample {
+        u: (0..t * v).map(|_| 0.25 * rng.normal()).collect(),
+        t,
+        label: 0,
+    };
+    let s_dim = nx * nx + nx + 1;
+    let w_tilde: Vec<f32> = (0..n_c * s_dim).map(|_| 0.01 * rng.normal()).collect();
+
+    let mut feat = Vec::new();
+    let mut scores = Vec::new();
+    eng.features_into(&sample, &mask, 0.2, 0.1, &mut feat).unwrap();
+    eng.infer_into(&sample, &mask, 0.2, 0.1, &w_tilde, &mut scores)
+        .unwrap();
+
+    let n = allocations_in(|| {
+        for _ in 0..50 {
+            eng.features_into(&sample, &mask, 0.2, 0.1, &mut feat).unwrap();
+            eng.infer_into(&sample, &mask, 0.2, 0.1, &w_tilde, &mut scores)
+                .unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state quant features_into/infer_into performed {n} heap allocations"
+    );
+    assert_eq!(feat.len(), s_dim);
+    assert_eq!(*feat.last().unwrap(), 1.0);
+    assert_eq!(scores.len(), n_c);
+    assert!((scores.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+}
+
+#[test]
 fn online_ridge_observe_is_allocation_free_after_warmup() {
     use dfr_edge::linalg::ridge::{OnlineRidge, OnlineRidgeConfig};
     // moderate scale, odd s to exercise the kernels' remainder lanes;
