@@ -1,0 +1,172 @@
+//! Online reservoir adaptation vs retrain-from-scratch: the per-sample
+//! cost of the Serve-phase adaptation loop (ridge fold + re-solve +
+//! truncated-BPTT step), the cost of a full generation roll
+//! (recalibrate → re-featurize the ring → reseed the factor), and the
+//! recovery-from-drift latency both strategies pay — adaptation answers
+//! every labelled sample in O(s²)+O(forward) and rolls generations
+//! incrementally, while the batch strategy re-runs the whole §4.1
+//! pipeline (25-epoch SGD + β-swept ridge) per `retrain_after` batch.
+//!
+//! Writes `results/BENCH_adapt.json` (the repo-root `BENCH_adapt.json`
+//! is the committed snapshot; medians are filled by the driver image's
+//! first run). Set `DFR_BENCH_SMOKE=1` for a few-iteration CI run.
+
+use std::fmt::Write as _;
+
+use dfr_edge::coordinator::engine::NativeEngine;
+use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+use dfr_edge::data::dataset::Dataset;
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::util::bench::{write_results_file, Bencher};
+
+fn dataset(train: usize, t: usize, seed: u64) -> Dataset {
+    let prof = Profile {
+        name: "bench",
+        n_v: 4,
+        n_c: 4,
+        train,
+        test: 16,
+        t_min: t,
+        t_max: t,
+    };
+    synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.4,
+            freq_sep: 0.1,
+            ar: 0.4,
+        },
+        seed,
+    )
+}
+
+fn session_config(nx: usize, epochs: usize, collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(4, 4, collect);
+    scfg.train.nx = nx;
+    scfg.train.epochs = epochs;
+    scfg.train.res_decay_epochs = vec![epochs / 3, 2 * epochs / 3];
+    scfg.train.out_decay_epochs = vec![epochs / 2];
+    scfg.train.window = Some(64);
+    scfg.buffer_cap = collect.max(64);
+    scfg
+}
+
+fn trained_session(cfg: SessionConfig, eng: &NativeEngine, ds: &Dataset) -> Session {
+    let streaming = cfg.train.window.is_some() || cfg.train.forgetting.is_some();
+    let mut sess = Session::new(1, cfg, 0xADA9);
+    for s in &ds.train {
+        sess.feed_labelled(eng, s.clone()).unwrap();
+    }
+    assert_eq!(sess.online().is_some(), streaming, "unexpected serve path");
+    sess
+}
+
+fn main() {
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    // paper-ish scale vs smoke: reservoir size drives the forward +
+    // O(s²) fold cost (s = Nx² + Nx + 1)
+    let (nx, t, train, epochs, target) = if smoke {
+        (10usize, 12usize, 80usize, 4usize, 0.02)
+    } else {
+        (30usize, 29usize, 200usize, 25usize, 0.5)
+    };
+    let ds = dataset(train, t, 0xADA7);
+    let eng = NativeEngine::new(nx, 4);
+    let mut b = Bencher::with_target_time(target);
+
+    // --- streaming observe, adaptation OFF (baseline: fold + re-solve)
+    let mut sess = trained_session(session_config(nx, epochs, train), &eng, &ds);
+    let mut i = 0usize;
+    let observe = b
+        .bench(&format!("observe_noadapt_nx{nx}"), || {
+            let out = sess
+                .feed_labelled(&eng, ds.train[i % ds.train.len()].clone())
+                .unwrap();
+            assert!(matches!(out, FeedOutcome::Observed { .. }));
+            i += 1;
+        })
+        .median;
+
+    // --- streaming observe, adaptation ON, below the drift threshold
+    // (fold + re-solve + truncated-BPTT step)
+    let mut cfg = session_config(nx, epochs, train);
+    cfg.adapt_reservoir = true;
+    cfg.adapt_lr = 1e-4;
+    cfg.adapt_drift_eps = 1e9; // steady state: never roll mid-bench
+    let mut sess = trained_session(cfg, &eng, &ds);
+    let mut i = 0usize;
+    let adapt_observe = b
+        .bench(&format!("observe_adapt_nx{nx}"), || {
+            let out = sess
+                .feed_labelled(&eng, ds.train[i % ds.train.len()].clone())
+                .unwrap();
+            assert!(matches!(
+                out,
+                FeedOutcome::Observed {
+                    reservoir_step: true,
+                    ..
+                }
+            ));
+            i += 1;
+        })
+        .median;
+
+    // --- a full generation roll per feed (recalibrate + re-featurize
+    // the 64-sample ring + reseed + solve): the drift-recovery step
+    let mut cfg = session_config(nx, epochs, train);
+    cfg.adapt_reservoir = true;
+    cfg.adapt_lr = 1e-4;
+    cfg.adapt_drift_eps = -1.0; // every feed crosses the threshold
+    let mut sess = trained_session(cfg, &eng, &ds);
+    let mut i = 0usize;
+    let reseed = b
+        .bench(&format!("generation_roll_nx{nx}_w64"), || {
+            let out = sess
+                .feed_labelled(&eng, ds.train[i % ds.train.len()].clone())
+                .unwrap();
+            assert!(matches!(out, FeedOutcome::Adapted { .. }));
+            i += 1;
+        })
+        .median;
+
+    // --- retrain-from-scratch recovery: re-run the whole §4.1 batch
+    // pipeline over the session's buffer (what a drift-triggered
+    // `retrain_after` / error-rate fallback pays per recovery)
+    let mut cfg = session_config(nx, epochs, train);
+    cfg.train.window = None; // batch path
+    let mut sess = trained_session(cfg, &eng, &ds);
+    let retrain = b
+        .bench(&format!("batch_retrain_nx{nx}"), || {
+            let out = sess.finalize(&eng).unwrap();
+            assert!(matches!(out, FeedOutcome::Trained { .. }));
+        })
+        .median;
+
+    let speedup_observe = retrain / adapt_observe;
+    let speedup_roll = retrain / reseed;
+    println!(
+        "observe {observe:.3e} s | +adapt {adapt_observe:.3e} s | generation roll {reseed:.3e} s \
+         | batch retrain {retrain:.3e} s"
+    );
+    println!(
+        "adaptation-on recovery: {speedup_observe:.1}× per sample, {speedup_roll:.1}× per \
+         generation roll vs retrain-from-scratch"
+    );
+
+    b.write_csv("online_adaptation.csv").expect("write csv");
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\n  \"scale\": {{\"nx\": {nx}, \"t\": {t}, \"train\": {train}, \"epochs\": {epochs}, \
+         \"window\": 64, \"smoke\": {smoke}}},\n  \
+         \"observe_median_s\": {observe:.6e},\n  \
+         \"adapt_observe_median_s\": {adapt_observe:.6e},\n  \
+         \"generation_roll_median_s\": {reseed:.6e},\n  \
+         \"batch_retrain_median_s\": {retrain:.6e},\n  \
+         \"adapt_vs_retrain_speedup\": {speedup_observe:.3},\n  \
+         \"roll_vs_retrain_speedup\": {speedup_roll:.3}\n}}\n"
+    );
+    write_results_file("BENCH_adapt.json", &json).expect("write BENCH_adapt.json");
+    println!("→ results/BENCH_adapt.json (copy to repo root to refresh the committed snapshot)");
+}

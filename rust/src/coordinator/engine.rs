@@ -10,10 +10,41 @@ use std::cell::RefCell;
 use anyhow::Result;
 
 use crate::data::dataset::Sample;
-use crate::dfr::backprop::{softmax_inplace, truncated_grads_ref, OutputLayer};
+use crate::dfr::backprop::{softmax_inplace, truncated_grads_scratch, GradScratch, OutputLayer};
 use crate::dfr::mask::Mask;
 use crate::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
 use crate::runtime::executor::{DfrExecutor, TrainState};
+
+/// A reservoir-parameter change the Serve-phase adaptation loop reports
+/// to its engine ([`Engine::recalibrate`]): the new (p, q) plus the
+/// workload envelope the session has observed so far — everything a
+/// quantized backend needs to re-run the §12 error budget without a
+/// reference trajectory.
+#[derive(Clone, Copy, Debug)]
+pub struct ReservoirUpdate {
+    pub p: f32,
+    pub q: f32,
+    /// input channels
+    pub n_v: usize,
+    /// longest series length observed
+    pub t_max: usize,
+    /// largest |u| observed
+    pub u_max: f32,
+}
+
+/// What an [`Engine::recalibrate`] call did.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Recalibration {
+    /// the engine's reservoir generation after this call — sessions
+    /// record it and refuse to mix features/factors across generations
+    pub generation: u64,
+    /// whether the engine switched its serving datapath to the f32
+    /// fallback because the new (p, q) violates its error budget
+    pub fell_back: bool,
+    /// the re-evaluated per-element r̃ error bound (`None` for engines
+    /// without a quantization budget; infinite iff `fell_back`)
+    pub error_bound: Option<f32>,
+}
 
 /// The operations a session needs from its compute backend.
 pub trait Engine: Send {
@@ -76,6 +107,41 @@ pub trait Engine: Send {
     /// Human-readable backend name (metrics/logs).
     fn name(&self) -> &'static str;
 
+    /// **Datapath generation** of this engine replica: a monotonic
+    /// counter that advances whenever the engine's *shared serving
+    /// datapath* changes — e.g. a quantized engine flipping to (or
+    /// recovering from) its f32 fallback during
+    /// [`recalibrate`](Self::recalibrate).
+    ///
+    /// Sessions use it to enforce the no-mixing invariant of the online
+    /// adaptation loop: a ridge factor seeded under datapath generation
+    /// G is only ever fed features extracted under generation G; when
+    /// the counter moves (any session on the shard flipping the shared
+    /// datapath), every session re-featurizes its buffer and reseeds
+    /// before folding anything else. Engines whose datapath is purely
+    /// parametric — the feature function depends only on the per-call
+    /// (p, q) — return a constant, and per-session parameter changes are
+    /// instead tracked by the session's own generation counter.
+    fn generation(&self) -> u64 {
+        0
+    }
+
+    /// Notify the engine that the serve-loop reservoir optimizer moved
+    /// (p, q). Backends with parameter-dependent serving state re-derive
+    /// it — the quantized engine rebuilds its PWL LUT, re-runs the §12
+    /// error budget for the active Q-format, and falls back to f32
+    /// serving if the new parameters violate the budget's stability
+    /// region, bumping its [`generation`](Self::generation) whenever the
+    /// shared datapath actually changes (the fallback flipping either
+    /// way). The default is a no-op for purely parametric backends.
+    fn recalibrate(&self, _upd: &ReservoirUpdate) -> Result<Recalibration> {
+        Ok(Recalibration {
+            generation: self.generation(),
+            fell_back: false,
+            error_bound: None,
+        })
+    }
+
     /// Create an independent replica of this engine for another shard
     /// thread (see `coordinator::server`). Engines whose backend cannot
     /// be replicated return `None`, and the server degrades to fewer
@@ -107,13 +173,14 @@ pub struct NativeEngine {
 }
 
 /// Reusable per-replica buffers: a reservoir whose mask is refreshed in
-/// place, the forward workspace, r̃, and an output-layer copy for the
-/// backward pass.
+/// place, the forward workspace, r̃, an output-layer copy for the
+/// backward pass, and the gradient workspace.
 struct EngineScratch {
     res: Reservoir,
     fwd: ForwardScratch,
     r_tilde: Vec<f32>,
     out: OutputLayer,
+    gsc: GradScratch,
 }
 
 impl NativeEngine {
@@ -140,6 +207,7 @@ impl NativeEngine {
                 fwd: ForwardScratch::new(nx),
                 r_tilde: Vec::new(),
                 out: OutputLayer::zeros(n_c, nx),
+                gsc: GradScratch::new(),
             }),
         }
     }
@@ -183,14 +251,19 @@ impl Engine for NativeEngine {
         sc.out.b.copy_from_slice(&state.b);
         sc.out.ny = self.n_c;
         sc.out.nr = self.nx * (self.nx + 1);
-        let g = truncated_grads_ref(
-            sc.fwd.as_forward_ref(),
+        // split borrow: forward view, output copy and gradient workspace
+        // are distinct fields — the backward pass runs fully in place
+        let EngineScratch { fwd, out, gsc, .. } = &mut *sc;
+        truncated_grads_scratch(
+            fwd.as_forward_ref(),
             s.label,
             state.p,
             state.q,
             self.f,
-            &sc.out,
+            out,
+            gsc,
         );
+        let g = gsc.grads();
         // same ±1 clip as the train_step artifact (model.GRAD_CLIP)
         let clip = 1.0f32;
         let (dp, dq) = (g.dp.clamp(-clip, clip), g.dq.clamp(-clip, clip));
@@ -271,6 +344,11 @@ impl Engine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    // `generation`/`recalibrate` keep the trait defaults: the f32
+    // datapath is purely parametric — (p, q) arrive per call, so a
+    // reservoir-parameter change never alters the shared datapath and
+    // other sessions on the shard have nothing to re-featurize against.
 
     fn fork(&self) -> Option<Box<dyn Engine>> {
         // stateless apart from its dimensions (each replica gets its own
@@ -390,6 +468,27 @@ mod tests {
         let y = eng.infer(&s, &mask, 0.2, 0.1, &w).unwrap();
         assert_eq!(y.len(), 2);
         assert!((y.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn native_recalibrate_is_a_parametric_no_op() {
+        // the f32 datapath takes (p, q) per call — recalibration never
+        // changes the shared datapath, so the generation stays put and
+        // other sessions on the shard are not forced to reseed
+        let eng = NativeEngine::new(6, 2);
+        assert_eq!(eng.generation(), 0);
+        let upd = ReservoirUpdate {
+            p: 0.2,
+            q: 0.1,
+            n_v: 2,
+            t_max: 10,
+            u_max: 1.0,
+        };
+        let r = eng.recalibrate(&upd).unwrap();
+        assert!(!r.fell_back);
+        assert_eq!(r.error_bound, None);
+        assert_eq!(r.generation, 0);
+        assert_eq!(eng.generation(), 0);
     }
 
     #[test]

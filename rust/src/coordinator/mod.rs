@@ -24,7 +24,7 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use engine::{Engine, NativeEngine, PjrtEngine};
+pub use engine::{Engine, NativeEngine, PjrtEngine, Recalibration, ReservoirUpdate};
 pub use protocol::{Request, Response};
 pub use server::{Server, ServerConfig};
-pub use session::{Phase, Session, SessionConfig};
+pub use session::{FeedOutcome, InferError, Phase, Session, SessionConfig};

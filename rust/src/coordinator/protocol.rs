@@ -49,6 +49,21 @@ pub enum Response {
     /// lifetime fold count in λ-forgetting mode (where every past
     /// sample remains in the system at geometrically decayed weight).
     Observed { updates: u64, window: usize },
+    /// Serve-phase reservoir adaptation rolled the session onto a new
+    /// reservoir **generation**: the streaming truncated-BPTT optimizer's
+    /// accumulated (p, q) drift crossed the threshold (or the engine's
+    /// datapath generation moved), the engine recalibrated — quantized
+    /// backends re-run the §12 error budget and may fall back to f32 —
+    /// and the session re-featurized its recent-sample ring through the
+    /// updated reservoir and reseeded the online ridge factor from it.
+    /// `updates` is the number of buffered samples re-folded into the
+    /// fresh factor; `p`/`q` are the new serving parameters.
+    Adapted {
+        generation: u64,
+        p: f32,
+        q: f32,
+        updates: u64,
+    },
     /// Metrics text.
     StatsText(String),
     /// Request rejected (backpressure or bad session state).

@@ -29,7 +29,10 @@
 //!    `::window`) never reject labelled samples at this level: each one
 //!    is folded in O(s²) and answered `Observed` (counted by the
 //!    per-shard `online_updates_total` metric), and the recent-sample
-//!    buffer recycles as a bounded FIFO.
+//!    buffer recycles as a bounded FIFO. With reservoir adaptation on
+//!    (`SessionConfig::adapt_reservoir`), each fold also drives a
+//!    truncated-BPTT step (`reservoir_updates_total`) and generation
+//!    rolls answer `Adapted` (`refeaturize_total`) — see DESIGN.md §13.
 //!
 //! # Shutdown
 //!
@@ -49,7 +52,7 @@ use anyhow::Result;
 
 use super::engine::Engine;
 use super::protocol::{Request, Response};
-use super::session::{FeedOutcome, Session, SessionConfig};
+use super::session::{FeedOutcome, InferError, Session, SessionConfig};
 use crate::util::metrics::Registry;
 
 /// A queued request with its reply channel.
@@ -247,6 +250,10 @@ fn shard_loop(
     let inferences = metrics.counter_labelled("inferences_total", &labels);
     let rejected = metrics.counter_labelled("rejected_total", &labels);
     let online_updates = metrics.counter_labelled("online_updates_total", &labels);
+    // Serve-phase reservoir adaptation (DESIGN.md §13): per-sample
+    // truncated-BPTT steps, and generation rolls (re-featurize + reseed)
+    let reservoir_updates = metrics.counter_labelled("reservoir_updates_total", &labels);
+    let refeaturizes = metrics.counter_labelled("refeaturize_total", &labels);
 
     while let Ok((req, reply)) = rx.recv() {
         req_counter.inc();
@@ -286,9 +293,36 @@ fn shard_loop(
                             train_seconds,
                         }
                     }
-                    Ok(FeedOutcome::Observed { updates, window }) => {
+                    Ok(FeedOutcome::Observed {
+                        updates,
+                        window,
+                        reservoir_step,
+                    }) => {
                         online_updates.inc();
+                        if reservoir_step {
+                            reservoir_updates.inc();
+                        }
                         Response::Observed { updates, window }
+                    }
+                    Ok(FeedOutcome::Adapted {
+                        generation,
+                        p,
+                        q,
+                        updates,
+                        reservoir_step,
+                    }) => {
+                        // the rolling sample was folded too
+                        online_updates.inc();
+                        if reservoir_step {
+                            reservoir_updates.inc();
+                        }
+                        refeaturizes.inc();
+                        Response::Adapted {
+                            generation,
+                            p,
+                            q,
+                            updates,
+                        }
                     }
                     Ok(FeedOutcome::Rejected(msg)) => {
                         rejected.inc();
@@ -297,18 +331,30 @@ fn shard_loop(
                     Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                 }
             }
-            Request::Infer { session, sample } => match sessions.get(&session) {
+            Request::Infer { session, sample } => match sessions.get_mut(&session) {
                 None => Response::Rejected(format!("unknown session {session}")),
                 Some(sess) => {
                     let sw = crate::util::timer::Stopwatch::start();
+                    // track shared-datapath changes even on infer-only
+                    // traffic (no-op unless the engine generation moved)
+                    match sess.sync_generation(engine.as_ref()) {
+                        Ok(None) => {}
+                        Ok(Some(_)) => refeaturizes.inc(),
+                        Err(e) => {
+                            let _ = reply.send(Response::Rejected(format!("engine error: {e:#}")));
+                            continue;
+                        }
+                    }
                     match sess.infer(engine.as_ref(), &sample) {
-                        Ok(Ok((class, scores))) => {
+                        Ok((class, scores)) => {
                             infer_hist.record_secs(sw.elapsed_secs());
                             inferences.inc();
                             Response::Prediction { class, scores }
                         }
-                        Ok(Err(msg)) => Response::Rejected(msg),
-                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                        Err(e @ InferError::NotServing { .. }) => Response::Rejected(e.to_string()),
+                        Err(InferError::Engine(e)) => {
+                            Response::Rejected(format!("engine error: {e:#}"))
+                        }
                     }
                 }
             },
@@ -328,7 +374,11 @@ fn shard_loop(
                     },
                     Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
                     // finalize always runs the batch pipeline
-                    Ok(FeedOutcome::Buffered(_) | FeedOutcome::Observed { .. }) => unreachable!(),
+                    Ok(
+                        FeedOutcome::Buffered(_)
+                        | FeedOutcome::Observed { .. }
+                        | FeedOutcome::Adapted { .. },
+                    ) => unreachable!(),
                     Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                 },
             },

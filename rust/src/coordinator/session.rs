@@ -23,15 +23,36 @@
 //!   - **batch** (otherwise): samples are buffered and `retrain_after`
 //!     triggers the full §4.1 pipeline again.
 //!
+//! # Online reservoir adaptation (DESIGN.md §13)
+//!
+//! With [`SessionConfig::adapt_reservoir`] set (and the streaming ridge
+//! active), labelled Serve samples additionally drive the truncated-BPTT
+//! reservoir optimizer through `Engine::train_step` at
+//! [`adapt_lr`](SessionConfig::adapt_lr) — the paper's Phase-1 SGD,
+//! per-sample, without leaving Serve. The optimizer advances a
+//! *candidate* (p, q) in `TrainState` while serving stays pinned to the
+//! **generation** parameters `(gen_p, gen_q)` the ridge factor was
+//! seeded at; features and factor therefore never mix reservoir
+//! generations. When the accumulated drift `|Δp| + |Δq|` crosses
+//! [`adapt_drift_eps`](SessionConfig::adapt_drift_eps), the session
+//! notifies the engine (`Engine::recalibrate` — quantized backends
+//! re-run their error budget and may fall back to f32), re-featurizes
+//! its bounded ring buffer through the updated reservoir, reseeds the
+//! online ridge from it, and answers `Adapted` with the new generation.
+//! A generation mismatch against [`Engine::generation`] (e.g. another
+//! session on the shard flipped a shared quantized datapath) forces the
+//! same reseed before anything else is folded.
+//!
 //! A `Session` is single-threaded by design: the server routes all
 //! requests for one session id to the same shard thread, which owns the
 //! session exclusively — no locking appears anywhere in this module.
 
 use std::collections::VecDeque;
+use std::fmt;
 
 use anyhow::Result;
 
-use super::engine::Engine;
+use super::engine::{Engine, ReservoirUpdate};
 use crate::data::dataset::Sample;
 use crate::dfr::mask::Mask;
 use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, TrainConfig};
@@ -87,6 +108,18 @@ pub struct SessionConfig {
     /// size of the rolling error window (also the minimum number of
     /// streamed samples before the fallback can trigger)
     pub fallback_window: usize,
+    /// Serve-phase reservoir adaptation: labelled samples also drive
+    /// truncated-BPTT SGD steps on (p, q) through `Engine::train_step`.
+    /// Effective only while the streaming ridge is active
+    /// (`train.forgetting` / `train.window`) — the re-featurization
+    /// reseed needs the online factor and the bounded sample ring.
+    pub adapt_reservoir: bool,
+    /// learning rate of the serve-loop reservoir SGD steps (applied to
+    /// both the reservoir and the SGD output-layer state)
+    pub adapt_lr: f32,
+    /// accumulated candidate drift `|p − gen_p| + |q − gen_q|` that
+    /// triggers recalibration + re-featurization into a new generation
+    pub adapt_drift_eps: f32,
 }
 
 impl SessionConfig {
@@ -100,6 +133,9 @@ impl SessionConfig {
             retrain_after: None,
             fallback_error_rate: None,
             fallback_window: 32,
+            adapt_reservoir: false,
+            adapt_lr: 0.01,
+            adapt_drift_eps: 0.02,
         }
     }
 }
@@ -118,10 +154,55 @@ pub enum FeedOutcome {
     /// Serve-phase streaming update applied: the output layer was
     /// rank-1-updated and re-solved in place (no retrain, no phase
     /// change). `updates` is the accumulator's lifetime fold count,
-    /// `window` its current occupancy.
-    Observed { updates: u64, window: usize },
+    /// `window` its current occupancy. `reservoir_step` reports whether
+    /// the sample also drove a reservoir-parameter SGD step
+    /// (`SessionConfig::adapt_reservoir`).
+    Observed {
+        updates: u64,
+        window: usize,
+        reservoir_step: bool,
+    },
+    /// Serve-phase reservoir adaptation rolled a new generation — the
+    /// accumulated (p, q) drift crossed the threshold, or the engine's
+    /// datapath generation moved under the session. The engine
+    /// recalibrated, the ring buffer was re-featurized through the
+    /// updated reservoir at the new `(p, q)`, and the online ridge was
+    /// reseeded from it. `generation` is the session's new reservoir
+    /// generation, `updates` the number of buffered samples re-folded
+    /// into the fresh factor; `reservoir_step` reports whether this feed
+    /// also drove a reservoir-parameter SGD step.
+    Adapted {
+        generation: u64,
+        p: f32,
+        q: f32,
+        updates: u64,
+        reservoir_step: bool,
+    },
     Rejected(String),
 }
+
+/// Why [`Session::infer`] refused — the flattened replacement for the
+/// old nested `Result<Result<_, String>>`.
+#[derive(Debug)]
+pub enum InferError {
+    /// the session has not reached (or has left) the Serve phase
+    NotServing { session: u64, phase: Phase },
+    /// the compute backend failed
+    Engine(anyhow::Error),
+}
+
+impl fmt::Display for InferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferError::NotServing { session, phase } => {
+                write!(f, "session {} not serving (phase {})", session, phase.name())
+            }
+            InferError::Engine(e) => write!(f, "engine error: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
 
 /// One online deployment.
 pub struct Session {
@@ -148,14 +229,41 @@ pub struct Session {
     rng: Pcg32,
     /// mean SGD loss per epoch of the last training run
     pub epoch_losses: Vec<f32>,
+    /// reservoir generation of the served model: advanced by every batch
+    /// train and every adaptation reseed. The online ridge factor, the
+    /// served `W̃`, and the features folded into them all belong to this
+    /// generation — never to a newer candidate.
+    generation: u64,
+    /// `Engine::generation` observed when the current factor was seeded;
+    /// a mismatch on a later feed means the shared datapath changed and
+    /// forces a reseed before anything else is folded
+    engine_generation: u64,
+    /// reservoir parameters of the served generation — what features and
+    /// inference use while the candidate `state.(p, q)` drifts ahead
+    gen_p: f32,
+    gen_q: f32,
+    /// workload envelope for engine recalibration (longest series /
+    /// largest |u| seen by this session)
+    obs_t_max: usize,
+    obs_u_max: f32,
 }
 
 impl Session {
-    pub fn new(id: u64, cfg: SessionConfig, seed: u64) -> Self {
+    pub fn new(id: u64, mut cfg: SessionConfig, seed: u64) -> Self {
+        // an adaptation reseed rebuilds the ridge factor from the sample
+        // ring: a window wider than the ring would silently shrink the
+        // effective training set on every generation roll, so the ring
+        // is grown to back a full-window refold
+        if cfg.adapt_reservoir {
+            if let Some(w) = cfg.train.window {
+                cfg.buffer_cap = cfg.buffer_cap.max(w);
+            }
+        }
         let mut rng = Pcg32::new(seed, id);
         let mask = Mask::random(cfg.train.nx, cfg.n_v, &mut rng);
         let state = TrainState::init(cfg.n_c, cfg.train.nx, cfg.train.p_init, cfg.train.q_init);
         let err_ring = vec![false; cfg.fallback_window];
+        let (gen_p, gen_q) = (cfg.train.p_init, cfg.train.q_init);
         Session {
             id,
             cfg,
@@ -173,6 +281,12 @@ impl Session {
             err_count: 0,
             rng,
             epoch_losses: Vec::new(),
+            generation: 0,
+            engine_generation: 0,
+            gen_p,
+            gen_q,
+            obs_t_max: 0,
+            obs_u_max: 0.0,
         }
     }
 
@@ -189,8 +303,23 @@ impl Session {
         self.online.as_ref()
     }
 
+    /// Candidate reservoir parameters — where the (possibly streaming)
+    /// optimizer currently is. Equals [`serving_params`](Self::serving_params)
+    /// except mid-adaptation, between reseeds.
     pub fn params(&self) -> (f32, f32) {
         (self.state.p, self.state.q)
+    }
+
+    /// Reservoir parameters of the **served** generation: what features
+    /// for the online ridge and `infer` are extracted with.
+    pub fn serving_params(&self) -> (f32, f32) {
+        (self.gen_p, self.gen_q)
+    }
+
+    /// The session's reservoir generation (advanced by every batch train
+    /// and every adaptation reseed).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     fn push_err(&mut self, is_err: bool) {
@@ -257,16 +386,40 @@ impl Session {
     }
 
     /// The Serve-phase streaming update: extract r̃ into the session
-    /// scratch, score the sample against the **pre-update** model
-    /// (prequential error, feeds the fallback trigger), fold it into the
-    /// online accumulator, and refresh the served `W̃_out` in place.
-    /// Zero heap allocations in steady state (`tests/zero_alloc.rs`).
+    /// scratch **at the served generation's (p, q)**, score the sample
+    /// against the pre-update model (prequential error, feeds the
+    /// fallback trigger), fold it into the online accumulator, and
+    /// refresh the served `W̃_out` in place. With adaptation enabled the
+    /// sample then also drives one truncated-BPTT SGD step on the
+    /// candidate (p, q); crossing the drift threshold recalibrates the
+    /// engine and reseeds a new generation (`Adapted`). Zero heap
+    /// allocations in steady state (`tests/zero_alloc.rs`); the reseed
+    /// path allocates, but only on generation changes.
     fn observe_online(&mut self, engine: &dyn Engine, sample: Sample) -> Result<FeedOutcome> {
+        // a shared-datapath change since the factor was seeded (another
+        // session recalibrated a quantized engine on this shard) would
+        // mix reservoir generations — reseed before folding anything;
+        // the incoming sample still folds below, into the fresh factor,
+        // and the feed is answered `Adapted`
+        // (if this feed's own BPTT step below also crosses the drift
+        // threshold, a second reseed follows at the candidate params —
+        // a rare double roll, accepted: the first reseed is what makes
+        // folding and prequential-scoring this sample coherent at all.
+        // The feed is answered with the second roll's Adapted, so the
+        // generation skips a value and refeaturize_total counts one —
+        // a deliberate, bounded undercount on this corner)
+        let mut datapath_refold: Option<u64> = None;
+        if engine.generation() != self.engine_generation {
+            // re-featurize at the CURRENT serving params (they were
+            // budget-validated at the last roll; the candidate's drift
+            // keeps accumulating toward its own recalibrated roll)
+            datapath_refold = Some(self.reseed_online(engine, false)?);
+        }
         engine.features_into(
             &sample,
             &self.mask,
-            self.state.p,
-            self.state.q,
+            self.gen_p,
+            self.gen_q,
             &mut self.feat_scratch,
         )?;
         let (stats, mispredicted) = {
@@ -280,12 +433,58 @@ impl Session {
                 .copy_from_slice(self.online.as_ref().expect("just used").w_tilde());
         }
         // keep a bounded FIFO of recent labelled samples so the batch
-        // fallback has something to retrain on
+        // fallback (and the adaptation reseed) has something to work on
         if !self.buffer.is_empty() && self.buffer.len() >= self.cfg.buffer_cap {
             self.buffer.pop_front();
         }
         self.buffer.push_back(sample);
+        let sample = self.buffer.back().expect("just pushed");
         self.new_since_train += 1;
+
+        // streaming reservoir adaptation: one truncated-BPTT SGD step on
+        // the candidate (p, q) — serving stays on (gen_p, gen_q) until
+        // the drift threshold rolls the generation forward
+        let mut reservoir_step = false;
+        if self.cfg.adapt_reservoir {
+            self.obs_t_max = self.obs_t_max.max(sample.t);
+            for &u in &sample.u {
+                self.obs_u_max = self.obs_u_max.max(u.abs());
+            }
+            let lr = self.cfg.adapt_lr;
+            engine.train_step(sample, &self.mask, &mut self.state, lr, lr)?;
+            if self.cfg.train.project_to_search_range {
+                crate::dfr::grid::project_to_search_range(&mut self.state.p, &mut self.state.q);
+            }
+            reservoir_step = true;
+            let drift = (self.state.p - self.gen_p).abs() + (self.state.q - self.gen_q).abs();
+            if drift > self.cfg.adapt_drift_eps {
+                engine.recalibrate(&ReservoirUpdate {
+                    p: self.state.p,
+                    q: self.state.q,
+                    n_v: self.cfg.n_v,
+                    t_max: self.obs_t_max,
+                    u_max: self.obs_u_max,
+                })?;
+                let updates = self.reseed_online(engine, true)?;
+                return Ok(FeedOutcome::Adapted {
+                    generation: self.generation,
+                    p: self.gen_p,
+                    q: self.gen_q,
+                    updates,
+                    reservoir_step: true,
+                });
+            }
+        }
+
+        if let Some(refolded) = datapath_refold {
+            return Ok(FeedOutcome::Adapted {
+                generation: self.generation,
+                p: self.gen_p,
+                q: self.gen_q,
+                updates: refolded,
+                reservoir_step,
+            });
+        }
         if let Some(threshold) = self.cfg.fallback_error_rate {
             let cap = self.err_ring.len();
             if cap > 0 && self.err_len == cap && self.err_count as f32 > threshold * cap as f32 {
@@ -296,7 +495,66 @@ impl Session {
         Ok(FeedOutcome::Observed {
             updates: stats.updates,
             window: stats.window_len,
+            reservoir_step,
         })
+    }
+
+    /// Roll the serving state onto a new reservoir generation:
+    /// re-featurize the bounded ring buffer through the serving
+    /// reservoir, reseed a fresh online ridge factor from those features
+    /// (same β/λ/window as the old one), and refresh the served `W̃`.
+    /// Returns the number of samples re-folded.
+    ///
+    /// `advance_params` distinguishes the two roll triggers: a
+    /// drift-threshold roll (`true`) pins `(gen_p, gen_q)` to the
+    /// freshly **recalibrated** candidate; a datapath-change roll
+    /// (`false`) keeps the already-validated serving params and only
+    /// regenerates the features under the engine's new datapath — the
+    /// unvalidated candidate is never served, and its accumulated drift
+    /// survives to trigger a proper recalibrated roll later.
+    ///
+    /// Factor and features are regenerated together under one generation
+    /// bump, so no r̃ from generation G ever meets a factor from G' ≠ G.
+    fn reseed_online(&mut self, engine: &dyn Engine, advance_params: bool) -> Result<u64> {
+        if advance_params {
+            self.gen_p = self.state.p;
+            self.gen_q = self.state.q;
+        }
+        self.generation += 1;
+        self.engine_generation = engine.generation();
+        let (ocfg, s, ny) = {
+            let o = self
+                .online
+                .as_ref()
+                .expect("reseed requires the streaming path");
+            (o.config(), o.s(), o.ny())
+        };
+        let mut fresh = OnlineRidge::new(s, ny, ocfg);
+        // window mode refolds the tail `window` samples; λ mode replays
+        // the whole ring in arrival order so the geometric down-weighting
+        // matches what the evicted factor carried
+        let start = ocfg
+            .window
+            .map_or(0, |w| self.buffer.len().saturating_sub(w));
+        let mut folded = 0u64;
+        for i in start..self.buffer.len() {
+            engine.features_into(
+                &self.buffer[i],
+                &self.mask,
+                self.gen_p,
+                self.gen_q,
+                &mut self.feat_scratch,
+            )?;
+            fresh.fold(&self.feat_scratch, self.buffer[i].label);
+            folded += 1;
+        }
+        fresh.solve_now();
+        if let Some(sol) = self.solution.as_mut() {
+            sol.w_tilde.copy_from_slice(fresh.w_tilde());
+        }
+        self.online = Some(fresh);
+        self.reset_err();
+        Ok(folded)
     }
 
     /// Force training with whatever is buffered.
@@ -318,6 +576,10 @@ impl Session {
         let mut lr_out = cfg.lr_init;
         let mut order: Vec<usize> = (0..self.buffer.len()).collect();
         self.epoch_losses.clear();
+        // plateau stopping mirrors StreamingBpTrainer::end_epoch, so the
+        // engine-driven batch path stops where the native trainer would
+        let mut best_loss = f32::INFINITY;
+        let mut since_best = 0usize;
         for epoch in 0..cfg.epochs {
             if cfg.res_decay_epochs.contains(&epoch) {
                 lr_res *= 0.1;
@@ -332,15 +594,42 @@ impl Session {
                 let loss = engine.train_step(s, &self.mask, &mut self.state, lr_res, lr_out)?;
                 loss_sum += f64::from(loss);
                 if cfg.project_to_search_range {
-                    let (plo, phi) = crate::dfr::grid::P_EXP_RANGE;
-                    let (qlo, qhi) = crate::dfr::grid::Q_EXP_RANGE;
-                    self.state.p = self.state.p.clamp(10f32.powf(plo), 10f32.powf(phi));
-                    self.state.q = self.state.q.clamp(10f32.powf(qlo), 10f32.powf(qhi));
+                    crate::dfr::grid::project_to_search_range(&mut self.state.p, &mut self.state.q);
                 }
             }
-            self.epoch_losses
-                .push((loss_sum / self.buffer.len() as f64) as f32);
+            let mean = (loss_sum / self.buffer.len() as f64) as f32;
+            self.epoch_losses.push(mean);
+            if let Some(patience) = cfg.plateau_patience {
+                if mean < best_loss - cfg.plateau_min_delta {
+                    best_loss = mean;
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= patience {
+                        break;
+                    }
+                }
+            }
         }
+
+        // the batch train establishes new serving parameters too — give
+        // the engine the same budget re-validation a drift roll gets
+        // (a quantized engine may fall back to f32, or recover from an
+        // earlier fallback) BEFORE extracting the ridge features, so the
+        // layer is fitted to what the recalibrated datapath will serve
+        for s in &self.buffer {
+            self.obs_t_max = self.obs_t_max.max(s.t);
+            for &u in &s.u {
+                self.obs_u_max = self.obs_u_max.max(u.abs());
+            }
+        }
+        engine.recalibrate(&ReservoirUpdate {
+            p: self.state.p,
+            q: self.state.q,
+            n_v: self.cfg.n_v,
+            t_max: self.obs_t_max,
+            u_max: self.obs_u_max,
+        })?;
 
         self.phase = Phase::RidgeTrain;
         let feats: Result<Vec<(Vec<f32>, usize)>> = self
@@ -360,6 +649,12 @@ impl Session {
         self.online = online_ridge_from_features(&feats, self.cfg.n_c, &cfg, beta);
         self.reset_err();
         self.solution = Some(sol);
+        // the batch train founds a new reservoir generation: features,
+        // factor and served W̃ all belong to the state it converged at
+        self.gen_p = self.state.p;
+        self.gen_q = self.state.q;
+        self.generation += 1;
+        self.engine_generation = engine.generation();
         self.phase = Phase::Serve;
         self.new_since_train = 0;
         Ok(FeedOutcome::Trained {
@@ -370,25 +665,46 @@ impl Session {
         })
     }
 
-    /// Inference; only valid in Serve.
-    pub fn infer(&self, engine: &dyn Engine, sample: &Sample) -> Result<Result<(usize, Vec<f32>), String>> {
+    /// Bring the served model onto the engine's current **datapath**
+    /// generation before answering inference — the infer-side mirror of
+    /// the check in `observe_online`, so a session receiving only
+    /// `Infer` traffic cannot keep serving a W̃ solved under the
+    /// pre-flip datapath against post-flip features. No-op unless the
+    /// engine's datapath moved and the streaming factor exists to
+    /// reseed from (the batch-only path re-aligns at its next retrain).
+    /// Returns the number of samples re-folded when a reseed ran.
+    pub fn sync_generation(&mut self, engine: &dyn Engine) -> Result<Option<u64>> {
+        if self.phase == Phase::Serve
+            && self.online.is_some()
+            && engine.generation() != self.engine_generation
+        {
+            return Ok(Some(self.reseed_online(engine, false)?));
+        }
+        Ok(None)
+    }
+
+    /// Inference; only valid in Serve. Runs against the **served
+    /// generation's** reservoir parameters — coherent with the factor
+    /// and W̃ even while the adaptation candidate drifts ahead. The
+    /// server calls [`sync_generation`](Self::sync_generation) first so
+    /// the served layer tracks shared-datapath changes.
+    pub fn infer(
+        &self,
+        engine: &dyn Engine,
+        sample: &Sample,
+    ) -> Result<(usize, Vec<f32>), InferError> {
         if self.phase != Phase::Serve {
-            return Ok(Err(format!(
-                "session {} not serving (phase {})",
-                self.id,
-                self.phase.name()
-            )));
+            return Err(InferError::NotServing {
+                session: self.id,
+                phase: self.phase,
+            });
         }
         let sol = self.solution.as_ref().expect("serve implies solution");
-        let scores = engine.infer(
-            sample,
-            &self.mask,
-            self.state.p,
-            self.state.q,
-            &sol.w_tilde,
-        )?;
+        let scores = engine
+            .infer(sample, &self.mask, self.gen_p, self.gen_q, &sol.w_tilde)
+            .map_err(InferError::Engine)?;
         let class = crate::linalg::ridge::argmax(&scores);
-        Ok(Ok((class, scores)))
+        Ok((class, scores))
     }
 }
 
@@ -444,7 +760,7 @@ mod tests {
         // inference works and is decent on this easy problem
         let mut ok = 0;
         for s in &ds.test {
-            let (class, scores) = sess.infer(&eng, s).unwrap().unwrap();
+            let (class, scores) = sess.infer(&eng, s).unwrap();
             assert_eq!(scores.len(), 2);
             if class == s.label {
                 ok += 1;
@@ -456,8 +772,9 @@ mod tests {
     #[test]
     fn infer_rejected_before_training() {
         let (eng, sess, ds) = setup();
-        let r = sess.infer(&eng, &ds.test[0]).unwrap();
-        assert!(r.is_err());
+        let e = sess.infer(&eng, &ds.test[0]).unwrap_err();
+        assert!(matches!(e, InferError::NotServing { .. }), "{e}");
+        assert!(e.to_string().contains("not serving"), "{e}");
     }
 
     #[test]
@@ -527,9 +844,14 @@ mod tests {
         let mut saw_change = false;
         for (i, s) in ds.train.iter().take(6).enumerate() {
             match sess.feed_labelled(&eng, s.clone()).unwrap() {
-                FeedOutcome::Observed { updates, window } => {
+                FeedOutcome::Observed {
+                    updates,
+                    window,
+                    reservoir_step,
+                } => {
                     assert_eq!(updates, seeded_updates + i as u64 + 1);
                     assert!(window <= 16);
+                    assert!(!reservoir_step, "adaptation is off by default");
                 }
                 other => panic!("expected Observed, got {other:?}"),
             }
@@ -539,9 +861,12 @@ mod tests {
             }
         }
         assert!(saw_change, "served W̃ never refreshed");
+        // adaptation off → the candidate never drifts from the serving
+        // generation and the generation stays at the batch train's
+        assert_eq!(sess.params(), sess.serving_params());
+        assert_eq!(sess.generation(), 1);
         // inference still works against the refreshed layer
-        let r = sess.infer(&eng, &ds.test[0]).unwrap();
-        assert!(r.is_ok());
+        assert!(sess.infer(&eng, &ds.test[0]).is_ok());
     }
 
     #[test]
@@ -572,5 +897,174 @@ mod tests {
         assert!(fell_back, "sustained errors never triggered the batch fallback");
         assert_eq!(sess.phase, Phase::Serve);
         assert!(sess.online().is_some(), "fallback retrain reseeds the accumulator");
+    }
+
+    #[test]
+    fn adaptation_steps_move_candidate_without_touching_serving_generation() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        sess.cfg.adapt_reservoir = true;
+        sess.cfg.adapt_lr = 0.05;
+        sess.cfg.adapt_drift_eps = 1e9; // never roll the generation
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        assert_eq!(sess.generation(), 1);
+        let served = sess.serving_params();
+        let mut stepped = 0;
+        for s in ds.train.iter().take(8) {
+            match sess.feed_labelled(&eng, s.clone()).unwrap() {
+                FeedOutcome::Observed { reservoir_step, .. } => {
+                    assert!(reservoir_step, "adaptation must drive BP steps");
+                    stepped += 1;
+                }
+                other => panic!("expected Observed, got {other:?}"),
+            }
+        }
+        assert_eq!(stepped, 8);
+        // the candidate moved, the served generation did not
+        assert_ne!(sess.params(), served, "candidate (p, q) never moved");
+        assert_eq!(sess.serving_params(), served);
+        assert_eq!(sess.generation(), 1);
+    }
+
+    #[test]
+    fn drift_threshold_rolls_generation_and_reseeds() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        sess.cfg.adapt_reservoir = true;
+        sess.cfg.adapt_lr = 0.05;
+        sess.cfg.adapt_drift_eps = 1e-6; // any movement crosses
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.generation(), 1);
+        let mut last_generation = sess.generation();
+        let mut adapted = 0;
+        for s in ds.train.iter().take(10) {
+            match sess.feed_labelled(&eng, s.clone()).unwrap() {
+                FeedOutcome::Adapted {
+                    generation,
+                    p,
+                    q,
+                    updates,
+                    reservoir_step,
+                } => {
+                    adapted += 1;
+                    assert!(reservoir_step, "drift rolls ride a BP step");
+                    assert!(generation > last_generation, "generation must be monotonic");
+                    last_generation = generation;
+                    // the reseed pins serving to the candidate
+                    assert_eq!((p, q), sess.serving_params());
+                    assert_eq!((p, q), sess.params());
+                    // window mode refolds at most `window` ring samples
+                    assert!(updates > 0 && updates <= 16, "{updates}");
+                }
+                FeedOutcome::Observed { reservoir_step, .. } => assert!(reservoir_step),
+                other => panic!("unexpected {other:?}"),
+            }
+            assert_eq!(sess.phase, Phase::Serve, "adaptation never leaves Serve");
+        }
+        assert!(adapted > 0, "drift threshold of 1e-6 never tripped");
+        // the served model stays coherent: inference still works
+        assert!(sess.infer(&eng, &ds.test[0]).is_ok());
+    }
+
+    /// NativeEngine wrapper whose datapath generation can be flipped by
+    /// the test — stands in for a shared quantized engine falling back
+    /// to f32 (which is when `Engine::generation` really moves).
+    struct FlippingEngine {
+        inner: NativeEngine,
+        gen: std::cell::Cell<u64>,
+    }
+
+    impl Engine for FlippingEngine {
+        fn train_step(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            state: &mut crate::runtime::executor::TrainState,
+            lr_res: f32,
+            lr_out: f32,
+        ) -> Result<f32> {
+            self.inner.train_step(s, mask, state, lr_res, lr_out)
+        }
+        fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+            self.inner.features(s, mask, p, q)
+        }
+        fn features_into(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            p: f32,
+            q: f32,
+            out: &mut Vec<f32>,
+        ) -> Result<()> {
+            self.inner.features_into(s, mask, p, q, out)
+        }
+        fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
+            self.inner.infer(s, mask, p, q, w)
+        }
+        fn name(&self) -> &'static str {
+            "flipping"
+        }
+        fn generation(&self) -> u64 {
+            self.gen.get()
+        }
+    }
+
+    #[test]
+    fn engine_generation_change_forces_reseed_before_folding() {
+        let (inner, mut sess, ds) = setup();
+        let eng = FlippingEngine {
+            inner,
+            gen: std::cell::Cell::new(0),
+        };
+        sess.cfg.train.window = Some(16);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.generation(), 1);
+        // the shared datapath changes under the session (e.g. another
+        // session's recalibration flipped a quantized engine to f32)
+        eng.gen.set(1);
+        // the next labelled feed must reseed (datapath generation moved)
+        // and answer Adapted at the session's own VALIDATED serving
+        // parameters — a datapath roll never serves the candidate
+        let before = sess.serving_params();
+        match sess.feed_labelled(&eng, ds.train[0].clone()).unwrap() {
+            FeedOutcome::Adapted {
+                generation,
+                p,
+                q,
+                updates,
+                reservoir_step,
+            } => {
+                assert_eq!(generation, 2);
+                assert_eq!((p, q), before, "datapath roll keeps the serving params");
+                assert!(updates > 0);
+                assert!(!reservoir_step, "adaptation is off in this session");
+            }
+            other => panic!("expected Adapted after datapath change, got {other:?}"),
+        }
+        // subsequent feeds are plain Observed again
+        match sess.feed_labelled(&eng, ds.train[1].clone()).unwrap() {
+            FeedOutcome::Observed { .. } => {}
+            other => panic!("expected Observed, got {other:?}"),
+        }
+
+        // infer-only traffic tracks datapath changes too: the server
+        // calls sync_generation before infer
+        eng.gen.set(2);
+        let refolded = sess.sync_generation(&eng).unwrap();
+        assert!(refolded.is_some(), "datapath moved — must reseed");
+        assert_eq!(sess.generation(), 3);
+        assert_eq!(sess.serving_params(), before, "sync keeps serving params");
+        assert!(
+            sess.sync_generation(&eng).unwrap().is_none(),
+            "aligned — second sync is a no-op"
+        );
+        assert!(sess.infer(&eng, &ds.test[0]).is_ok());
     }
 }

@@ -40,15 +40,23 @@ impl OutputLayer {
 
     /// Class probabilities for a feature vector r (Eq. 13 + softmax).
     pub fn probs(&self, r: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(r.len(), self.nr);
-        let mut z: Vec<f32> = (0..self.ny)
-            .map(|i| {
-                let row = &self.w[i * self.nr..(i + 1) * self.nr];
-                row.iter().zip(r).map(|(w, r)| w * r).sum::<f32>() + self.b[i]
-            })
-            .collect();
-        softmax_inplace(&mut z);
+        let mut z = Vec::new();
+        self.probs_into(r, &mut z);
         z
+    }
+
+    /// [`probs`](Self::probs) into a caller-owned buffer — the BPTT
+    /// inner loop's forward through the output layer without a `Vec`
+    /// allocation per step (capacity is reused once sized).
+    pub fn probs_into(&self, r: &[f32], z: &mut Vec<f32>) {
+        debug_assert_eq!(r.len(), self.nr);
+        z.clear();
+        z.reserve(self.ny);
+        for i in 0..self.ny {
+            let row = &self.w[i * self.nr..(i + 1) * self.nr];
+            z.push(row.iter().zip(r).map(|(w, r)| w * r).sum::<f32>() + self.b[i]);
+        }
+        softmax_inplace(z);
     }
 }
 
@@ -81,6 +89,49 @@ pub struct Grads {
     pub db: Vec<f32>,
 }
 
+/// Reusable workspace of the truncated backward pass: the output `Grads`
+/// plus every intermediate the Eqs. 25–26, 33–36 pipeline materializes
+/// (softmax/δz, dR, bpv, dx). Sized on first use, then steady-state
+/// [`truncated_grads_scratch`] performs **zero heap allocations** —
+/// asserted through the streaming trainer in `tests/zero_alloc.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct GradScratch {
+    grads: Grads,
+    /// probs y, reused in place as dz = y − e
+    y: Vec<f32>,
+    /// dL/dR, row-major Nx×(Nx+1)
+    dr: Vec<f32>,
+    bpv: Vec<f32>,
+    dx: Vec<f32>,
+}
+
+impl Default for Grads {
+    fn default() -> Self {
+        Grads {
+            loss: 0.0,
+            dp: 0.0,
+            dq: 0.0,
+            dw: Vec::new(),
+            db: Vec::new(),
+        }
+    }
+}
+
+impl GradScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The gradients of the last [`truncated_grads_scratch`] call.
+    pub fn grads(&self) -> &Grads {
+        &self.grads
+    }
+
+    pub fn into_grads(self) -> Grads {
+        self.grads
+    }
+}
+
 /// Truncated backpropagation (Eqs. 25–26, 33–36) from a streaming
 /// [`Forward`] result — the online training kernel.
 ///
@@ -104,38 +155,59 @@ pub fn truncated_grads(
 pub fn truncated_grads_ref(
     fwd: ForwardRef<'_>,
     class: usize,
+    p: f32,
+    q: f32,
+    f: Nonlinearity,
+    out: &OutputLayer,
+) -> Grads {
+    let mut sc = GradScratch::new();
+    truncated_grads_scratch(fwd, class, p, q, f, out, &mut sc);
+    sc.into_grads()
+}
+
+/// The truncated backward pass into a caller-owned [`GradScratch`] — the
+/// per-sample gradient kernel of the streaming trainer
+/// ([`dfr::optim`](super::optim)) and `NativeEngine::train_step`. Bit-
+/// identical to [`truncated_grads_ref`] (which wraps it); after the
+/// first call has sized the workspace it allocates nothing.
+pub fn truncated_grads_scratch(
+    fwd: ForwardRef<'_>,
+    class: usize,
     // p is part of the formula set's signature for symmetry with
     // full_bptt_grads (Eq. 35 uses f and the stored forward values only)
     _p: f32,
     q: f32,
     f: Nonlinearity,
     out: &OutputLayer,
-) -> Grads {
+    sc: &mut GradScratch,
+) {
     let nx = fwd.x_t.len();
     let nr = out.nr;
     debug_assert_eq!(fwd.r_mat.len(), nr);
 
     // forward through the output layer
-    let y = out.probs(fwd.r_mat);
-    let loss = cross_entropy(&y, class);
+    out.probs_into(fwd.r_mat, &mut sc.y);
+    let loss = cross_entropy(&sc.y, class);
 
-    // Eq. (25): dL/dz = y - e
-    let mut dz = y;
+    // Eq. (25): dL/dz = y - e (in place over the probs buffer)
+    let dz = &mut sc.y;
     dz[class] -= 1.0;
 
     // Eq. (26): db, dW = dz ⊗ r, dr = Wᵀ dz
-    let db = dz.clone();
-    let mut dw = vec![0.0f32; out.ny * nr];
+    sc.grads.db.clear();
+    sc.grads.db.extend_from_slice(dz);
+    sc.grads.dw.resize(out.ny * nr, 0.0);
     for (i, &d) in dz.iter().enumerate() {
-        let row = &mut dw[i * nr..(i + 1) * nr];
+        let row = &mut sc.grads.dw[i * nr..(i + 1) * nr];
         for (w, &r) in row.iter_mut().zip(fwd.r_mat) {
             *w = d * r;
         }
     }
-    let mut dr = vec![0.0f32; nr]; // laid out as dR[n][j], row-major Nx×(Nx+1)
+    sc.dr.clear();
+    sc.dr.resize(nr, 0.0); // laid out as dR[n][j], row-major Nx×(Nx+1)
     for (i, &d) in dz.iter().enumerate() {
         let row = &out.w[i * nr..(i + 1) * nr];
-        for (g, &w) in dr.iter_mut().zip(row) {
+        for (g, &w) in sc.dr.iter_mut().zip(row) {
             *g += w * d;
         }
     }
@@ -144,30 +216,30 @@ pub fn truncated_grads_ref(
     // DPRR 1/T normalization (∂R_norm/∂(x(T)·) carries the 1/T factor)
     let w1 = nx + 1;
     let inv_t = 1.0 / fwd.t_len.max(1) as f32;
-    let bpv: Vec<f32> = (0..nx)
-        .map(|n| {
-            let row = &dr[n * w1..(n + 1) * w1];
-            (row[..nx]
-                .iter()
-                .zip(fwd.x_tm1)
-                .map(|(g, x)| g * x)
-                .sum::<f32>()
-                + row[nx])
-                * inv_t
-        })
-        .collect();
+    sc.bpv.clear();
+    sc.bpv.extend((0..nx).map(|n| {
+        let row = &sc.dr[n * w1..(n + 1) * w1];
+        (row[..nx]
+            .iter()
+            .zip(fwd.x_tm1)
+            .map(|(g, x)| g * x)
+            .sum::<f32>()
+            + row[nx])
+            * inv_t
+    }));
 
     // Eq. (34): dx_n = bpv_n + q·dx_{n+1}, reverse over n
-    let mut dx = vec![0.0f32; nx];
+    sc.dx.clear();
+    sc.dx.resize(nx, 0.0);
     let mut carry = 0.0f32;
     for n in (0..nx).rev() {
-        carry = bpv[n] + q * carry;
-        dx[n] = carry;
+        carry = sc.bpv[n] + q * carry;
+        sc.dx[n] = carry;
     }
 
     // Eq. (35): dp = Σ_n f(j(T)_n + x(T-1)_n) dx_n
     let dp = (0..nx)
-        .map(|n| f.eval(fwd.j_t[n] + fwd.x_tm1[n]) * dx[n])
+        .map(|n| f.eval(fwd.j_t[n] + fwd.x_tm1[n]) * sc.dx[n])
         .sum();
 
     // Eq. (36): dq = Σ_n x(T)_{n-1} dx_n, with x(T)_0 = x(T-1)_{Nx}
@@ -178,17 +250,13 @@ pub fn truncated_grads_ref(
             } else {
                 fwd.x_t[n - 1]
             };
-            prev * dx[n]
+            prev * sc.dx[n]
         })
         .sum();
 
-    Grads {
-        loss,
-        dp,
-        dq,
-        dw,
-        db,
-    }
+    sc.grads.loss = loss;
+    sc.grads.dp = dp;
+    sc.grads.dq = dq;
 }
 
 /// Full backpropagation-through-time (Eqs. 29–32) from a recorded

@@ -17,6 +17,18 @@ use crate::util::scoped_pool::scoped_map;
 pub const P_EXP_RANGE: (f32, f32) = (-3.75, -0.25);
 pub const Q_EXP_RANGE: (f32, f32) = (-2.75, -0.25);
 
+/// Project (p, q) into the §4.1 search ranges — the single clamp shared
+/// by the batch SGD phase, the streaming trainer, and the Serve-loop
+/// adaptation step (they must project identically or the bit-for-bit
+/// streaming/batch equivalence breaks).
+#[inline]
+pub fn project_to_search_range(p: &mut f32, q: &mut f32) {
+    let (plo, phi) = P_EXP_RANGE;
+    let (qlo, qhi) = Q_EXP_RANGE;
+    *p = p.clamp(10f32.powf(plo), 10f32.powf(phi));
+    *q = q.clamp(10f32.powf(qlo), 10f32.powf(qhi));
+}
+
 /// One evaluated grid point.
 #[derive(Clone, Debug)]
 pub struct GridPoint {

@@ -14,14 +14,16 @@
 //! Modules: [`mask`] (input masking, Fig. 2), [`reservoir`] (modular DFR
 //! Eq. 14 and the conventional Mackey–Glass digital DFR Eqs. 8–9),
 //! [`dprr`] (Eqs. 27–28), [`backprop`] (full BPTT Eqs. 29–32 and the
-//! truncated Eqs. 33–36 + Table 7 memory accounting), [`train`] (the
-//! paper's §4.1 SGD protocol + ridge finalization), [`grid`] (the 3-D
-//! grid-search baseline).
+//! truncated Eqs. 33–36 + Table 7 memory accounting), [`optim`] (the
+//! per-sample truncated-BPTT SGD trainer the batch and streaming paths
+//! share), [`train`] (the paper's §4.1 SGD protocol + ridge
+//! finalization), [`grid`] (the 3-D grid-search baseline).
 
 pub mod backprop;
 pub mod dprr;
 pub mod grid;
 pub mod mask;
+pub mod optim;
 pub mod reservoir;
 pub mod train;
 

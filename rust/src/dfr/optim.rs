@@ -1,0 +1,337 @@
+//! Streaming reservoir-parameter optimization — the §4.1 truncated-BPTT
+//! SGD core, extracted out of the batch `sgd_phase` into a per-sample
+//! trainer that any caller can drive one labelled sample at a time.
+//!
+//! [`StreamingBpTrainer`] owns the reservoir, the SGD output layer, the
+//! learning-rate schedule and all per-sample workspaces
+//! ([`ForwardScratch`] + [`GradScratch`]), so its steady-state
+//! [`step`](StreamingBpTrainer::step) performs **zero heap allocations**
+//! (asserted by the counting allocator in `tests/zero_alloc.rs`).
+//!
+//! Two drivers exist:
+//!
+//! * `dfr::train::sgd_phase` — the batch Train-phase protocol is now a
+//!   thin epoch loop over this trainer (shuffle → [`begin_epoch`] →
+//!   [`step`]× → [`end_epoch`]), so the streaming and batch trajectories
+//!   are bit-for-bit identical **by construction**
+//!   (`tests/streaming_bp_equivalence.rs` pins this);
+//! * `coordinator::Session` — labelled Serve samples drive the same
+//!   per-sample update through `Engine::train_step` (which shares the
+//!   [`GradScratch`] kernel), realizing the paper's *online* training
+//!   loop without leaving the serve path (DESIGN.md §13).
+//!
+//! [`begin_epoch`]: StreamingBpTrainer::begin_epoch
+//! [`end_epoch`]: StreamingBpTrainer::end_epoch
+
+use super::backprop::{truncated_grads_scratch, GradScratch, OutputLayer};
+use super::mask::Mask;
+use super::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+use crate::data::dataset::Sample;
+
+/// Optimizer knobs of the truncated-BPTT SGD core. Derived from
+/// `TrainConfig` via `From<&TrainConfig>` (same defaults, same decay
+/// schedule); the plateau fields add optional early stopping that both
+/// the batch and streaming drivers apply identically.
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    /// epoch budget (the trainer itself never loops — drivers consult
+    /// [`StreamingBpTrainer::stopped`] against this)
+    pub epochs: usize,
+    pub lr_init: f32,
+    /// epochs at which the reservoir LR is multiplied by 0.1
+    pub res_decay_epochs: Vec<usize>,
+    /// epochs at which the output LR is multiplied by 0.1
+    pub out_decay_epochs: Vec<usize>,
+    /// clamp |dp|,|dq| per step (`None` follows the paper exactly)
+    pub grad_clip: Option<f32>,
+    /// project (p, q) into the §4.1 search ranges after each update
+    pub project_to_search_range: bool,
+    /// plateau patience: stop after this many consecutive epochs whose
+    /// mean loss failed to improve the best by more than
+    /// [`plateau_min_delta`](Self::plateau_min_delta). `None` (the
+    /// default) runs the full epoch budget — the paper's fixed 25.
+    pub plateau_patience: Option<usize>,
+    /// minimum mean-loss improvement that resets the patience counter
+    pub plateau_min_delta: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig {
+            epochs: 25,
+            lr_init: 0.1,
+            res_decay_epochs: vec![5, 10, 15, 20],
+            out_decay_epochs: vec![10, 15, 20],
+            grad_clip: Some(1.0),
+            project_to_search_range: true,
+            plateau_patience: None,
+            plateau_min_delta: 0.0,
+        }
+    }
+}
+
+/// Per-sample truncated-BPTT SGD over (p, q, W, b) — see module docs.
+pub struct StreamingBpTrainer {
+    res: Reservoir,
+    out: OutputLayer,
+    cfg: OptimConfig,
+    lr_res: f32,
+    lr_out: f32,
+    /// epochs begun so far (the decay schedule's index)
+    epoch: usize,
+    fwd: ForwardScratch,
+    gsc: GradScratch,
+    loss_sum: f64,
+    seen: usize,
+    epoch_losses: Vec<f32>,
+    best_loss: f32,
+    since_best: usize,
+    plateaued: bool,
+    steps: u64,
+}
+
+impl StreamingBpTrainer {
+    /// Fresh trainer at the protocol's initial state: `(p, q)` at the
+    /// init values, output layer zero-initialised, LR at `lr_init`.
+    pub fn new(
+        mask: Mask,
+        f: Nonlinearity,
+        p_init: f32,
+        q_init: f32,
+        n_c: usize,
+        cfg: OptimConfig,
+    ) -> Self {
+        let nx = mask.nx;
+        StreamingBpTrainer {
+            res: Reservoir {
+                mask,
+                p: p_init,
+                q: q_init,
+                f,
+            },
+            out: OutputLayer::zeros(n_c, nx),
+            lr_res: cfg.lr_init,
+            lr_out: cfg.lr_init,
+            cfg,
+            epoch: 0,
+            fwd: ForwardScratch::new(nx),
+            gsc: GradScratch::new(),
+            loss_sum: 0.0,
+            seen: 0,
+            epoch_losses: Vec::new(),
+            best_loss: f32::INFINITY,
+            since_best: 0,
+            plateaued: false,
+            steps: 0,
+        }
+    }
+
+    pub fn reservoir(&self) -> &Reservoir {
+        &self.res
+    }
+
+    pub fn output(&self) -> &OutputLayer {
+        &self.out
+    }
+
+    /// Current (p, q).
+    pub fn params(&self) -> (f32, f32) {
+        (self.res.p, self.res.q)
+    }
+
+    /// Mean SGD loss per completed epoch — the Fig. 7 trace.
+    pub fn epoch_losses(&self) -> &[f32] {
+        &self.epoch_losses
+    }
+
+    /// Total per-sample steps taken.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Whether the epoch budget is exhausted or the plateau patience
+    /// tripped — drivers stop their epoch loop here.
+    pub fn stopped(&self) -> bool {
+        self.plateaued || self.epoch >= self.cfg.epochs
+    }
+
+    /// Start the next epoch: apply the LR decay schedule for the epoch
+    /// index about to run and reset the epoch-loss accumulator.
+    pub fn begin_epoch(&mut self) {
+        if self.cfg.res_decay_epochs.contains(&self.epoch) {
+            self.lr_res *= 0.1;
+        }
+        if self.cfg.out_decay_epochs.contains(&self.epoch) {
+            self.lr_out *= 0.1;
+        }
+        self.loss_sum = 0.0;
+        self.seen = 0;
+    }
+
+    /// One per-sample update: forward through the reservoir, truncated
+    /// backward (Eqs. 33–36), clipped SGD step on (p, q), SGD step on
+    /// (W, b), optional projection into the search ranges. Returns the
+    /// sample loss. Zero heap allocations once the workspaces are sized.
+    pub fn step(&mut self, s: &Sample) -> f32 {
+        self.res.forward_into(&s.u, s.t, &mut self.fwd);
+        truncated_grads_scratch(
+            self.fwd.as_forward_ref(),
+            s.label,
+            self.res.p,
+            self.res.q,
+            self.res.f,
+            &self.out,
+            &mut self.gsc,
+        );
+        let g = self.gsc.grads();
+        self.loss_sum += f64::from(g.loss);
+        self.seen += 1;
+        self.steps += 1;
+        let (mut dp, mut dq) = (g.dp, g.dq);
+        if let Some(c) = self.cfg.grad_clip {
+            dp = dp.clamp(-c, c);
+            dq = dq.clamp(-c, c);
+        }
+        if dp.is_finite() && dq.is_finite() {
+            self.res.p -= self.lr_res * dp;
+            self.res.q -= self.lr_res * dq;
+        }
+        if self.cfg.project_to_search_range {
+            super::grid::project_to_search_range(&mut self.res.p, &mut self.res.q);
+        }
+        if g.loss.is_finite() {
+            for (w, d) in self.out.w.iter_mut().zip(&g.dw) {
+                *w -= self.lr_out * d;
+            }
+            for (b, d) in self.out.b.iter_mut().zip(&g.db) {
+                *b -= self.lr_out * d;
+            }
+        }
+        g.loss
+    }
+
+    /// Close the epoch: record its mean loss, advance the schedule, and
+    /// run the plateau check. Returns the mean loss.
+    pub fn end_epoch(&mut self) -> f32 {
+        let mean = (self.loss_sum / self.seen.max(1) as f64) as f32;
+        self.epoch_losses.push(mean);
+        self.epoch += 1;
+        if let Some(patience) = self.cfg.plateau_patience {
+            if mean < self.best_loss - self.cfg.plateau_min_delta {
+                self.best_loss = mean;
+                self.since_best = 0;
+            } else {
+                self.since_best += 1;
+                if self.since_best >= patience {
+                    self.plateaued = true;
+                }
+            }
+        }
+        mean
+    }
+
+    /// Tear down into the trained pieces (reservoir, output layer, the
+    /// per-epoch loss trace) — what `sgd_phase` returns.
+    pub fn finish(self) -> (Reservoir, OutputLayer, Vec<f32>) {
+        (self.res, self.out, self.epoch_losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn sample(t: usize, v: usize, rng: &mut Pcg32, label: usize) -> Sample {
+        Sample {
+            u: (0..t * v).map(|_| rng.normal()).collect(),
+            t,
+            label,
+        }
+    }
+
+    fn trainer(cfg: OptimConfig) -> StreamingBpTrainer {
+        let mut rng = Pcg32::seed(0x0971);
+        let mask = Mask::random(6, 2, &mut rng);
+        StreamingBpTrainer::new(mask, Nonlinearity::Linear { alpha: 1.0 }, 0.1, 0.1, 3, cfg)
+    }
+
+    #[test]
+    fn step_moves_parameters_and_reports_loss() {
+        let mut tr = trainer(OptimConfig::default());
+        let mut rng = Pcg32::seed(1);
+        let s = sample(12, 2, &mut rng, 1);
+        tr.begin_epoch();
+        let l1 = tr.step(&s);
+        assert!(l1.is_finite() && l1 > 0.0);
+        assert!(tr.output().w.iter().any(|&w| w != 0.0));
+        let before = tr.params();
+        tr.step(&s);
+        assert_ne!(tr.params(), before, "second step must move (p, q)");
+        assert_eq!(tr.steps(), 2);
+    }
+
+    #[test]
+    fn lr_decay_schedule_applies_at_epoch_starts() {
+        let cfg = OptimConfig {
+            epochs: 4,
+            res_decay_epochs: vec![1],
+            out_decay_epochs: vec![2],
+            ..Default::default()
+        };
+        let mut tr = trainer(cfg);
+        tr.begin_epoch(); // epoch 0: no decay
+        assert_eq!(tr.lr_res, 0.1);
+        tr.end_epoch();
+        tr.begin_epoch(); // epoch 1: reservoir decays
+        assert!((tr.lr_res - 0.01).abs() < 1e-6);
+        assert_eq!(tr.lr_out, 0.1);
+        tr.end_epoch();
+        tr.begin_epoch(); // epoch 2: output decays
+        assert!((tr.lr_out - 0.01).abs() < 1e-6);
+        tr.end_epoch();
+    }
+
+    #[test]
+    fn plateau_patience_stops_early() {
+        // min_delta so large no epoch ever counts as an improvement
+        // after the first: the trainer must stop after exactly
+        // 1 + patience epochs
+        let cfg = OptimConfig {
+            epochs: 50,
+            plateau_patience: Some(3),
+            plateau_min_delta: 1e9,
+            ..Default::default()
+        };
+        let mut tr = trainer(cfg);
+        let mut rng = Pcg32::seed(2);
+        let s = sample(10, 2, &mut rng, 0);
+        let mut ran = 0;
+        while !tr.stopped() {
+            tr.begin_epoch();
+            tr.step(&s);
+            tr.end_epoch();
+            ran += 1;
+            assert!(ran <= 50, "never stopped");
+        }
+        assert_eq!(ran, 4, "1 improving epoch + 3 patience");
+        assert_eq!(tr.epoch_losses().len(), 4);
+    }
+
+    #[test]
+    fn epoch_budget_stops_without_patience() {
+        let cfg = OptimConfig {
+            epochs: 2,
+            ..Default::default()
+        };
+        let mut tr = trainer(cfg);
+        let mut rng = Pcg32::seed(3);
+        let s = sample(8, 2, &mut rng, 2);
+        while !tr.stopped() {
+            tr.begin_epoch();
+            tr.step(&s);
+            tr.end_epoch();
+        }
+        assert_eq!(tr.epoch_losses().len(), 2);
+    }
+}

@@ -13,8 +13,9 @@
 //! This module is the software reference; the coordinator drives the same
 //! protocol through the PJRT `train_step` artifacts.
 
-use super::backprop::{cross_entropy, truncated_grads_ref, OutputLayer};
+use super::backprop::{cross_entropy, OutputLayer};
 use super::mask::Mask;
+use super::optim::{OptimConfig, StreamingBpTrainer};
 use super::reservoir::{Forward, ForwardScratch, Nonlinearity, Reservoir};
 use crate::data::dataset::{accuracy, Dataset, Sample};
 use crate::linalg::ridge::{
@@ -73,6 +74,15 @@ pub struct TrainConfig {
     /// the exact Gram shadow every K updates (0 = only when a downdate
     /// loses positive definiteness).
     pub refactor_every: usize,
+    /// SGD plateau patience: stop the BP phase after this many
+    /// consecutive epochs without a mean-loss improvement of more than
+    /// [`plateau_min_delta`](Self::plateau_min_delta). `None` (default)
+    /// runs the paper's fixed epoch count. Applied identically by the
+    /// batch `sgd_phase`, the streaming trainer (`dfr::optim`), and the
+    /// coordinator's engine-driven batch train (`Session::train`).
+    pub plateau_patience: Option<usize>,
+    /// minimum improvement that resets the plateau counter
+    pub plateau_min_delta: f32,
 }
 
 impl Default for TrainConfig {
@@ -101,6 +111,23 @@ impl Default for TrainConfig {
             forgetting: None,
             window: None,
             refactor_every: 64,
+            plateau_patience: None,
+            plateau_min_delta: 0.0,
+        }
+    }
+}
+
+impl From<&TrainConfig> for OptimConfig {
+    fn from(cfg: &TrainConfig) -> Self {
+        OptimConfig {
+            epochs: cfg.epochs,
+            lr_init: cfg.lr_init,
+            res_decay_epochs: cfg.res_decay_epochs.clone(),
+            out_decay_epochs: cfg.out_decay_epochs.clone(),
+            grad_clip: cfg.grad_clip,
+            project_to_search_range: cfg.project_to_search_range,
+            plateau_patience: cfg.plateau_patience,
+            plateau_min_delta: cfg.plateau_min_delta,
         }
     }
 }
@@ -163,69 +190,30 @@ pub fn train_with_mask(
 }
 
 /// Phase 1: truncated-BP SGD over (p, q, W, b).
+///
+/// A thin epoch loop over [`StreamingBpTrainer`] — the per-sample update
+/// lives in `dfr::optim`, so the batch Train phase and the Serve-phase
+/// streaming adaptation (`coordinator::Session`) run the identical core
+/// (shuffle order is the only thing this wrapper adds; the equivalence
+/// is pinned bit-for-bit in `tests/streaming_bp_equivalence.rs`).
 pub fn sgd_phase(
     ds: &Dataset,
     cfg: &TrainConfig,
     mask: Mask,
     rng: &mut Pcg32,
 ) -> (Reservoir, OutputLayer, Vec<f32>) {
-    let mut res = Reservoir {
-        mask,
-        p: cfg.p_init,
-        q: cfg.q_init,
-        f: cfg.f,
-    };
-    let mut out = OutputLayer::zeros(ds.n_c, cfg.nx);
-    let mut lr_res = cfg.lr_init;
-    let mut lr_out = cfg.lr_init;
+    let mut trainer =
+        StreamingBpTrainer::new(mask, cfg.f, cfg.p_init, cfg.q_init, ds.n_c, OptimConfig::from(cfg));
     let mut order: Vec<usize> = (0..ds.train.len()).collect();
-    let mut epoch_losses = Vec::with_capacity(cfg.epochs);
-    // one workspace for the whole SGD phase — the per-sample forward
-    // passes allocate nothing
-    let mut scratch = ForwardScratch::new(cfg.nx);
-
-    for epoch in 0..cfg.epochs {
-        if cfg.res_decay_epochs.contains(&epoch) {
-            lr_res *= 0.1;
-        }
-        if cfg.out_decay_epochs.contains(&epoch) {
-            lr_out *= 0.1;
-        }
+    while !trainer.stopped() {
+        trainer.begin_epoch();
         rng.shuffle(&mut order);
-        let mut loss_sum = 0.0f64;
         for &i in &order {
-            let s = &ds.train[i];
-            res.forward_into(&s.u, s.t, &mut scratch);
-            let g =
-                truncated_grads_ref(scratch.as_forward_ref(), s.label, res.p, res.q, res.f, &out);
-            loss_sum += f64::from(g.loss);
-            let (mut dp, mut dq) = (g.dp, g.dq);
-            if let Some(c) = cfg.grad_clip {
-                dp = dp.clamp(-c, c);
-                dq = dq.clamp(-c, c);
-            }
-            if dp.is_finite() && dq.is_finite() {
-                res.p -= lr_res * dp;
-                res.q -= lr_res * dq;
-            }
-            if cfg.project_to_search_range {
-                let (plo, phi) = super::grid::P_EXP_RANGE;
-                let (qlo, qhi) = super::grid::Q_EXP_RANGE;
-                res.p = res.p.clamp(10f32.powf(plo), 10f32.powf(phi));
-                res.q = res.q.clamp(10f32.powf(qlo), 10f32.powf(qhi));
-            }
-            if g.loss.is_finite() {
-                for (w, d) in out.w.iter_mut().zip(&g.dw) {
-                    *w -= lr_out * d;
-                }
-                for (b, d) in out.b.iter_mut().zip(&g.db) {
-                    *b -= lr_out * d;
-                }
-            }
+            trainer.step(&ds.train[i]);
         }
-        epoch_losses.push((loss_sum / ds.train.len().max(1) as f64) as f32);
+        trainer.end_epoch();
     }
-    (res, out, epoch_losses)
+    trainer.finish()
 }
 
 /// Phase 2: ridge regression with β selection by training loss (Eq. 24

@@ -429,6 +429,13 @@ impl OnlineRidge {
         self.cfg.beta
     }
 
+    /// The accumulator's construction-time knobs — callers that need to
+    /// rebuild an equivalent accumulator (e.g. the session's
+    /// re-featurization reseed) clone the configuration from here.
+    pub fn config(&self) -> OnlineRidgeConfig {
+        self.cfg
+    }
+
     /// Total samples folded in.
     pub fn updates(&self) -> u64 {
         self.updates

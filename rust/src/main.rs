@@ -112,7 +112,19 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("qformat", "q4.12", "fixed-point word for the quant engine (q4.12 | q6.10 | q8.8 | qI.F)")
         .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
         .opt("collect", "0", "collect target (0 = whole training split)")
-        .opt("shards", "0", "coordinator worker shards (0 = one per core)");
+        .opt("shards", "0", "coordinator worker shards (0 = one per core)")
+        .opt("window", "0", "streaming-ridge sliding window for labelled Serve samples (0 = off)")
+        .opt("forgetting", "0", "streaming-ridge λ-forgetting factor in (0, 1) (0 = off)")
+        .flag(
+            "adapt-reservoir",
+            "online reservoir adaptation: labelled Serve samples drive truncated-BP steps on (p, q)",
+        )
+        .opt("adapt-lr", "0.01", "adaptation SGD learning rate")
+        .opt(
+            "adapt-drift-eps",
+            "0.02",
+            "accumulated |Δp|+|Δq| that triggers re-featurization + quant recalibration",
+        );
     let p = cmd.parse(argv)?;
     let prof = profile_arg(&p)?;
     let ds = synth::generate(prof, p.get_u64("seed")?);
@@ -122,6 +134,32 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     };
     let mut scfg = SessionConfig::new(prof.n_v, prof.n_c, collect);
     scfg.train.epochs = p.get_usize("epochs")?;
+    match p.get_usize("window")? {
+        0 => {}
+        n => scfg.train.window = Some(n),
+    }
+    let forgetting = p.get_f32("forgetting")?;
+    if forgetting > 0.0 {
+        if scfg.train.window.is_some() {
+            return Err(
+                "--window and --forgetting are mutually exclusive (an evicted sample's \
+                 decayed weight cannot be downdated exactly) — pick one streaming mode"
+                    .to_string(),
+            );
+        }
+        scfg.train.forgetting = Some(forgetting);
+    }
+    if p.has_flag("adapt-reservoir") {
+        scfg.adapt_reservoir = true;
+        scfg.adapt_lr = p.get_f32("adapt-lr")?;
+        scfg.adapt_drift_eps = p.get_f32("adapt-drift-eps")?;
+        if scfg.train.window.is_none() && scfg.train.forgetting.is_none() {
+            // adaptation rides the streaming ridge (the reseed needs the
+            // online factor + sample ring) — default a window in
+            log_info!("adapt-reservoir: no streaming mode set, defaulting --window {}", collect.min(256));
+            scfg.train.window = Some(collect.min(256));
+        }
+    }
 
     let engine: Box<dyn dfr_edge::coordinator::Engine> = match p.get("engine") {
         "native" => Box::new(NativeEngine::new(scfg.train.nx, prof.n_c)),

@@ -15,18 +15,35 @@
 //! allocations** (per-replica workspace + in-place mask refresh +
 //! grow-only quantized-weight cache) — asserted by the counting
 //! allocator in `tests/zero_alloc.rs`.
+//!
+//! # Recalibration (online reservoir adaptation)
+//!
+//! When the Serve-phase reservoir optimizer moves (p, q),
+//! [`Engine::recalibrate`] rebuilds the PWL LUT (re-measuring its
+//! sup-error), re-runs the §12 error budget for the active Q-format
+//! against the session's observed workload envelope
+//! ([`budget_for_workload`](super::budget::budget_for_workload)), and —
+//! if the new parameters violate the budget's stability region — flips
+//! serving to the **f32 fallback** (logged + counted): `features`/`infer`
+//! route through the embedded [`NativeEngine`] until a later
+//! recalibration lands back inside the budget. Every recalibration bumps
+//! the engine's reservoir [`generation`](Engine::generation), which is
+//! what lets sessions keep ridge factors and features generation-
+//! coherent across the datapath switch (DESIGN.md §13).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{Engine, NativeEngine};
+use crate::coordinator::engine::{Engine, NativeEngine, Recalibration, ReservoirUpdate};
 use crate::data::dataset::Sample;
 use crate::dfr::backprop::softmax_inplace;
 use crate::dfr::mask::Mask;
 use crate::dfr::reservoir::Nonlinearity;
 use crate::runtime::executor::TrainState;
+use crate::{log_info, log_warn};
 
+use super::budget::budget_for_workload;
 use super::reservoir::{QuantForwardScratch, QuantReservoir};
 use super::QuantConfig;
 
@@ -36,11 +53,25 @@ pub struct QuantEngine {
     pub n_c: usize,
     pub f: Nonlinearity,
     pub cfg: QuantConfig,
-    /// f32 reference backing `train_step` (PS-side SGD)
+    /// f32 reference backing `train_step` (PS-side SGD) and the
+    /// budget-violation serving fallback
     native: NativeEngine,
     /// per-replica workspace; never contended — each shard exclusively
     /// owns its engine replica (`Engine: Send`, not `Sync`)
     scratch: RefCell<QuantScratch>,
+    /// datapath generation: bumped when a `recalibrate` actually changes
+    /// the shared serving datapath (the f32 fallback flipping on or off)
+    generation: Cell<u64>,
+    /// serving datapath switch: when set, `features`/`infer` route
+    /// through the f32 native engine (budget violation)
+    fallback: Cell<bool>,
+    /// lifetime recalibration count
+    recalibrations: Cell<u64>,
+    /// lifetime budget-violation (fallback) count
+    fallbacks: Cell<u64>,
+    /// last recalibration's r̃ error bound (+∞ while fallen back,
+    /// NaN before the first recalibration)
+    last_bound: Cell<f32>,
 }
 
 struct QuantScratch {
@@ -81,6 +112,11 @@ impl QuantEngine {
                 fwd: QuantForwardScratch::new(nx, 0),
                 qw: Vec::new(),
             }),
+            generation: Cell::new(0),
+            fallback: Cell::new(false),
+            recalibrations: Cell::new(0),
+            fallbacks: Cell::new(0),
+            last_bound: Cell::new(f32::NAN),
         }
     }
 
@@ -88,6 +124,28 @@ impl QuantEngine {
     /// error budget's no-overflow assumption held for that sample.
     pub fn last_saturations(&self) -> u64 {
         self.scratch.borrow().fwd.saturations()
+    }
+
+    /// Whether serving currently routes through the f32 fallback (the
+    /// last recalibration's (p, q) violated the error budget).
+    pub fn is_fallback(&self) -> bool {
+        self.fallback.get()
+    }
+
+    /// Lifetime `recalibrate` calls.
+    pub fn recalibrations(&self) -> u64 {
+        self.recalibrations.get()
+    }
+
+    /// Lifetime budget violations (recalibrations that fell back).
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.get()
+    }
+
+    /// The per-element r̃ error bound of the last recalibration
+    /// (infinite while fallen back; NaN before the first call).
+    pub fn last_error_bound(&self) -> f32 {
+        self.last_bound.get()
     }
 
     /// Run the quantized forward into the replica workspace (in-place
@@ -132,6 +190,9 @@ impl Engine for QuantEngine {
         q: f32,
         out: &mut Vec<f32>,
     ) -> Result<()> {
+        if self.fallback.get() {
+            return self.native.features_into(s, mask, p, q, out);
+        }
         let mut sc = self.scratch.borrow_mut();
         self.forward_scratch(s, mask, p, q, &mut sc);
         sc.fwd.r_tilde_into(self.cfg.arith, out);
@@ -153,6 +214,9 @@ impl Engine for QuantEngine {
         w_tilde: &[f32],
         scores: &mut Vec<f32>,
     ) -> Result<()> {
+        if self.fallback.get() {
+            return self.native.infer_into(s, mask, p, q, w_tilde, scores);
+        }
         let mut sc = self.scratch.borrow_mut();
         self.forward_scratch(s, mask, p, q, &mut sc);
         let arith = self.cfg.arith;
@@ -192,9 +256,75 @@ impl Engine for QuantEngine {
         "quant"
     }
 
+    fn generation(&self) -> u64 {
+        self.generation.get()
+    }
+
+    fn recalibrate(&self, upd: &ReservoirUpdate) -> Result<Recalibration> {
+        // rebuild the PWL LUT and re-measure its sup-error — the budget
+        // below is evaluated against the freshly measured ε_f. Today the
+        // LUT depends only on (f, format, segments), so the rebuild is
+        // bit-identical (asserted in tests) and cheap (2^k segment
+        // evals); it stays in the recalibration contract so a future
+        // range-adaptive or (p, q)-scaled table re-measures correctly.
+        let eps_f = {
+            let mut sc = self.scratch.borrow_mut();
+            sc.res.rebuild_lut();
+            sc.res.lut().max_err()
+        };
+        let bound = budget_for_workload(
+            self.cfg.arith.fmt,
+            self.f,
+            upd.p,
+            upd.q,
+            self.nx,
+            upd.n_v,
+            upd.t_max.max(1),
+            upd.u_max,
+            eps_f,
+        );
+        let fell_back = !bound.is_finite();
+        self.recalibrations.set(self.recalibrations.get() + 1);
+        let flipped = fell_back != self.fallback.get();
+        if fell_back {
+            self.fallbacks.set(self.fallbacks.get() + 1);
+            if flipped {
+                log_warn!(
+                    "quant: (p={:.4}, q={:.4}) violates the {} error budget — serving falls back to f32",
+                    upd.p,
+                    upd.q,
+                    self.cfg.arith.fmt.name()
+                );
+            }
+        } else if flipped {
+            log_info!(
+                "quant: (p={:.4}, q={:.4}) back inside the {} budget (bound {:.3e}) — fixed-point serving resumes",
+                upd.p,
+                upd.q,
+                self.cfg.arith.fmt.name(),
+                bound
+            );
+        }
+        self.fallback.set(fell_back);
+        self.last_bound.set(bound);
+        // the DATAPATH generation moves only when the datapath itself
+        // changed (quant ⇄ f32): parameter-only recalibrations leave the
+        // shared feature function untouched, so other sessions on the
+        // shard have nothing to re-featurize against
+        if flipped {
+            self.generation.set(self.generation.get() + 1);
+        }
+        Ok(Recalibration {
+            generation: self.generation.get(),
+            fell_back,
+            error_bound: Some(bound),
+        })
+    }
+
     fn fork(&self) -> Option<Box<dyn Engine>> {
         // configuration-only state: replicas rebuild their own LUT and
-        // workspace
+        // workspace (and start un-fallen-back at generation 0 — each
+        // shard's sessions recalibrate their own replica)
         Some(Box::new(QuantEngine::with_config(
             self.nx, self.n_c, self.f, self.cfg,
         )))
@@ -273,6 +403,86 @@ mod tests {
         let y = eng.infer(&s, &mask, 0.2, 0.1, &w).unwrap();
         assert_eq!(y.len(), 2);
         assert!(y.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn recalibrate_inside_budget_keeps_fixed_point_serving() {
+        let eng = QuantEngine::new(5, 2);
+        let mask = Mask::golden(5, 2);
+        let s = sample(11, 2, 7, 0);
+        let before = eng.features(&s, &mask, 0.2, 0.15).unwrap();
+        let r = eng
+            .recalibrate(&ReservoirUpdate {
+                p: 0.2,
+                q: 0.15,
+                n_v: 2,
+                t_max: 11,
+                u_max: 1.5,
+            })
+            .unwrap();
+        assert!(!r.fell_back);
+        let bound = r.error_bound.expect("quant engines report a bound");
+        assert!(bound.is_finite() && bound > 0.0, "{bound}");
+        assert!(!eng.is_fallback());
+        // the datapath never changed (stayed fixed-point), so the shared
+        // datapath generation must NOT move — other sessions on the
+        // shard keep their factors
+        assert_eq!(r.generation, 0);
+        assert_eq!(eng.generation(), 0);
+        assert_eq!(eng.recalibrations(), 1);
+        assert_eq!(eng.fallbacks(), 0);
+        // the quantized datapath (rebuilt LUT included) is bit-stable
+        let after = eng.features(&s, &mask, 0.2, 0.15).unwrap();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn recalibrate_outside_budget_falls_back_to_f32_and_recovers() {
+        let eng = QuantEngine::new(5, 2);
+        let nat = NativeEngine::new(5, 2);
+        let mask = Mask::golden(5, 2);
+        let s = sample(11, 2, 8, 1);
+        // p·L_f + |q| = 1.3 ≥ 1: no contraction → +∞ bound → fallback
+        let r = eng
+            .recalibrate(&ReservoirUpdate {
+                p: 0.8,
+                q: 0.5,
+                n_v: 2,
+                t_max: 11,
+                u_max: 1.5,
+            })
+            .unwrap();
+        assert!(r.fell_back);
+        assert!(r.error_bound.unwrap().is_infinite());
+        assert!(eng.is_fallback());
+        assert_eq!(eng.fallbacks(), 1);
+        assert!(eng.last_error_bound().is_infinite());
+        // fallen-back serving is EXACTLY the f32 native path
+        let fq = eng.features(&s, &mask, 0.3, 0.2).unwrap();
+        let ff = nat.features(&s, &mask, 0.3, 0.2).unwrap();
+        assert_eq!(fq, ff);
+        let w = vec![0.01f32; 2 * (5 * 6 + 1)];
+        let yq = eng.infer(&s, &mask, 0.3, 0.2, &w).unwrap();
+        let yf = nat.infer(&s, &mask, 0.3, 0.2, &w).unwrap();
+        assert_eq!(yq, yf);
+        // a later recalibration back inside the budget resumes the
+        // fixed-point datapath
+        let r2 = eng
+            .recalibrate(&ReservoirUpdate {
+                p: 0.2,
+                q: 0.1,
+                n_v: 2,
+                t_max: 11,
+                u_max: 1.5,
+            })
+            .unwrap();
+        assert!(!r2.fell_back);
+        assert_eq!(r2.generation, 2);
+        assert!(!eng.is_fallback());
+        assert_eq!(eng.fallbacks(), 1, "recovery is not a fallback");
+        let fq2 = eng.features(&s, &mask, 0.2, 0.1).unwrap();
+        let fresh = QuantEngine::new(5, 2);
+        assert_eq!(fq2, fresh.features(&s, &mask, 0.2, 0.1).unwrap());
     }
 
     #[test]

@@ -108,6 +108,8 @@ impl QuantForwardScratch {
 pub struct QuantReservoir {
     pub mask: Mask,
     pub arith: QArith,
+    f: Nonlinearity,
+    log2_segments: u32,
     p_raw: i32,
     q_raw: i32,
     lut: PwlLut,
@@ -119,6 +121,8 @@ impl QuantReservoir {
         QuantReservoir {
             mask,
             arith,
+            f,
+            log2_segments,
             p_raw: 0,
             q_raw: 0,
             lut,
@@ -127,6 +131,11 @@ impl QuantReservoir {
 
     pub fn nx(&self) -> usize {
         self.mask.nx
+    }
+
+    /// The configured nonlinearity.
+    pub fn f(&self) -> Nonlinearity {
+        self.f
     }
 
     /// Quantize (p, q) into the datapath words.
@@ -138,6 +147,14 @@ impl QuantReservoir {
     /// The LUT (error-budget inputs: `max_err`, `words`).
     pub fn lut(&self) -> &PwlLut {
         &self.lut
+    }
+
+    /// Rebuild the PWL LUT from the stored configuration — the
+    /// recalibration hook (`QuantEngine::recalibrate`): reconstruction
+    /// re-measures the sup-error the fresh error budget is evaluated
+    /// against.
+    pub fn rebuild_lut(&mut self) {
+        self.lut = PwlLut::new(self.f, self.arith, self.log2_segments);
     }
 
     /// Bit-accurate streaming forward over a series `u` (row-major T×V).

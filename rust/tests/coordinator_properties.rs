@@ -3,7 +3,7 @@
 //! `util::proptest` driver.
 
 use dfr_edge::coordinator::engine::NativeEngine;
-use dfr_edge::coordinator::session::{FeedOutcome, Phase, Session, SessionConfig};
+use dfr_edge::coordinator::session::{FeedOutcome, InferError, Phase, Session, SessionConfig};
 use dfr_edge::coordinator::{Request, Response, Server, ServerConfig};
 use dfr_edge::data::dataset::Sample;
 use dfr_edge::linalg::ridge::{RidgeAccumulator, RidgeMethod};
@@ -65,9 +65,11 @@ fn prop_session_phase_machine_is_sound() {
                 }
                 let infer_ok = {
                     let probe = sample(rng, 5, 2, 2);
-                    sess.infer(&eng, &probe)
-                        .map_err(|e| format!("{e:#}"))?
-                        .is_ok()
+                    match sess.infer(&eng, &probe) {
+                        Ok(_) => true,
+                        Err(InferError::NotServing { .. }) => false,
+                        Err(InferError::Engine(e)) => return Err(format!("engine: {e:#}")),
+                    }
                 };
                 if infer_ok != (sess.phase == Phase::Serve) {
                     return Err(format!(

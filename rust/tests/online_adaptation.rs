@@ -1,0 +1,301 @@
+//! Online reservoir adaptation through the sharded coordinator
+//! (DESIGN.md §13): an abruptly drifted labelled stream must produce
+//! `Adapted` responses — the streaming truncated-BPTT optimizer rolls
+//! the session onto new reservoir generations, re-featurizing and
+//! reseeding the online ridge — and accuracy must recover **without a
+//! single batch retrain** (`trainings_total` stays 1). Also covers the
+//! quantized engine's recalibration wiring end-to-end.
+
+use dfr_edge::coordinator::engine::Engine;
+use dfr_edge::coordinator::{
+    NativeEngine, Request, Response, Server, ServerConfig, SessionConfig,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::quant::QuantEngine;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn adapt_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg.train.forgetting = Some(0.92);
+    scfg.train.refactor_every = 16;
+    scfg.adapt_reservoir = true;
+    scfg.adapt_lr = 0.005;
+    scfg.adapt_drift_eps = 2e-3;
+    scfg
+}
+
+#[test]
+fn drifted_stream_triggers_adapted_and_recovers_without_retrain() {
+    // Same abrupt drift as the PR-3 streaming test — the label semantics
+    // flip after batch training — but now the reservoir layer adapts
+    // too: every labelled Serve sample drives a truncated-BPTT step on
+    // the candidate (p, q), and crossing the drift threshold rolls a new
+    // generation (recalibrate → re-featurize the ring → reseed).
+    let ds = mini_dataset(26);
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        ServerConfig {
+            session: adapt_session_config(ds.train.len()),
+            queue_cap: 64,
+            seed: 5,
+            shards: 2,
+        },
+    );
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            trained = true;
+        }
+    }
+    assert!(trained);
+
+    let flip = |s: &Sample| {
+        let mut s2 = s.clone();
+        s2.label = 1 - s2.label;
+        s2
+    };
+    let accuracy_flipped = |srv: &Server| -> usize {
+        ds.test
+            .iter()
+            .filter(|s| {
+                matches!(
+                    srv.call(Request::Infer { session: 1, sample: s.clone() }).unwrap(),
+                    Response::Prediction { class, .. } if class == 1 - s.label
+                )
+            })
+            .count()
+    };
+    let pre = accuracy_flipped(&srv);
+
+    // drift stream: three passes of flipped labelled samples. Every
+    // response is a streaming ack — Observed or Adapted — never a batch
+    // Trained and never Rejected.
+    let mut observed = 0u64;
+    let mut adapted = 0u64;
+    let mut last_generation = 0u64;
+    for _ in 0..3 {
+        for s in &ds.train {
+            match srv
+                .call(Request::Labelled {
+                    session: 1,
+                    sample: flip(s),
+                })
+                .unwrap()
+            {
+                Response::Observed { updates, .. } => {
+                    observed += 1;
+                    assert!(updates > 0);
+                }
+                Response::Adapted {
+                    generation,
+                    p,
+                    q,
+                    updates,
+                } => {
+                    adapted += 1;
+                    // the generation counter enforces no feature/factor
+                    // mixing: every roll is strictly monotonic
+                    assert!(
+                        generation > last_generation,
+                        "generation went {last_generation} -> {generation}"
+                    );
+                    last_generation = generation;
+                    assert!(updates > 0, "reseed must refold the ring");
+                    assert!(p > 0.0 && q > 0.0);
+                }
+                other => panic!("expected Observed/Adapted during drift, got {other:?}"),
+            }
+        }
+    }
+    let total = 3 * ds.train.len() as u64;
+    assert_eq!(observed + adapted, total);
+    assert!(
+        adapted > 0,
+        "the drifted stream never crossed the drift threshold"
+    );
+    assert!(last_generation >= 2, "first roll starts from generation 1");
+
+    let post = accuracy_flipped(&srv);
+    assert!(
+        post >= 6 && post > pre,
+        "post-drift accuracy did not recover: {pre}/10 -> {post}/10"
+    );
+
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            // all adaptation was online — exactly the one batch training
+            assert!(t.contains("counter trainings_total 1"), "{t}");
+            assert!(
+                t.contains(&format!("counter online_updates_total {total}")),
+                "{t}"
+            );
+            // every drift sample drove a reservoir step; every Adapted
+            // was one re-featurization
+            assert!(
+                t.contains(&format!("counter reservoir_updates_total {total}")),
+                "{t}"
+            );
+            assert!(
+                t.contains(&format!("counter refeaturize_total {adapted}")),
+                "{t}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn quant_engine_recalibrates_through_the_adaptation_loop() {
+    // QuantEngine behind the server with adaptation on: generation rolls
+    // must drive Engine::recalibrate (LUT rebuild + §12 budget re-run)
+    // while the sane mini workload stays inside the Q4.12 budget — the
+    // stream keeps serving quantized, and Adapted responses flow.
+    let ds = mini_dataset(28);
+    let mut scfg = adapt_session_config(ds.train.len());
+    scfg.adapt_drift_eps = 1e-6; // roll on any movement
+    let srv = Server::spawn(
+        Box::new(QuantEngine::new(8, 2)),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 64,
+            seed: 7,
+            shards: 1,
+        },
+    );
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv
+            .call(Request::Labelled {
+                session: 3,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            trained = true;
+        }
+    }
+    assert!(trained);
+    let mut adapted = 0u64;
+    for s in &ds.train {
+        match srv
+            .call(Request::Labelled {
+                session: 3,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            Response::Adapted { generation, .. } => {
+                adapted += 1;
+                assert!(generation >= 2);
+            }
+            Response::Observed { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(adapted > 0, "adaptation never rolled a generation");
+    // inference still serves after recalibrations
+    let r = srv
+        .call(Request::Infer {
+            session: 3,
+            sample: ds.test[0].clone(),
+        })
+        .unwrap();
+    assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+    srv.shutdown();
+}
+
+#[test]
+fn session_level_quant_fallback_reseeds_coherently() {
+    // Unit-level check of the engine/session generation contract with a
+    // quantized datapath that flips to f32: after an out-of-budget
+    // recalibration, the session's next labelled feed re-featurizes
+    // through the NEW (fallen-back) datapath before folding — features
+    // and factor stay generation-coherent across the switch.
+    use dfr_edge::coordinator::engine::ReservoirUpdate;
+    use dfr_edge::coordinator::session::{FeedOutcome, Session};
+    use dfr_edge::dfr::reservoir::Nonlinearity;
+    use dfr_edge::quant::{QFormat, QuantConfig};
+
+    let ds = mini_dataset(29);
+    let mut scfg = adapt_session_config(ds.train.len());
+    scfg.adapt_reservoir = false; // this session only observes
+    // Q6.10 (±32) holds the mini workload with wide headroom, so the
+    // batch train's own recalibration stays in budget and the ONLY
+    // fallback in this test is the injected out-of-budget one
+    let eng = QuantEngine::with_config(
+        8,
+        2,
+        Nonlinearity::Linear { alpha: 1.0 },
+        QuantConfig::with_format(QFormat::q6_10()),
+    );
+    let mut sess = Session::new(9, scfg, 0xC0FE);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert_eq!(sess.generation(), 1);
+    assert!(!eng.is_fallback());
+
+    // an out-of-budget recalibration (as another session's adaptation
+    // would issue) flips the shared datapath to f32
+    let r = eng
+        .recalibrate(&ReservoirUpdate {
+            p: 0.8,
+            q: 0.5,
+            n_v: 2,
+            t_max: 12,
+            u_max: 2.0,
+        })
+        .unwrap();
+    assert!(r.fell_back);
+    assert!(eng.is_fallback());
+
+    // next feed: the engine generation moved → Adapted (reseed through
+    // the f32 fallback), not a silent mixed-generation fold
+    match sess.feed_labelled(&eng, ds.train[0].clone()).unwrap() {
+        FeedOutcome::Adapted {
+            generation,
+            updates,
+            ..
+        } => {
+            assert_eq!(generation, 2);
+            assert!(updates > 0);
+        }
+        other => panic!("expected Adapted after datapath fallback, got {other:?}"),
+    }
+    // and the session keeps serving
+    assert!(sess.infer(&eng, &ds.test[0]).is_ok());
+}

@@ -235,6 +235,118 @@ fn session_streaming_feed_is_allocation_free_after_warmup() {
 }
 
 #[test]
+fn streaming_bp_trainer_steps_are_allocation_free_after_warmup() {
+    use dfr_edge::dfr::optim::{OptimConfig, StreamingBpTrainer};
+    use dfr_edge::dfr::reservoir::Nonlinearity;
+    // paper scale: the per-sample forward + truncated backward + SGD
+    // update must run entirely out of the trainer's workspaces
+    let (nx, v, n_c, t) = (30usize, 12usize, 9usize, 29usize);
+    let mut rng = Pcg32::seed(0xA1107);
+    let mask = Mask::random(nx, v, &mut rng);
+    let samples: Vec<Sample> = (0..12)
+        .map(|i| Sample {
+            u: (0..t * v).map(|_| rng.normal()).collect(),
+            t,
+            label: i % n_c,
+        })
+        .collect();
+    let mut tr = StreamingBpTrainer::new(
+        mask,
+        Nonlinearity::Linear { alpha: 1.0 },
+        0.1,
+        0.1,
+        n_c,
+        OptimConfig::default(),
+    );
+    tr.begin_epoch();
+    // warmup sizes ForwardScratch growth + GradScratch + probs buffers
+    for s in samples.iter().take(4) {
+        tr.step(s);
+    }
+    let n = allocations_in(|| {
+        for s in samples.iter().skip(4) {
+            let loss = tr.step(s);
+            assert!(loss.is_finite());
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state StreamingBpTrainer::step performed {n} heap allocations"
+    );
+    assert_eq!(tr.steps(), 12);
+}
+
+#[test]
+fn session_adaptation_steps_are_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+    use dfr_edge::data::profiles::Profile;
+    use dfr_edge::data::synth;
+
+    // streaming feed WITH reservoir adaptation: features + ridge fold +
+    // re-solve + truncated-BP step must all stay allocation-free while
+    // the drift threshold is not crossed (the generation reseed itself
+    // is allowed to allocate — it is not steady state)
+    let prof = Profile {
+        name: "mini",
+        n_v: 2,
+        n_c: 2,
+        train: 20,
+        test: 5,
+        t_min: 10,
+        t_max: 12,
+    };
+    let ds = synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        37,
+    );
+    let mut cfg = SessionConfig::new(2, 2, ds.train.len());
+    cfg.train.nx = 8;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    cfg.train.window = Some(12);
+    cfg.train.refactor_every = 6;
+    cfg.buffer_cap = ds.train.len();
+    cfg.adapt_reservoir = true;
+    cfg.adapt_lr = 0.01;
+    cfg.adapt_drift_eps = 1e9; // never roll the generation mid-measurement
+    let eng = NativeEngine::new(8, 2);
+    let mut sess = Session::new(1, cfg, 0xF00E);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert!(sess.online().is_some(), "streaming path active");
+
+    let warm: Vec<_> = ds.train.iter().take(8).cloned().collect();
+    let hot: Vec<_> = ds.train.iter().skip(8).take(8).cloned().collect();
+    for s in warm {
+        let out = sess.feed_labelled(&eng, s).unwrap();
+        assert!(
+            matches!(out, FeedOutcome::Observed { reservoir_step: true, .. }),
+            "{out:?}"
+        );
+    }
+    let n = allocations_in(|| {
+        for s in hot {
+            let out = sess.feed_labelled(&eng, s).unwrap();
+            assert!(
+                matches!(out, FeedOutcome::Observed { reservoir_step: true, .. }),
+                "{out:?}"
+            );
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state adapting feed_labelled performed {n} heap allocations"
+    );
+}
+
+#[test]
 fn forward_scratch_is_allocation_free_after_warmup() {
     use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
     let mut rng = Pcg32::seed(0xA110D);
