@@ -64,6 +64,7 @@ fn main() {
             // one machine = one session = one shard; see
             // benches/coordinator_throughput.rs for the multi-shard fleet
             shards: 1,
+            max_batch: 8,
         },
     );
 

@@ -1,16 +1,27 @@
 //! Coordinator scaling bench — req/s and latency percentiles of the
-//! sharded server at 1/2/4/8 shards (the ISSUE's "measured, not
-//! asserted" scaling claim).
+//! sharded server, swept two ways:
+//!
+//!   1. shard count 1/2/4/8 at the server-default batch depth (the
+//!      "measured, not asserted" scaling claim), and
+//!   2. batch depth `max_batch` ∈ {1, 8, 64} on a single shard — the
+//!      per-call baseline (`max_batch = 1`) against the batched shard
+//!      drain. With 8 blocking clients at most 8 requests are ever
+//!      queued per shard, so the 64 row measures "cap above offered
+//!      concurrency" and should track the 8 row.
 //!
 //! Multi-threaded clients fan blocking `call`s into the shard queues:
 //! 16 pre-trained sessions spread across shards, 8 client threads each
 //! issuing inference requests round-robin over the sessions. Per-request
 //! latency is recorded client-side into `util::metrics` histograms and
-//! merged; throughput is total requests over wall time. Results land in
-//! `results/coordinator_throughput.{csv,md}`.
+//! merged; throughput is total requests over wall time. The mean shard
+//! drain depth (requests per drain cycle, warm-up included — warm-up
+//! trains serially, so it dilutes the mean toward 1) is recovered from
+//! the server's own `batch_size` histogram and `requests_total` counter.
+//! Results land in `results/coordinator_throughput.{csv,md}`.
 //!
 //! `DFR_BENCH_FULL=1` quadruples the request count (EXPERIMENTS-grade
-//! numbers); the default keeps the whole sweep under ~30 s.
+//! numbers); `DFR_BENCH_SMOKE=1` shrinks the sweep to a CI smoke run;
+//! the default keeps the whole sweep under ~30 s.
 
 mod common;
 
@@ -46,10 +57,22 @@ struct RunResult {
     req_s: f64,
     p50_s: f64,
     p99_s: f64,
+    mean_drain: f64,
     stats_text: String,
 }
 
-fn run_config(shards: usize, reqs_per_client: usize) -> RunResult {
+/// First whitespace-separated token after `prefix` on any stats line,
+/// parsed as f64 (aggregate counter/histogram lines from
+/// `metrics::render`).
+fn stat_after(stats: &str, prefix: &str) -> Option<f64> {
+    stats.lines().find_map(|l| {
+        l.strip_prefix(prefix)
+            .and_then(|rest| rest.split_whitespace().next())
+            .and_then(|tok| tok.parse().ok())
+    })
+}
+
+fn run_config(shards: usize, max_batch: usize, reqs_per_client: usize) -> RunResult {
     let mut scfg = SessionConfig::new(N_V, N_C, TRAIN_PER_SESSION);
     scfg.train.nx = NX;
     scfg.train.epochs = 2;
@@ -65,6 +88,7 @@ fn run_config(shards: usize, reqs_per_client: usize) -> RunResult {
             queue_cap: 4096,
             seed: 7,
             shards,
+            max_batch,
         },
     );
 
@@ -128,17 +152,33 @@ fn run_config(shards: usize, reqs_per_client: usize) -> RunResult {
     let shards_effective = srv.shards();
     srv.shutdown();
 
+    // exact mean drain depth: shard-handled requests per drain cycle
+    let shard_reqs = stat_after(&stats_text, "counter requests_total ");
+    let drain_cycles = stat_after(&stats_text, "hist batch_size count ");
+    let mean_drain = match (shard_reqs, drain_cycles) {
+        (Some(r), Some(c)) if c > 0.0 => r / c,
+        _ => f64::NAN,
+    };
+
     RunResult {
         shards_effective,
         req_s: (CLIENTS * reqs_per_client) as f64 / wall,
         p50_s: latencies.quantile_secs(0.5),
         p99_s: latencies.quantile_secs(0.99),
+        mean_drain,
         stats_text,
     }
 }
 
 fn main() {
-    let reqs_per_client = if common::full_mode() { 6000 } else { 1500 };
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    let reqs_per_client = if common::full_mode() {
+        6000
+    } else if smoke {
+        60
+    } else {
+        1500
+    };
     println!(
         "coordinator throughput: {CLIENTS} clients × {reqs_per_client} req, \
          {SESSIONS} sessions, {} cores",
@@ -146,39 +186,70 @@ fn main() {
     );
 
     let mut rows: Vec<Vec<String>> = Vec::new();
-    let mut base_req_s = None;
     let mut last_stats = String::new();
-    for shards in [1usize, 2, 4, 8] {
-        let r = run_config(shards, reqs_per_client);
-        let base = *base_req_s.get_or_insert(r.req_s);
+    let mut push_row = |rows: &mut Vec<Vec<String>>, sweep: &str, shards: usize, max_batch: usize, r: &RunResult, base: f64| {
         println!(
-            "shards {shards} (effective {}): {:>9.0} req/s  p50 {:>10}  p99 {:>10}  ({:.2}x vs 1 shard)",
+            "{sweep:>6} shards {shards} max_batch {max_batch:>2} (effective {}): \
+             {:>9.0} req/s  p50 {:>10}  p99 {:>10}  mean drain {:.2}  ({:.2}x vs base)",
             r.shards_effective,
             r.req_s,
             fmt_secs(r.p50_s),
             fmt_secs(r.p99_s),
+            r.mean_drain,
             r.req_s / base
         );
         rows.push(vec![
+            sweep.to_string(),
             shards.to_string(),
+            max_batch.to_string(),
             r.shards_effective.to_string(),
             format!("{:.0}", r.req_s),
             format!("{:.6e}", r.p50_s),
             format!("{:.6e}", r.p99_s),
+            format!("{:.2}", r.mean_drain),
             format!("{:.2}", r.req_s / base),
         ]);
-        last_stats = r.stats_text;
+    };
+
+    // sweep 1 — shard scaling at the server-default batch depth
+    let shard_sweep: &[usize] = if smoke { &[1] } else { &[1, 2, 4, 8] };
+    let mut base_req_s = None;
+    for &shards in shard_sweep {
+        let r = run_config(shards, 8, reqs_per_client);
+        let base = *base_req_s.get_or_insert(r.req_s);
+        push_row(&mut rows, "shards", shards, 8, &r, base);
+        last_stats = r.stats_text.clone();
+    }
+
+    // sweep 2 — batch depth on a single shard; max_batch = 1 is the
+    // per-call baseline (every request features + scores on its own)
+    let mut base_req_s = None;
+    for &max_batch in &[1usize, 8, 64] {
+        let r = run_config(1, max_batch, reqs_per_client);
+        let base = *base_req_s.get_or_insert(r.req_s);
+        push_row(&mut rows, "batch", 1, max_batch, &r, base);
+        last_stats = r.stats_text.clone();
     }
 
     common::write_csv(
         "coordinator_throughput.csv",
-        "shards,shards_effective,req_s,p50_s,p99_s,speedup",
+        "sweep,shards,max_batch,shards_effective,req_s,p50_s,p99_s,mean_drain,speedup",
         &rows,
     );
     let md = markdown_table(
-        &["shards", "effective", "req/s", "p50 (s)", "p99 (s)", "speedup"],
+        &[
+            "sweep",
+            "shards",
+            "max_batch",
+            "effective",
+            "req/s",
+            "p50 (s)",
+            "p99 (s)",
+            "mean drain",
+            "speedup",
+        ],
         &rows,
     );
     write_results_file("coordinator_throughput.md", &md).expect("write results");
-    println!("\nper-shard metrics of the 8-shard run (Request::Stats):\n{last_stats}");
+    println!("\nper-shard metrics of the last run (Request::Stats):\n{last_stats}");
 }

@@ -3,7 +3,9 @@
 //! Covers every loop the profile says matters: the reservoir step, the
 //! DPRR rank-1 push, the packed ridge rank-1 update and its rank-k
 //! blocked counterpart (B ∈ {1, 8, 32}), the whole per-sample forward
-//! (allocating vs workspace), the in-place Cholesky solve at paper scale
+//! (allocating vs workspace), the batched multi-session forward at lane
+//! depths 1/8/64 against the per-call workspace baseline, the in-place
+//! Cholesky solve at paper scale
 //! (s = 931), the β sweep (per-β clone vs shared workspace), one
 //! truncated-BP step, the serial-vs-parallel ridge phase, and (when
 //! artifacts are built) the per-call PJRT overhead.
@@ -19,7 +21,7 @@ use dfr_edge::data::dataset::Sample;
 use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
 use dfr_edge::dfr::dprr::DprrAccumulator;
 use dfr_edge::dfr::mask::Mask;
-use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+use dfr_edge::dfr::reservoir::{BatchLane, BatchScratch, ForwardScratch, Nonlinearity, Reservoir};
 use dfr_edge::dfr::train::{ridge_phase, TrainConfig};
 use dfr_edge::linalg::ridge::{
     rank1_update_packed, RidgeAccumulator, RidgeMethod, SolveWorkspace, PAPER_BETAS,
@@ -67,6 +69,32 @@ fn main() {
     b.bench("forward_scratch_jpvow_t29", || {
         res.forward_into(bb(&u), t, bb(&mut fscratch));
     });
+
+    // batched multi-session forward: one node-major sweep over B lanes
+    // vs B per-call `forward_into` passes (the baseline is
+    // forward_scratch_jpvow_t29 — identical shape and op sequence, so
+    // the delta is pure batching effect: shared time-step loop,
+    // lane-contiguous accumulator rows)
+    let lane_masks: Vec<Mask> = (0..64).map(|_| Mask::random(nx, v, &mut rng)).collect();
+    let lane_us: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..t * v).map(|_| rng.normal()).collect())
+        .collect();
+    let mut bscratch = BatchScratch::new();
+    for (name, depth) in [
+        ("batched_forward_b1_t29", 1usize),
+        ("batched_forward_b8_t29", 8),
+        ("batched_forward_b64_t29", 64),
+    ] {
+        b.bench(name, || {
+            bscratch.forward_batch_into(res.f, depth, |l| BatchLane {
+                u: bb(&lane_us[l]),
+                t,
+                mask: &lane_masks[l],
+                p: res.p,
+                q: res.q,
+            });
+        });
+    }
 
     // truncated-BP gradients
     let out = OutputLayer::zeros(9, nx);
@@ -191,16 +219,22 @@ fn main() {
     let blk32 = med("gram_block_b32_s931") / 32.0;
     let sweep_clone = med("beta_sweep_clone_s931");
     let sweep_ws_t = med("beta_sweep_workspace_s931");
+    let bf1 = med("batched_forward_b1_t29");
+    let bf8 = med("batched_forward_b8_t29") / 8.0;
+    let bf64 = med("batched_forward_b64_t29") / 64.0;
     let json = format!(
         "{{\n  \"scale\": {{\"nx\": {nx}, \"s\": {s_dim}, \"t\": {t}, \"ny\": 9, \"threads\": {threads}, \"smoke\": {smoke}}},\n  \
          \"forward\": {{\"alloc_median_s\": {fwd_alloc:.6e}, \"scratch_median_s\": {fwd_scratch:.6e}, \"speedup\": {:.3}}},\n  \
          \"gram_accumulate\": {{\"rank1_per_sample_s\": {rank1:.6e}, \"block8_per_sample_s\": {blk8:.6e}, \"block32_per_sample_s\": {blk32:.6e}, \"speedup_b8\": {:.3}, \"speedup_b32\": {:.3}}},\n  \
          \"beta_sweep\": {{\"clone_median_s\": {sweep_clone:.6e}, \"workspace_median_s\": {sweep_ws_t:.6e}, \"speedup\": {:.3}}},\n  \
+         \"batched_forward\": {{\"per_call_per_lane_s\": {fwd_scratch:.6e}, \"b1_per_lane_s\": {bf1:.6e}, \"b8_per_lane_s\": {bf8:.6e}, \"b64_per_lane_s\": {bf64:.6e}, \"speedup_b8\": {:.3}, \"speedup_b64\": {:.3}}},\n  \
          \"ridge_phase\": {{\"serial_s\": {:.6e}, \"parallel_s\": {:.6e}, \"speedup\": {:.3}}}\n}}\n",
         fwd_alloc / fwd_scratch,
         rank1 / blk8,
         rank1 / blk32,
         sweep_clone / sweep_ws_t,
+        fwd_scratch / bf8,
+        fwd_scratch / bf64,
         serial_stats.median,
         parallel_stats.median,
         serial_stats.median / parallel_stats.median,

@@ -12,8 +12,39 @@ use anyhow::Result;
 use crate::data::dataset::Sample;
 use crate::dfr::backprop::{softmax_inplace, truncated_grads_scratch, GradScratch, OutputLayer};
 use crate::dfr::mask::Mask;
-use crate::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+use crate::dfr::reservoir::{BatchLane, BatchScratch, ForwardScratch, Nonlinearity, Reservoir};
 use crate::runtime::executor::{DfrExecutor, TrainState};
+
+/// One lane of a batched feature extraction
+/// ([`Engine::features_batch_into`]): a sample plus the session
+/// configuration it must run under. Mask and `(p, q)` are per-request
+/// because the coordinator batches across sessions, each with its own
+/// mask and pinned serving parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FeatureRequest<'a> {
+    pub sample: &'a Sample,
+    pub mask: &'a Mask,
+    pub p: f32,
+    pub q: f32,
+}
+
+/// Ridge scores from a precomputed feature vector: z = W̃·r̃, then
+/// softmax. This is the exact tail of [`NativeEngine::infer_into`]
+/// (same dot-product op order), factored out so callers holding batched
+/// features can score without re-running the forward pass — results are
+/// bitwise those of the per-call `infer_into` whenever the engine's
+/// [`Engine::scores_from_features_exact`] contract holds.
+pub fn scores_from_r_tilde(w_tilde: &[f32], r_tilde: &[f32], scores: &mut Vec<f32>) {
+    let sdim = r_tilde.len();
+    let ny = w_tilde.len() / sdim;
+    scores.clear();
+    scores.reserve(ny);
+    for i in 0..ny {
+        let row = &w_tilde[i * sdim..(i + 1) * sdim];
+        scores.push(row.iter().zip(r_tilde.iter()).map(|(w, r)| w * r).sum());
+    }
+    softmax_inplace(scores);
+}
 
 /// A reservoir-parameter change the Serve-phase adaptation loop reports
 /// to its engine ([`Engine::recalibrate`]): the new (p, q) plus the
@@ -81,6 +112,38 @@ pub trait Engine: Send {
         out.clear();
         out.extend_from_slice(&f);
         Ok(())
+    }
+
+    /// Batched feature extraction: fill `outs[i]` with the r̃ of
+    /// `reqs[i]`. The default is a per-call loop over
+    /// [`features_into`](Self::features_into) — engines with a real
+    /// batched kernel override it (NativeEngine runs all requests
+    /// through one [`BatchScratch`] sweep). Every override must return
+    /// features **bitwise equal** to the per-call path at every batch
+    /// size (`tests/batch_equivalence.rs`) — the coordinator treats the
+    /// two paths as interchangeable mid-stream.
+    fn features_batch_into(
+        &self,
+        reqs: &[FeatureRequest<'_>],
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
+        for (r, out) in reqs.iter().zip(outs.iter_mut()) {
+            self.features_into(r.sample, r.mask, r.p, r.q, out)?;
+        }
+        Ok(())
+    }
+
+    /// Whether `scores_from_r_tilde(w̃, features, …)` over this engine's
+    /// `features_into` output reproduces `infer_into` **bitwise**. True
+    /// for engines whose inference is exactly a float dot product over
+    /// r̃ (NativeEngine; QuantEngine while fallen back). False when
+    /// inference uses a different datapath than dequantized features
+    /// (QuantEngine's integer MAC) — callers must then route `Infer`
+    /// through the per-call [`infer_into`](Self::infer_into) instead of
+    /// scoring batched features.
+    fn scores_from_features_exact(&self) -> bool {
+        false
     }
 
     /// Class scores with a ridge output layer W̃ (row-major n_c × s).
@@ -178,6 +241,9 @@ pub struct NativeEngine {
 struct EngineScratch {
     res: Reservoir,
     fwd: ForwardScratch,
+    /// batched-forward workspace (grow-only; empty until the first
+    /// `features_batch_into`)
+    bfwd: BatchScratch,
     r_tilde: Vec<f32>,
     out: OutputLayer,
     gsc: GradScratch,
@@ -205,6 +271,7 @@ impl NativeEngine {
                     f,
                 },
                 fwd: ForwardScratch::new(nx),
+                bfwd: BatchScratch::new(),
                 r_tilde: Vec::new(),
                 out: OutputLayer::zeros(n_c, nx),
                 gsc: GradScratch::new(),
@@ -302,6 +369,43 @@ impl Engine for NativeEngine {
         Ok(())
     }
 
+    fn features_batch_into(
+        &self,
+        reqs: &[FeatureRequest<'_>],
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        // One node-major sweep over all lanes: the sequential
+        // virtual-node recurrence runs once per step for the whole
+        // batch. Per lane the op sequence is identical to
+        // `features_into`, so the outputs are bitwise equal.
+        let mut sc = self.scratch.borrow_mut();
+        sc.bfwd.forward_batch_into(self.f, reqs.len(), |l| {
+            let r = &reqs[l];
+            BatchLane {
+                u: &r.sample.u,
+                t: r.sample.t,
+                mask: r.mask,
+                p: r.p,
+                q: r.q,
+            }
+        });
+        for (l, out) in outs.iter_mut().enumerate() {
+            sc.bfwd.r_tilde_into(l, out);
+        }
+        Ok(())
+    }
+
+    fn scores_from_features_exact(&self) -> bool {
+        // `infer_into` is exactly `scores_from_r_tilde` over
+        // `features_into` output — scoring batched features per lane
+        // reproduces per-call inference bitwise
+        true
+    }
+
     fn infer(
         &self,
         s: &Sample,
@@ -329,15 +433,7 @@ impl Engine for NativeEngine {
         // split borrow: r̃ buffer and forward workspace are distinct fields
         let EngineScratch { fwd, r_tilde, .. } = &mut *sc;
         fwd.r_tilde_into(r_tilde);
-        let sdim = r_tilde.len();
-        let ny = w_tilde.len() / sdim;
-        scores.clear();
-        scores.reserve(ny);
-        for i in 0..ny {
-            let row = &w_tilde[i * sdim..(i + 1) * sdim];
-            scores.push(row.iter().zip(r_tilde.iter()).map(|(w, r)| w * r).sum());
-        }
-        softmax_inplace(scores);
+        scores_from_r_tilde(w_tilde, r_tilde, scores);
         Ok(())
     }
 

@@ -24,7 +24,10 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use engine::{Engine, NativeEngine, PjrtEngine, Recalibration, ReservoirUpdate};
+pub use engine::{
+    scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, PjrtEngine, Recalibration,
+    ReservoirUpdate,
+};
 pub use protocol::{Request, Response};
 pub use server::{Server, ServerConfig};
 pub use session::{FeedOutcome, InferError, Phase, Session, SessionConfig};

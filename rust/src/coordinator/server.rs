@@ -34,6 +34,20 @@
 //!    truncated-BPTT step (`reservoir_updates_total`) and generation
 //!    rolls answer `Adapted` (`refeaturize_total`) — see DESIGN.md §13.
 //!
+//! # Batched drain (DESIGN.md §14)
+//!
+//! After blocking on one request, a shard opportunistically drains up to
+//! [`ServerConfig::max_batch`] queued requests and pre-extracts the
+//! features of the batchable ones — streaming-Serve `Feed`s and exact-
+//! score `Infer`s on the current generation — through one
+//! [`Engine::features_batch_into`] sweep (the node-major
+//! `BatchScratch` kernel on the native engine). Responses are produced
+//! in strict arrival order with results **bitwise equal** to per-call
+//! processing (`tests/batch_equivalence.rs`); a mid-batch generation
+//! roll splits the batch (stale lanes re-run per-call,
+//! `batch_splits_total`). The `batch_size` histogram records one sample
+//! per drain cycle (size encoded as µs).
+//!
 //! # Shutdown
 //!
 //! [`Server::shutdown`] drains every shard in order: it enqueues a
@@ -52,7 +66,7 @@ use anyhow::Result;
 
 use super::engine::Engine;
 use super::protocol::{Request, Response};
-use super::session::{FeedOutcome, InferError, Session, SessionConfig};
+use super::session::{FeedOutcome, InferError, Phase, Session, SessionConfig};
 use crate::util::metrics::Registry;
 
 /// A queued request with its reply channel.
@@ -71,17 +85,25 @@ pub struct ServerConfig {
     /// Clamped to ≥ 1, and reduced when the engine cannot [`Engine::fork`]
     /// enough replicas.
     pub shards: usize,
+    /// Upper bound on the shard drain batch: after blocking on one
+    /// request, a shard opportunistically drains up to `max_batch − 1`
+    /// more already-queued requests and runs their feature extractions
+    /// as one [`Engine::features_batch_into`] sweep. Responses keep
+    /// strict FIFO order per shard (hence per session), and a value of 1
+    /// disables batching entirely. Clamped to ≥ 1.
+    pub max_batch: usize,
 }
 
 impl ServerConfig {
     /// Config with the defaults used by the CLI: queue of 256, one shard
-    /// per available core.
+    /// per available core, drain batches of up to 8.
     pub fn new(session: SessionConfig) -> Self {
         ServerConfig {
             session,
             queue_cap: 256,
             seed: 0,
             shards: default_shards(),
+            max_batch: 8,
         }
     }
 }
@@ -231,8 +253,39 @@ impl Drop for Server {
     }
 }
 
+/// The generation coordinates a batched feature extraction was planned
+/// at. Re-validated immediately before each item is processed: an
+/// earlier item in the same drain batch may have rolled the session's
+/// generation (`Adapted`/`Trained`) or the engine's shared datapath — a
+/// mismatch splits the batch and the item re-runs per-call
+/// (`batch_splits_total`), so features never mix generations.
+#[derive(Clone, Copy)]
+struct PlanTag {
+    /// lane index into the drained feature buffers
+    lane: usize,
+    /// `Session::generation` at plan time
+    session_gen: u64,
+    /// `Session::engine_generation` (== `Engine::generation`) at plan time
+    engine_gen: u64,
+}
+
 /// One shard: exclusively owns its session map and engine replica, and
 /// registers `shard`-labelled instruments in the shared registry.
+///
+/// # Batched drain
+///
+/// The loop blocks on one request, then opportunistically drains up to
+/// `max_batch − 1` more from its queue. Requests whose feature
+/// extraction is batchable — streaming-Serve `Feed`s and `Infer`s whose
+/// served generation matches the engine datapath (and, for `Infer`, an
+/// engine whose scores are an exact function of r̃) — run through one
+/// [`Engine::features_batch_into`] sweep, then every request is answered
+/// **in arrival order** with its precomputed features (or per-call when
+/// planning skipped it). Ordering, backpressure, and the
+/// `Observed`/`Adapted` semantics of DESIGN.md §13 are unchanged:
+/// a request that the per-call path would answer `Adapted` (generation
+/// mismatch) is never planned, and a mid-batch generation roll
+/// invalidates later planned items via their [`PlanTag`].
 fn shard_loop(
     shard: usize,
     engine: Box<dyn Engine>,
@@ -254,136 +307,285 @@ fn shard_loop(
     // truncated-BPTT steps, and generation rolls (re-featurize + reseed)
     let reservoir_updates = metrics.counter_labelled("reservoir_updates_total", &labels);
     let refeaturizes = metrics.counter_labelled("refeaturize_total", &labels);
+    // drain-batch observability (DESIGN.md §14): `batch_size` records
+    // one sample per drain cycle with the cycle's request count encoded
+    // as microseconds (exact through `record_secs`: n·1e-6 s = n µs), so
+    // `count` = drain cycles and `mean·count` = requests; `batch_splits`
+    // counts planned items that re-ran per-call after a mid-batch
+    // generation roll
+    let batch_size = metrics.histogram_labelled("batch_size", &labels);
+    let batch_splits = metrics.counter_labelled("batch_splits_total", &labels);
 
-    while let Ok((req, reply)) = rx.recv() {
-        req_counter.inc();
-        let resp = match req {
-            Request::Shutdown => {
-                // Ack the drain marker, then keep serving: anything still
-                // queued (or racing in) is answered until the server
-                // drops our sender and `recv` disconnects.
-                let _ = reply.send(Response::Bye);
-                continue;
+    let max_batch = cfg.max_batch.max(1);
+    let mut batch: Vec<Envelope> = Vec::with_capacity(max_batch);
+    // plan[i]: Some(tag) when batch[i]'s features were pre-extracted
+    let mut plan: Vec<Option<PlanTag>> = Vec::with_capacity(max_batch);
+    // grow-only per-lane feature buffers (r̃ per planned request)
+    let mut feat_bufs: Vec<Vec<f32>> = Vec::new();
+
+    while let Ok(first) = rx.recv() {
+        batch.clear();
+        batch.push(first);
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(env) => batch.push(env),
+                Err(_) => break,
             }
-            // unreachable through `call`/`try_call` (answered inline by
-            // the server handle); kept so a queued Stats still works
-            Request::Stats => Response::StatsText(metrics.render()),
-            Request::Labelled { session, sample } => {
-                let sess = sessions.entry(session).or_insert_with(|| {
-                    Session::new(session, cfg.session.clone(), cfg.seed)
-                });
-                let sw = crate::util::timer::Stopwatch::start();
-                match sess.feed_labelled(engine.as_ref(), sample) {
-                    Ok(FeedOutcome::Buffered(n)) => Response::Accepted {
-                        phase: sess.phase.name(),
-                        buffered: n,
-                    },
-                    Ok(FeedOutcome::Trained {
+        }
+        batch_size.record_secs(batch.len() as f64 * 1e-6);
+
+        // ---- plan: decide which requests can share one batched sweep
+        plan.clear();
+        {
+            use crate::coordinator::engine::FeatureRequest;
+            let mut reqs: Vec<FeatureRequest<'_>> = Vec::new();
+            let engine_gen = engine.generation();
+            let score_exact = engine.scores_from_features_exact();
+            for (req, _) in &batch {
+                let tag = match req {
+                    Request::Labelled { session, sample } => sessions
+                        .get(session)
+                        .filter(|sess| {
+                            // per-call would take the streaming fold at
+                            // (gen_p, gen_q); anything else — Collect
+                            // buffering, batch retrain triggers,
+                            // validation rejects, pending datapath rolls
+                            // (which must answer `Adapted`) — is not
+                            // batchable
+                            sess.streaming_serve()
+                                && sess.sample_valid(sample)
+                                && sess.engine_generation() == engine_gen
+                        })
+                        .map(|sess| (sess, sample)),
+                    Request::Infer { session, sample } => sessions
+                        .get(session)
+                        .filter(|sess| {
+                            // per-call scoring must be an exact function
+                            // of r̃ (native; quant only while fallen
+                            // back) and sync_generation must be a no-op
+                            sess.phase == Phase::Serve
+                                && score_exact
+                                && sess.engine_generation() == engine_gen
+                                && sample.v() == sess.cfg.n_v
+                        })
+                        .map(|sess| (sess, sample)),
+                    _ => None,
+                }
+                .map(|(sess, sample)| {
+                    let (p, q) = sess.serving_params();
+                    reqs.push(FeatureRequest {
+                        sample,
+                        mask: &sess.mask,
                         p,
                         q,
-                        beta,
-                        train_seconds,
-                    }) => {
-                        train_hist.record_secs(sw.elapsed_secs());
-                        trainings.inc();
-                        Response::Trained {
+                    });
+                    PlanTag {
+                        lane: reqs.len() - 1,
+                        session_gen: sess.generation(),
+                        engine_gen,
+                    }
+                });
+                plan.push(tag);
+            }
+            // a single planned request gains nothing over per-call (the
+            // kernel is bitwise-equal either way) — only sweep when the
+            // batch actually amortizes
+            if reqs.len() >= 2 {
+                while feat_bufs.len() < reqs.len() {
+                    feat_bufs.push(Vec::new());
+                }
+                if engine
+                    .features_batch_into(&reqs, &mut feat_bufs[..reqs.len()])
+                    .is_err()
+                {
+                    // per-call processing will surface the error per
+                    // request with its usual Rejected mapping
+                    plan.iter_mut().for_each(|t| *t = None);
+                }
+            } else {
+                plan.iter_mut().for_each(|t| *t = None);
+            }
+        }
+
+        // ---- process: strict arrival order, batched features where
+        // still valid
+        for (idx, (req, reply)) in batch.drain(..).enumerate() {
+            req_counter.inc();
+            let resp = match req {
+                Request::Shutdown => {
+                    // Ack the drain marker, then keep serving: anything
+                    // still queued (or racing in) is answered until the
+                    // server drops our sender and `recv` disconnects.
+                    let _ = reply.send(Response::Bye);
+                    continue;
+                }
+                // unreachable through `call`/`try_call` (answered inline
+                // by the server handle); kept so a queued Stats still works
+                Request::Stats => Response::StatsText(metrics.render()),
+                Request::Labelled { session, sample } => {
+                    let sess = sessions.entry(session).or_insert_with(|| {
+                        Session::new(session, cfg.session.clone(), cfg.seed)
+                    });
+                    // footgun fix: an earlier item of this drain batch
+                    // may have rolled the session generation (Adapted /
+                    // fallback retrain) or the shared engine datapath —
+                    // planned features are then stale and must NOT be
+                    // folded (no cross-generation feature mixing)
+                    let pre = plan[idx].filter(|t| {
+                        let fresh = sess.generation() == t.session_gen
+                            && sess.engine_generation() == t.engine_gen
+                            && engine.generation() == t.engine_gen;
+                        if !fresh {
+                            batch_splits.inc();
+                        }
+                        fresh
+                    });
+                    let sw = crate::util::timer::Stopwatch::start();
+                    let outcome = match pre {
+                        Some(t) => sess.feed_labelled_with_features(
+                            engine.as_ref(),
+                            sample,
+                            &feat_bufs[t.lane],
+                        ),
+                        None => sess.feed_labelled(engine.as_ref(), sample),
+                    };
+                    match outcome {
+                        Ok(FeedOutcome::Buffered(n)) => Response::Accepted {
+                            phase: sess.phase.name(),
+                            buffered: n,
+                        },
+                        Ok(FeedOutcome::Trained {
                             p,
                             q,
                             beta,
                             train_seconds,
+                        }) => {
+                            train_hist.record_secs(sw.elapsed_secs());
+                            trainings.inc();
+                            Response::Trained {
+                                p,
+                                q,
+                                beta,
+                                train_seconds,
+                            }
                         }
-                    }
-                    Ok(FeedOutcome::Observed {
-                        updates,
-                        window,
-                        reservoir_step,
-                    }) => {
-                        online_updates.inc();
-                        if reservoir_step {
-                            reservoir_updates.inc();
+                        Ok(FeedOutcome::Observed {
+                            updates,
+                            window,
+                            reservoir_step,
+                        }) => {
+                            online_updates.inc();
+                            if reservoir_step {
+                                reservoir_updates.inc();
+                            }
+                            Response::Observed { updates, window }
                         }
-                        Response::Observed { updates, window }
-                    }
-                    Ok(FeedOutcome::Adapted {
-                        generation,
-                        p,
-                        q,
-                        updates,
-                        reservoir_step,
-                    }) => {
-                        // the rolling sample was folded too
-                        online_updates.inc();
-                        if reservoir_step {
-                            reservoir_updates.inc();
-                        }
-                        refeaturizes.inc();
-                        Response::Adapted {
+                        Ok(FeedOutcome::Adapted {
                             generation,
                             p,
                             q,
                             updates,
+                            reservoir_step,
+                        }) => {
+                            // the rolling sample was folded too
+                            online_updates.inc();
+                            if reservoir_step {
+                                reservoir_updates.inc();
+                            }
+                            refeaturizes.inc();
+                            Response::Adapted {
+                                generation,
+                                p,
+                                q,
+                                updates,
+                            }
                         }
-                    }
-                    Ok(FeedOutcome::Rejected(msg)) => {
-                        rejected.inc();
-                        Response::Rejected(msg)
-                    }
-                    Err(e) => Response::Rejected(format!("engine error: {e:#}")),
-                }
-            }
-            Request::Infer { session, sample } => match sessions.get_mut(&session) {
-                None => Response::Rejected(format!("unknown session {session}")),
-                Some(sess) => {
-                    let sw = crate::util::timer::Stopwatch::start();
-                    // track shared-datapath changes even on infer-only
-                    // traffic (no-op unless the engine generation moved)
-                    match sess.sync_generation(engine.as_ref()) {
-                        Ok(None) => {}
-                        Ok(Some(_)) => refeaturizes.inc(),
-                        Err(e) => {
-                            let _ = reply.send(Response::Rejected(format!("engine error: {e:#}")));
-                            continue;
+                        Ok(FeedOutcome::Rejected(msg)) => {
+                            rejected.inc();
+                            Response::Rejected(msg)
                         }
-                    }
-                    match sess.infer(engine.as_ref(), &sample) {
-                        Ok((class, scores)) => {
-                            infer_hist.record_secs(sw.elapsed_secs());
-                            inferences.inc();
-                            Response::Prediction { class, scores }
-                        }
-                        Err(e @ InferError::NotServing { .. }) => Response::Rejected(e.to_string()),
-                        Err(InferError::Engine(e)) => {
-                            Response::Rejected(format!("engine error: {e:#}"))
-                        }
+                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
                     }
                 }
-            },
-            Request::Finalize { session } => match sessions.get_mut(&session) {
-                None => Response::Rejected(format!("unknown session {session}")),
-                Some(sess) => match sess.finalize(engine.as_ref()) {
-                    Ok(FeedOutcome::Trained {
-                        p,
-                        q,
-                        beta,
-                        train_seconds,
-                    }) => Response::Trained {
-                        p,
-                        q,
-                        beta,
-                        train_seconds,
-                    },
-                    Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
-                    // finalize always runs the batch pipeline
-                    Ok(
-                        FeedOutcome::Buffered(_)
-                        | FeedOutcome::Observed { .. }
-                        | FeedOutcome::Adapted { .. },
-                    ) => unreachable!(),
-                    Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                Request::Infer { session, sample } => match sessions.get_mut(&session) {
+                    None => Response::Rejected(format!("unknown session {session}")),
+                    Some(sess) => {
+                        let pre = plan[idx].filter(|t| {
+                            let fresh = sess.generation() == t.session_gen
+                                && sess.engine_generation() == t.engine_gen
+                                && engine.generation() == t.engine_gen;
+                            if !fresh {
+                                batch_splits.inc();
+                            }
+                            fresh
+                        });
+                        let sw = crate::util::timer::Stopwatch::start();
+                        let result = match pre {
+                            Some(t) => {
+                                // freshness implies sync_generation is a
+                                // no-op — the engine datapath equals what
+                                // the factor was seeded under
+                                sess.infer_with_features(engine.as_ref(), &feat_bufs[t.lane])
+                            }
+                            None => {
+                                // track shared-datapath changes even on
+                                // infer-only traffic (no-op unless the
+                                // engine generation moved)
+                                match sess.sync_generation(engine.as_ref()) {
+                                    Ok(None) => {}
+                                    Ok(Some(_)) => refeaturizes.inc(),
+                                    Err(e) => {
+                                        let _ = reply.send(Response::Rejected(format!(
+                                            "engine error: {e:#}"
+                                        )));
+                                        continue;
+                                    }
+                                }
+                                sess.infer(engine.as_ref(), &sample)
+                            }
+                        };
+                        match result {
+                            Ok((class, scores)) => {
+                                infer_hist.record_secs(sw.elapsed_secs());
+                                inferences.inc();
+                                Response::Prediction { class, scores }
+                            }
+                            Err(e @ InferError::NotServing { .. }) => {
+                                Response::Rejected(e.to_string())
+                            }
+                            Err(InferError::Engine(e)) => {
+                                Response::Rejected(format!("engine error: {e:#}"))
+                            }
+                        }
+                    }
                 },
-            },
-        };
-        let _ = reply.send(resp);
+                Request::Finalize { session } => match sessions.get_mut(&session) {
+                    None => Response::Rejected(format!("unknown session {session}")),
+                    Some(sess) => match sess.finalize(engine.as_ref()) {
+                        Ok(FeedOutcome::Trained {
+                            p,
+                            q,
+                            beta,
+                            train_seconds,
+                        }) => Response::Trained {
+                            p,
+                            q,
+                            beta,
+                            train_seconds,
+                        },
+                        Ok(FeedOutcome::Rejected(msg)) => Response::Rejected(msg),
+                        // finalize always runs the batch pipeline
+                        Ok(
+                            FeedOutcome::Buffered(_)
+                            | FeedOutcome::Observed { .. }
+                            | FeedOutcome::Adapted { .. },
+                        ) => unreachable!(),
+                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                    },
+                },
+            };
+            let _ = reply.send(resp);
+        }
     }
 }
 
@@ -423,6 +625,7 @@ mod tests {
             queue_cap: 64,
             seed: 0xFEED,
             shards,
+            max_batch: 8,
         };
         (Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg), ds)
     }

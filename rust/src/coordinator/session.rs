@@ -52,7 +52,7 @@ use std::fmt;
 
 use anyhow::Result;
 
-use super::engine::{Engine, ReservoirUpdate};
+use super::engine::{scores_from_r_tilde, Engine, ReservoirUpdate};
 use crate::data::dataset::Sample;
 use crate::dfr::mask::Mask;
 use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, TrainConfig};
@@ -322,6 +322,30 @@ impl Session {
         self.generation
     }
 
+    /// The engine datapath generation the current factor was seeded
+    /// under. The server's batch planner compares this against
+    /// `Engine::generation()` — a mismatch means the per-call path would
+    /// reseed (and answer `Adapted`), so the request must NOT be batched
+    /// or that response would silently degrade to `Observed`.
+    pub fn engine_generation(&self) -> u64 {
+        self.engine_generation
+    }
+
+    /// Whether labelled feeds currently take the streaming Serve path
+    /// (the only Feed path whose feature extraction is batchable: it
+    /// folds exactly one r̃ at the served `(gen_p, gen_q)`).
+    pub fn streaming_serve(&self) -> bool {
+        self.phase == Phase::Serve && self.online.is_some()
+    }
+
+    /// The validation `feed_labelled` applies before touching the
+    /// engine. The batch planner must skip invalid samples (they are
+    /// answered `Rejected` without a forward pass — pre-extracting
+    /// features for them would change behavior).
+    pub fn sample_valid(&self, sample: &Sample) -> bool {
+        sample.label < self.cfg.n_c && sample.v() == self.cfg.n_v
+    }
+
     fn push_err(&mut self, is_err: bool) {
         let cap = self.err_ring.len();
         if cap == 0 {
@@ -422,6 +446,68 @@ impl Session {
             self.gen_q,
             &mut self.feat_scratch,
         )?;
+        self.fold_observation(engine, sample, datapath_refold)
+    }
+
+    /// Feed one labelled sample whose r̃ was already extracted by the
+    /// server's batched planner ([`Engine::features_batch_into`]) — the
+    /// streaming-Serve fold without the per-call forward pass.
+    ///
+    /// The caller (the shard drain loop) owns the preconditions: the
+    /// session is on the streaming Serve path, the sample passed
+    /// [`sample_valid`](Self::sample_valid), and `features` were
+    /// extracted at this session's current `(mask, gen_p, gen_q)` under
+    /// the engine's **current** datapath generation. A mid-batch
+    /// generation roll invalidates planned features; the server re-plans
+    /// those requests through [`feed_labelled`](Self::feed_labelled)
+    /// instead (the batch-split regression in
+    /// `tests/batch_equivalence.rs`). The asserts here are the last line
+    /// of defense against cross-generation feature mixing.
+    pub fn feed_labelled_with_features(
+        &mut self,
+        engine: &dyn Engine,
+        sample: Sample,
+        features: &[f32],
+    ) -> Result<FeedOutcome> {
+        if sample.label >= self.cfg.n_c {
+            return Ok(FeedOutcome::Rejected(format!(
+                "label {} out of range ({})",
+                sample.label, self.cfg.n_c
+            )));
+        }
+        if sample.v() != self.cfg.n_v {
+            return Ok(FeedOutcome::Rejected(format!(
+                "channel count {} != {}",
+                sample.v(),
+                self.cfg.n_v
+            )));
+        }
+        assert!(
+            self.streaming_serve(),
+            "batched feed requires the streaming Serve path"
+        );
+        assert_eq!(
+            engine.generation(),
+            self.engine_generation,
+            "stale batched features: the engine datapath moved after planning"
+        );
+        // the fold tail reads r̃ from the session scratch — copy in
+        // (capacity reused; no steady-state allocation)
+        self.feat_scratch.clear();
+        self.feat_scratch.extend_from_slice(features);
+        self.fold_observation(engine, sample, None)
+    }
+
+    /// The tail of a streaming-Serve feed, shared by the per-call and
+    /// batched entry points: `self.feat_scratch` already holds r̃ of
+    /// `sample` at the served generation. Scores prequentially, folds,
+    /// refreshes W̃, then runs the adaptation step / fallback triggers.
+    fn fold_observation(
+        &mut self,
+        engine: &dyn Engine,
+        sample: Sample,
+        datapath_refold: Option<u64>,
+    ) -> Result<FeedOutcome> {
         let (stats, mispredicted) = {
             let online = self.online.as_mut().expect("streaming serve path");
             let mispredicted = online.predict_class(&self.feat_scratch) != sample.label;
@@ -703,6 +789,36 @@ impl Session {
         let scores = engine
             .infer(sample, &self.mask, self.gen_p, self.gen_q, &sol.w_tilde)
             .map_err(InferError::Engine)?;
+        let class = crate::linalg::ridge::argmax(&scores);
+        Ok((class, scores))
+    }
+
+    /// Inference from a batch-extracted r̃ — the scoring tail of
+    /// [`infer`](Self::infer) without the forward pass. Only valid when
+    /// the engine's [`Engine::scores_from_features_exact`] contract
+    /// holds (the server's planner checks it; batched `Infer` through a
+    /// live quantized datapath keeps the per-call path instead, because
+    /// its integer MAC is not a float dot over r̃). Same preconditions
+    /// on feature freshness as
+    /// [`feed_labelled_with_features`](Self::feed_labelled_with_features).
+    pub fn infer_with_features(
+        &self,
+        engine: &dyn Engine,
+        features: &[f32],
+    ) -> Result<(usize, Vec<f32>), InferError> {
+        if self.phase != Phase::Serve {
+            return Err(InferError::NotServing {
+                session: self.id,
+                phase: self.phase,
+            });
+        }
+        debug_assert!(
+            engine.scores_from_features_exact(),
+            "batched scoring requires an exact-score engine"
+        );
+        let sol = self.solution.as_ref().expect("serve implies solution");
+        let mut scores = Vec::new();
+        scores_from_r_tilde(&sol.w_tilde, features, &mut scores);
         let class = crate::linalg::ridge::argmax(&scores);
         Ok((class, scores))
     }

@@ -27,7 +27,7 @@ pub mod optim;
 pub mod reservoir;
 pub mod train;
 
-pub use reservoir::{ForwardScratch, Nonlinearity, Reservoir};
+pub use reservoir::{BatchLane, BatchScratch, ForwardScratch, Nonlinearity, Reservoir};
 
 /// Reservoir size used throughout the paper's evaluation (§4: "The
 /// reservoir size Nx was set to 30").

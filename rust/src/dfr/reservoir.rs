@@ -473,6 +473,296 @@ impl MackeyGlassDfr {
     }
 }
 
+/// One lane of a batched forward pass: a series plus the per-session
+/// configuration it must run under. Lanes carry their **own** mask and
+/// serving parameters `(p, q)` because the coordinator batches requests
+/// across sessions, and every session owns a distinct random mask and a
+/// distinct pinned `(gen_p, gen_q)` (DESIGN.md §13). Only `Nx` (state
+/// layout) and the nonlinearity `f` must be uniform across a batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchLane<'a> {
+    /// input series, row-major t × v
+    pub u: &'a [f32],
+    /// series length T (may differ per lane — ragged batches are fine)
+    pub t: usize,
+    /// the lane's mask (defines v; `mask.nx` must match across lanes)
+    pub mask: &'a Mask,
+    pub p: f32,
+    pub q: f32,
+}
+
+/// Reusable workspace for the batched forward pass: many series advance
+/// through the virtual-node recurrence together, so the sequential
+/// cascade loop runs once per (step, node) over the whole batch instead
+/// of once per call.
+///
+/// Layout (DESIGN.md §14): reservoir state is **node-major**
+/// (`x[n·b + l]`, lanes contiguous) so the cascade inner loop over lanes
+/// is a unit-stride sweep; masked inputs, DPRR accumulators and outputs
+/// are **lane-major** so each lane's results are contiguous slices that
+/// plug straight into the existing [`ForwardRef`] consumers.
+///
+/// Equivalence contract: per lane, the kernel executes the *identical*
+/// per-scalar operation sequence as [`Reservoir::forward_into`] — the
+/// mask dot product is `Mask::apply` itself, the recurrence is the same
+/// mul/add chain, and each DPRR element receives exactly one
+/// `acc += x_i·x'_m` per step (the per-call 4-wide chunking in
+/// `DprrAccumulator::push` does not change per-element math). Rust f32
+/// arithmetic is deterministic (no fast-math, no auto-FMA), so batched
+/// results are **bitwise equal** to per-call results at every batch
+/// size, including ragged batches (`tests/batch_equivalence.rs`).
+///
+/// Buffers are grow-only: after warm-up at the largest (nx, lanes) seen,
+/// a steady-state `forward_batch_into` performs zero heap allocations
+/// (`tests/zero_alloc.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct BatchScratch {
+    nx: usize,
+    /// lane capacity (grow-only high-water mark)
+    cap: usize,
+    /// active lane count of the last `forward_batch_into`
+    lanes: usize,
+    /// x(k), node-major `[n·b + l]` during the sweep
+    x: Vec<f32>,
+    /// x(k-1), node-major
+    x_prev: Vec<f32>,
+    /// masked inputs j(k), lane-major `[l·nx + n]` — each lane's slice is
+    /// exactly the `j_out` buffer `Mask::apply` writes in the per-call path
+    j: Vec<f32>,
+    /// per-lane cascade register (the scalar `prev_node` of `step`)
+    cascade: Vec<f32>,
+    /// raw DPRR accumulators, lane-major `[l·nf + i·(nx+1) + m]`
+    acc: Vec<f32>,
+    /// normalized DPRR matrices, lane-major
+    r_mat: Vec<f32>,
+    /// final states x(T), transposed to lane-major after the sweep
+    x_out: Vec<f32>,
+    /// states x(T-1), lane-major
+    x_prev_out: Vec<f32>,
+    t_lens: Vec<usize>,
+    ps: Vec<f32>,
+    qs: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow buffers for (`nx`, `lanes`); allocation only when a new
+    /// high-water mark is reached (or nx changes), a no-op in steady state.
+    pub fn ensure(&mut self, nx: usize, lanes: usize) {
+        if self.nx != nx {
+            self.nx = nx;
+            self.cap = 0;
+            self.x.clear();
+            self.x_prev.clear();
+            self.j.clear();
+            self.acc.clear();
+            self.r_mat.clear();
+            self.x_out.clear();
+            self.x_prev_out.clear();
+        }
+        if lanes > self.cap {
+            self.cap = lanes;
+            let nf = nx * (nx + 1);
+            self.x.resize(nx * lanes, 0.0);
+            self.x_prev.resize(nx * lanes, 0.0);
+            self.j.resize(nx * lanes, 0.0);
+            self.cascade.resize(lanes, 0.0);
+            self.acc.resize(nf * lanes, 0.0);
+            self.r_mat.resize(nf * lanes, 0.0);
+            self.x_out.resize(nx * lanes, 0.0);
+            self.x_prev_out.resize(nx * lanes, 0.0);
+            self.t_lens.reserve(lanes);
+            self.ps.reserve(lanes);
+            self.qs.reserve(lanes);
+        }
+    }
+
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+
+    /// Active lane count of the last `forward_batch_into`.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Normalized DPRR matrix of lane `l` (row-major Nx×(Nx+1), 1/T
+    /// normalized — same contract as [`ForwardScratch::r_mat`]).
+    pub fn r_mat(&self, l: usize) -> &[f32] {
+        let nf = self.nx * (self.nx + 1);
+        &self.r_mat[l * nf..(l + 1) * nf]
+    }
+
+    pub fn t_len(&self, l: usize) -> usize {
+        self.t_lens[l]
+    }
+
+    /// Lane `l` as a [`ForwardRef`] — drop-in for every per-call
+    /// consumer (r̃ extraction, truncated BPTT).
+    pub fn lane(&self, l: usize) -> ForwardRef<'_> {
+        assert!(l < self.lanes, "lane {l} out of range ({} active)", self.lanes);
+        let nx = self.nx;
+        ForwardRef {
+            r_mat: self.r_mat(l),
+            x_t: &self.x_out[l * nx..(l + 1) * nx],
+            x_tm1: &self.x_prev_out[l * nx..(l + 1) * nx],
+            j_t: &self.j[l * nx..(l + 1) * nx],
+            t_len: self.t_lens[l],
+        }
+    }
+
+    /// r̃ = [vec(R), 1] of lane `l` into a caller-owned buffer.
+    pub fn r_tilde_into(&self, l: usize, out: &mut Vec<f32>) {
+        self.lane(l).r_tilde_into(out);
+    }
+
+    /// Batched streaming forward over `n_lanes` lanes supplied by
+    /// `lane_fn` (called repeatedly; must be cheap and pure).
+    ///
+    /// All lanes share the state dimension `Nx` and the nonlinearity
+    /// `f`; mask, series length and `(p, q)` are per-lane. Ragged
+    /// batches run every lane for its own T: a lane whose series is
+    /// exhausted is skipped (its state, masked input and accumulator
+    /// freeze at their final values), so its outputs are bitwise those
+    /// of a per-call `forward_into` at length `t`.
+    pub fn forward_batch_into<'a>(
+        &mut self,
+        f: Nonlinearity,
+        n_lanes: usize,
+        lane_fn: impl Fn(usize) -> BatchLane<'a>,
+    ) {
+        self.lanes = n_lanes;
+        if n_lanes == 0 {
+            return;
+        }
+        let nx = lane_fn(0).mask.nx;
+        assert!(nx > 0, "empty reservoir");
+        self.t_lens.clear();
+        self.ps.clear();
+        self.qs.clear();
+        let (mut t_max, mut t_min) = (0usize, usize::MAX);
+        for l in 0..n_lanes {
+            let lane = lane_fn(l);
+            assert_eq!(lane.mask.nx, nx, "batch lanes must share Nx (lane {l})");
+            assert_eq!(
+                lane.u.len(),
+                lane.t * lane.mask.v,
+                "series shape mismatch (lane {l})"
+            );
+            self.t_lens.push(lane.t);
+            self.ps.push(lane.p);
+            self.qs.push(lane.q);
+            t_max = t_max.max(lane.t);
+            t_min = t_min.min(lane.t);
+        }
+        self.ensure(nx, n_lanes);
+        let b = n_lanes;
+        let nw = nx + 1;
+        let nf = nx * nw;
+        let x = &mut self.x[..nx * b];
+        let x_prev = &mut self.x_prev[..nx * b];
+        let j = &mut self.j[..nx * b];
+        let cascade = &mut self.cascade[..b];
+        let acc = &mut self.acc[..nf * b];
+        x.fill(0.0);
+        x_prev.fill(0.0);
+        j.fill(0.0);
+        acc.fill(0.0);
+        for k in 0..t_max {
+            let all_active = k < t_min;
+            // x(k-1) ← x(k); guarded per lane when ragged so an
+            // exhausted lane keeps its own final x(T-1).
+            if all_active {
+                x_prev.copy_from_slice(x);
+            } else {
+                for n in 0..nx {
+                    let row = n * b;
+                    for l in 0..b {
+                        if k < self.t_lens[l] {
+                            x_prev[row + l] = x[row + l];
+                        }
+                    }
+                }
+            }
+            // Masking: the per-call `Mask::apply` verbatim, once per
+            // active lane, into the lane's contiguous j slice.
+            for l in 0..b {
+                if k < self.t_lens[l] {
+                    let lane = lane_fn(l);
+                    let v = lane.mask.v;
+                    lane.mask
+                        .apply(&lane.u[k * v..(k + 1) * v], &mut j[l * nx..(l + 1) * nx]);
+                }
+            }
+            // Cascade seed: x(k)_0 ≡ x(k-1)_{Nx}, read before node 0
+            // overwrites anything (node Nx-1 is written last).
+            let last_row = (nx - 1) * b;
+            for l in 0..b {
+                cascade[l] = x[last_row + l];
+            }
+            // Virtual-node recurrence, node-outer / lane-inner: the
+            // sequential dependence runs once per step over the whole
+            // batch. Per lane this is exactly `Reservoir::step`'s
+            // `p·f(j+x) + q·prev` chain.
+            for n in 0..nx {
+                let row = n * b;
+                let jrow = n;
+                if all_active {
+                    for l in 0..b {
+                        let xn = self.ps[l] * f.eval(j[l * nx + jrow] + x[row + l])
+                            + self.qs[l] * cascade[l];
+                        cascade[l] = xn;
+                        x[row + l] = xn;
+                    }
+                } else {
+                    for l in 0..b {
+                        if k < self.t_lens[l] {
+                            let xn = self.ps[l] * f.eval(j[l * nx + jrow] + x[row + l])
+                                + self.qs[l] * cascade[l];
+                            cascade[l] = xn;
+                            x[row + l] = xn;
+                        }
+                    }
+                }
+            }
+            // DPRR accumulate per active lane: one `+= x_i·x'_m` (and
+            // one `+= x_i` into the bias column) per element per step —
+            // per-element identical to `DprrAccumulator::push`.
+            for l in 0..b {
+                if k >= self.t_lens[l] {
+                    continue;
+                }
+                let arow = &mut acc[l * nf..(l + 1) * nf];
+                for i in 0..nx {
+                    let xi = x[i * b + l];
+                    let out = &mut arow[i * nw..(i + 1) * nw];
+                    for (m, o) in out[..nx].iter_mut().enumerate() {
+                        *o += xi * x_prev[m * b + l];
+                    }
+                    out[nx] += xi;
+                }
+            }
+        }
+        // Normalize by each lane's own 1/T and transpose the state out
+        // to lane-major — bitwise copies, so equality is preserved.
+        for l in 0..b {
+            let inv_t = 1.0 / self.t_lens[l].max(1) as f32;
+            let src = &acc[l * nf..(l + 1) * nf];
+            let dst = &mut self.r_mat[l * nf..(l + 1) * nf];
+            for (r, &a) in dst.iter_mut().zip(src) {
+                *r = a * inv_t;
+            }
+            for n in 0..nx {
+                self.x_out[l * nx + n] = x[n * b + l];
+                self.x_prev_out[l * nx + n] = x_prev[n * b + l];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -555,6 +845,100 @@ mod tests {
         let u = vec![0.5f32; 10 * 2];
         r.forward_into(&u, 10, &mut s2);
         assert_eq!(s2.nx(), 9);
+    }
+
+    #[test]
+    fn batched_forward_bitwise_matches_per_call_uniform() {
+        let nx = 6;
+        let v = 3;
+        let t = 19;
+        let mut rng = Pcg32::seed(21);
+        // distinct mask and (p, q) per lane — the cross-session case
+        let configs: Vec<(Mask, f32, f32)> = (0..5)
+            .map(|i| {
+                (
+                    Mask::random(nx, v, &mut rng),
+                    0.25 + 0.05 * i as f32,
+                    0.30 - 0.03 * i as f32,
+                )
+            })
+            .collect();
+        let series: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..t * v).map(|_| rng.normal()).collect())
+            .collect();
+        let f = Nonlinearity::Tanh;
+        let mut batch = BatchScratch::new();
+        batch.forward_batch_into(f, 5, |l| BatchLane {
+            u: &series[l],
+            t,
+            mask: &configs[l].0,
+            p: configs[l].1,
+            q: configs[l].2,
+        });
+        let mut scratch = ForwardScratch::new(nx);
+        for l in 0..5 {
+            let res = Reservoir {
+                mask: configs[l].0.clone(),
+                p: configs[l].1,
+                q: configs[l].2,
+                f,
+            };
+            res.forward_into(&series[l], t, &mut scratch);
+            // bitwise equality: identical per-lane op sequence
+            assert_eq!(scratch.r_mat(), batch.r_mat(l), "lane {l} r_mat");
+            let lane = batch.lane(l);
+            assert_eq!(scratch.x_t(), lane.x_t, "lane {l} x_t");
+            assert_eq!(scratch.x_tm1(), lane.x_tm1, "lane {l} x_tm1");
+            assert_eq!(scratch.j_t(), lane.j_t, "lane {l} j_t");
+            assert_eq!(scratch.t_len(), lane.t_len);
+        }
+    }
+
+    #[test]
+    fn batched_forward_ragged_lengths_and_scratch_reuse() {
+        let nx = 5;
+        let v = 2;
+        let mut rng = Pcg32::seed(22);
+        let mask = Mask::golden(nx, v);
+        let f = Nonlinearity::Linear { alpha: 0.9 };
+        let ts = [11usize, 1, 7, 0, 23];
+        let series: Vec<Vec<f32>> = ts
+            .iter()
+            .map(|&t| (0..t * v).map(|_| rng.normal()).collect())
+            .collect();
+        let mut batch = BatchScratch::new();
+        // warm at a LARGER lane count first, then shrink — exercises the
+        // grow-only capacity path with stale data in the tail lanes
+        batch.forward_batch_into(f, 5, |l| BatchLane {
+            u: &series[l],
+            t: ts[l],
+            mask: &mask,
+            p: 0.4,
+            q: 0.3,
+        });
+        batch.forward_batch_into(f, 3, |l| BatchLane {
+            u: &series[l],
+            t: ts[l],
+            mask: &mask,
+            p: 0.4,
+            q: 0.3,
+        });
+        assert_eq!(batch.lanes(), 3);
+        let res = Reservoir { mask: mask.clone(), p: 0.4, q: 0.3, f };
+        let mut scratch = ForwardScratch::new(nx);
+        for l in 0..3 {
+            res.forward_into(&series[l], ts[l], &mut scratch);
+            assert_eq!(scratch.r_mat(), batch.r_mat(l), "ragged lane {l}");
+            assert_eq!(scratch.x_t(), batch.lane(l).x_t);
+            assert_eq!(scratch.x_tm1(), batch.lane(l).x_tm1);
+            assert_eq!(scratch.t_len(), batch.t_len(l));
+        }
+        let mut rt_b = Vec::new();
+        let mut rt_s = Vec::new();
+        batch.r_tilde_into(0, &mut rt_b);
+        res.forward_into(&series[0], ts[0], &mut scratch);
+        scratch.r_tilde_into(&mut rt_s);
+        assert_eq!(rt_b, rt_s);
     }
 
     #[test]

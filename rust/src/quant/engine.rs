@@ -35,7 +35,9 @@ use std::cell::{Cell, RefCell};
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{Engine, NativeEngine, Recalibration, ReservoirUpdate};
+use crate::coordinator::engine::{
+    Engine, FeatureRequest, NativeEngine, Recalibration, ReservoirUpdate,
+};
 use crate::data::dataset::Sample;
 use crate::dfr::backprop::softmax_inplace;
 use crate::dfr::mask::Mask;
@@ -197,6 +199,37 @@ impl Engine for QuantEngine {
         self.forward_scratch(s, mask, p, q, &mut sc);
         sc.fwd.r_tilde_into(self.cfg.arith, out);
         Ok(())
+    }
+
+    fn features_batch_into(
+        &self,
+        reqs: &[FeatureRequest<'_>],
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        if self.fallback.get() {
+            // fallen-back serving IS the f32 native path — use its real
+            // batched kernel (bitwise-equal to per-call fallback serving)
+            return self.native.features_batch_into(reqs, outs);
+        }
+        // Fixed-point datapath: no batched integer kernel yet, so this
+        // is a per-call loop — but routed through the shared entry
+        // point, so the coordinator's drain logic (and the equivalence
+        // suite) is identical for both engines and a future batched
+        // Q-format sweep is a drop-in.
+        assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
+        for (r, out) in reqs.iter().zip(outs.iter_mut()) {
+            self.features_into(r.sample, r.mask, r.p, r.q, out)?;
+        }
+        Ok(())
+    }
+
+    fn scores_from_features_exact(&self) -> bool {
+        // only while fallen back: fixed-point inference is an integer
+        // MAC over the raw i32 feature words (`r_mat_raw`), not a float
+        // dot over the dequantized r̃ — scoring dequantized features
+        // would NOT be bitwise-equal, so batched `Infer` must go through
+        // `infer_into` while the quant datapath is live
+        self.fallback.get()
     }
 
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {

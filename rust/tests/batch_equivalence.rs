@@ -1,0 +1,731 @@
+//! Batch ≡ per-call equivalence suite (DESIGN.md §14): the batched
+//! multi-session forward pass (`BatchScratch::forward_batch_into`,
+//! `Engine::features_batch_into`, the server's batched shard drain) must
+//! be indistinguishable from per-call processing at every batch size.
+//!
+//! # Why the tolerance is exactly zero
+//!
+//! Rust's `f32` arithmetic is IEEE-754 with strictly specified results
+//! per operation: no fast-math reassociation, no implicit FMA
+//! contraction, no flush-to-zero. Equality of two computations therefore
+//! reduces to equality of their *operation sequences*. The batched
+//! kernel preserves the per-lane op sequence of `Reservoir::forward_into`
+//! exactly:
+//!
+//! * masking — `Mask::apply` runs verbatim per lane into that lane's
+//!   j-slice (same dot-product accumulation order);
+//! * cascade — the recurrence `x(k)_n = p·f(j + x(k-1)_n) + q·x(k)_{n-1}`
+//!   is evaluated node-by-node with lanes on the inner axis; each lane
+//!   sees the identical scalar chain it would see alone;
+//! * DPRR — each accumulator element receives exactly one `+= x_i·x_m`
+//!   per step, in the same step order, followed by the same single
+//!   `* (1/T)` normalization.
+//!
+//! Since every per-lane scalar op happens in the same order with the
+//! same operands, batched output == per-call output **bitwise**, and the
+//! suite asserts with `assert_eq!` — tolerance zero. The negative
+//! control below perturbs one input by 1 ulp and demands a detected
+//! difference, so the comparison is known to discriminate at the
+//! smallest representable granularity.
+
+use std::cell::Cell;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use dfr_edge::coordinator::engine::{
+    scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, ReservoirUpdate,
+};
+use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+use dfr_edge::coordinator::{Request, Response, Server, ServerConfig};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{BatchLane, BatchScratch, ForwardScratch, Nonlinearity, Reservoir};
+use dfr_edge::quant::QuantEngine;
+use dfr_edge::runtime::executor::TrainState;
+use dfr_edge::util::prng::Pcg32;
+
+/// The batch sizes every sweep covers: 1 (degenerate), 2 (minimum that
+/// triggers the server's batched path), 7/8 (around the default
+/// `max_batch`), 64 (deep batch, exceeds any blocking factor).
+const BATCH_SIZES: [usize; 5] = [1, 2, 7, 8, 64];
+
+/// One independent "session" worth of kernel input: its own random
+/// mask, its own pinned (p, q), its own series.
+struct LaneFixture {
+    mask: Mask,
+    p: f32,
+    q: f32,
+    u: Vec<f32>,
+    t: usize,
+}
+
+fn lane_fixtures(n: usize, nx: usize, v: usize, seed: u64, ragged: bool) -> Vec<LaneFixture> {
+    let mut rng = Pcg32::seed(seed);
+    (0..n)
+        .map(|i| {
+            let mask = Mask::random(nx, v, &mut rng);
+            // ragged mode: pending counts differ per lane (incl. t = 1)
+            let t = if ragged { 1 + (i * 7) % 29 } else { 17 };
+            let u: Vec<f32> = (0..t * v).map(|_| rng.normal()).collect();
+            LaneFixture {
+                mask,
+                p: 0.10 + 0.03 * (i % 5) as f32,
+                q: 0.08 + 0.02 * ((i * 3) % 7) as f32,
+                u,
+                t,
+            }
+        })
+        .collect()
+}
+
+/// The per-call reference: the exact path `NativeEngine::features_into`
+/// takes, one lane at a time.
+fn per_call_features(lane: &LaneFixture, f: Nonlinearity) -> Vec<f32> {
+    let res = Reservoir {
+        mask: lane.mask.clone(),
+        p: lane.p,
+        q: lane.q,
+        f,
+    };
+    let mut sc = ForwardScratch::new(lane.mask.nx);
+    res.forward_into(&lane.u, lane.t, &mut sc);
+    let mut out = Vec::new();
+    sc.r_tilde_into(&mut out);
+    out
+}
+
+fn batched_features(lanes: &[LaneFixture], f: Nonlinearity, sc: &mut BatchScratch) -> Vec<Vec<f32>> {
+    sc.forward_batch_into(f, lanes.len(), |l| BatchLane {
+        u: &lanes[l].u,
+        t: lanes[l].t,
+        mask: &lanes[l].mask,
+        p: lanes[l].p,
+        q: lanes[l].q,
+    });
+    let mut outs = vec![Vec::new(); lanes.len()];
+    for (l, out) in outs.iter_mut().enumerate() {
+        sc.r_tilde_into(l, out);
+    }
+    outs
+}
+
+// ---------------------------------------------------------------------------
+// kernel level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_matches_per_call_at_every_batch_size() {
+    let (nx, v) = (6usize, 3usize);
+    // one scratch reused across all sizes — exercises lane growth and
+    // shrink between sweeps (grow-only buffers, stale-lane hygiene)
+    let mut sc = BatchScratch::new();
+    for &b in &BATCH_SIZES {
+        for ragged in [false, true] {
+            let lanes = lane_fixtures(b, nx, v, 0xBA7C + b as u64, ragged);
+            let got = batched_features(&lanes, Nonlinearity::Tanh, &mut sc);
+            for (l, lane) in lanes.iter().enumerate() {
+                let want = per_call_features(lane, Nonlinearity::Tanh);
+                // tolerance is ZERO — see the module doc for the
+                // op-order-preservation derivation
+                assert_eq!(
+                    got[l], want,
+                    "batch size {b} (ragged={ragged}), lane {l}: batched r̃ != per-call r̃"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_matches_on_dimension_edges() {
+    // Nx around the DPRR kernel's 4-wide chunking (multiple, ±1) and
+    // channel counts around the mask dot width — the remainder lanes of
+    // every inner loop get crossed
+    let mut sc = BatchScratch::new();
+    for &nx in &[4usize, 5, 7, 8] {
+        for &v in &[1usize, 3, 5] {
+            let lanes = lane_fixtures(3, nx, v, 0xD1_0000 + (nx * 16 + v) as u64, true);
+            for f in [
+                Nonlinearity::Tanh,
+                Nonlinearity::Linear { alpha: 0.9 },
+            ] {
+                let got = batched_features(&lanes, f, &mut sc);
+                for (l, lane) in lanes.iter().enumerate() {
+                    assert_eq!(
+                        got[l],
+                        per_call_features(lane, f),
+                        "nx={nx} v={v} lane {l} ({f:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_ulp_perturbation_is_detected() {
+    // Negative control: the exact-equality assertions above are only
+    // meaningful if they can actually fail. Flip the LAST BIT of one
+    // input scalar in one lane and demand (a) that lane's features
+    // change, (b) every other lane's features stay bitwise identical
+    // (no cross-lane contamination).
+    let (nx, v) = (6usize, 3usize);
+    let mut lanes = lane_fixtures(4, nx, v, 0x1011, true);
+    let mut sc = BatchScratch::new();
+    let base = batched_features(&lanes, Nonlinearity::Tanh, &mut sc);
+
+    let victim = 2usize;
+    let idx = lanes[victim]
+        .u
+        .iter()
+        .position(|&x| x != 0.0)
+        .expect("a nonzero input sample");
+    let x = lanes[victim].u[idx];
+    lanes[victim].u[idx] = f32::from_bits(x.to_bits() ^ 1);
+    assert_ne!(lanes[victim].u[idx], x, "ulp flip must change the value");
+
+    let perturbed = batched_features(&lanes, Nonlinearity::Tanh, &mut sc);
+    assert_ne!(
+        perturbed[victim], base[victim],
+        "a 1-ulp input perturbation went undetected — the equivalence \
+         assertions would not discriminate"
+    );
+    for l in 0..lanes.len() {
+        if l != victim {
+            assert_eq!(perturbed[l], base[l], "lane {l} leaked across the batch");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine level
+// ---------------------------------------------------------------------------
+
+fn mixed_samples(lanes: &[LaneFixture]) -> Vec<Sample> {
+    lanes
+        .iter()
+        .enumerate()
+        .map(|(i, lane)| Sample {
+            u: lane.u.clone(),
+            t: lane.t,
+            label: i % 2,
+        })
+        .collect()
+}
+
+#[test]
+fn native_engine_batch_matches_per_call_across_sessions() {
+    let (nx, n_c, v) = (6usize, 3usize, 3usize);
+    let eng = NativeEngine::new(nx, n_c);
+    assert!(eng.scores_from_features_exact());
+    let s_dim = nx * nx + nx + 1;
+    let mut rng = Pcg32::seed(0xE46);
+    let w_tilde: Vec<f32> = (0..n_c * s_dim).map(|_| 0.01 * rng.normal()).collect();
+
+    // empty batch is a no-op
+    eng.features_batch_into(&[], &mut []).unwrap();
+
+    for &b in &BATCH_SIZES {
+        let lanes = lane_fixtures(b, nx, v, 0xE46000 + b as u64, true);
+        let samples = mixed_samples(&lanes);
+        let reqs: Vec<FeatureRequest<'_>> = lanes
+            .iter()
+            .zip(&samples)
+            .map(|(lane, sample)| FeatureRequest {
+                sample,
+                mask: &lane.mask,
+                p: lane.p,
+                q: lane.q,
+            })
+            .collect();
+        let mut outs = vec![Vec::new(); b];
+        eng.features_batch_into(&reqs, &mut outs).unwrap();
+
+        for (l, lane) in lanes.iter().enumerate() {
+            let mut want = Vec::new();
+            eng.features_into(&samples[l], &lane.mask, lane.p, lane.q, &mut want)
+                .unwrap();
+            assert_eq!(outs[l], want, "batch size {b}, lane {l}");
+
+            // scoring batched features == per-call infer_into, bitwise
+            // (the contract behind scores_from_features_exact)
+            let mut from_batch = Vec::new();
+            scores_from_r_tilde(&w_tilde, &outs[l], &mut from_batch);
+            let mut per_call = Vec::new();
+            eng.infer_into(&samples[l], &lane.mask, lane.p, lane.q, &w_tilde, &mut per_call)
+                .unwrap();
+            assert_eq!(from_batch, per_call, "batch size {b}, lane {l}: scores");
+        }
+    }
+}
+
+#[test]
+fn quant_engine_routes_batches_in_both_datapath_states() {
+    let (nx, n_c, v) = (5usize, 2usize, 2usize);
+    let eng = QuantEngine::new(nx, n_c);
+    let lanes: Vec<LaneFixture> = {
+        let mut rng = Pcg32::seed(0x9047);
+        (0..4)
+            .map(|i| {
+                let mask = Mask::random(nx, v, &mut rng);
+                let t = 9 + i;
+                LaneFixture {
+                    mask,
+                    p: 0.2,
+                    q: 0.1,
+                    // modest amplitude keeps the fixed-point path in range
+                    u: (0..t * v).map(|_| 0.25 * rng.normal()).collect(),
+                    t,
+                }
+            })
+            .collect()
+    };
+    let samples = mixed_samples(&lanes);
+    let batch_vs_per_call = |eng: &QuantEngine| {
+        let reqs: Vec<FeatureRequest<'_>> = lanes
+            .iter()
+            .zip(&samples)
+            .map(|(lane, sample)| FeatureRequest {
+                sample,
+                mask: &lane.mask,
+                p: lane.p,
+                q: lane.q,
+            })
+            .collect();
+        let mut outs = vec![Vec::new(); reqs.len()];
+        eng.features_batch_into(&reqs, &mut outs).unwrap();
+        for (l, lane) in lanes.iter().enumerate() {
+            let mut want = Vec::new();
+            eng.features_into(&samples[l], &lane.mask, lane.p, lane.q, &mut want)
+                .unwrap();
+            assert_eq!(outs[l], want, "lane {l}");
+        }
+        outs
+    };
+
+    // live fixed-point datapath: batched entry point loops per call, but
+    // the contract (same entry, same results) holds; integer-MAC
+    // inference means batched scoring must NOT be planned
+    assert!(!eng.is_fallback());
+    assert!(!eng.scores_from_features_exact());
+    let fixed = batch_vs_per_call(&eng);
+
+    // force the f32 fallback: p·L_f + |q| ≥ 1 violates the error budget
+    eng.recalibrate(&ReservoirUpdate {
+        p: 0.8,
+        q: 0.5,
+        n_v: v,
+        t_max: 12,
+        u_max: 1.5,
+    })
+    .unwrap();
+    assert!(eng.is_fallback());
+    assert!(eng.scores_from_features_exact());
+    let fallen = batch_vs_per_call(&eng);
+    // fallen-back serving is exactly the native batched kernel
+    let native = NativeEngine::new(nx, n_c);
+    for (l, lane) in lanes.iter().enumerate() {
+        let mut want = Vec::new();
+        native
+            .features_into(&samples[l], &lane.mask, lane.p, lane.q, &mut want)
+            .unwrap();
+        assert_eq!(fallen[l], want, "lane {l}: fallback != native");
+        // and the datapaths genuinely differ, so the exact-score gate
+        // is load-bearing
+        assert_ne!(fixed[l], fallen[l], "lane {l}: quant == f32?");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// session level
+// ---------------------------------------------------------------------------
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn streaming_config(train_len: usize) -> SessionConfig {
+    let mut cfg = SessionConfig::new(2, 2, train_len);
+    cfg.train.nx = 8;
+    cfg.train.epochs = 3;
+    cfg.train.res_decay_epochs = vec![2];
+    cfg.train.out_decay_epochs = vec![2];
+    cfg.train.window = Some(16);
+    cfg
+}
+
+/// Drive two identically-seeded sessions through the same stream, one
+/// via `feed_labelled` (per-call), one via the batched entry point with
+/// features pre-extracted exactly as the server's planner would, and
+/// demand bitwise-identical outcomes and served state at every step.
+fn assert_twin_equivalence(cfg: SessionConfig, expect_adapted: bool) {
+    let ds = mini_dataset(41);
+    let eng = NativeEngine::new(8, 2);
+    let mut a = Session::new(1, cfg.clone(), 0xBEEF);
+    let mut b = Session::new(1, cfg, 0xBEEF);
+    for s in &ds.train {
+        let oa = a.feed_labelled(&eng, s.clone()).unwrap();
+        let ob = b.feed_labelled(&eng, s.clone()).unwrap();
+        assert_eq!(oa, ob);
+    }
+    assert!(a.streaming_serve() && b.streaming_serve());
+
+    let mut feat = Vec::new();
+    let mut adapted = 0u32;
+    for (i, s) in ds.train.iter().cycle().take(40).enumerate() {
+        let oa = a.feed_labelled(&eng, s.clone()).unwrap();
+        // plan for B exactly as the server does: features at the served
+        // (mask, gen_p, gen_q), re-extracted each "drain cycle" so a
+        // generation roll on the previous feed is always re-planned
+        let (p, q) = b.serving_params();
+        eng.features_into(s, &b.mask, p, q, &mut feat).unwrap();
+        let ob = b.feed_labelled_with_features(&eng, s.clone(), &feat).unwrap();
+        assert_eq!(oa, ob, "step {i}");
+        if matches!(oa, FeedOutcome::Adapted { .. }) {
+            adapted += 1;
+        }
+        assert_eq!(a.generation(), b.generation(), "step {i}");
+        assert_eq!(a.serving_params(), b.serving_params(), "step {i}");
+        assert_eq!(
+            a.solution().unwrap().w_tilde,
+            b.solution().unwrap().w_tilde,
+            "step {i}: served W̃ diverged"
+        );
+    }
+    assert_eq!(
+        adapted > 0,
+        expect_adapted,
+        "adaptation rolls: got {adapted}"
+    );
+
+    // inference parity: scoring pre-extracted features == per-call infer
+    for s in &ds.test {
+        let (pa, sa) = a.infer(&eng, s).unwrap();
+        let (p, q) = b.serving_params();
+        eng.features_into(s, &b.mask, p, q, &mut feat).unwrap();
+        let (pb, sb) = b.infer_with_features(&eng, &feat).unwrap();
+        assert_eq!((pa, sa), (pb, sb));
+    }
+}
+
+#[test]
+fn session_batched_entry_points_match_per_call_twin() {
+    assert_twin_equivalence(streaming_config(mini_dataset(41).train.len()), false);
+}
+
+#[test]
+fn session_batched_entry_points_match_per_call_twin_under_adaptation() {
+    // every feed rolls the generation (drift eps ~ 0): the batched entry
+    // point must reproduce per-call `Adapted` semantics exactly, with
+    // features re-planned after each roll — the session-level face of
+    // the server's mid-batch split
+    let mut cfg = streaming_config(mini_dataset(41).train.len());
+    cfg.adapt_reservoir = true;
+    cfg.adapt_lr = 0.05;
+    cfg.adapt_drift_eps = 1e-6;
+    assert_twin_equivalence(cfg, true);
+}
+
+/// NativeEngine wrapper whose datapath generation the test can move —
+/// stands in for a shared quantized engine flipping its fallback.
+struct GenEngine {
+    inner: NativeEngine,
+    gen: Cell<u64>,
+}
+
+impl Engine for GenEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
+        self.inner.infer(s, mask, p, q, w)
+    }
+    fn name(&self) -> &'static str {
+        "gen"
+    }
+    fn generation(&self) -> u64 {
+        self.gen.get()
+    }
+}
+
+#[test]
+#[should_panic(expected = "stale batched features")]
+fn stale_features_after_datapath_roll_are_refused() {
+    // The server re-validates PlanTags before every batched item; the
+    // session's own assert is the last line of defense against
+    // cross-generation feature mixing. Prove it actually fires.
+    let ds = mini_dataset(41);
+    let eng = GenEngine {
+        inner: NativeEngine::new(8, 2),
+        gen: Cell::new(0),
+    };
+    let mut sess = Session::new(1, streaming_config(ds.train.len()), 0xBEEF);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert!(sess.streaming_serve());
+    let (p, q) = sess.serving_params();
+    let mut feat = Vec::new();
+    eng.features_into(&ds.train[0], &sess.mask, p, q, &mut feat).unwrap();
+    // the shared datapath moves after planning — folding the stale
+    // features must be refused, not silently mixed
+    eng.gen.set(1);
+    let _ = sess.feed_labelled_with_features(&eng, ds.train[0].clone(), &feat);
+}
+
+// ---------------------------------------------------------------------------
+// server level: batched drain vs per-call drain, mid-batch rolls
+// ---------------------------------------------------------------------------
+
+/// NativeEngine wrapper that sleeps in `train_step` only: with reservoir
+/// adaptation on, every streamed feed crosses it, keeping the shard busy
+/// long enough for a burst to queue — drain batching becomes
+/// deterministic. Feature extraction (batched and per-call) and
+/// inference are the real native kernels.
+struct SlowAdaptEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl Engine for SlowAdaptEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        thread::sleep(self.delay);
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inner.features_into(s, mask, p, q, out)
+    }
+    fn features_batch_into(
+        &self,
+        reqs: &[FeatureRequest<'_>],
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        self.inner.features_batch_into(reqs, outs)
+    }
+    fn scores_from_features_exact(&self) -> bool {
+        self.inner.scores_from_features_exact()
+    }
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
+        self.inner.infer(s, mask, p, q, w)
+    }
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inner.infer_into(s, mask, p, q, w, scores)
+    }
+    fn name(&self) -> &'static str {
+        "slow-adapt"
+    }
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        Some(Box::new(SlowAdaptEngine {
+            inner: NativeEngine::new(self.inner.nx, self.inner.n_c),
+            delay: self.delay,
+        }))
+    }
+}
+
+fn adapt_server(max_batch: usize) -> Server {
+    let ds = mini_dataset(41);
+    let mut scfg = streaming_config(ds.train.len());
+    scfg.adapt_reservoir = true;
+    scfg.adapt_lr = 0.05;
+    scfg.adapt_drift_eps = 1e-6; // every adapting feed rolls a generation
+    Server::spawn(
+        Box::new(SlowAdaptEngine {
+            inner: NativeEngine::new(8, 2),
+            delay: Duration::from_millis(2),
+        }),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 256,
+            seed: 0xFEED,
+            shards: 1,
+            max_batch,
+        },
+    )
+}
+
+/// Response equality modulo wall-clock (`train_seconds` is timing, not
+/// semantics).
+fn normalize(r: Response) -> Response {
+    match r {
+        Response::Trained { p, q, beta, .. } => Response::Trained {
+            p,
+            q,
+            beta,
+            train_seconds: 0.0,
+        },
+        other => other,
+    }
+}
+
+fn counter_value(stats: &str, name: &str) -> u64 {
+    let prefix = format!("counter {name} ");
+    stats
+        .lines()
+        .find_map(|l| l.strip_prefix(prefix.as_str()))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+#[test]
+fn batched_drain_matches_per_call_server_and_splits_on_mid_batch_rolls() {
+    let ds = mini_dataset(41);
+    // identical workload against a batching server (max_batch = 8) and a
+    // batching-disabled server (max_batch = 1); the response streams
+    // must be identical
+    let run = |max_batch: usize| -> (Vec<Response>, String) {
+        let srv = adapt_server(max_batch);
+        // train sessions 0 and 1 synchronously (deterministic prefix)
+        for session in 0..2u64 {
+            let mut trained = false;
+            for s in &ds.train {
+                if let Response::Trained { .. } = srv
+                    .call(Request::Labelled {
+                        session,
+                        sample: s.clone(),
+                    })
+                    .unwrap()
+                {
+                    trained = true;
+                }
+            }
+            assert!(trained, "session {session} never trained");
+        }
+        // burst: interleaved adapting feeds for both sessions, enqueued
+        // faster than the shard drains (train_step sleeps 2 ms per feed)
+        // so drain cycles contain several same-session feeds — the first
+        // rolls the generation (Adapted), which must split the batch for
+        // the later ones
+        let mut pending = Vec::new();
+        for i in 0..16 {
+            for session in 0..2u64 {
+                let rx = srv
+                    .try_call(Request::Labelled {
+                        session,
+                        sample: ds.train[i % ds.train.len()].clone(),
+                    })
+                    .unwrap()
+                    .expect("queue_cap sized for the whole burst");
+                pending.push(rx);
+            }
+        }
+        let mut responses: Vec<Response> = pending
+            .into_iter()
+            .map(|rx| normalize(rx.recv().unwrap()))
+            .collect();
+        // burst of inferences (exercises the batched Infer path on the
+        // max_batch = 8 server)
+        let mut pending = Vec::new();
+        for s in &ds.test {
+            for session in 0..2u64 {
+                let rx = srv
+                    .try_call(Request::Infer {
+                        session,
+                        sample: s.clone(),
+                    })
+                    .unwrap()
+                    .expect("queue_cap sized for the whole burst");
+                pending.push(rx);
+            }
+        }
+        responses.extend(pending.into_iter().map(|rx| normalize(rx.recv().unwrap())));
+        let stats = match srv.call(Request::Stats).unwrap() {
+            Response::StatsText(t) => t,
+            other => panic!("{other:?}"),
+        };
+        srv.shutdown();
+        (responses, stats)
+    };
+
+    let (batched, batched_stats) = run(8);
+    let (per_call, per_call_stats) = run(1);
+    assert_eq!(
+        batched.len(),
+        per_call.len(),
+        "response streams differ in length"
+    );
+    for (i, (a, b)) in batched.iter().zip(&per_call).enumerate() {
+        assert_eq!(a, b, "response {i} diverged between max_batch=8 and 1");
+    }
+    // the adapting feeds really rolled generations through the batch...
+    assert!(
+        batched.iter().any(|r| matches!(r, Response::Adapted { .. })),
+        "burst never adapted — the mid-batch-roll scenario was not exercised"
+    );
+    // ...and per-session generations stay strictly monotonic in order
+    // (per-session response pairing/ordering survived batching; feeds
+    // for sessions 0 and 1 alternate, so responses at even/odd indices
+    // belong to fixed sessions)
+    for parity in 0..2 {
+        let mut last = 0u64;
+        for r in batched[..32].iter().skip(parity).step_by(2) {
+            if let Response::Adapted { generation, .. } = r {
+                assert!(*generation > last, "generation went backwards");
+                last = *generation;
+            }
+        }
+    }
+    // the batching server split batches on mid-batch rolls; the
+    // per-call server never planned anything to split
+    assert!(
+        counter_value(&batched_stats, "batch_splits_total") >= 1,
+        "no batch ever split despite per-feed generation rolls:\n{batched_stats}"
+    );
+    assert_eq!(counter_value(&per_call_stats, "batch_splits_total"), 0);
+}

@@ -107,6 +107,7 @@ fn prop_server_routes_by_session_id() {
                     queue_cap: 32,
                     seed: 3,
                     shards: 2,
+                    max_batch: 8,
                 },
             );
             let n_sessions = 1 + u64::from(size % 3);

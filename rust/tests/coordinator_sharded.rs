@@ -114,6 +114,7 @@ fn concurrent_clients_across_shards() {
             queue_cap: 256,
             seed: 0xFEED,
             shards: 4,
+            max_batch: 8,
         },
     );
     assert_eq!(srv.shards(), 4);
@@ -187,6 +188,7 @@ fn try_call_sheds_load_when_shard_queue_saturated() {
             queue_cap: 1, // per-shard queue of 1
             seed: 1,
             shards: 1,
+            max_batch: 8,
         },
     );
 
@@ -234,6 +236,7 @@ fn shutdown_drains_all_shards_without_lost_replies() {
             queue_cap: 16, // 8 per shard
             seed: 2,
             shards: 2,
+            max_batch: 8,
         },
     );
 
@@ -271,6 +274,7 @@ fn stats_exposes_per_shard_and_aggregate_metrics() {
             queue_cap: 64,
             seed: 3,
             shards: 4,
+            max_batch: 8,
         },
     );
     // one labelled sample per shard
@@ -320,6 +324,7 @@ fn streaming_session_adapts_to_drift_without_retrain() {
             queue_cap: 64,
             seed: 5,
             shards: 2,
+            max_batch: 8,
         },
     );
     let mut trained = false;
@@ -398,6 +403,172 @@ fn streaming_session_adapts_to_drift_without_retrain() {
 }
 
 #[test]
+fn bursty_load_batches_while_preserving_per_session_semantics() {
+    /// NativeEngine wrapper that sleeps in `features` — the hot
+    /// operation of the streaming Serve feed — so a request burst
+    /// outpaces the drain and batches form deterministically. The
+    /// default `features_into`/`features_batch_into` both route through
+    /// `features`, so the drain stays slow whichever path it takes.
+    struct SlowFeatureEngine(NativeEngine, Duration);
+    impl Engine for SlowFeatureEngine {
+        fn train_step(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            state: &mut TrainState,
+            lr_res: f32,
+            lr_out: f32,
+        ) -> Result<f32> {
+            self.0.train_step(s, mask, state, lr_res, lr_out)
+        }
+        fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+            thread::sleep(self.1);
+            self.0.features(s, mask, p, q)
+        }
+        fn infer(
+            &self,
+            s: &Sample,
+            mask: &Mask,
+            p: f32,
+            q: f32,
+            w: &[f32],
+        ) -> Result<Vec<f32>> {
+            self.0.infer(s, mask, p, q, w)
+        }
+        fn name(&self) -> &'static str {
+            "slow-features"
+        }
+        fn fork(&self) -> Option<Box<dyn Engine>> {
+            Some(Box::new(SlowFeatureEngine(
+                NativeEngine::new(self.0.nx, self.0.n_c),
+                self.1,
+            )))
+        }
+    }
+
+    fn counter_value(stats: &str, name: &str) -> u64 {
+        let prefix = format!("counter {name} ");
+        stats
+            .lines()
+            .find_map(|l| l.strip_prefix(prefix.as_str()))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    }
+    fn hist_count(stats: &str, name: &str) -> u64 {
+        let prefix = format!("hist {name} count ");
+        stats
+            .lines()
+            .find_map(|l| l.strip_prefix(prefix.as_str()))
+            .and_then(|rest| rest.split_whitespace().next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0)
+    }
+
+    let ds = mini_dataset(27);
+    // streaming Serve (PR 5 semantics): every burst feed must be
+    // answered `Observed` — batching may not change that
+    let mut scfg = mini_session_config(ds.train.len());
+    scfg.train.window = Some(16);
+    let srv = Server::spawn(
+        Box::new(SlowFeatureEngine(
+            NativeEngine::new(8, 2),
+            Duration::from_millis(3),
+        )),
+        ServerConfig {
+            session: scfg,
+            queue_cap: 128,
+            seed: 6,
+            shards: 1,
+            max_batch: 8,
+        },
+    );
+
+    // train two sessions synchronously (each call is its own size-1
+    // drain cycle — no batching in this prefix)
+    for session in 0..2u64 {
+        let mut trained = false;
+        for s in &ds.train {
+            if let Response::Trained { .. } = srv
+                .call(Request::Labelled {
+                    session,
+                    sample: s.clone(),
+                })
+                .unwrap()
+            {
+                trained = true;
+            }
+        }
+        assert!(trained, "session {session} never trained");
+    }
+
+    // bursty multi-session load: enqueue 40 interleaved feeds faster
+    // than the shard can drain them (each feed costs a ≥3 ms feature
+    // extraction), then collect every reply in submission order
+    let mut pending = Vec::new();
+    for i in 0..20 {
+        for session in 0..2u64 {
+            let rx = srv
+                .try_call(Request::Labelled {
+                    session,
+                    sample: ds.train[i % ds.train.len()].clone(),
+                })
+                .unwrap()
+                .expect("queue_cap sized for the whole burst");
+            pending.push((session, rx));
+        }
+    }
+    // responses stay paired per session and ordered per session: the
+    // fold count in `Observed` is the session accumulator's lifetime
+    // total, so within one session it must advance by exactly 1 per
+    // response, in submission order
+    let mut last_updates = [None::<u64>, None::<u64>];
+    for (session, rx) in pending {
+        match rx.recv().unwrap() {
+            Response::Observed { updates, window } => {
+                assert!(window <= 16, "{window}");
+                if let Some(prev) = last_updates[session as usize] {
+                    assert_eq!(
+                        updates,
+                        prev + 1,
+                        "session {session}: per-session ordering broken"
+                    );
+                }
+                last_updates[session as usize] = Some(updates);
+            }
+            other => panic!("expected Observed during burst, got {other:?}"),
+        }
+    }
+
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            // Observed/Adapted semantics unchanged: 40 online folds, no
+            // generation rolls, nothing rejected or retrained mid-burst
+            assert_eq!(counter_value(&t, "online_updates_total"), 40, "{t}");
+            assert_eq!(counter_value(&t, "refeaturize_total"), 0, "{t}");
+            assert_eq!(counter_value(&t, "trainings_total"), 2, "{t}");
+            // no mid-batch generation rolls → nothing to split
+            assert_eq!(counter_value(&t, "batch_splits_total"), 0, "{t}");
+            // the batch_size histogram records one sample per drain
+            // cycle (size encoded as µs), labelled per shard
+            assert!(t.contains("hist batch_size{shard=\"0\"} count "), "{t}");
+            let requests = counter_value(&t, "requests_total");
+            let cycles = hist_count(&t, "batch_size");
+            assert_eq!(requests, 80, "{t}");
+            // non-trivial batching: the 40 synchronous training calls
+            // are 40 size-1 cycles, so the 40-request burst must have
+            // drained in far fewer than 40 cycles (≥ 2 requests/batch
+            // on average)
+            assert!(
+                cycles >= 45 && cycles <= 60,
+                "drain cycles {cycles} for {requests} requests — burst never batched\n{t}"
+            );
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
 fn engine_without_fork_degrades_to_single_shard() {
     /// NativeEngine wrapper that refuses to fork (the default trait impl).
     struct Unforkable(NativeEngine);
@@ -438,6 +609,7 @@ fn engine_without_fork_degrades_to_single_shard() {
             queue_cap: 64,
             seed: 4,
             shards: 8,
+            max_batch: 8,
         },
     );
     assert_eq!(srv.shards(), 1, "unforkable engine must fall back to 1 shard");

@@ -66,6 +66,7 @@ fn drifted_stream_triggers_adapted_and_recovers_without_retrain() {
             queue_cap: 64,
             seed: 5,
             shards: 2,
+            max_batch: 8,
         },
     );
     let mut trained = false;
@@ -194,6 +195,7 @@ fn quant_engine_recalibrates_through_the_adaptation_loop() {
             queue_cap: 64,
             seed: 7,
             shards: 1,
+            max_batch: 8,
         },
     );
     let mut trained = false;

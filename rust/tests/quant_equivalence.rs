@@ -301,6 +301,7 @@ fn quant_engine_serves_through_the_sharded_coordinator() {
         queue_cap: 64,
         seed: 0xFACE,
         shards: 2,
+        max_batch: 8,
     };
     // Q6.10 (±32): holds the standardized synthetic inputs' V=2 add
     // tree without front-end scaling, so this is the native server test

@@ -186,6 +186,7 @@ fn coordinator_end_to_end_over_pjrt() {
             // PJRT replicas recompile the artifacts per shard; keep the
             // smoke test single-shard
             shards: 1,
+            max_batch: 8,
         },
     );
     let mut trained = false;

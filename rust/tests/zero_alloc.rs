@@ -6,6 +6,15 @@
 //!
 //! The counter is thread-local, so allocations made concurrently by the
 //! libtest harness or sibling test threads cannot pollute the count.
+//!
+//! The batched forward pass (DESIGN.md §14) is covered at the engine and
+//! session layers (`features_batch_into`, `feed_labelled_with_features`)
+//! — the complete per-request hot path of the server's batched drain.
+//! The drain loop itself runs on shard threads this thread-local counter
+//! cannot observe; its only steady-state allocation is the one small
+//! per-drain-cycle `Vec<FeatureRequest>` the planner builds (borrow
+//! lifetimes prevent reusing it across cycles), which is O(max_batch)
+//! pointers per cycle and documented in DESIGN.md §14.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -132,6 +141,135 @@ fn quant_engine_features_and_infer_are_allocation_free_after_warmup() {
     assert_eq!(*feat.last().unwrap(), 1.0);
     assert_eq!(scores.len(), n_c);
     assert!((scores.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+}
+
+#[test]
+fn batched_features_are_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::engine::FeatureRequest;
+    // paper scale, a full default drain batch of independent sessions:
+    // distinct masks, distinct (p, q), ragged series lengths. After one
+    // warmup sweep has grown the engine's BatchScratch, repeated sweeps
+    // must be allocation-free — asserted at TWO batch sizes (8 and a
+    // 4-lane prefix) so lane-count shrink/regrow stays grow-only.
+    let (nx, v, n_c) = (30usize, 12usize, 9usize);
+    let mut rng = Pcg32::seed(0xBA7C0);
+    let eng = NativeEngine::new(nx, n_c);
+    let masks: Vec<Mask> = (0..8).map(|_| Mask::random(nx, v, &mut rng)).collect();
+    let samples: Vec<Sample> = (0..8)
+        .map(|i| {
+            let t = 21 + i; // ragged pending counts
+            Sample {
+                u: (0..t * v).map(|_| rng.normal()).collect(),
+                t,
+                label: 0,
+            }
+        })
+        .collect();
+    let reqs: Vec<FeatureRequest<'_>> = masks
+        .iter()
+        .zip(&samples)
+        .enumerate()
+        .map(|(i, (mask, sample))| FeatureRequest {
+            sample,
+            mask,
+            p: 0.15 + 0.01 * i as f32,
+            q: 0.1,
+        })
+        .collect();
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); 8];
+    // warmup sizes the batch workspace at the deepest lane count
+    eng.features_batch_into(&reqs, &mut outs).unwrap();
+    eng.features_batch_into(&reqs[..4], &mut outs[..4]).unwrap();
+
+    let n = allocations_in(|| {
+        for _ in 0..25 {
+            eng.features_batch_into(&reqs, &mut outs).unwrap();
+            eng.features_batch_into(&reqs[..4], &mut outs[..4]).unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state features_batch_into performed {n} heap allocations"
+    );
+    // the zero-allocation sweep still computes the real thing
+    let s_dim = nx * nx + nx + 1;
+    for out in &outs {
+        assert_eq!(out.len(), s_dim);
+        assert_eq!(*out.last().unwrap(), 1.0);
+    }
+}
+
+#[test]
+fn session_batched_feed_is_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+    use dfr_edge::data::profiles::Profile;
+    use dfr_edge::data::synth;
+
+    // the batched drain's Feed tail: features arrive pre-extracted from
+    // the planner's sweep, the session copies them into its scratch and
+    // folds — must be allocation-free in steady state just like the
+    // per-call `feed_labelled` path it mirrors
+    let prof = Profile {
+        name: "mini",
+        n_v: 2,
+        n_c: 2,
+        train: 20,
+        test: 5,
+        t_min: 10,
+        t_max: 12,
+    };
+    let ds = synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        33,
+    );
+    let mut cfg = SessionConfig::new(2, 2, ds.train.len());
+    cfg.train.nx = 8;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    cfg.train.window = Some(12);
+    cfg.train.refactor_every = 6;
+    cfg.buffer_cap = ds.train.len();
+    let eng = NativeEngine::new(8, 2);
+    let mut sess = Session::new(1, cfg, 0xF00F);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert!(sess.streaming_serve(), "streaming path active");
+
+    // pre-extract features OUTSIDE the measured region, exactly as the
+    // server's batched planner does (through the engine's BatchScratch),
+    // and pre-clone the streamed samples (the server clones per request)
+    let (p, q) = sess.serving_params();
+    let stream: Vec<Sample> = ds.train.iter().take(16).cloned().collect();
+    let feats: Vec<Vec<f32>> = stream
+        .iter()
+        .map(|s| {
+            let mut f = Vec::new();
+            eng.features_into(s, &sess.mask, p, q, &mut f).unwrap();
+            f
+        })
+        .collect();
+    let mut it = stream.into_iter().zip(&feats);
+    for (s, f) in it.by_ref().take(8) {
+        let out = sess.feed_labelled_with_features(&eng, s, f).unwrap();
+        assert!(matches!(out, FeedOutcome::Observed { .. }), "{out:?}");
+    }
+    let n = allocations_in(|| {
+        for (s, f) in it {
+            let out = sess.feed_labelled_with_features(&eng, s, f).unwrap();
+            assert!(matches!(out, FeedOutcome::Observed { .. }), "{out:?}");
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state feed_labelled_with_features performed {n} heap allocations"
+    );
 }
 
 #[test]
