@@ -1,0 +1,179 @@
+//! Checkpoint I/O bench — the cost of durability (DESIGN.md §15).
+//!
+//! Three stages per fleet size N ∈ {1, 8, 64} mid-stream sessions:
+//!
+//!   * `encode_n{N}`   — pure codec: session state → CRC-guarded record
+//!     (what every cadence tick pays before touching the filesystem);
+//!   * `snapshot_n{N}` — the full shard checkpoint write: encode every
+//!     session, pack the stored-zip archive, write `*.tmp`, `rename`
+//!     (what `--checkpoint-every` adds to the serve loop);
+//!   * `restore_n{N}`  — `load_all` + `Session::restore` for the whole
+//!     fleet (what `Server::spawn` / a supervisor respawn pays).
+//!
+//! A `train_one` row measures the alternative to durability: rebuilding
+//! one session by re-running its batch training from the raw buffer.
+//! The acceptance contract (committed in the repo-root
+//! `BENCH_checkpoint.json`) is that per-session restore is at least 10×
+//! cheaper than retraining — otherwise checkpoint/rehydrate would be
+//! pointless and the supervisor should just retrain on respawn.
+//!
+//! Writes `results/BENCH_checkpoint.json` (the repo-root copy is the
+//! committed snapshot). `DFR_BENCH_SMOKE=1` shrinks the sweep for CI.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use dfr_edge::coordinator::checkpoint::{encode_session, load_all, CheckpointConfig, ShardCheckpointer};
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::coordinator::{Session, SessionConfig};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::util::bench::{write_results_file, Bencher};
+use dfr_edge::util::prng::Pcg32;
+
+const N_V: usize = 4;
+const N_C: usize = 3;
+const NX: usize = 16;
+const T: usize = 40;
+const COLLECT: usize = 24;
+const WINDOW: usize = 32;
+const STREAMED: usize = 48;
+
+fn session_config() -> SessionConfig {
+    let mut cfg = SessionConfig::new(N_V, N_C, COLLECT);
+    cfg.train.nx = NX;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    // single β: the bench measures checkpoint I/O, not model selection
+    cfg.train.betas = vec![1e-2];
+    cfg.train.window = Some(WINDOW);
+    cfg
+}
+
+fn sample(rng: &mut Pcg32) -> Sample {
+    Sample {
+        u: (0..T * N_V).map(|_| rng.normal()).collect(),
+        t: T,
+        label: rng.below(N_C as u32) as usize,
+    }
+}
+
+/// A session in the state worth checkpointing: trained, with a warm
+/// sliding-window factor and a partially filled fallback ring.
+fn build_session(id: u64, engine: &dyn Engine, samples: &[Sample]) -> Session {
+    let mut sess = Session::new(id, session_config(), 0xFEED);
+    for s in samples.iter().take(COLLECT + STREAMED) {
+        sess.feed_labelled(engine, s.clone())
+            .expect("bench session feed");
+    }
+    sess
+}
+
+fn main() {
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    let (fleet_sizes, target): (&[usize], f64) = if smoke {
+        (&[1, 8], 0.02)
+    } else {
+        (&[1, 8, 64], 0.2)
+    };
+    let mut b = Bencher::with_target_time(target);
+    let mut rng = Pcg32::seed(0xC4EC);
+    let max_fleet = *fleet_sizes.iter().max().unwrap();
+    let samples: Vec<Sample> = (0..COLLECT + STREAMED).map(|_| sample(&mut rng)).collect();
+    let engine = NativeEngine::new(NX, N_C);
+
+    let dir = PathBuf::from(format!(
+        "{}/dfr-bench-ckpt-{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    let ckpt_cfg = CheckpointConfig {
+        dir: dir.clone(),
+        every: 1,
+    };
+
+    println!(
+        "checkpoint i/o: sessions up to n={max_fleet} (s = {}, window {WINDOW}), dir {}",
+        NX * NX + NX + 1,
+        dir.display()
+    );
+
+    let fleet: Vec<Session> = (0..max_fleet as u64)
+        .map(|id| build_session(id, &engine, &samples))
+        .collect();
+    let archive_bytes_per_session =
+        encode_session(&fleet[0].snapshot()).len() as f64;
+
+    let mut json_rows: Vec<String> = Vec::new();
+    for &n in fleet_sizes {
+        let encode = b
+            .bench(&format!("encode_n{n}"), || {
+                fleet[..n]
+                    .iter()
+                    .map(|s| encode_session(&s.snapshot()).len())
+                    .sum::<usize>()
+            })
+            .median;
+
+        let mut writer = ShardCheckpointer::new(&ckpt_cfg, 0);
+        let snapshot = b
+            .bench(&format!("snapshot_n{n}"), || {
+                writer
+                    .write_now(fleet[..n].iter())
+                    .expect("bench checkpoint write");
+            })
+            .median;
+
+        let cfg = session_config();
+        let restore = b
+            .bench(&format!("restore_n{n}"), || {
+                let (snaps, corrupt) = load_all(&dir);
+                assert_eq!(corrupt, 0);
+                assert_eq!(snaps.len(), n);
+                let restored: Vec<Session> = snaps
+                    .into_iter()
+                    .map(|snap| Session::restore(snap, cfg.clone()).expect("bench restore"))
+                    .collect();
+                restored.len()
+            })
+            .median;
+
+        println!(
+            "n {n:>3}: encode {encode:.3e} s  snapshot {snapshot:.3e} s  restore {restore:.3e} s"
+        );
+        let mut row = String::new();
+        let _ = write!(
+            row,
+            "    {{\"sessions\": {n}, \"encode_median_s\": {encode:.6e}, \
+             \"snapshot_median_s\": {snapshot:.6e}, \"restore_median_s\": {restore:.6e}}}"
+        );
+        json_rows.push(row);
+    }
+
+    // the alternative to rehydration: retrain the session from its raw
+    // buffer (what a respawned shard would have to do without durable
+    // checkpoints) — the contract is restore ≥ 10× cheaper per session
+    let train_one = b
+        .bench("train_one", || {
+            build_session(0, &engine, &samples[..COLLECT])
+        })
+        .median;
+    println!("train_one (retrain instead of restore): {train_one:.3e} s");
+
+    b.write_csv("checkpoint_io.csv").expect("write csv");
+    let rows = json_rows.join(",\n");
+    let json = format!(
+        "{{\n  \"scale\": {{\"s\": {}, \"n_c\": {N_C}, \"window\": {WINDOW}, \
+         \"record_bytes_per_session\": {archive_bytes_per_session:.0}, \"smoke\": {smoke}}},\n  \
+         \"fleets\": [\n{rows}\n  ],\n  \
+         \"train_one_median_s\": {train_one:.6e}\n}}\n",
+        NX * NX + NX + 1
+    );
+    write_results_file("BENCH_checkpoint.json", &json).expect("write BENCH_checkpoint.json");
+    println!(
+        "→ results/BENCH_checkpoint.json (copy to repo root to refresh the committed snapshot)"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -84,11 +84,11 @@ fn run_config(shards: usize, max_batch: usize, reqs_per_client: usize) -> RunRes
     let srv = Server::spawn(
         Box::new(NativeEngine::new(NX, N_C)),
         ServerConfig {
-            session: scfg,
             queue_cap: 4096,
             seed: 7,
             shards,
             max_batch,
+            ..ServerConfig::new(scfg)
         },
     );
 

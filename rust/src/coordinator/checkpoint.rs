@@ -1,0 +1,807 @@
+//! Durable session checkpoint/restore (DESIGN.md §15).
+//!
+//! Every shard periodically serializes its sessions into one
+//! stored-zip archive (`<dir>/shard-<i>.ckpt`, written through
+//! [`crate::data::zipstore`]) with one entry per session. Each entry is
+//! a self-describing binary record:
+//!
+//! ```text
+//! "DFRC" · version u8 · payload (little-endian) · CRC-32 u32
+//! ```
+//!
+//! The CRC covers `version + payload`, so a single flipped bit anywhere
+//! in the record is caught even if the surrounding zip container still
+//! parses. Writes are atomic (write `*.tmp`, then `rename`): a crash
+//! mid-write leaves the previous complete checkpoint in place, never a
+//! torn file. On restore, [`load_all`] reads every `*.ckpt` in the
+//! directory, skips (and counts) anything corrupt, and dedupes by
+//! session id — the snapshot with the highest
+//! [`mutations`](SessionSnapshot::mutations) stamp wins, so a stale
+//! archive left behind by a dead shard can never roll a session back
+//! past a fresher one.
+//!
+//! The codec is **complete**: ring buffer, packed Cholesky factor +
+//! Gram shadow, served W̃, candidate SGD state, PRNG position,
+//! generation counters, serving (p, q), fallback ring and the degraded
+//! flag all round-trip, so a restored session's subsequent responses
+//! are bitwise equal to an uninterrupted run (`Session::restore`'s
+//! contract; proven in `tests/fault_injection.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use super::session::{Phase, Session, SessionSnapshot};
+use crate::data::dataset::Sample;
+use crate::data::zipstore::{crc32, read_archive, write_archive, Entry};
+use crate::linalg::ridge::{OnlineRidgeConfig, OnlineRidgeState, RidgeSolution};
+
+/// Checkpointing knobs carried by `ServerConfig`.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// directory holding one `shard-<i>.ckpt` archive per shard
+    pub dir: PathBuf,
+    /// write a snapshot after this many state-mutating requests
+    /// (labelled feeds / finalizes) per shard; a final snapshot is also
+    /// written on clean shutdown
+    pub every: u64,
+}
+
+impl CheckpointConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointConfig {
+            dir: dir.into(),
+            every: 64,
+        }
+    }
+}
+
+/// Why a checkpoint record failed to decode. Corruption is an expected
+/// runtime condition (torn disk, bit rot, foreign file) — every variant
+/// is a typed error; the decoder never panics on any input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// the record does not start with the `DFRC` magic
+    BadMagic,
+    /// the version byte is not one this decoder understands
+    BadVersion(u8),
+    /// the record ends before its structure says it should
+    Truncated,
+    /// the CRC-32 trailer does not match the record body
+    CrcMismatch,
+    /// structurally parseable but semantically impossible content
+    Invalid(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::BadMagic => write!(f, "bad checkpoint magic"),
+            CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CheckpointError::Truncated => write!(f, "truncated checkpoint record"),
+            CheckpointError::CrcMismatch => write!(f, "checkpoint CRC mismatch"),
+            CheckpointError::Invalid(why) => write!(f, "invalid checkpoint: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+const MAGIC: &[u8; 4] = b"DFRC";
+const VERSION: u8 = 1;
+/// Sanity cap on every length prefix: no real session holds a vector
+/// beyond this, so a corrupt length can never drive a huge allocation.
+const MAX_LEN: usize = 1 << 24;
+
+// ---------------------------------------------------------------------
+// little-endian writer
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer {
+            buf: Vec::with_capacity(1024),
+        }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn usizes(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.usize(x);
+        }
+    }
+    fn bools(&mut self, v: &[bool]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u8(x as u8);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// little-endian reader — every read is bounds-checked and every length
+// prefix sanity-capped; out-of-bounds is `Truncated`, never a panic
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        let end = self.pos.checked_add(n).ok_or(CheckpointError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(CheckpointError::Truncated);
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+    fn f32(&mut self) -> Result<f32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn usize(&mut self) -> Result<usize, CheckpointError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| CheckpointError::Invalid(format!("usize overflow: {v}")))
+    }
+    fn len(&mut self) -> Result<usize, CheckpointError> {
+        let n = self.u32()? as usize;
+        if n > MAX_LEN {
+            return Err(CheckpointError::Invalid(format!(
+                "length prefix {n} exceeds cap {MAX_LEN}"
+            )));
+        }
+        Ok(n)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, CheckpointError> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn usizes(&mut self) -> Result<Vec<usize>, CheckpointError> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.usize()?);
+        }
+        Ok(out)
+    }
+    fn bools(&mut self) -> Result<Vec<bool>, CheckpointError> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u8()? != 0);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// codec
+
+/// Serialize one session snapshot into a self-contained, CRC-guarded
+/// record (the payload of one zip entry).
+pub fn encode_session(snap: &SessionSnapshot) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.buf.extend_from_slice(MAGIC);
+    w.u8(VERSION);
+    let body_start = w.buf.len() - 1; // CRC covers version + payload
+
+    w.u64(snap.id);
+    w.u8(snap.phase.code());
+    w.u32(snap.mask_nx as u32);
+    w.u32(snap.mask_v as u32);
+    w.f32s(&snap.mask_m);
+    w.u32(snap.buffer.len() as u32);
+    for s in &snap.buffer {
+        w.u32(s.t as u32);
+        w.u32(s.label as u32);
+        w.f32s(&s.u);
+    }
+    w.usize(snap.new_since_train);
+    w.f32(snap.state_p);
+    w.f32(snap.state_q);
+    w.f32s(&snap.state_w);
+    w.f32s(&snap.state_b);
+    match &snap.solution {
+        None => w.u8(0),
+        Some(sol) => {
+            w.u8(1);
+            w.u32(sol.s as u32);
+            w.u32(sol.ny as u32);
+            w.f32(sol.beta);
+            w.usize(sol.memory_words);
+            w.f32s(&sol.w_tilde);
+        }
+    }
+    match &snap.online {
+        None => w.u8(0),
+        Some(o) => {
+            w.u8(1);
+            w.f32(o.cfg.beta);
+            w.f32(o.cfg.lambda);
+            match o.cfg.window {
+                None => w.u8(0),
+                Some(win) => {
+                    w.u8(1);
+                    w.u32(win as u32);
+                }
+            }
+            w.u32(o.cfg.refactor_every as u32);
+            w.u32(o.s as u32);
+            w.u32(o.ny as u32);
+            w.f32s(&o.chol);
+            w.f32s(&o.b);
+            w.f32s(&o.a);
+            w.f32s(&o.w);
+            w.f32s(&o.ring);
+            w.usizes(&o.ring_labels);
+            w.u32(o.ring_head as u32);
+            w.u32(o.ring_len as u32);
+            w.u64(o.updates);
+            w.u32(o.since_refactor as u32);
+            w.u64(o.refactors);
+        }
+    }
+    w.bools(&snap.err_ring);
+    w.u32(snap.err_head as u32);
+    w.u32(snap.err_len as u32);
+    w.u32(snap.err_count as u32);
+    w.u64(snap.rng_state);
+    w.u64(snap.rng_inc);
+    w.f32s(&snap.epoch_losses);
+    w.u64(snap.generation);
+    w.u64(snap.engine_generation);
+    w.f32(snap.gen_p);
+    w.f32(snap.gen_q);
+    w.usize(snap.obs_t_max);
+    w.f32(snap.obs_u_max);
+    w.u8(snap.degraded as u8);
+    w.u64(snap.quarantines);
+    w.u64(snap.mutations);
+
+    let crc = crc32(&w.buf[body_start..]);
+    let mut out = w.buf;
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode one record back into a snapshot. Any malformation — wrong
+/// magic, unknown version, truncation anywhere, a flipped bit, an
+/// impossible length — comes back as a typed [`CheckpointError`].
+pub fn decode_session(data: &[u8]) -> Result<SessionSnapshot, CheckpointError> {
+    if data.len() < MAGIC.len() + 1 + 4 {
+        return Err(CheckpointError::Truncated);
+    }
+    if &data[..MAGIC.len()] != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let body = &data[MAGIC.len()..data.len() - 4];
+    let trailer = &data[data.len() - 4..];
+    let stored = u32::from_le_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    if crc32(body) != stored {
+        return Err(CheckpointError::CrcMismatch);
+    }
+    let mut r = Reader::new(body);
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+
+    let id = r.u64()?;
+    let phase_code = r.u8()?;
+    let phase = Phase::from_code(phase_code)
+        .ok_or_else(|| CheckpointError::Invalid(format!("phase code {phase_code}")))?;
+    let mask_nx = r.u32()? as usize;
+    let mask_v = r.u32()? as usize;
+    let mask_m = r.f32s()?;
+    let n_samples = r.len()?;
+    let mut buffer = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t = r.u32()? as usize;
+        let label = r.u32()? as usize;
+        let u = r.f32s()?;
+        buffer.push(Sample { u, t, label });
+    }
+    let new_since_train = r.usize()?;
+    let state_p = r.f32()?;
+    let state_q = r.f32()?;
+    let state_w = r.f32s()?;
+    let state_b = r.f32s()?;
+    let solution = match r.u8()? {
+        0 => None,
+        1 => {
+            let s = r.u32()? as usize;
+            let ny = r.u32()? as usize;
+            let beta = r.f32()?;
+            let memory_words = r.usize()?;
+            let w_tilde = r.f32s()?;
+            if w_tilde.len() != s.saturating_mul(ny) {
+                return Err(CheckpointError::Invalid(format!(
+                    "solution length {} != {s}·{ny}",
+                    w_tilde.len()
+                )));
+            }
+            Some(RidgeSolution {
+                w_tilde,
+                s,
+                ny,
+                beta,
+                memory_words,
+            })
+        }
+        tag => return Err(CheckpointError::Invalid(format!("solution tag {tag}"))),
+    };
+    let online = match r.u8()? {
+        0 => None,
+        1 => {
+            let beta = r.f32()?;
+            let lambda = r.f32()?;
+            let window = match r.u8()? {
+                0 => None,
+                1 => Some(r.u32()? as usize),
+                tag => return Err(CheckpointError::Invalid(format!("window tag {tag}"))),
+            };
+            let refactor_every = r.u32()? as usize;
+            let s = r.u32()? as usize;
+            let ny = r.u32()? as usize;
+            Some(OnlineRidgeState {
+                cfg: OnlineRidgeConfig {
+                    beta,
+                    lambda,
+                    window,
+                    refactor_every,
+                },
+                s,
+                ny,
+                chol: r.f32s()?,
+                b: r.f32s()?,
+                a: r.f32s()?,
+                w: r.f32s()?,
+                ring: r.f32s()?,
+                ring_labels: r.usizes()?,
+                ring_head: r.u32()? as usize,
+                ring_len: r.u32()? as usize,
+                updates: r.u64()?,
+                since_refactor: r.u32()? as usize,
+                refactors: r.u64()?,
+            })
+        }
+        tag => return Err(CheckpointError::Invalid(format!("online tag {tag}"))),
+    };
+    let err_ring = r.bools()?;
+    let err_head = r.u32()? as usize;
+    let err_len = r.u32()? as usize;
+    let err_count = r.u32()? as usize;
+    let rng_state = r.u64()?;
+    let rng_inc = r.u64()?;
+    let epoch_losses = r.f32s()?;
+    let generation = r.u64()?;
+    let engine_generation = r.u64()?;
+    let gen_p = r.f32()?;
+    let gen_q = r.f32()?;
+    let obs_t_max = r.usize()?;
+    let obs_u_max = r.f32()?;
+    let degraded = r.u8()? != 0;
+    let quarantines = r.u64()?;
+    let mutations = r.u64()?;
+    if r.pos != r.buf.len() {
+        return Err(CheckpointError::Invalid(format!(
+            "{} trailing bytes after payload",
+            r.buf.len() - r.pos
+        )));
+    }
+
+    Ok(SessionSnapshot {
+        id,
+        phase,
+        mask_nx,
+        mask_v,
+        mask_m,
+        buffer,
+        new_since_train,
+        state_p,
+        state_q,
+        state_w,
+        state_b,
+        solution,
+        online,
+        err_ring,
+        err_head,
+        err_len,
+        err_count,
+        rng_state,
+        rng_inc,
+        epoch_losses,
+        generation,
+        engine_generation,
+        gen_p,
+        gen_q,
+        obs_t_max,
+        obs_u_max,
+        degraded,
+        quarantines,
+        mutations,
+    })
+}
+
+// ---------------------------------------------------------------------
+// shard-side writer
+
+/// Per-shard checkpoint writer: counts mutating requests and writes one
+/// atomic archive per cadence tick (plus a final one on shutdown).
+pub struct ShardCheckpointer {
+    dir: PathBuf,
+    every: u64,
+    shard: usize,
+    pending: u64,
+}
+
+impl ShardCheckpointer {
+    pub fn new(cfg: &CheckpointConfig, shard: usize) -> Self {
+        ShardCheckpointer {
+            dir: cfg.dir.clone(),
+            every: cfg.every.max(1),
+            shard,
+            pending: 0,
+        }
+    }
+
+    fn path(&self) -> PathBuf {
+        self.dir.join(format!("shard-{}.ckpt", self.shard))
+    }
+
+    /// Record one state-mutating request; `true` means the cadence is
+    /// due and the caller should invoke [`write_now`](Self::write_now).
+    pub fn note_mutation(&mut self) -> bool {
+        self.pending += 1;
+        self.pending >= self.every
+    }
+
+    /// Snapshot every session into the shard archive, atomically:
+    /// the bytes land in `shard-<i>.ckpt.tmp` first and replace the
+    /// previous checkpoint only via `rename`, so a crash mid-write can
+    /// never leave a torn file behind.
+    pub fn write_now<'a>(
+        &mut self,
+        sessions: impl Iterator<Item = &'a Session>,
+    ) -> std::io::Result<()> {
+        let entries: Vec<Entry> = sessions
+            .map(|sess| Entry {
+                name: format!("session-{}", sess.id),
+                data: encode_session(&sess.snapshot()),
+            })
+            .collect();
+        let bytes = write_archive(&entries);
+        fs::create_dir_all(&self.dir)?;
+        let tmp = self.dir.join(format!("shard-{}.ckpt.tmp", self.shard));
+        fs::write(&tmp, &bytes)?;
+        fs::rename(&tmp, self.path())?;
+        self.pending = 0;
+        Ok(())
+    }
+}
+
+/// Read every `*.ckpt` archive in `dir` and return the freshest
+/// snapshot per session id (highest [`SessionSnapshot::mutations`]
+/// wins) plus the number of corrupt records/archives skipped. A missing
+/// or unreadable directory is simply an empty restore — cold start is
+/// not an error.
+pub fn load_all(dir: &Path) -> (Vec<SessionSnapshot>, u64) {
+    let mut best: BTreeMap<u64, SessionSnapshot> = BTreeMap::new();
+    let mut corrupt = 0u64;
+    let Ok(rd) = fs::read_dir(dir) else {
+        return (Vec::new(), 0);
+    };
+    for dirent in rd.flatten() {
+        let path = dirent.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("ckpt") {
+            continue;
+        }
+        let Ok(bytes) = fs::read(&path) else {
+            corrupt += 1;
+            continue;
+        };
+        let entries = match read_archive(&bytes) {
+            Ok(entries) => entries,
+            Err(_) => {
+                corrupt += 1;
+                continue;
+            }
+        };
+        for entry in entries {
+            match decode_session(&entry.data) {
+                Ok(snap) => {
+                    let keep = best
+                        .get(&snap.id)
+                        .map_or(true, |cur| snap.mutations > cur.mutations);
+                    if keep {
+                        best.insert(snap.id, snap);
+                    }
+                }
+                Err(_) => corrupt += 1,
+            }
+        }
+    }
+    (best.into_values().collect(), corrupt)
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    /// Random-but-valid snapshot generator spanning the codec's whole
+    /// shape space: with/without solution, with/without online factor
+    /// (window / λ / grow modes), empty and populated rings.
+    fn random_snapshot(rng: &mut Pcg32, id: u64) -> SessionSnapshot {
+        let nx = 2 + rng.below(6) as usize;
+        let n_v = 1 + rng.below(3) as usize;
+        let n_c = 2 + rng.below(3) as usize;
+        let s = nx + 1;
+        let n_buf = rng.below(5) as usize;
+        let buffer: Vec<Sample> = (0..n_buf)
+            .map(|_| {
+                let t = 1 + rng.below(4) as usize;
+                Sample {
+                    u: (0..t * n_v).map(|_| rng.normal()).collect(),
+                    t,
+                    label: rng.below(n_c as u32) as usize,
+                }
+            })
+            .collect();
+        let mode = rng.below(3);
+        let window = if mode == 0 { Some(1 + rng.below(4) as usize) } else { None };
+        let lambda = if mode == 1 { 0.9 + 0.05 * rng.uniform() } else { 1.0 };
+        let has_online = rng.below(4) != 0;
+        let online = has_online.then(|| {
+            let win = window.unwrap_or(0);
+            let ring_len = if win > 0 { rng.below(win as u32 + 1) as usize } else { 0 };
+            OnlineRidgeState {
+                cfg: OnlineRidgeConfig {
+                    beta: 0.1 + rng.uniform(),
+                    lambda,
+                    window,
+                    refactor_every: rng.below(8) as usize,
+                },
+                s,
+                ny: n_c,
+                chol: (0..s * (s + 1) / 2).map(|_| rng.normal()).collect(),
+                b: (0..s * (s + 1) / 2).map(|_| rng.normal()).collect(),
+                a: (0..n_c * s).map(|_| rng.normal()).collect(),
+                w: (0..n_c * s).map(|_| rng.normal()).collect(),
+                ring: (0..win * s).map(|_| rng.normal()).collect(),
+                ring_labels: (0..win).map(|_| rng.below(n_c as u32) as usize).collect(),
+                ring_head: if win > 0 { rng.below(win as u32) as usize } else { 0 },
+                ring_len,
+                updates: rng.next_u64() >> 32,
+                since_refactor: rng.below(8) as usize,
+                refactors: u64::from(rng.below(100)),
+            }
+        });
+        let has_solution = rng.below(4) != 0;
+        let solution = has_solution.then(|| RidgeSolution {
+            w_tilde: (0..n_c * s).map(|_| rng.normal()).collect(),
+            s,
+            ny: n_c,
+            beta: 0.01,
+            memory_words: rng.below(100_000) as usize,
+        });
+        let phase = if solution.is_some() {
+            Phase::Serve
+        } else {
+            Phase::Collect
+        };
+        let err_cap = rng.below(6) as usize;
+        let err_ring: Vec<bool> = (0..err_cap).map(|_| rng.below(2) == 1).collect();
+        let err_len = if err_cap > 0 { rng.below(err_cap as u32 + 1) as usize } else { 0 };
+        SessionSnapshot {
+            id,
+            phase,
+            mask_nx: nx,
+            mask_v: n_v,
+            mask_m: (0..nx * n_v).map(|_| rng.sign()).collect(),
+            buffer,
+            new_since_train: rng.below(100) as usize,
+            state_p: rng.uniform_in(0.1, 2.0),
+            state_q: rng.uniform_in(0.1, 2.0),
+            state_w: (0..n_c * nx * (nx + 1)).map(|_| rng.normal()).collect(),
+            state_b: (0..n_c).map(|_| rng.normal()).collect(),
+            solution,
+            online,
+            err_ring: err_ring.clone(),
+            err_head: 0,
+            err_len,
+            err_count: err_ring[..err_len].iter().filter(|&&e| e).count(),
+            rng_state: rng.next_u64(),
+            rng_inc: rng.next_u64() | 1,
+            epoch_losses: (0..rng.below(5)).map(|_| rng.uniform()).collect(),
+            generation: u64::from(rng.below(50)),
+            engine_generation: u64::from(rng.below(5)),
+            gen_p: rng.uniform_in(0.1, 2.0),
+            gen_q: rng.uniform_in(0.1, 2.0),
+            obs_t_max: rng.below(64) as usize,
+            obs_u_max: rng.uniform(),
+            degraded: rng.below(2) == 1,
+            quarantines: u64::from(rng.below(10)),
+            mutations: rng.next_u64() >> 32,
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let mut rng = Pcg32::seed(0xC0DE);
+        for i in 0..200 {
+            let snap = random_snapshot(&mut rng, i);
+            let bytes = encode_session(&snap);
+            let back = decode_session(&bytes).unwrap_or_else(|e| panic!("case {i}: {e}"));
+            assert_eq!(snap, back, "case {i}");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_typed() {
+        let mut rng = Pcg32::seed(0xBEEF);
+        let snap = random_snapshot(&mut rng, 1);
+        let bytes = encode_session(&snap);
+        // every proper prefix must fail with a typed error — never panic
+        for cut in 0..bytes.len() {
+            let err = decode_session(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    CheckpointError::Truncated
+                        | CheckpointError::CrcMismatch
+                        | CheckpointError::BadMagic
+                        | CheckpointError::Invalid(_)
+                ),
+                "cut {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn crc_tamper_detected_at_every_byte() {
+        let mut rng = Pcg32::seed(0xF00D);
+        let snap = random_snapshot(&mut rng, 2);
+        let bytes = encode_session(&snap);
+        // flip one bit in every post-magic byte: the CRC (or the magic /
+        // version check) must catch it — decode never panics and never
+        // silently returns wrong data equal to the original
+        for i in 0..bytes.len() {
+            let mut evil = bytes.clone();
+            evil[i] ^= 0x40;
+            match decode_session(&evil) {
+                Err(_) => {}
+                Ok(back) => assert_ne!(back, snap, "byte {i}: corruption went unnoticed"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_version_and_magic_are_typed() {
+        let mut rng = Pcg32::seed(0xDEAD);
+        let snap = random_snapshot(&mut rng, 3);
+        let mut bytes = encode_session(&snap);
+        // bump the version byte and re-seal the CRC so ONLY the version
+        // check can object
+        bytes[4] = 99;
+        let body_end = bytes.len() - 4;
+        let crc = crc32(&bytes[4..body_end]);
+        bytes[body_end..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(
+            decode_session(&bytes).unwrap_err(),
+            CheckpointError::BadVersion(99)
+        );
+        let mut bytes = encode_session(&snap);
+        bytes[0] = b'X';
+        assert_eq!(decode_session(&bytes).unwrap_err(), CheckpointError::BadMagic);
+        assert_eq!(decode_session(&[]).unwrap_err(), CheckpointError::Truncated);
+    }
+
+    #[test]
+    fn writer_reads_back_and_dedupes_by_mutations() {
+        let mut rng = Pcg32::seed(0xACED);
+        let dir = std::env::temp_dir().join(format!("dfr-ckpt-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let cfg = CheckpointConfig {
+            dir: dir.clone(),
+            every: 2,
+        };
+        // hand-write two shard archives with an overlapping session id
+        // at different freshness stamps
+        let mut stale = random_snapshot(&mut rng, 7);
+        stale.mutations = 5;
+        let mut fresh = random_snapshot(&mut rng, 7);
+        fresh.mutations = 9;
+        let other = random_snapshot(&mut rng, 8);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            dir.join("shard-0.ckpt"),
+            write_archive(&[
+                Entry {
+                    name: "session-7".into(),
+                    data: encode_session(&stale),
+                },
+                Entry {
+                    name: "session-8".into(),
+                    data: encode_session(&other),
+                },
+            ]),
+        )
+        .unwrap();
+        fs::write(
+            dir.join("shard-1.ckpt"),
+            write_archive(&[Entry {
+                name: "session-7".into(),
+                data: encode_session(&fresh),
+            }]),
+        )
+        .unwrap();
+        // plus one garbage archive that must be skipped, not fatal
+        fs::write(dir.join("shard-2.ckpt"), b"not a zip at all").unwrap();
+        let (snaps, corrupt) = load_all(&dir);
+        assert_eq!(corrupt, 1);
+        assert_eq!(snaps.len(), 2);
+        let got7 = snaps.iter().find(|s| s.id == 7).unwrap();
+        assert_eq!(got7.mutations, 9, "freshest snapshot must win");
+        assert!(snaps.iter().any(|s| s.id == 8));
+        // cadence counter
+        let mut ck = ShardCheckpointer::new(&cfg, 0);
+        assert!(!ck.note_mutation());
+        assert!(ck.note_mutation());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_all_missing_dir_is_empty_not_error() {
+        let (snaps, corrupt) = load_all(Path::new("/definitely/not/here"));
+        assert!(snaps.is_empty());
+        assert_eq!(corrupt, 0);
+    }
+}

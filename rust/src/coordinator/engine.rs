@@ -526,6 +526,7 @@ impl Engine for PjrtEngine {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::prng::Pcg32;

@@ -1,0 +1,400 @@
+//! Deterministic fault-injection engine for the resilience test
+//! harness (`tests/fault_injection.rs`).
+//!
+//! [`FaultyEngine`] wraps any [`Engine`] and injects faults on a
+//! PRNG-driven schedule seeded from [`FaultSpec::seed`]: the *n*-th
+//! engine call of a given replica always does the same thing, so every
+//! failure a test provokes is reproducible from the seed alone. Four
+//! fault classes cover the coordinator's whole failure surface:
+//!
+//! * **panics** (`p_panic`, [`InjectedPanic`]) — exercises
+//!   `catch_unwind` isolation and `Response::Error`;
+//! * **typed errors** (`p_error`) — exercises the `Result` plumbing and
+//!   the session's phase-restore on mid-train faults;
+//! * **NaN outputs** (`p_nan` / `nan_once_at`) — exercises the
+//!   non-finite quarantine;
+//! * **slow calls** (`p_slow`) — exercises timeouts and the
+//!   shutdown-drain deadline.
+//!
+//! A fifth, [`ShardKill`] (via `kill_after`/`kill_replica`), is a
+//! panic the server deliberately does NOT isolate — it kills the whole
+//! shard thread, which is how the supervisor respawn path is tested.
+//!
+//! With the all-zero [`FaultSpec::default`], the wrapper is **bitwise
+//! transparent**: every call delegates unchanged, so a fault-free
+//! `FaultyEngine` run is interchangeable with a bare-engine run.
+
+use std::cell::{Cell, RefCell};
+use std::panic::panic_any;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::engine::{Engine, Recalibration, ReservoirUpdate};
+use crate::data::dataset::Sample;
+use crate::dfr::mask::Mask;
+use crate::runtime::executor::TrainState;
+use crate::util::prng::Pcg32;
+
+/// Panic payload for an *isolatable* injected panic: the shard loop
+/// catches it, answers `Response::Error { kind: Panic, .. }`, and keeps
+/// serving.
+#[derive(Debug)]
+pub struct InjectedPanic;
+
+/// Panic payload the shard loop deliberately re-raises instead of
+/// isolating — the whole shard thread dies, exactly like a real bug
+/// escaping the per-request `catch_unwind`. Used to drive the
+/// supervisor's detect → respawn → rehydrate path.
+#[derive(Debug)]
+pub struct ShardKill;
+
+/// Deterministic fault schedule. Probabilities are per engine call and
+/// evaluated from ONE uniform draw against cumulative edges in the
+/// order panic → error → NaN → slow, so at most one probabilistic fault
+/// fires per call.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSpec {
+    /// PRNG seed; each replica derives its own stream from (seed,
+    /// replica number), so schedules are independent but reproducible
+    pub seed: u64,
+    /// probability of an isolatable [`InjectedPanic`]
+    pub p_panic: f32,
+    /// probability of a typed `Err` return
+    pub p_error: f32,
+    /// probability of a NaN-filled output (feature/infer paths only;
+    /// train/recalibrate calls draw but ignore a NaN verdict)
+    pub p_nan: f32,
+    /// probability of sleeping [`slow`](Self::slow) before answering
+    pub p_slow: f32,
+    /// injected latency for slow calls
+    pub slow: Duration,
+    /// kill the owning shard thread ([`ShardKill`]) on exactly this
+    /// call number (1-based) of the matching replica
+    pub kill_after: Option<u64>,
+    /// restrict `kill_after` to one replica number (see
+    /// [`FaultyEngine::replica`]); `None` = any replica
+    pub kill_replica: Option<u64>,
+    /// emit exactly one NaN output on this call number (1-based) —
+    /// deterministic placement for the quarantine test, independent of
+    /// the probabilistic schedule
+    pub nan_once_at: Option<u64>,
+}
+
+/// What one schedule evaluation decided (beyond panics, which unwind).
+enum Verdict {
+    Clean,
+    Nan,
+}
+
+/// An [`Engine`] wrapper that injects faults per [`FaultSpec`].
+///
+/// Replica numbering: the engine the server is constructed with is
+/// replica 0; each [`fork`](Engine::fork) derives child number
+/// `parent * 8 + nth_child` (nth is 1-based). The numbering is stable
+/// across runs, so `kill_replica` can target e.g. "the original shard-1
+/// replica" while letting its respawned successor run clean.
+pub struct FaultyEngine {
+    inner: Box<dyn Engine>,
+    spec: FaultSpec,
+    rng: RefCell<Pcg32>,
+    calls: Cell<u64>,
+    forks: Cell<u64>,
+    replica: u64,
+}
+
+/// Install a process-wide panic hook that stays silent for
+/// [`InjectedPanic`] / [`ShardKill`] payloads and delegates everything
+/// else to the previous hook. Idempotent; call from any test that
+/// provokes injected panics so expected unwinds don't spam stderr while
+/// real panics keep their backtraces.
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected =
+                info.payload().is::<InjectedPanic>() || info.payload().is::<ShardKill>();
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Box<dyn Engine>, spec: FaultSpec) -> Self {
+        let rng = Pcg32::new(spec.seed, 0);
+        FaultyEngine {
+            inner,
+            spec,
+            rng: RefCell::new(rng),
+            calls: Cell::new(0),
+            forks: Cell::new(0),
+            replica: 0,
+        }
+    }
+
+    /// This replica's number in the fork tree (root = 0).
+    pub fn replica(&self) -> u64 {
+        self.replica
+    }
+
+    /// Engine calls this replica has served so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    /// Evaluate the fault schedule for one engine call. May panic
+    /// ([`InjectedPanic`] / [`ShardKill`]), return `Err` (injected
+    /// engine error), sleep, or demand a NaN output.
+    fn trip(&self) -> Result<Verdict> {
+        let n = self.calls.get() + 1;
+        self.calls.set(n);
+        if let Some(k) = self.spec.kill_after {
+            let replica_matches = self.spec.kill_replica.map_or(true, |r| r == self.replica);
+            if n == k && replica_matches {
+                panic_any(ShardKill);
+            }
+        }
+        if self.spec.nan_once_at == Some(n) {
+            return Ok(Verdict::Nan);
+        }
+        let u = self.rng.borrow_mut().uniform();
+        let mut edge = self.spec.p_panic;
+        if u < edge {
+            panic_any(InjectedPanic);
+        }
+        edge += self.spec.p_error;
+        if u < edge {
+            bail!("injected engine error (replica {}, call {n})", self.replica);
+        }
+        edge += self.spec.p_nan;
+        if u < edge {
+            return Ok(Verdict::Nan);
+        }
+        edge += self.spec.p_slow;
+        if u < edge {
+            std::thread::sleep(self.spec.slow);
+        }
+        Ok(Verdict::Clean)
+    }
+}
+
+impl Engine for FaultyEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        // a NaN verdict is ignored here: NaN injection targets the
+        // feature/score outputs the quarantine inspects
+        let _ = self.trip()?;
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        match self.trip()? {
+            Verdict::Clean => self.inner.features(s, mask, p, q),
+            Verdict::Nan => {
+                let f = self.inner.features(s, mask, p, q)?;
+                Ok(vec![f32::NAN; f.len()])
+            }
+        }
+    }
+
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        match self.trip()? {
+            Verdict::Clean => self.inner.features_into(s, mask, p, q, out),
+            Verdict::Nan => {
+                self.inner.features_into(s, mask, p, q, out)?;
+                out.iter_mut().for_each(|x| *x = f32::NAN);
+                Ok(())
+            }
+        }
+    }
+
+    // features_batch_into deliberately NOT overridden: the default loops
+    // features_into, so each lane of a batch trips the schedule
+    // individually — batched and per-call runs see the same per-lane
+    // fault sequence.
+
+    fn scores_from_features_exact(&self) -> bool {
+        self.inner.scores_from_features_exact()
+    }
+
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {
+        match self.trip()? {
+            Verdict::Clean => self.inner.infer(s, mask, p, q, w_tilde),
+            Verdict::Nan => {
+                let z = self.inner.infer(s, mask, p, q, w_tilde)?;
+                Ok(vec![f32::NAN; z.len()])
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn generation(&self) -> u64 {
+        self.inner.generation()
+    }
+
+    fn recalibrate(&self, upd: &ReservoirUpdate) -> Result<Recalibration> {
+        let _ = self.trip()?;
+        self.inner.recalibrate(upd)
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        let inner = self.inner.fork()?;
+        let nth = self.forks.get() + 1;
+        self.forks.set(nth);
+        let child = self.replica * 8 + nth;
+        Some(Box::new(FaultyEngine {
+            inner,
+            spec: self.spec.clone(),
+            rng: RefCell::new(Pcg32::new(self.spec.seed, child)),
+            calls: Cell::new(0),
+            forks: Cell::new(0),
+            replica: child,
+        }))
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+
+    fn sample() -> Sample {
+        Sample {
+            u: vec![0.3, -0.2, 0.5, 0.1],
+            t: 2,
+            label: 0,
+        }
+    }
+
+    #[test]
+    fn zero_fault_spec_is_transparent() {
+        let nx = 6;
+        let eng = NativeEngine::new(nx, 2);
+        let faulty = FaultyEngine::new(Box::new(NativeEngine::new(nx, 2)), FaultSpec::default());
+        let mut rng = Pcg32::seed(1);
+        let mask = Mask::random(nx, 2, &mut rng);
+        let s = sample();
+        let a = eng.features(&s, &mask, 0.5, 0.1).unwrap();
+        let b = faulty.features(&s, &mask, 0.5, 0.1).unwrap();
+        assert_eq!(a, b, "fault-free wrapper must be bitwise transparent");
+        assert_eq!(faulty.calls(), 1);
+    }
+
+    #[test]
+    fn error_schedule_is_deterministic() {
+        let spec = FaultSpec {
+            seed: 42,
+            p_error: 0.3,
+            ..FaultSpec::default()
+        };
+        let run = || {
+            let faulty = FaultyEngine::new(Box::new(NativeEngine::new(6, 2)), spec.clone());
+            let mut rng = Pcg32::seed(1);
+            let mask = Mask::random(6, 2, &mut rng);
+            let s = sample();
+            (0..64)
+                .map(|_| faulty.features(&s, &mask, 0.5, 0.1).is_err())
+                .collect::<Vec<bool>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed must give the same fault schedule");
+        assert!(a.iter().any(|&e| e), "p=0.3 over 64 calls must err");
+        assert!(!a.iter().all(|&e| e), "p=0.3 over 64 calls must also succeed");
+    }
+
+    #[test]
+    fn nan_once_at_fires_exactly_once() {
+        let spec = FaultSpec {
+            seed: 7,
+            nan_once_at: Some(3),
+            ..FaultSpec::default()
+        };
+        let faulty = FaultyEngine::new(Box::new(NativeEngine::new(6, 2)), spec);
+        let mut rng = Pcg32::seed(1);
+        let mask = Mask::random(6, 2, &mut rng);
+        let s = sample();
+        for call in 1..=6u64 {
+            let f = faulty.features(&s, &mask, 0.5, 0.1).unwrap();
+            let nan = f.iter().any(|x| x.is_nan());
+            assert_eq!(nan, call == 3, "call {call}");
+        }
+    }
+
+    #[test]
+    fn fork_numbering_is_stable() {
+        let root = FaultyEngine::new(
+            Box::new(NativeEngine::new(6, 2)),
+            FaultSpec {
+                seed: 9,
+                ..FaultSpec::default()
+            },
+        );
+        assert_eq!(root.replica(), 0);
+        assert!(root.fork().is_some());
+        assert!(root.fork().is_some());
+        assert_eq!(root.forks.get(), 2);
+        // kill targeting proves the child numbers: only replica 1 (the
+        // first fork of root) dies on its first call
+        let spec = FaultSpec {
+            seed: 9,
+            kill_after: Some(1),
+            kill_replica: Some(1),
+            ..FaultSpec::default()
+        };
+        let root = FaultyEngine::new(Box::new(NativeEngine::new(6, 2)), spec);
+        let child1 = root.fork().unwrap();
+        let child2 = root.fork().unwrap();
+        let mut rng = Pcg32::seed(1);
+        let mask = Mask::random(6, 2, &mut rng);
+        let s = sample();
+        assert!(child2.features(&s, &mask, 0.5, 0.1).is_ok());
+        assert!(root.features(&s, &mask, 0.5, 0.1).is_ok());
+        silence_injected_panics();
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = child1.features(&s, &mask, 0.5, 0.1);
+        }))
+        .unwrap_err();
+        assert!(payload.is::<ShardKill>());
+    }
+
+    #[test]
+    fn kill_after_panics_with_shard_kill_payload() {
+        silence_injected_panics();
+        let spec = FaultSpec {
+            seed: 1,
+            kill_after: Some(2),
+            ..FaultSpec::default()
+        };
+        let faulty = FaultyEngine::new(Box::new(NativeEngine::new(6, 2)), spec);
+        let mut rng = Pcg32::seed(1);
+        let mask = Mask::random(6, 2, &mut rng);
+        let s = sample();
+        assert!(faulty.features(&s, &mask, 0.5, 0.1).is_ok());
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = faulty.features(&s, &mask, 0.5, 0.1);
+        }))
+        .unwrap_err();
+        assert!(payload.is::<ShardKill>());
+    }
+}

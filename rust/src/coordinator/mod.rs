@@ -9,25 +9,38 @@
 //! RidgeTrain ──(β sweep + in-place Cholesky)──► Serve ──(drift)──► …
 //! ```
 //!
-//! The [`server::Server`] owns a pool of shard worker threads: requests
-//! are routed to shard `session_id % shards` at submit time, enter that
-//! shard's bounded queue (backpressure), and run against the shard's
-//! exclusively-owned session map — no cross-shard locking. Compute runs
-//! on a per-shard [`engine::Engine`] replica — either the PJRT executor
-//! over the AOT artifacts (production path; Python never runs) or the
-//! pure-Rust reference (tests, grid search, FPGA-sim workloads). See
-//! DESIGN.md §Sharded coordinator for the routing, backpressure, and
-//! shutdown protocol.
+//! The [`server::Server`] owns a pool of supervised shard worker
+//! threads: requests are routed to shard `session_id % shards` at submit
+//! time, enter that shard's bounded queue (backpressure), and run
+//! against the shard's exclusively-owned session map — no cross-shard
+//! locking. Compute runs on a per-shard [`engine::Engine`] replica —
+//! either the PJRT executor over the AOT artifacts (production path;
+//! Python never runs) or the pure-Rust reference (tests, grid search,
+//! FPGA-sim workloads). Faults are contained per request
+//! (`catch_unwind` + typed [`protocol::Response::Error`]), dead shards
+//! are respawned by a supervisor, and session state survives restarts
+//! through [`checkpoint`] — see DESIGN.md §15 for the fault model and
+//! `tests/fault_injection.rs` for the deterministic harness built on
+//! [`faulty::FaultyEngine`].
+//
+// The serving path must never take the process down on a recoverable
+// fault, so panicking escape hatches are banned module-wide outside
+// tests (test modules opt back in locally).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod checkpoint;
 pub mod engine;
+pub mod faulty;
 pub mod protocol;
 pub mod server;
 pub mod session;
 
+pub use checkpoint::{CheckpointConfig, CheckpointError, ShardCheckpointer};
 pub use engine::{
     scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, PjrtEngine, Recalibration,
     ReservoirUpdate,
 };
-pub use protocol::{Request, Response};
-pub use server::{Server, ServerConfig};
-pub use session::{FeedOutcome, InferError, Phase, Session, SessionConfig};
+pub use faulty::{silence_injected_panics, FaultSpec, FaultyEngine, InjectedPanic, ShardKill};
+pub use protocol::{ErrorKind, Request, Response};
+pub use server::{CallError, Server, ServerConfig};
+pub use session::{FeedOutcome, InferError, Phase, Session, SessionConfig, SessionSnapshot};

@@ -68,8 +68,29 @@ pub enum Response {
     StatsText(String),
     /// Request rejected (backpressure or bad session state).
     Rejected(String),
+    /// The request was accepted but processing failed — a panic was
+    /// caught and isolated, the engine returned an error, or a
+    /// non-finite value was quarantined. Unlike `Rejected` (the input
+    /// was bad), `Error` means the *server* faulted on a well-formed
+    /// request: the session is flagged degraded and self-heals through
+    /// the batch-fallback/reseed path on its next labelled sample, so
+    /// the caller may simply retry.
+    Error { kind: ErrorKind, detail: String },
     /// Acknowledged shutdown.
     Bye,
+}
+
+/// Failure class carried by [`Response::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Processing panicked; the panic was caught at the shard boundary
+    /// (`request_panics_total`).
+    Panic,
+    /// The engine returned a typed error mid-request.
+    Engine,
+    /// A non-finite feature/score was produced and quarantined
+    /// (`nonfinite_quarantined_total`).
+    NonFinite,
 }
 
 impl Request {

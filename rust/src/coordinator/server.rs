@@ -22,7 +22,9 @@
 //! Two-level, as in the paper's bounded-memory edge design:
 //! 1. every shard has a bounded request queue (`queue_cap` split evenly
 //!    across shards); [`Server::try_call`] refuses (`None`) when the
-//!    target shard's queue is saturated, and [`Server::call`] blocks;
+//!    target shard's queue is saturated, [`Server::call`] blocks, and
+//!    [`Server::call_timeout`] retries with backoff up to a deadline
+//!    (`queue_retries_total`);
 //! 2. each session's collect buffer is capped
 //!    (`SessionConfig::buffer_cap`) — overflowing samples are `Rejected`.
 //!    Sessions on the streaming Serve path (`TrainConfig::forgetting` /
@@ -39,35 +41,73 @@
 //! After blocking on one request, a shard opportunistically drains up to
 //! [`ServerConfig::max_batch`] queued requests and pre-extracts the
 //! features of the batchable ones — streaming-Serve `Feed`s and exact-
-//! score `Infer`s on the current generation — through one
-//! [`Engine::features_batch_into`] sweep (the node-major
-//! `BatchScratch` kernel on the native engine). Responses are produced
-//! in strict arrival order with results **bitwise equal** to per-call
-//! processing (`tests/batch_equivalence.rs`); a mid-batch generation
-//! roll splits the batch (stale lanes re-run per-call,
+//! score `Infer`s on the current generation, for sessions not flagged
+//! degraded — through one [`Engine::features_batch_into`] sweep (the
+//! node-major `BatchScratch` kernel on the native engine). Responses are
+//! produced in strict arrival order with results **bitwise equal** to
+//! per-call processing (`tests/batch_equivalence.rs`); a mid-batch
+//! generation roll splits the batch (stale lanes re-run per-call,
 //! `batch_splits_total`). The `batch_size` histogram records one sample
 //! per drain cycle (size encoded as µs).
+//!
+//! # Fault tolerance (DESIGN.md §15)
+//!
+//! Every request is processed inside `catch_unwind`: a panic in the
+//! engine or session logic is isolated to the one request that tripped
+//! it, answered with a typed [`Response::Error`] (`request_panics_total`),
+//! and the touched session is flagged degraded so its next labelled
+//! sample runs the batch-retrain recovery path instead of trusting
+//! possibly-torn streaming state. Panics during the batched feature
+//! sweep drop the whole plan and fall back to per-call processing
+//! (`plan_panics_total`). Non-finite inference scores are quarantined
+//! the same way (`nonfinite_quarantined_total`).
+//!
+//! A shard can still die — deliberately (the fault harness's
+//! [`ShardKill`] payload is re-raised, not swallowed) or through a
+//! non-unwinding abort. A supervisor thread polls the worker handles;
+//! when one exits outside shutdown it forks a fresh engine replica from
+//! a reserve template, rehydrates the shard's sessions from the last
+//! durable checkpoint, and swaps the new queue sender into the shard's
+//! slot (`shard_deaths_total` / `shard_respawns_total`; `shards_active`
+//! dips and recovers). Callers racing the respawn see a typed
+//! [`CallError`]; [`Server::call_timeout`] retries through the gap.
+//!
+//! # Durable checkpoints
+//!
+//! With `ServerConfig::checkpoint` set, each shard snapshots its session
+//! map to `<dir>/shard-<i>.ckpt` (atomic write-then-rename, CRC-guarded;
+//! see `coordinator::checkpoint`) every `every` state-mutating requests
+//! and once more when the shutdown drain marker is processed. At spawn,
+//! existing archives are decoded, deduplicated (highest mutation count
+//! wins) and partitioned back onto their owning shards, so a restarted
+//! server resumes bitwise-identically from the last checkpoint boundary
+//! (`tests/fault_injection.rs`).
 //!
 //! # Shutdown
 //!
 //! [`Server::shutdown`] drains every shard in order: it enqueues a
-//! `Shutdown` marker behind the shard's pending requests and waits for
-//! the `Bye` ack, which the shard only sends after answering everything
-//! ahead of the marker. Shards then keep serving stragglers until the
-//! server drops their queue senders, so no accepted request ever loses
-//! its reply.
+//! `Shutdown` marker behind the shard's pending requests and waits up to
+//! `ServerConfig::drain_timeout` for the `Bye` ack, which the shard only
+//! sends after answering everything ahead of the marker. A dead or
+//! wedged shard cannot ack — it is skipped after the deadline
+//! (`shutdown_drain_skipped_total`) instead of hanging the caller.
+//! Shards then keep serving stragglers until the server disconnects
+//! their queues, and the supervisor joins them with the same bound.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use super::checkpoint::{self, CheckpointConfig, ShardCheckpointer};
 use super::engine::Engine;
-use super::protocol::{Request, Response};
-use super::session::{FeedOutcome, InferError, Phase, Session, SessionConfig};
-use crate::util::metrics::Registry;
+use super::faulty::{InjectedPanic, ShardKill};
+use super::protocol::{ErrorKind, Request, Response};
+use super::session::{FeedOutcome, InferError, Phase, Session, SessionConfig, SessionSnapshot};
+use crate::util::metrics::{Counter, Registry};
+use crate::{log_error, log_warn};
 
 /// A queued request with its reply channel.
 type Envelope = (Request, mpsc::Sender<Response>);
@@ -92,11 +132,20 @@ pub struct ServerConfig {
     /// strict FIFO order per shard (hence per session), and a value of 1
     /// disables batching entirely. Clamped to ≥ 1.
     pub max_batch: usize,
+    /// Durable session checkpointing (None disables it): shards snapshot
+    /// to `<dir>/shard-<i>.ckpt` every `every` mutating requests plus at
+    /// shutdown, and `spawn` rehydrates sessions from the directory.
+    pub checkpoint: Option<CheckpointConfig>,
+    /// How long `shutdown` waits for each shard's drain ack — and the
+    /// supervisor for the worker threads — before skipping it. A dead
+    /// shard never stalls shutdown longer than this.
+    pub drain_timeout: Duration,
 }
 
 impl ServerConfig {
     /// Config with the defaults used by the CLI: queue of 256, one shard
-    /// per available core, drain batches of up to 8.
+    /// per available core, drain batches of up to 8, no checkpointing,
+    /// 5 s shutdown drain bound.
     pub fn new(session: SessionConfig) -> Self {
         ServerConfig {
             session,
@@ -104,6 +153,8 @@ impl ServerConfig {
             seed: 0,
             shards: default_shards(),
             max_batch: 8,
+            checkpoint: None,
+            drain_timeout: Duration::from_secs(5),
         }
     }
 }
@@ -114,25 +165,92 @@ pub fn default_shards() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Handle to a running server (owns the shard worker threads).
+/// Typed transport failure for [`Server::call`] / [`Server::try_call`] /
+/// [`Server::call_timeout`]. Distinguishes "the shard is gone" (retry
+/// may reach a respawned replica) from "the request was accepted but its
+/// reply was lost" (the shard died mid-request; at-most-once, resubmit
+/// if idempotent) from a plain deadline miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallError {
+    /// The target shard's queue is disconnected (shard died and no
+    /// respawn has replaced it yet, or the server is stopped).
+    ShardDown { shard: usize },
+    /// The request was enqueued but the shard died before replying.
+    ReplyLost { shard: usize },
+    /// Deadline expired while the queue stayed saturated or the reply
+    /// never arrived.
+    Timeout { shard: usize },
+}
+
+impl std::fmt::Display for CallError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CallError::ShardDown { shard } => write!(f, "shard {shard} down"),
+            CallError::ReplyLost { shard } => {
+                write!(f, "reply lost: shard {shard} died mid-request")
+            }
+            CallError::Timeout { shard } => write!(f, "timed out waiting on shard {shard}"),
+        }
+    }
+}
+
+impl std::error::Error for CallError {}
+
+/// Per-shard queue senders behind mutexes, so the supervisor can swap in
+/// a respawned shard's sender while callers keep cloning the current one
+/// (lock → clone → unlock; no lock is held across a send).
+struct Slots {
+    txs: Vec<Mutex<mpsc::SyncSender<Envelope>>>,
+}
+
+impl Slots {
+    fn sender(&self, shard: usize) -> mpsc::SyncSender<Envelope> {
+        match self.txs[shard].lock() {
+            Ok(g) => g.clone(),
+            // a poisoned slot still holds a valid sender (clone can't panic)
+            Err(p) => p.into_inner().clone(),
+        }
+    }
+
+    fn set(&self, shard: usize, tx: mpsc::SyncSender<Envelope>) {
+        match self.txs[shard].lock() {
+            Ok(mut g) => *g = tx,
+            Err(p) => *p.into_inner() = tx,
+        }
+    }
+}
+
+/// Handle to a running server (owns the supervisor, which owns the shard
+/// worker threads).
 pub struct Server {
-    txs: Vec<mpsc::SyncSender<Envelope>>,
-    handles: Vec<thread::JoinHandle<()>>,
+    slots: Arc<Slots>,
+    supervisor: Option<thread::JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
+    drain_timeout: Duration,
+    queue_retries: Arc<Counter>,
     pub metrics: Arc<Registry>,
 }
 
 impl Server {
     /// Spawn the shard pool over an engine.
     ///
-    /// The engine is forked once per extra shard; if the engine cannot be
-    /// replicated the server runs with however many replicas it got
-    /// (at least one — the engine passed in).
+    /// The engine is forked once per extra shard, plus once more as the
+    /// supervisor's reserve template for respawning dead shards; if the
+    /// engine cannot be replicated the server runs with however many
+    /// replicas it got (at least one — the engine passed in) and dead
+    /// shards stay down.
     ///
     /// Forks run serially on the spawning thread. For `NativeEngine`
     /// that is free; for `PjrtEngine` every fork recompiles the five HLO
     /// entry points (~1 s each), so with the one-shard-per-core default
     /// startup cost scales with core count — size `shards` deliberately
     /// for PJRT deployments.
+    ///
+    /// With `cfg.checkpoint` set, any `shard-*.ckpt` archives in the
+    /// directory are decoded and their sessions rehydrated onto their
+    /// owning shards before the first request is served; unreadable
+    /// archives or snapshots count `checkpoint_restore_errors_total`
+    /// and are skipped, never fatal.
     pub fn spawn(engine: Box<dyn Engine>, cfg: ServerConfig) -> Server {
         let want = cfg.shards.max(1);
         let mut engines: Vec<Box<dyn Engine>> = vec![engine];
@@ -143,39 +261,86 @@ impl Server {
             }
         }
         let shards = engines.len();
+        // reserve replica for respawns — forked up-front so a PJRT-style
+        // engine pays compilation now, not during recovery
+        let template = engines[0].fork();
         let metrics = Arc::new(Registry::default());
         metrics.counter("shards_active").add(shards as u64);
-        let per_shard_cap = (cfg.queue_cap.max(1) + shards - 1) / shards;
-        let mut txs = Vec::with_capacity(shards);
-        let mut handles = Vec::with_capacity(shards);
-        for (i, eng) in engines.into_iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel::<Envelope>(per_shard_cap);
-            let m = Arc::clone(&metrics);
-            let cfg = cfg.clone();
-            let h = thread::Builder::new()
-                .name(format!("dfr-shard-{i}"))
-                .spawn(move || shard_loop(i, eng, cfg, rx, m))
-                .expect("spawn shard thread");
-            txs.push(tx);
-            handles.push(h);
+        // pre-register the fleet counters so a Stats snapshot shows them
+        // at zero before the first fault
+        for name in [
+            "shard_deaths_total",
+            "shard_respawns_total",
+            "queue_retries_total",
+            "shutdown_drain_skipped_total",
+            "sessions_restored_total",
+            "checkpoint_restore_errors_total",
+        ] {
+            metrics.counter(name);
         }
-        Server {
-            txs,
+        let per_shard_cap = (cfg.queue_cap.max(1) + shards - 1) / shards;
+        let mut snaps_by_shard: Vec<Vec<SessionSnapshot>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        if let Some(ck) = &cfg.checkpoint {
+            let (all, corrupt) = checkpoint::load_all(&ck.dir);
+            if corrupt > 0 {
+                metrics.counter("checkpoint_restore_errors_total").add(corrupt);
+                log_warn!("{corrupt} corrupt checkpoint archive(s) under {:?}", ck.dir);
+            }
+            for snap in all {
+                let i = (snap.id % shards as u64) as usize;
+                snaps_by_shard[i].push(snap);
+            }
+        }
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles: Vec<Option<thread::JoinHandle<()>>> = Vec::with_capacity(shards);
+        for (i, (eng, snaps)) in engines.into_iter().zip(snaps_by_shard).enumerate() {
+            // a failed thread spawn at startup is unrecoverable resource
+            // exhaustion — nothing to degrade to
+            #[allow(clippy::expect_used)]
+            let (tx, h) = spawn_shard(i, eng, cfg.clone(), Arc::clone(&metrics), snaps, per_shard_cap)
+                .expect("spawn shard thread");
+            txs.push(Mutex::new(tx));
+            handles.push(Some(h));
+        }
+        let slots = Arc::new(Slots { txs });
+        let stopping = Arc::new(AtomicBool::new(false));
+        let sup = Supervisor {
+            slots: Arc::clone(&slots),
             handles,
+            template,
+            cfg: cfg.clone(),
+            metrics: Arc::clone(&metrics),
+            stopping: Arc::clone(&stopping),
+            per_shard_cap,
+        };
+        #[allow(clippy::expect_used)]
+        let supervisor = thread::Builder::new()
+            .name("dfr-supervisor".into())
+            .spawn(move || supervise(sup))
+            .expect("spawn supervisor thread");
+        let queue_retries = metrics.counter("queue_retries_total");
+        Server {
+            slots,
+            supervisor: Some(supervisor),
+            stopping,
+            drain_timeout: cfg.drain_timeout,
+            queue_retries,
             metrics,
         }
     }
 
-    /// Number of live shards (may be fewer than requested if the engine
-    /// could not be forked).
+    /// Number of shard slots (may be fewer than requested if the engine
+    /// could not be forked). Slots stay routable across a respawn; the
+    /// live count at any instant is the `shards_active` metric.
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.slots.txs.len()
     }
 
     /// The shard a request will be routed to.
     fn route(&self, req: &Request) -> usize {
         match req.session_id() {
-            Some(id) => (id % self.txs.len() as u64) as usize,
+            Some(id) => (id % self.slots.txs.len() as u64) as usize,
             // remaining session-less requests (Shutdown via `call`) go to
             // shard 0; Stats never reaches here (answered inline).
             None => 0,
@@ -188,61 +353,147 @@ impl Server {
     /// `Stats` is answered directly from the shared registry without
     /// entering any shard queue — monitoring stays instant even when
     /// every shard is saturated with slow trainings.
-    pub fn call(&self, req: Request) -> Result<Response> {
+    ///
+    /// Never hangs on a dead shard: a disconnected queue is
+    /// [`CallError::ShardDown`], and a shard dying after accepting the
+    /// request drops the reply sender, surfacing
+    /// [`CallError::ReplyLost`] instead of blocking forever.
+    pub fn call(&self, req: Request) -> Result<Response, CallError> {
         if matches!(req, Request::Stats) {
             return Ok(Response::StatsText(self.metrics.render()));
         }
-        let (rtx, rrx) = mpsc::channel();
         let shard = self.route(&req);
-        self.txs[shard]
+        let (rtx, rrx) = mpsc::channel();
+        self.slots
+            .sender(shard)
             .send((req, rtx))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        Ok(rrx.recv()?)
+            .map_err(|_| CallError::ShardDown { shard })?;
+        rrx.recv().map_err(|_| CallError::ReplyLost { shard })
     }
 
     /// Non-blocking send; `Ok(None)` means the target shard's queue is
     /// saturated (backpressure) — the caller should retry or shed load.
     /// `Stats` never sheds: the receiver already holds the snapshot.
-    pub fn try_call(&self, req: Request) -> Result<Option<mpsc::Receiver<Response>>> {
+    pub fn try_call(
+        &self,
+        req: Request,
+    ) -> Result<Option<mpsc::Receiver<Response>>, CallError> {
         let (rtx, rrx) = mpsc::channel();
         if matches!(req, Request::Stats) {
             let _ = rtx.send(Response::StatsText(self.metrics.render()));
             return Ok(Some(rrx));
         }
         let shard = self.route(&req);
-        match self.txs[shard].try_send((req, rtx)) {
+        match self.slots.sender(shard).try_send((req, rtx)) {
             Ok(()) => Ok(Some(rrx)),
             Err(mpsc::TrySendError::Full(_)) => Ok(None),
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err(anyhow::anyhow!("server stopped"))
-            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(CallError::ShardDown { shard }),
         }
     }
 
-    /// Graceful shutdown: drain every shard queue in order, then join the
-    /// worker threads. All requests accepted before this call are
-    /// answered first.
+    /// [`Server::call`] with a deadline: retries a saturated queue with
+    /// exponential backoff (100 µs doubling to 5 ms, counted by
+    /// `queue_retries_total`), and keeps re-fetching the shard's current
+    /// sender so a request submitted while the supervisor is respawning
+    /// the shard lands on the fresh replica instead of failing fast.
+    pub fn call_timeout(&self, req: Request, timeout: Duration) -> Result<Response, CallError> {
+        if matches!(req, Request::Stats) {
+            return Ok(Response::StatsText(self.metrics.render()));
+        }
+        let deadline = Instant::now() + timeout;
+        let shard = self.route(&req);
+        let (rtx, rrx) = mpsc::channel();
+        let mut env = (req, rtx);
+        let mut backoff = Duration::from_micros(100);
+        loop {
+            let (returned, was_down) = match self.slots.sender(shard).try_send(env) {
+                Ok(()) => break,
+                Err(mpsc::TrySendError::Full(e)) => (e, false),
+                Err(mpsc::TrySendError::Disconnected(e)) => (e, true),
+            };
+            env = returned;
+            self.queue_retries.inc();
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(if was_down {
+                    CallError::ShardDown { shard }
+                } else {
+                    CallError::Timeout { shard }
+                });
+            }
+            thread::sleep(backoff.min(deadline - now));
+            backoff = (backoff * 2).min(Duration::from_millis(5));
+        }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        rrx.recv_timeout(remaining).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => CallError::Timeout { shard },
+            mpsc::RecvTimeoutError::Disconnected => CallError::ReplyLost { shard },
+        })
+    }
+
+    /// Graceful shutdown: drain every shard queue in order (bounded by
+    /// `drain_timeout` per shard — a dead shard is skipped, not waited
+    /// on), then join the workers. All requests accepted before this
+    /// call on a healthy shard are answered first; each checkpointing
+    /// shard writes a final snapshot when it processes the drain marker,
+    /// giving restart a well-defined recovery boundary.
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        if self.handles.is_empty() {
+        if self.stopping.swap(true, Ordering::SeqCst) {
             return;
         }
-        for tx in &self.txs {
+        let drain_skipped = self.metrics.counter("shutdown_drain_skipped_total");
+        let n = self.slots.txs.len();
+        for shard in 0..n {
+            let deadline = Instant::now() + self.drain_timeout;
             let (rtx, rrx) = mpsc::channel();
-            if tx.send((Request::Shutdown, rtx)).is_ok() {
-                // Bye arrives only after everything queued ahead of the
-                // marker has been answered.
-                let _ = rrx.recv();
+            // Enqueue the drain marker without ever blocking forever: a
+            // wedged shard can leave its queue full, and a dead one
+            // leaves it disconnected — both are skipped at the deadline
+            // (the shutdown-vs-dead-shard race).
+            let mut env = (Request::Shutdown, rtx);
+            let sent = loop {
+                match self.slots.sender(shard).try_send(env) {
+                    Ok(()) => break true,
+                    Err(mpsc::TrySendError::Disconnected(_)) => break false,
+                    Err(mpsc::TrySendError::Full(e)) => {
+                        if Instant::now() >= deadline {
+                            break false;
+                        }
+                        env = e;
+                        thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            };
+            // Bye arrives only after everything queued ahead of the
+            // marker has been answered — but a shard that died after
+            // accepting the marker can never ack, so the wait is bounded.
+            let acked = sent
+                && rrx
+                    .recv_timeout(deadline.saturating_duration_since(Instant::now()))
+                    .is_ok();
+            if !acked {
+                drain_skipped.inc();
+                log_warn!(
+                    "shard {shard}: no drain ack within {:?}; skipping",
+                    self.drain_timeout
+                );
             }
         }
-        // Dropping the senders disconnects the queues; shards drain any
-        // requests that raced in behind the markers, then exit.
-        self.txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        // Disconnect every queue by swapping in a sender whose receiver
+        // is already gone; shards drain any stragglers that raced in
+        // behind the markers, then exit.
+        for shard in 0..n {
+            let (dangling, _) = mpsc::sync_channel::<Envelope>(1);
+            self.slots.set(shard, dangling);
+        }
+        // The supervisor joins the workers (bounded — it detaches a
+        // wedged shard rather than hanging), then exits itself.
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
         }
     }
 }
@@ -251,6 +502,118 @@ impl Drop for Server {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Supervisor state: polls worker handles, buries dead shards, respawns
+/// them from the reserve engine template with sessions rehydrated from
+/// the durable checkpoint.
+struct Supervisor {
+    slots: Arc<Slots>,
+    handles: Vec<Option<thread::JoinHandle<()>>>,
+    template: Option<Box<dyn Engine>>,
+    cfg: ServerConfig,
+    metrics: Arc<Registry>,
+    stopping: Arc<AtomicBool>,
+    per_shard_cap: usize,
+}
+
+fn supervise(mut sup: Supervisor) {
+    let poll = Duration::from_millis(10);
+    let shards = sup.handles.len();
+    while !sup.stopping.load(Ordering::SeqCst) {
+        for shard in 0..shards {
+            let dead = sup.handles[shard]
+                .as_ref()
+                .is_some_and(|h| h.is_finished());
+            if !dead {
+                continue;
+            }
+            if let Some(h) = sup.handles[shard].take() {
+                // collect the panic payload (ShardKill or abort-grade);
+                // the per-request guard already isolated everything else
+                let _ = h.join();
+            }
+            if sup.stopping.load(Ordering::SeqCst) {
+                break;
+            }
+            sup.metrics.counter("shards_active").sub(1);
+            sup.metrics.counter("shard_deaths_total").inc();
+            log_warn!("shard {shard} died; respawning from the reserve replica");
+            let Some(engine) = sup.template.as_ref().and_then(|t| t.fork()) else {
+                log_error!(
+                    "shard {shard}: engine has no replica to respawn with; shard stays down"
+                );
+                continue;
+            };
+            let mut snaps = Vec::new();
+            if let Some(ck) = &sup.cfg.checkpoint {
+                let (all, corrupt) = checkpoint::load_all(&ck.dir);
+                if corrupt > 0 {
+                    sup.metrics
+                        .counter("checkpoint_restore_errors_total")
+                        .add(corrupt);
+                }
+                snaps = all
+                    .into_iter()
+                    .filter(|s| (s.id % shards as u64) as usize == shard)
+                    .collect();
+            }
+            match spawn_shard(
+                shard,
+                engine,
+                sup.cfg.clone(),
+                Arc::clone(&sup.metrics),
+                snaps,
+                sup.per_shard_cap,
+            ) {
+                Ok((tx, h)) => {
+                    sup.slots.set(shard, tx);
+                    sup.handles[shard] = Some(h);
+                    sup.metrics.counter("shards_active").add(1);
+                    sup.metrics.counter("shard_respawns_total").inc();
+                }
+                Err(e) => log_error!("shard {shard}: respawn thread failed: {e}"),
+            }
+        }
+        thread::sleep(poll);
+    }
+    // shutdown: join the workers with a bound — a wedged shard is
+    // detached (its thread dies with the process), never waited forever
+    let deadline = Instant::now() + sup.cfg.drain_timeout;
+    while Instant::now() < deadline
+        && sup
+            .handles
+            .iter()
+            .any(|h| h.as_ref().is_some_and(|h| !h.is_finished()))
+    {
+        thread::sleep(poll);
+    }
+    for (shard, slot) in sup.handles.iter_mut().enumerate() {
+        if let Some(h) = slot.take() {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                log_warn!("shard {shard} unresponsive at shutdown; detaching");
+            }
+        }
+    }
+}
+
+/// Create a shard's bounded queue and worker thread (used both at spawn
+/// and by the supervisor when respawning a dead shard).
+fn spawn_shard(
+    shard: usize,
+    engine: Box<dyn Engine>,
+    cfg: ServerConfig,
+    metrics: Arc<Registry>,
+    snapshots: Vec<SessionSnapshot>,
+    per_shard_cap: usize,
+) -> std::io::Result<(mpsc::SyncSender<Envelope>, thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::sync_channel::<Envelope>(per_shard_cap);
+    let h = thread::Builder::new()
+        .name(format!("dfr-shard-{shard}"))
+        .spawn(move || shard_loop(shard, engine, cfg, rx, metrics, snapshots))?;
+    Ok((tx, h))
 }
 
 /// The generation coordinates a batched feature extraction was planned
@@ -267,6 +630,102 @@ struct PlanTag {
     session_gen: u64,
     /// `Session::engine_generation` (== `Engine::generation`) at plan time
     engine_gen: u64,
+}
+
+/// Decide which requests of a drain batch can share one batched feature
+/// sweep, and run it. Runs under the shard's panic guard: a panic here
+/// aborts only the plan (all lanes fall back to per-call processing).
+fn plan_batch(
+    batch: &[Envelope],
+    sessions: &BTreeMap<u64, Session>,
+    engine: &dyn Engine,
+    plan: &mut Vec<Option<PlanTag>>,
+    feat_bufs: &mut Vec<Vec<f32>>,
+) {
+    use crate::coordinator::engine::FeatureRequest;
+    let mut reqs: Vec<FeatureRequest<'_>> = Vec::new();
+    let engine_gen = engine.generation();
+    let score_exact = engine.scores_from_features_exact();
+    for (req, _) in batch {
+        let tag = match req {
+            Request::Labelled { session, sample } => sessions
+                .get(session)
+                .filter(|sess| {
+                    // per-call would take the streaming fold at
+                    // (gen_p, gen_q); anything else — Collect
+                    // buffering, batch retrain triggers, validation
+                    // rejects, pending datapath rolls (which must
+                    // answer `Adapted`), or a degraded session whose
+                    // next feed runs the recovery retrain — is not
+                    // batchable
+                    sess.batchable()
+                        && sess.streaming_serve()
+                        && sess.sample_valid(sample)
+                        && sess.engine_generation() == engine_gen
+                })
+                .map(|sess| (sess, sample)),
+            Request::Infer { session, sample } => sessions
+                .get(session)
+                .filter(|sess| {
+                    // per-call scoring must be an exact function
+                    // of r̃ (native; quant only while fallen
+                    // back) and sync_generation must be a no-op
+                    sess.batchable()
+                        && sess.phase == Phase::Serve
+                        && score_exact
+                        && sess.engine_generation() == engine_gen
+                        && sample.v() == sess.cfg.n_v
+                })
+                .map(|sess| (sess, sample)),
+            _ => None,
+        }
+        .map(|(sess, sample)| {
+            let (p, q) = sess.serving_params();
+            reqs.push(FeatureRequest {
+                sample,
+                mask: &sess.mask,
+                p,
+                q,
+            });
+            PlanTag {
+                lane: reqs.len() - 1,
+                session_gen: sess.generation(),
+                engine_gen,
+            }
+        });
+        plan.push(tag);
+    }
+    // a single planned request gains nothing over per-call (the
+    // kernel is bitwise-equal either way) — only sweep when the
+    // batch actually amortizes
+    if reqs.len() >= 2 {
+        while feat_bufs.len() < reqs.len() {
+            feat_bufs.push(Vec::new());
+        }
+        if engine
+            .features_batch_into(&reqs, &mut feat_bufs[..reqs.len()])
+            .is_err()
+        {
+            // per-call processing will surface the error per
+            // request with its usual mapping
+            plan.iter_mut().for_each(|t| *t = None);
+        }
+    } else {
+        plan.iter_mut().for_each(|t| *t = None);
+    }
+}
+
+/// Human-readable panic payload for the typed `Error` reply.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else if payload.is::<InjectedPanic>() {
+        "injected panic"
+    } else {
+        "opaque panic payload"
+    }
 }
 
 /// One shard: exclusively owns its session map and engine replica, and
@@ -286,14 +745,48 @@ struct PlanTag {
 /// a request that the per-call path would answer `Adapted` (generation
 /// mismatch) is never planned, and a mid-batch generation roll
 /// invalidates later planned items via their [`PlanTag`].
+///
+/// # Panic isolation
+///
+/// Shutdown and Stats are handled outside the guard (they touch no
+/// session state); everything else runs inside `catch_unwind`. A caught
+/// panic answers `Response::Error{kind: Panic}`, counts
+/// `request_panics_total`, and flags the touched session degraded — its
+/// next labelled sample runs the batch-retrain recovery path, so torn
+/// streaming state is never folded forward. The fault harness's
+/// [`ShardKill`] payload is deliberately re-raised so the supervisor's
+/// respawn path stays testable.
 fn shard_loop(
     shard: usize,
     engine: Box<dyn Engine>,
     cfg: ServerConfig,
     rx: mpsc::Receiver<Envelope>,
     metrics: Arc<Registry>,
+    snapshots: Vec<SessionSnapshot>,
 ) {
     let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+    {
+        let restored = metrics.counter("sessions_restored_total");
+        let restore_errs = metrics.counter("checkpoint_restore_errors_total");
+        for snap in snapshots {
+            let id = snap.id;
+            match Session::restore(snap, cfg.session.clone()) {
+                Ok(sess) => {
+                    sessions.insert(id, sess);
+                    restored.inc();
+                }
+                Err(e) => {
+                    restore_errs.inc();
+                    log_warn!("shard {shard}: dropping checkpointed session {id}: {e}");
+                }
+            }
+        }
+    }
+    let mut ckpt = cfg
+        .checkpoint
+        .as_ref()
+        .map(|c| ShardCheckpointer::new(c, shard));
+
     let shard_label = shard.to_string();
     let labels: [(&str, &str); 1] = [("shard", shard_label.as_str())];
     let req_counter = metrics.counter_labelled("requests_total", &labels);
@@ -315,6 +808,12 @@ fn shard_loop(
     // generation roll
     let batch_size = metrics.histogram_labelled("batch_size", &labels);
     let batch_splits = metrics.counter_labelled("batch_splits_total", &labels);
+    // fault model (DESIGN.md §15)
+    let request_panics = metrics.counter_labelled("request_panics_total", &labels);
+    let plan_panics = metrics.counter_labelled("plan_panics_total", &labels);
+    let nonfinite_q = metrics.counter_labelled("nonfinite_quarantined_total", &labels);
+    let ckpt_writes = metrics.counter_labelled("checkpoint_writes_total", &labels);
+    let ckpt_write_errs = metrics.counter_labelled("checkpoint_write_errors_total", &labels);
 
     let max_batch = cfg.max_batch.max(1);
     let mut batch: Vec<Envelope> = Vec::with_capacity(max_batch);
@@ -334,94 +833,57 @@ fn shard_loop(
         }
         batch_size.record_secs(batch.len() as f64 * 1e-6);
 
-        // ---- plan: decide which requests can share one batched sweep
+        // ---- plan: decide which requests can share one batched sweep.
+        // A panic inside the sweep only costs the plan — every lane
+        // falls back to the per-call path, which carries its own guard.
         plan.clear();
-        {
-            use crate::coordinator::engine::FeatureRequest;
-            let mut reqs: Vec<FeatureRequest<'_>> = Vec::new();
-            let engine_gen = engine.generation();
-            let score_exact = engine.scores_from_features_exact();
-            for (req, _) in &batch {
-                let tag = match req {
-                    Request::Labelled { session, sample } => sessions
-                        .get(session)
-                        .filter(|sess| {
-                            // per-call would take the streaming fold at
-                            // (gen_p, gen_q); anything else — Collect
-                            // buffering, batch retrain triggers,
-                            // validation rejects, pending datapath rolls
-                            // (which must answer `Adapted`) — is not
-                            // batchable
-                            sess.streaming_serve()
-                                && sess.sample_valid(sample)
-                                && sess.engine_generation() == engine_gen
-                        })
-                        .map(|sess| (sess, sample)),
-                    Request::Infer { session, sample } => sessions
-                        .get(session)
-                        .filter(|sess| {
-                            // per-call scoring must be an exact function
-                            // of r̃ (native; quant only while fallen
-                            // back) and sync_generation must be a no-op
-                            sess.phase == Phase::Serve
-                                && score_exact
-                                && sess.engine_generation() == engine_gen
-                                && sample.v() == sess.cfg.n_v
-                        })
-                        .map(|sess| (sess, sample)),
-                    _ => None,
-                }
-                .map(|(sess, sample)| {
-                    let (p, q) = sess.serving_params();
-                    reqs.push(FeatureRequest {
-                        sample,
-                        mask: &sess.mask,
-                        p,
-                        q,
-                    });
-                    PlanTag {
-                        lane: reqs.len() - 1,
-                        session_gen: sess.generation(),
-                        engine_gen,
-                    }
-                });
-                plan.push(tag);
+        let planned = catch_unwind(AssertUnwindSafe(|| {
+            plan_batch(&batch, &sessions, engine.as_ref(), &mut plan, &mut feat_bufs);
+        }));
+        if let Err(payload) = planned {
+            if payload.is::<ShardKill>() {
+                resume_unwind(payload);
             }
-            // a single planned request gains nothing over per-call (the
-            // kernel is bitwise-equal either way) — only sweep when the
-            // batch actually amortizes
-            if reqs.len() >= 2 {
-                while feat_bufs.len() < reqs.len() {
-                    feat_bufs.push(Vec::new());
-                }
-                if engine
-                    .features_batch_into(&reqs, &mut feat_bufs[..reqs.len()])
-                    .is_err()
-                {
-                    // per-call processing will surface the error per
-                    // request with its usual Rejected mapping
-                    plan.iter_mut().for_each(|t| *t = None);
-                }
-            } else {
-                plan.iter_mut().for_each(|t| *t = None);
-            }
+            plan_panics.inc();
+            plan.clear();
+            plan.resize(batch.len(), None);
         }
 
         // ---- process: strict arrival order, batched features where
         // still valid
         for (idx, (req, reply)) in batch.drain(..).enumerate() {
             req_counter.inc();
-            let resp = match req {
+            match &req {
                 Request::Shutdown => {
-                    // Ack the drain marker, then keep serving: anything
-                    // still queued (or racing in) is answered until the
-                    // server drops our sender and `recv` disconnects.
+                    // Final snapshot at a well-defined boundary (every
+                    // request accepted before the marker is in it), then
+                    // ack the drain and keep serving stragglers until
+                    // the server drops our sender and `recv` disconnects.
+                    if let Some(ck) = ckpt.as_mut() {
+                        match ck.write_now(sessions.values()) {
+                            Ok(()) => ckpt_writes.inc(),
+                            Err(e) => {
+                                ckpt_write_errs.inc();
+                                log_warn!("shard {shard}: final checkpoint failed: {e}");
+                            }
+                        }
+                    }
                     let _ = reply.send(Response::Bye);
                     continue;
                 }
                 // unreachable through `call`/`try_call` (answered inline
                 // by the server handle); kept so a queued Stats still works
-                Request::Stats => Response::StatsText(metrics.render()),
+                Request::Stats => {
+                    let _ = reply.send(Response::StatsText(metrics.render()));
+                    continue;
+                }
+                _ => {}
+            }
+            let session_id = req.session_id();
+            let mutating = matches!(req, Request::Labelled { .. } | Request::Finalize { .. });
+            let guarded = catch_unwind(AssertUnwindSafe(|| match req {
+                // handled before the guard; kept total for the compiler
+                Request::Shutdown | Request::Stats => Response::Bye,
                 Request::Labelled { session, sample } => {
                     let sess = sessions.entry(session).or_insert_with(|| {
                         Session::new(session, cfg.session.clone(), cfg.seed)
@@ -440,6 +902,7 @@ fn shard_loop(
                         }
                         fresh
                     });
+                    let q_before = sess.quarantine_events();
                     let sw = crate::util::timer::Stopwatch::start();
                     let outcome = match pre {
                         Some(t) => sess.feed_labelled_with_features(
@@ -449,6 +912,12 @@ fn shard_loop(
                         ),
                         None => sess.feed_labelled(engine.as_ref(), sample),
                     };
+                    // non-finite features quarantined inside the session
+                    // (reseed + batch fallback) surface here as a counter
+                    let quarantined = sess.quarantine_events().saturating_sub(q_before);
+                    if quarantined > 0 {
+                        nonfinite_q.add(quarantined);
+                    }
                     match outcome {
                         Ok(FeedOutcome::Buffered(n)) => Response::Accepted {
                             phase: sess.phase.name(),
@@ -504,7 +973,16 @@ fn shard_loop(
                             rejected.inc();
                             Response::Rejected(msg)
                         }
-                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                        Err(e) => {
+                            // engine fault mid-feed: state may be torn —
+                            // degrade so the next sample retrains from
+                            // the buffered window instead of folding on
+                            sess.flag_degraded();
+                            Response::Error {
+                                kind: ErrorKind::Engine,
+                                detail: format!("{e:#}"),
+                            }
+                        }
                     }
                 }
                 Request::Infer { session, sample } => match sessions.get_mut(&session) {
@@ -532,29 +1010,46 @@ fn shard_loop(
                                 // infer-only traffic (no-op unless the
                                 // engine generation moved)
                                 match sess.sync_generation(engine.as_ref()) {
-                                    Ok(None) => {}
-                                    Ok(Some(_)) => refeaturizes.inc(),
-                                    Err(e) => {
-                                        let _ = reply.send(Response::Rejected(format!(
-                                            "engine error: {e:#}"
-                                        )));
-                                        continue;
+                                    Ok(refeat) => {
+                                        if refeat.is_some() {
+                                            refeaturizes.inc();
+                                        }
+                                        sess.infer(engine.as_ref(), &sample)
                                     }
+                                    Err(e) => Err(InferError::Engine(e)),
                                 }
-                                sess.infer(engine.as_ref(), &sample)
                             }
                         };
                         match result {
                             Ok((class, scores)) => {
-                                infer_hist.record_secs(sw.elapsed_secs());
-                                inferences.inc();
-                                Response::Prediction { class, scores }
+                                if scores.iter().all(|s| s.is_finite()) {
+                                    infer_hist.record_secs(sw.elapsed_secs());
+                                    inferences.inc();
+                                    Response::Prediction { class, scores }
+                                } else {
+                                    // non-finite scores never reach the
+                                    // caller as a Prediction: quarantine
+                                    // and degrade so the next labelled
+                                    // sample reseeds via batch retrain
+                                    sess.flag_degraded();
+                                    nonfinite_q.inc();
+                                    Response::Error {
+                                        kind: ErrorKind::NonFinite,
+                                        detail: "non-finite scores quarantined; \
+                                                 session flagged for retrain"
+                                            .into(),
+                                    }
+                                }
                             }
                             Err(e @ InferError::NotServing { .. }) => {
                                 Response::Rejected(e.to_string())
                             }
                             Err(InferError::Engine(e)) => {
-                                Response::Rejected(format!("engine error: {e:#}"))
+                                sess.flag_degraded();
+                                Response::Error {
+                                    kind: ErrorKind::Engine,
+                                    detail: format!("{e:#}"),
+                                }
                             }
                         }
                     }
@@ -579,20 +1074,66 @@ fn shard_loop(
                             FeedOutcome::Buffered(_)
                             | FeedOutcome::Observed { .. }
                             | FeedOutcome::Adapted { .. },
-                        ) => unreachable!(),
-                        Err(e) => Response::Rejected(format!("engine error: {e:#}")),
+                        ) => Response::Rejected("internal: unexpected finalize outcome".into()),
+                        Err(e) => {
+                            sess.flag_degraded();
+                            Response::Error {
+                                kind: ErrorKind::Engine,
+                                detail: format!("{e:#}"),
+                            }
+                        }
                     },
                 },
+            }));
+            // map the guard: Ok replies in order, Err isolates the
+            // panic to this one request
+            let resp = match guarded {
+                Ok(resp) => resp,
+                Err(payload) => {
+                    if payload.is::<ShardKill>() {
+                        // deliberate kill (fault harness / unrecoverable):
+                        // die loudly and let the supervisor bury us
+                        resume_unwind(payload);
+                    }
+                    request_panics.inc();
+                    if let Some(id) = session_id {
+                        if let Some(sess) = sessions.get_mut(&id) {
+                            sess.flag_degraded();
+                        }
+                    }
+                    let detail = panic_message(payload.as_ref());
+                    Response::Error {
+                        kind: ErrorKind::Panic,
+                        detail: format!("panic isolated on shard {shard}: {detail}"),
+                    }
+                }
             };
             let _ = reply.send(resp);
+            if mutating {
+                if let Some(ck) = ckpt.as_mut() {
+                    // cadence counts mutating *requests* (even rejected
+                    // ones) — a cheap, deterministic trigger
+                    if ck.note_mutation() {
+                        match ck.write_now(sessions.values()) {
+                            Ok(()) => ckpt_writes.inc(),
+                            Err(e) => {
+                                ckpt_write_errs.inc();
+                                log_warn!("shard {shard}: checkpoint write failed: {e}");
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::faulty::{FaultSpec, FaultyEngine};
     use crate::data::profiles::Profile;
     use crate::data::synth;
 
@@ -621,11 +1162,11 @@ mod tests {
         scfg.train.res_decay_epochs = vec![2];
         scfg.train.out_decay_epochs = vec![2];
         let cfg = ServerConfig {
-            session: scfg,
             queue_cap: 64,
             seed: 0xFEED,
             shards,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         };
         (Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg), ds)
     }
@@ -764,6 +1305,89 @@ mod tests {
             })
             .unwrap();
         assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn engine_error_maps_to_typed_error_response() {
+        // an always-erroring engine: Collect feeds buffer fine (no engine
+        // work), but the 20th sample triggers training, which fails — the
+        // reply must be the typed Error{Engine}, never a panic or a hang
+        let prof = Profile {
+            name: "mini",
+            n_v: 2,
+            n_c: 2,
+            train: 20,
+            test: 10,
+            t_min: 10,
+            t_max: 12,
+        };
+        let ds = synth::generate_with(
+            &prof,
+            synth::SynthConfig {
+                noise: 0.3,
+                freq_sep: 0.2,
+                ar: 0.3,
+            },
+            13,
+        );
+        let mut scfg = SessionConfig::new(2, 2, 20);
+        scfg.train.nx = 8;
+        scfg.train.epochs = 3;
+        let cfg = ServerConfig {
+            queue_cap: 64,
+            seed: 0xFEED,
+            shards: 1,
+            ..ServerConfig::new(scfg)
+        };
+        let engine = FaultyEngine::new(
+            Box::new(NativeEngine::new(8, 2)),
+            FaultSpec {
+                p_error: 1.0,
+                ..FaultSpec::default()
+            },
+        );
+        let srv = Server::spawn(Box::new(engine), cfg);
+        let mut last = None;
+        for s in &ds.train {
+            last = Some(
+                srv.call(Request::Labelled {
+                    session: 1,
+                    sample: s.clone(),
+                })
+                .unwrap(),
+            );
+        }
+        assert!(
+            matches!(
+                last,
+                Some(Response::Error {
+                    kind: ErrorKind::Engine,
+                    ..
+                })
+            ),
+            "{last:?}"
+        );
+        // the server is still alive and answering
+        let r = srv.call(Request::Stats).unwrap();
+        assert!(matches!(r, Response::StatsText(_)));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn call_timeout_times_out_instead_of_hanging() {
+        // no faults: a healthy server answers well inside the deadline
+        let (srv, ds) = server();
+        let r = srv
+            .call_timeout(
+                Request::Labelled {
+                    session: 1,
+                    sample: ds.train[0].clone(),
+                },
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        assert!(matches!(r, Response::Accepted { .. }), "{r:?}");
         srv.shutdown();
     }
 }

@@ -56,7 +56,7 @@ use super::engine::{scores_from_r_tilde, Engine, ReservoirUpdate};
 use crate::data::dataset::Sample;
 use crate::dfr::mask::Mask;
 use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, TrainConfig};
-use crate::linalg::ridge::{OnlineRidge, RidgeSolution};
+use crate::linalg::ridge::{OnlineRidge, OnlineRidgeState, RidgeSolution};
 use crate::runtime::executor::TrainState;
 use crate::util::prng::Pcg32;
 
@@ -76,6 +76,28 @@ impl Phase {
             Phase::BpOptimize => "bp_optimize",
             Phase::RidgeTrain => "ridge_train",
             Phase::Serve => "serve",
+        }
+    }
+
+    /// Stable wire code for the checkpoint codec.
+    pub fn code(self) -> u8 {
+        match self {
+            Phase::Collect => 0,
+            Phase::BpOptimize => 1,
+            Phase::RidgeTrain => 2,
+            Phase::Serve => 3,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code); `None` for unknown bytes (a
+    /// corrupt or future-version checkpoint).
+    pub fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(Phase::Collect),
+            1 => Some(Phase::BpOptimize),
+            2 => Some(Phase::RidgeTrain),
+            3 => Some(Phase::Serve),
+            _ => None,
         }
     }
 }
@@ -246,6 +268,17 @@ pub struct Session {
     /// largest |u| seen by this session)
     obs_t_max: usize,
     obs_u_max: f32,
+    /// set when a fault hit this session (caught panic, engine error,
+    /// non-finite quarantine); cleared by the recovery retrain the next
+    /// labelled Serve sample triggers
+    degraded: bool,
+    /// lifetime count of non-finite values quarantined on this session
+    quarantines: u64,
+    /// lifetime count of state-mutating requests (labelled feeds /
+    /// finalizes) applied — the checkpoint freshness stamp: when two
+    /// snapshot files carry the same session id, the higher `mutations`
+    /// wins on restore
+    mutations: u64,
 }
 
 impl Session {
@@ -287,6 +320,9 @@ impl Session {
             gen_q,
             obs_t_max: 0,
             obs_u_max: 0.0,
+            degraded: false,
+            quarantines: 0,
+            mutations: 0,
         }
     }
 
@@ -331,6 +367,44 @@ impl Session {
         self.engine_generation
     }
 
+    /// Mark the session as having been hit by a fault (caught panic,
+    /// engine error, non-finite score). The next labelled Serve sample
+    /// runs the batch-fallback retrain, which rebuilds every derived
+    /// structure (factor, W̃, error ring) from the raw sample buffer.
+    ///
+    /// A *panic* can unwind out of mid-train, skipping [`train`]'s
+    /// error-path phase restore and stranding the phase in
+    /// `BpOptimize`/`RidgeTrain` — states from which no feed can ever
+    /// trigger training again. Flagging rolls such a phase back to the
+    /// nearest stable one (Serve if a solution is already served,
+    /// Collect otherwise) so the recovery retrain can actually fire.
+    pub fn flag_degraded(&mut self) {
+        self.degraded = true;
+        if matches!(self.phase, Phase::BpOptimize | Phase::RidgeTrain) {
+            self.phase = if self.solution.is_some() {
+                Phase::Serve
+            } else {
+                Phase::Collect
+            };
+        }
+    }
+
+    /// Whether the session is flagged degraded (pending recovery).
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Lifetime count of non-finite values quarantined on this session.
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantines
+    }
+
+    /// Lifetime count of state-mutating requests applied — the
+    /// checkpoint freshness stamp (highest wins on restore).
+    pub fn mutations(&self) -> u64 {
+        self.mutations
+    }
+
     /// Whether labelled feeds currently take the streaming Serve path
     /// (the only Feed path whose feature extraction is batchable: it
     /// folds exactly one r̃ at the served `(gen_p, gen_q)`).
@@ -343,7 +417,17 @@ impl Session {
     /// answered `Rejected` without a forward pass — pre-extracting
     /// features for them would change behavior).
     pub fn sample_valid(&self, sample: &Sample) -> bool {
-        sample.label < self.cfg.n_c && sample.v() == self.cfg.n_v
+        sample.label < self.cfg.n_c
+            && sample.v() == self.cfg.n_v
+            && sample.u.iter().all(|u| u.is_finite())
+    }
+
+    /// Whether the batch planner may pre-extract features for a labelled
+    /// feed on this session: everything [`sample_valid`](Self::sample_valid)
+    /// checks, plus no pending degraded-recovery retrain (which the
+    /// per-call path runs before folding — batching would skip it).
+    pub fn batchable(&self) -> bool {
+        !self.degraded
     }
 
     fn push_err(&mut self, is_err: bool) {
@@ -368,20 +452,56 @@ impl Session {
         self.err_count = 0;
     }
 
-    /// Feed one labelled sample. May trigger the full training pipeline.
-    pub fn feed_labelled(&mut self, engine: &dyn Engine, sample: Sample) -> Result<FeedOutcome> {
+    /// Input validation shared by both labelled-feed entry points —
+    /// `Some(Rejected)` means the sample never touches the engine (the
+    /// batch planner mirrors this via [`sample_valid`](Self::sample_valid)).
+    fn validate(&self, sample: &Sample) -> Option<FeedOutcome> {
         if sample.label >= self.cfg.n_c {
-            return Ok(FeedOutcome::Rejected(format!(
+            return Some(FeedOutcome::Rejected(format!(
                 "label {} out of range ({})",
                 sample.label, self.cfg.n_c
             )));
         }
         if sample.v() != self.cfg.n_v {
-            return Ok(FeedOutcome::Rejected(format!(
+            return Some(FeedOutcome::Rejected(format!(
                 "channel count {} != {}",
                 sample.v(),
                 self.cfg.n_v
             )));
+        }
+        // non-finite inputs are rejected at the door: folding a NaN into
+        // the Gram shadow would poison the factor permanently
+        if !sample.u.iter().all(|u| u.is_finite()) {
+            return Some(FeedOutcome::Rejected("non-finite input sample".into()));
+        }
+        None
+    }
+
+    /// Feed one labelled sample. May trigger the full training pipeline.
+    pub fn feed_labelled(&mut self, engine: &dyn Engine, sample: Sample) -> Result<FeedOutcome> {
+        if let Some(rej) = self.validate(&sample) {
+            return Ok(rej);
+        }
+        self.mutations += 1;
+        // degraded recovery: a fault (caught panic / engine error /
+        // non-finite quarantine) flagged this session — rebuild every
+        // derived structure from the raw sample ring via the batch
+        // pipeline before trusting the streaming factor again. Also
+        // covers a Collect-phase session whose first training was killed
+        // by a panic: once the buffer holds a training set, every
+        // further feed retries the train (bounded by the FIFO pop, the
+        // buffer can never wedge at `buffer_cap`).
+        if self.degraded
+            && !self.buffer.is_empty()
+            && (self.phase == Phase::Serve
+                || self.buffer.len() + 1 >= self.cfg.collect_target)
+        {
+            self.degraded = false;
+            if self.buffer.len() >= self.cfg.buffer_cap {
+                self.buffer.pop_front();
+            }
+            self.buffer.push_back(sample);
+            return self.train(engine);
         }
         // streaming Serve path: O(s²) in-place adaptation, no buffering
         // backpressure (the recent-sample buffer is a bounded FIFO there)
@@ -469,19 +589,10 @@ impl Session {
         sample: Sample,
         features: &[f32],
     ) -> Result<FeedOutcome> {
-        if sample.label >= self.cfg.n_c {
-            return Ok(FeedOutcome::Rejected(format!(
-                "label {} out of range ({})",
-                sample.label, self.cfg.n_c
-            )));
+        if let Some(rej) = self.validate(&sample) {
+            return Ok(rej);
         }
-        if sample.v() != self.cfg.n_v {
-            return Ok(FeedOutcome::Rejected(format!(
-                "channel count {} != {}",
-                sample.v(),
-                self.cfg.n_v
-            )));
-        }
+        self.mutations += 1;
         assert!(
             self.streaming_serve(),
             "batched feed requires the streaming Serve path"
@@ -508,15 +619,30 @@ impl Session {
         sample: Sample,
         datapath_refold: Option<u64>,
     ) -> Result<FeedOutcome> {
-        let (stats, mispredicted) = {
-            let online = self.online.as_mut().expect("streaming serve path");
-            let mispredicted = online.predict_class(&self.feat_scratch) != sample.label;
-            (online.observe(&self.feat_scratch, sample.label), mispredicted)
+        // non-finite quarantine: a NaN/Inf r̃ must never reach the Gram
+        // shadow (one poisoned fold corrupts the factor for good). Keep
+        // the raw sample — its bits are finite-checked at the door — and
+        // recover through the batch pipeline, which re-extracts every
+        // feature from scratch.
+        if !self.feat_scratch.iter().all(|f| f.is_finite()) {
+            self.quarantines += 1;
+            self.degraded = false;
+            if !self.buffer.is_empty() && self.buffer.len() >= self.cfg.buffer_cap {
+                self.buffer.pop_front();
+            }
+            self.buffer.push_back(sample);
+            return self.train(engine);
+        }
+        let Some(online) = self.online.as_mut() else {
+            return Ok(FeedOutcome::Rejected(
+                "internal: streaming fold without an online factor".into(),
+            ));
         };
+        let mispredicted = online.predict_class(&self.feat_scratch) != sample.label;
+        let stats = online.observe(&self.feat_scratch, sample.label);
         self.push_err(mispredicted);
-        if let Some(sol) = self.solution.as_mut() {
-            sol.w_tilde
-                .copy_from_slice(self.online.as_ref().expect("just used").w_tilde());
+        if let (Some(sol), Some(online)) = (self.solution.as_mut(), self.online.as_ref()) {
+            sol.w_tilde.copy_from_slice(online.w_tilde());
         }
         // keep a bounded FIFO of recent labelled samples so the batch
         // fallback (and the adaptation reseed) has something to work on
@@ -524,7 +650,9 @@ impl Session {
             self.buffer.pop_front();
         }
         self.buffer.push_back(sample);
-        let sample = self.buffer.back().expect("just pushed");
+        let Some(sample) = self.buffer.back() else {
+            return Ok(FeedOutcome::Rejected("internal: empty ring after push".into()));
+        };
         self.new_since_train += 1;
 
         // streaming reservoir adaptation: one truncated-BPTT SGD step on
@@ -608,12 +736,9 @@ impl Session {
         }
         self.generation += 1;
         self.engine_generation = engine.generation();
-        let (ocfg, s, ny) = {
-            let o = self
-                .online
-                .as_ref()
-                .expect("reseed requires the streaming path");
-            (o.config(), o.s(), o.ny())
+        let (ocfg, s, ny) = match self.online.as_ref() {
+            Some(o) => (o.config(), o.s(), o.ny()),
+            None => anyhow::bail!("reseed requires the streaming path"),
         };
         let mut fresh = OnlineRidge::new(s, ny, ocfg);
         // window mode refolds the tail `window` samples; λ mode replays
@@ -648,11 +773,30 @@ impl Session {
         if self.buffer.is_empty() {
             return Ok(FeedOutcome::Rejected("no samples buffered".into()));
         }
+        self.mutations += 1;
         self.train(engine)
     }
 
-    /// The full §4.1 pipeline over the buffer.
+    /// The full §4.1 pipeline over the buffer. On an engine error the
+    /// session's phase is restored to what it was at entry — without
+    /// this, a transient fault mid-train would strand the session in
+    /// `BpOptimize`, where no feed can ever trigger training again (the
+    /// old solution/factor are untouched until the success path, so a
+    /// Serve-phase session keeps serving its previous generation).
     fn train(&mut self, engine: &dyn Engine) -> Result<FeedOutcome> {
+        let entry_phase = self.phase;
+        let out = self.train_inner(engine);
+        match &out {
+            // a completed batch train rebuilt every derived structure
+            // from the raw buffer — whatever fault flagged the session
+            // is healed by construction
+            Ok(_) => self.degraded = false,
+            Err(_) => self.phase = entry_phase,
+        }
+        out
+    }
+
+    fn train_inner(&mut self, engine: &dyn Engine) -> Result<FeedOutcome> {
         let sw = crate::util::timer::Stopwatch::start();
         self.phase = Phase::BpOptimize;
         let cfg = self.cfg.train.clone();
@@ -785,7 +929,12 @@ impl Session {
                 phase: self.phase,
             });
         }
-        let sol = self.solution.as_ref().expect("serve implies solution");
+        let Some(sol) = self.solution.as_ref() else {
+            return Err(InferError::NotServing {
+                session: self.id,
+                phase: self.phase,
+            });
+        };
         let scores = engine
             .infer(sample, &self.mask, self.gen_p, self.gen_q, &sol.w_tilde)
             .map_err(InferError::Engine)?;
@@ -816,15 +965,228 @@ impl Session {
             engine.scores_from_features_exact(),
             "batched scoring requires an exact-score engine"
         );
-        let sol = self.solution.as_ref().expect("serve implies solution");
+        let Some(sol) = self.solution.as_ref() else {
+            return Err(InferError::NotServing {
+                session: self.id,
+                phase: self.phase,
+            });
+        };
         let mut scores = Vec::new();
         scores_from_r_tilde(&sol.w_tilde, features, &mut scores);
         let class = crate::linalg::ridge::argmax(&scores);
         Ok((class, scores))
     }
+
+    /// Copy out the session's complete mutable state for durable
+    /// checkpointing. [`restore`](Self::restore) on the result (with the
+    /// same `SessionConfig`) yields a session whose every subsequent
+    /// feed/infer response is **bitwise equal** to continuing on the
+    /// original — the ring buffer, factor + Gram shadow, served W̃,
+    /// candidate SGD state, PRNG position, generation counters and
+    /// fallback ring all round-trip exactly.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        let (rng_state, rng_inc) = self.rng.state_parts();
+        SessionSnapshot {
+            id: self.id,
+            phase: self.phase,
+            mask_nx: self.mask.nx,
+            mask_v: self.mask.v,
+            mask_m: self.mask.m.clone(),
+            buffer: self.buffer.iter().cloned().collect(),
+            new_since_train: self.new_since_train,
+            state_p: self.state.p,
+            state_q: self.state.q,
+            state_w: self.state.w.clone(),
+            state_b: self.state.b.clone(),
+            solution: self.solution.clone(),
+            online: self.online.as_ref().map(|o| o.export_state()),
+            err_ring: self.err_ring.clone(),
+            err_head: self.err_head,
+            err_len: self.err_len,
+            err_count: self.err_count,
+            rng_state,
+            rng_inc,
+            epoch_losses: self.epoch_losses.clone(),
+            generation: self.generation,
+            engine_generation: self.engine_generation,
+            gen_p: self.gen_p,
+            gen_q: self.gen_q,
+            obs_t_max: self.obs_t_max,
+            obs_u_max: self.obs_u_max,
+            degraded: self.degraded,
+            quarantines: self.quarantines,
+            mutations: self.mutations,
+        }
+    }
+
+    /// Rebuild a session from a [`snapshot`](Self::snapshot) under the
+    /// server's current `SessionConfig`. Every structural invariant is
+    /// re-validated as a typed error — the snapshot may come from a
+    /// corrupted checkpoint or a server started with different knobs.
+    pub fn restore(snap: SessionSnapshot, mut cfg: SessionConfig) -> Result<Session, String> {
+        // mirror Session::new's ring growth so restore agrees with a
+        // freshly constructed session under the same config
+        if cfg.adapt_reservoir {
+            if let Some(w) = cfg.train.window {
+                cfg.buffer_cap = cfg.buffer_cap.max(w);
+            }
+        }
+        if snap.mask_nx != cfg.train.nx || snap.mask_v != cfg.n_v {
+            return Err(format!(
+                "mask shape {}x{} does not match config {}x{}",
+                snap.mask_nx, snap.mask_v, cfg.train.nx, cfg.n_v
+            ));
+        }
+        if snap.mask_m.len() != snap.mask_nx * snap.mask_v {
+            return Err(format!(
+                "mask length {} != {}·{}",
+                snap.mask_m.len(),
+                snap.mask_nx,
+                snap.mask_v
+            ));
+        }
+        let nx = cfg.train.nx;
+        if snap.state_w.len() != cfg.n_c * nx * (nx + 1) || snap.state_b.len() != cfg.n_c {
+            return Err(format!(
+                "SGD state shape w={} b={} does not match n_c={} nx={nx}",
+                snap.state_w.len(),
+                snap.state_b.len(),
+                cfg.n_c
+            ));
+        }
+        if snap.buffer.len() > cfg.buffer_cap {
+            return Err(format!(
+                "buffered {} samples exceeds cap {}",
+                snap.buffer.len(),
+                cfg.buffer_cap
+            ));
+        }
+        for s in &snap.buffer {
+            if s.label >= cfg.n_c || s.v() != cfg.n_v || !s.u.iter().all(|u| u.is_finite()) {
+                return Err("invalid sample in buffer".into());
+            }
+        }
+        if let Some(sol) = &snap.solution {
+            if sol.w_tilde.len() != sol.s * sol.ny || sol.ny != cfg.n_c {
+                return Err(format!(
+                    "solution shape {}≠{}·{} (n_c {})",
+                    sol.w_tilde.len(),
+                    sol.s,
+                    sol.ny,
+                    cfg.n_c
+                ));
+            }
+        }
+        if snap.phase == Phase::Serve && snap.solution.is_none() {
+            return Err("Serve phase without a solution".into());
+        }
+        let cap = snap.err_ring.len();
+        if snap.err_len > cap || (cap > 0 && snap.err_head >= cap) || snap.err_count > snap.err_len
+        {
+            return Err(format!(
+                "error-ring cursor out of range: head {} len {} count {} cap {cap}",
+                snap.err_head, snap.err_len, snap.err_count
+            ));
+        }
+        let online = match snap.online {
+            Some(st) => {
+                if st.ny != cfg.n_c {
+                    return Err(format!("online factor ny {} != n_c {}", st.ny, cfg.n_c));
+                }
+                Some(OnlineRidge::from_state(st).map_err(|e| format!("online factor: {e}"))?)
+            }
+            None => None,
+        };
+        Ok(Session {
+            id: snap.id,
+            cfg,
+            phase: snap.phase,
+            mask: Mask {
+                nx: snap.mask_nx,
+                v: snap.mask_v,
+                m: snap.mask_m,
+            },
+            buffer: snap.buffer.into(),
+            new_since_train: snap.new_since_train,
+            state: TrainState {
+                p: snap.state_p,
+                q: snap.state_q,
+                w: snap.state_w,
+                b: snap.state_b,
+            },
+            solution: snap.solution,
+            online,
+            feat_scratch: Vec::new(),
+            err_ring: snap.err_ring,
+            err_head: snap.err_head,
+            err_len: snap.err_len,
+            err_count: snap.err_count,
+            rng: Pcg32::from_state_parts(snap.rng_state, snap.rng_inc),
+            epoch_losses: snap.epoch_losses,
+            generation: snap.generation,
+            engine_generation: snap.engine_generation,
+            gen_p: snap.gen_p,
+            gen_q: snap.gen_q,
+            obs_t_max: snap.obs_t_max,
+            obs_u_max: snap.obs_u_max,
+            degraded: snap.degraded,
+            quarantines: snap.quarantines,
+            mutations: snap.mutations,
+        })
+    }
+}
+
+/// Plain-data copy of a [`Session`]'s complete mutable state — the
+/// serialization bridge between the live session and the checkpoint
+/// codec (`coordinator/checkpoint.rs`). Everything that changes after
+/// construction is here; the immutable `SessionConfig` is NOT (the
+/// server re-supplies its current config on restore, which
+/// [`Session::restore`] validates the snapshot against).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    pub id: u64,
+    pub phase: Phase,
+    pub mask_nx: usize,
+    pub mask_v: usize,
+    pub mask_m: Vec<f32>,
+    /// labelled-sample ring, oldest first
+    pub buffer: Vec<Sample>,
+    pub new_since_train: usize,
+    /// candidate SGD state (truncated-BPTT optimizer position)
+    pub state_p: f32,
+    pub state_q: f32,
+    pub state_w: Vec<f32>,
+    pub state_b: Vec<f32>,
+    /// served output layer
+    pub solution: Option<RidgeSolution>,
+    /// streaming accumulator (factor + Gram shadow + sample ring)
+    pub online: Option<OnlineRidgeState>,
+    /// rolling prequential-error ring
+    pub err_ring: Vec<bool>,
+    pub err_head: usize,
+    pub err_len: usize,
+    pub err_count: usize,
+    /// PRNG position (epoch-shuffle stream continues exactly)
+    pub rng_state: u64,
+    pub rng_inc: u64,
+    pub epoch_losses: Vec<f32>,
+    pub generation: u64,
+    pub engine_generation: u64,
+    /// serving (p, q) of the current generation
+    pub gen_p: f32,
+    pub gen_q: f32,
+    /// workload envelope for recalibration
+    pub obs_t_max: usize,
+    pub obs_u_max: f32,
+    pub degraded: bool,
+    pub quarantines: u64,
+    /// freshness stamp: mutating requests applied over the session's
+    /// lifetime; the restore path keeps the highest per id
+    pub mutations: u64,
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::coordinator::engine::NativeEngine;
@@ -1085,6 +1447,102 @@ mod tests {
         assert!(adapted > 0, "drift threshold of 1e-6 never tripped");
         // the served model stays coherent: inference still works
         assert!(sess.infer(&eng, &ds.test[0]).is_ok());
+    }
+
+    #[test]
+    fn snapshot_restore_is_bitwise_equivalent() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        sess.cfg.adapt_reservoir = true;
+        sess.cfg.adapt_lr = 0.05;
+        sess.cfg.adapt_drift_eps = 0.5;
+        sess.cfg.fallback_error_rate = Some(0.9);
+        let cfg = sess.cfg.clone();
+        let mut sess = Session::new(1, cfg.clone(), 0xABC);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        for s in ds.train.iter().take(5) {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        let mut twin = Session::restore(sess.snapshot(), cfg).unwrap();
+        assert_eq!(twin.mutations(), sess.mutations());
+        // both continue on identical input; every outcome and every
+        // score vector must match bitwise (train_seconds is wall clock —
+        // the only non-deterministic field, zeroed before comparing)
+        fn norm(o: FeedOutcome) -> FeedOutcome {
+            match o {
+                FeedOutcome::Trained { p, q, beta, .. } => FeedOutcome::Trained {
+                    p,
+                    q,
+                    beta,
+                    train_seconds: 0.0,
+                },
+                other => other,
+            }
+        }
+        for s in &ds.train {
+            let a = sess.feed_labelled(&eng, s.clone()).unwrap();
+            let b = twin.feed_labelled(&eng, s.clone()).unwrap();
+            assert_eq!(norm(a), norm(b));
+        }
+        for s in &ds.test {
+            let (ca, sa) = sess.infer(&eng, s).unwrap();
+            let (cb, sb) = twin.infer(&eng, s).unwrap();
+            assert_eq!(ca, cb);
+            assert_eq!(sa, sb);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_config() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        let good = sess.cfg.clone();
+        let snap = sess.snapshot();
+        let mut bad = good.clone();
+        bad.train.nx = 12; // mask no longer matches
+        assert!(Session::restore(snap.clone(), bad).is_err());
+        let mut bad = good.clone();
+        bad.n_c = 5; // SGD state + online factor shaped for 2 classes
+        assert!(Session::restore(snap.clone(), bad).is_err());
+        let mut corrupt = snap.clone();
+        corrupt.solution = None; // Serve without a solution
+        assert!(Session::restore(corrupt, good.clone()).is_err());
+        assert!(Session::restore(snap, good).is_ok());
+    }
+
+    #[test]
+    fn nonfinite_input_rejected_and_degraded_recovery_retrains() {
+        let (eng, mut sess, ds) = setup();
+        sess.cfg.train.window = Some(16);
+        for s in &ds.train {
+            sess.feed_labelled(&eng, s.clone()).unwrap();
+        }
+        assert_eq!(sess.phase, Phase::Serve);
+        // NaN input never reaches the engine
+        let mut s = ds.train[0].clone();
+        s.u[0] = f32::NAN;
+        assert!(!sess.sample_valid(&s));
+        match sess.feed_labelled(&eng, s).unwrap() {
+            FeedOutcome::Rejected(msg) => assert!(msg.contains("non-finite"), "{msg}"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(sess.quarantine_events(), 0);
+        // degraded flag (set by the server on caught panics / NaN
+        // scores) forces a recovery retrain on the next labelled feed
+        sess.flag_degraded();
+        assert!(sess.degraded());
+        match sess.feed_labelled(&eng, ds.train[1].clone()).unwrap() {
+            FeedOutcome::Trained { .. } => {}
+            other => panic!("expected recovery Trained, got {other:?}"),
+        }
+        assert!(!sess.degraded());
+        assert_eq!(sess.phase, Phase::Serve);
     }
 
     /// NativeEngine wrapper whose datapath generation can be flipped by

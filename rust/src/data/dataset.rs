@@ -2,7 +2,7 @@
 //! with integer class labels, plus normalization and padding utilities.
 
 /// One labelled multivariate time series.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Sample {
     /// row-major T×V
     pub u: Vec<f32>,

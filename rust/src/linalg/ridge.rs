@@ -289,7 +289,7 @@ impl SolveWorkspace {
 // ---------------------------------------------------------------------------
 
 /// Knobs of the [`OnlineRidge`] streaming accumulator.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OnlineRidgeConfig {
     /// ridge shift β, baked into the maintained system at construction
     /// (`B = βI` before the first fold)
@@ -577,6 +577,146 @@ impl OnlineRidge {
         self.since_refactor = 0;
         self.refactors += 1;
     }
+
+    /// Copy out the complete accumulator state — factor, shadow, RHS,
+    /// solved layer, sample ring and counters — for durable
+    /// checkpointing. Importing the result through
+    /// [`from_state`](Self::from_state) yields an accumulator whose
+    /// every subsequent [`observe`](Self::observe) is **bitwise equal**
+    /// to continuing on the original (`x` is pure scratch, destroyed by
+    /// each fold, so it is not part of the state).
+    pub fn export_state(&self) -> OnlineRidgeState {
+        OnlineRidgeState {
+            cfg: self.cfg,
+            s: self.s,
+            ny: self.ny,
+            chol: self.chol.clone(),
+            b: self.b.clone(),
+            a: self.a.clone(),
+            w: self.w.clone(),
+            ring: self.ring.clone(),
+            ring_labels: self.ring_labels.clone(),
+            ring_head: self.ring_head,
+            ring_len: self.ring_len,
+            updates: self.updates,
+            since_refactor: self.since_refactor,
+            refactors: self.refactors,
+        }
+    }
+
+    /// Rebuild an accumulator from [`export_state`](Self::export_state)
+    /// output. Every invariant `new` asserts is re-validated here as a
+    /// typed error instead of a panic — the input may come from a
+    /// corrupted or foreign checkpoint.
+    pub fn from_state(st: OnlineRidgeState) -> Result<Self, String> {
+        let OnlineRidgeState {
+            cfg,
+            s,
+            ny,
+            chol,
+            b,
+            a,
+            w,
+            ring,
+            ring_labels,
+            ring_head,
+            ring_len,
+            updates,
+            since_refactor,
+            refactors,
+        } = st;
+        if s == 0 || ny == 0 {
+            return Err(format!("degenerate system {s}x{ny}"));
+        }
+        if !(cfg.beta > 0.0) {
+            return Err(format!("β must be > 0, got {}", cfg.beta));
+        }
+        if !(cfg.lambda > 0.0 && cfg.lambda <= 1.0) {
+            return Err(format!("λ must be in (0, 1], got {}", cfg.lambda));
+        }
+        if cfg.window.is_some() && cfg.lambda != 1.0 {
+            return Err("window and λ-forgetting are mutually exclusive".into());
+        }
+        let window = cfg.window.unwrap_or(0);
+        if cfg.window.is_some() && window == 0 {
+            return Err("window must be ≥ 1".into());
+        }
+        if chol.len() != tri_len(s) || b.len() != tri_len(s) {
+            return Err(format!(
+                "triangle length mismatch: chol {} / shadow {} vs tri_len({s}) = {}",
+                chol.len(),
+                b.len(),
+                tri_len(s)
+            ));
+        }
+        if a.len() != ny * s || w.len() != ny * s {
+            return Err(format!(
+                "rhs/solution length mismatch: a {} / w {} vs {ny}·{s}",
+                a.len(),
+                w.len()
+            ));
+        }
+        if ring.len() != window * s || ring_labels.len() != window {
+            return Err(format!(
+                "ring length mismatch: {} words / {} labels vs window {window} · s {s}",
+                ring.len(),
+                ring_labels.len()
+            ));
+        }
+        if ring_len > window || (window > 0 && ring_head >= window) {
+            return Err(format!(
+                "ring cursor out of range: head {ring_head} len {ring_len} window {window}"
+            ));
+        }
+        if ring_labels.iter().any(|&l| l >= ny) {
+            return Err(format!("ring label out of range (ny = {ny})"));
+        }
+        Ok(OnlineRidge {
+            s,
+            ny,
+            cfg,
+            chol,
+            b,
+            a,
+            w,
+            x: vec![0.0; s],
+            ring,
+            ring_labels,
+            ring_head,
+            ring_len,
+            updates,
+            since_refactor,
+            refactors,
+        })
+    }
+}
+
+/// Plain-data copy of an [`OnlineRidge`]'s complete state (minus the
+/// fold scratch, which carries no information between folds) — the
+/// serialization bridge for the coordinator's durable session
+/// checkpoints ([`OnlineRidge::export_state`] /
+/// [`OnlineRidge::from_state`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OnlineRidgeState {
+    pub cfg: OnlineRidgeConfig,
+    pub s: usize,
+    pub ny: usize,
+    /// packed Cholesky factor, `tri_len(s)` words
+    pub chol: Vec<f32>,
+    /// exact Gram shadow, `tri_len(s)` words
+    pub b: Vec<f32>,
+    /// RHS `A`, row-major ny×s
+    pub a: Vec<f32>,
+    /// solved `W̃_out`, row-major ny×s
+    pub w: Vec<f32>,
+    /// flat sample ring (window mode), `window·s` words
+    pub ring: Vec<f32>,
+    pub ring_labels: Vec<usize>,
+    pub ring_head: usize,
+    pub ring_len: usize,
+    pub updates: u64,
+    pub since_refactor: usize,
+    pub refactors: u64,
 }
 
 /// Shared core of [`rank1_update_packed`] / [`rank1_sub_packed`]: the
@@ -663,7 +803,7 @@ pub fn rankk_update_packed(p: &mut [f32], rs: &[f32], s: usize) {
 pub const PAPER_BETAS: [f32; 4] = [1e-6, 1e-4, 1e-2, 1.0];
 
 /// A solved output layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RidgeSolution {
     /// W̃_out, row-major ny×s, acting on r̃ = [r, 1]
     pub w_tilde: Vec<f32>,
@@ -937,6 +1077,85 @@ mod tests {
             .filter(|(r, c)| online.predict_class(r) == *c)
             .count();
         assert!(correct as f64 / data.len() as f64 > 0.9, "{correct}/40");
+    }
+
+    #[test]
+    fn online_ridge_state_roundtrip_is_bitwise() {
+        // export mid-stream, rebuild, and both accumulators must stay
+        // bitwise identical through further observes — the property the
+        // coordinator's checkpoint/restore leans on
+        let mut rng = Pcg32::seed(52);
+        let s = 7;
+        let ny = 3;
+        let configs = [
+            OnlineRidgeConfig {
+                beta: 0.2,
+                lambda: 1.0,
+                window: None,
+                refactor_every: 5,
+            },
+            OnlineRidgeConfig {
+                beta: 0.2,
+                lambda: 0.97,
+                window: None,
+                refactor_every: 0,
+            },
+            OnlineRidgeConfig {
+                beta: 0.2,
+                lambda: 1.0,
+                window: Some(6),
+                refactor_every: 0,
+            },
+        ];
+        for cfg in configs {
+            let mut orig = OnlineRidge::new(s, ny, cfg);
+            for i in 0..13 {
+                let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+                orig.observe(&r, i % ny);
+            }
+            let mut copy = OnlineRidge::from_state(orig.export_state()).unwrap();
+            assert_eq!(copy.updates(), orig.updates());
+            assert_eq!(copy.w_tilde(), orig.w_tilde());
+            for i in 0..17 {
+                let r: Vec<f32> = (0..s).map(|_| rng.normal()).collect();
+                let a = orig.observe(&r, i % ny);
+                let b = copy.observe(&r, i % ny);
+                assert_eq!(a.updates, b.updates);
+                assert_eq!(a.refactored, b.refactored);
+                assert_eq!(orig.w_tilde(), copy.w_tilde(), "window={:?} λ={}", cfg.window, cfg.lambda);
+            }
+        }
+    }
+
+    #[test]
+    fn online_ridge_from_state_rejects_corrupt() {
+        let online = OnlineRidge::new(
+            4,
+            2,
+            OnlineRidgeConfig {
+                beta: 0.1,
+                window: Some(3),
+                ..Default::default()
+            },
+        );
+        // healthy state imports fine
+        assert!(OnlineRidge::from_state(online.export_state()).is_ok());
+        let mut st = online.export_state();
+        st.chol.pop();
+        assert!(OnlineRidge::from_state(st).is_err(), "short factor");
+        let mut st = online.export_state();
+        st.cfg.beta = -1.0;
+        assert!(OnlineRidge::from_state(st).is_err(), "bad beta");
+        let mut st = online.export_state();
+        st.ring_labels[0] = 99;
+        st.ring_len = 3;
+        assert!(OnlineRidge::from_state(st).is_err(), "label out of range");
+        let mut st = online.export_state();
+        st.ring_head = 3;
+        assert!(OnlineRidge::from_state(st).is_err(), "head out of range");
+        let mut st = online.export_state();
+        st.s = 0;
+        assert!(OnlineRidge::from_state(st).is_err(), "degenerate");
     }
 
     #[test]

@@ -124,6 +124,23 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             "adapt-drift-eps",
             "0.02",
             "accumulated |Δp|+|Δq| that triggers re-featurization + quant recalibration",
+        )
+        .opt(
+            "checkpoint-dir",
+            "",
+            "durable session checkpoints: shards snapshot to <dir>/shard-<i>.ckpt and \
+             restarts rehydrate from it (empty = off)",
+        )
+        .opt(
+            "checkpoint-every",
+            "64",
+            "snapshot cadence in state-mutating requests per shard (with --checkpoint-dir)",
+        )
+        .opt(
+            "call-timeout-ms",
+            "0",
+            "per-request deadline: retry a saturated/respawning shard with backoff and give \
+             up after this many ms (0 = block indefinitely)",
         );
     let p = cmd.parse(argv)?;
     let prof = profile_arg(&p)?;
@@ -190,15 +207,33 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         0 => {} // keep the one-shard-per-core default
         n => server_cfg.shards = n,
     }
+    match p.get("checkpoint-dir") {
+        "" => {}
+        dir => {
+            let mut ck = dfr_edge::coordinator::CheckpointConfig::new(dir);
+            ck.every = p.get_u64("checkpoint-every")?.max(1);
+            log_info!("checkpointing to {dir} every {} mutations/shard", ck.every);
+            server_cfg.checkpoint = Some(ck);
+        }
+    }
+    let call_timeout = match p.get_u64("call-timeout-ms")? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
     let srv = Server::spawn(engine, server_cfg);
     log_info!("coordinator: {} shard(s)", srv.shards());
+    // one call surface for the demo loop: bounded when a deadline is
+    // set (survives a shard respawn), blocking otherwise
+    let rpc = |req: Request| -> Result<Response, String> {
+        match call_timeout {
+            Some(t) => srv.call_timeout(req, t).map_err(|e| e.to_string()),
+            None => srv.call(req).map_err(|e| e.to_string()),
+        }
+    };
     let sw = dfr_edge::util::timer::Stopwatch::start();
     let mut trained = false;
     for s in &ds.train {
-        match srv
-            .call(Request::Labelled { session: 1, sample: s.clone() })
-            .map_err(|e| e.to_string())?
-        {
+        match rpc(Request::Labelled { session: 1, sample: s.clone() })? {
             Response::Trained { p, q, beta, train_seconds } => {
                 trained = true;
                 println!(
@@ -211,7 +246,7 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
     }
     if !trained {
-        match srv.call(Request::Finalize { session: 1 }).map_err(|e| e.to_string())? {
+        match rpc(Request::Finalize { session: 1 })? {
             Response::Trained { p, q, beta, train_seconds } => println!(
                 "trained: p={p:.4} q={q:.4} beta={beta:.0e} in {}",
                 fmt_secs(train_seconds)
@@ -221,9 +256,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     }
     let mut correct = 0;
     for s in &ds.test {
-        if let Response::Prediction { class, .. } = srv
-            .call(Request::Infer { session: 1, sample: s.clone() })
-            .map_err(|e| e.to_string())?
+        if let Response::Prediction { class, .. } =
+            rpc(Request::Infer { session: 1, sample: s.clone() })?
         {
             if class == s.label {
                 correct += 1;

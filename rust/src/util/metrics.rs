@@ -28,6 +28,24 @@ impl Counter {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Saturating decrement — for the few counters that track a level
+    /// rather than a rate (e.g. the coordinator's `shards_active`, which
+    /// drops when a shard dies and recovers when the supervisor respawns
+    /// it). Never wraps below zero.
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -310,6 +328,16 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_sub_saturates_at_zero() {
+        let c = Counter::default();
+        c.add(3);
+        c.sub(1);
+        assert_eq!(c.get(), 2);
+        c.sub(10);
+        assert_eq!(c.get(), 0);
     }
 
     #[test]

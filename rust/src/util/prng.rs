@@ -33,6 +33,22 @@ impl Pcg32 {
         Self::new(seed, 0)
     }
 
+    /// The raw `(state, inc)` pair — everything the generator is. Paired
+    /// with [`from_state_parts`](Self::from_state_parts) so a checkpoint
+    /// can restore a generator that continues the *exact* draw sequence
+    /// (the coordinator's session snapshots depend on this for bitwise
+    /// restart equivalence).
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`state_parts`](Self::state_parts)
+    /// output. No seeding/warm-up runs: the next `next_u32` continues
+    /// where the exported generator left off.
+    pub fn from_state_parts(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     /// Derive an independent child generator (used to give each dataset /
     /// sample / epoch its own stream without coupling draw counts).
     pub fn split(&mut self, tag: u64) -> Pcg32 {
@@ -180,6 +196,19 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn state_parts_roundtrip_continues_sequence() {
+        let mut a = Pcg32::new(0xFEED, 3);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.state_parts();
+        let mut b = Pcg32::from_state_parts(state, inc);
+        for _ in 0..64 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
     }
 
     #[test]

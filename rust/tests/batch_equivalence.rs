@@ -591,11 +591,11 @@ fn adapt_server(max_batch: usize) -> Server {
             delay: Duration::from_millis(2),
         }),
         ServerConfig {
-            session: scfg,
             queue_cap: 256,
             seed: 0xFEED,
             shards: 1,
             max_batch,
+            ..ServerConfig::new(scfg)
         },
     )
 }

@@ -103,11 +103,11 @@ fn prop_server_routes_by_session_id() {
             let srv = Server::spawn(
                 Box::new(NativeEngine::new(6, 2)),
                 ServerConfig {
-                    session: scfg,
                     queue_cap: 32,
                     seed: 3,
                     shards: 2,
                     max_batch: 8,
+                    ..ServerConfig::new(scfg)
                 },
             );
             let n_sessions = 1 + u64::from(size % 3);

@@ -110,11 +110,11 @@ fn concurrent_clients_across_shards() {
     let srv = Server::spawn(
         Box::new(NativeEngine::new(8, 2)),
         ServerConfig {
-            session: mini_session_config(ds.train.len()),
             queue_cap: 256,
             seed: 0xFEED,
             shards: 4,
             max_batch: 8,
+            ..ServerConfig::new(mini_session_config(ds.train.len()))
         },
     );
     assert_eq!(srv.shards(), 4);
@@ -184,11 +184,11 @@ fn try_call_sheds_load_when_shard_queue_saturated() {
     let srv = Server::spawn(
         Box::new(SlowEngine::new(8, 2, Duration::from_millis(30))),
         ServerConfig {
-            session: scfg,
             queue_cap: 1, // per-shard queue of 1
             seed: 1,
             shards: 1,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         },
     );
 
@@ -232,11 +232,11 @@ fn shutdown_drains_all_shards_without_lost_replies() {
     let srv = Server::spawn(
         Box::new(SlowEngine::new(8, 2, Duration::from_millis(20))),
         ServerConfig {
-            session: mini_session_config(1),
             queue_cap: 16, // 8 per shard
             seed: 2,
             shards: 2,
             max_batch: 8,
+            ..ServerConfig::new(mini_session_config(1))
         },
     );
 
@@ -270,11 +270,12 @@ fn stats_exposes_per_shard_and_aggregate_metrics() {
     let srv = Server::spawn(
         Box::new(NativeEngine::new(8, 2)),
         ServerConfig {
-            session: mini_session_config(50), // never trains
             queue_cap: 64,
             seed: 3,
             shards: 4,
             max_batch: 8,
+            // never trains (collect target far above the feed count)
+            ..ServerConfig::new(mini_session_config(50))
         },
     );
     // one labelled sample per shard
@@ -320,11 +321,11 @@ fn streaming_session_adapts_to_drift_without_retrain() {
     let srv = Server::spawn(
         Box::new(NativeEngine::new(8, 2)),
         ServerConfig {
-            session: scfg,
             queue_cap: 64,
             seed: 5,
             shards: 2,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         },
     );
     let mut trained = false;
@@ -475,11 +476,11 @@ fn bursty_load_batches_while_preserving_per_session_semantics() {
             Duration::from_millis(3),
         )),
         ServerConfig {
-            session: scfg,
             queue_cap: 128,
             seed: 6,
             shards: 1,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         },
     );
 
@@ -605,11 +606,11 @@ fn engine_without_fork_degrades_to_single_shard() {
     let srv = Server::spawn(
         Box::new(Unforkable(NativeEngine::new(8, 2))),
         ServerConfig {
-            session: mini_session_config(ds.train.len()),
             queue_cap: 64,
             seed: 4,
             shards: 8,
             max_batch: 8,
+            ..ServerConfig::new(mini_session_config(ds.train.len()))
         },
     );
     assert_eq!(srv.shards(), 1, "unforkable engine must fall back to 1 shard");

@@ -1,0 +1,773 @@
+//! Deterministic fault-injection harness for the supervised coordinator
+//! (DESIGN.md §15).
+//!
+//! Every fault in here is scheduled by [`FaultyEngine`] from a fixed
+//! seed, so each scenario is exactly reproducible:
+//!
+//! * **panic isolation** — a 2-shard server under concurrent load with
+//!   a 2% per-call panic rate answers every accepted request and keeps
+//!   serving (no hangs, no lost replies);
+//! * **typed transport errors** — a bounded [`Server::call_timeout`]
+//!   comes back [`CallError::Timeout`] on a saturated queue instead of
+//!   hanging, and rides the retry/backoff path (`queue_retries_total`)
+//!   once the queue frees up;
+//! * **shard supervision** — a [`ShardKill`](dfr_edge::coordinator::ShardKill)
+//!   takes a whole shard thread down; the supervisor detects it,
+//!   respawns a replica forked from the reserve template, and rehydrates
+//!   the shard's sessions from the checkpoint directory;
+//! * **durable checkpoints** — kill-then-restart and clean-shutdown-
+//!   then-restart both resume **bitwise equal** to an uninterrupted
+//!   reference run from the last checkpoint boundary;
+//! * **non-finite quarantine** — injected NaN features/scores are
+//!   quarantined (`nonfinite_quarantined_total`), surfaced as typed
+//!   `Response::Error { kind: NonFinite }` on the inference path, and
+//!   the session self-heals through the batch-fallback retrain;
+//! * **bounded shutdown** — a shard wedged behind seconds of work is
+//!   skipped at the drain deadline (`shutdown_drain_skipped_total`)
+//!   instead of stalling `Server::shutdown`.
+
+use std::fs;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::coordinator::{
+    silence_injected_panics, CallError, CheckpointConfig, ErrorKind, FaultSpec, FaultyEngine,
+    Request, Response, Server, ServerConfig, SessionConfig,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::runtime::executor::TrainState;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+/// Streaming variant: labelled Serve samples fold into the sliding-
+/// window online ridge (1 engine call each), giving the checkpoint
+/// tests a mid-stream state worth restoring.
+fn streaming_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = mini_session_config(collect);
+    scfg.train.window = Some(16);
+    scfg
+}
+
+fn server_config(
+    session: SessionConfig,
+    shards: usize,
+    checkpoint: Option<CheckpointConfig>,
+) -> ServerConfig {
+    let mut cfg = ServerConfig {
+        queue_cap: 64,
+        seed: 0xFEED,
+        shards,
+        max_batch: 8,
+        ..ServerConfig::new(session)
+    };
+    cfg.checkpoint = checkpoint;
+    cfg
+}
+
+fn labelled(session: u64, s: &Sample) -> Request {
+    Request::Labelled {
+        session,
+        sample: s.clone(),
+    }
+}
+
+fn infer_req(session: u64, s: &Sample) -> Request {
+    Request::Infer {
+        session,
+        sample: s.clone(),
+    }
+}
+
+fn stats_text(srv: &Server) -> String {
+    match srv.call(Request::Stats).expect("stats is answered inline") {
+        Response::StatsText(text) => text,
+        other => panic!("expected stats text, got {other:?}"),
+    }
+}
+
+/// Value of the aggregate `counter <name> <value>` line in a metrics
+/// snapshot (0 when the counter never registered).
+fn counter_total(stats: &str, name: &str) -> u64 {
+    let prefix = format!("counter {name} ");
+    stats
+        .lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Zero the only wall-clock field in any response so bitwise comparisons
+/// across runs are meaningful.
+fn normalize(mut resp: Response) -> Response {
+    if let Response::Trained { train_seconds, .. } = &mut resp {
+        *train_seconds = 0.0;
+    }
+    resp
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dfr-fi-{name}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// An engine whose inference path is slow (and exempt from the exact
+/// scores-from-features shortcut, so batches cannot skip the sleep) —
+/// makes queue saturation and drain wedging deterministic to provoke.
+struct SlowInfer {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl SlowInfer {
+    fn new(nx: usize, n_c: usize, delay: Duration) -> Self {
+        SlowInfer {
+            inner: NativeEngine::new(nx, n_c),
+            delay,
+        }
+    }
+}
+
+impl Engine for SlowInfer {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+
+    fn scores_from_features_exact(&self) -> bool {
+        false
+    }
+
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {
+        thread::sleep(self.delay);
+        self.inner.infer(s, mask, p, q, w_tilde)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-infer"
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        Some(Box::new(SlowInfer::new(
+            self.inner.nx,
+            self.inner.n_c,
+            self.delay,
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// panic isolation
+
+#[test]
+fn panics_are_isolated_and_every_request_is_answered() {
+    silence_injected_panics();
+    let ds = mini_dataset(21);
+    let spec = FaultSpec {
+        seed: 0xFA01,
+        p_panic: 0.02,
+        ..FaultSpec::default()
+    };
+    let srv = Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        server_config(mini_session_config(ds.train.len()), 2, None),
+    );
+
+    // 4 concurrent clients, 8 sessions across 2 shards; with a 2%
+    // per-call panic rate most training attempts die mid-pipeline, so
+    // every session exercises the catch_unwind → Error → degraded →
+    // recovery-retrain loop several times over
+    thread::scope(|scope| {
+        for k in 0..4u64 {
+            let srv = &srv;
+            let ds = &ds;
+            scope.spawn(move || {
+                for session in [k, k + 4] {
+                    let mut trained = false;
+                    for s in &ds.train {
+                        for _ in 0..200 {
+                            let resp = srv
+                                .call_timeout(labelled(session, s), Duration::from_secs(30))
+                                .expect("an accepted request must be answered, never lost");
+                            match resp {
+                                // isolated fault — the sample was not
+                                // applied; retry it
+                                Response::Error { .. } => continue,
+                                Response::Trained { .. } => {
+                                    trained = true;
+                                    break;
+                                }
+                                _ => break,
+                            }
+                        }
+                    }
+                    assert!(
+                        trained,
+                        "session {session} must finish training despite 2% panics"
+                    );
+                    let mut served = false;
+                    for _ in 0..200 {
+                        match srv
+                            .call_timeout(infer_req(session, &ds.test[0]), Duration::from_secs(30))
+                            .expect("an accepted request must be answered, never lost")
+                        {
+                            Response::Prediction { scores, .. } => {
+                                assert!(scores.iter().all(|x| x.is_finite()));
+                                served = true;
+                                break;
+                            }
+                            Response::Error { .. } => continue,
+                            other => panic!("session {session}: unexpected {other:?}"),
+                        }
+                    }
+                    assert!(served, "session {session} must serve despite 2% panics");
+                }
+            });
+        }
+    });
+
+    let st = stats_text(&srv);
+    assert!(
+        counter_total(&st, "request_panics_total") + counter_total(&st, "plan_panics_total") > 0,
+        "2% of hundreds of engine calls must have panicked and been isolated:\n{st}"
+    );
+    assert_eq!(counter_total(&st, "shards_active"), 2, "no shard may die from an isolatable panic:\n{st}");
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// typed transport errors instead of hangs
+
+#[test]
+fn call_timeout_is_typed_and_retries_a_saturated_queue() {
+    let ds = mini_dataset(23);
+    let srv = Server::spawn(
+        Box::new(SlowInfer::new(8, 2, Duration::from_millis(300))),
+        ServerConfig {
+            queue_cap: 1,
+            seed: 0xFEED,
+            shards: 1,
+            max_batch: 8,
+            ..ServerConfig::new(mini_session_config(ds.train.len()))
+        },
+    );
+    // train through the fast labelled path
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv.call(labelled(0, s)).unwrap() {
+            trained = true;
+        }
+    }
+    assert!(trained);
+
+    // occupy the worker (~300 ms of inference) and the single queue slot
+    let rx1 = srv
+        .try_call(infer_req(0, &ds.test[0]))
+        .unwrap()
+        .expect("empty queue accepts");
+    thread::sleep(Duration::from_millis(100)); // worker has dequeued rx1
+    let rx2 = srv
+        .try_call(infer_req(0, &ds.test[1]))
+        .unwrap()
+        .expect("freed slot accepts");
+
+    // a bounded call on the saturated queue must come back typed — the
+    // pre-supervision server would have blocked here forever
+    let err = srv
+        .call_timeout(infer_req(0, &ds.test[2]), Duration::from_millis(60))
+        .unwrap_err();
+    assert_eq!(err, CallError::Timeout { shard: 0 });
+
+    // with a realistic deadline the same request rides retry/backoff
+    // into the slot the worker frees up
+    match srv
+        .call_timeout(infer_req(0, &ds.test[2]), Duration::from_secs(30))
+        .unwrap()
+    {
+        Response::Prediction { .. } => {}
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // no lost replies: everything accepted earlier was answered too
+    assert!(matches!(rx1.recv().unwrap(), Response::Prediction { .. }));
+    assert!(matches!(rx2.recv().unwrap(), Response::Prediction { .. }));
+    let st = stats_text(&srv);
+    assert!(
+        counter_total(&st, "queue_retries_total") >= 1,
+        "the saturated sends must have been counted:\n{st}"
+    );
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// shard supervision: detect → respawn → rehydrate
+
+#[test]
+fn dead_shard_is_respawned_and_sessions_rehydrated() {
+    silence_injected_panics();
+    let ds = mini_dataset(29);
+    let dir = tmp_dir("respawn");
+    let spec = FaultSpec {
+        seed: 1,
+        kill_after: Some(5),
+        kill_replica: Some(1), // shard 1's original engine, nobody else
+        ..FaultSpec::default()
+    };
+    let srv = Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        server_config(
+            mini_session_config(ds.train.len()),
+            2,
+            Some(CheckpointConfig {
+                dir: dir.clone(),
+                every: 1,
+            }),
+        ),
+    );
+
+    // session 1 lives on shard 1; collect feeds cost no engine calls, so
+    // the kill (5th engine call) hits mid-training on the 20th feed —
+    // after 19 checkpointed collects
+    let mut died = false;
+    let mut trained = false;
+    for s in &ds.train {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match srv.call_timeout(labelled(1, s), Duration::from_millis(500)) {
+                Ok(Response::Trained { .. }) => {
+                    trained = true;
+                    break;
+                }
+                Ok(_) => break,
+                Err(_) => {
+                    // the shard died under this request — keep retrying
+                    // the same sample until the supervisor's replacement
+                    // picks it up
+                    died = true;
+                    assert!(
+                        Instant::now() < deadline,
+                        "shard recovery exceeded the 30 s bound"
+                    );
+                }
+            }
+        }
+    }
+    assert!(died, "the kill schedule must have taken shard 1 down");
+    assert!(
+        trained,
+        "the respawned shard must rehydrate the session and finish training"
+    );
+
+    // the rehydrated session serves
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let scores = loop {
+        match srv.call_timeout(infer_req(1, &ds.test[0]), Duration::from_millis(500)) {
+            Ok(Response::Prediction { scores, .. }) => break scores,
+            Ok(other) => panic!("unexpected {other:?}"),
+            Err(_) => assert!(Instant::now() < deadline, "serving never recovered"),
+        }
+    };
+    assert!(scores.iter().all(|x| x.is_finite()));
+
+    // supervision is visible in the metrics: one death, one respawn,
+    // and the active-shard gauge back at full strength
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let st = stats_text(&srv);
+        if counter_total(&st, "shards_active") == 2 {
+            assert!(counter_total(&st, "shard_deaths_total") >= 1, "{st}");
+            assert!(counter_total(&st, "shard_respawns_total") >= 1, "{st}");
+            assert!(
+                counter_total(&st, "sessions_restored_total") >= 1,
+                "the respawned shard must have rehydrated from the checkpoint:\n{st}"
+            );
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "supervisor never restored 2 live shards:\n{st}"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+    srv.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// durable checkpoints: restart equivalence
+
+#[test]
+fn clean_shutdown_checkpoint_then_restart_is_bitwise_equal() {
+    let ds = mini_dataset(31);
+    let dir = tmp_dir("restart-clean");
+    let feed_at = |i: usize| &ds.train[i % ds.train.len()];
+    let total = 30; // 19 collects + train + 10 streaming folds
+
+    // uninterrupted reference
+    let reference = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, None),
+    );
+    let ref_feeds: Vec<Response> = (0..total)
+        .map(|i| normalize(reference.call(labelled(1, feed_at(i))).unwrap()))
+        .collect();
+    let ref_preds: Vec<Response> = (0..ds.test.len())
+        .map(|i| reference.call(infer_req(1, &ds.test[i])).unwrap())
+        .collect();
+    reference.shutdown();
+
+    // run A: stop mid-stream with a clean shutdown (final checkpoint)
+    let ckpt = CheckpointConfig {
+        dir: dir.clone(),
+        every: 1,
+    };
+    let a = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, Some(ckpt.clone())),
+    );
+    for (i, want) in ref_feeds.iter().enumerate().take(25) {
+        assert_eq!(&normalize(a.call(labelled(1, feed_at(i))).unwrap()), want, "feed {i}");
+    }
+    a.shutdown();
+
+    // run B: restored from the final checkpoint, continues the tail —
+    // every response must be bitwise equal to the uninterrupted run
+    let b = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, Some(ckpt)),
+    );
+    let st = stats_text(&b);
+    assert!(counter_total(&st, "sessions_restored_total") >= 1, "{st}");
+    for (i, want) in ref_feeds.iter().enumerate().skip(25) {
+        assert_eq!(
+            &normalize(b.call(labelled(1, feed_at(i))).unwrap()),
+            want,
+            "restored feed {i} diverged from the uninterrupted run"
+        );
+    }
+    for (i, want) in ref_preds.iter().enumerate() {
+        assert_eq!(
+            &b.call(infer_req(1, &ds.test[i])).unwrap(),
+            want,
+            "restored prediction {i} diverged from the uninterrupted run"
+        );
+    }
+    b.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_then_restart_resumes_at_the_last_checkpoint_boundary() {
+    silence_injected_panics();
+    let ds = mini_dataset(33);
+    let dir = tmp_dir("restart-kill");
+    let feed_at = |i: usize| &ds.train[i % ds.train.len()];
+    let total = 20 + 160; // collect+train, then a long streamed tail
+
+    // uninterrupted reference
+    let reference = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, None),
+    );
+    let ref_feeds: Vec<Response> = (0..total)
+        .map(|i| normalize(reference.call(labelled(1, feed_at(i))).unwrap()))
+        .collect();
+    let ref_preds: Vec<Response> = (0..ds.test.len())
+        .map(|i| reference.call(infer_req(1, &ds.test[i])).unwrap())
+        .collect();
+    reference.shutdown();
+
+    // run A: the kill-only schedule is bitwise transparent until engine
+    // call 200 of shard 1's replica — training costs ~80 calls and each
+    // streamed fold one, so the kill lands somewhere mid-stream; with
+    // `every: 1` the last checkpoint is exactly the state after the
+    // last answered feed
+    let spec = FaultSpec {
+        seed: 2,
+        kill_after: Some(200),
+        kill_replica: Some(1),
+        ..FaultSpec::default()
+    };
+    let ckpt = CheckpointConfig {
+        dir: dir.clone(),
+        every: 1,
+    };
+    let a = Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        server_config(streaming_session_config(ds.train.len()), 2, Some(ckpt.clone())),
+    );
+    let mut failed_at = None;
+    for (i, want) in ref_feeds.iter().enumerate() {
+        match a.call(labelled(1, feed_at(i))) {
+            Ok(resp) => assert_eq!(&normalize(resp), want, "feed {i} before the kill"),
+            Err(_) => {
+                failed_at = Some(i);
+                break;
+            }
+        }
+    }
+    let k = failed_at.expect("the kill schedule must fire within the streamed tail");
+    assert!(k >= 20, "the kill must land after training, not during collect");
+    a.shutdown();
+
+    // run B: a fresh process restores from disk; the client re-sends the
+    // failed request and the whole remaining tail must be bitwise equal
+    // to the uninterrupted run
+    let b = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, Some(ckpt)),
+    );
+    for (i, want) in ref_feeds.iter().enumerate().skip(k) {
+        assert_eq!(
+            &normalize(b.call(labelled(1, feed_at(i))).unwrap()),
+            want,
+            "feed {i} after kill-then-restart diverged from the uninterrupted run"
+        );
+    }
+    for (i, want) in ref_preds.iter().enumerate() {
+        assert_eq!(
+            &b.call(infer_req(1, &ds.test[i])).unwrap(),
+            want,
+            "prediction {i} after kill-then-restart diverged"
+        );
+    }
+    b.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_checkpoint_never_blocks_startup() {
+    let ds = mini_dataset(37);
+    let dir = tmp_dir("corrupt");
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(dir.join("shard-0.ckpt"), b"definitely not a checkpoint").unwrap();
+
+    let ckpt = CheckpointConfig {
+        dir: dir.clone(),
+        every: 4,
+    };
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(mini_session_config(ds.train.len()), 2, Some(ckpt.clone())),
+    );
+    let st = stats_text(&srv);
+    assert!(
+        counter_total(&st, "checkpoint_restore_errors_total") >= 1,
+        "the garbage archive must be counted, not fatal:\n{st}"
+    );
+
+    // cold-start serving works on the very shard whose archive is junk
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv.call(labelled(0, s)).unwrap() {
+            trained = true;
+        }
+    }
+    assert!(trained);
+    assert!(matches!(
+        srv.call(infer_req(0, &ds.test[0])).unwrap(),
+        Response::Prediction { .. }
+    ));
+    srv.shutdown();
+
+    // the clean shutdown replaced the junk with a valid archive: a
+    // second restart restores the trained session and serves immediately
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(mini_session_config(ds.train.len()), 2, Some(ckpt)),
+    );
+    let st = stats_text(&srv);
+    assert!(counter_total(&st, "sessions_restored_total") >= 1, "{st}");
+    assert!(matches!(
+        srv.call(infer_req(0, &ds.test[0])).unwrap(),
+        Response::Prediction { .. }
+    ));
+    srv.shutdown();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// non-finite quarantine
+
+#[test]
+fn nonfinite_streaming_features_are_quarantined_and_healed() {
+    let ds = mini_dataset(41);
+    let spec = FaultSpec {
+        seed: 3,
+        nan_once_at: Some(200), // past training (~80 calls), mid-stream
+        ..FaultSpec::default()
+    };
+    let srv = Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        server_config(streaming_session_config(ds.train.len()), 1, None),
+    );
+    for s in &ds.train {
+        srv.call(labelled(0, s)).unwrap();
+    }
+    // stream past engine call 200: exactly one fold's features come back
+    // NaN and must be quarantined (never folded into the factor), not
+    // crash and not reject
+    for i in 0..160 {
+        let resp = srv.call(labelled(0, &ds.train[i % 20])).unwrap();
+        assert!(
+            !matches!(resp, Response::Rejected(_)),
+            "feed {i} wrongly rejected: {resp:?}"
+        );
+    }
+    // the session self-heals to finite inference; a NaN that slipped
+    // into a served model is caught at the score boundary and repaired
+    // by the next labelled feed's recovery retrain
+    let mut healed = false;
+    for i in 0..10 {
+        match srv.call(infer_req(0, &ds.test[0])).unwrap() {
+            Response::Prediction { scores, .. } => {
+                assert!(scores.iter().all(|x| x.is_finite()));
+                healed = true;
+                break;
+            }
+            Response::Error { .. } => {
+                srv.call(labelled(0, &ds.train[i % 20])).unwrap();
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(healed, "session must recover to finite inference");
+    let st = stats_text(&srv);
+    assert!(
+        counter_total(&st, "nonfinite_quarantined_total") >= 1,
+        "the injected NaN must have been quarantined somewhere:\n{st}"
+    );
+    srv.shutdown();
+}
+
+#[test]
+fn nonfinite_infer_scores_come_back_as_typed_errors() {
+    let ds = mini_dataset(43);
+    let spec = FaultSpec {
+        seed: 5,
+        nan_once_at: Some(200), // past training: lands on one inference
+        ..FaultSpec::default()
+    };
+    let srv = Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        server_config(mini_session_config(ds.train.len()), 1, None),
+    );
+    let mut trained = false;
+    for s in &ds.train {
+        if let Response::Trained { .. } = srv.call(labelled(0, s)).unwrap() {
+            trained = true;
+        }
+    }
+    assert!(trained);
+
+    // after training every engine call is one inference, so exactly one
+    // of these gets the scheduled NaN scores — and must surface as a
+    // typed NonFinite error, with every other answer finite
+    let mut nonfinite = 0;
+    let mut predictions = 0;
+    for i in 0..160 {
+        match srv.call(infer_req(0, &ds.test[i % ds.test.len()])).unwrap() {
+            Response::Prediction { scores, .. } => {
+                assert!(scores.iter().all(|x| x.is_finite()), "infer {i}");
+                predictions += 1;
+            }
+            Response::Error {
+                kind: ErrorKind::NonFinite,
+                ..
+            } => nonfinite += 1,
+            other => panic!("infer {i}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!(nonfinite, 1, "the NaN schedule fires exactly once");
+    assert_eq!(predictions, 159);
+    let st = stats_text(&srv);
+    assert!(counter_total(&st, "nonfinite_quarantined_total") >= 1, "{st}");
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// bounded shutdown
+
+#[test]
+fn shutdown_skips_a_wedged_shard_within_the_drain_deadline() {
+    let ds = mini_dataset(47);
+    let mut cfg = ServerConfig {
+        queue_cap: 8,
+        seed: 0xFEED,
+        shards: 1,
+        max_batch: 8,
+        ..ServerConfig::new(mini_session_config(ds.train.len()))
+    };
+    cfg.drain_timeout = Duration::from_millis(100);
+    let srv = Server::spawn(Box::new(SlowInfer::new(8, 2, Duration::from_secs(2))), cfg);
+    for s in &ds.train {
+        srv.call(labelled(0, s)).unwrap();
+    }
+    // wedge the only shard behind ~6 s of slow inference
+    let pending: Vec<_> = (0..3)
+        .map(|i| {
+            srv.try_call(infer_req(0, &ds.test[i]))
+                .unwrap()
+                .expect("queue has room")
+        })
+        .collect();
+    let metrics = srv.metrics.clone();
+    let t0 = Instant::now();
+    srv.shutdown();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(1500),
+        "shutdown must skip the wedged shard at the 100 ms drain deadline, took {elapsed:?}"
+    );
+    assert!(
+        metrics.counter("shutdown_drain_skipped_total").get() >= 1,
+        "the skipped drain must be counted"
+    );
+    drop(pending);
+}

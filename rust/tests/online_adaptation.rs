@@ -62,11 +62,11 @@ fn drifted_stream_triggers_adapted_and_recovers_without_retrain() {
     let srv = Server::spawn(
         Box::new(NativeEngine::new(8, 2)),
         ServerConfig {
-            session: adapt_session_config(ds.train.len()),
             queue_cap: 64,
             seed: 5,
             shards: 2,
             max_batch: 8,
+            ..ServerConfig::new(adapt_session_config(ds.train.len()))
         },
     );
     let mut trained = false;
@@ -191,11 +191,11 @@ fn quant_engine_recalibrates_through_the_adaptation_loop() {
     let srv = Server::spawn(
         Box::new(QuantEngine::new(8, 2)),
         ServerConfig {
-            session: scfg,
             queue_cap: 64,
             seed: 7,
             shards: 1,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         },
     );
     let mut trained = false;

@@ -297,11 +297,11 @@ fn quant_engine_serves_through_the_sharded_coordinator() {
     scfg.train.res_decay_epochs = vec![2];
     scfg.train.out_decay_epochs = vec![2];
     let cfg = ServerConfig {
-        session: scfg,
         queue_cap: 64,
         seed: 0xFACE,
         shards: 2,
         max_batch: 8,
+        ..ServerConfig::new(scfg)
     };
     // Q6.10 (±32): holds the standardized synthetic inputs' V=2 add
     // tree without front-end scaling, so this is the native server test

@@ -180,13 +180,13 @@ fn coordinator_end_to_end_over_pjrt() {
     let srv = Server::spawn(
         Box::new(PjrtEngine::new(exec)),
         ServerConfig {
-            session: scfg,
             queue_cap: 128,
             seed: 7,
             // PJRT replicas recompile the artifacts per shard; keep the
             // smoke test single-shard
             shards: 1,
             max_batch: 8,
+            ..ServerConfig::new(scfg)
         },
     );
     let mut trained = false;
