@@ -1,0 +1,239 @@
+//! Network edge bench — what the TCP front and session hibernation cost
+//! (DESIGN.md §16).
+//!
+//! Three stages over a loopback [`NetServer`]:
+//!
+//!   * `wire_rtt`        — one framed Infer round-trip on a hot session:
+//!     codec + syscalls + shard queue on an idle server (the latency
+//!     floor every remote client pays);
+//!   * `sustained_hot`   — several client threads hammering resident
+//!     sessions: sustained req/s and exact client-side p99 (measures the
+//!     edge + coordinator under concurrency, no hibernation);
+//!   * `hibernate_churn` — many registered sessions over a small
+//!     resident cap, touched at random so nearly every request pays a
+//!     rehydrate + an eviction's bucket rewrite: sustained req/s and
+//!     p99 of the worst-case cold path.
+//!
+//! Full run registers 10 000 sessions over a 256-session cap;
+//! `DFR_BENCH_SMOKE=1` shrinks that to 200 over 32 for CI. Writes
+//! `results/BENCH_net.json` (the repo-root copy is the committed
+//! snapshot).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use dfr_edge::coordinator::engine::NativeEngine;
+use dfr_edge::coordinator::{
+    Client, HibernateConfig, NetConfig, NetServer, Request, Response, Server, ServerConfig,
+    SessionConfig,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::util::bench::{write_results_file, Bencher};
+use dfr_edge::util::prng::Pcg32;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+const CLIENTS: usize = 4;
+/// Churn sessions start here so they never collide with the hot set.
+const CHURN_BASE: u64 = 1_000;
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+fn p99(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
+    v[((v.len() - 1) as f64 * 0.99) as usize]
+}
+
+/// Drive `client` against `make_req` until the deadline; returns
+/// (request count, per-request latencies).
+fn hammer(
+    client: &mut Client,
+    dur: Duration,
+    mut make_req: impl FnMut() -> Request,
+) -> (u64, Vec<f64>) {
+    let mut lat = Vec::new();
+    let mut n = 0u64;
+    let until = Instant::now() + dur;
+    while Instant::now() < until {
+        let req = make_req();
+        let t0 = Instant::now();
+        let resp = client.call(&req).expect("bench request");
+        lat.push(t0.elapsed().as_secs_f64());
+        n += 1;
+        assert!(
+            !matches!(resp, Response::Rejected(_) | Response::Error { .. }),
+            "bench request failed: {resp:?}"
+        );
+    }
+    (n, lat)
+}
+
+fn main() {
+    let smoke = std::env::var("DFR_BENCH_SMOKE").as_deref() == Ok("1");
+    let (registered, resident, buckets, dur) = if smoke {
+        (200u64, 32usize, 64usize, Duration::from_millis(300))
+    } else {
+        (10_000u64, 256usize, 256usize, Duration::from_secs(3))
+    };
+    let ds: Dataset = synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        0xBE7,
+    );
+    let dir = PathBuf::from(format!(
+        "{}/dfr-bench-net-{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    let mut hib = HibernateConfig::new(&dir);
+    hib.max_resident = resident;
+    hib.buckets = buckets;
+    let mut cfg = ServerConfig {
+        queue_cap: 256,
+        seed: 0xFEED,
+        shards: 1,
+        max_batch: 8,
+        ..ServerConfig::new(mini_session_config(ds.train.len()))
+    };
+    cfg.hibernate = Some(hib);
+    let srv = Arc::new(Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg));
+    let net = NetServer::bind(Arc::clone(&srv), NetConfig::default()).expect("bind loopback");
+    let addr = net.local_addr();
+    println!(
+        "net edge on {addr}: {registered} registered sessions, cap {resident}, \
+         {buckets} store buckets, {CLIENTS} clients, dir {}",
+        dir.display()
+    );
+
+    // hot set: train sessions 0..CLIENTS to Serve over the wire
+    let mut client = Client::connect(addr).expect("connect");
+    for hot in 0..CLIENTS as u64 {
+        for s in &ds.train {
+            client
+                .call(&Request::Labelled {
+                    session: hot,
+                    sample: s.clone(),
+                })
+                .expect("train hot session");
+        }
+    }
+
+    // ---- wire_rtt -------------------------------------------------------
+    let mut b = Bencher::with_target_time(if smoke { 0.02 } else { 0.2 });
+    let probe = ds.test[0].clone();
+    let rtt = b
+        .bench("wire_rtt", || {
+            client
+                .call(&Request::Infer {
+                    session: 0,
+                    sample: probe.clone(),
+                })
+                .expect("rtt infer")
+        })
+        .median;
+    println!("wire_rtt: {rtt:.3e} s");
+
+    // ---- sustained_hot --------------------------------------------------
+    let wall = Instant::now();
+    let per_thread: Vec<(u64, Vec<f64>)> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS as u64)
+            .map(|hot| {
+                let ds = &ds;
+                scope.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect hot client");
+                    let mut i = 0usize;
+                    hammer(&mut c, dur, move || {
+                        i += 1;
+                        Request::Infer {
+                            session: hot,
+                            sample: ds.test[i % ds.test.len()].clone(),
+                        }
+                    })
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("hot client")).collect()
+    });
+    let hot_wall = wall.elapsed().as_secs_f64();
+    let hot_n: u64 = per_thread.iter().map(|(n, _)| n).sum();
+    let hot_lat: Vec<f64> = per_thread.into_iter().flat_map(|(_, l)| l).collect();
+    let hot_rps = hot_n as f64 / hot_wall;
+    let hot_p99 = p99(hot_lat);
+    println!("sustained_hot: {hot_rps:.0} req/s  p99 {hot_p99:.3e} s  ({hot_n} reqs)");
+
+    // ---- hibernate_churn ------------------------------------------------
+    // register the fleet: one Collect-phase sample per session (cheap,
+    // small snapshots); past the cap this already churns the store
+    let reg0 = Instant::now();
+    for id in 0..registered {
+        srv.call(Request::Labelled {
+            session: CHURN_BASE + id,
+            sample: ds.train[0].clone(),
+        })
+        .expect("register session");
+    }
+    println!(
+        "registered {registered} sessions in {:.2} s",
+        reg0.elapsed().as_secs_f64()
+    );
+    // random touches over the whole fleet: with registered >> resident,
+    // almost every request is a rehydrate + an eviction's bucket rewrite
+    let mut rng = Pcg32::seed(0x0E6E);
+    let wall = Instant::now();
+    let (churn_n, churn_lat) = hammer(&mut client, dur, move || Request::Labelled {
+        session: CHURN_BASE + u64::from(rng.next_u32()) % registered,
+        sample: ds.train[1].clone(),
+    });
+    let churn_wall = wall.elapsed().as_secs_f64();
+    let churn_rps = churn_n as f64 / churn_wall;
+    let churn_p99 = p99(churn_lat);
+    println!("hibernate_churn: {churn_rps:.0} req/s  p99 {churn_p99:.3e} s  ({churn_n} reqs)");
+
+    b.write_csv("net_edge.csv").expect("write csv");
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\n  \"scale\": {{\"registered\": {registered}, \"max_resident\": {resident}, \
+         \"buckets\": {buckets}, \"clients\": {CLIENTS}, \"smoke\": {smoke}}},\n  \
+         \"wire_rtt_median_s\": {rtt:.6e},\n  \
+         \"sustained_hot\": {{\"req_per_s\": {hot_rps:.1}, \"p99_s\": {hot_p99:.6e}}},\n  \
+         \"hibernate_churn\": {{\"req_per_s\": {churn_rps:.1}, \"p99_s\": {churn_p99:.6e}}}\n}}\n"
+    );
+    write_results_file("BENCH_net.json", &json).expect("write BENCH_net.json");
+    println!("→ results/BENCH_net.json (copy to repo root to refresh the committed snapshot)");
+
+    drop(net);
+    if let Ok(owned) = Arc::try_unwrap(srv) {
+        owned.shutdown();
+    }
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -360,7 +360,14 @@ pub fn decode_session(data: &[u8]) -> Result<SessionSnapshot, CheckpointError> {
             let beta = r.f32()?;
             let memory_words = r.usize()?;
             let w_tilde = r.f32s()?;
-            if w_tilde.len() != s.saturating_mul(ny) {
+            // checked_mul, not saturating_mul: dims absurd enough to
+            // overflow must be rejected as corruption, not compared
+            // against usize::MAX (which a saturating product would let a
+            // usize::MAX-length claim "match" on narrower targets)
+            let expect = s.checked_mul(ny).ok_or_else(|| {
+                CheckpointError::Invalid(format!("solution dims overflow: {s}·{ny}"))
+            })?;
+            if w_tilde.len() != expect {
                 return Err(CheckpointError::Invalid(format!(
                     "solution length {} != {s}·{ny}",
                     w_tilde.len()
@@ -516,7 +523,8 @@ impl ShardCheckpointer {
                 data: encode_session(&sess.snapshot()),
             })
             .collect();
-        let bytes = write_archive(&entries);
+        let bytes = write_archive(&entries)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         fs::create_dir_all(&self.dir)?;
         let tmp = self.dir.join(format!("shard-{}.ckpt.tmp", self.shard));
         fs::write(&tmp, &bytes)?;
@@ -745,6 +753,36 @@ mod tests {
     }
 
     #[test]
+    fn absurd_solution_dims_are_invalid_not_saturated() {
+        // corruption-matrix case for the saturating_mul bug: a record
+        // claiming s = ny = u32::MAX must decode to Invalid. On 64-bit
+        // targets (2^32-1)^2 still fits usize, so the length-mismatch
+        // check fires; on 32-bit targets checked_mul itself returns None.
+        // The old saturating_mul compared against a clamped product —
+        // on narrow targets a w_tilde of length usize::MAX would have
+        // "matched" instead of being rejected as corrupt.
+        let mut rng = Pcg32::seed(0x51ED);
+        let mut snap = random_snapshot(&mut rng, 11);
+        snap.solution = Some(RidgeSolution {
+            w_tilde: vec![0.0; 4],
+            s: u32::MAX as usize,
+            ny: u32::MAX as usize,
+            beta: 0.01,
+            memory_words: 0,
+        });
+        let bytes = encode_session(&snap);
+        match decode_session(&bytes) {
+            Err(CheckpointError::Invalid(msg)) => {
+                assert!(
+                    msg.contains("overflow") || msg.contains("solution length"),
+                    "{msg}"
+                );
+            }
+            other => panic!("expected Invalid for absurd dims, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn writer_reads_back_and_dedupes_by_mutations() {
         let mut rng = Pcg32::seed(0xACED);
         let dir = std::env::temp_dir().join(format!("dfr-ckpt-test-{}", std::process::id()));
@@ -772,7 +810,8 @@ mod tests {
                     name: "session-8".into(),
                     data: encode_session(&other),
                 },
-            ]),
+            ])
+            .unwrap(),
         )
         .unwrap();
         fs::write(
@@ -780,7 +819,8 @@ mod tests {
             write_archive(&[Entry {
                 name: "session-7".into(),
                 data: encode_session(&fresh),
-            }]),
+            }])
+            .unwrap(),
         )
         .unwrap();
         // plus one garbage archive that must be skipped, not fatal

@@ -1,0 +1,663 @@
+//! Session hibernation: keep only the hot set resident, park the rest
+//! on disk (DESIGN.md §16).
+//!
+//! The paper's target is an edge box serving *many mostly-idle*
+//! deployments: per-session state is deliberately small (ring buffer,
+//! packed Cholesky factor, generation counters — see
+//! `SessionSnapshot`), so a session that has gone cold can be
+//! serialized out and brought back later, bitwise-identically, for the
+//! price of one disk round-trip. Each shard owns a
+//! [`HibernationStore`] under `<dir>/shard-<i>/` and a
+//! [`ShardHibernator`] policy head that decides *when* to park:
+//!
+//! - **capacity (LRU):** after every drain cycle the shard calls
+//!   [`ShardHibernator::enforce_cap`]; while more than `max_resident`
+//!   sessions are resident, the least-recently-touched one is
+//!   snapshotted through the PR-7 checkpoint codec (`encode_session`,
+//!   CRC-guarded) into the store and dropped from the map.
+//! - **idle clock:** with `hibernate_after` set, the shard's `recv`
+//!   gains a timeout; on each quiet tick
+//!   [`ShardHibernator::sweep_idle`] parks every session idle longer
+//!   than the threshold.
+//!
+//! Rehydration is touch-driven: before a drain batch is planned, any
+//! requested session that is not resident but known to the store is
+//! restored via `Session::restore` (the same path checkpoint recovery
+//! uses), so the response stream of a session that hibernated is
+//! **bitwise equal** to one that never left memory
+//! (`tests/hibernation.rs`).
+//!
+//! # Store layout and the zip caps
+//!
+//! Snapshots live as `session-<id>` entries inside stored-zip archives
+//! (`bucket-<b>.hib`), the same dependency-free container the
+//! checkpoints use. The classic zip format caps an archive at 65 535
+//! entries / 4 GiB — limits `zipstore::write_archive` now *refuses*
+//! rather than truncates — so the store shards ids across `buckets`
+//! archives by a mixed hash. Buckets also bound the rewrite cost of
+//! one hibernate/take to `O(bucket size)`, not `O(fleet)`.
+//!
+//! # Interaction with checkpoints and supervision
+//!
+//! A session id must live in exactly one place. On restore (spawn or
+//! supervisor respawn), ids present in both a checkpoint archive and
+//! the hibernation store are resolved by
+//! [`ShardHibernator::resolve_restore_conflict`]: the higher
+//! `mutations` stamp wins and the hibernated copy is always removed
+//! (ties keep the checkpoint copy — shutdown writes the final
+//! checkpoint *before* `hibernate_all`, so equal stamps are the same
+//! state). Checkpoint archives continue to cover only *resident*
+//! sessions; a hibernated session's durable copy **is** its store
+//! entry.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::checkpoint::{decode_session, encode_session};
+use super::session::{Session, SessionConfig, SessionSnapshot};
+use crate::data::zipstore::{read_archive, write_archive, Entry};
+use crate::log_warn;
+use crate::util::metrics::{Counter, Registry};
+
+/// Hibernation policy knobs (server-wide; each shard applies them to
+/// its own session map).
+#[derive(Clone, Debug)]
+pub struct HibernateConfig {
+    /// Store root; each shard writes under `<dir>/shard-<i>/`.
+    pub dir: PathBuf,
+    /// Per-shard resident-session cap; beyond it the least-recently
+    /// touched sessions hibernate. `usize::MAX` disables the LRU cap.
+    pub max_resident: usize,
+    /// Park sessions idle longer than this (None disables the idle
+    /// clock; the shard loop then keeps its plain blocking `recv`).
+    pub hibernate_after: Option<Duration>,
+    /// Archives per shard store. More buckets → smaller rewrite units
+    /// and more headroom under the 65 535-entry zip cap.
+    pub buckets: usize,
+}
+
+impl HibernateConfig {
+    /// Cap/idle-clock both disabled; 64 buckets.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        HibernateConfig {
+            dir: dir.into(),
+            max_resident: usize::MAX,
+            hibernate_after: None,
+            buckets: 64,
+        }
+    }
+}
+
+fn invalid<E: std::fmt::Display>(e: E) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// One shard's on-disk parking lot: sessions as `session-<id>` entries
+/// spread over `bucket-<b>.hib` stored-zip archives, plus an in-memory
+/// id index built by scanning the directory once at open.
+pub struct HibernationStore {
+    dir: PathBuf,
+    buckets: usize,
+    /// id → bucket it currently lives in (scan result for pre-existing
+    /// entries, so a changed `buckets` knob never strands a session)
+    index: BTreeMap<u64, usize>,
+}
+
+impl HibernationStore {
+    /// Open (creating if absent) a shard's store and scan its bucket
+    /// archives to index the parked ids. Returns the number of
+    /// unreadable archives/entries skipped — corruption is counted,
+    /// never fatal, matching `checkpoint::load_all`.
+    pub fn open(root: &Path, shard: usize, buckets: usize) -> io::Result<(Self, u64)> {
+        let dir = root.join(format!("shard-{shard}"));
+        fs::create_dir_all(&dir)?;
+        let mut index = BTreeMap::new();
+        let mut corrupt = 0u64;
+        for dirent in fs::read_dir(&dir)?.flatten() {
+            let path = dirent.path();
+            let Some(bucket) = bucket_of_path(&path) else {
+                continue;
+            };
+            let Ok(bytes) = fs::read(&path) else {
+                corrupt += 1;
+                continue;
+            };
+            let entries = match read_archive(&bytes) {
+                Ok(entries) => entries,
+                Err(_) => {
+                    corrupt += 1;
+                    continue;
+                }
+            };
+            for entry in entries {
+                match entry.name.strip_prefix("session-").and_then(|s| s.parse().ok()) {
+                    Some(id) => {
+                        index.insert(id, bucket);
+                    }
+                    None => corrupt += 1,
+                }
+            }
+        }
+        Ok((
+            HibernationStore {
+                dir,
+                buckets: buckets.max(1),
+                index,
+            },
+            corrupt,
+        ))
+    }
+
+    /// Which bucket a *new* entry for `id` goes to. The id is mixed
+    /// first (splitmix64 finalizer) so the server's `id % shards`
+    /// routing stride cannot skew the distribution.
+    fn bucket_of(&self, id: u64) -> usize {
+        let mut x = id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x % self.buckets as u64) as usize
+    }
+
+    fn bucket_path(&self, bucket: usize) -> PathBuf {
+        self.dir.join(format!("bucket-{bucket}.hib"))
+    }
+
+    /// Atomically rewrite one bucket archive (tmp + rename, like the
+    /// checkpoint writer); an empty bucket is deleted instead.
+    fn rewrite_bucket(&self, bucket: usize, entries: &[Entry]) -> io::Result<()> {
+        let path = self.bucket_path(bucket);
+        if entries.is_empty() {
+            match fs::remove_file(&path) {
+                Ok(()) => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(()),
+                Err(e) => return Err(e),
+            }
+        }
+        let bytes = write_archive(entries).map_err(invalid)?;
+        let tmp = path.with_extension("hib.tmp");
+        fs::write(&tmp, &bytes)?;
+        fs::rename(&tmp, &path)
+    }
+
+    fn read_bucket(&self, bucket: usize) -> io::Result<Vec<Entry>> {
+        match fs::read(self.bucket_path(bucket)) {
+            Ok(bytes) => read_archive(&bytes).map_err(invalid),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Park one snapshot. On any error the store is unchanged (the
+    /// caller keeps the session resident) — a failed rename leaves the
+    /// previous bucket contents intact.
+    pub fn hibernate(&mut self, snap: &SessionSnapshot) -> io::Result<()> {
+        let bucket = match self.index.get(&snap.id) {
+            Some(&b) => b,
+            None => self.bucket_of(snap.id),
+        };
+        let mut entries = self.read_bucket(bucket)?;
+        let name = format!("session-{}", snap.id);
+        entries.retain(|e| e.name != name);
+        entries.push(Entry {
+            name,
+            data: encode_session(snap),
+        });
+        self.rewrite_bucket(bucket, &entries)?;
+        self.index.insert(snap.id, bucket);
+        Ok(())
+    }
+
+    /// Remove and return `id`'s snapshot. `Ok(None)` when the store
+    /// does not hold it. The entry leaves the store even when its
+    /// payload later fails to restore — a corrupt record must not be
+    /// rehydrate-retried forever.
+    pub fn take(&mut self, id: u64) -> io::Result<Option<SessionSnapshot>> {
+        let Some(&bucket) = self.index.get(&id) else {
+            return Ok(None);
+        };
+        let mut entries = self.read_bucket(bucket)?;
+        let name = format!("session-{id}");
+        let Some(pos) = entries.iter().position(|e| e.name == name) else {
+            self.index.remove(&id);
+            return Ok(None);
+        };
+        let entry = entries.swap_remove(pos);
+        self.rewrite_bucket(bucket, &entries)?;
+        self.index.remove(&id);
+        let snap = decode_session(&entry.data).map_err(invalid)?;
+        if snap.id != id {
+            return Err(invalid(format!(
+                "store entry {name} decodes to session {}",
+                snap.id
+            )));
+        }
+        Ok(Some(snap))
+    }
+
+    /// Is `id` parked here?
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Number of parked sessions.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+}
+
+fn bucket_of_path(path: &Path) -> Option<usize> {
+    let name = path.file_name()?.to_str()?;
+    name.strip_prefix("bucket-")?.strip_suffix(".hib")?.parse().ok()
+}
+
+/// Per-shard hibernation policy head: owns the store, the LRU touch
+/// clock, and the shard-labelled metric instruments.
+pub struct ShardHibernator {
+    store: HibernationStore,
+    shard: usize,
+    max_resident: usize,
+    hibernate_after: Option<Duration>,
+    /// monotonic touch stamp; higher = more recent
+    clock: u64,
+    /// resident id → (touch stamp, wall time of last touch)
+    touch: HashMap<u64, (u64, Instant)>,
+    hibernated_total: Arc<Counter>,
+    rehydrated_total: Arc<Counter>,
+    resident_gauge: Arc<Counter>,
+    hibernated_gauge: Arc<Counter>,
+    hibernate_errors: Arc<Counter>,
+    rehydrate_errors: Arc<Counter>,
+}
+
+impl ShardHibernator {
+    /// Open the shard's store and register its labelled instruments.
+    /// Unreadable store archives count `rehydrate_errors_total` — the
+    /// sessions inside are lost to the index, the server still starts.
+    pub fn new(cfg: &HibernateConfig, shard: usize, metrics: &Registry) -> io::Result<Self> {
+        let (store, corrupt) = HibernationStore::open(&cfg.dir, shard, cfg.buckets)?;
+        let shard_label = shard.to_string();
+        let labels: [(&str, &str); 1] = [("shard", shard_label.as_str())];
+        let h = ShardHibernator {
+            store,
+            shard,
+            max_resident: cfg.max_resident.max(1),
+            hibernate_after: cfg.hibernate_after,
+            clock: 0,
+            touch: HashMap::new(),
+            hibernated_total: metrics.counter_labelled("sessions_hibernated_total", &labels),
+            rehydrated_total: metrics.counter_labelled("sessions_rehydrated_total", &labels),
+            resident_gauge: metrics.counter_labelled("resident_sessions", &labels),
+            hibernated_gauge: metrics.counter_labelled("hibernated_sessions", &labels),
+            hibernate_errors: metrics.counter_labelled("hibernate_errors_total", &labels),
+            rehydrate_errors: metrics.counter_labelled("rehydrate_errors_total", &labels),
+        };
+        if corrupt > 0 {
+            h.rehydrate_errors.add(corrupt);
+            log_warn!(
+                "shard {shard}: {corrupt} corrupt hibernation record(s) under {:?}",
+                cfg.dir
+            );
+        }
+        h.hibernated_gauge.set(h.store.len() as u64);
+        Ok(h)
+    }
+
+    /// The shard loop's `recv_timeout` period when the idle clock is
+    /// on: half the idle threshold (floored at 50 ms) keeps the sweep
+    /// error under ~1.5× `hibernate_after` without busy-waking.
+    pub fn sweep_interval(&self) -> Option<Duration> {
+        self.hibernate_after
+            .map(|d| (d / 2).max(Duration::from_millis(50)))
+    }
+
+    /// Record that `id` was touched by a request this cycle.
+    pub fn note_touch(&mut self, id: u64) {
+        self.clock += 1;
+        self.touch.insert(id, (self.clock, Instant::now()));
+    }
+
+    /// Is `id` parked in this shard's store?
+    pub fn knows(&self, id: u64) -> bool {
+        self.store.contains(id)
+    }
+
+    /// Bring a parked session back. `None` means the store record was
+    /// missing or failed to restore (counted `rehydrate_errors_total`);
+    /// the caller then treats the id as a brand-new session.
+    pub fn rehydrate(&mut self, id: u64, cfg: &SessionConfig) -> Option<Session> {
+        let snap = match self.store.take(id) {
+            Ok(Some(snap)) => snap,
+            Ok(None) => return None,
+            Err(e) => {
+                self.rehydrate_errors.inc();
+                log_warn!("shard {}: rehydrating session {id} failed: {e}", self.shard);
+                return None;
+            }
+        };
+        match Session::restore(snap, cfg.clone()) {
+            Ok(sess) => {
+                self.rehydrated_total.inc();
+                self.hibernated_gauge.set(self.store.len() as u64);
+                self.note_touch(id);
+                Some(sess)
+            }
+            Err(e) => {
+                self.rehydrate_errors.inc();
+                self.hibernated_gauge.set(self.store.len() as u64);
+                log_warn!(
+                    "shard {}: dropping unrestorable hibernated session {id}: {e}",
+                    self.shard
+                );
+                None
+            }
+        }
+    }
+
+    /// Resolve a checkpoint-vs-store collision at restore time: the
+    /// higher `mutations` stamp wins, and the hibernated copy always
+    /// leaves the store (an id lives in exactly one place). Ties keep
+    /// the checkpoint copy — shutdown checkpoints before it parks, so
+    /// equal stamps are the same bytes.
+    pub fn resolve_restore_conflict(&mut self, snap: SessionSnapshot) -> SessionSnapshot {
+        if !self.store.contains(snap.id) {
+            return snap;
+        }
+        match self.store.take(snap.id) {
+            Ok(Some(parked)) => {
+                self.hibernated_gauge.set(self.store.len() as u64);
+                if parked.mutations > snap.mutations {
+                    parked
+                } else {
+                    snap
+                }
+            }
+            Ok(None) => snap,
+            Err(e) => {
+                self.rehydrate_errors.inc();
+                self.hibernated_gauge.set(self.store.len() as u64);
+                log_warn!(
+                    "shard {}: conflict check for session {} failed: {e}",
+                    self.shard,
+                    snap.id
+                );
+                snap
+            }
+        }
+    }
+
+    /// Park one resident session. Returns `true` on success; on a
+    /// store error the session stays resident (counted
+    /// `hibernate_errors_total`).
+    fn park(&mut self, sessions: &mut BTreeMap<u64, Session>, id: u64) -> bool {
+        let Some(sess) = sessions.get(&id) else {
+            return false;
+        };
+        match self.store.hibernate(&sess.snapshot()) {
+            Ok(()) => {
+                sessions.remove(&id);
+                self.touch.remove(&id);
+                self.hibernated_total.inc();
+                self.hibernated_gauge.set(self.store.len() as u64);
+                true
+            }
+            Err(e) => {
+                self.hibernate_errors.inc();
+                log_warn!("shard {}: hibernating session {id} failed: {e}", self.shard);
+                false
+            }
+        }
+    }
+
+    /// LRU eviction down to `max_resident`: called after every drain
+    /// cycle. Sessions never touched this process (e.g. restored at
+    /// spawn and quiet since) rank coldest.
+    pub fn enforce_cap(&mut self, sessions: &mut BTreeMap<u64, Session>) {
+        while sessions.len() > self.max_resident {
+            let coldest = sessions
+                .keys()
+                .min_by_key(|id| self.touch.get(id).map_or(0, |&(c, _)| c))
+                .copied();
+            let Some(id) = coldest else {
+                break;
+            };
+            if !self.park(sessions, id) {
+                // store trouble: stop evicting this cycle rather than
+                // spinning on the same failing write
+                break;
+            }
+        }
+    }
+
+    /// Idle-clock sweep: park every session whose last touch is older
+    /// than `hibernate_after`. No-op when the idle clock is off.
+    pub fn sweep_idle(&mut self, sessions: &mut BTreeMap<u64, Session>) {
+        let Some(after) = self.hibernate_after else {
+            return;
+        };
+        let idle: Vec<u64> = sessions
+            .keys()
+            .filter(|id| {
+                self.touch
+                    .get(id)
+                    .map_or(true, |&(_, at)| at.elapsed() >= after)
+            })
+            .copied()
+            .collect();
+        for id in idle {
+            if !self.park(sessions, id) {
+                break;
+            }
+        }
+    }
+
+    /// Park everything (the shutdown drain marker): the shard has just
+    /// written its final checkpoint, so ties at the next restore keep
+    /// the checkpoint copy of anything that fails to park here.
+    pub fn hibernate_all(&mut self, sessions: &mut BTreeMap<u64, Session>) {
+        let ids: Vec<u64> = sessions.keys().copied().collect();
+        for id in ids {
+            if !self.park(sessions, id) {
+                break;
+            }
+        }
+    }
+
+    /// Publish the resident level (single writer: the owning shard).
+    pub fn report_resident(&self, resident: usize) {
+        self.resident_gauge.set(resident as u64);
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dfr-hib-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn session_cfg() -> SessionConfig {
+        let mut cfg = SessionConfig::new(2, 2, 8);
+        cfg.train.nx = 6;
+        cfg.train.epochs = 2;
+        cfg
+    }
+
+    fn fresh_session(id: u64) -> Session {
+        Session::new(id, session_cfg(), 0xFEED ^ id)
+    }
+
+    #[test]
+    fn store_roundtrips_and_indexes() {
+        let dir = tmpdir("roundtrip");
+        let (mut store, corrupt) = HibernationStore::open(&dir, 0, 4).unwrap();
+        assert_eq!(corrupt, 0);
+        assert!(store.is_empty());
+        for id in [3u64, 7, 11] {
+            store.hibernate(&fresh_session(id).snapshot()).unwrap();
+        }
+        assert_eq!(store.len(), 3);
+        assert!(store.contains(7));
+        assert!(!store.contains(4));
+        let snap = store.take(7).unwrap().unwrap();
+        assert_eq!(snap.id, 7);
+        assert_eq!(store.len(), 2);
+        assert!(store.take(7).unwrap().is_none());
+        // a reopened store rebuilds the index from the archives
+        drop(store);
+        let (store2, corrupt2) = HibernationStore::open(&dir, 0, 4).unwrap();
+        assert_eq!(corrupt2, 0);
+        assert_eq!(store2.len(), 2);
+        assert!(store2.contains(3) && store2.contains(11));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rehibernate_replaces_not_duplicates() {
+        let dir = tmpdir("replace");
+        let (mut store, _) = HibernationStore::open(&dir, 0, 2).unwrap();
+        let mut snap = fresh_session(5).snapshot();
+        store.hibernate(&snap).unwrap();
+        snap.mutations = 99;
+        store.hibernate(&snap).unwrap();
+        assert_eq!(store.len(), 1);
+        let back = store.take(5).unwrap().unwrap();
+        assert_eq!(back.mutations, 99);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_with_different_bucket_count_finds_entries() {
+        // index maps ids to the bucket they actually live in, so a
+        // changed `buckets` knob never strands old entries
+        let dir = tmpdir("rebucket");
+        let (mut store, _) = HibernationStore::open(&dir, 0, 16).unwrap();
+        for id in 0..10u64 {
+            store.hibernate(&fresh_session(id).snapshot()).unwrap();
+        }
+        drop(store);
+        let (mut store2, _) = HibernationStore::open(&dir, 0, 2).unwrap();
+        assert_eq!(store2.len(), 10);
+        for id in 0..10u64 {
+            assert_eq!(store2.take(id).unwrap().unwrap().id, id);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_bucket_is_counted_not_fatal() {
+        let dir = tmpdir("corrupt");
+        let (mut store, _) = HibernationStore::open(&dir, 0, 1).unwrap();
+        store.hibernate(&fresh_session(1).snapshot()).unwrap();
+        drop(store);
+        fs::write(dir.join("shard-0").join("bucket-0.hib"), b"garbage").unwrap();
+        let (store2, corrupt) = HibernationStore::open(&dir, 0, 1).unwrap();
+        assert_eq!(corrupt, 1);
+        assert_eq!(store2.len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_cap_parks_the_coldest() {
+        let dir = tmpdir("lru");
+        let metrics = Registry::default();
+        let mut cfg = HibernateConfig::new(&dir);
+        cfg.max_resident = 2;
+        let mut h = ShardHibernator::new(&cfg, 0, &metrics).unwrap();
+        let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+        for id in [1u64, 2, 3] {
+            sessions.insert(id, fresh_session(id));
+            h.note_touch(id);
+        }
+        // re-touch 1 so 2 is the coldest
+        h.note_touch(1);
+        h.enforce_cap(&mut sessions);
+        assert_eq!(sessions.len(), 2);
+        assert!(!sessions.contains_key(&2), "coldest must hibernate");
+        assert!(h.knows(2));
+        assert_eq!(metrics.counter_total("sessions_hibernated_total"), 1);
+        // touching 2 again rehydrates it bit-for-bit
+        let back = h.rehydrate(2, &session_cfg()).unwrap();
+        assert_eq!(back.snapshot(), fresh_session(2).snapshot());
+        assert_eq!(metrics.counter_total("sessions_rehydrated_total"), 1);
+        assert!(!h.knows(2));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn conflict_resolution_prefers_higher_mutations() {
+        let dir = tmpdir("conflict");
+        let metrics = Registry::default();
+        let cfg = HibernateConfig::new(&dir);
+        let mut h = ShardHibernator::new(&cfg, 0, &metrics).unwrap();
+        let mut parked = fresh_session(9).snapshot();
+        parked.mutations = 10;
+        h.store.hibernate(&parked).unwrap();
+        // checkpoint copy staler → parked copy wins, store emptied
+        let mut ckpt = fresh_session(9).snapshot();
+        ckpt.mutations = 4;
+        let won = h.resolve_restore_conflict(ckpt);
+        assert_eq!(won.mutations, 10);
+        assert!(!h.knows(9));
+        // tie → checkpoint copy wins, store still emptied
+        let mut parked2 = fresh_session(9).snapshot();
+        parked2.mutations = 7;
+        h.store.hibernate(&parked2).unwrap();
+        let mut ckpt2 = fresh_session(9).snapshot();
+        ckpt2.mutations = 7;
+        ckpt2.quarantines = 42; // marker to tell the copies apart
+        let won2 = h.resolve_restore_conflict(ckpt2);
+        assert_eq!(won2.quarantines, 42);
+        assert!(!h.knows(9));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn idle_sweep_parks_untouched_sessions() {
+        let dir = tmpdir("idle");
+        let metrics = Registry::default();
+        let mut cfg = HibernateConfig::new(&dir);
+        cfg.hibernate_after = Some(Duration::from_millis(1));
+        let mut h = ShardHibernator::new(&cfg, 0, &metrics).unwrap();
+        assert!(h.sweep_interval().unwrap() >= Duration::from_millis(50));
+        let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+        sessions.insert(4, fresh_session(4));
+        h.note_touch(4);
+        std::thread::sleep(Duration::from_millis(5));
+        h.sweep_idle(&mut sessions);
+        assert!(sessions.is_empty());
+        assert!(h.knows(4));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hibernate_all_empties_the_map() {
+        let dir = tmpdir("all");
+        let metrics = Registry::default();
+        let cfg = HibernateConfig::new(&dir);
+        let mut h = ShardHibernator::new(&cfg, 3, &metrics).unwrap();
+        let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+        for id in 0..5u64 {
+            sessions.insert(id, fresh_session(id));
+        }
+        h.hibernate_all(&mut sessions);
+        assert!(sessions.is_empty());
+        assert_eq!(h.store.len(), 5);
+        h.report_resident(sessions.len());
+        assert_eq!(metrics.counter_total("resident_sessions"), 0);
+        assert_eq!(metrics.counter_total("hibernated_sessions"), 5);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

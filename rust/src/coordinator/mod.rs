@@ -21,7 +21,10 @@
 //! are respawned by a supervisor, and session state survives restarts
 //! through [`checkpoint`] — see DESIGN.md §15 for the fault model and
 //! `tests/fault_injection.rs` for the deterministic harness built on
-//! [`faulty::FaultyEngine`].
+//! [`faulty::FaultyEngine`]. Cold sessions can be parked off-heap under
+//! an LRU cap / idle clock by [`hibernate`] (zipstore-backed, same
+//! record format as checkpoints), and remote clients reach the whole
+//! thing through the framed TCP edge in [`net`] — see DESIGN.md §16.
 //
 // The serving path must never take the process down on a recoverable
 // fault, so panicking escape hatches are banned module-wide outside
@@ -31,6 +34,8 @@
 pub mod checkpoint;
 pub mod engine;
 pub mod faulty;
+pub mod hibernate;
+pub mod net;
 pub mod protocol;
 pub mod server;
 pub mod session;
@@ -41,6 +46,11 @@ pub use engine::{
     ReservoirUpdate,
 };
 pub use faulty::{silence_injected_panics, FaultSpec, FaultyEngine, InjectedPanic, ShardKill};
-pub use protocol::{ErrorKind, Request, Response};
+pub use hibernate::{HibernateConfig, HibernationStore, ShardHibernator};
+pub use net::{Client, ClientError, FrameError, NetConfig, NetServer};
+pub use protocol::{
+    decode_request, decode_response, encode_request, encode_response, ErrorKind, Request, Response,
+    WireError,
+};
 pub use server::{CallError, Server, ServerConfig};
 pub use session::{FeedOutcome, InferError, Phase, Session, SessionConfig, SessionSnapshot};

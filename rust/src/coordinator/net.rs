@@ -1,0 +1,582 @@
+//! TCP network edge: a dependency-light, blocking-accept,
+//! thread-per-connection front over the coordinator.
+//!
+//! The edge speaks a length-prefixed binary framing over the
+//! [`protocol`](super::protocol) wire codec:
+//!
+//! ```text
+//! frame := magic "DF" (2 B) | version u8 (=1) | kind u8 | len u32 LE | payload
+//! ```
+//!
+//! `kind` is 0 for request payloads and 1 for response payloads; `len`
+//! counts payload bytes only, bounded by [`NetConfig::max_frame`] so a
+//! hostile length prefix cannot force an allocation. The header is
+//! parsed by the pure [`parse_frame_header`] so the bounds are unit
+//! testable without a socket.
+//!
+//! Error surfaces are deliberately two-tier:
+//!
+//! * **frame-level** problems (bad magic, unknown version, oversized
+//!   length) mean the byte stream can no longer be trusted to be
+//!   aligned on frame boundaries — the connection is answered with a
+//!   final [`Response::Rejected`] and closed;
+//! * **payload-level** problems (a frame that arrived intact but whose
+//!   payload fails [`decode_request`]) keep the connection open: the
+//!   framing is still aligned, so the edge answers a typed
+//!   [`Response::Rejected`] and reads the next frame.
+//!
+//! Requests are forwarded through [`Server::call_timeout`], so shard
+//! backpressure and supervision failures
+//! ([`CallError`](super::server::CallError)) become
+//! wire-visible `Rejected("transport: …")` responses instead of hung
+//! sockets. `Request::Shutdown` has no wire tag at all (the codec
+//! refuses it) and the server additionally rejects it from every public
+//! call path, so remote bytes can never inject a drain marker.
+//!
+//! The design is thread-per-connection on a nonblocking accept loop:
+//! the intended deployment is an edge box with tens of clients, not a
+//! C10K gateway, and blocking I/O keeps the code free of poll-loop
+//! state machines (and of dependencies — the whole edge is `std::net`).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::protocol::{
+    decode_request, decode_response, encode_request, encode_response, Request, Response, WireError,
+};
+use super::server::Server;
+use crate::log_warn;
+use crate::util::metrics::{Counter, Histogram};
+
+/// First two bytes of every frame.
+pub const FRAME_MAGIC: [u8; 2] = *b"DF";
+/// Only framing version this build speaks.
+pub const FRAME_VERSION: u8 = 1;
+/// Frame carries a request payload.
+pub const KIND_REQUEST: u8 = 0;
+/// Frame carries a response payload.
+pub const KIND_RESPONSE: u8 = 1;
+/// Bytes in the fixed frame header.
+pub const FRAME_HEADER_LEN: usize = 8;
+
+/// Why a frame header was refused. Frame-level errors are terminal for
+/// the connection: once framing is suspect the stream cannot be
+/// realigned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// First two bytes were not `"DF"`.
+    BadMagic([u8; 2]),
+    /// Version byte this build does not speak.
+    BadVersion(u8),
+    /// Kind byte outside `{request, response}`.
+    BadKind(u8),
+    /// Declared payload length exceeds the configured bound.
+    Oversized { len: u32, max: u32 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?} (expected \"DF\")"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (this build speaks 1)")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max}-byte bound")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Validate an 8-byte frame header and return `(kind, payload_len)`.
+///
+/// Pure so the framing bounds are testable without sockets; both the
+/// server edge and [`Client`] go through this.
+pub fn parse_frame_header(h: &[u8; FRAME_HEADER_LEN], max: u32) -> Result<(u8, u32), FrameError> {
+    if h[0..2] != FRAME_MAGIC {
+        return Err(FrameError::BadMagic([h[0], h[1]]));
+    }
+    if h[2] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(h[2]));
+    }
+    let kind = h[3];
+    if kind != KIND_REQUEST && kind != KIND_RESPONSE {
+        return Err(FrameError::BadKind(kind));
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    if len > max {
+        return Err(FrameError::Oversized { len, max });
+    }
+    Ok((kind, len))
+}
+
+/// Wrap a payload in a frame header.
+fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Knobs for the network edge.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Bind address; port 0 asks the OS for an ephemeral port (read it
+    /// back with [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Per-request budget handed to [`Server::call_timeout`]; on expiry
+    /// the client sees `Rejected("transport: …")` rather than a stuck
+    /// socket.
+    pub call_timeout: Duration,
+    /// Upper bound on a frame payload; matches the codec's own
+    /// per-vector cap by default.
+    pub max_frame: u32,
+    /// Connections beyond this are answered with a framed `Rejected`
+    /// and closed before a handler thread is spawned.
+    pub max_conns: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            call_timeout: Duration::from_secs(5),
+            max_frame: 1 << 24,
+            max_conns: 1024,
+        }
+    }
+}
+
+/// Counter handles the edge touches on the hot path, resolved once at
+/// bind time.
+struct NetMetrics {
+    connections: Arc<Counter>,
+    conn_rejected: Arc<Counter>,
+    requests: Arc<Counter>,
+    frame_errors: Arc<Counter>,
+    decode_errors: Arc<Counter>,
+    active_gauge: Arc<Counter>,
+    latency: Arc<Histogram>,
+}
+
+/// The listening edge. Owns the accept thread and every per-connection
+/// handler thread; dropping it (or calling [`NetServer::shutdown`])
+/// stops the accept loop and joins all of them.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving requests against `server`.
+    ///
+    /// The accept loop runs nonblocking with a 10 ms stop-flag poll, so
+    /// shutdown never hangs on a quiet listener. Each accepted
+    /// connection gets its own handler thread; past `max_conns` the
+    /// connection is refused with a framed [`Response::Rejected`].
+    pub fn bind(server: Arc<Server>, cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let net = Arc::new(NetMetrics {
+            connections: server.metrics.counter("net_connections_total"),
+            conn_rejected: server.metrics.counter("net_conn_rejected_total"),
+            requests: server.metrics.counter("net_requests_total"),
+            frame_errors: server.metrics.counter("net_frame_errors_total"),
+            decode_errors: server.metrics.counter("net_decode_errors_total"),
+            active_gauge: server.metrics.counter("net_active_connections"),
+            latency: server.metrics.histogram("net_request_latency"),
+        });
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let workers = Arc::clone(&workers);
+            thread::Builder::new()
+                .name("dfr-net-accept".to_string())
+                .spawn(move || accept_loop(listener, server, cfg, stop, workers, net))?
+        };
+        Ok(NetServer {
+            addr,
+            stop,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake blocked reads via the stop flag, and join
+    /// the accept thread plus every handler. Idempotent; also run by
+    /// `Drop`. Does not shut the coordinator down — that stays the
+    /// owner's [`Server::shutdown`] call.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let drained = match self.workers.lock() {
+            Ok(mut g) => std::mem::take(&mut *g),
+            Err(p) => std::mem::take(&mut *p.into_inner()),
+        };
+        for h in drained {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    net: Arc<NetMetrics>,
+) {
+    // handler threads self-report here so the cap counts live
+    // connections, not spawned-ever
+    let active = Arc::new(AtomicUsize::new(0));
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(e) => {
+                log_warn!("net: accept failed: {e}");
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        net.connections.inc();
+        if active.load(Ordering::Relaxed) >= cfg.max_conns {
+            net.conn_rejected.inc();
+            refuse(stream, "server at connection capacity");
+            continue;
+        }
+        active.fetch_add(1, Ordering::Relaxed);
+        net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+        let handle = {
+            let server = Arc::clone(&server);
+            let cfg = cfg.clone();
+            let stop = Arc::clone(&stop);
+            let net = Arc::clone(&net);
+            let active = Arc::clone(&active);
+            thread::Builder::new()
+                .name("dfr-net-conn".to_string())
+                .spawn(move || {
+                    handle_conn(stream, &server, &cfg, &stop, &net);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                    net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+                })
+        };
+        match handle {
+            Ok(h) => {
+                let mut guard = match workers.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                // reap handlers that already returned so the vec tracks
+                // live connections, not connection history
+                guard.retain(|w| !w.is_finished());
+                guard.push(h);
+            }
+            Err(e) => {
+                active.fetch_sub(1, Ordering::Relaxed);
+                net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+                log_warn!("net: could not spawn connection handler: {e}");
+            }
+        }
+    }
+}
+
+/// Best-effort framed rejection on a connection we will not serve.
+fn refuse(mut stream: TcpStream, msg: &str) {
+    if let Ok(payload) = encode_response(&Response::Rejected(msg.to_string())) {
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+        let _ = stream.write_all(&frame(KIND_RESPONSE, &payload));
+    }
+}
+
+enum ReadOutcome {
+    /// Buffer filled.
+    Filled,
+    /// Clean close on a frame boundary, or stop/IO error — either way
+    /// the connection is done.
+    Closed,
+}
+
+/// Fill `buf` from the stream, riding out read-timeout wakeups (used to
+/// poll the stop flag). A clean EOF is only acceptable at offset 0 of a
+/// header read (`eof_ok_at_start`) — anywhere else the peer hung up
+/// mid-frame.
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok_at_start: bool,
+) -> ReadOutcome {
+    let mut at = 0usize;
+    while at < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return ReadOutcome::Closed;
+        }
+        match stream.read(&mut buf[at..]) {
+            Ok(0) => {
+                if !(at == 0 && eof_ok_at_start) {
+                    log_warn!("net: peer closed mid-frame at byte {at} of {}", buf.len());
+                }
+                return ReadOutcome::Closed;
+            }
+            Ok(n) => at += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return ReadOutcome::Closed,
+        }
+    }
+    ReadOutcome::Filled
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    let payload = encode_response(resp)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    stream.write_all(&frame(KIND_RESPONSE, &payload))
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    server: &Server,
+    cfg: &NetConfig,
+    stop: &AtomicBool,
+    net: &NetMetrics,
+) {
+    // short read timeout so a blocked read re-checks the stop flag
+    if stream.set_read_timeout(Some(Duration::from_millis(250))).is_err() {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_nodelay(true);
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    loop {
+        if let ReadOutcome::Closed = read_full(&mut stream, &mut header, stop, true) {
+            return;
+        }
+        let (kind, len) = match parse_frame_header(&header, cfg.max_frame) {
+            Ok(parsed) => parsed,
+            Err(e) => {
+                // framing is unrecoverable: answer once and close
+                net.frame_errors.inc();
+                let _ = write_response(&mut stream, &Response::Rejected(format!("frame: {e}")));
+                return;
+            }
+        };
+        if kind != KIND_REQUEST {
+            net.frame_errors.inc();
+            let _ = write_response(
+                &mut stream,
+                &Response::Rejected("frame: expected a request frame".to_string()),
+            );
+            return;
+        }
+        // len is bounded by max_frame, so this allocation is too
+        let mut payload = vec![0u8; len as usize];
+        if let ReadOutcome::Closed = read_full(&mut stream, &mut payload, stop, false) {
+            return;
+        }
+        let started = Instant::now();
+        let req = match decode_request(&payload) {
+            Ok(req) => req,
+            Err(e) => {
+                // payload-level: framing is still aligned, keep serving
+                net.decode_errors.inc();
+                if write_response(&mut stream, &Response::Rejected(format!("decode: {e}")))
+                    .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+        };
+        net.requests.inc();
+        let resp = match server.call_timeout(req, cfg.call_timeout) {
+            Ok(resp) => resp,
+            // queue saturation / shard death / timeout become
+            // wire-visible rejections instead of silent drops
+            Err(e) => Response::Rejected(format!("transport: {e}")),
+        };
+        let wrote = write_response(&mut stream, &resp);
+        net.latency.record_secs(started.elapsed().as_secs_f64());
+        if wrote.is_err() {
+            return;
+        }
+    }
+}
+
+/// What a [`Client::call`] can fail with.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Socket-level failure (connect, read, write, premature close).
+    Io(io::Error),
+    /// The server's frame header was malformed or oversized.
+    Frame(FrameError),
+    /// The response payload failed the wire codec.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Frame(e) => write!(f, "frame: {e}"),
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Frame(e) => Some(e),
+            ClientError::Wire(e) => Some(e),
+        }
+    }
+}
+
+/// Minimal blocking client for the framed protocol: one in-flight
+/// request per connection, responses strictly ordered. Used by the CLI
+/// example, the integration tests, and the bench driver.
+pub struct Client {
+    stream: TcpStream,
+    max_frame: u32,
+}
+
+impl Client {
+    /// Connect to a [`NetServer`].
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client {
+            stream,
+            max_frame: NetConfig::default().max_frame,
+        })
+    }
+
+    /// Send one request and block for its response.
+    pub fn call(&mut self, req: &Request) -> Result<Response, ClientError> {
+        let payload = encode_request(req).map_err(ClientError::Wire)?;
+        self.stream
+            .write_all(&frame(KIND_REQUEST, &payload))
+            .map_err(ClientError::Io)?;
+        self.read_response()
+    }
+
+    /// Write raw bytes to the server without framing or encoding.
+    /// Diagnostic/test aid: lets the robustness suites feed hostile
+    /// byte streams through a real socket.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> io::Result<()> {
+        self.stream.write_all(bytes)
+    }
+
+    /// Read one framed response (pairs with [`Client::send_raw`] when
+    /// driving the wire by hand).
+    pub fn read_response(&mut self) -> Result<Response, ClientError> {
+        let mut header = [0u8; FRAME_HEADER_LEN];
+        self.stream.read_exact(&mut header).map_err(ClientError::Io)?;
+        let (kind, len) =
+            parse_frame_header(&header, self.max_frame).map_err(ClientError::Frame)?;
+        if kind != KIND_RESPONSE {
+            return Err(ClientError::Frame(FrameError::BadKind(kind)));
+        }
+        let mut payload = vec![0u8; len as usize];
+        self.stream.read_exact(&mut payload).map_err(ClientError::Io)?;
+        decode_response(&payload).map_err(ClientError::Wire)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn header(magic: [u8; 2], version: u8, kind: u8, len: u32) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[0] = magic[0];
+        h[1] = magic[1];
+        h[2] = version;
+        h[3] = kind;
+        h[4..8].copy_from_slice(&len.to_le_bytes());
+        h
+    }
+
+    #[test]
+    fn frame_header_roundtrips_through_the_parser() {
+        let payload = vec![7u8; 13];
+        let framed = frame(KIND_REQUEST, &payload);
+        assert_eq!(framed.len(), FRAME_HEADER_LEN + 13);
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h.copy_from_slice(&framed[..FRAME_HEADER_LEN]);
+        let (kind, len) = parse_frame_header(&h, 1 << 24).unwrap();
+        assert_eq!((kind, len), (KIND_REQUEST, 13));
+        assert_eq!(&framed[FRAME_HEADER_LEN..], &payload[..]);
+    }
+
+    #[test]
+    fn bad_magic_version_kind_and_length_are_typed() {
+        assert_eq!(
+            parse_frame_header(&header(*b"ZZ", 1, 0, 0), 100),
+            Err(FrameError::BadMagic(*b"ZZ"))
+        );
+        assert_eq!(
+            parse_frame_header(&header(FRAME_MAGIC, 9, 0, 0), 100),
+            Err(FrameError::BadVersion(9))
+        );
+        assert_eq!(
+            parse_frame_header(&header(FRAME_MAGIC, 1, 5, 0), 100),
+            Err(FrameError::BadKind(5))
+        );
+        assert_eq!(
+            parse_frame_header(&header(FRAME_MAGIC, 1, 0, 101), 100),
+            Err(FrameError::Oversized { len: 101, max: 100 })
+        );
+        // boundary: exactly max is fine
+        assert!(parse_frame_header(&header(FRAME_MAGIC, 1, 1, 100), 100).is_ok());
+    }
+
+    #[test]
+    fn frame_error_displays_name_the_problem() {
+        let txt = FrameError::Oversized { len: 9, max: 4 }.to_string();
+        assert!(txt.contains('9') && txt.contains('4'), "{txt}");
+        assert!(FrameError::BadVersion(3).to_string().contains('3'));
+    }
+}

@@ -1,15 +1,28 @@
-//! Request/response protocol of the online edge service.
+//! Request/response protocol of the online edge service, plus its wire
+//! codec.
 //!
 //! Requests that carry a session id ([`Request::session_id`]) are routed
 //! to shard `id % shards` by the server. `Stats` is answered inline by
 //! the server handle from the shared metrics registry (which aggregates
 //! every shard's labelled instruments) without entering any queue;
 //! `Shutdown` markers are delivered per shard by `Server::shutdown`.
+//!
+//! The wire codec ([`encode_request`]/[`decode_request`] and the
+//! response pair) is the payload layer of the TCP front
+//! (`coordinator::net`): one tag byte, then little-endian fixed-width
+//! fields. Vectors are a `u32` length followed by raw `f32` words,
+//! capped at [`MAX_VEC`] elements; strings are a `u32` byte length
+//! followed by UTF-8. Every malformed input decodes to a typed
+//! [`WireError`] — never a panic — because these bytes arrive from the
+//! network, not from our own process.
 
+use std::fmt;
+
+use crate::coordinator::session::Phase;
 use crate::data::dataset::Sample;
 
 /// Client-visible requests.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum Request {
     /// A labelled sample for online training (Collect/BpOptimize phases).
     Labelled { session: u64, sample: Sample },
@@ -22,8 +35,10 @@ pub enum Request {
     /// Drain marker used by `Server::shutdown`: the receiving shard
     /// answers everything queued ahead of it, acks with `Bye`, and keeps
     /// serving until the server drops its queue. Sending this through
-    /// `call` only drains/acks one shard — use `Server::shutdown` to
-    /// actually stop the server.
+    /// `call` only drains/acks one shard, so the public call paths
+    /// reject it with a typed `Rejected` and the wire codec refuses to
+    /// carry it at all ([`WireError::NotWire`]) — use `Server::shutdown`
+    /// to actually stop the server.
     Shutdown,
 }
 
@@ -104,7 +119,422 @@ impl Request {
     }
 }
 
+impl ErrorKind {
+    fn code(self) -> u8 {
+        match self {
+            ErrorKind::Panic => 0,
+            ErrorKind::Engine => 1,
+            ErrorKind::NonFinite => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<Self> {
+        match code {
+            0 => Some(ErrorKind::Panic),
+            1 => Some(ErrorKind::Engine),
+            2 => Some(ErrorKind::NonFinite),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire codec
+
+/// Hard cap on any wire-carried vector/string length (elements for f32
+/// vectors, bytes for strings). Mirrors the net layer's frame-size
+/// bound: a hostile length prefix must not drive allocation.
+pub const MAX_VEC: usize = 1 << 24;
+
+/// Typed wire-codec failure. Anything the network hands us that is not
+/// a well-formed message lands here — decoding never panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// unknown message tag byte
+    BadTag(u8),
+    /// payload ended mid-field
+    Truncated,
+    /// a field decoded but its value is unusable (bad UTF-8, zero-length
+    /// sample, absurd vector length, unknown phase/error-kind code)
+    Invalid(String),
+    /// the variant is deliberately not wire-encodable
+    NotWire(&'static str),
+    /// a complete message decoded but bytes were left over
+    TrailingBytes(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadTag(tag) => write!(f, "wire: unknown message tag {tag}"),
+            WireError::Truncated => write!(f, "wire: payload truncated mid-field"),
+            WireError::Invalid(msg) => write!(f, "wire: invalid field: {msg}"),
+            WireError::NotWire(msg) => write!(f, "wire: not encodable: {msg}"),
+            WireError::TrailingBytes(n) => {
+                write!(f, "wire: {n} trailing bytes after a complete message")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// -- little-endian field writers --------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) -> Result<(), WireError> {
+    if v.len() > MAX_VEC {
+        return Err(WireError::Invalid(format!(
+            "vector of {} f32s exceeds the {MAX_VEC}-element wire cap",
+            v.len()
+        )));
+    }
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_f32(buf, x);
+    }
+    Ok(())
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<(), WireError> {
+    if s.len() > MAX_VEC {
+        return Err(WireError::Invalid(format!(
+            "string of {} bytes exceeds the {MAX_VEC}-byte wire cap",
+            s.len()
+        )));
+    }
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_sample(buf: &mut Vec<u8>, s: &Sample) -> Result<(), WireError> {
+    if s.t == 0 {
+        // t divides the virtual-node interval; a zero would fault the
+        // datapath, so it is rejected at the codec on BOTH directions
+        return Err(WireError::Invalid("sample t must be >= 1".into()));
+    }
+    let t = u32::try_from(s.t)
+        .map_err(|_| WireError::Invalid(format!("sample t {} exceeds u32", s.t)))?;
+    let label = u32::try_from(s.label)
+        .map_err(|_| WireError::Invalid(format!("sample label {} exceeds u32", s.label)))?;
+    put_u32(buf, t);
+    put_u32(buf, label);
+    put_f32s(buf, &s.u)
+}
+
+// -- bounds-checked reader --------------------------------------------
+
+struct WireReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> WireReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.at.checked_add(n).ok_or(WireError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let out = &self.buf[self.at..end];
+        self.at = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.u32()?.to_le_bytes()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.u64()?.to_le_bytes()))
+    }
+
+    fn usize(&mut self) -> Result<usize, WireError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| WireError::Invalid("u64 field does not fit usize".into()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        if n > MAX_VEC {
+            return Err(WireError::Invalid(format!(
+                "claimed vector length {n} exceeds the {MAX_VEC}-element wire cap"
+            )));
+        }
+        // cap the pre-allocation by the bytes actually present, so a
+        // hostile length prefix cannot force a large allocation before
+        // take() reports the truncation
+        let mut out = Vec::with_capacity(n.min((self.buf.len() - self.at) / 4));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        if n > MAX_VEC {
+            return Err(WireError::Invalid(format!(
+                "claimed string length {n} exceeds the {MAX_VEC}-byte wire cap"
+            )));
+        }
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| WireError::Invalid("string field is not UTF-8".into()))
+    }
+
+    fn sample(&mut self) -> Result<Sample, WireError> {
+        let t = self.u32()? as usize;
+        if t == 0 {
+            return Err(WireError::Invalid("sample t must be >= 1".into()));
+        }
+        let label = self.u32()? as usize;
+        let u = self.f32s()?;
+        Ok(Sample { u, t, label })
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        let rest = self.buf.len() - self.at;
+        if rest > 0 {
+            return Err(WireError::TrailingBytes(rest));
+        }
+        Ok(())
+    }
+}
+
+/// Recover the `&'static str` phase name the `Accepted` response
+/// carries: match the wire string back through [`Phase`]'s four names.
+fn static_phase(name: &str) -> Result<&'static str, WireError> {
+    for code in 0..4u8 {
+        if let Some(p) = Phase::from_code(code) {
+            if p.name() == name {
+                return Ok(p.name());
+            }
+        }
+    }
+    Err(WireError::Invalid(format!("unknown phase {name:?}")))
+}
+
+const REQ_LABELLED: u8 = 1;
+const REQ_INFER: u8 = 2;
+const REQ_FINALIZE: u8 = 3;
+const REQ_STATS: u8 = 4;
+
+/// Encode a request payload (no frame header — `coordinator::net` adds
+/// that). `Shutdown` is refused: it is a process-local drain marker, and
+/// a remote peer must never be able to stall a shard.
+pub fn encode_request(req: &Request) -> Result<Vec<u8>, WireError> {
+    let mut buf = Vec::new();
+    match req {
+        Request::Labelled { session, sample } => {
+            buf.push(REQ_LABELLED);
+            put_u64(&mut buf, *session);
+            put_sample(&mut buf, sample)?;
+        }
+        Request::Infer { session, sample } => {
+            buf.push(REQ_INFER);
+            put_u64(&mut buf, *session);
+            put_sample(&mut buf, sample)?;
+        }
+        Request::Finalize { session } => {
+            buf.push(REQ_FINALIZE);
+            put_u64(&mut buf, *session);
+        }
+        Request::Stats => buf.push(REQ_STATS),
+        Request::Shutdown => {
+            return Err(WireError::NotWire(
+                "Shutdown is a per-shard drain marker; stop the server with Server::shutdown",
+            ));
+        }
+    }
+    Ok(buf)
+}
+
+/// Decode one request payload. There is deliberately no tag for
+/// `Shutdown` — bytes from the network can never encode it.
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    let mut r = WireReader::new(payload);
+    let req = match r.u8()? {
+        REQ_LABELLED => Request::Labelled {
+            session: r.u64()?,
+            sample: r.sample()?,
+        },
+        REQ_INFER => Request::Infer {
+            session: r.u64()?,
+            sample: r.sample()?,
+        },
+        REQ_FINALIZE => Request::Finalize { session: r.u64()? },
+        REQ_STATS => Request::Stats,
+        tag => return Err(WireError::BadTag(tag)),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+const RESP_ACCEPTED: u8 = 1;
+const RESP_PREDICTION: u8 = 2;
+const RESP_TRAINED: u8 = 3;
+const RESP_OBSERVED: u8 = 4;
+const RESP_ADAPTED: u8 = 5;
+const RESP_STATS_TEXT: u8 = 6;
+const RESP_REJECTED: u8 = 7;
+const RESP_ERROR: u8 = 8;
+const RESP_BYE: u8 = 9;
+
+/// Encode a response payload. Fallible for the same reason the zip
+/// writer is: a count that does not fit its wire field is refused with
+/// a typed error, never truncated.
+pub fn encode_response(resp: &Response) -> Result<Vec<u8>, WireError> {
+    let mut buf = Vec::new();
+    match resp {
+        Response::Accepted { phase, buffered } => {
+            buf.push(RESP_ACCEPTED);
+            put_str(&mut buf, phase)?;
+            put_usize(&mut buf, *buffered);
+        }
+        Response::Prediction { class, scores } => {
+            buf.push(RESP_PREDICTION);
+            put_usize(&mut buf, *class);
+            put_f32s(&mut buf, scores)?;
+        }
+        Response::Trained {
+            p,
+            q,
+            beta,
+            train_seconds,
+        } => {
+            buf.push(RESP_TRAINED);
+            put_f32(&mut buf, *p);
+            put_f32(&mut buf, *q);
+            put_f32(&mut buf, *beta);
+            put_f64(&mut buf, *train_seconds);
+        }
+        Response::Observed { updates, window } => {
+            buf.push(RESP_OBSERVED);
+            put_u64(&mut buf, *updates);
+            put_usize(&mut buf, *window);
+        }
+        Response::Adapted {
+            generation,
+            p,
+            q,
+            updates,
+        } => {
+            buf.push(RESP_ADAPTED);
+            put_u64(&mut buf, *generation);
+            put_f32(&mut buf, *p);
+            put_f32(&mut buf, *q);
+            put_u64(&mut buf, *updates);
+        }
+        Response::StatsText(text) => {
+            buf.push(RESP_STATS_TEXT);
+            put_str(&mut buf, text)?;
+        }
+        Response::Rejected(reason) => {
+            buf.push(RESP_REJECTED);
+            put_str(&mut buf, reason)?;
+        }
+        Response::Error { kind, detail } => {
+            buf.push(RESP_ERROR);
+            buf.push(kind.code());
+            put_str(&mut buf, detail)?;
+        }
+        Response::Bye => buf.push(RESP_BYE),
+    }
+    Ok(buf)
+}
+
+/// Decode one response payload.
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    let mut r = WireReader::new(payload);
+    let resp = match r.u8()? {
+        RESP_ACCEPTED => {
+            let phase = static_phase(&r.string()?)?;
+            Response::Accepted {
+                phase,
+                buffered: r.usize()?,
+            }
+        }
+        RESP_PREDICTION => Response::Prediction {
+            class: r.usize()?,
+            scores: r.f32s()?,
+        },
+        RESP_TRAINED => Response::Trained {
+            p: r.f32()?,
+            q: r.f32()?,
+            beta: r.f32()?,
+            train_seconds: r.f64()?,
+        },
+        RESP_OBSERVED => Response::Observed {
+            updates: r.u64()?,
+            window: r.usize()?,
+        },
+        RESP_ADAPTED => Response::Adapted {
+            generation: r.u64()?,
+            p: r.f32()?,
+            q: r.f32()?,
+            updates: r.u64()?,
+        },
+        RESP_STATS_TEXT => Response::StatsText(r.string()?),
+        RESP_REJECTED => Response::Rejected(r.string()?),
+        RESP_ERROR => {
+            let code = r.u8()?;
+            let kind = ErrorKind::from_code(code)
+                .ok_or_else(|| WireError::Invalid(format!("unknown error-kind code {code}")))?;
+            Response::Error {
+                kind,
+                detail: r.string()?,
+            }
+        }
+        RESP_BYE => Response::Bye,
+        tag => return Err(WireError::BadTag(tag)),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -117,5 +547,116 @@ mod tests {
         };
         assert_eq!(Request::Labelled { session: 7, sample: s }.session_id(), Some(7));
         assert_eq!(Request::Stats.session_id(), None);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let sample = Sample {
+            u: vec![0.25, -1.5, 3.0],
+            t: 3,
+            label: 2,
+        };
+        let cases = [
+            Request::Labelled { session: 42, sample: sample.clone() },
+            Request::Infer { session: u64::MAX, sample },
+            Request::Finalize { session: 0 },
+            Request::Stats,
+        ];
+        for req in cases {
+            let bytes = encode_request(&req).unwrap();
+            assert_eq!(decode_request(&bytes).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn shutdown_is_not_wire_encodable() {
+        assert!(matches!(
+            encode_request(&Request::Shutdown),
+            Err(WireError::NotWire(_))
+        ));
+        // and no tag decodes to it: the tag after Stats is unknown
+        assert_eq!(decode_request(&[5]), Err(WireError::BadTag(5)));
+    }
+
+    #[test]
+    fn zero_t_sample_is_refused_both_ways() {
+        let req = Request::Infer {
+            session: 1,
+            sample: Sample { u: vec![], t: 0, label: 0 },
+        };
+        assert!(matches!(encode_request(&req), Err(WireError::Invalid(_))));
+        // hand-build the same payload: tag, session, t=0, label, empty u
+        let mut raw = vec![REQ_INFER];
+        put_u64(&mut raw, 1);
+        put_u32(&mut raw, 0);
+        put_u32(&mut raw, 0);
+        put_u32(&mut raw, 0);
+        assert!(matches!(decode_request(&raw), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut bytes = encode_request(&Request::Stats).unwrap();
+        bytes.push(0xAB);
+        assert_eq!(decode_request(&bytes), Err(WireError::TrailingBytes(1)));
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let cases = [
+            Response::Accepted { phase: Phase::Collect.name(), buffered: 17 },
+            Response::Prediction { class: 3, scores: vec![0.1, 0.9] },
+            Response::Trained { p: 1.5, q: 0.25, beta: 0.01, train_seconds: 2.75 },
+            Response::Observed { updates: 99, window: 8 },
+            Response::Adapted { generation: 4, p: 1.0, q: 2.0, updates: 12 },
+            Response::StatsText("a\nmultiline ☃ report".into()),
+            Response::Rejected("queue full".into()),
+            Response::Error { kind: ErrorKind::NonFinite, detail: "nan".into() },
+            Response::Bye,
+        ];
+        for resp in cases {
+            let bytes = encode_response(&resp).unwrap();
+            assert_eq!(decode_response(&bytes).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn accepted_phase_decodes_to_the_static_name() {
+        for code in 0..4u8 {
+            let phase = Phase::from_code(code).unwrap().name();
+            let bytes = encode_response(&Response::Accepted { phase, buffered: 0 }).unwrap();
+            match decode_response(&bytes).unwrap() {
+                Response::Accepted { phase: back, .. } => assert_eq!(back, phase),
+                other => panic!("{other:?}"),
+            }
+        }
+        // an unknown phase string is Invalid, not a panic
+        let mut raw = vec![RESP_ACCEPTED];
+        put_str(&mut raw, "warp_drive").unwrap();
+        put_usize(&mut raw, 0);
+        assert!(matches!(decode_response(&raw), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn hostile_vector_length_is_typed_not_oom() {
+        // claim a 2^31-element score vector with a 5-byte payload
+        let mut raw = vec![RESP_PREDICTION];
+        put_u64(&mut raw, 0); // class
+        put_u32(&mut raw, 1 << 31); // claimed length
+        raw.push(0);
+        assert!(matches!(decode_response(&raw), Err(WireError::Invalid(_))));
+        // a claim under MAX_VEC but past the payload is Truncated
+        let mut raw = vec![RESP_PREDICTION];
+        put_u64(&mut raw, 0);
+        put_u32(&mut raw, 1000);
+        assert_eq!(decode_response(&raw), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn empty_and_garbage_payloads_are_typed() {
+        assert_eq!(decode_request(&[]), Err(WireError::Truncated));
+        assert_eq!(decode_response(&[]), Err(WireError::Truncated));
+        assert_eq!(decode_request(&[0xFF]), Err(WireError::BadTag(0xFF)));
+        assert_eq!(decode_response(&[0x00]), Err(WireError::BadTag(0x00)));
     }
 }

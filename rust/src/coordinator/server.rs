@@ -103,6 +103,7 @@ use std::time::{Duration, Instant};
 
 use super::checkpoint::{self, CheckpointConfig, ShardCheckpointer};
 use super::engine::Engine;
+use super::hibernate::{HibernateConfig, ShardHibernator};
 use super::faulty::{InjectedPanic, ShardKill};
 use super::protocol::{ErrorKind, Request, Response};
 use super::session::{FeedOutcome, InferError, Phase, Session, SessionConfig, SessionSnapshot};
@@ -140,6 +141,11 @@ pub struct ServerConfig {
     /// supervisor for the worker threads — before skipping it. A dead
     /// shard never stalls shutdown longer than this.
     pub drain_timeout: Duration,
+    /// Session hibernation (None disables it): each shard parks cold
+    /// sessions into `<dir>/shard-<i>/` per the LRU/idle policy and
+    /// rehydrates them on next touch — see `coordinator::hibernate`
+    /// and DESIGN.md §16.
+    pub hibernate: Option<HibernateConfig>,
 }
 
 impl ServerConfig {
@@ -155,6 +161,7 @@ impl ServerConfig {
             max_batch: 8,
             checkpoint: None,
             drain_timeout: Duration::from_secs(5),
+            hibernate: None,
         }
     }
 }
@@ -195,6 +202,13 @@ impl std::fmt::Display for CallError {
 }
 
 impl std::error::Error for CallError {}
+
+/// Why the public call paths refuse `Request::Shutdown` (the documented
+/// footgun: sent through `call` it would drain and ack exactly one
+/// shard, leaving the rest serving — a half-stopped server).
+const SHUTDOWN_VIA_CALL: &str =
+    "Shutdown is a per-shard drain marker and would only drain one shard; \
+     use Server::shutdown";
 
 /// Per-shard queue senders behind mutexes, so the supervisor can swap in
 /// a respawned shard's sender while callers keep cloning the current one
@@ -278,6 +292,16 @@ impl Server {
         ] {
             metrics.counter(name);
         }
+        if cfg.hibernate.is_some() {
+            for name in [
+                "sessions_hibernated_total",
+                "sessions_rehydrated_total",
+                "hibernate_errors_total",
+                "rehydrate_errors_total",
+            ] {
+                metrics.counter(name);
+            }
+        }
         let per_shard_cap = (cfg.queue_cap.max(1) + shards - 1) / shards;
         let mut snaps_by_shard: Vec<Vec<SessionSnapshot>> =
             (0..shards).map(|_| Vec::new()).collect();
@@ -341,8 +365,9 @@ impl Server {
     fn route(&self, req: &Request) -> usize {
         match req.session_id() {
             Some(id) => (id % self.slots.txs.len() as u64) as usize,
-            // remaining session-less requests (Shutdown via `call`) go to
-            // shard 0; Stats never reaches here (answered inline).
+            // session-less requests never reach a queue through the
+            // public paths (Stats is answered inline, Shutdown rejected);
+            // shard 0 is a safe default for internal callers.
             None => 0,
         }
     }
@@ -361,6 +386,9 @@ impl Server {
     pub fn call(&self, req: Request) -> Result<Response, CallError> {
         if matches!(req, Request::Stats) {
             return Ok(Response::StatsText(self.metrics.render()));
+        }
+        if matches!(req, Request::Shutdown) {
+            return Ok(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
         }
         let shard = self.route(&req);
         let (rtx, rrx) = mpsc::channel();
@@ -383,6 +411,10 @@ impl Server {
             let _ = rtx.send(Response::StatsText(self.metrics.render()));
             return Ok(Some(rrx));
         }
+        if matches!(req, Request::Shutdown) {
+            let _ = rtx.send(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
+            return Ok(Some(rrx));
+        }
         let shard = self.route(&req);
         match self.slots.sender(shard).try_send((req, rtx)) {
             Ok(()) => Ok(Some(rrx)),
@@ -399,6 +431,9 @@ impl Server {
     pub fn call_timeout(&self, req: Request, timeout: Duration) -> Result<Response, CallError> {
         if matches!(req, Request::Stats) {
             return Ok(Response::StatsText(self.metrics.render()));
+        }
+        if matches!(req, Request::Shutdown) {
+            return Ok(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
         }
         let deadline = Instant::now() + timeout;
         let shard = self.route(&req);
@@ -764,11 +799,31 @@ fn shard_loop(
     metrics: Arc<Registry>,
     snapshots: Vec<SessionSnapshot>,
 ) {
+    // the hibernation policy head opens the shard's store first so
+    // checkpoint-vs-store id collisions resolve before any session is
+    // rehydrated; a store that cannot open disables hibernation for
+    // this shard (loudly) rather than failing the spawn
+    let mut hib = cfg.hibernate.as_ref().and_then(|h| {
+        match ShardHibernator::new(h, shard, &metrics) {
+            Ok(hb) => Some(hb),
+            Err(e) => {
+                log_warn!("shard {shard}: hibernation disabled (store open failed): {e}");
+                None
+            }
+        }
+    });
     let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
     {
         let restored = metrics.counter("sessions_restored_total");
         let restore_errs = metrics.counter("checkpoint_restore_errors_total");
         for snap in snapshots {
+            // an id present in both a checkpoint archive and the
+            // hibernation store resolves by mutation freshness; the
+            // hibernated copy always leaves the store
+            let snap = match hib.as_mut() {
+                Some(h) => h.resolve_restore_conflict(snap),
+                None => snap,
+            };
             let id = snap.id;
             match Session::restore(snap, cfg.session.clone()) {
                 Ok(sess) => {
@@ -821,8 +876,35 @@ fn shard_loop(
     let mut plan: Vec<Option<PlanTag>> = Vec::with_capacity(max_batch);
     // grow-only per-lane feature buffers (r̃ per planned request)
     let mut feat_bufs: Vec<Vec<f32>> = Vec::new();
+    // session ids touched by the current drain cycle (LRU clock input)
+    let mut touched: Vec<u64> = Vec::with_capacity(max_batch);
 
-    while let Ok(first) = rx.recv() {
+    // with the idle clock armed, the blocking recv gains a timeout so
+    // a quiet shard still sweeps; otherwise the loop stays a plain
+    // recv with zero overhead for non-hibernating servers
+    let sweep = hib.as_ref().and_then(ShardHibernator::sweep_interval);
+    if let Some(h) = hib.as_ref() {
+        h.report_resident(sessions.len());
+    }
+    loop {
+        let first = if let Some(interval) = sweep {
+            match rx.recv_timeout(interval) {
+                Ok(env) => env,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(h) = hib.as_mut() {
+                        h.sweep_idle(&mut sessions);
+                        h.report_resident(sessions.len());
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(env) => env,
+                Err(_) => break,
+            }
+        };
         batch.clear();
         batch.push(first);
         while batch.len() < max_batch {
@@ -832,6 +914,24 @@ fn shard_loop(
             }
         }
         batch_size.record_secs(batch.len() as f64 * 1e-6);
+
+        // ---- rehydrate: any requested session parked in the store
+        // comes back *before* planning, so the batched feature sweep
+        // and the per-call paths both see it resident — its next
+        // responses are bitwise-equal to never having hibernated
+        if let Some(h) = hib.as_mut() {
+            touched.clear();
+            for (req, _) in &batch {
+                if let Some(id) = req.session_id() {
+                    touched.push(id);
+                    if !sessions.contains_key(&id) && h.knows(id) {
+                        if let Some(sess) = h.rehydrate(id, &cfg.session) {
+                            sessions.insert(id, sess);
+                        }
+                    }
+                }
+            }
+        }
 
         // ---- plan: decide which requests can share one batched sweep.
         // A panic inside the sweep only costs the plan — every lane
@@ -867,6 +967,15 @@ fn shard_loop(
                                 log_warn!("shard {shard}: final checkpoint failed: {e}");
                             }
                         }
+                    }
+                    // park everything AFTER the final checkpoint: on
+                    // restart the colliding copies carry equal mutation
+                    // stamps and the tie keeps the checkpoint record.
+                    // Stragglers racing in behind the marker rehydrate
+                    // on touch like any other cold session.
+                    if let Some(h) = hib.as_mut() {
+                        h.hibernate_all(&mut sessions);
+                        h.report_resident(sessions.len());
                     }
                     let _ = reply.send(Response::Bye);
                     continue;
@@ -1125,6 +1234,19 @@ fn shard_loop(
                 }
             }
         }
+
+        // ---- hibernation bookkeeping: stamp the LRU clock for every
+        // session this cycle touched, evict past the resident cap
+        // (least-recently-touched first), publish the level gauges
+        if let Some(h) = hib.as_mut() {
+            for &id in &touched {
+                if sessions.contains_key(&id) {
+                    h.note_touch(id);
+                }
+            }
+            h.enforce_cap(&mut sessions);
+            h.report_resident(sessions.len());
+        }
     }
 }
 
@@ -1371,6 +1493,30 @@ mod tests {
         // the server is still alive and answering
         let r = srv.call(Request::Stats).unwrap();
         assert!(matches!(r, Response::StatsText(_)));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_via_call_is_rejected_not_partial_drain() {
+        // the documented footgun: Shutdown through the public paths
+        // would drain exactly one shard; all three now refuse it with
+        // a typed Rejected and the server keeps serving
+        let (srv, ds) = server();
+        let r = srv.call(Request::Shutdown).unwrap();
+        assert!(matches!(r, Response::Rejected(_)), "{r:?}");
+        let r = srv
+            .call_timeout(Request::Shutdown, Duration::from_secs(1))
+            .unwrap();
+        assert!(matches!(r, Response::Rejected(_)), "{r:?}");
+        let rrx = srv.try_call(Request::Shutdown).unwrap().unwrap();
+        assert!(matches!(rrx.recv().unwrap(), Response::Rejected(_)));
+        let r = srv
+            .call(Request::Labelled {
+                session: 1,
+                sample: ds.train[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Accepted { .. }), "{r:?}");
         srv.shutdown();
     }
 

@@ -984,6 +984,12 @@ impl Session {
     /// original — the ring buffer, factor + Gram shadow, served W̃,
     /// candidate SGD state, PRNG position, generation counters and
     /// fallback ring all round-trip exactly.
+    ///
+    /// Two durability layers ride on this guarantee: periodic crash
+    /// checkpoints ([`checkpoint`](super::checkpoint)) and session
+    /// hibernation ([`hibernate`](super::hibernate)), which parks cold
+    /// sessions off-heap and rehydrates them on the next touch with no
+    /// observable response difference.
     pub fn snapshot(&self) -> SessionSnapshot {
         let (rng_state, rng_inc) = self.rng.state_parts();
         SessionSnapshot {

@@ -207,7 +207,7 @@ pub fn write_npz_bytes(arrays: &BTreeMap<String, (Vec<usize>, Vec<f32>)>) -> Res
             data: write_npy_f32(shape, data),
         })
         .collect();
-    Ok(super::zipstore::write_archive(&entries))
+    Ok(super::zipstore::write_archive(&entries)?)
 }
 
 #[cfg(test)]

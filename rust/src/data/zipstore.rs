@@ -10,9 +10,18 @@
 //! a zip64 extra that the central directory does not carry), verifies
 //! CRC-32, and rejects any compression method other than stored with a
 //! pointed error. The writer emits local headers with exact sizes (no
-//! data descriptors, no zip64 — fixtures are far below 4 GiB), a
-//! central directory and the EOCD, which CPython's `zipfile`/numpy read
-//! back verbatim.
+//! data descriptors, no zip64), a central directory and the EOCD, which
+//! CPython's `zipfile`/numpy read back verbatim.
+//!
+//! The classic (non-zip64) format caps the entry count at `u16::MAX` and
+//! every size/offset at `u32::MAX`. [`write_archive`] **refuses** inputs
+//! beyond those limits with a typed [`ZipWriteError`] instead of
+//! truncating the casts — an archive that silently decodes short (an
+//! EOCD claiming `70_000 % 65_536` entries) is corruption, not output.
+//! The session-hibernation store (`coordinator::hibernate`) stays under
+//! the caps by bucketing sessions across many archives.
+
+use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
@@ -114,8 +123,97 @@ pub fn read_archive(buf: &[u8]) -> Result<Vec<Entry>> {
     Ok(out)
 }
 
+/// Why [`write_archive`] refused to emit an archive. Each variant is a
+/// hard limit of the classic zip format — proceeding would require
+/// truncating a count/size/offset field and emitting a corrupt file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ZipWriteError {
+    /// more entries than the EOCD's u16 entry-count field can carry
+    TooManyEntries { count: usize },
+    /// one entry's payload exceeds the u32 size fields
+    EntryTooLarge { name: String, bytes: u64 },
+    /// one entry's name exceeds the u16 name-length field
+    NameTooLong { name_prefix: String, len: usize },
+    /// local-header offsets / the central directory would pass u32
+    ArchiveTooLarge { bytes: u64 },
+}
+
+impl fmt::Display for ZipWriteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ZipWriteError::TooManyEntries { count } => write!(
+                f,
+                "zip: {count} entries exceed the format's {} cap (no zip64)",
+                u16::MAX
+            ),
+            ZipWriteError::EntryTooLarge { name, bytes } => write!(
+                f,
+                "zip: entry {name:?} is {bytes} bytes, beyond the u32 size field"
+            ),
+            ZipWriteError::NameTooLong { name_prefix, len } => write!(
+                f,
+                "zip: entry name {name_prefix:?}… is {len} bytes, beyond the u16 name field"
+            ),
+            ZipWriteError::ArchiveTooLarge { bytes } => write!(
+                f,
+                "zip: archive would be {bytes} bytes, beyond the u32 offset fields"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ZipWriteError {}
+
+/// Check that `count` entries with the given `(name, data_len)` shapes
+/// fit the classic zip field widths. Pure arithmetic over metadata, so
+/// the >4 GiB paths are unit-testable without allocating gigabytes.
+fn check_limits<'a>(
+    shapes: impl Iterator<Item = (&'a str, u64)>,
+    count: usize,
+) -> Result<(), ZipWriteError> {
+    if count > u16::MAX as usize {
+        return Err(ZipWriteError::TooManyEntries { count });
+    }
+    let mut payload: u64 = 0;
+    let mut central: u64 = 22;
+    for (name, data_len) in shapes {
+        if name.len() > u16::MAX as usize {
+            return Err(ZipWriteError::NameTooLong {
+                name_prefix: name.chars().take(32).collect(),
+                len: name.len(),
+            });
+        }
+        if data_len > u64::from(u32::MAX) {
+            return Err(ZipWriteError::EntryTooLarge {
+                name: name.to_string(),
+                bytes: data_len,
+            });
+        }
+        payload += 30 + name.len() as u64 + data_len;
+        central += 46 + name.len() as u64;
+    }
+    // every local-header offset is < payload, and the EOCD's cd_off /
+    // cd_size fields cover [payload, payload + central) — bounding the
+    // whole archive by u32::MAX keeps every emitted field lossless
+    if payload + central > u64::from(u32::MAX) {
+        return Err(ZipWriteError::ArchiveTooLarge {
+            bytes: payload + central,
+        });
+    }
+    Ok(())
+}
+
 /// Serialize entries as a stored zip archive (what `zipfile` reads back).
-pub fn write_archive(entries: &[Entry]) -> Vec<u8> {
+///
+/// Returns a typed [`ZipWriteError`] when the input exceeds the classic
+/// format's field widths (> 65 535 entries, an entry or the archive
+/// past 4 GiB) — the caller gets a loud refusal, never an archive whose
+/// EOCD silently decodes to `count % 65 536` entries.
+pub fn write_archive(entries: &[Entry]) -> Result<Vec<u8>, ZipWriteError> {
+    check_limits(
+        entries.iter().map(|e| (e.name.as_str(), e.data.len() as u64)),
+        entries.len(),
+    )?;
     let payload: usize = entries.iter().map(|e| 30 + e.name.len() + e.data.len()).sum();
     let central: usize = entries.iter().map(|e| 46 + e.name.len()).sum();
     let mut buf = Vec::with_capacity(payload + central + 22);
@@ -166,7 +264,7 @@ pub fn write_archive(entries: &[Entry]) -> Vec<u8> {
     buf.extend_from_slice(&cd_size.to_le_bytes());
     buf.extend_from_slice(&cd_off.to_le_bytes());
     buf.extend_from_slice(&0u16.to_le_bytes()); // comment len
-    buf
+    Ok(buf)
 }
 
 /// CRC-32 (IEEE 802.3, the zip polynomial), bytewise with a lazily-built
@@ -210,7 +308,7 @@ mod tests {
             Entry { name: "b.npy".into(), data: vec![] },
             Entry { name: "dir/c.npy".into(), data: (0..=255).collect() },
         ];
-        let buf = write_archive(&entries);
+        let buf = write_archive(&entries).unwrap();
         let back = read_archive(&buf).unwrap();
         assert_eq!(back.len(), 3);
         for (e, b) in entries.iter().zip(&back) {
@@ -222,7 +320,7 @@ mod tests {
     #[test]
     fn corrupt_payload_fails_crc() {
         let entries = vec![Entry { name: "x".into(), data: vec![9; 64] }];
-        let mut buf = write_archive(&entries);
+        let mut buf = write_archive(&entries).unwrap();
         // flip a payload byte (local header is 30 bytes + 1-byte name)
         buf[31 + 7] ^= 0x40;
         let err = read_archive(&buf).unwrap_err().to_string();
@@ -232,7 +330,7 @@ mod tests {
     #[test]
     fn rejects_deflate_method() {
         let entries = vec![Entry { name: "x".into(), data: vec![1, 2, 3] }];
-        let mut buf = write_archive(&entries);
+        let mut buf = write_archive(&entries).unwrap();
         // patch method field in both local header (offset 8) and the
         // central directory entry (offset 10 within the CD record)
         buf[8] = 8;
@@ -252,7 +350,7 @@ mod tests {
     fn empty_archive_roundtrips() {
         // a 22-byte EOCD-only archive is a VALID zip with zero entries
         // (numpy never writes one, but tooling may) — tolerate, not panic
-        let buf = write_archive(&[]);
+        let buf = write_archive(&[]).unwrap();
         assert_eq!(buf.len(), 22);
         let back = read_archive(&buf).unwrap();
         assert!(back.is_empty());
@@ -260,7 +358,7 @@ mod tests {
 
     #[test]
     fn truncated_eocd_is_an_error() {
-        let buf = write_archive(&[]);
+        let buf = write_archive(&[]).unwrap();
         for cut in [0usize, 1, 10, 21] {
             assert!(read_archive(&buf[..cut]).is_err(), "cut at {cut}");
         }
@@ -272,7 +370,7 @@ mod tests {
             Entry { name: "empty.npy".into(), data: vec![] },
             Entry { name: "tail".into(), data: vec![7; 9] },
         ];
-        let buf = write_archive(&entries);
+        let buf = write_archive(&entries).unwrap();
         let back = read_archive(&buf).unwrap();
         assert_eq!(back[0].name, "empty.npy");
         assert!(back[0].data.is_empty());
@@ -293,7 +391,7 @@ mod tests {
     #[test]
     fn lying_entry_count_is_an_error_not_a_panic() {
         let entries = vec![Entry { name: "x".into(), data: vec![1, 2, 3] }];
-        let mut buf = write_archive(&entries);
+        let mut buf = write_archive(&entries).unwrap();
         // EOCD total-entry count at offset 10: claim 5 entries where the
         // central directory holds 1 — the reader must bail on the walk
         let eocd = buf.len() - 22;
@@ -302,15 +400,97 @@ mod tests {
     }
 
     #[test]
+    fn seventy_thousand_entries_error_loudly_never_decode_short() {
+        // the headline regression: 70 000 entries used to be written with
+        // `entries.len() as u16`, so the EOCD claimed 70_000 % 65_536 =
+        // 4_464 entries and the archive decoded SHORT. The writer must now
+        // refuse with a typed error instead of emitting that corruption.
+        let entries: Vec<Entry> = (0..70_000)
+            .map(|i| Entry { name: format!("s{i}"), data: vec![] })
+            .collect();
+        match write_archive(&entries) {
+            Err(ZipWriteError::TooManyEntries { count }) => assert_eq!(count, 70_000),
+            other => panic!("expected TooManyEntries, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn entry_count_boundary_roundtrips() {
+        // exactly u16::MAX entries is legal — the cap is exclusive above
+        let entries: Vec<Entry> = (0..u16::MAX as usize)
+            .map(|i| Entry { name: format!("e{i}"), data: vec![] })
+            .collect();
+        let buf = write_archive(&entries).unwrap();
+        let back = read_archive(&buf).unwrap();
+        assert_eq!(back.len(), u16::MAX as usize);
+        assert_eq!(back[0].name, "e0");
+        assert_eq!(back.last().unwrap().name, format!("e{}", u16::MAX as usize - 1));
+        // one past the cap flips to the typed refusal
+        let mut over = entries;
+        over.push(Entry { name: "straw".into(), data: vec![] });
+        assert!(matches!(
+            write_archive(&over),
+            Err(ZipWriteError::TooManyEntries { count }) if count == u16::MAX as usize + 1
+        ));
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_without_allocating() {
+        // check_limits works on (name, len) metadata, so the >4 GiB paths
+        // are exercised without materializing gigabytes
+        let five_gib = 5 * (1u64 << 30);
+        let shapes = [("small", 16u64), ("big", five_gib)];
+        match check_limits(shapes.iter().map(|&(n, l)| (n, l)), shapes.len()) {
+            Err(ZipWriteError::EntryTooLarge { name, bytes }) => {
+                assert_eq!(name, "big");
+                assert_eq!(bytes, five_gib);
+            }
+            other => panic!("expected EntryTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_archive_total_is_refused() {
+        // three 2 GiB entries: each fits the u32 size field, but the third
+        // local header would sit past u32::MAX — offsets would wrap
+        let two_gib = 2 * (1u64 << 30);
+        let shapes = [("a", two_gib), ("b", two_gib), ("c", two_gib)];
+        match check_limits(shapes.iter().map(|&(n, l)| (n, l)), shapes.len()) {
+            Err(ZipWriteError::ArchiveTooLarge { bytes }) => {
+                assert!(bytes > u64::from(u32::MAX), "{bytes}");
+            }
+            other => panic!("expected ArchiveTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn absurd_name_length_is_refused() {
+        let long = "n".repeat(u16::MAX as usize + 1);
+        match check_limits([(long.as_str(), 0u64)].into_iter(), 1) {
+            Err(ZipWriteError::NameTooLong { len, .. }) => {
+                assert_eq!(len, u16::MAX as usize + 1);
+            }
+            other => panic!("expected NameTooLong, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zip_write_error_displays_are_pointed() {
+        let e = ZipWriteError::TooManyEntries { count: 70_000 };
+        let s = e.to_string();
+        assert!(s.contains("70000") && s.contains("65535"), "{s}");
+    }
+
+    #[test]
     fn out_of_range_central_directory_offset_is_an_error() {
         let entries = vec![Entry { name: "x".into(), data: vec![1] }];
-        let mut buf = write_archive(&entries);
+        let mut buf = write_archive(&entries).unwrap();
         let eocd = buf.len() - 22;
         // point the CD offset past the end of the buffer
         buf[eocd + 16..eocd + 20].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(read_archive(&buf).is_err());
         // and at the EOCD itself (not a CD signature)
-        let mut buf2 = write_archive(&entries);
+        let mut buf2 = write_archive(&entries).unwrap();
         let off = (buf2.len() - 22) as u32;
         let eocd2 = buf2.len() - 22;
         buf2[eocd2 + 16..eocd2 + 20].copy_from_slice(&off.to_le_bytes());

@@ -141,6 +141,28 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             "0",
             "per-request deadline: retry a saturated/respawning shard with backoff and give \
              up after this many ms (0 = block indefinitely)",
+        )
+        .opt(
+            "listen",
+            "",
+            "after the demo loop, keep serving the framed TCP protocol on this address \
+             (e.g. 127.0.0.1:7077; empty = exit after the demo)",
+        )
+        .opt(
+            "max-resident",
+            "0",
+            "hibernation: per-shard cap on resident sessions — the coldest park to \
+             --hibernate-dir and rehydrate on their next request (0 = unlimited)",
+        )
+        .opt(
+            "hibernate-after",
+            "0",
+            "hibernation: idle seconds after which a quiet session is parked (0 = off)",
+        )
+        .opt(
+            "hibernate-dir",
+            "hibernate",
+            "hibernation store root (used with --max-resident / --hibernate-after)",
         );
     let p = cmd.parse(argv)?;
     let prof = profile_arg(&p)?;
@@ -216,6 +238,24 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             server_cfg.checkpoint = Some(ck);
         }
     }
+    let max_resident = p.get_usize("max-resident")?;
+    let hibernate_after = p.get_u64("hibernate-after")?;
+    if max_resident > 0 || hibernate_after > 0 {
+        let mut hib = dfr_edge::coordinator::HibernateConfig::new(p.get("hibernate-dir"));
+        if max_resident > 0 {
+            hib.max_resident = max_resident;
+        }
+        if hibernate_after > 0 {
+            hib.hibernate_after = Some(std::time::Duration::from_secs(hibernate_after));
+        }
+        log_info!(
+            "hibernation: dir={} max_resident/shard={} idle_after={}",
+            hib.dir.display(),
+            if max_resident > 0 { max_resident.to_string() } else { "unlimited".to_string() },
+            if hibernate_after > 0 { format!("{hibernate_after}s") } else { "off".to_string() },
+        );
+        server_cfg.hibernate = Some(hib);
+    }
     let call_timeout = match p.get_u64("call-timeout-ms")? {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms)),
@@ -273,7 +313,25 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     if let Response::StatsText(t) = srv.call(Request::Stats).map_err(|e| e.to_string())? {
         print!("{t}");
     }
-    srv.shutdown();
+    match p.get("listen") {
+        "" => srv.shutdown(),
+        addr => {
+            // hand the trained coordinator to the TCP edge and serve
+            // remote sessions until the process is killed
+            let net_cfg = dfr_edge::coordinator::NetConfig {
+                addr: addr.to_string(),
+                call_timeout: call_timeout.unwrap_or(std::time::Duration::from_secs(5)),
+                ..dfr_edge::coordinator::NetConfig::default()
+            };
+            let srv = std::sync::Arc::new(srv);
+            let net = dfr_edge::coordinator::NetServer::bind(std::sync::Arc::clone(&srv), net_cfg)
+                .map_err(|e| format!("net: bind {addr} failed: {e}"))?;
+            log_info!("net edge listening on {} (kill the process to stop)", net.local_addr());
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+    }
     Ok(())
 }
 

@@ -46,6 +46,15 @@ impl Counter {
         }
     }
 
+    /// Overwrite the value — for level gauges with a single writer
+    /// (e.g. each shard's `resident_sessions{shard=…}`, re-published
+    /// after every batch cycle). The labelled aggregate stays correct
+    /// because each shard owns its own labelled instance; do not `set`
+    /// a counter that several threads also `inc`/`add`.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -328,6 +337,16 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_set_overwrites_for_level_gauges() {
+        let c = Counter::default();
+        c.add(10);
+        c.set(3);
+        assert_eq!(c.get(), 3);
+        c.set(0);
+        assert_eq!(c.get(), 0);
     }
 
     #[test]

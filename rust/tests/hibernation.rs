@@ -1,0 +1,459 @@
+//! Session hibernation end-to-end: a capacity-capped server must be
+//! response-for-response **bitwise identical** to an unconstrained one
+//! (park/rehydrate is invisible), including across an engine datapath
+//! generation roll that lands while sessions are parked, across a full
+//! process restart from the store, and under the idle clock.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::coordinator::{
+    HibernateConfig, Request, Response, Server, ServerConfig, SessionConfig,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::runtime::executor::TrainState;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+/// Fresh per-test store root under the OS temp dir.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dfr-hib-e2e-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Single-shard server so eviction order and batching are deterministic.
+fn spawn_one_shard(
+    engine: Box<dyn Engine>,
+    scfg: SessionConfig,
+    hibernate: Option<HibernateConfig>,
+) -> Server {
+    let mut cfg = ServerConfig {
+        queue_cap: 64,
+        seed: 0xFEED,
+        shards: 1,
+        max_batch: 8,
+        ..ServerConfig::new(scfg)
+    };
+    cfg.hibernate = hibernate;
+    Server::spawn(engine, cfg)
+}
+
+/// Response equality modulo wall-clock (`train_seconds` is timing, not
+/// semantics) — everything else must match bitwise.
+fn normalize(r: Response) -> Response {
+    match r {
+        Response::Trained { p, q, beta, .. } => Response::Trained {
+            p,
+            q,
+            beta,
+            train_seconds: 0.0,
+        },
+        other => other,
+    }
+}
+
+/// Aggregate value of a counter in the `Stats` text (the unlabelled
+/// line; labelled per-shard lines render as `name{shard="0"}`).
+fn metric(stats: &str, name: &str) -> u64 {
+    for line in stats.lines() {
+        let mut it = line.split_whitespace();
+        if it.next() == Some("counter") && it.next() == Some(name) {
+            if let Some(v) = it.next() {
+                return v.parse().unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+fn stats(srv: &Server) -> String {
+    match srv.call(Request::Stats).unwrap() {
+        Response::StatsText(t) => t,
+        other => panic!("unexpected: {other:?}"),
+    }
+}
+
+#[test]
+fn capped_server_is_bitwise_identical_to_unconstrained() {
+    let ds = mini_dataset(41);
+    let dir = tmp_dir("pair");
+    let sessions: Vec<u64> = (1..=6).collect();
+
+    let mut hib = HibernateConfig::new(&dir);
+    hib.max_resident = 2; // 6 live sessions → constant park/rehydrate churn
+    hib.buckets = 4; // several sessions per bucket archive
+
+    let plain = spawn_one_shard(
+        Box::new(NativeEngine::new(8, 2)),
+        mini_session_config(ds.train.len()),
+        None,
+    );
+    let capped = spawn_one_shard(
+        Box::new(NativeEngine::new(8, 2)),
+        mini_session_config(ds.train.len()),
+        Some(hib),
+    );
+
+    // identical interleaved traffic: train all six sessions round-robin,
+    // then an inference sweep — every response pair must match
+    let mut traffic: Vec<Request> = Vec::new();
+    for s in &ds.train {
+        for &sess in &sessions {
+            traffic.push(Request::Labelled {
+                session: sess,
+                sample: s.clone(),
+            });
+        }
+    }
+    for s in ds.test.iter().take(5) {
+        for &sess in &sessions {
+            traffic.push(Request::Infer {
+                session: sess,
+                sample: s.clone(),
+            });
+        }
+    }
+    for req in traffic {
+        let (sess, sample_req) = match &req {
+            Request::Labelled { session, sample } => (
+                *session,
+                Request::Labelled {
+                    session: *session,
+                    sample: sample.clone(),
+                },
+            ),
+            Request::Infer { session, sample } => (
+                *session,
+                Request::Infer {
+                    session: *session,
+                    sample: sample.clone(),
+                },
+            ),
+            _ => unreachable!(),
+        };
+        let a = normalize(plain.call(sample_req).unwrap());
+        let b = normalize(capped.call(req).unwrap());
+        assert_eq!(a, b, "diverged on session {sess}");
+    }
+
+    // the cap actually bit: sessions were parked and brought back
+    let st = stats(&capped);
+    assert!(metric(&st, "sessions_hibernated_total") > 0, "{st}");
+    assert!(metric(&st, "sessions_rehydrated_total") > 0, "{st}");
+    assert!(metric(&st, "resident_sessions") <= 2, "{st}");
+    assert_eq!(metric(&st, "hibernate_errors_total"), 0, "{st}");
+    assert_eq!(metric(&st, "rehydrate_errors_total"), 0, "{st}");
+
+    plain.shutdown();
+    capped.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Engine whose datapath generation is driven by the test — lets a
+/// generation roll land while sessions are hibernated.
+struct RollingEngine {
+    inner: NativeEngine,
+    gen: Arc<AtomicU64>,
+}
+
+impl RollingEngine {
+    fn new(gen: Arc<AtomicU64>) -> Self {
+        RollingEngine {
+            inner: NativeEngine::new(8, 2),
+            gen,
+        }
+    }
+}
+
+impl Engine for RollingEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> anyhow::Result<f32> {
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> anyhow::Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.inner.features_into(s, mask, p, q, out)
+    }
+
+    fn infer(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.infer(s, mask, p, q, w_tilde)
+    }
+
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.inner.infer_into(s, mask, p, q, w_tilde, scores)
+    }
+
+    fn scores_from_features_exact(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "rolling"
+    }
+
+    fn generation(&self) -> u64 {
+        self.gen.load(Ordering::SeqCst)
+    }
+}
+
+#[test]
+fn generation_roll_mid_hibernation_stays_bitwise_equal() {
+    let ds = mini_dataset(42);
+    let dir = tmp_dir("genroll");
+    let sessions: Vec<u64> = (1..=3).collect();
+
+    // streaming ridge on, so Serve-phase labelled samples carry online
+    // state that a generation roll must reseed
+    let mut scfg = mini_session_config(ds.train.len());
+    scfg.train.window = Some(8);
+
+    let mut hib = HibernateConfig::new(&dir);
+    hib.max_resident = 1; // everything beyond the hottest session parks
+
+    // both engines share one generation cell: a single bump rolls both
+    // servers at the same request boundary
+    let gen = Arc::new(AtomicU64::new(0));
+    let plain = spawn_one_shard(Box::new(RollingEngine::new(Arc::clone(&gen))), scfg.clone(), None);
+    let capped = spawn_one_shard(
+        Box::new(RollingEngine::new(Arc::clone(&gen))),
+        scfg,
+        Some(hib),
+    );
+
+    let mut drive = |req: Request, req2: Request| {
+        let a = normalize(plain.call(req).unwrap());
+        let b = normalize(capped.call(req2).unwrap());
+        assert_eq!(a, b);
+    };
+    let labelled = |sess: u64, s: &Sample| Request::Labelled {
+        session: sess,
+        sample: s.clone(),
+    };
+    let infer = |sess: u64, s: &Sample| Request::Infer {
+        session: sess,
+        sample: s.clone(),
+    };
+
+    // train all three to Serve
+    for s in &ds.train {
+        for &sess in &sessions {
+            drive(labelled(sess, s), labelled(sess, s));
+        }
+    }
+    // a few Serve-phase streaming updates
+    for s in ds.train.iter().take(3) {
+        for &sess in &sessions {
+            drive(labelled(sess, s), labelled(sess, s));
+        }
+    }
+
+    // both servers idle; with max_resident = 1 at least two sessions are
+    // hibernated right now. Roll the shared datapath generation.
+    gen.fetch_add(1, Ordering::SeqCst);
+
+    // parked sessions rehydrate under the new generation — streaming
+    // updates and inference must still agree response-for-response
+    for s in ds.train.iter().skip(3).take(3) {
+        for &sess in &sessions {
+            drive(labelled(sess, s), labelled(sess, s));
+        }
+    }
+    for s in ds.test.iter().take(4) {
+        for &sess in &sessions {
+            drive(infer(sess, s), infer(sess, s));
+        }
+    }
+
+    let st = stats(&capped);
+    assert!(metric(&st, "sessions_hibernated_total") > 0, "{st}");
+    assert_eq!(metric(&st, "rehydrate_errors_total"), 0, "{st}");
+
+    plain.shutdown();
+    capped.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hibernated_sessions_survive_a_restart() {
+    let ds = mini_dataset(43);
+    let dir = tmp_dir("restart");
+    let hib = HibernateConfig::new(&dir); // no cap: parking happens at shutdown
+
+    let first = spawn_one_shard(
+        Box::new(NativeEngine::new(8, 2)),
+        mini_session_config(ds.train.len()),
+        Some(hib.clone()),
+    );
+    for s in &ds.train {
+        for sess in 1..=3u64 {
+            first.call(Request::Labelled {
+                session: sess,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+    }
+    let mut before = Vec::new();
+    for s in ds.test.iter().take(3) {
+        for sess in 1..=3u64 {
+            before.push(
+                first
+                    .call(Request::Infer {
+                        session: sess,
+                        sample: s.clone(),
+                    })
+                    .unwrap(),
+            );
+        }
+    }
+    // graceful shutdown parks every resident session into the store
+    first.shutdown();
+
+    // fresh process image: no checkpoint config, so the *only* way these
+    // sessions come back is rehydration from the hibernation store
+    let second = spawn_one_shard(
+        Box::new(NativeEngine::new(8, 2)),
+        mini_session_config(ds.train.len()),
+        Some(hib),
+    );
+    let mut after = Vec::new();
+    for s in ds.test.iter().take(3) {
+        for sess in 1..=3u64 {
+            after.push(
+                second
+                    .call(Request::Infer {
+                        session: sess,
+                        sample: s.clone(),
+                    })
+                    .unwrap(),
+            );
+        }
+    }
+    assert_eq!(before, after);
+    for r in &after {
+        assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+    }
+    let st = stats(&second);
+    assert!(metric(&st, "sessions_rehydrated_total") >= 3, "{st}");
+    second.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn idle_clock_parks_quiet_sessions() {
+    let ds = mini_dataset(44);
+    let dir = tmp_dir("idle");
+    let mut hib = HibernateConfig::new(&dir);
+    hib.hibernate_after = Some(Duration::from_millis(50));
+
+    let srv = spawn_one_shard(
+        Box::new(NativeEngine::new(8, 2)),
+        mini_session_config(ds.train.len()),
+        Some(hib),
+    );
+    for s in &ds.train {
+        for sess in [1u64, 2] {
+            srv.call(Request::Labelled {
+                session: sess,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+    }
+    // go quiet: the idle sweep (every hibernate_after/2) must park both
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        thread::sleep(Duration::from_millis(100));
+        let st = stats(&srv);
+        if metric(&st, "sessions_hibernated_total") >= 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "idle sweep never parked the sessions: {st}"
+        );
+    }
+    // next touch brings them back, fully functional
+    for sess in [1u64, 2] {
+        let r = srv
+            .call(Request::Infer {
+                session: sess,
+                sample: ds.test[0].clone(),
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Prediction { .. }), "{r:?}");
+    }
+    let st = stats(&srv);
+    assert!(metric(&st, "sessions_rehydrated_total") >= 2, "{st}");
+    srv.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

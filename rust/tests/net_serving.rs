@@ -1,0 +1,448 @@
+//! Network edge integration tests: wire-codec robustness (randomized
+//! round-trips, truncation, garbage — typed errors, never panics) and a
+//! live TCP server driven end to end through [`Client`].
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use dfr_edge::coordinator::engine::{Engine, NativeEngine};
+use dfr_edge::coordinator::{
+    decode_request, decode_response, encode_request, encode_response, Client, ErrorKind, NetConfig,
+    NetServer, Request, Response, Server, ServerConfig, SessionConfig, WireError,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::runtime::executor::TrainState;
+use dfr_edge::util::prng::Pcg32;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+fn spawn_server(ds: &Dataset) -> Server {
+    Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        ServerConfig {
+            queue_cap: 64,
+            seed: 0xFEED,
+            shards: 2,
+            max_batch: 8,
+            ..ServerConfig::new(mini_session_config(ds.train.len()))
+        },
+    )
+}
+
+fn bind(srv: Server, cfg: NetConfig) -> (Arc<Server>, NetServer) {
+    let srv = Arc::new(srv);
+    let net = NetServer::bind(Arc::clone(&srv), cfg).unwrap();
+    (srv, net)
+}
+
+/// Stop the edge first (joins its accept + handler threads, dropping
+/// their `Arc<Server>` clones), then drain the coordinator.
+fn teardown(srv: Arc<Server>, mut net: NetServer) {
+    net.shutdown();
+    if let Ok(owned) = Arc::try_unwrap(srv) {
+        owned.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec robustness (no sockets)
+// ---------------------------------------------------------------------------
+
+fn random_sample(rng: &mut Pcg32) -> Sample {
+    let t = 1 + rng.below(12) as usize;
+    Sample {
+        u: (0..t * 2).map(|_| rng.normal()).collect(),
+        t,
+        label: rng.below(4) as usize,
+    }
+}
+
+fn random_request(rng: &mut Pcg32) -> Request {
+    match rng.below(4) {
+        0 => Request::Labelled {
+            session: rng.next_u64(),
+            sample: random_sample(rng),
+        },
+        1 => Request::Infer {
+            session: rng.next_u64(),
+            sample: random_sample(rng),
+        },
+        2 => Request::Finalize {
+            session: rng.next_u64(),
+        },
+        _ => Request::Stats,
+    }
+}
+
+fn random_response(rng: &mut Pcg32) -> Response {
+    match rng.below(9) {
+        0 => Response::Accepted {
+            phase: "collect",
+            buffered: rng.below(1000) as usize,
+        },
+        1 => Response::Prediction {
+            class: rng.below(8) as usize,
+            scores: (0..rng.below(8)).map(|_| rng.normal()).collect(),
+        },
+        2 => Response::Trained {
+            p: rng.normal(),
+            q: rng.normal(),
+            beta: rng.uniform_in(1e-8, 1.0),
+            train_seconds: f64::from(rng.uniform()),
+        },
+        3 => Response::Observed {
+            updates: rng.next_u64(),
+            window: rng.below(512) as usize,
+        },
+        4 => Response::Adapted {
+            generation: rng.next_u64(),
+            p: rng.normal(),
+            q: rng.normal(),
+            updates: rng.next_u64(),
+        },
+        5 => Response::StatsText(format!("counter x {}\n", rng.next_u32())),
+        6 => Response::Rejected(format!("reason {}", rng.next_u32())),
+        7 => Response::Error {
+            kind: match rng.below(3) {
+                0 => ErrorKind::Panic,
+                1 => ErrorKind::Engine,
+                _ => ErrorKind::NonFinite,
+            },
+            detail: format!("detail {}", rng.next_u32()),
+        },
+        _ => Response::Bye,
+    }
+}
+
+#[test]
+fn randomized_requests_roundtrip_bitwise() {
+    let mut rng = Pcg32::seed(0xC0DEC);
+    for _ in 0..500 {
+        let req = random_request(&mut rng);
+        let bytes = encode_request(&req).unwrap();
+        assert_eq!(decode_request(&bytes).unwrap(), req);
+    }
+}
+
+#[test]
+fn randomized_responses_roundtrip_bitwise() {
+    let mut rng = Pcg32::seed(0xD0C5);
+    for _ in 0..500 {
+        let resp = random_response(&mut rng);
+        let bytes = encode_response(&resp).unwrap();
+        assert_eq!(decode_response(&bytes).unwrap(), resp);
+    }
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_panic() {
+    let mut rng = Pcg32::seed(0x7A7A);
+    for _ in 0..40 {
+        let req = random_request(&mut rng);
+        let bytes = encode_request(&req).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_request(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} decoded for {req:?}",
+                bytes.len()
+            );
+        }
+        let resp = random_response(&mut rng);
+        let bytes = encode_response(&resp).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_response(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} decoded for {resp:?}",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn garbage_bytes_decode_to_typed_errors() {
+    let mut rng = Pcg32::seed(0xBAD);
+    for _ in 0..2000 {
+        let len = rng.below(64) as usize;
+        let buf: Vec<u8> = (0..len).map(|_| (rng.next_u32() & 0xFF) as u8).collect();
+        // must return, not panic; Ok is acceptable only if re-encoding
+        // reproduces the exact bytes (an accidental valid message)
+        if let Ok(req) = decode_request(&buf) {
+            assert_eq!(encode_request(&req).unwrap(), buf);
+        }
+        if let Ok(resp) = decode_response(&buf) {
+            assert_eq!(encode_response(&resp).unwrap(), buf);
+        }
+    }
+}
+
+#[test]
+fn trailing_garbage_after_a_valid_message_is_refused() {
+    let mut bytes = encode_request(&Request::Stats).unwrap();
+    bytes.extend_from_slice(&[0, 0, 0]);
+    assert!(matches!(
+        decode_request(&bytes),
+        Err(WireError::TrailingBytes(3))
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// live TCP end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_client_roundtrips_the_full_lifecycle() {
+    let ds = mini_dataset(31);
+    let (srv, net) = bind(spawn_server(&ds), NetConfig::default());
+    let mut client = Client::connect(net.local_addr()).unwrap();
+
+    // train session 1 over the wire
+    let mut trained = false;
+    for s in &ds.train {
+        match client
+            .call(&Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap()
+        {
+            Response::Accepted { .. } => {}
+            Response::Trained { .. } => trained = true,
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+    assert!(trained, "collect target == train split must train");
+
+    // inference over the wire matches a direct in-process call bitwise
+    for s in ds.test.iter().take(4) {
+        let over_wire = client
+            .call(&Request::Infer {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap();
+        let direct = srv
+            .call(Request::Infer {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap();
+        assert_eq!(over_wire, direct);
+        assert!(matches!(over_wire, Response::Prediction { .. }));
+    }
+
+    // Finalize on a fresh session (no samples): a typed server answer,
+    // not a transport error
+    let r = client.call(&Request::Finalize { session: 9 }).unwrap();
+    assert!(
+        matches!(r, Response::Rejected(_) | Response::Error { .. }),
+        "{r:?}"
+    );
+
+    // Stats over the wire includes the edge's own instruments
+    match client.call(&Request::Stats).unwrap() {
+        Response::StatsText(t) => {
+            assert!(t.contains("net_requests_total"), "{t}");
+            assert!(t.contains("net_connections_total"), "{t}");
+        }
+        other => panic!("unexpected: {other:?}"),
+    }
+    teardown(srv, net);
+}
+
+#[test]
+fn bad_magic_is_rejected_and_the_connection_closed() {
+    let ds = mini_dataset(32);
+    let (srv, net) = bind(spawn_server(&ds), NetConfig::default());
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    client.send_raw(b"ZZ______garbage").unwrap();
+    match client.read_response().unwrap() {
+        Response::Rejected(m) => assert!(m.contains("frame"), "{m}"),
+        other => panic!("unexpected: {other:?}"),
+    }
+    // server closed the stream: the next exchange must fail
+    let err = client.call(&Request::Stats);
+    assert!(err.is_err(), "connection should be closed: {err:?}");
+    teardown(srv, net);
+}
+
+#[test]
+fn payload_garbage_keeps_the_connection_serving() {
+    let ds = mini_dataset(33);
+    let (srv, net) = bind(spawn_server(&ds), NetConfig::default());
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    // well-formed frame header, hostile payload (tag 0xEE does not exist)
+    let payload = [0xEEu8, 1, 2, 3];
+    let mut raw = Vec::new();
+    raw.extend_from_slice(b"DF");
+    raw.push(1); // version
+    raw.push(0); // request kind
+    raw.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    raw.extend_from_slice(&payload);
+    client.send_raw(&raw).unwrap();
+    match client.read_response().unwrap() {
+        Response::Rejected(m) => assert!(m.contains("decode"), "{m}"),
+        other => panic!("unexpected: {other:?}"),
+    }
+    // framing stayed aligned — the same connection still serves
+    assert!(matches!(
+        client.call(&Request::Stats).unwrap(),
+        Response::StatsText(_)
+    ));
+    teardown(srv, net);
+}
+
+#[test]
+fn oversized_frame_is_refused_up_front() {
+    let ds = mini_dataset(34);
+    let cfg = NetConfig {
+        max_frame: 1024,
+        ..NetConfig::default()
+    };
+    let (srv, net) = bind(spawn_server(&ds), cfg);
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    let mut raw = Vec::new();
+    raw.extend_from_slice(b"DF");
+    raw.push(1);
+    raw.push(0);
+    raw.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 GiB claim, no body
+    client.send_raw(&raw).unwrap();
+    match client.read_response().unwrap() {
+        Response::Rejected(m) => assert!(m.contains("frame"), "{m}"),
+        other => panic!("unexpected: {other:?}"),
+    }
+    teardown(srv, net);
+}
+
+#[test]
+fn connection_cap_refuses_with_a_framed_rejection() {
+    let ds = mini_dataset(35);
+    let cfg = NetConfig {
+        max_conns: 1,
+        ..NetConfig::default()
+    };
+    let (srv, net) = bind(spawn_server(&ds), cfg);
+    let mut first = Client::connect(net.local_addr()).unwrap();
+    assert!(matches!(
+        first.call(&Request::Stats).unwrap(),
+        Response::StatsText(_)
+    ));
+    // second connection is over the cap: refused before any request
+    let mut second = Client::connect(net.local_addr()).unwrap();
+    match second.read_response().unwrap() {
+        Response::Rejected(m) => assert!(m.contains("capacity"), "{m}"),
+        other => panic!("unexpected: {other:?}"),
+    }
+    teardown(srv, net);
+}
+
+/// An engine that sleeps in the hot operations so a short net-side call
+/// budget deterministically expires.
+struct SlowEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl Engine for SlowEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> anyhow::Result<f32> {
+        thread::sleep(self.delay);
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> anyhow::Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+
+    fn infer(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w_tilde: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        thread::sleep(self.delay);
+        self.inner.infer(s, mask, p, q, w_tilde)
+    }
+
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+}
+
+#[test]
+fn shard_backpressure_becomes_a_wire_visible_rejection() {
+    let ds = mini_dataset(36);
+    let srv = Server::spawn(
+        Box::new(SlowEngine {
+            inner: NativeEngine::new(8, 2),
+            delay: Duration::from_millis(400),
+        }),
+        ServerConfig {
+            queue_cap: 2,
+            seed: 0xFEED,
+            shards: 1,
+            max_batch: 8,
+            ..ServerConfig::new(mini_session_config(1))
+        },
+    );
+    let cfg = NetConfig {
+        call_timeout: Duration::from_millis(50),
+        ..NetConfig::default()
+    };
+    let (srv, net) = bind(srv, cfg);
+    let mut client = Client::connect(net.local_addr()).unwrap();
+    // collect target 1 → the first labelled sample trains for ~400 ms,
+    // far past the 50 ms edge budget
+    match client
+        .call(&Request::Labelled {
+            session: 0,
+            sample: ds.train[0].clone(),
+        })
+        .unwrap()
+    {
+        Response::Rejected(m) => assert!(m.contains("transport"), "{m}"),
+        other => panic!("unexpected: {other:?}"),
+    }
+    teardown(srv, net);
+}
