@@ -57,6 +57,27 @@ impl CheckpointConfig {
     }
 }
 
+/// Probe whether `dir` can actually take a checkpoint write: create it
+/// if missing, then create-and-remove a probe file. A read-only mount or
+/// a path squatted by a regular file both fail here, which is exactly
+/// what `/readyz` wants to know *before* the next cadence write discovers
+/// it the hard way. The probe name is fixed — concurrent probes race
+/// benignly (worst case one removes the other's file; both saw a
+/// successful create).
+pub fn dir_writable(dir: &Path) -> bool {
+    if fs::create_dir_all(dir).is_err() {
+        return false;
+    }
+    let probe = dir.join(".readyz-probe");
+    match fs::write(&probe, b"probe") {
+        Ok(()) => {
+            let _ = fs::remove_file(&probe);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
 /// Why a checkpoint record failed to decode. Corruption is an expected
 /// runtime condition (torn disk, bit rot, foreign file) — every variant
 /// is a typed error; the decoder never panics on any input.

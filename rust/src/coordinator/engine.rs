@@ -205,6 +205,16 @@ pub trait Engine: Send {
         })
     }
 
+    /// Whether the engine is currently serving through a degraded
+    /// fallback datapath (the quantized engine's f32 fallback). The
+    /// coordinator journals transitions — paired with
+    /// [`generation`](Self::generation) moving, this tells fallback
+    /// flips apart from recoveries. Purely parametric engines never
+    /// fall back.
+    fn fell_back(&self) -> bool {
+        false
+    }
+
     /// Create an independent replica of this engine for another shard
     /// thread (see `coordinator::server`). Engines whose backend cannot
     /// be replicated return `None`, and the server degrades to fewer

@@ -1,0 +1,308 @@
+//! Minimal blocking HTTP endpoint for observability scrapes.
+//!
+//! Prometheus (or `curl`) speaks a very small slice of HTTP/1.1: one
+//! `GET` line, a few ignorable headers, and a close-delimited response
+//! body. This module implements exactly that slice over the standard
+//! library's `TcpListener` — no HTTP framework, no async runtime —
+//! because the image vendors no crates and a scrape endpoint must not
+//! compete with the serve path for complexity.
+//!
+//! Three routes:
+//!
+//! | route      | answer                                               |
+//! |------------|------------------------------------------------------|
+//! | `/metrics` | the registry in Prometheus text format 0.0.4         |
+//! | `/healthz` | `200 ok` while the process is up (liveness)          |
+//! | `/readyz`  | `200 ready`, or `503` + reason from [`Server::readiness`] |
+//!
+//! The accept loop is **serial**: one scrape is parsed, answered and
+//! closed before the next is accepted. Scrape bodies are a few KB and
+//! render off the registry's internal locks in microseconds, so a slow
+//! or malicious client can delay other scrapers but never the serving
+//! shards — read and write timeouts bound each connection to ~2 s of
+//! exporter time. Liveness endpoints that can wedge the data plane are
+//! worse than none.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::server::Server;
+use crate::log_warn;
+
+/// Per-connection socket budget: a scraper that cannot send one request
+/// line or drain a few KB of body inside this window loses its turn.
+const IO_TIMEOUT: Duration = Duration::from_millis(2000);
+
+/// Cap on the request head we will buffer. Real scrape requests are a
+/// few hundred bytes; anything larger is not Prometheus.
+const MAX_HEAD: usize = 8 * 1024;
+
+/// The observability endpoint. Owns its accept thread; dropping it (or
+/// calling [`shutdown`](MetricsExporter::shutdown)) stops the loop and
+/// joins the thread.
+pub struct MetricsExporter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsExporter {
+    /// Bind `addr` (e.g. `"127.0.0.1:9091"`; port 0 picks a free port)
+    /// and start answering scrapes against `server`'s registry.
+    pub fn bind(server: Arc<Server>, addr: &str) -> io::Result<MetricsExporter> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            thread::Builder::new()
+                .name("dfr-metrics-http".to_string())
+                .spawn(move || accept_loop(listener, server, stop))?
+        };
+        Ok(MetricsExporter {
+            addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the endpoint thread. Idempotent; also
+    /// run by `Drop`.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, server: Arc<Server>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(e) => {
+                log_warn!("metrics http: accept failed: {e}");
+                thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        // per-connection errors are the client's problem, not ours
+        let _ = serve_one(stream, &server);
+    }
+}
+
+/// Read one request head, route it, write one close-delimited response.
+fn serve_one(mut stream: TcpStream, server: &Server) -> io::Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let path = match read_request_path(&mut stream)? {
+        Some(p) => p,
+        None => {
+            return respond(
+                &mut stream,
+                "400 Bad Request",
+                "text/plain; charset=utf-8",
+                "bad request\n",
+            )
+        }
+    };
+    match path.as_str() {
+        "/metrics" => {
+            let body = server.metrics.render_prometheus();
+            respond(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+            )
+        }
+        "/healthz" => respond(&mut stream, "200 OK", "text/plain; charset=utf-8", "ok\n"),
+        "/readyz" => match server.readiness() {
+            Ok(()) => respond(&mut stream, "200 OK", "text/plain; charset=utf-8", "ready\n"),
+            Err(why) => respond(
+                &mut stream,
+                "503 Service Unavailable",
+                "text/plain; charset=utf-8",
+                &format!("not ready: {why}\n"),
+            ),
+        },
+        _ => respond(
+            &mut stream,
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found; routes: /metrics /healthz /readyz\n",
+        ),
+    }
+}
+
+/// Parse the request line out of the head. Returns `None` on anything
+/// that is not a plausible `GET <path> HTTP/1.x` head (the caller
+/// answers 400). Query strings are stripped — Prometheus appends none,
+/// but humans with browsers do.
+fn read_request_path(stream: &mut TcpStream) -> io::Result<Option<String>> {
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                break
+            }
+            Err(e) => return Err(e),
+        };
+        head.extend_from_slice(&buf[..n]);
+        if head.len() > MAX_HEAD {
+            return Ok(None);
+        }
+        if head.windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+        // tolerate bare-LF clients (netcat-by-hand)
+        if head.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let line = match text.lines().next() {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    match (parts.next(), parts.next()) {
+        (Some("GET"), Some(path)) => {
+            let path = path.split('?').next().unwrap_or(path);
+            Ok(Some(path.to_string()))
+        }
+        _ => Ok(None),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, content_type: &str, body: &str) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::NativeEngine;
+    use crate::coordinator::protocol::Request;
+    use crate::coordinator::server::ServerConfig;
+    use crate::coordinator::session::SessionConfig;
+
+    fn serving_pair() -> (Arc<Server>, MetricsExporter) {
+        let mut scfg = SessionConfig::new(2, 2, 20);
+        scfg.train.nx = 8;
+        let cfg = ServerConfig {
+            shards: 2,
+            ..ServerConfig::new(scfg)
+        };
+        let server = Arc::new(Server::spawn(Box::new(NativeEngine::new(8, 2)), cfg));
+        let exporter = MetricsExporter::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        (server, exporter)
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").unwrap();
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn routes_and_shutdown() {
+        let (server, mut exporter) = serving_pair();
+        let addr = exporter.local_addr();
+
+        let (head, body) = http_get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "ok\n");
+
+        let (head, _) = http_get(addr, "/readyz");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+        let (head, body) = http_get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("version=0.0.4"), "{head}");
+        assert!(body.contains("dfr_"), "no dfr_ families in:\n{body}");
+
+        let (head, _) = http_get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        exporter.shutdown();
+        if let Ok(owned) = Arc::try_unwrap(server) {
+            owned.shutdown();
+        }
+    }
+
+    #[test]
+    fn bad_request_line_is_400() {
+        let (server, mut exporter) = serving_pair();
+        let mut s = TcpStream::connect(exporter.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "BREW /coffee HTCPCP/1.0\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+        exporter.shutdown();
+        if let Ok(owned) = Arc::try_unwrap(server) {
+            owned.shutdown();
+        }
+    }
+
+    #[test]
+    fn metrics_reflect_served_traffic() {
+        let (server, mut exporter) = serving_pair();
+        let _ = server.call(Request::Stats).unwrap();
+        let (_, body) = http_get(exporter.local_addr(), "/metrics");
+        assert!(
+            body.lines().any(|l| l.starts_with("dfr_requests_total")),
+            "requests family missing:\n{body}"
+        );
+        assert!(
+            body.lines().any(|l| l.starts_with("dfr_shards_active 2")),
+            "shards_active gauge missing:\n{body}"
+        );
+        exporter.shutdown();
+        if let Ok(owned) = Arc::try_unwrap(server) {
+            owned.shutdown();
+        }
+    }
+}

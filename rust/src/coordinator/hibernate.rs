@@ -61,7 +61,8 @@ use super::checkpoint::{decode_session, encode_session};
 use super::session::{Session, SessionConfig, SessionSnapshot};
 use crate::data::zipstore::{read_archive, write_archive, Entry};
 use crate::log_warn;
-use crate::util::metrics::{Counter, Registry};
+use crate::util::metrics::{Counter, Gauge, Registry};
+use crate::util::trace::{EventKind, EventLog};
 
 /// Hibernation policy knobs (server-wide; each shard applies them to
 /// its own session map).
@@ -272,10 +273,13 @@ pub struct ShardHibernator {
     touch: HashMap<u64, (u64, Instant)>,
     hibernated_total: Arc<Counter>,
     rehydrated_total: Arc<Counter>,
-    resident_gauge: Arc<Counter>,
-    hibernated_gauge: Arc<Counter>,
+    resident_gauge: Arc<Gauge>,
+    hibernated_gauge: Arc<Gauge>,
     hibernate_errors: Arc<Counter>,
     rehydrate_errors: Arc<Counter>,
+    /// operational journal for park/rehydrate transitions; `None` in
+    /// unit tests that build a hibernator without a server around it
+    events: Option<Arc<EventLog>>,
 }
 
 impl ShardHibernator {
@@ -295,10 +299,11 @@ impl ShardHibernator {
             touch: HashMap::new(),
             hibernated_total: metrics.counter_labelled("sessions_hibernated_total", &labels),
             rehydrated_total: metrics.counter_labelled("sessions_rehydrated_total", &labels),
-            resident_gauge: metrics.counter_labelled("resident_sessions", &labels),
-            hibernated_gauge: metrics.counter_labelled("hibernated_sessions", &labels),
+            resident_gauge: metrics.gauge_labelled("resident_sessions", &labels),
+            hibernated_gauge: metrics.gauge_labelled("hibernated_sessions", &labels),
             hibernate_errors: metrics.counter_labelled("hibernate_errors_total", &labels),
             rehydrate_errors: metrics.counter_labelled("rehydrate_errors_total", &labels),
+            events: None,
         };
         if corrupt > 0 {
             h.rehydrate_errors.add(corrupt);
@@ -307,8 +312,16 @@ impl ShardHibernator {
                 cfg.dir
             );
         }
-        h.hibernated_gauge.set(h.store.len() as u64);
+        h.hibernated_gauge.set(h.store.len() as i64);
         Ok(h)
+    }
+
+    /// Attach the server's event journal so park/rehydrate transitions
+    /// land in `Request::Events` alongside shard deaths and generation
+    /// rolls. Optional: library users (and the unit tests below) run
+    /// without one.
+    pub fn set_events(&mut self, events: Arc<EventLog>) {
+        self.events = Some(events);
     }
 
     /// The shard loop's `recv_timeout` period when the idle clock is
@@ -346,13 +359,21 @@ impl ShardHibernator {
         match Session::restore(snap, cfg.clone()) {
             Ok(sess) => {
                 self.rehydrated_total.inc();
-                self.hibernated_gauge.set(self.store.len() as u64);
+                self.hibernated_gauge.set(self.store.len() as i64);
                 self.note_touch(id);
+                if let Some(ev) = &self.events {
+                    ev.push(
+                        EventKind::HibernateRehydrate,
+                        self.shard as u32,
+                        id,
+                        format!("{} still parked on this shard", self.store.len()),
+                    );
+                }
                 Some(sess)
             }
             Err(e) => {
                 self.rehydrate_errors.inc();
-                self.hibernated_gauge.set(self.store.len() as u64);
+                self.hibernated_gauge.set(self.store.len() as i64);
                 log_warn!(
                     "shard {}: dropping unrestorable hibernated session {id}: {e}",
                     self.shard
@@ -373,7 +394,7 @@ impl ShardHibernator {
         }
         match self.store.take(snap.id) {
             Ok(Some(parked)) => {
-                self.hibernated_gauge.set(self.store.len() as u64);
+                self.hibernated_gauge.set(self.store.len() as i64);
                 if parked.mutations > snap.mutations {
                     parked
                 } else {
@@ -383,7 +404,7 @@ impl ShardHibernator {
             Ok(None) => snap,
             Err(e) => {
                 self.rehydrate_errors.inc();
-                self.hibernated_gauge.set(self.store.len() as u64);
+                self.hibernated_gauge.set(self.store.len() as i64);
                 log_warn!(
                     "shard {}: conflict check for session {} failed: {e}",
                     self.shard,
@@ -406,7 +427,15 @@ impl ShardHibernator {
                 sessions.remove(&id);
                 self.touch.remove(&id);
                 self.hibernated_total.inc();
-                self.hibernated_gauge.set(self.store.len() as u64);
+                self.hibernated_gauge.set(self.store.len() as i64);
+                if let Some(ev) = &self.events {
+                    ev.push(
+                        EventKind::HibernatePark,
+                        self.shard as u32,
+                        id,
+                        format!("{} now parked on this shard", self.store.len()),
+                    );
+                }
                 true
             }
             Err(e) => {
@@ -473,7 +502,7 @@ impl ShardHibernator {
 
     /// Publish the resident level (single writer: the owning shard).
     pub fn report_resident(&self, resident: usize) {
-        self.resident_gauge.set(resident as u64);
+        self.resident_gauge.set(resident as i64);
     }
 }
 

@@ -25,6 +25,15 @@
 //! an LRU cap / idle clock by [`hibernate`] (zipstore-backed, same
 //! record format as checkpoints), and remote clients reach the whole
 //! thing through the framed TCP edge in [`net`] — see DESIGN.md §16.
+//!
+//! Observability rides alongside the serve path without touching its
+//! allocation budget: every request carries a trace id whose per-stage
+//! spans land in lock-free per-shard rings ([`crate::util::trace`]),
+//! operational transitions (shard deaths, generation rolls, quantizer
+//! fallbacks, hibernation moves, checkpoint writes) go to a bounded
+//! event journal, and [`exporter`] answers `/metrics` (Prometheus text
+//! 0.0.4), `/healthz` and `/readyz` over a dependency-free HTTP
+//! endpoint — see DESIGN.md §17.
 //
 // The serving path must never take the process down on a recoverable
 // fault, so panicking escape hatches are banned module-wide outside
@@ -33,6 +42,7 @@
 
 pub mod checkpoint;
 pub mod engine;
+pub mod exporter;
 pub mod faulty;
 pub mod hibernate;
 pub mod net;
@@ -40,7 +50,8 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use checkpoint::{CheckpointConfig, CheckpointError, ShardCheckpointer};
+pub use checkpoint::{dir_writable, CheckpointConfig, CheckpointError, ShardCheckpointer};
+pub use exporter::MetricsExporter;
 pub use engine::{
     scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, PjrtEngine, Recalibration,
     ReservoirUpdate,

@@ -50,7 +50,7 @@ use super::protocol::{
 };
 use super::server::Server;
 use crate::log_warn;
-use crate::util::metrics::{Counter, Histogram};
+use crate::util::metrics::{Counter, Gauge, Histogram};
 
 /// First two bytes of every frame.
 pub const FRAME_MAGIC: [u8; 2] = *b"DF";
@@ -165,7 +165,7 @@ struct NetMetrics {
     requests: Arc<Counter>,
     frame_errors: Arc<Counter>,
     decode_errors: Arc<Counter>,
-    active_gauge: Arc<Counter>,
+    active_gauge: Arc<Gauge>,
     latency: Arc<Histogram>,
 }
 
@@ -198,7 +198,7 @@ impl NetServer {
             requests: server.metrics.counter("net_requests_total"),
             frame_errors: server.metrics.counter("net_frame_errors_total"),
             decode_errors: server.metrics.counter("net_decode_errors_total"),
-            active_gauge: server.metrics.counter("net_active_connections"),
+            active_gauge: server.metrics.gauge("net_active_connections"),
             latency: server.metrics.histogram("net_request_latency"),
         });
         let accept = {
@@ -282,7 +282,7 @@ fn accept_loop(
             continue;
         }
         active.fetch_add(1, Ordering::Relaxed);
-        net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+        net.active_gauge.inc();
         let handle = {
             let server = Arc::clone(&server);
             let cfg = cfg.clone();
@@ -294,7 +294,7 @@ fn accept_loop(
                 .spawn(move || {
                     handle_conn(stream, &server, &cfg, &stop, &net);
                     active.fetch_sub(1, Ordering::Relaxed);
-                    net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+                    net.active_gauge.dec();
                 })
         };
         match handle {
@@ -310,7 +310,7 @@ fn accept_loop(
             }
             Err(e) => {
                 active.fetch_sub(1, Ordering::Relaxed);
-                net.active_gauge.set(active.load(Ordering::Relaxed) as u64);
+                net.active_gauge.dec();
                 log_warn!("net: could not spawn connection handler: {e}");
             }
         }

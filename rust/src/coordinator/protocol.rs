@@ -32,6 +32,22 @@ pub enum Request {
     Finalize { session: u64 },
     /// Metrics snapshot.
     Stats,
+    /// The newest `n` completed request traces as JSON lines (one
+    /// object per line; see `util::trace::TraceRecord::to_json_line`).
+    /// Answered inline by the server handle from the shared trace hub —
+    /// never queued, so traces stay readable while shards are saturated.
+    Traces { n: usize },
+    /// The newest `n` operational events (shard deaths/respawns,
+    /// generation rolls, quant fallback flips, quarantines, hibernation
+    /// churn, checkpoint writes) as JSON lines. Answered inline like
+    /// `Traces`.
+    Events { n: usize },
+    /// Internal liveness probe used by the `/readyz` endpoint: enqueued
+    /// per shard to verify the queue accepts work; the shard answers
+    /// `Bye` immediately. Like `Shutdown` it has no wire tag and is
+    /// rejected by the public call paths — only the health prober sends
+    /// it, with a reply channel it may drop.
+    Ping,
     /// Drain marker used by `Server::shutdown`: the receiving shard
     /// answers everything queued ahead of it, acks with `Bye`, and keeps
     /// serving until the server drops its queue. Sending this through
@@ -81,6 +97,10 @@ pub enum Response {
     },
     /// Metrics text.
     StatsText(String),
+    /// Trace dump: JSON lines, newest-last (`Request::Traces`).
+    Traces(String),
+    /// Event-journal dump: JSON lines, newest-last (`Request::Events`).
+    Events(String),
     /// Request rejected (backpressure or bad session state).
     Rejected(String),
     /// The request was accepted but processing failed — a panic was
@@ -114,7 +134,46 @@ impl Request {
             Request::Labelled { session, .. }
             | Request::Infer { session, .. }
             | Request::Finalize { session } => Some(*session),
-            Request::Stats | Request::Shutdown => None,
+            Request::Stats
+            | Request::Traces { .. }
+            | Request::Events { .. }
+            | Request::Ping
+            | Request::Shutdown => None,
+        }
+    }
+
+    /// Trace kind code — the `REQ_*` wire tag for wire-encodable
+    /// variants, 0 for internal markers (`Ping`, `Shutdown`). Mirrored
+    /// by `util::trace::kind_name`.
+    pub fn kind_code(&self) -> u8 {
+        match self {
+            Request::Labelled { .. } => REQ_LABELLED,
+            Request::Infer { .. } => REQ_INFER,
+            Request::Finalize { .. } => REQ_FINALIZE,
+            Request::Stats => REQ_STATS,
+            Request::Traces { .. } => REQ_TRACES,
+            Request::Events { .. } => REQ_EVENTS,
+            Request::Ping | Request::Shutdown => 0,
+        }
+    }
+}
+
+impl Response {
+    /// Trace outcome code — the `RESP_*` wire tag. Mirrored by
+    /// `util::trace::outcome_name`.
+    pub fn kind_code(&self) -> u8 {
+        match self {
+            Response::Accepted { .. } => RESP_ACCEPTED,
+            Response::Prediction { .. } => RESP_PREDICTION,
+            Response::Trained { .. } => RESP_TRAINED,
+            Response::Observed { .. } => RESP_OBSERVED,
+            Response::Adapted { .. } => RESP_ADAPTED,
+            Response::StatsText(_) => RESP_STATS_TEXT,
+            Response::Traces(_) => RESP_TRACES,
+            Response::Events(_) => RESP_EVENTS,
+            Response::Rejected(_) => RESP_REJECTED,
+            Response::Error { .. } => RESP_ERROR,
+            Response::Bye => RESP_BYE,
         }
     }
 }
@@ -359,6 +418,8 @@ const REQ_LABELLED: u8 = 1;
 const REQ_INFER: u8 = 2;
 const REQ_FINALIZE: u8 = 3;
 const REQ_STATS: u8 = 4;
+const REQ_TRACES: u8 = 5;
+const REQ_EVENTS: u8 = 6;
 
 /// Encode a request payload (no frame header — `coordinator::net` adds
 /// that). `Shutdown` is refused: it is a process-local drain marker, and
@@ -381,6 +442,23 @@ pub fn encode_request(req: &Request) -> Result<Vec<u8>, WireError> {
             put_u64(&mut buf, *session);
         }
         Request::Stats => buf.push(REQ_STATS),
+        Request::Traces { n } => {
+            buf.push(REQ_TRACES);
+            let n = u32::try_from(*n)
+                .map_err(|_| WireError::Invalid(format!("trace count {n} exceeds u32")))?;
+            put_u32(&mut buf, n);
+        }
+        Request::Events { n } => {
+            buf.push(REQ_EVENTS);
+            let n = u32::try_from(*n)
+                .map_err(|_| WireError::Invalid(format!("event count {n} exceeds u32")))?;
+            put_u32(&mut buf, n);
+        }
+        Request::Ping => {
+            return Err(WireError::NotWire(
+                "Ping is the internal readiness probe; remote peers health-check via /readyz",
+            ));
+        }
         Request::Shutdown => {
             return Err(WireError::NotWire(
                 "Shutdown is a per-shard drain marker; stop the server with Server::shutdown",
@@ -405,6 +483,12 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
         },
         REQ_FINALIZE => Request::Finalize { session: r.u64()? },
         REQ_STATS => Request::Stats,
+        REQ_TRACES => Request::Traces {
+            n: r.u32()? as usize,
+        },
+        REQ_EVENTS => Request::Events {
+            n: r.u32()? as usize,
+        },
         tag => return Err(WireError::BadTag(tag)),
     };
     r.finish()?;
@@ -420,6 +504,8 @@ const RESP_STATS_TEXT: u8 = 6;
 const RESP_REJECTED: u8 = 7;
 const RESP_ERROR: u8 = 8;
 const RESP_BYE: u8 = 9;
+const RESP_TRACES: u8 = 10;
+const RESP_EVENTS: u8 = 11;
 
 /// Encode a response payload. Fallible for the same reason the zip
 /// writer is: a count that does not fit its wire field is refused with
@@ -470,6 +556,14 @@ pub fn encode_response(resp: &Response) -> Result<Vec<u8>, WireError> {
             buf.push(RESP_STATS_TEXT);
             put_str(&mut buf, text)?;
         }
+        Response::Traces(text) => {
+            buf.push(RESP_TRACES);
+            put_str(&mut buf, text)?;
+        }
+        Response::Events(text) => {
+            buf.push(RESP_EVENTS);
+            put_str(&mut buf, text)?;
+        }
         Response::Rejected(reason) => {
             buf.push(RESP_REJECTED);
             put_str(&mut buf, reason)?;
@@ -516,6 +610,8 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
             updates: r.u64()?,
         },
         RESP_STATS_TEXT => Response::StatsText(r.string()?),
+        RESP_TRACES => Response::Traces(r.string()?),
+        RESP_EVENTS => Response::Events(r.string()?),
         RESP_REJECTED => Response::Rejected(r.string()?),
         RESP_ERROR => {
             let code = r.u8()?;
@@ -561,6 +657,8 @@ mod tests {
             Request::Infer { session: u64::MAX, sample },
             Request::Finalize { session: 0 },
             Request::Stats,
+            Request::Traces { n: 32 },
+            Request::Events { n: 0 },
         ];
         for req in cases {
             let bytes = encode_request(&req).unwrap();
@@ -569,13 +667,17 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_is_not_wire_encodable() {
+    fn internal_markers_are_not_wire_encodable() {
         assert!(matches!(
             encode_request(&Request::Shutdown),
             Err(WireError::NotWire(_))
         ));
-        // and no tag decodes to it: the tag after Stats is unknown
-        assert_eq!(decode_request(&[5]), Err(WireError::BadTag(5)));
+        assert!(matches!(
+            encode_request(&Request::Ping),
+            Err(WireError::NotWire(_))
+        ));
+        // and no tag decodes to them: the tag after Events is unknown
+        assert_eq!(decode_request(&[7]), Err(WireError::BadTag(7)));
     }
 
     #[test]
@@ -610,6 +712,8 @@ mod tests {
             Response::Observed { updates: 99, window: 8 },
             Response::Adapted { generation: 4, p: 1.0, q: 2.0, updates: 12 },
             Response::StatsText("a\nmultiline ☃ report".into()),
+            Response::Traces("{\"trace_id\":1}\n{\"trace_id\":2}\n".into()),
+            Response::Events("{\"kind\":\"shard_death\"}\n".into()),
             Response::Rejected("queue full".into()),
             Response::Error { kind: ErrorKind::NonFinite, detail: "nan".into() },
             Response::Bye,

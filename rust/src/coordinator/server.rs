@@ -107,11 +107,35 @@ use super::hibernate::{HibernateConfig, ShardHibernator};
 use super::faulty::{InjectedPanic, ShardKill};
 use super::protocol::{ErrorKind, Request, Response};
 use super::session::{FeedOutcome, InferError, Phase, Session, SessionConfig, SessionSnapshot};
-use crate::util::metrics::{Counter, Registry};
+use crate::util::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::util::trace::{self, EventKind, EventLog, Stage, TraceHub, TraceRecord, NO_SESSION};
 use crate::{log_error, log_warn};
 
-/// A queued request with its reply channel.
-type Envelope = (Request, mpsc::Sender<Response>);
+/// Capacity of the server-wide operational event journal
+/// (`Request::Events`); evictions past it are counted, not silent.
+const EVENT_LOG_CAP: usize = 1024;
+
+/// A queued request with its reply channel, trace id and enqueue stamp.
+struct Envelope {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    /// Trace id minted at the public call edge (0 = untraced internal).
+    trace: u64,
+    /// When the envelope was built — queue residency (`queue_wait`,
+    /// including any backpressure backoff) is measured from here.
+    enqueued: Instant,
+}
+
+impl Envelope {
+    fn new(req: Request, reply: mpsc::Sender<Response>, trace: u64) -> Self {
+        Envelope {
+            req,
+            reply,
+            trace,
+            enqueued: Instant::now(),
+        }
+    }
+}
 
 /// Server configuration.
 #[derive(Clone)]
@@ -146,6 +170,13 @@ pub struct ServerConfig {
     /// rehydrates them on next touch — see `coordinator::hibernate`
     /// and DESIGN.md §16.
     pub hibernate: Option<HibernateConfig>,
+    /// Emit a structured WARN line with the per-stage span breakdown for
+    /// any request whose total latency (enqueue → reply) exceeds this
+    /// many milliseconds. `None` disables the slow-request log.
+    pub slow_request_ms: Option<u64>,
+    /// Per-shard trace ring capacity: how many completed request traces
+    /// each shard retains for `Request::Traces`. Clamped to ≥ 1.
+    pub trace_ring: usize,
 }
 
 impl ServerConfig {
@@ -162,6 +193,8 @@ impl ServerConfig {
             checkpoint: None,
             drain_timeout: Duration::from_secs(5),
             hibernate: None,
+            slow_request_ms: None,
+            trace_ring: 256,
         }
     }
 }
@@ -210,6 +243,12 @@ const SHUTDOWN_VIA_CALL: &str =
     "Shutdown is a per-shard drain marker and would only drain one shard; \
      use Server::shutdown";
 
+/// Why the public call paths refuse `Request::Ping` (it is the
+/// readiness probe's queue check, not a wire request — remote peers
+/// health-check through the exporter's `/readyz`).
+const PING_VIA_CALL: &str =
+    "Ping is the internal readiness probe; health-check via /readyz";
+
 /// Per-shard queue senders behind mutexes, so the supervisor can swap in
 /// a respawned shard's sender while callers keep cloning the current one
 /// (lock → clone → unlock; no lock is held across a send).
@@ -242,6 +281,10 @@ pub struct Server {
     stopping: Arc<AtomicBool>,
     drain_timeout: Duration,
     queue_retries: Arc<Counter>,
+    hub: Arc<TraceHub>,
+    events: Arc<EventLog>,
+    shards_active: Arc<Gauge>,
+    checkpoint_dir: Option<std::path::PathBuf>,
     pub metrics: Arc<Registry>,
 }
 
@@ -279,7 +322,10 @@ impl Server {
         // engine pays compilation now, not during recovery
         let template = engines[0].fork();
         let metrics = Arc::new(Registry::default());
-        metrics.counter("shards_active").add(shards as u64);
+        let shards_active = metrics.gauge("shards_active");
+        shards_active.add(shards as i64);
+        let hub = Arc::new(TraceHub::new(shards, cfg.trace_ring, cfg.slow_request_ms));
+        let events = Arc::new(EventLog::new(EVENT_LOG_CAP));
         // pre-register the fleet counters so a Stats snapshot shows them
         // at zero before the first fault
         for name in [
@@ -322,8 +368,17 @@ impl Server {
             // a failed thread spawn at startup is unrecoverable resource
             // exhaustion — nothing to degrade to
             #[allow(clippy::expect_used)]
-            let (tx, h) = spawn_shard(i, eng, cfg.clone(), Arc::clone(&metrics), snaps, per_shard_cap)
-                .expect("spawn shard thread");
+            let (tx, h) = spawn_shard(
+                i,
+                eng,
+                cfg.clone(),
+                Arc::clone(&metrics),
+                snaps,
+                per_shard_cap,
+                Arc::clone(&hub),
+                Arc::clone(&events),
+            )
+            .expect("spawn shard thread");
             txs.push(Mutex::new(tx));
             handles.push(Some(h));
         }
@@ -337,6 +392,8 @@ impl Server {
             metrics: Arc::clone(&metrics),
             stopping: Arc::clone(&stopping),
             per_shard_cap,
+            hub: Arc::clone(&hub),
+            events: Arc::clone(&events),
         };
         #[allow(clippy::expect_used)]
         let supervisor = thread::Builder::new()
@@ -344,12 +401,17 @@ impl Server {
             .spawn(move || supervise(sup))
             .expect("spawn supervisor thread");
         let queue_retries = metrics.counter("queue_retries_total");
+        let checkpoint_dir = cfg.checkpoint.as_ref().map(|c| c.dir.clone());
         Server {
             slots,
             supervisor: Some(supervisor),
             stopping,
             drain_timeout: cfg.drain_timeout,
             queue_retries,
+            hub,
+            events,
+            shards_active,
+            checkpoint_dir,
             metrics,
         }
     }
@@ -359,6 +421,61 @@ impl Server {
     /// live count at any instant is the `shards_active` metric.
     pub fn shards(&self) -> usize {
         self.slots.txs.len()
+    }
+
+    /// The server's trace hub: id mint, per-shard trace rings and the
+    /// slow-request threshold.
+    pub fn trace_hub(&self) -> &Arc<TraceHub> {
+        &self.hub
+    }
+
+    /// The server's operational event journal (`Request::Events`).
+    pub fn events(&self) -> &Arc<EventLog> {
+        &self.events
+    }
+
+    /// Live shard count right now (the `shards_active` gauge — dips
+    /// while the supervisor is burying and respawning a dead shard).
+    pub fn shards_active(&self) -> i64 {
+        self.shards_active.get()
+    }
+
+    /// Readiness probe backing the exporter's `/readyz`: every shard
+    /// slot live (`shards_active == shards`), every shard queue
+    /// accepting a [`Request::Ping`] probe (a wedged or saturated queue
+    /// refuses it), and the checkpoint directory — when configured —
+    /// still writable. Returns the first failing condition as a
+    /// human-readable reason.
+    pub fn readiness(&self) -> Result<(), String> {
+        let live = self.shards_active.get();
+        let want = self.shards() as i64;
+        if live != want {
+            return Err(format!("{live}/{want} shards active"));
+        }
+        for shard in 0..self.shards() {
+            // the probe only checks that the queue accepts work; the
+            // shard answers `Bye` into the dropped channel, harmlessly
+            let (rtx, _rrx) = mpsc::channel();
+            match self
+                .slots
+                .sender(shard)
+                .try_send(Envelope::new(Request::Ping, rtx, 0))
+            {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(_)) => {
+                    return Err(format!("shard {shard}: queue saturated"));
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    return Err(format!("shard {shard}: queue disconnected"));
+                }
+            }
+        }
+        if let Some(dir) = &self.checkpoint_dir {
+            if !checkpoint::dir_writable(dir) {
+                return Err(format!("checkpoint dir {} not writable", dir.display()));
+            }
+        }
+        Ok(())
     }
 
     /// The shard a request will be routed to.
@@ -384,19 +501,32 @@ impl Server {
     /// request drops the reply sender, surfacing
     /// [`CallError::ReplyLost`] instead of blocking forever.
     pub fn call(&self, req: Request) -> Result<Response, CallError> {
-        if matches!(req, Request::Stats) {
-            return Ok(Response::StatsText(self.metrics.render()));
-        }
-        if matches!(req, Request::Shutdown) {
-            return Ok(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
+        if let Some(resp) = self.inline_answer(&req) {
+            return Ok(resp);
         }
         let shard = self.route(&req);
         let (rtx, rrx) = mpsc::channel();
         self.slots
             .sender(shard)
-            .send((req, rtx))
+            .send(Envelope::new(req, rtx, self.hub.mint()))
             .map_err(|_| CallError::ShardDown { shard })?;
         rrx.recv().map_err(|_| CallError::ReplyLost { shard })
+    }
+
+    /// Requests the server handle answers without entering any shard
+    /// queue: observability reads (`Stats`/`Traces`/`Events`) stay
+    /// instant even when every shard is saturated with slow trainings,
+    /// and the internal markers (`Shutdown`, `Ping`) are refused on the
+    /// public paths. `None` means "route to a shard".
+    fn inline_answer(&self, req: &Request) -> Option<Response> {
+        match req {
+            Request::Stats => Some(Response::StatsText(self.metrics.render())),
+            Request::Traces { n } => Some(Response::Traces(self.hub.last_json(*n))),
+            Request::Events { n } => Some(Response::Events(self.events.last_json(*n))),
+            Request::Shutdown => Some(Response::Rejected(SHUTDOWN_VIA_CALL.into())),
+            Request::Ping => Some(Response::Rejected(PING_VIA_CALL.into())),
+            _ => None,
+        }
     }
 
     /// Non-blocking send; `Ok(None)` means the target shard's queue is
@@ -407,16 +537,16 @@ impl Server {
         req: Request,
     ) -> Result<Option<mpsc::Receiver<Response>>, CallError> {
         let (rtx, rrx) = mpsc::channel();
-        if matches!(req, Request::Stats) {
-            let _ = rtx.send(Response::StatsText(self.metrics.render()));
-            return Ok(Some(rrx));
-        }
-        if matches!(req, Request::Shutdown) {
-            let _ = rtx.send(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
+        if let Some(resp) = self.inline_answer(&req) {
+            let _ = rtx.send(resp);
             return Ok(Some(rrx));
         }
         let shard = self.route(&req);
-        match self.slots.sender(shard).try_send((req, rtx)) {
+        match self
+            .slots
+            .sender(shard)
+            .try_send(Envelope::new(req, rtx, self.hub.mint()))
+        {
             Ok(()) => Ok(Some(rrx)),
             Err(mpsc::TrySendError::Full(_)) => Ok(None),
             Err(mpsc::TrySendError::Disconnected(_)) => Err(CallError::ShardDown { shard }),
@@ -429,16 +559,13 @@ impl Server {
     /// sender so a request submitted while the supervisor is respawning
     /// the shard lands on the fresh replica instead of failing fast.
     pub fn call_timeout(&self, req: Request, timeout: Duration) -> Result<Response, CallError> {
-        if matches!(req, Request::Stats) {
-            return Ok(Response::StatsText(self.metrics.render()));
-        }
-        if matches!(req, Request::Shutdown) {
-            return Ok(Response::Rejected(SHUTDOWN_VIA_CALL.into()));
+        if let Some(resp) = self.inline_answer(&req) {
+            return Ok(resp);
         }
         let deadline = Instant::now() + timeout;
         let shard = self.route(&req);
         let (rtx, rrx) = mpsc::channel();
-        let mut env = (req, rtx);
+        let mut env = Envelope::new(req, rtx, self.hub.mint());
         let mut backoff = Duration::from_micros(100);
         loop {
             let (returned, was_down) = match self.slots.sender(shard).try_send(env) {
@@ -489,7 +616,7 @@ impl Server {
             // wedged shard can leave its queue full, and a dead one
             // leaves it disconnected — both are skipped at the deadline
             // (the shutdown-vs-dead-shard race).
-            let mut env = (Request::Shutdown, rtx);
+            let mut env = Envelope::new(Request::Shutdown, rtx, 0);
             let sent = loop {
                 match self.slots.sender(shard).try_send(env) {
                     Ok(()) => break true,
@@ -550,6 +677,8 @@ struct Supervisor {
     metrics: Arc<Registry>,
     stopping: Arc<AtomicBool>,
     per_shard_cap: usize,
+    hub: Arc<TraceHub>,
+    events: Arc<EventLog>,
 }
 
 fn supervise(mut sup: Supervisor) {
@@ -571,8 +700,14 @@ fn supervise(mut sup: Supervisor) {
             if sup.stopping.load(Ordering::SeqCst) {
                 break;
             }
-            sup.metrics.counter("shards_active").sub(1);
+            sup.metrics.gauge("shards_active").dec();
             sup.metrics.counter("shard_deaths_total").inc();
+            sup.events.push(
+                EventKind::ShardDeath,
+                shard as u32,
+                NO_SESSION,
+                "worker thread exited outside shutdown".into(),
+            );
             log_warn!("shard {shard} died; respawning from the reserve replica");
             let Some(engine) = sup.template.as_ref().and_then(|t| t.fork()) else {
                 log_error!(
@@ -600,12 +735,20 @@ fn supervise(mut sup: Supervisor) {
                 Arc::clone(&sup.metrics),
                 snaps,
                 sup.per_shard_cap,
+                Arc::clone(&sup.hub),
+                Arc::clone(&sup.events),
             ) {
                 Ok((tx, h)) => {
                     sup.slots.set(shard, tx);
                     sup.handles[shard] = Some(h);
-                    sup.metrics.counter("shards_active").add(1);
+                    sup.metrics.gauge("shards_active").inc();
                     sup.metrics.counter("shard_respawns_total").inc();
+                    sup.events.push(
+                        EventKind::ShardRespawn,
+                        shard as u32,
+                        NO_SESSION,
+                        "respawned from the reserve replica".into(),
+                    );
                 }
                 Err(e) => log_error!("shard {shard}: respawn thread failed: {e}"),
             }
@@ -636,6 +779,7 @@ fn supervise(mut sup: Supervisor) {
 
 /// Create a shard's bounded queue and worker thread (used both at spawn
 /// and by the supervisor when respawning a dead shard).
+#[allow(clippy::too_many_arguments)]
 fn spawn_shard(
     shard: usize,
     engine: Box<dyn Engine>,
@@ -643,11 +787,13 @@ fn spawn_shard(
     metrics: Arc<Registry>,
     snapshots: Vec<SessionSnapshot>,
     per_shard_cap: usize,
+    hub: Arc<TraceHub>,
+    events: Arc<EventLog>,
 ) -> std::io::Result<(mpsc::SyncSender<Envelope>, thread::JoinHandle<()>)> {
     let (tx, rx) = mpsc::sync_channel::<Envelope>(per_shard_cap);
     let h = thread::Builder::new()
         .name(format!("dfr-shard-{shard}"))
-        .spawn(move || shard_loop(shard, engine, cfg, rx, metrics, snapshots))?;
+        .spawn(move || shard_loop(shard, engine, cfg, rx, metrics, snapshots, hub, events))?;
     Ok((tx, h))
 }
 
@@ -670,19 +816,23 @@ struct PlanTag {
 /// Decide which requests of a drain batch can share one batched feature
 /// sweep, and run it. Runs under the shard's panic guard: a panic here
 /// aborts only the plan (all lanes fall back to per-call processing).
+///
+/// Returns the microseconds spent inside the forward sweep itself, so
+/// the caller can split the cycle's time into the `plan` and
+/// `batch_forward` trace stages.
 fn plan_batch(
     batch: &[Envelope],
     sessions: &BTreeMap<u64, Session>,
     engine: &dyn Engine,
     plan: &mut Vec<Option<PlanTag>>,
     feat_bufs: &mut Vec<Vec<f32>>,
-) {
+) -> u64 {
     use crate::coordinator::engine::FeatureRequest;
     let mut reqs: Vec<FeatureRequest<'_>> = Vec::new();
     let engine_gen = engine.generation();
     let score_exact = engine.scores_from_features_exact();
-    for (req, _) in batch {
-        let tag = match req {
+    for env in batch {
+        let tag = match &env.req {
             Request::Labelled { session, sample } => sessions
                 .get(session)
                 .filter(|sess| {
@@ -737,16 +887,18 @@ fn plan_batch(
         while feat_bufs.len() < reqs.len() {
             feat_bufs.push(Vec::new());
         }
-        if engine
-            .features_batch_into(&reqs, &mut feat_bufs[..reqs.len()])
-            .is_err()
-        {
+        let sweep = Instant::now();
+        let swept = engine.features_batch_into(&reqs, &mut feat_bufs[..reqs.len()]);
+        let sweep_us = sweep.elapsed().as_micros() as u64;
+        if swept.is_err() {
             // per-call processing will surface the error per
             // request with its usual mapping
             plan.iter_mut().for_each(|t| *t = None);
         }
+        sweep_us
     } else {
         plan.iter_mut().for_each(|t| *t = None);
+        0
     }
 }
 
@@ -761,6 +913,51 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     } else {
         "opaque panic payload"
     }
+}
+
+/// Ship a reply and complete its trace: the send runs under the `reply`
+/// span, then the accumulator is closed and the record lands in the
+/// shard's ring (plus the per-stage latency histograms). Allocation-free
+/// on the steady-state path — only the hub's gated slow-request log
+/// formats.
+#[allow(clippy::too_many_arguments)]
+fn finish_request(
+    reply: mpsc::Sender<Response>,
+    resp: Response,
+    trace_id: u64,
+    enqueued: Instant,
+    kind: u8,
+    session: u64,
+    shard: u32,
+    depth: u16,
+    stage_hists: &[Arc<Histogram>; trace::N_STAGES],
+    hub: &TraceHub,
+) {
+    let outcome = resp.kind_code();
+    {
+        let _span = trace::span(Stage::Reply);
+        let _ = reply.send(resp);
+    }
+    let stages_us = trace::take_stages();
+    let total_us = enqueued.elapsed().as_micros() as u64;
+    // zero-length spans are skipped, not recorded: a stage that never
+    // ran would otherwise flood bucket 0 of every histogram
+    for (hist, &us) in stage_hists.iter().zip(stages_us.iter()) {
+        if us > 0 {
+            hist.record_us(us);
+        }
+    }
+    hub.record(&TraceRecord {
+        trace_id,
+        session,
+        shard,
+        kind,
+        outcome,
+        batch: depth,
+        end_us: trace::epoch_us(),
+        total_us,
+        stages_us,
+    });
 }
 
 /// One shard: exclusively owns its session map and engine replica, and
@@ -791,6 +988,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 /// streaming state is never folded forward. The fault harness's
 /// [`ShardKill`] payload is deliberately re-raised so the supervisor's
 /// respawn path stays testable.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard: usize,
     engine: Box<dyn Engine>,
@@ -798,6 +996,8 @@ fn shard_loop(
     rx: mpsc::Receiver<Envelope>,
     metrics: Arc<Registry>,
     snapshots: Vec<SessionSnapshot>,
+    hub: Arc<TraceHub>,
+    events: Arc<EventLog>,
 ) {
     // the hibernation policy head opens the shard's store first so
     // checkpoint-vs-store id collisions resolve before any session is
@@ -805,7 +1005,10 @@ fn shard_loop(
     // this shard (loudly) rather than failing the spawn
     let mut hib = cfg.hibernate.as_ref().and_then(|h| {
         match ShardHibernator::new(h, shard, &metrics) {
-            Ok(hb) => Some(hb),
+            Ok(mut hb) => {
+                hb.set_events(Arc::clone(&events));
+                Some(hb)
+            }
             Err(e) => {
                 log_warn!("shard {shard}: hibernation disabled (store open failed): {e}");
                 None
@@ -869,6 +1072,19 @@ fn shard_loop(
     let nonfinite_q = metrics.counter_labelled("nonfinite_quarantined_total", &labels);
     let ckpt_writes = metrics.counter_labelled("checkpoint_writes_total", &labels);
     let ckpt_write_errs = metrics.counter_labelled("checkpoint_write_errors_total", &labels);
+    // per-stage latency histograms fed by the trace spans (DESIGN.md
+    // §17): indexed by `Stage`, so span totals land in the same log₂
+    // buckets the Prometheus exposition renders
+    let stage_hists: [Arc<Histogram>; trace::N_STAGES] = std::array::from_fn(|i| {
+        let stage_labels: [(&str, &str); 2] = [
+            ("shard", shard_label.as_str()),
+            ("stage", Stage::ALL[i].name()),
+        ];
+        metrics.histogram_labelled("stage_latency", &stage_labels)
+    });
+    // shared-datapath generation watermark: a quantized engine bumps it
+    // exactly when its f32 fallback flips either way (journaled below)
+    let mut engine_gen = engine.generation();
 
     let max_batch = cfg.max_batch.max(1);
     let mut batch: Vec<Envelope> = Vec::with_capacity(max_batch);
@@ -914,6 +1130,10 @@ fn shard_loop(
             }
         }
         batch_size.record_secs(batch.len() as f64 * 1e-6);
+        // the drain boundary: queue_wait for every envelope of this
+        // cycle ends here, and the shared cycle spans start
+        let drained_at = Instant::now();
+        let depth = batch.len().min(u16::MAX as usize) as u16;
 
         // ---- rehydrate: any requested session parked in the store
         // comes back *before* planning, so the batched feature sweep
@@ -921,8 +1141,8 @@ fn shard_loop(
         // responses are bitwise-equal to never having hibernated
         if let Some(h) = hib.as_mut() {
             touched.clear();
-            for (req, _) in &batch {
-                if let Some(id) = req.session_id() {
+            for env in &batch {
+                if let Some(id) = env.req.session_id() {
                     touched.push(id);
                     if !sessions.contains_key(&id) && h.knows(id) {
                         if let Some(sess) = h.rehydrate(id, &cfg.session) {
@@ -937,22 +1157,49 @@ fn shard_loop(
         // A panic inside the sweep only costs the plan — every lane
         // falls back to the per-call path, which carries its own guard.
         plan.clear();
+        let plan_sw = Instant::now();
+        let mut forward_us = 0u64;
         let planned = catch_unwind(AssertUnwindSafe(|| {
-            plan_batch(&batch, &sessions, engine.as_ref(), &mut plan, &mut feat_bufs);
+            plan_batch(&batch, &sessions, engine.as_ref(), &mut plan, &mut feat_bufs)
         }));
-        if let Err(payload) = planned {
-            if payload.is::<ShardKill>() {
-                resume_unwind(payload);
+        match planned {
+            Ok(sweep_us) => forward_us = sweep_us,
+            Err(payload) => {
+                if payload.is::<ShardKill>() {
+                    resume_unwind(payload);
+                }
+                plan_panics.inc();
+                plan.clear();
+                plan.resize(batch.len(), None);
             }
-            plan_panics.inc();
-            plan.clear();
-            plan.resize(batch.len(), None);
         }
+        // planning minus the sweep = the `plan` stage; the sweep itself
+        // is `batch_forward` — both attributed in full to every request
+        // of the cycle (each one waited for them)
+        let plan_us = (plan_sw.elapsed().as_micros() as u64).saturating_sub(forward_us);
 
         // ---- process: strict arrival order, batched features where
         // still valid
-        for (idx, (req, reply)) in batch.drain(..).enumerate() {
+        for (idx, env) in batch.drain(..).enumerate() {
+            let Envelope {
+                req,
+                reply,
+                trace,
+                enqueued,
+            } = env;
             req_counter.inc();
+            let kind = req.kind_code();
+            // open the span accumulator: queue residency and the shared
+            // cycle spans are attributed to every request of the cycle
+            trace::begin();
+            trace::add_stage_us(
+                Stage::QueueWait,
+                drained_at.saturating_duration_since(enqueued).as_micros() as u64,
+            );
+            trace::add_stage_us(Stage::Plan, plan_us);
+            trace::add_stage_us(Stage::BatchForward, forward_us);
+            let session_id = req.session_id();
+            let mutating = matches!(req, Request::Labelled { .. } | Request::Finalize { .. });
             match &req {
                 Request::Shutdown => {
                     // Final snapshot at a well-defined boundary (every
@@ -960,10 +1207,25 @@ fn shard_loop(
                     // ack the drain and keep serving stragglers until
                     // the server drops our sender and `recv` disconnects.
                     if let Some(ck) = ckpt.as_mut() {
+                        let _span = trace::span(Stage::Checkpoint);
                         match ck.write_now(sessions.values()) {
-                            Ok(()) => ckpt_writes.inc(),
+                            Ok(()) => {
+                                ckpt_writes.inc();
+                                events.push(
+                                    EventKind::CheckpointWrite,
+                                    shard as u32,
+                                    NO_SESSION,
+                                    format!("final checkpoint ({} sessions)", sessions.len()),
+                                );
+                            }
                             Err(e) => {
                                 ckpt_write_errs.inc();
+                                events.push(
+                                    EventKind::CheckpointError,
+                                    shard as u32,
+                                    NO_SESSION,
+                                    format!("final checkpoint failed: {e}"),
+                                );
                                 log_warn!("shard {shard}: final checkpoint failed: {e}");
                             }
                         }
@@ -974,25 +1236,99 @@ fn shard_loop(
                     // Stragglers racing in behind the marker rehydrate
                     // on touch like any other cold session.
                     if let Some(h) = hib.as_mut() {
+                        let _span = trace::span(Stage::Checkpoint);
                         h.hibernate_all(&mut sessions);
                         h.report_resident(sessions.len());
                     }
-                    let _ = reply.send(Response::Bye);
+                    finish_request(
+                        reply,
+                        Response::Bye,
+                        trace,
+                        enqueued,
+                        kind,
+                        NO_SESSION,
+                        shard as u32,
+                        depth,
+                        &stage_hists,
+                        &hub,
+                    );
                     continue;
                 }
                 // unreachable through `call`/`try_call` (answered inline
                 // by the server handle); kept so a queued Stats still works
                 Request::Stats => {
-                    let _ = reply.send(Response::StatsText(metrics.render()));
+                    finish_request(
+                        reply,
+                        Response::StatsText(metrics.render()),
+                        trace,
+                        enqueued,
+                        kind,
+                        NO_SESSION,
+                        shard as u32,
+                        depth,
+                        &stage_hists,
+                        &hub,
+                    );
+                    continue;
+                }
+                // the readiness probe: answering proves this queue
+                // still drains (the prober usually drops the receiver)
+                Request::Ping => {
+                    finish_request(
+                        reply,
+                        Response::Bye,
+                        trace,
+                        enqueued,
+                        kind,
+                        NO_SESSION,
+                        shard as u32,
+                        depth,
+                        &stage_hists,
+                        &hub,
+                    );
+                    continue;
+                }
+                // answered inline by the server handle on the public
+                // paths; kept here so a directly-queued probe still works
+                Request::Traces { n } => {
+                    finish_request(
+                        reply,
+                        Response::Traces(hub.last_json(*n)),
+                        trace,
+                        enqueued,
+                        kind,
+                        NO_SESSION,
+                        shard as u32,
+                        depth,
+                        &stage_hists,
+                        &hub,
+                    );
+                    continue;
+                }
+                Request::Events { n } => {
+                    finish_request(
+                        reply,
+                        Response::Events(events.last_json(*n)),
+                        trace,
+                        enqueued,
+                        kind,
+                        NO_SESSION,
+                        shard as u32,
+                        depth,
+                        &stage_hists,
+                        &hub,
+                    );
                     continue;
                 }
                 _ => {}
             }
-            let session_id = req.session_id();
-            let mutating = matches!(req, Request::Labelled { .. } | Request::Finalize { .. });
             let guarded = catch_unwind(AssertUnwindSafe(|| match req {
                 // handled before the guard; kept total for the compiler
-                Request::Shutdown | Request::Stats => Response::Bye,
+                Request::Shutdown
+                | Request::Stats
+                | Request::Ping
+                | Request::Traces { .. }
+                | Request::Events { .. } => Response::Bye,
                 Request::Labelled { session, sample } => {
                     let sess = sessions.entry(session).or_insert_with(|| {
                         Session::new(session, cfg.session.clone(), cfg.seed)
@@ -1026,6 +1362,12 @@ fn shard_loop(
                     let quarantined = sess.quarantine_events().saturating_sub(q_before);
                     if quarantined > 0 {
                         nonfinite_q.add(quarantined);
+                        events.push(
+                            EventKind::Quarantine,
+                            shard as u32,
+                            session,
+                            format!("{quarantined} non-finite feature quarantine(s)"),
+                        );
                     }
                     match outcome {
                         Ok(FeedOutcome::Buffered(n)) => Response::Accepted {
@@ -1071,6 +1413,12 @@ fn shard_loop(
                                 reservoir_updates.inc();
                             }
                             refeaturizes.inc();
+                            events.push(
+                                EventKind::GenerationRoll,
+                                shard as u32,
+                                session,
+                                format!("session generation {generation}"),
+                            );
                             Response::Adapted {
                                 generation,
                                 p,
@@ -1142,6 +1490,12 @@ fn shard_loop(
                                     // sample reseeds via batch retrain
                                     sess.flag_degraded();
                                     nonfinite_q.inc();
+                                    events.push(
+                                        EventKind::Quarantine,
+                                        shard as u32,
+                                        session,
+                                        "non-finite inference scores quarantined".into(),
+                                    );
                                     Response::Error {
                                         kind: ErrorKind::NonFinite,
                                         detail: "non-finite scores quarantined; \
@@ -1217,22 +1571,69 @@ fn shard_loop(
                     }
                 }
             };
-            let _ = reply.send(resp);
+            // the cadence checkpoint runs before the reply ships so its
+            // cost lands in this request's `checkpoint` span (the next
+            // request could not start any earlier either way)
             if mutating {
                 if let Some(ck) = ckpt.as_mut() {
                     // cadence counts mutating *requests* (even rejected
                     // ones) — a cheap, deterministic trigger
                     if ck.note_mutation() {
+                        let _span = trace::span(Stage::Checkpoint);
                         match ck.write_now(sessions.values()) {
-                            Ok(()) => ckpt_writes.inc(),
+                            Ok(()) => {
+                                ckpt_writes.inc();
+                                events.push(
+                                    EventKind::CheckpointWrite,
+                                    shard as u32,
+                                    session_id.unwrap_or(NO_SESSION),
+                                    format!("cadence checkpoint ({} sessions)", sessions.len()),
+                                );
+                            }
                             Err(e) => {
                                 ckpt_write_errs.inc();
+                                events.push(
+                                    EventKind::CheckpointError,
+                                    shard as u32,
+                                    session_id.unwrap_or(NO_SESSION),
+                                    format!("checkpoint write failed: {e}"),
+                                );
                                 log_warn!("shard {shard}: checkpoint write failed: {e}");
                             }
                         }
                     }
                 }
             }
+            // journal shared-datapath generation moves: a quantized
+            // engine bumps its generation exactly when the f32 fallback
+            // flips (either way), so the flip direction is `fell_back`
+            let gen_now = engine.generation();
+            if gen_now != engine_gen {
+                engine_gen = gen_now;
+                let flip = if engine.fell_back() {
+                    EventKind::QuantFallback
+                } else {
+                    EventKind::QuantRecover
+                };
+                events.push(
+                    flip,
+                    shard as u32,
+                    session_id.unwrap_or(NO_SESSION),
+                    format!("engine datapath generation {gen_now}"),
+                );
+            }
+            finish_request(
+                reply,
+                resp,
+                trace,
+                enqueued,
+                kind,
+                session_id.unwrap_or(NO_SESSION),
+                shard as u32,
+                depth,
+                &stage_hists,
+                &hub,
+            );
         }
 
         // ---- hibernation bookkeeping: stamp the LRU clock for every
@@ -1517,6 +1918,36 @@ mod tests {
             })
             .unwrap();
         assert!(matches!(r, Response::Accepted { .. }), "{r:?}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn traces_events_ping_and_readiness() {
+        let (srv, ds) = server();
+        for s in ds.train.iter().take(3) {
+            srv.call(Request::Labelled {
+                session: 1,
+                sample: s.clone(),
+            })
+            .unwrap();
+        }
+        // a request's trace is recorded just after its reply ships, so
+        // after 3 completed calls at least 2 records are durably visible
+        match srv.call(Request::Traces { n: 10 }).unwrap() {
+            Response::Traces(json) => {
+                assert!(json.lines().count() >= 2, "{json}");
+                assert!(json.contains("\"kind\":\"labelled\""), "{json}");
+                assert!(json.contains("\"stages_us\""), "{json}");
+            }
+            other => panic!("{other:?}"),
+        }
+        let r = srv.call(Request::Events { n: 10 }).unwrap();
+        assert!(matches!(r, Response::Events(_)), "{r:?}");
+        // Ping is the internal readiness probe: public paths refuse it
+        let r = srv.call(Request::Ping).unwrap();
+        assert!(matches!(r, Response::Rejected(_)), "{r:?}");
+        assert_eq!(srv.shards_active(), srv.shards() as i64);
+        assert!(srv.readiness().is_ok());
         srv.shutdown();
     }
 

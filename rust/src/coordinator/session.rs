@@ -59,6 +59,7 @@ use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, T
 use crate::linalg::ridge::{OnlineRidge, OnlineRidgeState, RidgeSolution};
 use crate::runtime::executor::TrainState;
 use crate::util::prng::Pcg32;
+use crate::util::trace::{self, Stage};
 
 /// Session lifecycle phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -557,15 +558,19 @@ impl Session {
             // re-featurize at the CURRENT serving params (they were
             // budget-validated at the last roll; the candidate's drift
             // keeps accumulating toward its own recalibrated roll)
+            let _span = trace::span(Stage::OnlineRidge);
             datapath_refold = Some(self.reseed_online(engine, false)?);
         }
-        engine.features_into(
-            &sample,
-            &self.mask,
-            self.gen_p,
-            self.gen_q,
-            &mut self.feat_scratch,
-        )?;
+        {
+            let _span = trace::span(Stage::ScoreFold);
+            engine.features_into(
+                &sample,
+                &self.mask,
+                self.gen_p,
+                self.gen_q,
+                &mut self.feat_scratch,
+            )?;
+        }
         self.fold_observation(engine, sample, datapath_refold)
     }
 
@@ -633,6 +638,10 @@ impl Session {
             self.buffer.push_back(sample);
             return self.train(engine);
         }
+        // the rank-1 fold, W̃ refresh and adaptation step below are one
+        // OnlineRidge span; the guard is dropped before the batch-retrain
+        // fallback so `train`'s own span does not double-count the period
+        let span = trace::span(Stage::OnlineRidge);
         let Some(online) = self.online.as_mut() else {
             return Ok(FeedOutcome::Rejected(
                 "internal: streaming fold without an online factor".into(),
@@ -703,6 +712,7 @@ impl Session {
             let cap = self.err_ring.len();
             if cap > 0 && self.err_len == cap && self.err_count as f32 > threshold * cap as f32 {
                 self.reset_err();
+                drop(span);
                 return self.train(engine);
             }
         }
@@ -784,6 +794,7 @@ impl Session {
     /// old solution/factor are untouched until the success path, so a
     /// Serve-phase session keeps serving its previous generation).
     fn train(&mut self, engine: &dyn Engine) -> Result<FeedOutcome> {
+        let _span = trace::span(Stage::OnlineRidge);
         let entry_phase = self.phase;
         let out = self.train_inner(engine);
         match &out {
@@ -908,6 +919,7 @@ impl Session {
             && self.online.is_some()
             && engine.generation() != self.engine_generation
         {
+            let _span = trace::span(Stage::OnlineRidge);
             return Ok(Some(self.reseed_online(engine, false)?));
         }
         Ok(None)
@@ -935,6 +947,7 @@ impl Session {
                 phase: self.phase,
             });
         };
+        let _span = trace::span(Stage::ScoreFold);
         let scores = engine
             .infer(sample, &self.mask, self.gen_p, self.gen_q, &sol.w_tilde)
             .map_err(InferError::Engine)?;
@@ -971,6 +984,7 @@ impl Session {
                 phase: self.phase,
             });
         };
+        let _span = trace::span(Stage::ScoreFold);
         let mut scores = Vec::new();
         scores_from_r_tilde(&sol.w_tilde, features, &mut scores);
         let class = crate::linalg::ridge::argmax(&scores);

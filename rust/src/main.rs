@@ -163,6 +163,18 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
             "hibernate-dir",
             "hibernate",
             "hibernation store root (used with --max-resident / --hibernate-after)",
+        )
+        .opt(
+            "metrics-listen",
+            "",
+            "observability HTTP endpoint serving /metrics (Prometheus text 0.0.4), \
+             /healthz and /readyz (e.g. 127.0.0.1:9091; empty = off)",
+        )
+        .opt(
+            "slow-request-ms",
+            "0",
+            "log a WARN with the per-stage span breakdown for any request slower than \
+             this many ms end-to-end (0 = off)",
         );
     let p = cmd.parse(argv)?;
     let prof = profile_arg(&p)?;
@@ -256,12 +268,29 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         );
         server_cfg.hibernate = Some(hib);
     }
+    match p.get_u64("slow-request-ms")? {
+        0 => {}
+        ms => server_cfg.slow_request_ms = Some(ms),
+    }
     let call_timeout = match p.get_u64("call-timeout-ms")? {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms)),
     };
-    let srv = Server::spawn(engine, server_cfg);
+    let srv = std::sync::Arc::new(Server::spawn(engine, server_cfg));
     log_info!("coordinator: {} shard(s)", srv.shards());
+    let mut exporter = match p.get("metrics-listen") {
+        "" => None,
+        addr => {
+            let ex =
+                dfr_edge::coordinator::MetricsExporter::bind(std::sync::Arc::clone(&srv), addr)
+                    .map_err(|e| format!("metrics: bind {addr} failed: {e}"))?;
+            log_info!(
+                "observability endpoint on http://{}/ (/metrics /healthz /readyz)",
+                ex.local_addr()
+            );
+            Some(ex)
+        }
+    };
     // one call surface for the demo loop: bounded when a deadline is
     // set (survives a shard respawn), blocking otherwise
     let rpc = |req: Request| -> Result<Response, String> {
@@ -314,16 +343,26 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         print!("{t}");
     }
     match p.get("listen") {
-        "" => srv.shutdown(),
+        "" => {
+            // stop the scrape endpoint first so its Arc clone is gone
+            // and the coordinator can be unwrapped for a clean drain
+            if let Some(ex) = exporter.as_mut() {
+                ex.shutdown();
+            }
+            drop(exporter);
+            if let Ok(owned) = std::sync::Arc::try_unwrap(srv) {
+                owned.shutdown();
+            }
+        }
         addr => {
             // hand the trained coordinator to the TCP edge and serve
-            // remote sessions until the process is killed
+            // remote sessions until the process is killed (the metrics
+            // endpoint, when bound, keeps serving alongside)
             let net_cfg = dfr_edge::coordinator::NetConfig {
                 addr: addr.to_string(),
                 call_timeout: call_timeout.unwrap_or(std::time::Duration::from_secs(5)),
                 ..dfr_edge::coordinator::NetConfig::default()
             };
-            let srv = std::sync::Arc::new(srv);
             let net = dfr_edge::coordinator::NetServer::bind(std::sync::Arc::clone(&srv), net_cfg)
                 .map_err(|e| format!("net: bind {addr} failed: {e}"))?;
             log_info!("net edge listening on {} (kill the process to stop)", net.local_addr());

@@ -293,6 +293,10 @@ impl Engine for QuantEngine {
         self.generation.get()
     }
 
+    fn fell_back(&self) -> bool {
+        self.fallback.get()
+    }
+
     fn recalibrate(&self, upd: &ReservoirUpdate) -> Result<Recalibration> {
         // rebuild the PWL LUT and re-measure its sup-error — the budget
         // below is evaluated against the freshly measured ε_f. Today the

@@ -164,12 +164,20 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+// NOTE: hand-rolled Display/Error — the image vendors no `thiserror`.
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,8 +1,14 @@
 //! Leveled logger writing to stderr, controlled by `DFR_LOG`
-//! (error|warn|info|debug|trace; default info).
+//! (error|warn|info|debug|trace; default info — an unrecognized value
+//! falls back to info with a one-time WARN naming it).
+//!
+//! Tests can install a capture sink ([`set_test_sink`]) that receives
+//! every formatted line in addition to stderr, so structured operational
+//! lines (e.g. the tracer's slow-request breakdowns) are assertable.
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -28,13 +34,32 @@ impl Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
 
+/// Capture sink for tests: receives every formatted log line that passes
+/// the level filter. Cold in production (a single relaxed-ordering load
+/// guards the lock).
+pub type Sink = Box<dyn Fn(Level, &str) + Send + 'static>;
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+static SINK_SET: AtomicU8 = AtomicU8::new(0);
+
 fn level_from_env() -> u8 {
     match std::env::var("DFR_LOG").as_deref() {
         Ok("error") => 0,
         Ok("warn") => 1,
+        Ok("info") => 2,
         Ok("debug") => 3,
         Ok("trace") => 4,
-        _ => 2,
+        Err(_) => 2,
+        Ok(other) => {
+            // default BEFORE warning so the warning itself passes the
+            // level filter without re-entering initialization
+            LEVEL.store(2, Ordering::Relaxed);
+            log(
+                Level::Warn,
+                module_path!(),
+                format_args!("unrecognized DFR_LOG value {other:?}; defaulting to info"),
+            );
+            2
+        }
     }
 }
 
@@ -59,9 +84,26 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Install (or clear, with `None`) a capture sink that receives every
+/// formatted line passing the level filter. Intended for tests asserting
+/// on operational output; lines still go to stderr as usual.
+pub fn set_test_sink(sink: Option<Sink>) {
+    SINK_SET.store(sink.is_some() as u8, Ordering::Release);
+    if let Ok(mut s) = SINK.lock() {
+        *s = sink;
+    }
+}
+
 /// Core log call — prefer the macros.
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if l <= level() {
+        if SINK_SET.load(Ordering::Acquire) != 0 {
+            if let Ok(s) = SINK.lock() {
+                if let Some(sink) = s.as_ref() {
+                    sink(l, &format!("[{} {}] {}", l.tag(), module, msg));
+                }
+            }
+        }
         let mut err = std::io::stderr().lock();
         let _ = writeln!(err, "[{} {}] {}", l.tag(), module, msg);
     }
@@ -87,6 +129,7 @@ macro_rules! log_debug {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::{Arc, Mutex as StdMutex};
 
     #[test]
     fn levels_order() {
@@ -94,5 +137,24 @@ mod tests {
         set_level(Level::Warn);
         assert_eq!(level(), Level::Warn);
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn test_sink_captures_formatted_lines() {
+        set_level(Level::Info);
+        let captured: Arc<StdMutex<Vec<String>>> = Arc::default();
+        let c = captured.clone();
+        set_test_sink(Some(Box::new(move |_, line| {
+            c.lock().unwrap().push(line.to_string());
+        })));
+        log(Level::Info, "mod", format_args!("hello {}", 42));
+        // below the filter: must not reach the sink
+        log(Level::Debug, "mod", format_args!("invisible"));
+        set_test_sink(None);
+        // after clearing, nothing more is captured
+        log(Level::Info, "mod", format_args!("late"));
+        let lines = captured.lock().unwrap();
+        assert_eq!(lines.len(), 1, "{lines:?}");
+        assert!(lines[0].contains("[INFO  mod] hello 42"), "{lines:?}");
     }
 }

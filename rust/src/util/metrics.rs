@@ -1,5 +1,6 @@
-//! Lightweight metrics: counters and latency histograms for the
-//! coordinator (request counts, per-stage latencies, queue rejections).
+//! Lightweight metrics: counters, level gauges and latency histograms for
+//! the coordinator (request counts, shard liveness, per-stage latencies,
+//! queue rejections).
 //!
 //! Metrics may carry labels (e.g. `shard="2"`): every shard of the
 //! coordinator registers its own labelled instruments in one shared
@@ -7,15 +8,34 @@
 //! and an aggregated line per metric name (counter values summed,
 //! histogram buckets merged), so a single `Request::Stats` snapshot shows
 //! the whole server *and* each shard.
+//!
+//! Two text renderings exist side by side:
+//!
+//! * [`Registry::render`] — the compact `counter name value` /
+//!   `gauge name value` / `hist name count … p99_s …` dump served by
+//!   `Request::Stats` (human- and test-oriented, aggregate lines
+//!   included).
+//! * [`Registry::render_prometheus`] — Prometheus text exposition format
+//!   0.0.4 (`# HELP`/`# TYPE`, cumulative `_bucket`/`_sum`/`_count`
+//!   series derived from the log buckets), served over HTTP by the
+//!   coordinator's `/metrics` endpoint. Only per-series lines are
+//!   emitted (no aggregates — `sum()` is the scraper's job), and every
+//!   family is prefixed `dfr_`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Number of log-scale buckets (microsecond powers of two up to ~67 s).
-const BUCKETS: usize = 27;
+///
+/// Bucket `i` counts samples whose duration `d` satisfies
+/// `2^(i-1) µs < d ≤ 2^i µs` (bucket 0: `d ≤ 1 µs`). The last bucket is
+/// the overflow bucket: anything slower than `2^(BUCKETS-2)` µs lands
+/// there, so the Prometheus rendering maps it onto `le="+Inf"`.
+pub const BUCKETS: usize = 27;
 
-/// Monotonic counter.
+/// Monotonic counter. Counters only ever go up — a level that can fall
+/// (shard liveness, resident sessions, open connections) is a [`Gauge`].
 #[derive(Default, Debug)]
 pub struct Counter(AtomicU64);
 
@@ -28,36 +48,65 @@ impl Counter {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Saturating decrement — for the few counters that track a level
-    /// rather than a rate (e.g. the coordinator's `shards_active`, which
-    /// drops when a shard dies and recovers when the supervisor respawns
-    /// it). Never wraps below zero.
-    pub fn sub(&self, n: u64) {
-        let mut cur = self.0.load(Ordering::Relaxed);
-        loop {
-            let next = cur.saturating_sub(n);
-            match self
-                .0
-                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
-            {
-                Ok(_) => return,
-                Err(observed) => cur = observed,
-            }
-        }
-    }
-
-    /// Overwrite the value — for level gauges with a single writer
-    /// (e.g. each shard's `resident_sessions{shard=…}`, re-published
-    /// after every batch cycle). The labelled aggregate stays correct
-    /// because each shard owns its own labelled instance; do not `set`
-    /// a counter that several threads also `inc`/`add`.
-    pub fn set(&self, v: u64) {
-        self.0.store(v, Ordering::Relaxed);
-    }
-
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
+}
+
+/// Level gauge: a value that rises *and* falls (shards currently alive,
+/// sessions currently resident, connections currently open).
+///
+/// Unlike the old `Counter::set`/`sub` idiom this replaces, a gauge is
+/// safe with several writers: `add`/`sub` are atomic read-modify-write
+/// ops, so concurrent increments can never be lost to a racing `set`.
+/// `set` remains available for single-writer republication (each shard
+/// re-publishing its own labelled `resident_sessions{shard=…}` level).
+#[derive(Default, Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the level. Only appropriate when this gauge instance has
+    /// a single writer (labelled per-shard instances republished by their
+    /// owning shard); multi-writer gauges must use `inc`/`dec`/`add`/`sub`.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Exact log₂ bucket index for a microsecond duration: bucket 0 holds
+/// `us ≤ 1`, bucket `i ≥ 1` holds `2^(i-1) < us ≤ 2^i`, the last bucket
+/// overflows.
+fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        ((64 - (us - 1).leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket `i` in seconds.
+fn bucket_upper_secs(i: usize) -> f64 {
+    (1u64 << i) as f64 / 1e6
 }
 
 /// Log-scale latency histogram (microsecond buckets, powers of two up to
@@ -81,9 +130,13 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn record_secs(&self, secs: f64) {
-        let us = (secs * 1e6).max(0.0) as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.record_us((secs * 1e6).max(0.0) as u64);
+    }
+
+    /// Record a duration already measured in whole microseconds (the
+    /// tracer's native unit — skips the f64 round trip).
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
     }
@@ -152,20 +205,25 @@ impl HistogramSnapshot {
         self.sum_us as f64 / self.count as f64 / 1e6
     }
 
-    /// Approximate quantile from the log buckets (upper bound of bucket).
+    /// Approximate quantile from the log buckets (upper bound of the
+    /// bucket holding the target sample). `q = 0` is the first non-empty
+    /// bucket's upper bound, `q = 1` the last non-empty bucket's; an
+    /// empty histogram reports 0 for every quantile (no phantom 1 µs).
     pub fn quantile_secs(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        // target rank is at least 1: q=0 must select the first *sample*,
+        // not trip `acc >= 0` on an empty leading bucket
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
         let mut acc = 0;
         for (i, b) in self.buckets.iter().enumerate() {
             acc += b;
             if acc >= target {
-                return (1u64 << i) as f64 / 1e6;
+                return bucket_upper_secs(i);
             }
         }
-        (1u64 << (BUCKETS - 1)) as f64 / 1e6
+        bucket_upper_secs(BUCKETS - 1)
     }
 
     fn render_line(&self, key: &str) -> String {
@@ -210,6 +268,59 @@ impl MetricKey {
             .collect();
         format!("{}{{{}}}", self.name, l.join(","))
     }
+
+    /// Prometheus label block (`{k="v",…}`), empty string when unlabelled,
+    /// label values escaped per the exposition format.
+    fn prom_labels(&self, extra: Option<(&str, &str)>) -> String {
+        let mut parts: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{}=\"{}\"", prom_name_sanitize(k), prom_escape(v)))
+            .collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{}\"", prom_escape(v)));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
+/// Sanitize a metric/label name into the Prometheus charset
+/// `[a-zA-Z_][a-zA-Z0-9_]*`.
+fn prom_name_sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Escape a label value per the text exposition format: backslash, double
+/// quote and newline.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Family name for the exposition: `dfr_` prefix plus the sanitized
+/// registry name.
+fn prom_family(name: &str) -> String {
+    format!("dfr_{}", prom_name_sanitize(name))
 }
 
 /// Group a name-sorted metric map into per-name runs (`BTreeMap` keyed by
@@ -225,10 +336,12 @@ fn groups<V>(map: &BTreeMap<MetricKey, V>) -> Vec<(&str, Vec<(&MetricKey, &V)>)>
     out
 }
 
-/// A named registry of counters and histograms, shared across threads.
+/// A named registry of counters, gauges and histograms, shared across
+/// threads.
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<MetricKey, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<MetricKey, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<MetricKey, Arc<Histogram>>>,
 }
 
@@ -241,6 +354,21 @@ impl Registry {
     /// Counter with labels, e.g. `counter_labelled("requests_total", &[("shard", "0")])`.
     pub fn counter_labelled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(MetricKey::new(name, labels))
+            .or_default()
+            .clone()
+    }
+
+    /// Unlabelled level gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.gauge_labelled(name, &[])
+    }
+
+    /// Gauge with labels, e.g. `gauge_labelled("resident_sessions", &[("shard", "0")])`.
+    pub fn gauge_labelled(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(MetricKey::new(name, labels))
@@ -274,6 +402,17 @@ impl Registry {
             .sum()
     }
 
+    /// Sum of all gauges registered under `name`, across labels.
+    pub fn gauge_total(&self, name: &str) -> i64 {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.name == name)
+            .map(|(_, g)| g.get())
+            .sum()
+    }
+
     /// Merged snapshot of all histograms registered under `name`.
     pub fn histogram_total(&self, name: &str) -> HistogramSnapshot {
         let mut total = HistogramSnapshot::default();
@@ -285,11 +424,12 @@ impl Registry {
         total
     }
 
-    /// Render all metrics as text lines.
+    /// Render all metrics as compact text lines.
     ///
     /// Each metric name gets one aggregated line (`counter name value` /
-    /// `hist name count … p99_s …`); when labelled variants exist they
-    /// follow the aggregate, e.g. `counter requests_total{shard="1"} 42`.
+    /// `gauge name value` / `hist name count … p99_s …`); when labelled
+    /// variants exist they follow the aggregate, e.g.
+    /// `counter requests_total{shard="1"} 42`.
     pub fn render(&self) -> String {
         let mut out = String::new();
         {
@@ -304,6 +444,18 @@ impl Registry {
                             k.render_in_group(),
                             c.get()
                         ));
+                    }
+                }
+            }
+        }
+        {
+            let gauges = self.gauges.lock().unwrap();
+            for (name, group) in groups(&gauges) {
+                let total: i64 = group.iter().map(|(_, g)| g.get()).sum();
+                out.push_str(&format!("gauge {name} {total}\n"));
+                if group.len() > 1 || !group[0].0.labels.is_empty() {
+                    for (k, g) in group {
+                        out.push_str(&format!("gauge {} {}\n", k.render_in_group(), g.get()));
                     }
                 }
             }
@@ -325,6 +477,86 @@ impl Registry {
         }
         out
     }
+
+    /// Render all metrics in the Prometheus text exposition format 0.0.4.
+    ///
+    /// * every family is prefixed `dfr_` and announced by `# HELP` /
+    ///   `# TYPE` lines;
+    /// * only per-series lines are emitted (no aggregate duplicates —
+    ///   `sum by (…)` is the scraper's job);
+    /// * histograms become `<family>_seconds` with cumulative
+    ///   `_bucket{le="…"}` lines derived from the log₂-µs buckets
+    ///   (upper bound of bucket `i` is `2^i` µs), the overflow bucket
+    ///   mapped onto `le="+Inf"`, plus `_sum` (seconds) and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        {
+            let counters = self.counters.lock().unwrap();
+            for (name, group) in groups(&counters) {
+                let fam = prom_family(name);
+                out.push_str(&format!(
+                    "# HELP {fam} Counter `{name}` from the dfr-edge registry.\n# TYPE {fam} counter\n"
+                ));
+                for (k, c) in group {
+                    out.push_str(&format!("{fam}{} {}\n", k.prom_labels(None), c.get()));
+                }
+            }
+        }
+        {
+            let gauges = self.gauges.lock().unwrap();
+            for (name, group) in groups(&gauges) {
+                let fam = prom_family(name);
+                out.push_str(&format!(
+                    "# HELP {fam} Level gauge `{name}` from the dfr-edge registry.\n# TYPE {fam} gauge\n"
+                ));
+                for (k, g) in group {
+                    out.push_str(&format!("{fam}{} {}\n", k.prom_labels(None), g.get()));
+                }
+            }
+        }
+        {
+            let histograms = self.histograms.lock().unwrap();
+            for (name, group) in groups(&histograms) {
+                let fam = if name.ends_with("_seconds") {
+                    prom_family(name)
+                } else {
+                    format!("{}_seconds", prom_family(name))
+                };
+                out.push_str(&format!(
+                    "# HELP {fam} Log2-microsecond-bucket histogram `{name}` from the dfr-edge registry.\n# TYPE {fam} histogram\n"
+                ));
+                for (k, h) in group {
+                    let snap = h.snapshot();
+                    let mut acc = 0u64;
+                    // buckets 0..BUCKETS-2 carry honest upper bounds; the
+                    // overflow bucket only reports under +Inf
+                    for (i, b) in snap.buckets.iter().enumerate().take(BUCKETS - 1) {
+                        acc += b;
+                        out.push_str(&format!(
+                            "{fam}_bucket{} {acc}\n",
+                            k.prom_labels(Some(("le", &format!("{}", bucket_upper_secs(i))))),
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{fam}_bucket{} {}\n",
+                        k.prom_labels(Some(("le", "+Inf"))),
+                        snap.count,
+                    ));
+                    out.push_str(&format!(
+                        "{fam}_sum{} {}\n",
+                        k.prom_labels(None),
+                        snap.sum_us as f64 / 1e6,
+                    ));
+                    out.push_str(&format!(
+                        "{fam}_count{} {}\n",
+                        k.prom_labels(None),
+                        snap.count,
+                    ));
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -340,23 +572,67 @@ mod tests {
     }
 
     #[test]
-    fn counter_set_overwrites_for_level_gauges() {
-        let c = Counter::default();
-        c.add(10);
-        c.set(3);
-        assert_eq!(c.get(), 3);
-        c.set(0);
-        assert_eq!(c.get(), 0);
+    fn gauge_rises_and_falls() {
+        let g = Gauge::default();
+        g.add(3);
+        g.dec();
+        assert_eq!(g.get(), 2);
+        g.sub(10);
+        assert_eq!(g.get(), -8, "gauges may legitimately go negative");
+        g.set(7);
+        assert_eq!(g.get(), 7);
     }
 
     #[test]
-    fn counter_sub_saturates_at_zero() {
-        let c = Counter::default();
-        c.add(3);
-        c.sub(1);
-        assert_eq!(c.get(), 2);
-        c.sub(10);
-        assert_eq!(c.get(), 0);
+    fn bucket_indexing_is_exact_at_the_edges() {
+        // sub-µs and exactly-1-µs samples land in bucket 0 …
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        // … and each power of two is the *upper* bound of its bucket
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 25), 25);
+        assert_eq!(bucket_index((1 << 25) + 1), 26);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn sub_microsecond_samples_reach_bucket_zero() {
+        let h = Histogram::default();
+        h.record_secs(0.0);
+        h.record_secs(5e-7);
+        h.record_secs(1e-6);
+        // all three sit in bucket 0, so every quantile is its 1 µs bound
+        assert_eq!(h.quantile_secs(0.0), 1e-6);
+        assert_eq!(h.quantile_secs(1.0), 1e-6);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn quantile_q0_is_not_phantom() {
+        let h = Histogram::default();
+        // a single slow sample: bucket 0 is empty, so q=0 must NOT
+        // report the old phantom 1 µs from tripping `acc >= 0`
+        h.record_secs(1.0);
+        let q0 = h.quantile_secs(0.0);
+        assert!(q0 >= 1.0, "q=0 fell into an empty leading bucket: {q0}");
+        assert_eq!(h.quantile_secs(0.0), h.quantile_secs(1.0));
+        // and an empty histogram reports 0 for every quantile
+        let e = Histogram::default();
+        assert_eq!(e.quantile_secs(0.0), 0.0);
+        assert_eq!(e.quantile_secs(1.0), 0.0);
+    }
+
+    #[test]
+    fn quantile_q1_hits_last_nonempty_bucket() {
+        let h = Histogram::default();
+        h.record_secs(1e-6); // bucket 0
+        h.record_secs(3e-3); // ~3 ms
+        assert_eq!(h.quantile_secs(0.0), 1e-6);
+        let q1 = h.quantile_secs(1.0);
+        assert!(q1 >= 3e-3 && q1 < 1e-2, "{q1}");
     }
 
     #[test]
@@ -395,6 +671,18 @@ mod tests {
         // unlabelled metrics keep the legacy single-line format
         assert!(text.contains("counter other 1\n"), "{text}");
         assert!(!text.contains("other{"), "{text}");
+    }
+
+    #[test]
+    fn gauges_render_with_aggregate() {
+        let r = Registry::default();
+        r.gauge_labelled("live", &[("shard", "0")]).set(2);
+        r.gauge_labelled("live", &[("shard", "1")]).set(1);
+        assert_eq!(r.gauge_total("live"), 3);
+        let text = r.render();
+        assert!(text.contains("gauge live 3\n"), "{text}");
+        assert!(text.contains("gauge live{shard=\"0\"} 2\n"), "{text}");
+        assert!(text.contains("gauge live{shard=\"1\"} 1\n"), "{text}");
     }
 
     #[test]
@@ -437,5 +725,56 @@ mod tests {
         assert_eq!(m.count(), 100);
         // merged p99 reflects the slow histogram's tail
         assert!(m.quantile_secs(0.99) >= b.snapshot().quantile_secs(0.5));
+    }
+
+    #[test]
+    fn prometheus_families_are_typed_and_prefixed() {
+        let r = Registry::default();
+        r.counter_labelled("req_total", &[("shard", "0")]).add(3);
+        r.gauge("live").set(2);
+        r.histogram("lat").record_secs(1e-3);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE dfr_req_total counter\n"), "{text}");
+        assert!(text.contains("dfr_req_total{shard=\"0\"} 3\n"), "{text}");
+        assert!(text.contains("# TYPE dfr_live gauge\n"), "{text}");
+        assert!(text.contains("dfr_live 2\n"), "{text}");
+        assert!(text.contains("# TYPE dfr_lat_seconds histogram\n"), "{text}");
+        assert!(text.contains("dfr_lat_seconds_count 1\n"), "{text}");
+        // no aggregate duplicates: exactly one series line per family
+        assert_eq!(text.matches("\ndfr_req_total").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn prometheus_buckets_are_cumulative_and_capped_by_inf() {
+        let r = Registry::default();
+        let h = r.histogram("lat");
+        h.record_secs(5e-7); // bucket 0
+        h.record_secs(3e-6); // bucket 2
+        h.record_secs(1e2); // overflow bucket -> only under +Inf
+        let text = r.render_prometheus();
+        assert!(
+            text.contains("dfr_lat_seconds_bucket{le=\"0.000001\"} 1\n"),
+            "{text}"
+        );
+        assert!(
+            text.contains("dfr_lat_seconds_bucket{le=\"0.000004\"} 2\n"),
+            "{text}"
+        );
+        // the honest-bound buckets never claim the overflow sample …
+        assert!(
+            text.contains("dfr_lat_seconds_bucket{le=\"33.554432\"} 2\n"),
+            "{text}"
+        );
+        // … which appears only under +Inf
+        assert!(text.contains("dfr_lat_seconds_bucket{le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("dfr_lat_seconds_count 3\n"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let r = Registry::default();
+        r.counter_labelled("c", &[("path", "a\"b\\c\nd")]).inc();
+        let text = r.render_prometheus();
+        assert!(text.contains("dfr_c{path=\"a\\\"b\\\\c\\nd\"} 1\n"), "{text}");
     }
 }

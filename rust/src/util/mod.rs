@@ -17,3 +17,4 @@ pub mod proptest;
 pub mod runtimex;
 pub mod scoped_pool;
 pub mod timer;
+pub mod trace;

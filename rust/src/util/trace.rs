@@ -1,0 +1,800 @@
+//! Per-request tracing and the operational event journal.
+//!
+//! # Trace model
+//!
+//! Every request entering the coordinator gets a **trace id** minted at
+//! the public call edge (`Server::call*`, and therefore also the TCP
+//! edge, which goes through `call_timeout`). The id rides the envelope
+//! through the shard queue and batch planner; the shard loop opens a
+//! thread-local span accumulator per request ([`begin`]/[`take_stages`])
+//! and the stage taxonomy below partitions the request's wall time into
+//! **disjoint** spans, so the per-stage sum is bounded by the measured
+//! request latency:
+//!
+//! | stage          | measures                                                |
+//! |----------------|---------------------------------------------------------|
+//! | `queue_wait`   | enqueue → drained into a batch                          |
+//! | `plan`         | batch planning minus the forward sweep                  |
+//! | `batch_forward`| the node-major multi-session forward sweep              |
+//! | `score_fold`   | per-call feature extraction + scoring                   |
+//! | `online_ridge` | rank-1 fold / reseed / adaptation / (re)train           |
+//! | `checkpoint`   | durable checkpoint writes + hibernation park/rehydrate  |
+//! | `reply`        | shipping the reply                                      |
+//!
+//! Shared cycle work (`plan`, `batch_forward`) is attributed in full to
+//! every request in the cycle: each of those requests did wait for it,
+//! so the bound still holds per trace.
+//!
+//! Completed traces are recorded into **per-shard single-writer seqlock
+//! rings** ([`TraceRing`]): the shard thread writes fixed-size records
+//! word-by-word through relaxed atomics (no lock, no allocation — the
+//! steady-state serve path stays alloc-free), readers validate each
+//! slot's sequence number and simply skip slots that were overwritten
+//! mid-read. Torn reads are detected, never returned.
+//!
+//! Traces slower than the configured threshold additionally emit a
+//! structured one-line breakdown through `util::log` (allocation happens
+//! only on that gated slow path).
+//!
+//! # Event journal
+//!
+//! [`EventLog`] is a bounded mutex-guarded ring of structured
+//! operational events (shard death/respawn, generation rolls, quant
+//! fallback flips, quarantines, hibernation churn, checkpoint writes).
+//! Events are rare and always coincide with already-allocating slow
+//! paths, so a lock + `String` detail is fine there.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::log_warn;
+
+/// Number of trace stages (see module docs for the taxonomy).
+pub const N_STAGES: usize = 7;
+
+/// Disjoint request stages; `as usize` is the span-array index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    QueueWait = 0,
+    Plan = 1,
+    BatchForward = 2,
+    ScoreFold = 3,
+    OnlineRidge = 4,
+    Checkpoint = 5,
+    Reply = 6,
+}
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::QueueWait,
+        Stage::Plan,
+        Stage::BatchForward,
+        Stage::ScoreFold,
+        Stage::OnlineRidge,
+        Stage::Checkpoint,
+        Stage::Reply,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Plan => "plan",
+            Stage::BatchForward => "batch_forward",
+            Stage::ScoreFold => "score_fold",
+            Stage::OnlineRidge => "online_ridge",
+            Stage::Checkpoint => "checkpoint",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// Microseconds since the process trace epoch (first call wins).
+pub fn epoch_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// `session` value meaning "no session attached to this request".
+pub const NO_SESSION: u64 = u64::MAX;
+
+/// One completed request trace. Plain `Copy` data — fixed size, no heap —
+/// so recording stays allocation-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub trace_id: u64,
+    /// Session id, or [`NO_SESSION`].
+    pub session: u64,
+    pub shard: u32,
+    /// Request kind — mirrors the `protocol::REQ_*` wire codes
+    /// (0 = internal/other).
+    pub kind: u8,
+    /// Response kind — mirrors the `protocol::RESP_*` wire codes
+    /// (0 = reply dropped).
+    pub outcome: u8,
+    /// Drain depth of the batch cycle that served this request.
+    pub batch: u16,
+    /// Microseconds since [`epoch_us`] at which processing completed.
+    pub end_us: u64,
+    /// Total envelope residency: enqueue → reply shipped (µs).
+    pub total_us: u64,
+    /// Per-stage durations (µs), indexed by [`Stage`].
+    pub stages_us: [u64; N_STAGES],
+}
+
+/// Words per serialized record (the seqlock ring stores records as plain
+/// `u64` words so readers and the writer never form references to
+/// concurrently-mutated memory).
+const WORDS: usize = 5 + N_STAGES;
+
+impl TraceRecord {
+    pub fn stages_sum_us(&self) -> u64 {
+        self.stages_us.iter().sum()
+    }
+
+    fn to_words(self) -> [u64; WORDS] {
+        let mut w = [0u64; WORDS];
+        w[0] = self.trace_id;
+        w[1] = self.session;
+        w[2] = ((self.shard as u64) << 32)
+            | ((self.kind as u64) << 24)
+            | ((self.outcome as u64) << 16)
+            | (self.batch as u64);
+        w[3] = self.end_us;
+        w[4] = self.total_us;
+        w[5..].copy_from_slice(&self.stages_us);
+        w
+    }
+
+    fn from_words(w: &[u64; WORDS]) -> Self {
+        let mut stages_us = [0u64; N_STAGES];
+        stages_us.copy_from_slice(&w[5..]);
+        TraceRecord {
+            trace_id: w[0],
+            session: w[1],
+            shard: (w[2] >> 32) as u32,
+            kind: (w[2] >> 24) as u8,
+            outcome: (w[2] >> 16) as u8,
+            batch: w[2] as u16,
+            end_us: w[3],
+            total_us: w[4],
+            stages_us,
+        }
+    }
+
+    /// One JSON object per line (`Request::Traces` payload format).
+    pub fn to_json_line(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push_str(&format!(
+            "{{\"trace_id\":{},\"shard\":{},\"session\":",
+            self.trace_id, self.shard
+        ));
+        if self.session == NO_SESSION {
+            s.push_str("null");
+        } else {
+            s.push_str(&format!("{}", self.session));
+        }
+        s.push_str(&format!(
+            ",\"kind\":\"{}\",\"outcome\":\"{}\",\"batch\":{},\"end_us\":{},\"total_us\":{},\"stages_us\":{{",
+            kind_name(self.kind),
+            outcome_name(self.outcome),
+            self.batch,
+            self.end_us,
+            self.total_us,
+        ));
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{}", st.name(), self.stages_us[i]));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Human name for a request-kind code (mirrors `protocol::REQ_*`; 0 is
+/// reserved for internal probes).
+pub fn kind_name(k: u8) -> &'static str {
+    match k {
+        0 => "internal",
+        1 => "labelled",
+        2 => "infer",
+        3 => "finalize",
+        4 => "stats",
+        5 => "traces",
+        6 => "events",
+        _ => "unknown",
+    }
+}
+
+/// Human name for a response-kind code (mirrors `protocol::RESP_*`; 0 is
+/// "reply dropped before send").
+pub fn outcome_name(o: u8) -> &'static str {
+    match o {
+        0 => "dropped",
+        1 => "accepted",
+        2 => "prediction",
+        3 => "trained",
+        4 => "observed",
+        5 => "adapted",
+        6 => "stats",
+        7 => "rejected",
+        8 => "error",
+        9 => "bye",
+        10 => "traces",
+        11 => "events",
+        _ => "unknown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-shard seqlock ring
+// ---------------------------------------------------------------------------
+
+struct Slot {
+    /// Seqlock word: `2*(generation+1)` once generation `g`'s record is
+    /// fully written, odd while a write is in flight, 0 when never
+    /// written.
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Lock-free single-writer ring of [`TraceRecord`]s.
+///
+/// The shard thread is the only writer; any thread may snapshot. The
+/// canonical seqlock protocol is used (odd sequence while writing,
+/// `Release` publication, reader re-validation with an `Acquire` fence),
+/// over `AtomicU64` words so there is no UB-prone shared plain memory.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    /// Number of records ever pushed (monotone).
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        TraceRing {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Records ever pushed (not the currently-retained count).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Writer side — single-threaded by contract, allocation-free.
+    pub fn push(&self, rec: &TraceRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h % self.slots.len() as u64) as usize];
+        slot.seq.store(2 * h + 1, Ordering::Relaxed);
+        // odd marker must be visible before any word of the new record
+        fence(Ordering::Release);
+        let words = rec.to_words();
+        for (w, v) in slot.words.iter().zip(words.iter()) {
+            w.store(*v, Ordering::Relaxed);
+        }
+        // publish: every word store above stays before this
+        slot.seq.store(2 * (h + 1), Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Append up to the newest `n` retained records into `out`, oldest
+    /// first. Slots overwritten or mid-write during the read are skipped
+    /// (detected via the sequence word), never returned torn.
+    pub fn snapshot_last(&self, n: usize, out: &mut Vec<TraceRecord>) {
+        let h = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let avail = h.min(cap).min(n as u64);
+        for g in (h - avail)..h {
+            let slot = &self.slots[(g % cap) as usize];
+            let expect = 2 * (g + 1);
+            if slot.seq.load(Ordering::Acquire) != expect {
+                continue;
+            }
+            let mut w = [0u64; WORDS];
+            for (dst, src) in w.iter_mut().zip(slot.words.iter()) {
+                *dst = src.load(Ordering::Relaxed);
+            }
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != expect {
+                continue;
+            }
+            out.push(TraceRecord::from_words(&w));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread-local span accumulator
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct Active {
+    on: bool,
+    stages_us: [u64; N_STAGES],
+}
+
+thread_local! {
+    static CURRENT: Cell<Active> = const {
+        Cell::new(Active { on: false, stages_us: [0; N_STAGES] })
+    };
+}
+
+/// Open the thread-local span accumulator for one request. Subsequent
+/// [`span`] guards and [`add_stage_us`] calls accumulate until
+/// [`take_stages`]. No-op-cheap and allocation-free.
+pub fn begin() {
+    CURRENT.with(|c| {
+        c.set(Active {
+            on: true,
+            stages_us: [0; N_STAGES],
+        })
+    });
+}
+
+/// Close the accumulator and return the per-stage totals.
+pub fn take_stages() -> [u64; N_STAGES] {
+    CURRENT.with(|c| {
+        let cur = c.get();
+        c.set(Active {
+            on: false,
+            stages_us: [0; N_STAGES],
+        });
+        cur.stages_us
+    })
+}
+
+/// Add an externally-measured duration to a stage of the active trace
+/// (used for `queue_wait` and the shared cycle spans). No-op when no
+/// trace is active.
+pub fn add_stage_us(stage: Stage, us: u64) {
+    CURRENT.with(|c| {
+        let mut cur = c.get();
+        if cur.on {
+            cur.stages_us[stage as usize] += us;
+            c.set(cur);
+        }
+    });
+}
+
+/// RAII span: measures from construction to drop and adds the elapsed
+/// microseconds to `stage` of the active trace. Inert (a single
+/// thread-local read) when no trace is active, so instrumented library
+/// code costs nothing outside the serve loop.
+pub struct SpanGuard {
+    stage: Stage,
+    start: Instant,
+    armed: bool,
+}
+
+/// Open a [`SpanGuard`] for `stage`.
+pub fn span(stage: Stage) -> SpanGuard {
+    let armed = CURRENT.with(|c| c.get().on);
+    SpanGuard {
+        stage,
+        start: Instant::now(),
+        armed,
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            add_stage_us(self.stage, self.start.elapsed().as_micros() as u64);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hub: id minting, per-shard rings, slow-request breakdown
+// ---------------------------------------------------------------------------
+
+/// Shared tracing state for one server: the id mint, one ring per shard
+/// and the slow-request threshold.
+pub struct TraceHub {
+    rings: Vec<TraceRing>,
+    next_id: AtomicU64,
+    slow_us: u64,
+}
+
+impl TraceHub {
+    /// `slow_ms = None` disables the slow-request breakdown log.
+    pub fn new(shards: usize, ring_capacity: usize, slow_ms: Option<u64>) -> Self {
+        TraceHub {
+            rings: (0..shards.max(1))
+                .map(|_| TraceRing::new(ring_capacity))
+                .collect(),
+            next_id: AtomicU64::new(1),
+            slow_us: slow_ms.map(|ms| ms.saturating_mul(1000)).unwrap_or(0),
+        }
+    }
+
+    /// Mint a fresh trace id (never 0).
+    pub fn mint(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn ring(&self, shard: usize) -> &TraceRing {
+        &self.rings[shard % self.rings.len()]
+    }
+
+    pub fn shards(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Slow threshold in µs (0 = disabled).
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us
+    }
+
+    /// Record a completed trace: push into the shard's ring and, when it
+    /// crosses the slow threshold, emit a structured breakdown line.
+    /// The ring push is lock- and allocation-free; only the gated slow
+    /// path formats.
+    pub fn record(&self, rec: &TraceRecord) {
+        self.ring(rec.shard as usize).push(rec);
+        if self.slow_us > 0 && rec.total_us >= self.slow_us {
+            log_warn!(
+                "slow-request trace_id={} shard={} session={} kind={} outcome={} batch={} total_us={} \
+                 queue_wait_us={} plan_us={} batch_forward_us={} score_fold_us={} online_ridge_us={} \
+                 checkpoint_us={} reply_us={}",
+                rec.trace_id,
+                rec.shard,
+                rec.session as i64, // NO_SESSION renders as -1
+                kind_name(rec.kind),
+                outcome_name(rec.outcome),
+                rec.batch,
+                rec.total_us,
+                rec.stages_us[Stage::QueueWait as usize],
+                rec.stages_us[Stage::Plan as usize],
+                rec.stages_us[Stage::BatchForward as usize],
+                rec.stages_us[Stage::ScoreFold as usize],
+                rec.stages_us[Stage::OnlineRidge as usize],
+                rec.stages_us[Stage::Checkpoint as usize],
+                rec.stages_us[Stage::Reply as usize],
+            );
+        }
+    }
+
+    /// Collect the newest `n` traces across all shards (oldest first) as
+    /// JSON lines.
+    pub fn last_json(&self, n: usize) -> String {
+        let mut all = Vec::new();
+        for ring in &self.rings {
+            ring.snapshot_last(n, &mut all);
+        }
+        all.sort_by_key(|r| (r.end_us, r.trace_id));
+        let skip = all.len().saturating_sub(n);
+        let mut out = String::new();
+        for rec in &all[skip..] {
+            out.push_str(&rec.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// event journal
+// ---------------------------------------------------------------------------
+
+/// Operational event classes recorded in the [`EventLog`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    ShardDeath,
+    ShardRespawn,
+    GenerationRoll,
+    QuantFallback,
+    QuantRecover,
+    Quarantine,
+    HibernatePark,
+    HibernateRehydrate,
+    CheckpointWrite,
+    CheckpointError,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ShardDeath => "shard_death",
+            EventKind::ShardRespawn => "shard_respawn",
+            EventKind::GenerationRoll => "generation_roll",
+            EventKind::QuantFallback => "quant_fallback",
+            EventKind::QuantRecover => "quant_recover",
+            EventKind::Quarantine => "quarantine",
+            EventKind::HibernatePark => "hibernate_park",
+            EventKind::HibernateRehydrate => "hibernate_rehydrate",
+            EventKind::CheckpointWrite => "checkpoint_write",
+            EventKind::CheckpointError => "checkpoint_error",
+        }
+    }
+}
+
+/// One structured operational event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// µs since [`epoch_us`].
+    pub at_us: u64,
+    pub kind: EventKind,
+    pub shard: u32,
+    /// Session id, or [`NO_SESSION`].
+    pub session: u64,
+    pub detail: String,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Event {
+    pub fn to_json_line(&self) -> String {
+        let session = if self.session == NO_SESSION {
+            "null".to_string()
+        } else {
+            format!("{}", self.session)
+        };
+        format!(
+            "{{\"at_us\":{},\"kind\":\"{}\",\"shard\":{},\"session\":{},\"detail\":\"{}\"}}",
+            self.at_us,
+            self.kind.name(),
+            self.shard,
+            session,
+            json_escape(&self.detail),
+        )
+    }
+}
+
+/// Bounded ring of operational events. Push evicts the oldest entry once
+/// the capacity is reached (evictions are counted, not silent).
+pub struct EventLog {
+    ring: Mutex<VecDeque<Event>>,
+    cap: usize,
+    evicted: AtomicU64,
+}
+
+impl EventLog {
+    pub fn new(capacity: usize) -> Self {
+        EventLog {
+            ring: Mutex::new(VecDeque::new()),
+            cap: capacity.max(1),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Record an event (timestamped now). Events sit on rare,
+    /// already-allocating paths, so the lock + `String` are fine here —
+    /// never call this per request.
+    pub fn push(&self, kind: EventKind, shard: u32, session: u64, detail: String) {
+        let ev = Event {
+            at_us: epoch_us(),
+            kind,
+            shard,
+            session,
+            detail,
+        };
+        if let Ok(mut ring) = self.ring.lock() {
+            if ring.len() == self.cap {
+                ring.pop_front();
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+            }
+            ring.push_back(ev);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().map(|r| r.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted by the capacity bound since startup.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// The newest `n` events, oldest first, as JSON lines.
+    pub fn last_json(&self, n: usize) -> String {
+        let mut out = String::new();
+        if let Ok(ring) = self.ring.lock() {
+            let skip = ring.len().saturating_sub(n);
+            for ev in ring.iter().skip(skip) {
+                out.push_str(&ev.to_json_line());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, shard: u32, end_us: u64) -> TraceRecord {
+        TraceRecord {
+            trace_id: id,
+            session: 7,
+            shard,
+            kind: 2,
+            outcome: 2,
+            batch: 3,
+            end_us,
+            total_us: 120,
+            stages_us: [10, 20, 30, 40, 5, 0, 15],
+        }
+    }
+
+    #[test]
+    fn record_words_round_trip() {
+        let r = rec(u64::MAX - 1, u32::MAX, 99);
+        assert_eq!(TraceRecord::from_words(&r.to_words()), r);
+        let r2 = TraceRecord {
+            session: NO_SESSION,
+            kind: 255,
+            outcome: 255,
+            batch: u16::MAX,
+            ..r
+        };
+        assert_eq!(TraceRecord::from_words(&r2.to_words()), r2);
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_orders() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.push(&rec(i, 0, i));
+        }
+        let mut out = Vec::new();
+        ring.snapshot_last(8, &mut out);
+        // capacity 4: only the last 4 survive, oldest first
+        let ids: Vec<u64> = out.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        out.clear();
+        ring.snapshot_last(2, &mut out);
+        let ids: Vec<u64> = out.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![8, 9]);
+        assert_eq!(ring.pushed(), 10);
+    }
+
+    #[test]
+    fn ring_survives_concurrent_readers() {
+        use std::sync::Arc;
+        let ring = Arc::new(TraceRing::new(8));
+        let stop = Arc::new(AtomicU64::new(0));
+        let mut readers = Vec::new();
+        for _ in 0..2 {
+            let ring = ring.clone();
+            let stop = stop.clone();
+            readers.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                while stop.load(Ordering::Relaxed) == 0 {
+                    out.clear();
+                    ring.snapshot_last(8, &mut out);
+                    for r in &out {
+                        // a torn record would violate the writer's
+                        // invariant end_us == trace_id
+                        assert_eq!(r.end_us, r.trace_id, "torn record escaped the seqlock");
+                    }
+                }
+            }));
+        }
+        for i in 0..20_000u64 {
+            ring.push(&rec(i, 0, i));
+        }
+        stop.store(1, Ordering::Relaxed);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn span_guards_accumulate_only_when_active() {
+        // inactive: guard is inert
+        drop(span(Stage::ScoreFold));
+        begin();
+        {
+            let _g = span(Stage::ScoreFold);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        add_stage_us(Stage::QueueWait, 17);
+        let stages = take_stages();
+        assert!(stages[Stage::ScoreFold as usize] >= 1_000, "{stages:?}");
+        assert_eq!(stages[Stage::QueueWait as usize], 17);
+        // accumulator is closed now
+        add_stage_us(Stage::Plan, 5);
+        begin();
+        let fresh = take_stages();
+        assert_eq!(fresh, [0; N_STAGES], "stale spans leaked across begin()");
+    }
+
+    #[test]
+    fn hub_minting_and_slow_threshold() {
+        let hub = TraceHub::new(2, 16, Some(1));
+        assert_eq!(hub.mint(), 1);
+        assert_eq!(hub.mint(), 2);
+        assert_eq!(hub.slow_us(), 1000);
+        hub.record(&rec(1, 0, 1));
+        hub.record(&rec(2, 1, 2));
+        let json = hub.last_json(10);
+        assert_eq!(json.lines().count(), 2, "{json}");
+        assert!(json.contains("\"trace_id\":1"), "{json}");
+        assert!(json.contains("\"kind\":\"infer\""), "{json}");
+        // n caps the output across shards, newest retained
+        let json = hub.last_json(1);
+        assert_eq!(json.lines().count(), 1, "{json}");
+        assert!(json.contains("\"trace_id\":2"), "{json}");
+    }
+
+    #[test]
+    fn trace_json_lines_parse() {
+        let line = rec(3, 1, 44).to_json_line();
+        let parsed = crate::util::json::Json::parse(&line).expect("trace line must be valid JSON");
+        assert_eq!(parsed.get("trace_id").and_then(|v| v.as_usize()), Some(3));
+        let stages = parsed.get("stages_us").expect("stages_us object");
+        assert_eq!(stages.get("queue_wait").and_then(|v| v.as_usize()), Some(10));
+    }
+
+    #[test]
+    fn event_log_bounds_and_renders() {
+        let log = EventLog::new(2);
+        log.push(EventKind::ShardDeath, 0, NO_SESSION, "panic: boom".into());
+        log.push(EventKind::ShardRespawn, 0, NO_SESSION, String::new());
+        log.push(EventKind::CheckpointWrite, 1, 42, "3 sessions".into());
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.evicted(), 1);
+        let json = log.last_json(10);
+        assert!(!json.contains("shard_death"), "{json}");
+        assert!(json.contains("\"kind\":\"shard_respawn\""), "{json}");
+        assert!(json.contains("\"session\":42"), "{json}");
+        for line in json.lines() {
+            crate::util::json::Json::parse(line).expect("event line must be valid JSON");
+        }
+    }
+
+    #[test]
+    fn event_details_are_escaped() {
+        let ev = Event {
+            at_us: 1,
+            kind: EventKind::Quarantine,
+            shard: 0,
+            session: NO_SESSION,
+            detail: "bad \"score\"\nline\\two".into(),
+        };
+        let line = ev.to_json_line();
+        crate::util::json::Json::parse(&line).expect("escaped detail must parse");
+    }
+}

@@ -290,7 +290,7 @@ fn stats_exposes_per_shard_and_aggregate_metrics() {
     }
     match srv.call(Request::Stats).unwrap() {
         Response::StatsText(t) => {
-            assert!(t.contains("counter shards_active 4"), "{t}");
+            assert!(t.contains("gauge shards_active 4"), "{t}");
             // the 4 labelled requests; Stats itself is answered inline by
             // the server handle and does not hit any shard
             assert!(t.contains("counter requests_total 4"), "{t}");

@@ -121,13 +121,16 @@ fn stats_text(srv: &Server) -> String {
     }
 }
 
-/// Value of the aggregate `counter <name> <value>` line in a metrics
-/// snapshot (0 when the counter never registered).
+/// Value of the aggregate `counter <name> <value>` / `gauge <name>
+/// <value>` line in a metrics snapshot (0 when the instrument never
+/// registered). Level instruments moved from counters to typed gauges;
+/// accepting both prefixes keeps this helper instrument-agnostic.
 fn counter_total(stats: &str, name: &str) -> u64 {
-    let prefix = format!("counter {name} ");
+    let counter = format!("counter {name} ");
+    let gauge = format!("gauge {name} ");
     stats
         .lines()
-        .find_map(|l| l.strip_prefix(&prefix))
+        .find_map(|l| l.strip_prefix(&counter).or_else(|| l.strip_prefix(&gauge)))
         .and_then(|v| v.trim().parse().ok())
         .unwrap_or(0)
 }

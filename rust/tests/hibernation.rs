@@ -89,12 +89,15 @@ fn normalize(r: Response) -> Response {
     }
 }
 
-/// Aggregate value of a counter in the `Stats` text (the unlabelled
-/// line; labelled per-shard lines render as `name{shard="0"}`).
+/// Aggregate value of a counter or gauge in the `Stats` text (the
+/// unlabelled line; labelled per-shard lines render as `name{shard="0"}`).
+/// Level instruments (`resident_sessions`, `hibernated_sessions`) are
+/// typed gauges; totals stay counters.
 fn metric(stats: &str, name: &str) -> u64 {
     for line in stats.lines() {
         let mut it = line.split_whitespace();
-        if it.next() == Some("counter") && it.next() == Some(name) {
+        let kind = it.next();
+        if (kind == Some("counter") || kind == Some("gauge")) && it.next() == Some(name) {
             if let Some(v) = it.next() {
                 return v.parse().unwrap_or(0);
             }

@@ -1,0 +1,738 @@
+//! Observability surface integration tests (DESIGN.md §17).
+//!
+//! * **Prometheus conformance** — `render_prometheus()` output passes a
+//!   hand-rolled text-format 0.0.4 parser: every sample line well-formed,
+//!   every family `dfr_`-prefixed and announced by `# TYPE`, histogram
+//!   buckets cumulative with `le` ascending and `+Inf` == `_count`, no
+//!   duplicate series.
+//! * **Complete traces** — under `max_batch ∈ {1, 8}` every request
+//!   yields a trace whose disjoint stage spans sum to within the
+//!   measured request latency, with unique trace ids.
+//! * **Mid-batch generation rolls** — a burst that splits batches on
+//!   every adapting feed still produces one complete trace per request;
+//!   ids survive the re-plan.
+//! * **Scrape under load** — concurrent `/metrics` scrapes against a
+//!   busy server all parse and stay internally consistent.
+//! * **Readiness** — `/readyz` flips to 503 while a `FaultyEngine`
+//!   shard kill is being repaired and recovers once the supervisor
+//!   respawns the shard; the death/respawn pair lands in the event
+//!   journal.
+
+use std::collections::HashSet;
+use std::io::{Read as IoRead, Write as IoWrite};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use dfr_edge::coordinator::engine::{Engine, FeatureRequest, NativeEngine};
+use dfr_edge::coordinator::{
+    silence_injected_panics, CheckpointConfig, FaultSpec, FaultyEngine, MetricsExporter, Request,
+    Response, Server, ServerConfig, SessionConfig,
+};
+use dfr_edge::data::dataset::{Dataset, Sample};
+use dfr_edge::data::profiles::Profile;
+use dfr_edge::data::synth;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::runtime::executor::TrainState;
+use dfr_edge::util::json::Json;
+
+const MINI: Profile = Profile {
+    name: "mini",
+    n_v: 2,
+    n_c: 2,
+    train: 20,
+    test: 10,
+    t_min: 10,
+    t_max: 12,
+};
+
+fn mini_dataset(seed: u64) -> Dataset {
+    synth::generate_with(
+        &MINI,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        seed,
+    )
+}
+
+fn mini_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = SessionConfig::new(2, 2, collect);
+    scfg.train.nx = 8;
+    scfg.train.epochs = 3;
+    scfg.train.res_decay_epochs = vec![2];
+    scfg.train.out_decay_epochs = vec![2];
+    scfg
+}
+
+fn streaming_session_config(collect: usize) -> SessionConfig {
+    let mut scfg = mini_session_config(collect);
+    scfg.train.window = Some(16);
+    scfg
+}
+
+fn server_config(session: SessionConfig, shards: usize, max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        queue_cap: 256,
+        seed: 0xFEED,
+        shards,
+        max_batch,
+        ..ServerConfig::new(session)
+    }
+}
+
+fn labelled(session: u64, s: &Sample) -> Request {
+    Request::Labelled {
+        session,
+        sample: s.clone(),
+    }
+}
+
+fn infer_req(session: u64, s: &Sample) -> Request {
+    Request::Infer {
+        session,
+        sample: s.clone(),
+    }
+}
+
+/// Fetch trace JSON lines, polling until at least `want` are visible:
+/// the shard records a trace *after* shipping the reply, so the caller
+/// of request k can race the ring write of request k's own record.
+fn traces_at_least(srv: &Server, want: usize, n: usize) -> Vec<Json> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let text = match srv.call(Request::Traces { n }).unwrap() {
+            Response::Traces(t) => t,
+            other => panic!("unexpected {other:?}"),
+        };
+        let parsed: Vec<Json> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad trace JSON {e:?}: {l}")))
+            .collect();
+        if parsed.len() >= want {
+            return parsed;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {}/{want} traces became visible",
+            parsed.len()
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn events_json(srv: &Server) -> Vec<Json> {
+    match srv.call(Request::Events { n: 1024 }).unwrap() {
+        Response::Events(t) => t
+            .lines()
+            .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad event JSON {e:?}: {l}")))
+            .collect(),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn u64_field(j: &Json, key: &str) -> u64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("missing numeric {key} in {}", j.to_string())) as u64
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text-format 0.0.4 conformance
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line: family name, sorted label pairs, value.
+#[derive(Debug, Clone, PartialEq)]
+struct PromSample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_value(s: &str) -> f64 {
+    match s {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        other => other
+            .parse()
+            .unwrap_or_else(|_| panic!("bad sample value {other:?}")),
+    }
+}
+
+fn parse_sample_line(line: &str) -> PromSample {
+    let (series, value) = line
+        .rsplit_once(' ')
+        .unwrap_or_else(|| panic!("no value separator in {line:?}"));
+    let (name, labels) = match series.split_once('{') {
+        None => (series.to_string(), Vec::new()),
+        Some((name, rest)) => {
+            let body = rest
+                .strip_suffix('}')
+                .unwrap_or_else(|| panic!("unterminated label set in {line:?}"));
+            let mut labels = Vec::new();
+            for pair in body.split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .unwrap_or_else(|| panic!("bad label pair {pair:?} in {line:?}"));
+                assert!(valid_label_name(k), "bad label name {k:?} in {line:?}");
+                let v = v
+                    .strip_prefix('"')
+                    .and_then(|v| v.strip_suffix('"'))
+                    .unwrap_or_else(|| panic!("unquoted label value in {line:?}"));
+                labels.push((k.to_string(), v.to_string()));
+            }
+            (name.to_string(), labels)
+        }
+    };
+    assert!(valid_metric_name(&name), "bad metric name {name:?}");
+    PromSample {
+        name,
+        labels,
+        value: parse_value(value),
+    }
+}
+
+/// The conformance check: parse the full exposition, validate structure,
+/// return the samples for further assertions.
+fn check_prometheus(text: &str) -> Vec<PromSample> {
+    let mut typed: Vec<(String, String)> = Vec::new(); // (family, type)
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let fam = it.next().expect("TYPE family").to_string();
+            let ty = it.next().expect("TYPE kind").to_string();
+            assert!(
+                matches!(ty.as_str(), "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "unknown TYPE {ty:?}"
+            );
+            assert!(
+                !typed.iter().any(|(f, _)| *f == fam),
+                "family {fam} announced twice"
+            );
+            typed.push((fam, ty));
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP / comments
+        }
+        samples.push(parse_sample_line(line));
+    }
+    // every sample belongs to an announced family, and is dfr_-prefixed
+    for s in &samples {
+        assert!(s.name.starts_with("dfr_"), "family not namespaced: {}", s.name);
+        let fam = typed.iter().find(|(f, _)| {
+            s.name == *f
+                || (s.name.strip_prefix(f.as_str()).is_some_and(|suf| {
+                    matches!(suf, "_bucket" | "_sum" | "_count")
+                }))
+        });
+        let (fam, ty) = fam.unwrap_or_else(|| panic!("sample {} has no # TYPE", s.name));
+        if s.name != *fam {
+            assert_eq!(ty, "histogram", "suffixed sample under non-histogram {fam}");
+        }
+    }
+    // no duplicate series
+    let mut seen = HashSet::new();
+    for s in &samples {
+        let key = format!("{}{:?}", s.name, s.labels);
+        assert!(seen.insert(key), "duplicate series: {} {:?}", s.name, s.labels);
+    }
+    // histogram structure: per series (labels minus `le`), buckets are
+    // cumulative, le ascending, +Inf == _count, _sum present
+    for (fam, ty) in typed.iter().filter(|(_, t)| t == "histogram") {
+        let bucket_name = format!("{fam}_bucket");
+        let mut by_series: Vec<(Vec<(String, String)>, Vec<(f64, f64)>)> = Vec::new();
+        for s in samples.iter().filter(|s| s.name == bucket_name) {
+            let mut labels = s.labels.clone();
+            let le = labels
+                .iter()
+                .position(|(k, _)| k == "le")
+                .map(|i| labels.remove(i).1)
+                .unwrap_or_else(|| panic!("bucket without le: {s:?}"));
+            let le = parse_value(&le);
+            match by_series.iter_mut().find(|(l, _)| *l == labels) {
+                Some((_, v)) => v.push((le, s.value)),
+                None => by_series.push((labels, vec![(le, s.value)])),
+            }
+        }
+        for (labels, buckets) in &by_series {
+            for w in buckets.windows(2) {
+                assert!(w[0].0 < w[1].0, "{fam} le not ascending: {buckets:?}");
+                assert!(
+                    w[0].1 <= w[1].1,
+                    "{fam}{labels:?} buckets not cumulative: {buckets:?}"
+                );
+            }
+            let last = buckets.last().expect("at least one bucket");
+            assert!(last.0.is_infinite(), "{fam} last bucket is not +Inf");
+            let count = samples
+                .iter()
+                .find(|s| s.name == format!("{fam}_count") && s.labels == *labels)
+                .unwrap_or_else(|| panic!("{fam}_count missing for {labels:?}"));
+            assert_eq!(last.1, count.value, "{fam} +Inf bucket != _count");
+            assert!(
+                samples
+                    .iter()
+                    .any(|s| s.name == format!("{fam}_sum") && s.labels == *labels),
+                "{fam}_sum missing for {labels:?}"
+            );
+        }
+    }
+    samples
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prometheus_exposition_conforms() {
+    let ds = mini_dataset(17);
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, 8),
+    );
+    for session in 0..2u64 {
+        for s in &ds.train {
+            srv.call(labelled(session, s)).unwrap();
+        }
+        for s in &ds.test {
+            srv.call(infer_req(session, s)).unwrap();
+        }
+    }
+    let text = srv.metrics.render_prometheus();
+    let samples = check_prometheus(&text);
+    // the families the scrape dashboard is built on all exist
+    for fam in [
+        "dfr_requests_total",
+        "dfr_shards_active",
+        "dfr_stage_latency_seconds_count",
+    ] {
+        assert!(
+            samples.iter().any(|s| s.name == *fam),
+            "{fam} missing from exposition:\n{text}"
+        );
+    }
+    // traffic actually flowed into the stage histograms
+    let total_stage_count: f64 = samples
+        .iter()
+        .filter(|s| s.name == "dfr_stage_latency_seconds_count")
+        .map(|s| s.value)
+        .sum();
+    assert!(total_stage_count > 0.0, "no stage spans recorded:\n{text}");
+    srv.shutdown();
+}
+
+fn assert_complete_traces(max_batch: usize) {
+    let ds = mini_dataset(23);
+    let srv = Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, max_batch),
+    );
+    let mut calls = 0usize;
+    for session in 0..2u64 {
+        for s in &ds.train {
+            srv.call(labelled(session, s)).unwrap();
+            calls += 1;
+        }
+        for s in &ds.test {
+            srv.call(infer_req(session, s)).unwrap();
+            calls += 1;
+        }
+    }
+    let traces = traces_at_least(&srv, calls, 4096);
+    assert!(
+        traces.len() >= calls,
+        "incomplete trace coverage: {} traces for {calls} requests",
+        traces.len()
+    );
+    let mut ids = HashSet::new();
+    for t in &traces {
+        let id = u64_field(t, "trace_id");
+        assert!(id > 0, "unminted trace id in {}", t.to_string());
+        assert!(ids.insert(id), "duplicate trace id {id}");
+        let total = u64_field(t, "total_us");
+        let stages = t
+            .get("stages_us")
+            .and_then(Json::as_obj)
+            .unwrap_or_else(|| panic!("no stages_us in {}", t.to_string()));
+        assert_eq!(stages.len(), 7, "stage taxonomy incomplete: {stages:?}");
+        let sum: u64 = stages
+            .values()
+            .map(|v| v.as_f64().expect("numeric stage") as u64)
+            .sum();
+        // disjoint spans: the per-stage sum is bounded by the measured
+        // envelope residency (enqueue → reply shipped)
+        assert!(
+            sum <= total,
+            "stage spans exceed request latency: sum={sum} total={total} in {}",
+            t.to_string()
+        );
+        let kind = t.get("kind").and_then(Json::as_str).expect("kind");
+        assert!(
+            matches!(kind, "labelled" | "infer"),
+            "unexpected request kind {kind}"
+        );
+        let batch = u64_field(t, "batch");
+        assert!(
+            batch >= 1 && batch <= max_batch as u64,
+            "batch depth {batch} out of range for max_batch={max_batch}"
+        );
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn every_request_traces_completely_per_call() {
+    assert_complete_traces(1);
+}
+
+#[test]
+fn every_request_traces_completely_batched() {
+    assert_complete_traces(8);
+}
+
+// ---------------------------------------------------------------------------
+// mid-batch generation rolls
+// ---------------------------------------------------------------------------
+
+/// NativeEngine wrapper that sleeps in `train_step` only, keeping the
+/// shard busy so a burst queues into multi-request drain cycles (same
+/// technique as `tests/batch_equivalence.rs`).
+struct SlowAdaptEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl Engine for SlowAdaptEngine {
+    fn train_step(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        state: &mut TrainState,
+        lr_res: f32,
+        lr_out: f32,
+    ) -> Result<f32> {
+        thread::sleep(self.delay);
+        self.inner.train_step(s, mask, state, lr_res, lr_out)
+    }
+    fn features(&self, s: &Sample, mask: &Mask, p: f32, q: f32) -> Result<Vec<f32>> {
+        self.inner.features(s, mask, p, q)
+    }
+    fn features_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inner.features_into(s, mask, p, q, out)
+    }
+    fn features_batch_into(
+        &self,
+        reqs: &[FeatureRequest<'_>],
+        outs: &mut [Vec<f32>],
+    ) -> Result<()> {
+        self.inner.features_batch_into(reqs, outs)
+    }
+    fn scores_from_features_exact(&self) -> bool {
+        self.inner.scores_from_features_exact()
+    }
+    fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
+        self.inner.infer(s, mask, p, q, w)
+    }
+    fn infer_into(
+        &self,
+        s: &Sample,
+        mask: &Mask,
+        p: f32,
+        q: f32,
+        w: &[f32],
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.inner.infer_into(s, mask, p, q, w, scores)
+    }
+    fn name(&self) -> &'static str {
+        "slow-adapt"
+    }
+    fn fork(&self) -> Option<Box<dyn Engine>> {
+        Some(Box::new(SlowAdaptEngine {
+            inner: NativeEngine::new(8, 2),
+            delay: self.delay,
+        }))
+    }
+}
+
+#[test]
+fn trace_ids_survive_mid_batch_generation_roll_splits() {
+    let ds = mini_dataset(41);
+    let mut scfg = streaming_session_config(ds.train.len());
+    scfg.adapt_reservoir = true;
+    scfg.adapt_lr = 0.05;
+    scfg.adapt_drift_eps = 1e-6; // every adapting feed rolls a generation
+    let srv = Server::spawn(
+        Box::new(SlowAdaptEngine {
+            inner: NativeEngine::new(8, 2),
+            delay: Duration::from_millis(2),
+        }),
+        server_config(scfg, 1, 8),
+    );
+    // deterministic prefix: train both sessions
+    let mut prefix = 0usize;
+    for session in 0..2u64 {
+        let mut trained = false;
+        for s in &ds.train {
+            if let Response::Trained { .. } = srv.call(labelled(session, s)).unwrap() {
+                trained = true;
+            }
+            prefix += 1;
+        }
+        assert!(trained, "session {session} never trained");
+    }
+    // burst: enqueue faster than the 2 ms/step shard drains, so cycles
+    // batch several same-session feeds and the first roll of each cycle
+    // forces the rest through the re-planned per-call path
+    let mut pending = Vec::new();
+    for i in 0..16 {
+        for session in 0..2u64 {
+            let rx = srv
+                .try_call(labelled(session, &ds.train[i % ds.train.len()]))
+                .unwrap()
+                .expect("queue_cap sized for the whole burst");
+            pending.push(rx);
+        }
+    }
+    let burst = pending.len();
+    let mut adapted = 0;
+    for rx in pending {
+        if let Response::Adapted { .. } = rx.recv().unwrap() {
+            adapted += 1;
+        }
+    }
+    assert!(adapted > 0, "burst never adapted — rolls were not exercised");
+    let traces = traces_at_least(&srv, prefix + burst, 4096);
+    // every burst request has exactly one complete trace with a unique id
+    let mut ids = HashSet::new();
+    let mut adapted_traces = 0;
+    for t in &traces {
+        let id = u64_field(t, "trace_id");
+        assert!(id > 0 && ids.insert(id), "bad/duplicate trace id {id}");
+        let total = u64_field(t, "total_us");
+        let sum: u64 = t
+            .get("stages_us")
+            .and_then(Json::as_obj)
+            .expect("stages_us")
+            .values()
+            .map(|v| v.as_f64().expect("numeric") as u64)
+            .sum();
+        assert!(sum <= total, "span sum {sum} > latency {total}");
+        if t.get("outcome").and_then(Json::as_str) == Some("adapted") {
+            adapted_traces += 1;
+        }
+    }
+    assert!(
+        traces.len() >= prefix + burst,
+        "re-planned requests lost their traces: {} < {}",
+        traces.len(),
+        prefix + burst
+    );
+    assert_eq!(
+        adapted_traces, adapted,
+        "adapted responses and adapted traces disagree"
+    );
+    // the generation rolls were journaled
+    let events = events_json(&srv);
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("kind").and_then(Json::as_str) == Some("generation_roll")),
+        "no generation_roll event despite {adapted} Adapted responses"
+    );
+    srv.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// concurrent scrape under load
+// ---------------------------------------------------------------------------
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\nAccept: text/plain\r\n\r\n").unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let raw = String::from_utf8(raw).expect("utf-8 response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header terminator");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn concurrent_scrapes_under_load_stay_consistent() {
+    let ds = mini_dataset(31);
+    let srv = Arc::new(Server::spawn(
+        Box::new(NativeEngine::new(8, 2)),
+        server_config(streaming_session_config(ds.train.len()), 2, 8),
+    ));
+    let exporter = MetricsExporter::bind(Arc::clone(&srv), "127.0.0.1:0").unwrap();
+    let addr = exporter.local_addr();
+
+    // feeder thread: continuous labelled + infer traffic
+    let feeder = {
+        let srv = Arc::clone(&srv);
+        let ds = ds.clone();
+        thread::spawn(move || {
+            for round in 0..6 {
+                for (i, s) in ds.train.iter().enumerate() {
+                    let session = (round * ds.train.len() + i) as u64 % 4;
+                    let _ = srv.call(labelled(session, s));
+                }
+            }
+        })
+    };
+    // scrapers: every response parses and is internally consistent
+    let scrapers: Vec<_> = (0..4)
+        .map(|_| {
+            thread::spawn(move || {
+                for _ in 0..10 {
+                    let (head, body) = http_get(addr, "/metrics");
+                    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+                    check_prometheus(&body);
+                }
+            })
+        })
+        .collect();
+    for h in scrapers {
+        h.join().unwrap();
+    }
+    feeder.join().unwrap();
+    drop(exporter);
+    if let Ok(owned) = Arc::try_unwrap(srv) {
+        owned.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// readiness under shard failure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn readyz_flips_during_shard_kill_and_recovers() {
+    silence_injected_panics();
+    let ds = mini_dataset(29);
+    let dir = std::env::temp_dir().join(format!("dfr-obs-readyz-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = FaultSpec {
+        seed: 1,
+        kill_after: Some(5),
+        kill_replica: Some(1),
+        ..FaultSpec::default()
+    };
+    let mut cfg = server_config(mini_session_config(ds.train.len()), 2, 8);
+    cfg.checkpoint = Some(CheckpointConfig {
+        dir: dir.clone(),
+        every: 1,
+    });
+    let srv = Arc::new(Server::spawn(
+        Box::new(FaultyEngine::new(Box::new(NativeEngine::new(8, 2)), spec)),
+        cfg,
+    ));
+    let exporter = MetricsExporter::bind(Arc::clone(&srv), "127.0.0.1:0").unwrap();
+    let addr = exporter.local_addr();
+
+    // ready while healthy
+    let (head, body) = http_get(addr, "/readyz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}: {body}");
+
+    // drive session 1 (shard 1) into the scheduled kill; the killing
+    // call loses its reply
+    let mut died = false;
+    let mut saw_unready = false;
+    for s in &ds.train {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match srv.call_timeout(labelled(1, s), Duration::from_millis(500)) {
+                Ok(_) => break,
+                Err(_) => {
+                    died = true;
+                    // the shard is down right now: its queue receiver is
+                    // gone until the supervisor swaps in the respawn, so
+                    // readiness must report the outage
+                    if srv.readiness().is_err() {
+                        saw_unready = true;
+                    }
+                    assert!(Instant::now() < deadline, "shard recovery exceeded 30 s");
+                }
+            }
+        }
+    }
+    assert!(died, "the kill schedule must have taken shard 1 down");
+    assert!(
+        saw_unready,
+        "readiness never reported the dead shard while calls were failing"
+    );
+
+    // ... and /readyz converges back to 200 once the supervisor respawns
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (head, body) = http_get(addr, "/readyz");
+        if head.starts_with("HTTP/1.1 200") {
+            break;
+        }
+        assert!(
+            head.starts_with("HTTP/1.1 503"),
+            "unexpected readiness status {head}: {body}"
+        );
+        assert!(Instant::now() < deadline, "readiness never recovered: {body}");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // the outage is journaled as a death/respawn pair
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let events = events_json(&srv);
+        let deaths = events
+            .iter()
+            .filter(|e| e.get("kind").and_then(Json::as_str) == Some("shard_death"))
+            .count();
+        let respawns = events
+            .iter()
+            .filter(|e| e.get("kind").and_then(Json::as_str) == Some("shard_respawn"))
+            .count();
+        if deaths >= 1 && respawns >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "death/respawn never journaled: {deaths} deaths, {respawns} respawns"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    drop(exporter);
+    if let Ok(owned) = Arc::try_unwrap(srv) {
+        owned.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -485,6 +485,108 @@ fn session_adaptation_steps_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn trace_span_recording_is_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
+    use dfr_edge::data::profiles::Profile;
+    use dfr_edge::data::synth;
+    use dfr_edge::util::metrics::Registry;
+    use dfr_edge::util::trace::{self, Stage, TraceRecord, TraceRing};
+
+    // the per-request observability tail the shard loop runs in steady
+    // state: open a trace, run an instrumented streaming feed with the
+    // span guards ARMED (the session layer holds score_fold/online_ridge
+    // guards on this path), harvest the stage array, feed the stage
+    // histogram, and push the record into the seqlock ring — all of it
+    // must be allocation-free, or tracing would tax the serve path it
+    // measures
+    let prof = Profile {
+        name: "mini",
+        n_v: 2,
+        n_c: 2,
+        train: 20,
+        test: 5,
+        t_min: 10,
+        t_max: 12,
+    };
+    let ds = synth::generate_with(
+        &prof,
+        synth::SynthConfig {
+            noise: 0.3,
+            freq_sep: 0.2,
+            ar: 0.3,
+        },
+        35,
+    );
+    let mut cfg = SessionConfig::new(2, 2, ds.train.len());
+    cfg.train.nx = 8;
+    cfg.train.epochs = 2;
+    cfg.train.res_decay_epochs = vec![1];
+    cfg.train.out_decay_epochs = vec![1];
+    cfg.train.window = Some(12);
+    cfg.train.refactor_every = 6;
+    cfg.buffer_cap = ds.train.len();
+    let eng = NativeEngine::new(8, 2);
+    let mut sess = Session::new(1, cfg, 0xF00C);
+    for s in &ds.train {
+        sess.feed_labelled(&eng, s.clone()).unwrap();
+    }
+    assert!(sess.online().is_some(), "streaming path active");
+
+    let ring = TraceRing::new(64);
+    let reg = Registry::default();
+    let hist = reg.histogram("stage_latency");
+    let warm: Vec<_> = ds.train.iter().take(8).cloned().collect();
+    let hot: Vec<_> = ds.train.iter().skip(8).take(8).cloned().collect();
+    let mut run_one = |sample, trace_id: u64| {
+        trace::begin();
+        trace::add_stage_us(Stage::QueueWait, 3);
+        let out = {
+            let _span = trace::span(Stage::Reply); // outer guard, nested with the session's own
+            sess.feed_labelled(&eng, sample).unwrap()
+        };
+        assert!(matches!(out, FeedOutcome::Observed { .. }), "{out:?}");
+        let stages_us = trace::take_stages();
+        for &us in stages_us.iter() {
+            if us > 0 {
+                hist.record_us(us);
+            }
+        }
+        ring.push(&TraceRecord {
+            trace_id,
+            session: 1,
+            shard: 0,
+            kind: 1,
+            outcome: 4,
+            batch: 1,
+            end_us: trace::epoch_us(),
+            total_us: stages_us.iter().sum(),
+            stages_us,
+        });
+    };
+    for (i, s) in warm.into_iter().enumerate() {
+        run_one(s, i as u64 + 1);
+    }
+    let n = allocations_in(|| {
+        for (i, s) in hot.into_iter().enumerate() {
+            run_one(s, i as u64 + 100);
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state span recording performed {n} heap allocations"
+    );
+    // the records really landed, torn-free, with armed spans captured
+    let mut out = Vec::new();
+    ring.snapshot_last(16, &mut out);
+    assert_eq!(out.len(), 16);
+    assert!(
+        out.iter()
+            .all(|r| r.stages_us[Stage::QueueWait as usize] == 3),
+        "stage accumulator lost a recorded span"
+    );
+}
+
+#[test]
 fn forward_scratch_is_allocation_free_after_warmup() {
     use dfr_edge::dfr::reservoir::{ForwardScratch, Nonlinearity, Reservoir};
     let mut rng = Pcg32::seed(0xA110D);

@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Bench regression gate.
+
+Compares freshly measured bench medians (``rust/results/BENCH_*.json`` or
+``results/BENCH_*.json``, written by ``cargo bench``) against the committed
+root snapshots (``BENCH_*.json`` at the repo root) and fails if any median
+regresses by more than the threshold (default 20%).
+
+Leaf classification is by key name, matching the snapshot contract:
+
+* higher-is-better: keys containing ``speedup`` or ending in ``_per_s``
+  (throughput) — a regression is ``new < old * (1 - threshold)``
+* lower-is-better: other keys ending in ``_s`` (seconds: medians, p99s) —
+  a regression is ``new > old * (1 + threshold)``
+* everything else (scale records, byte counts, comments) is ignored
+
+A ``null`` on either side skips the comparison: the committed snapshots
+carry null medians until the first bench run on a toolchain-bearing
+machine replaces them (see each file's ``_comment``), and a smoke run may
+legitimately omit rows. The gate therefore passes trivially on a
+null-only baseline while still arming itself the moment real numbers are
+committed.
+
+Exit status: 0 = no regressions (possibly everything skipped), 1 = at
+least one regression, 2 = usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SKIP_KEYS = {"_comment", "scale"}
+
+
+def leaf_direction(key: str):
+    """'up' if larger is better, 'down' if smaller is better, None to skip."""
+    if "speedup" in key or key.endswith("_per_s"):
+        return "up"
+    if key.endswith("_s"):
+        return "down"
+    return None
+
+
+def walk(baseline, fresh, path, out):
+    """Collect (path, direction, old, new) rows for comparable numeric leaves."""
+    if isinstance(baseline, dict) and isinstance(fresh, dict):
+        for key, old in baseline.items():
+            if key in SKIP_KEYS:
+                continue
+            if key not in fresh:
+                out.append((f"{path}.{key}", "missing", old, None))
+                continue
+            walk(old, fresh[key], f"{path}.{key}", out)
+    elif isinstance(baseline, list) and isinstance(fresh, list):
+        for i, old in enumerate(baseline):
+            if i >= len(fresh):
+                out.append((f"{path}[{i}]", "missing", old, None))
+                continue
+            walk(old, fresh[i], f"{path}[{i}]", out)
+    else:
+        key = path.rsplit(".", 1)[-1].split("[", 1)[0]
+        direction = leaf_direction(key)
+        if direction is None:
+            return
+        out.append((path, direction, baseline, fresh))
+
+
+def is_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def gate_file(baseline_path: Path, results_dirs, threshold: float):
+    """Returns (regressions, compared, skipped) for one snapshot."""
+    fresh_path = None
+    for d in results_dirs:
+        cand = d / baseline_path.name
+        if cand.is_file():
+            fresh_path = cand
+            break
+    if fresh_path is None:
+        print(f"  {baseline_path.name}: no fresh run found — skipped")
+        return 0, 0, 1
+
+    baseline = json.loads(baseline_path.read_text())
+    fresh = json.loads(fresh_path.read_text())
+    rows = []
+    walk(baseline, fresh, baseline_path.stem, rows)
+
+    regressions = compared = skipped = 0
+    for path, direction, old, new in rows:
+        if direction == "missing" or not is_number(old) or not is_number(new):
+            skipped += 1
+            continue
+        compared += 1
+        if direction == "down":
+            bad = old > 0 and new > old * (1.0 + threshold)
+        else:
+            bad = old > 0 and new < old * (1.0 - threshold)
+        if bad:
+            regressions += 1
+            arrow = "slower" if direction == "down" else "lower"
+            print(
+                f"  REGRESSION {path}: {old:.6g} -> {new:.6g} "
+                f"({abs(new - old) / old:+.1%} {arrow}, limit {threshold:.0%})"
+            )
+    print(
+        f"  {baseline_path.name}: {compared} compared, "
+        f"{skipped} skipped (null/missing), {regressions} regressed"
+    )
+    return regressions, compared, skipped
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--repo-root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root holding the committed BENCH_*.json snapshots",
+    )
+    ap.add_argument(
+        "--results-dir",
+        type=Path,
+        action="append",
+        default=None,
+        help="directory with fresh BENCH_*.json (repeatable; default "
+        "rust/results and results under the repo root)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="fractional regression tolerance on each median (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    root = args.repo_root
+    results_dirs = args.results_dir or [root / "rust" / "results", root / "results"]
+    snapshots = sorted(root.glob("BENCH_*.json"))
+    if not snapshots:
+        print(f"no BENCH_*.json snapshots under {root}", file=sys.stderr)
+        return 2
+
+    print(f"bench gate: threshold {args.threshold:.0%}, baselines in {root}")
+    total_reg = total_cmp = total_skip = 0
+    for snap in snapshots:
+        reg, cmp_, skip = gate_file(snap, results_dirs, args.threshold)
+        total_reg += reg
+        total_cmp += cmp_
+        total_skip += skip
+    print(
+        f"bench gate: {total_cmp} compared, {total_skip} skipped, "
+        f"{total_reg} regressed"
+    )
+    return 1 if total_reg else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
