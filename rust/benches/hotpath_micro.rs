@@ -17,6 +17,7 @@
 
 mod common;
 
+use dfr_edge::coordinator::{scores_from_r_tilde, scores_from_r_tilde_with};
 use dfr_edge::data::dataset::Sample;
 use dfr_edge::dfr::backprop::{truncated_grads, OutputLayer};
 use dfr_edge::dfr::dprr::DprrAccumulator;
@@ -27,6 +28,7 @@ use dfr_edge::linalg::ridge::{
     rank1_update_packed, RidgeAccumulator, RidgeMethod, SolveWorkspace, PAPER_BETAS,
 };
 use dfr_edge::linalg::tri_len;
+use dfr_edge::simd::{Kernels, SimdMode};
 use dfr_edge::util::bench::{bb, write_results_file, Bencher, Stats};
 use dfr_edge::util::prng::Pcg32;
 
@@ -122,6 +124,49 @@ fn main() {
         let labels: Vec<usize> = (0..bs).map(|i| i % 9).collect();
         b.bench(name, || {
             gacc.accumulate_block(bb(&block), bb(&labels));
+        });
+    }
+
+    // explicit-SIMD kernel table vs the scalar reference (DESIGN.md
+    // §18): the batched forward sweep (bitwise-equal class), the rank-k
+    // Gram block and the score dots (tolerance-bounded class). Skipped
+    // — null medians in the JSON — when the host lacks AVX2+FMA.
+    let simd_table = Kernels::try_select(SimdMode::Force).ok();
+    if let Some(k) = simd_table {
+        for (name, depth) in [("simd_forward_b8_t29", 8usize), ("simd_forward_b64_t29", 64)] {
+            b.bench(name, || {
+                bscratch.forward_batch_into_with(
+                    res.f,
+                    depth,
+                    |l| BatchLane {
+                        u: bb(&lane_us[l]),
+                        t,
+                        mask: &lane_masks[l],
+                        p: res.p,
+                        q: res.q,
+                    },
+                    &k,
+                );
+            });
+        }
+        let block: Vec<f32> = (0..32 * s_dim).map(|_| rng.normal()).collect();
+        let labels: Vec<usize> = (0..32).map(|i| i % 9).collect();
+        let mut sacc = RidgeAccumulator::with_kernels(s_dim, 9, k);
+        b.bench("simd_gram_block_b32_s931", || {
+            sacc.accumulate_block(bb(&block), bb(&labels));
+        });
+    } else {
+        println!("(no AVX2+FMA on this host — skipping simd kernel benches)");
+    }
+    // score dots at serving shape: scalar reference vs the SIMD table
+    let w_tilde: Vec<f32> = (0..9 * s_dim).map(|_| rng.normal()).collect();
+    let mut score_buf: Vec<f32> = Vec::new();
+    b.bench("scores_dot_s931_ny9", || {
+        scores_from_r_tilde(bb(&w_tilde), bb(&r_t), bb(&mut score_buf));
+    });
+    if let Some(k) = simd_table {
+        b.bench("simd_scores_dot_s931_ny9", || {
+            scores_from_r_tilde_with(bb(&w_tilde), bb(&r_t), bb(&mut score_buf), &k);
         });
     }
 
@@ -222,13 +267,35 @@ fn main() {
     let bf1 = med("batched_forward_b1_t29");
     let bf8 = med("batched_forward_b8_t29") / 8.0;
     let bf64 = med("batched_forward_b64_t29") / 64.0;
+    // simd block: measured pairs when the AVX2 table ran, nulls
+    // otherwise (the committed snapshot's contract: simd ≥ 2× scalar
+    // per lane on the b64 batched forward at jpvow scale)
+    let simd_json = match simd_table {
+        Some(k) => {
+            let sf8 = med("simd_forward_b8_t29") / 8.0;
+            let sf64 = med("simd_forward_b64_t29") / 64.0;
+            let sg32 = med("simd_gram_block_b32_s931") / 32.0;
+            let sc_scalar = med("scores_dot_s931_ny9");
+            let sc_simd = med("simd_scores_dot_s931_ny9");
+            format!(
+                "\"simd\": {{\"table\": \"{}\", \"forward_b8_per_lane_s\": {sf8:.6e}, \"forward_b64_per_lane_s\": {sf64:.6e}, \"speedup_forward_b8\": {:.3}, \"speedup_forward_b64\": {:.3}, \"gram_block32_per_sample_s\": {sg32:.6e}, \"speedup_gram_b32\": {:.3}, \"scores_scalar_s\": {sc_scalar:.6e}, \"scores_simd_s\": {sc_simd:.6e}, \"speedup_scores\": {:.3}}}",
+                k.name,
+                bf8 / sf8,
+                bf64 / sf64,
+                blk32 / sg32,
+                sc_scalar / sc_simd,
+            )
+        }
+        None => "\"simd\": {\"table\": \"scalar\", \"forward_b8_per_lane_s\": null, \"forward_b64_per_lane_s\": null, \"speedup_forward_b8\": null, \"speedup_forward_b64\": null, \"gram_block32_per_sample_s\": null, \"speedup_gram_b32\": null, \"scores_scalar_s\": null, \"scores_simd_s\": null, \"speedup_scores\": null}".to_string(),
+    };
     let json = format!(
         "{{\n  \"scale\": {{\"nx\": {nx}, \"s\": {s_dim}, \"t\": {t}, \"ny\": 9, \"threads\": {threads}, \"smoke\": {smoke}}},\n  \
          \"forward\": {{\"alloc_median_s\": {fwd_alloc:.6e}, \"scratch_median_s\": {fwd_scratch:.6e}, \"speedup\": {:.3}}},\n  \
          \"gram_accumulate\": {{\"rank1_per_sample_s\": {rank1:.6e}, \"block8_per_sample_s\": {blk8:.6e}, \"block32_per_sample_s\": {blk32:.6e}, \"speedup_b8\": {:.3}, \"speedup_b32\": {:.3}}},\n  \
          \"beta_sweep\": {{\"clone_median_s\": {sweep_clone:.6e}, \"workspace_median_s\": {sweep_ws_t:.6e}, \"speedup\": {:.3}}},\n  \
          \"batched_forward\": {{\"per_call_per_lane_s\": {fwd_scratch:.6e}, \"b1_per_lane_s\": {bf1:.6e}, \"b8_per_lane_s\": {bf8:.6e}, \"b64_per_lane_s\": {bf64:.6e}, \"speedup_b8\": {:.3}, \"speedup_b64\": {:.3}}},\n  \
-         \"ridge_phase\": {{\"serial_s\": {:.6e}, \"parallel_s\": {:.6e}, \"speedup\": {:.3}}}\n}}\n",
+         \"ridge_phase\": {{\"serial_s\": {:.6e}, \"parallel_s\": {:.6e}, \"speedup\": {:.3}}},\n  \
+         {simd_json}\n}}\n",
         fwd_alloc / fwd_scratch,
         rank1 / blk8,
         rank1 / blk32,

@@ -14,6 +14,7 @@ use crate::dfr::backprop::{softmax_inplace, truncated_grads_scratch, GradScratch
 use crate::dfr::mask::Mask;
 use crate::dfr::reservoir::{BatchLane, BatchScratch, ForwardScratch, Nonlinearity, Reservoir};
 use crate::runtime::executor::{DfrExecutor, TrainState};
+use crate::simd::{global_kernels, Kernels};
 
 /// One lane of a batched feature extraction
 /// ([`Engine::features_batch_into`]): a sample plus the session
@@ -35,15 +36,46 @@ pub struct FeatureRequest<'a> {
 /// bitwise those of the per-call `infer_into` whenever the engine's
 /// [`Engine::scores_from_features_exact`] contract holds.
 pub fn scores_from_r_tilde(w_tilde: &[f32], r_tilde: &[f32], scores: &mut Vec<f32>) {
+    scores_from_r_tilde_with(w_tilde, r_tilde, scores, &Kernels::scalar());
+}
+
+/// [`scores_from_r_tilde`] through an explicit kernel table — callers
+/// scoring an engine's batched features pass that engine's
+/// [`Engine::kernels`] so the dot products reassociate identically to
+/// the engine's own `infer_into`, preserving the bitwise
+/// `scores_from_features_exact` contract under any table.
+pub fn scores_from_r_tilde_with(
+    w_tilde: &[f32],
+    r_tilde: &[f32],
+    scores: &mut Vec<f32>,
+    kernels: &Kernels,
+) {
     let sdim = r_tilde.len();
     let ny = w_tilde.len() / sdim;
     scores.clear();
     scores.reserve(ny);
     for i in 0..ny {
         let row = &w_tilde[i * sdim..(i + 1) * sdim];
-        scores.push(row.iter().zip(r_tilde.iter()).map(|(w, r)| w * r).sum());
+        scores.push((kernels.dot)(row, r_tilde));
     }
     softmax_inplace(scores);
+}
+
+/// The per-call fallback behind [`Engine::features_batch_into`]: a
+/// sequential loop over [`Engine::features_into`]. Public so engines
+/// that *partially* batch (e.g. `QuantEngine`, whose integer MAC stays
+/// per-call — DESIGN.md §14) route their non-batched datapath through
+/// the same audited loop as the trait default.
+pub fn features_batch_per_call<E: Engine + ?Sized>(
+    engine: &E,
+    reqs: &[FeatureRequest<'_>],
+    outs: &mut [Vec<f32>],
+) -> Result<()> {
+    assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
+    for (r, out) in reqs.iter().zip(outs.iter_mut()) {
+        engine.features_into(r.sample, r.mask, r.p, r.q, out)?;
+    }
+    Ok(())
 }
 
 /// A reservoir-parameter change the Serve-phase adaptation loop reports
@@ -127,15 +159,22 @@ pub trait Engine: Send {
         reqs: &[FeatureRequest<'_>],
         outs: &mut [Vec<f32>],
     ) -> Result<()> {
-        assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
-        for (r, out) in reqs.iter().zip(outs.iter_mut()) {
-            self.features_into(r.sample, r.mask, r.p, r.q, out)?;
-        }
-        Ok(())
+        features_batch_per_call(self, reqs, outs)
     }
 
-    /// Whether `scores_from_r_tilde(w̃, features, …)` over this engine's
-    /// `features_into` output reproduces `infer_into` **bitwise**. True
+    /// The compute-kernel table this engine's float datapath runs on.
+    /// Callers that score an engine's features *outside* the engine
+    /// (the session's batched-infer path) must dot through this table —
+    /// see [`scores_from_r_tilde_with`] — so their reduction order
+    /// matches `infer_into` exactly. The default is the portable scalar
+    /// table; engines carrying a runtime-dispatched table override it.
+    fn kernels(&self) -> Kernels {
+        Kernels::scalar()
+    }
+
+    /// Whether `scores_from_r_tilde_with(w̃, features, …,
+    /// &engine.kernels())` over this engine's `features_into` output
+    /// reproduces `infer_into` **bitwise**. True
     /// for engines whose inference is exactly a float dot product over
     /// r̃ (NativeEngine; QuantEngine while fallen back). False when
     /// inference uses a different datapath than dequantized features
@@ -239,6 +278,11 @@ pub struct NativeEngine {
     pub nx: usize,
     pub n_c: usize,
     pub f: Nonlinearity,
+    /// Compute-kernel table for the batched forward sweep and the score
+    /// dots (the process selection unless pinned via
+    /// [`with_kernels`](Self::with_kernels)); `fork` propagates it, so
+    /// every shard replica runs the same table.
+    kernels: Kernels,
     /// Each shard exclusively owns its engine replica (`Engine: Send`,
     /// not `Sync`), so this RefCell is never contended — it exists only
     /// because `Engine` methods take `&self`.
@@ -265,10 +309,19 @@ impl NativeEngine {
     }
 
     pub fn with_nonlinearity(nx: usize, n_c: usize, f: Nonlinearity) -> Self {
+        Self::with_kernels(nx, n_c, f, global_kernels())
+    }
+
+    /// An engine pinned to an explicit kernel table (the CLI's resolved
+    /// `--simd` selection, or a test pinning scalar/AVX2 directly);
+    /// [`with_nonlinearity`](Self::with_nonlinearity) takes the
+    /// process-wide selection.
+    pub fn with_kernels(nx: usize, n_c: usize, f: Nonlinearity, kernels: Kernels) -> Self {
         NativeEngine {
             nx,
             n_c,
             f,
+            kernels,
             scratch: RefCell::new(EngineScratch {
                 res: Reservoir {
                     mask: Mask {
@@ -391,18 +444,25 @@ impl Engine for NativeEngine {
         // One node-major sweep over all lanes: the sequential
         // virtual-node recurrence runs once per step for the whole
         // batch. Per lane the op sequence is identical to
-        // `features_into`, so the outputs are bitwise equal.
+        // `features_into` under every kernel table (the AVX2 cascade
+        // kernel preserves per-lane op order — DESIGN.md §18), so the
+        // outputs are bitwise equal.
         let mut sc = self.scratch.borrow_mut();
-        sc.bfwd.forward_batch_into(self.f, reqs.len(), |l| {
-            let r = &reqs[l];
-            BatchLane {
-                u: &r.sample.u,
-                t: r.sample.t,
-                mask: r.mask,
-                p: r.p,
-                q: r.q,
-            }
-        });
+        sc.bfwd.forward_batch_into_with(
+            self.f,
+            reqs.len(),
+            |l| {
+                let r = &reqs[l];
+                BatchLane {
+                    u: &r.sample.u,
+                    t: r.sample.t,
+                    mask: r.mask,
+                    p: r.p,
+                    q: r.q,
+                }
+            },
+            &self.kernels,
+        );
         for (l, out) in outs.iter_mut().enumerate() {
             sc.bfwd.r_tilde_into(l, out);
         }
@@ -443,8 +503,12 @@ impl Engine for NativeEngine {
         // split borrow: r̃ buffer and forward workspace are distinct fields
         let EngineScratch { fwd, r_tilde, .. } = &mut *sc;
         fwd.r_tilde_into(r_tilde);
-        scores_from_r_tilde(w_tilde, r_tilde, scores);
+        scores_from_r_tilde_with(w_tilde, r_tilde, scores, &self.kernels);
         Ok(())
+    }
+
+    fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     fn name(&self) -> &'static str {
@@ -457,10 +521,13 @@ impl Engine for NativeEngine {
     // other sessions on the shard have nothing to re-featurize against.
 
     fn fork(&self) -> Option<Box<dyn Engine>> {
-        // stateless apart from its dimensions (each replica gets its own
-        // workspace) — replicas are free
-        Some(Box::new(NativeEngine::with_nonlinearity(
-            self.nx, self.n_c, self.f,
+        // stateless apart from its dimensions and kernel table (each
+        // replica gets its own workspace) — replicas are free
+        Some(Box::new(NativeEngine::with_kernels(
+            self.nx,
+            self.n_c,
+            self.f,
+            self.kernels,
         )))
     }
 }

@@ -233,6 +233,10 @@ impl Engine for FaultyEngine {
         self.inner.scores_from_features_exact()
     }
 
+    fn kernels(&self) -> crate::simd::Kernels {
+        self.inner.kernels()
+    }
+
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {
         match self.trip()? {
             Verdict::Clean => self.inner.infer(s, mask, p, q, w_tilde),

@@ -106,6 +106,9 @@ pub struct HibernationStore {
     /// id → bucket it currently lives in (scan result for pre-existing
     /// entries, so a changed `buckets` knob never strands a session)
     index: BTreeMap<u64, usize>,
+    /// archive mutations (rewrites + deletions) committed by this
+    /// handle — the churn figure the eviction-batching test pins down
+    rewrites: u64,
 }
 
 impl HibernationStore {
@@ -148,6 +151,7 @@ impl HibernationStore {
                 dir,
                 buckets: buckets.max(1),
                 index,
+                rewrites: 0,
             },
             corrupt,
         ))
@@ -170,11 +174,14 @@ impl HibernationStore {
 
     /// Atomically rewrite one bucket archive (tmp + rename, like the
     /// checkpoint writer); an empty bucket is deleted instead.
-    fn rewrite_bucket(&self, bucket: usize, entries: &[Entry]) -> io::Result<()> {
+    fn rewrite_bucket(&mut self, bucket: usize, entries: &[Entry]) -> io::Result<()> {
         let path = self.bucket_path(bucket);
         if entries.is_empty() {
             match fs::remove_file(&path) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    self.rewrites += 1;
+                    return Ok(());
+                }
                 Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(()),
                 Err(e) => return Err(e),
             }
@@ -182,7 +189,9 @@ impl HibernationStore {
         let bytes = write_archive(entries).map_err(invalid)?;
         let tmp = path.with_extension("hib.tmp");
         fs::write(&tmp, &bytes)?;
-        fs::rename(&tmp, &path)
+        fs::rename(&tmp, &path)?;
+        self.rewrites += 1;
+        Ok(())
     }
 
     fn read_bucket(&self, bucket: usize) -> io::Result<Vec<Entry>> {
@@ -211,6 +220,65 @@ impl HibernationStore {
         self.rewrite_bucket(bucket, &entries)?;
         self.index.insert(snap.id, bucket);
         Ok(())
+    }
+
+    /// Park a batch of snapshots with **one archive rewrite per
+    /// bucket** instead of one per session — the O(bucket) read +
+    /// encode + rename is paid once for every evictee that hashes into
+    /// it, so a cap-eviction burst of E sessions costs at most
+    /// `min(E, buckets)` rewrites (`rewrites` counts them; the churn
+    /// test in this module pins the bound).
+    ///
+    /// Returns the ids actually parked. A failing bucket skips only its
+    /// own sessions — other buckets still commit, matching
+    /// [`hibernate`](Self::hibernate)'s store-unchanged-on-error
+    /// contract bucket by bucket. Errors are returned for the caller to
+    /// count/log; a snapshot absent from the returned ids stays the
+    /// caller's responsibility (keep it resident).
+    pub fn hibernate_many(
+        &mut self,
+        snaps: &[SessionSnapshot],
+    ) -> (Vec<u64>, Vec<io::Error>) {
+        let mut by_bucket: BTreeMap<usize, Vec<&SessionSnapshot>> = BTreeMap::new();
+        for snap in snaps {
+            let bucket = match self.index.get(&snap.id) {
+                Some(&b) => b,
+                None => self.bucket_of(snap.id),
+            };
+            by_bucket.entry(bucket).or_default().push(snap);
+        }
+        let mut parked = Vec::with_capacity(snaps.len());
+        let mut errors = Vec::new();
+        for (bucket, group) in by_bucket {
+            let commit = (|| -> io::Result<()> {
+                let mut entries = self.read_bucket(bucket)?;
+                for snap in &group {
+                    let name = format!("session-{}", snap.id);
+                    entries.retain(|e| e.name != name);
+                    entries.push(Entry {
+                        name,
+                        data: encode_session(snap),
+                    });
+                }
+                self.rewrite_bucket(bucket, &entries)
+            })();
+            match commit {
+                Ok(()) => {
+                    for snap in group {
+                        self.index.insert(snap.id, bucket);
+                        parked.push(snap.id);
+                    }
+                }
+                Err(e) => errors.push(e),
+            }
+        }
+        (parked, errors)
+    }
+
+    /// Archive mutations committed by this handle so far (rewrites and
+    /// empty-bucket deletions) — eviction-churn observability.
+    pub fn rewrites(&self) -> u64 {
+        self.rewrites
     }
 
     /// Remove and return `id`'s snapshot. `Ok(None)` when the store
@@ -415,59 +483,63 @@ impl ShardHibernator {
         }
     }
 
-    /// Park one resident session. Returns `true` on success; on a
-    /// store error the session stays resident (counted
-    /// `hibernate_errors_total`).
-    fn park(&mut self, sessions: &mut BTreeMap<u64, Session>, id: u64) -> bool {
-        let Some(sess) = sessions.get(&id) else {
-            return false;
-        };
-        match self.store.hibernate(&sess.snapshot()) {
-            Ok(()) => {
-                sessions.remove(&id);
-                self.touch.remove(&id);
-                self.hibernated_total.inc();
-                self.hibernated_gauge.set(self.store.len() as i64);
-                if let Some(ev) = &self.events {
-                    ev.push(
-                        EventKind::HibernatePark,
-                        self.shard as u32,
-                        id,
-                        format!("{} now parked on this shard", self.store.len()),
-                    );
-                }
-                true
-            }
-            Err(e) => {
-                self.hibernate_errors.inc();
-                log_warn!("shard {}: hibernating session {id} failed: {e}", self.shard);
-                false
+    /// Park a set of resident sessions in one batched store call (one
+    /// archive rewrite per *bucket* — see
+    /// [`HibernationStore::hibernate_many`]). Successfully parked
+    /// sessions leave the map; a failing bucket's sessions stay
+    /// resident (each bucket failure counts `hibernate_errors_total`
+    /// once). Returns how many parked.
+    fn park_many(&mut self, sessions: &mut BTreeMap<u64, Session>, ids: &[u64]) -> usize {
+        let snaps: Vec<SessionSnapshot> = ids
+            .iter()
+            .filter_map(|id| sessions.get(id).map(Session::snapshot))
+            .collect();
+        if snaps.is_empty() {
+            return 0;
+        }
+        let (parked, errors) = self.store.hibernate_many(&snaps);
+        for &id in &parked {
+            sessions.remove(&id);
+            self.touch.remove(&id);
+            self.hibernated_total.inc();
+            if let Some(ev) = &self.events {
+                ev.push(
+                    EventKind::HibernatePark,
+                    self.shard as u32,
+                    id,
+                    format!("{} now parked on this shard", self.store.len()),
+                );
             }
         }
+        self.hibernated_gauge.set(self.store.len() as i64);
+        for e in errors {
+            self.hibernate_errors.inc();
+            log_warn!("shard {}: batched hibernate failed for a bucket: {e}", self.shard);
+        }
+        parked.len()
     }
 
     /// LRU eviction down to `max_resident`: called after every drain
     /// cycle. Sessions never touched this process (e.g. restored at
-    /// spawn and quiet since) rank coldest.
+    /// spawn and quiet since) rank coldest. The whole overflow is
+    /// parked in **one** batched store call — a burst of E evictees
+    /// costs at most `min(E, buckets)` archive rewrites, not E. Store
+    /// trouble is not retried this cycle (the failing bucket's sessions
+    /// simply stay resident until the next drain).
     pub fn enforce_cap(&mut self, sessions: &mut BTreeMap<u64, Session>) {
-        while sessions.len() > self.max_resident {
-            let coldest = sessions
-                .keys()
-                .min_by_key(|id| self.touch.get(id).map_or(0, |&(c, _)| c))
-                .copied();
-            let Some(id) = coldest else {
-                break;
-            };
-            if !self.park(sessions, id) {
-                // store trouble: stop evicting this cycle rather than
-                // spinning on the same failing write
-                break;
-            }
+        let overflow = sessions.len().saturating_sub(self.max_resident);
+        if overflow == 0 {
+            return;
         }
+        let mut by_cold: Vec<u64> = sessions.keys().copied().collect();
+        by_cold.sort_by_key(|id| self.touch.get(id).map_or(0, |&(c, _)| c));
+        by_cold.truncate(overflow);
+        self.park_many(sessions, &by_cold);
     }
 
     /// Idle-clock sweep: park every session whose last touch is older
-    /// than `hibernate_after`. No-op when the idle clock is off.
+    /// than `hibernate_after` (one batched store call). No-op when the
+    /// idle clock is off.
     pub fn sweep_idle(&mut self, sessions: &mut BTreeMap<u64, Session>) {
         let Some(after) = self.hibernate_after else {
             return;
@@ -481,11 +553,7 @@ impl ShardHibernator {
             })
             .copied()
             .collect();
-        for id in idle {
-            if !self.park(sessions, id) {
-                break;
-            }
-        }
+        self.park_many(sessions, &idle);
     }
 
     /// Park everything (the shutdown drain marker): the shard has just
@@ -493,11 +561,7 @@ impl ShardHibernator {
     /// the checkpoint copy of anything that fails to park here.
     pub fn hibernate_all(&mut self, sessions: &mut BTreeMap<u64, Session>) {
         let ids: Vec<u64> = sessions.keys().copied().collect();
-        for id in ids {
-            if !self.park(sessions, id) {
-                break;
-            }
-        }
+        self.park_many(sessions, &ids);
     }
 
     /// Publish the resident level (single writer: the owning shard).
@@ -622,6 +686,40 @@ mod tests {
         assert_eq!(back.snapshot(), fresh_session(2).snapshot());
         assert_eq!(metrics.counter_total("sessions_rehydrated_total"), 1);
         assert!(!h.knows(2));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cap_eviction_batches_bucket_rewrites() {
+        let dir = tmpdir("churn");
+        let metrics = Registry::default();
+        let mut cfg = HibernateConfig::new(&dir);
+        cfg.max_resident = 1;
+        cfg.buckets = 2;
+        let mut h = ShardHibernator::new(&cfg, 0, &metrics).unwrap();
+        let mut sessions: BTreeMap<u64, Session> = BTreeMap::new();
+        for id in 0..17u64 {
+            sessions.insert(id, fresh_session(id));
+            h.note_touch(id);
+        }
+        // id 16 is hottest and stays; the 16-session overflow parks in
+        // one batched call
+        h.enforce_cap(&mut sessions);
+        assert_eq!(sessions.len(), 1);
+        assert!(sessions.contains_key(&16));
+        assert_eq!(metrics.counter_total("sessions_hibernated_total"), 16);
+        // the whole burst cost at most one archive rewrite per bucket,
+        // not one per evicted session
+        assert!(
+            h.store.rewrites() <= 2,
+            "eviction churn: {} rewrites for 16 evictees over 2 buckets",
+            h.store.rewrites()
+        );
+        // every batched-parked session still restores bit-for-bit
+        for id in 0..16u64 {
+            let back = h.rehydrate(id, &session_cfg()).unwrap();
+            assert_eq!(back.snapshot(), fresh_session(id).snapshot());
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

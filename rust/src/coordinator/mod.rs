@@ -53,7 +53,8 @@ pub mod session;
 pub use checkpoint::{dir_writable, CheckpointConfig, CheckpointError, ShardCheckpointer};
 pub use exporter::MetricsExporter;
 pub use engine::{
-    scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, PjrtEngine, Recalibration,
+    features_batch_per_call, scores_from_r_tilde, scores_from_r_tilde_with, Engine,
+    FeatureRequest, NativeEngine, PjrtEngine, Recalibration,
     ReservoirUpdate,
 };
 pub use faulty::{silence_injected_panics, FaultSpec, FaultyEngine, InjectedPanic, ShardKill};

@@ -52,7 +52,7 @@ use std::fmt;
 
 use anyhow::Result;
 
-use super::engine::{scores_from_r_tilde, Engine, ReservoirUpdate};
+use super::engine::{scores_from_r_tilde_with, Engine, ReservoirUpdate};
 use crate::data::dataset::Sample;
 use crate::dfr::mask::Mask;
 use crate::dfr::train::{online_ridge_from_features, ridge_phase_from_features, TrainConfig};
@@ -986,7 +986,10 @@ impl Session {
         };
         let _span = trace::span(Stage::ScoreFold);
         let mut scores = Vec::new();
-        scores_from_r_tilde(&sol.w_tilde, features, &mut scores);
+        // dot through the engine's own kernel table so the reduction
+        // order matches its `infer_into` exactly (the bitwise
+        // `scores_from_features_exact` contract holds per table)
+        scores_from_r_tilde_with(&sol.w_tilde, features, &mut scores, &engine.kernels());
         let class = crate::linalg::ridge::argmax(&scores);
         Ok((class, scores))
     }

@@ -496,21 +496,29 @@ pub struct BatchLane<'a> {
 /// cascade loop runs once per (step, node) over the whole batch instead
 /// of once per call.
 ///
-/// Layout (DESIGN.md §14): reservoir state is **node-major**
-/// (`x[n·b + l]`, lanes contiguous) so the cascade inner loop over lanes
-/// is a unit-stride sweep; masked inputs, DPRR accumulators and outputs
-/// are **lane-major** so each lane's results are contiguous slices that
-/// plug straight into the existing [`ForwardRef`] consumers.
+/// Layout (DESIGN.md §14/§18): everything the sweep *computes over* is
+/// **node-major** (`x[n·b + l]`, lanes contiguous — including the `jt`
+/// staging copy of the masked inputs and the raw DPRR accumulators), so
+/// every inner loop over lanes is a unit-stride sweep an 8-wide SIMD
+/// kernel can load directly; the lane-facing buffers (`j`, `r_mat`,
+/// `x_out`, `x_prev_out`) are **lane-major** so each lane's results are
+/// contiguous slices that plug straight into the existing
+/// [`ForwardRef`] consumers.
 ///
 /// Equivalence contract: per lane, the kernel executes the *identical*
 /// per-scalar operation sequence as [`Reservoir::forward_into`] — the
 /// mask dot product is `Mask::apply` itself, the recurrence is the same
 /// mul/add chain, and each DPRR element receives exactly one
 /// `acc += x_i·x'_m` per step (the per-call 4-wide chunking in
-/// `DprrAccumulator::push` does not change per-element math). Rust f32
-/// arithmetic is deterministic (no fast-math, no auto-FMA), so batched
-/// results are **bitwise equal** to per-call results at every batch
-/// size, including ragged batches (`tests/batch_equivalence.rs`).
+/// `DprrAccumulator::push` does not change per-element math; the
+/// node-major accumulator layout relocates elements but not their
+/// per-element op order, and the `j → jt` staging is bitwise copies).
+/// Rust f32 arithmetic is deterministic (no fast-math, no auto-FMA), so
+/// batched results are **bitwise equal** to per-call results at every
+/// batch size, including ragged batches (`tests/batch_equivalence.rs`) —
+/// and the same holds under the AVX2 kernel table, whose lane kernels
+/// preserve per-lane op order exactly (`crate::simd`,
+/// `tests/simd_equivalence.rs`).
 ///
 /// Buffers are grow-only: after warm-up at the largest (nx, lanes) seen,
 /// a steady-state `forward_batch_into` performs zero heap allocations
@@ -529,10 +537,19 @@ pub struct BatchScratch {
     /// masked inputs j(k), lane-major `[l·nx + n]` — each lane's slice is
     /// exactly the `j_out` buffer `Mask::apply` writes in the per-call path
     j: Vec<f32>,
+    /// node-major staging copy of `j` (`[n·b + l]`) — what the lane
+    /// kernels actually read; filled by bitwise scatter after masking
+    jt: Vec<f32>,
     /// per-lane cascade register (the scalar `prev_node` of `step`)
     cascade: Vec<f32>,
-    /// raw DPRR accumulators, lane-major `[l·nf + i·(nx+1) + m]`
+    /// raw DPRR accumulators, node-major `[(i·(nx+1)+m)·b + l]` so the
+    /// per-element lane loop is unit-stride; de-interleaved into the
+    /// lane-major `r_mat` at normalization time
     acc: Vec<f32>,
+    /// per-lane activity mask for ragged steps (`!0` = lane still
+    /// running at step k, `0` = frozen), the blend predicate of the
+    /// SIMD kernels; empty-slice convention = all lanes active
+    active: Vec<u32>,
     /// normalized DPRR matrices, lane-major
     r_mat: Vec<f32>,
     /// final states x(T), transposed to lane-major after the sweep
@@ -558,6 +575,7 @@ impl BatchScratch {
             self.x.clear();
             self.x_prev.clear();
             self.j.clear();
+            self.jt.clear();
             self.acc.clear();
             self.r_mat.clear();
             self.x_out.clear();
@@ -569,8 +587,10 @@ impl BatchScratch {
             self.x.resize(nx * lanes, 0.0);
             self.x_prev.resize(nx * lanes, 0.0);
             self.j.resize(nx * lanes, 0.0);
+            self.jt.resize(nx * lanes, 0.0);
             self.cascade.resize(lanes, 0.0);
             self.acc.resize(nf * lanes, 0.0);
+            self.active.resize(lanes, 0);
             self.r_mat.resize(nf * lanes, 0.0);
             self.x_out.resize(nx * lanes, 0.0);
             self.x_prev_out.resize(nx * lanes, 0.0);
@@ -634,6 +654,24 @@ impl BatchScratch {
         n_lanes: usize,
         lane_fn: impl Fn(usize) -> BatchLane<'a>,
     ) {
+        let kernels = crate::simd::global_kernels();
+        self.forward_batch_into_with(f, n_lanes, lane_fn, &kernels);
+    }
+
+    /// [`forward_batch_into`](Self::forward_batch_into) with an explicit
+    /// kernel table — the dispatch seam of the SIMD layer
+    /// (`crate::simd`). Per-lane results are **bitwise identical** under
+    /// every table: the lane kernels (`cascade_row`, `dprr_row`,
+    /// `dprr_bias`) are required to preserve each lane's scalar op order
+    /// exactly (`tests/simd_equivalence.rs` pins this at batch sizes
+    /// {1, 2, 7, 8, 9, 64} including ragged mixes).
+    pub fn forward_batch_into_with<'a>(
+        &mut self,
+        f: Nonlinearity,
+        n_lanes: usize,
+        lane_fn: impl Fn(usize) -> BatchLane<'a>,
+        kernels: &crate::simd::Kernels,
+    ) {
         self.lanes = n_lanes;
         if n_lanes == 0 {
             return;
@@ -665,14 +703,25 @@ impl BatchScratch {
         let x = &mut self.x[..nx * b];
         let x_prev = &mut self.x_prev[..nx * b];
         let j = &mut self.j[..nx * b];
+        let jt = &mut self.jt[..nx * b];
         let cascade = &mut self.cascade[..b];
         let acc = &mut self.acc[..nf * b];
+        let active = &mut self.active[..b];
         x.fill(0.0);
         x_prev.fill(0.0);
         j.fill(0.0);
+        jt.fill(0.0);
         acc.fill(0.0);
         for k in 0..t_max {
             let all_active = k < t_min;
+            // Ragged steps carry a per-lane blend mask (!0 = running, 0
+            // = frozen); the uniform fast path passes the empty slice.
+            if !all_active {
+                for l in 0..b {
+                    active[l] = if k < self.t_lens[l] { u32::MAX } else { 0 };
+                }
+            }
+            let act: &[u32] = if all_active { &[] } else { &active[..] };
             // x(k-1) ← x(k); guarded per lane when ragged so an
             // exhausted lane keeps its own final x(T-1).
             if all_active {
@@ -688,13 +737,18 @@ impl BatchScratch {
                 }
             }
             // Masking: the per-call `Mask::apply` verbatim, once per
-            // active lane, into the lane's contiguous j slice.
+            // active lane, into the lane's contiguous j slice — then a
+            // bitwise scatter into the node-major staging buffer the
+            // lane kernels read (unit stride over lanes).
             for l in 0..b {
                 if k < self.t_lens[l] {
                     let lane = lane_fn(l);
                     let v = lane.mask.v;
                     lane.mask
                         .apply(&lane.u[k * v..(k + 1) * v], &mut j[l * nx..(l + 1) * nx]);
+                    for n in 0..nx {
+                        jt[n * b + l] = j[l * nx + n];
+                    }
                 }
             }
             // Cascade seed: x(k)_0 ≡ x(k-1)_{Nx}, read before node 0
@@ -705,55 +759,50 @@ impl BatchScratch {
             }
             // Virtual-node recurrence, node-outer / lane-inner: the
             // sequential dependence runs once per step over the whole
-            // batch. Per lane this is exactly `Reservoir::step`'s
-            // `p·f(j+x) + q·prev` chain.
+            // batch. Per lane the kernel executes exactly
+            // `Reservoir::step`'s `p·f(j+x) + q·prev` chain (scalar
+            // table: the literal loop; AVX2 table: 8 lanes per
+            // instruction, frozen lanes blended back, scalar tail).
             for n in 0..nx {
                 let row = n * b;
-                let jrow = n;
-                if all_active {
-                    for l in 0..b {
-                        let xn = self.ps[l] * f.eval(j[l * nx + jrow] + x[row + l])
-                            + self.qs[l] * cascade[l];
-                        cascade[l] = xn;
-                        x[row + l] = xn;
-                    }
-                } else {
-                    for l in 0..b {
-                        if k < self.t_lens[l] {
-                            let xn = self.ps[l] * f.eval(j[l * nx + jrow] + x[row + l])
-                                + self.qs[l] * cascade[l];
-                            cascade[l] = xn;
-                            x[row + l] = xn;
-                        }
-                    }
-                }
+                (kernels.cascade_row)(
+                    f,
+                    &self.ps[..b],
+                    &self.qs[..b],
+                    &mut x[row..row + b],
+                    &jt[row..row + b],
+                    cascade,
+                    act,
+                );
             }
             // DPRR accumulate per active lane: one `+= x_i·x'_m` (and
             // one `+= x_i` into the bias column) per element per step —
-            // per-element identical to `DprrAccumulator::push`.
-            for l in 0..b {
-                if k >= self.t_lens[l] {
-                    continue;
+            // per-element identical to `DprrAccumulator::push`. The
+            // accumulator is node-major, so each (i, m) element is a
+            // unit-stride lane row for the kernel.
+            for i in 0..nx {
+                let xi = &x[i * b..(i + 1) * b];
+                for m in 0..nx {
+                    let arow = (i * nw + m) * b;
+                    (kernels.dprr_row)(
+                        &mut acc[arow..arow + b],
+                        xi,
+                        &x_prev[m * b..(m + 1) * b],
+                        act,
+                    );
                 }
-                let arow = &mut acc[l * nf..(l + 1) * nf];
-                for i in 0..nx {
-                    let xi = x[i * b + l];
-                    let out = &mut arow[i * nw..(i + 1) * nw];
-                    for (m, o) in out[..nx].iter_mut().enumerate() {
-                        *o += xi * x_prev[m * b + l];
-                    }
-                    out[nx] += xi;
-                }
+                let arow = (i * nw + nx) * b;
+                (kernels.dprr_bias)(&mut acc[arow..arow + b], xi, act);
             }
         }
-        // Normalize by each lane's own 1/T and transpose the state out
-        // to lane-major — bitwise copies, so equality is preserved.
+        // Normalize by each lane's own 1/T and de-interleave out to
+        // lane-major — bitwise copies and one scalar multiply per
+        // element, exactly as before, so equality is preserved.
         for l in 0..b {
             let inv_t = 1.0 / self.t_lens[l].max(1) as f32;
-            let src = &acc[l * nf..(l + 1) * nf];
             let dst = &mut self.r_mat[l * nf..(l + 1) * nf];
-            for (r, &a) in dst.iter_mut().zip(src) {
-                *r = a * inv_t;
+            for (e, r) in dst.iter_mut().enumerate() {
+                *r = acc[e * b + l] * inv_t;
             }
             for n in 0..nx {
                 self.x_out[l * nx + n] = x[n * b + l];

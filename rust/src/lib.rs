@@ -16,6 +16,10 @@
 //! - [`quant`] — bit-accurate fixed-point datapath: Q-format words,
 //!   PWL-LUT nonlinearity, quantized forward + MAC inference behind the
 //!   same `Engine` trait, analytic error budgeting and width sweeps.
+//! - [`simd`] — explicit-SIMD kernel layer: runtime-dispatched AVX2/FMA
+//!   implementations of the batched forward sweep, the ridge Gram
+//!   update and the score dots, pinned to the scalar reference by
+//!   bitwise/tolerance equivalence suites (DESIGN.md §18).
 //! - [`fpga`] — HLS-like co-design simulator substituting the Zynq board.
 //! - [`data`] — synthetic dataset generators (Table 4 profiles) + npz IO.
 //! - [`baselines`] — MLP / ESN comparators for Table 6.
@@ -32,3 +36,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod quant;
 pub mod report;
+pub mod simd;

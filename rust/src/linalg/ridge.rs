@@ -13,6 +13,7 @@ use super::cholupdate::{chol_downdate_1d, chol_update_1d};
 use super::counters::{NoCount, Ops};
 use super::gaussian::{ridge_gaussian, GaussianWorkspace};
 use super::{tri, tri_len, unpack_symmetric};
+use crate::simd::{global_kernels, Kernels};
 
 /// Which solver backs the ridge solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,16 +37,27 @@ pub struct RidgeAccumulator {
     pub a: Vec<f32>,
     /// number of samples folded in
     pub count: usize,
+    /// compute-kernel table for the Gram folds (process default unless
+    /// pinned via [`with_kernels`](Self::with_kernels))
+    kernels: Kernels,
 }
 
 impl RidgeAccumulator {
     pub fn new(s: usize, ny: usize) -> Self {
+        Self::with_kernels(s, ny, global_kernels())
+    }
+
+    /// An accumulator pinned to an explicit kernel table (the batch
+    /// trainer and the benches use this; [`new`](Self::new) takes the
+    /// process-wide selection).
+    pub fn with_kernels(s: usize, ny: usize, kernels: Kernels) -> Self {
         RidgeAccumulator {
             s,
             ny,
             b_packed: vec![0.0; tri_len(s)],
             a: vec![0.0; ny * s],
             count: 0,
+            kernels,
         }
     }
 
@@ -54,7 +66,7 @@ impl RidgeAccumulator {
     pub fn accumulate(&mut self, r_tilde: &[f32], class: usize) {
         assert_eq!(r_tilde.len(), self.s);
         assert!(class < self.ny);
-        rank1_update_packed(&mut self.b_packed, r_tilde);
+        rank1_update_packed_with(&mut self.b_packed, r_tilde, &self.kernels);
         let row = &mut self.a[class * self.s..(class + 1) * self.s];
         for (a, r) in row.iter_mut().zip(r_tilde) {
             *a += r;
@@ -82,7 +94,7 @@ impl RidgeAccumulator {
                 *a += x;
             }
         }
-        rankk_update_packed(&mut self.b_packed, rs, self.s);
+        rankk_update_packed_with(&mut self.b_packed, rs, self.s, &self.kernels);
         self.count += labels.len();
     }
 
@@ -374,6 +386,12 @@ pub struct OnlineRidge {
     updates: u64,
     since_refactor: usize,
     refactors: u64,
+    /// Kernel table for the rank-1 Gram update/downdate pair (process
+    /// default at construction; see [`set_kernels`](Self::set_kernels)).
+    /// Deliberately **not** part of [`OnlineRidgeState`]: kernel choice
+    /// is a process-global property, so a checkpoint restored in the
+    /// same process continues bitwise on the same table.
+    kernels: Kernels,
 }
 
 impl OnlineRidge {
@@ -414,7 +432,16 @@ impl OnlineRidge {
             updates: 0,
             since_refactor: 0,
             refactors: 0,
+            kernels: global_kernels(),
         }
+    }
+
+    /// Override the kernel table (update **and** downdate switch
+    /// together — see [`rank1_sub_packed_with`]). Intended for engines /
+    /// tests that pin a specific table; the default is the process
+    /// selection.
+    pub fn set_kernels(&mut self, kernels: Kernels) {
+        self.kernels = kernels;
     }
 
     pub fn s(&self) -> usize {
@@ -495,7 +522,7 @@ impl OnlineRidge {
                 let slot = self.ring_head;
                 let old_class = self.ring_labels[slot];
                 self.x.copy_from_slice(&self.ring[slot * self.s..(slot + 1) * self.s]);
-                rank1_sub_packed(&mut self.b, &self.x);
+                rank1_sub_packed_with(&mut self.b, &self.x, &self.kernels);
                 let row = &mut self.a[old_class * self.s..(old_class + 1) * self.s];
                 for (a, r) in row.iter_mut().zip(&self.x) {
                     *a -= r;
@@ -526,7 +553,7 @@ impl OnlineRidge {
         }
 
         // 3. fold the new sample into shadow, RHS, ring, and factor
-        rank1_update_packed(&mut self.b, r_tilde);
+        rank1_update_packed_with(&mut self.b, r_tilde, &self.kernels);
         let row = &mut self.a[class * self.s..(class + 1) * self.s];
         for (a, r) in row.iter_mut().zip(r_tilde) {
             *a += r;
@@ -687,6 +714,7 @@ impl OnlineRidge {
             updates,
             since_refactor,
             refactors,
+            kernels: global_kernels(),
         })
     }
 }
@@ -721,35 +749,26 @@ pub struct OnlineRidgeState {
 
 /// Shared core of [`rank1_update_packed`] / [`rank1_sub_packed`]: the
 /// sign is applied to the broadcast `r[i]` once per row (an exact IEEE
-/// sign flip), so both directions run the identical 4-wide axpy kernel
-/// (see `dfr::dprr::push` / §Perf) and can never drift apart.
+/// sign flip), so both directions run the identical per-row axpy kernel
+/// (`crate::simd`: 4-wide chunked scalar or 8-wide FMA) and can never
+/// drift apart.
 #[inline(always)]
-fn rank1_fold_packed<const SUB: bool>(p: &mut [f32], r: &[f32]) {
+fn rank1_fold_packed<const SUB: bool>(p: &mut [f32], r: &[f32], kernels: &Kernels) {
     let mut idx = 0;
     for i in 0..r.len() {
         let ri = if SUB { -r[i] } else { r[i] };
-        let row = &mut p[idx..idx + i + 1];
-        let rj = &r[..i + 1];
-        let mut rc = row.chunks_exact_mut(4);
-        let mut xc = rj.chunks_exact(4);
-        for (p4, x4) in rc.by_ref().zip(xc.by_ref()) {
-            p4[0] += ri * x4[0];
-            p4[1] += ri * x4[1];
-            p4[2] += ri * x4[2];
-            p4[3] += ri * x4[3];
-        }
-        for (pe, &re) in rc.into_remainder().iter_mut().zip(xc.remainder()) {
-            *pe += ri * re;
-        }
+        (kernels.axpy)(&mut p[idx..idx + i + 1], ri, &r[..i + 1]);
         idx += i + 1;
     }
 }
 
 /// `P += r rᵀ` on the packed lower triangle — the ridge hot loop
 /// (s(s+1)/2 MACs per sample). Row-wise to stay cache-friendly.
+/// Scalar-kernel reference; kernel-dispatched callers use
+/// [`rank1_update_packed_with`].
 #[inline]
 pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
-    rank1_fold_packed::<false>(p, r);
+    rank1_fold_packed::<false>(p, r, &Kernels::scalar());
 }
 
 /// `P −= r rᵀ` on the packed lower triangle — the eviction mirror of
@@ -757,46 +776,47 @@ pub fn rank1_update_packed(p: &mut [f32], r: &[f32]) {
 /// keep the Gram shadow exact as samples leave.
 #[inline]
 pub fn rank1_sub_packed(p: &mut [f32], r: &[f32]) {
-    rank1_fold_packed::<true>(p, r);
+    rank1_fold_packed::<true>(p, r, &Kernels::scalar());
+}
+
+/// [`rank1_update_packed`] through an explicit kernel table.
+#[inline]
+pub fn rank1_update_packed_with(p: &mut [f32], r: &[f32], kernels: &Kernels) {
+    rank1_fold_packed::<false>(p, r, kernels);
+}
+
+/// [`rank1_sub_packed`] through an explicit kernel table. Update and
+/// downdate must always go through the **same** table: the shadow stays
+/// exact only because eviction replays the identical per-element kernel
+/// with the sign flipped.
+#[inline]
+pub fn rank1_sub_packed_with(p: &mut [f32], r: &[f32], kernels: &Kernels) {
+    rank1_fold_packed::<true>(p, r, kernels);
 }
 
 /// `P += Σ_b r_b r_bᵀ` on the packed lower triangle from a row-major
 /// B×s block `rs` — the rank-k generalization of
 /// [`rank1_update_packed`].
 ///
-/// Register-blocked micro-kernel: each triangle row is processed for
-/// **4 samples at a time** (one load-modify-store of the row per quad
-/// instead of per sample), and within a quad the column loop is a pure
-/// axpy with no loop-carried reduction, so LLVM vectorizes it without
-/// fast-math. Total MAC count is identical to B rank-1 passes; the
-/// memory traffic over `P` drops by ~B (the row stays in L1 across the
-/// whole block, `P` is streamed once per block).
+/// The register-blocked micro-kernel (4 samples per row pass, pure-axpy
+/// inner loop) now lives in [`crate::simd::scalar::gram_rankk`] so the
+/// AVX2 table can provide an 8-wide FMA variant against the same
+/// contract; this wrapper is the scalar-kernel reference, and
+/// kernel-dispatched callers use [`rankk_update_packed_with`]. Total
+/// MAC count is identical to B rank-1 passes; the memory traffic over
+/// `P` drops by ~B versus per-sample folds.
 pub fn rankk_update_packed(p: &mut [f32], rs: &[f32], s: usize) {
+    rankk_update_packed_with(p, rs, s, &Kernels::scalar());
+}
+
+/// [`rankk_update_packed`] through an explicit kernel table. Gram
+/// accumulation reassociates across samples under the AVX2 table (FMA,
+/// 8-wide), so cross-table agreement is tolerance-bounded, not bitwise
+/// — see `tests/simd_equivalence.rs`.
+pub fn rankk_update_packed_with(p: &mut [f32], rs: &[f32], s: usize, kernels: &Kernels) {
     debug_assert_eq!(p.len(), tri_len(s));
     debug_assert_eq!(rs.len() % s.max(1), 0);
-    let mut idx = 0;
-    for i in 0..s {
-        let n = i + 1;
-        let row = &mut p[idx..idx + n];
-        let mut quads = rs.chunks_exact(4 * s);
-        for quad in quads.by_ref() {
-            let (q0, rest) = quad.split_at(s);
-            let (q1, rest) = rest.split_at(s);
-            let (q2, q3) = rest.split_at(s);
-            let (a0, a1, a2, a3) = (q0[i], q1[i], q2[i], q3[i]);
-            let (r0, r1, r2, r3) = (&q0[..n], &q1[..n], &q2[..n], &q3[..n]);
-            for j in 0..n {
-                row[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
-            }
-        }
-        for r in quads.remainder().chunks_exact(s) {
-            let ri = r[i];
-            for (pe, &re) in row.iter_mut().zip(&r[..n]) {
-                *pe += ri * re;
-            }
-        }
-        idx += n;
-    }
+    (kernels.gram_rankk)(p, rs, s);
 }
 
 /// The β-selection values used throughout the paper's evaluation (§4.1).

@@ -108,7 +108,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("dataset", "jpvow", "Table 4 dataset profile")
         .opt("seed", "42", "seed")
         .opt("epochs", "25", "SGD epochs")
-        .opt("engine", "native", "compute engine: native | quant | pjrt")
+        .opt("engine", "native", "compute engine: native | simd | quant | pjrt (simd = native on the runtime-dispatched AVX2 kernel table)")
+        .opt(
+            "simd",
+            "",
+            "kernel table selection: auto (benchmark probe) | force (error without AVX2+FMA) | \
+             off (empty = auto for --engine simd, DFR_SIMD env / scalar otherwise)",
+        )
         .opt("qformat", "q4.12", "fixed-point word for the quant engine (q4.12 | q6.10 | q8.8 | qI.F)")
         .opt("artifacts", "artifacts", "artifact dir (pjrt engine)")
         .opt("collect", "0", "collect target (0 = whole training split)")
@@ -212,8 +218,37 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
     }
 
-    let engine: Box<dyn dfr_edge::coordinator::Engine> = match p.get("engine") {
-        "native" => Box::new(NativeEngine::new(scfg.train.nx, prof.n_c)),
+    // Resolve the kernel table before any engine / accumulator is
+    // constructed, and pin it process-wide: every shard replica, online
+    // ridge and batch trainer then folds on the same table, which is
+    // what keeps checkpoint/hibernate round-trips bitwise.
+    let engine_name = p.get("engine");
+    let simd_mode = match p.get("simd") {
+        "" if engine_name == "simd" => Some(dfr_edge::simd::SimdMode::Auto),
+        "" => None, // keep the DFR_SIMD env / scalar process default
+        s => Some(dfr_edge::simd::SimdMode::parse(s).map_err(|e| e.to_string())?),
+    };
+    let kernels = match simd_mode {
+        Some(m) => {
+            let k = dfr_edge::simd::Kernels::try_select(m).map_err(|e| e.to_string())?;
+            if !dfr_edge::simd::set_global_kernels(k) {
+                log_info!("simd: process kernel table already pinned; engine uses {}", k.name);
+            }
+            k
+        }
+        None => dfr_edge::simd::global_kernels(),
+    };
+    if engine_name == "simd" || simd_mode.is_some() {
+        log_info!("simd kernel table: {}", kernels.name);
+    }
+
+    let engine: Box<dyn dfr_edge::coordinator::Engine> = match engine_name {
+        "native" | "simd" => Box::new(NativeEngine::with_kernels(
+            scfg.train.nx,
+            prof.n_c,
+            dfr_edge::dfr::reservoir::Nonlinearity::Linear { alpha: 1.0 },
+            kernels,
+        )),
         "quant" => {
             let fmt = dfr_edge::quant::QFormat::parse(p.get("qformat"))
                 .ok_or_else(|| format!("bad --qformat '{}' (try q4.12)", p.get("qformat")))?;

@@ -211,16 +211,20 @@ impl Engine for QuantEngine {
             // batched kernel (bitwise-equal to per-call fallback serving)
             return self.native.features_batch_into(reqs, outs);
         }
-        // Fixed-point datapath: no batched integer kernel yet, so this
-        // is a per-call loop — but routed through the shared entry
-        // point, so the coordinator's drain logic (and the equivalence
+        // Fixed-point datapath: no batched integer kernel yet
+        // (DESIGN.md §14 documents why integer-MAC batching stays gated
+        // off), so this routes through the shared audited per-call
+        // loop — the coordinator's drain logic (and the equivalence
         // suite) is identical for both engines and a future batched
         // Q-format sweep is a drop-in.
-        assert_eq!(reqs.len(), outs.len(), "reqs/outs length mismatch");
-        for (r, out) in reqs.iter().zip(outs.iter_mut()) {
-            self.features_into(r.sample, r.mask, r.p, r.q, out)?;
-        }
-        Ok(())
+        crate::coordinator::engine::features_batch_per_call(self, reqs, outs)
+    }
+
+    fn kernels(&self) -> crate::simd::Kernels {
+        // meaningful only while fallen back (the f32 path serves) —
+        // which is exactly when `scores_from_features_exact` lets the
+        // planner score batched features with this table
+        self.native.kernels()
     }
 
     fn scores_from_features_exact(&self) -> bool {

@@ -1,0 +1,380 @@
+//! x86-64 AVX2/FMA kernels — the vector side of the
+//! [`Kernels`](super::Kernels) table. **All `unsafe` of the SIMD layer
+//! lives in this file**, behind safe wrappers that assert every slice
+//! bound the raw loads rely on.
+//!
+//! Soundness story: the `#[target_feature]` functions here are only ever
+//! reachable through the table built by `Kernels::try_select*`, which
+//! requires `is_x86_feature_detected!("avx2") && ("fma")` before
+//! constructing it — so every wrapper's `unsafe` block discharges the
+//! same single obligation (the CPU runs the emitted instructions).
+//!
+//! Numeric contracts (DESIGN.md §18):
+//!
+//! * the **bitwise** kernels ([`cascade_row`], [`dprr_row`],
+//!   [`dprr_bias`]) use `vaddps`/`vmulps`/`vdivps` only — no FMA, no
+//!   reordering *within* a lane — so each lane computes exactly the
+//!   scalar op chain. Frozen lanes (ragged `k ≥ t_len[l]`, or any
+//!   masked batch position) are handled with `vblendvps` against the
+//!   *old* value: adding a masked zero instead would turn a stored
+//!   `-0.0` into `+0.0` and break bit equality. Batch tails (B mod 8)
+//!   run the scalar reference on the remainder slice — same ops, same
+//!   bits.
+//! * the **tolerance-bounded** kernels ([`gram_rankk`], [`axpy`],
+//!   [`dot`]) reassociate sums across the feature dimension and use
+//!   `vfmadd`; their equivalence to scalar is bounded, not exact, and
+//!   tested that way (`tests/simd_equivalence.rs`).
+//!
+//! `tanh` (and non-integer Mackey–Glass exponents) have no vector libm
+//! on stable; those lanes round-trip through a stack buffer and call the
+//! *same* scalar libm function — identical input bits produce identical
+//! output bits, preserving the bitwise contract at ~gather cost while
+//! the surrounding adds/muls still vectorize.
+
+use core::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_blendv_ps, _mm256_div_ps, _mm256_fmadd_ps, _mm256_loadu_ps,
+    _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use super::scalar;
+use crate::dfr::reservoir::Nonlinearity;
+
+const W: usize = 8;
+
+/// Vectorized `f` evaluation on 8 lanes.
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+unsafe fn eval8(f: Nonlinearity, t: __m256) -> __m256 {
+    match f {
+        // scalar eval is `alpha * x`: one mul — identical per lane
+        Nonlinearity::Linear { alpha } => _mm256_mul_ps(_mm256_set1_ps(alpha), t),
+        // scalar eval is `eta * x / (1.0 + x*x)` (pow_abs fast path):
+        // mul, then div by (1 + mul) — the same op chain per lane
+        Nonlinearity::MackeyGlass { eta, p_exp } if p_exp == 2.0 => {
+            let num = _mm256_mul_ps(_mm256_set1_ps(eta), t);
+            let den = _mm256_add_ps(_mm256_set1_ps(1.0), _mm256_mul_ps(t, t));
+            _mm256_div_ps(num, den)
+        }
+        // tanh / |x|^p powf: no stable vector libm — call the scalar
+        // libm per lane through a stack buffer (same input bits -> same
+        // output bits, so bit equality survives)
+        _ => {
+            let mut buf = [0.0f32; W];
+            _mm256_storeu_ps(buf.as_mut_ptr(), t);
+            for v in &mut buf {
+                *v = f.eval(*v);
+            }
+            _mm256_loadu_ps(buf.as_ptr())
+        }
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2; all slices must hold ≥ `l + 8` elements
+/// (and `active`, when non-empty, likewise).
+#[target_feature(enable = "avx2")]
+unsafe fn cascade_row_body(
+    f: Nonlinearity,
+    ps: &[f32],
+    qs: &[f32],
+    x_row: &mut [f32],
+    j_row: &[f32],
+    cascade: &mut [f32],
+    active: &[u32],
+    l: usize,
+) {
+    let xo = _mm256_loadu_ps(x_row.as_ptr().add(l));
+    let jv = _mm256_loadu_ps(j_row.as_ptr().add(l));
+    let t = _mm256_add_ps(jv, xo);
+    let fv = eval8(f, t);
+    let pv = _mm256_loadu_ps(ps.as_ptr().add(l));
+    let qv = _mm256_loadu_ps(qs.as_ptr().add(l));
+    let cv = _mm256_loadu_ps(cascade.as_ptr().add(l));
+    // p·f(j+x) + q·prev: vmulps, vmulps, vaddps — the scalar chain,
+    // never contracted to FMA (Rust scalar f32 does not contract)
+    let xn = _mm256_add_ps(_mm256_mul_ps(pv, fv), _mm256_mul_ps(qv, cv));
+    let (xs, cs) = if active.is_empty() {
+        (xn, xn)
+    } else {
+        // the mask words are !0 (sign bit set) for active lanes and 0
+        // for frozen ones; vblendvps keys on the sign bit, so frozen
+        // lanes keep their old x and cascade values bit-for-bit
+        let m = _mm256_loadu_ps(active.as_ptr().add(l).cast::<f32>());
+        (_mm256_blendv_ps(xo, xn, m), _mm256_blendv_ps(cv, xn, m))
+    };
+    _mm256_storeu_ps(x_row.as_mut_ptr().add(l), xs);
+    _mm256_storeu_ps(cascade.as_mut_ptr().add(l), cs);
+}
+
+/// AVX2 [`CascadeRowFn`](super::CascadeRowFn) — 8 lanes per iteration,
+/// scalar reference on the `B mod 8` tail.
+pub fn cascade_row(
+    f: Nonlinearity,
+    ps: &[f32],
+    qs: &[f32],
+    x_row: &mut [f32],
+    j_row: &[f32],
+    cascade: &mut [f32],
+    active: &[u32],
+) {
+    let b = x_row.len();
+    assert!(
+        ps.len() >= b && qs.len() >= b && j_row.len() >= b && cascade.len() >= b,
+        "cascade_row: lane buffers shorter than the x row"
+    );
+    assert!(
+        active.is_empty() || active.len() >= b,
+        "cascade_row: active mask shorter than the x row"
+    );
+    let mut l = 0;
+    while l + W <= b {
+        // SAFETY: this fn is only installed by `Kernels::avx2_table`,
+        // which the selection layer builds strictly after positive AVX2
+        // detection; the asserts above guarantee `l + 8` elements exist
+        // in every slice the body loads/stores.
+        unsafe {
+            cascade_row_body(f, ps, qs, x_row, j_row, cascade, active, l);
+        }
+        l += W;
+    }
+    if l < b {
+        let act = if active.is_empty() { active } else { &active[l..] };
+        scalar::cascade_row(
+            f,
+            &ps[l..],
+            &qs[l..],
+            &mut x_row[l..],
+            &j_row[l..],
+            &mut cascade[l..],
+            act,
+        );
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2; all slices must hold ≥ `l + 8` elements.
+#[target_feature(enable = "avx2")]
+unsafe fn dprr_row_body(acc_row: &mut [f32], xi: &[f32], xm: &[f32], active: &[u32], l: usize) {
+    let av = _mm256_loadu_ps(acc_row.as_ptr().add(l));
+    let xv = _mm256_loadu_ps(xi.as_ptr().add(l));
+    let mv = _mm256_loadu_ps(xm.as_ptr().add(l));
+    // acc + xi·xm: vmulps then vaddps — the scalar `+=` chain, no FMA
+    let sum = _mm256_add_ps(av, _mm256_mul_ps(xv, mv));
+    let out = if active.is_empty() {
+        sum
+    } else {
+        // blend the OLD accumulator back into frozen lanes (adding a
+        // masked zero would rewrite -0.0 as +0.0)
+        let m = _mm256_loadu_ps(active.as_ptr().add(l).cast::<f32>());
+        _mm256_blendv_ps(av, sum, m)
+    };
+    _mm256_storeu_ps(acc_row.as_mut_ptr().add(l), out);
+}
+
+/// AVX2 [`DprrRowFn`](super::DprrRowFn).
+pub fn dprr_row(acc_row: &mut [f32], xi: &[f32], xm: &[f32], active: &[u32]) {
+    let b = acc_row.len();
+    assert!(
+        xi.len() >= b && xm.len() >= b,
+        "dprr_row: state rows shorter than the accumulator row"
+    );
+    assert!(
+        active.is_empty() || active.len() >= b,
+        "dprr_row: active mask shorter than the accumulator row"
+    );
+    let mut l = 0;
+    while l + W <= b {
+        // SAFETY: table built only after positive AVX2 detection; the
+        // asserts above guarantee `l + 8` elements in every slice.
+        unsafe {
+            dprr_row_body(acc_row, xi, xm, active, l);
+        }
+        l += W;
+    }
+    if l < b {
+        let act = if active.is_empty() { active } else { &active[l..] };
+        scalar::dprr_row(&mut acc_row[l..], &xi[l..], &xm[l..], act);
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2; all slices must hold ≥ `l + 8` elements.
+#[target_feature(enable = "avx2")]
+unsafe fn dprr_bias_body(acc_row: &mut [f32], xi: &[f32], active: &[u32], l: usize) {
+    let av = _mm256_loadu_ps(acc_row.as_ptr().add(l));
+    let xv = _mm256_loadu_ps(xi.as_ptr().add(l));
+    let sum = _mm256_add_ps(av, xv);
+    let out = if active.is_empty() {
+        sum
+    } else {
+        // frozen lanes keep the old accumulator bits (see dprr_row_body)
+        let m = _mm256_loadu_ps(active.as_ptr().add(l).cast::<f32>());
+        _mm256_blendv_ps(av, sum, m)
+    };
+    _mm256_storeu_ps(acc_row.as_mut_ptr().add(l), out);
+}
+
+/// AVX2 [`DprrBiasFn`](super::DprrBiasFn).
+pub fn dprr_bias(acc_row: &mut [f32], xi: &[f32], active: &[u32]) {
+    let b = acc_row.len();
+    assert!(
+        xi.len() >= b,
+        "dprr_bias: state row shorter than the accumulator row"
+    );
+    assert!(
+        active.is_empty() || active.len() >= b,
+        "dprr_bias: active mask shorter than the accumulator row"
+    );
+    let mut l = 0;
+    while l + W <= b {
+        // SAFETY: table built only after positive AVX2 detection; the
+        // asserts above guarantee `l + 8` elements in every slice.
+        unsafe {
+            dprr_bias_body(acc_row, xi, active, l);
+        }
+        l += W;
+    }
+    if l < b {
+        let act = if active.is_empty() { active } else { &active[l..] };
+        scalar::dprr_bias(&mut acc_row[l..], &xi[l..], act);
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2 and FMA; `p.len() == s(s+1)/2` and
+/// `rs.len()` a multiple of `s` (asserted by the safe wrapper).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gram_rankk_body(p: &mut [f32], rs: &[f32], s: usize) {
+    let mut idx = 0;
+    for i in 0..s {
+        let n = i + 1;
+        let row = &mut p[idx..idx + n];
+        let mut quads = rs.chunks_exact(4 * s);
+        for quad in quads.by_ref() {
+            let (q0, rest) = quad.split_at(s);
+            let (q1, rest) = rest.split_at(s);
+            let (q2, q3) = rest.split_at(s);
+            let (a0, a1, a2, a3) = (q0[i], q1[i], q2[i], q3[i]);
+            let (v0, v1, v2, v3) = (
+                _mm256_set1_ps(a0),
+                _mm256_set1_ps(a1),
+                _mm256_set1_ps(a2),
+                _mm256_set1_ps(a3),
+            );
+            let mut j = 0;
+            while j + W <= n {
+                let mut acc = _mm256_loadu_ps(row.as_ptr().add(j));
+                acc = _mm256_fmadd_ps(v0, _mm256_loadu_ps(q0.as_ptr().add(j)), acc);
+                acc = _mm256_fmadd_ps(v1, _mm256_loadu_ps(q1.as_ptr().add(j)), acc);
+                acc = _mm256_fmadd_ps(v2, _mm256_loadu_ps(q2.as_ptr().add(j)), acc);
+                acc = _mm256_fmadd_ps(v3, _mm256_loadu_ps(q3.as_ptr().add(j)), acc);
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), acc);
+                j += W;
+            }
+            for jj in j..n {
+                row[jj] += a0 * q0[jj] + a1 * q1[jj] + a2 * q2[jj] + a3 * q3[jj];
+            }
+        }
+        for r in quads.remainder().chunks_exact(s) {
+            let ri = r[i];
+            let rv = _mm256_set1_ps(ri);
+            let mut j = 0;
+            while j + W <= n {
+                let acc = _mm256_fmadd_ps(
+                    rv,
+                    _mm256_loadu_ps(r.as_ptr().add(j)),
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                );
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), acc);
+                j += W;
+            }
+            for jj in j..n {
+                row[jj] += ri * r[jj];
+            }
+        }
+        idx += n;
+    }
+}
+
+/// AVX2/FMA [`GramRankkFn`](super::GramRankkFn) — same quad blocking as
+/// the scalar kernel, inner axpy fused 8-wide (tolerance class).
+pub fn gram_rankk(p: &mut [f32], rs: &[f32], s: usize) {
+    assert_eq!(p.len(), s * (s + 1) / 2, "packed triangle size mismatch");
+    assert_eq!(rs.len() % s.max(1), 0, "block not a multiple of s");
+    // SAFETY: table built only after positive AVX2+FMA detection; the
+    // asserts pin the triangle/row shapes, and the body indexes only
+    // within `row[..n]` / `q[..n]` with `n ≤ s` (slice-checked splits,
+    // vector loads bounded by `j + 8 <= n`).
+    unsafe {
+        gram_rankk_body(p, rs, s);
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2 and FMA; `x.len() >= row.len()`.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_body(row: &mut [f32], a: f32, x: &[f32]) {
+    let n = row.len();
+    let av = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + W <= n {
+        let acc = _mm256_fmadd_ps(
+            av,
+            _mm256_loadu_ps(x.as_ptr().add(j)),
+            _mm256_loadu_ps(row.as_ptr().add(j)),
+        );
+        _mm256_storeu_ps(row.as_mut_ptr().add(j), acc);
+        j += W;
+    }
+    for jj in j..n {
+        row[jj] += a * x[jj];
+    }
+}
+
+/// AVX2/FMA [`AxpyFn`](super::AxpyFn) (tolerance class: per-element FMA
+/// rounds once where scalar rounds twice).
+pub fn axpy(row: &mut [f32], a: f32, x: &[f32]) {
+    assert!(x.len() >= row.len(), "axpy: x shorter than row");
+    // SAFETY: table built only after positive AVX2+FMA detection; the
+    // assert guarantees every `j + 8 <= row.len()` load is in bounds
+    // for both slices.
+    unsafe {
+        axpy_body(row, a, x);
+    }
+}
+
+/// # Safety
+/// CPU must support AVX2 and FMA; `b.len() >= a.len()`.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_body(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut j = 0;
+    while j + W <= n {
+        acc = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(j)),
+            _mm256_loadu_ps(b.as_ptr().add(j)),
+            acc,
+        );
+        j += W;
+    }
+    let mut lanes = [0.0f32; W];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut sum = lanes.iter().sum::<f32>();
+    for jj in j..n {
+        sum += a[jj] * b[jj];
+    }
+    sum
+}
+
+/// AVX2/FMA [`DotFn`](super::DotFn) — 8 partial sums reduced at the end
+/// (tolerance class: reassociated relative to the scalar left fold).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert!(b.len() >= a.len(), "dot: operand length mismatch");
+    // SAFETY: table built only after positive AVX2+FMA detection; the
+    // assert guarantees every `j + 8 <= a.len()` load is in bounds for
+    // both slices.
+    unsafe { dot_body(a, b) }
+}

@@ -1,0 +1,416 @@
+//! Explicit-SIMD kernel layer: a runtime-dispatched table of the three
+//! serving-stack hot loops (DESIGN.md §18).
+//!
+//! The batched forward sweep (PR 6) laid reservoir state out node-major
+//! with lanes contiguous (`x[n·B + l]`) precisely so the lane dimension
+//! is data-parallel — this module is the software counterpart of the
+//! paper's node-parallel FPGA datapath: an 8-wide AVX2 implementation of
+//! the lane loops, selected at boot and dispatched through a [`Kernels`]
+//! table of plain function pointers.
+//!
+//! Three kernels, two equivalence classes:
+//!
+//! * **bitwise** — [`Kernels::cascade_row`], [`Kernels::dprr_row`],
+//!   [`Kernels::dprr_bias`]: each lane is an independent scalar
+//!   recurrence, so an 8-wide kernel that keeps every lane's op order
+//!   (mul/add only, **no FMA** — Rust's scalar f32 never contracts) is
+//!   bit-identical to the scalar path. Ragged/tail lanes are handled by
+//!   *blending* the old value back in (never by adding a zero:
+//!   `-0.0 + 0.0 == +0.0` would flip sign bits on frozen lanes).
+//!   Pinned by the zero-tolerance `tests/batch_equivalence.rs` +
+//!   `tests/simd_equivalence.rs` suites.
+//! * **tolerance-bounded** — [`Kernels::gram_rankk`], [`Kernels::axpy`],
+//!   [`Kernels::dot`]: sums over the feature dimension reassociate
+//!   (8-wide partial sums, FMA allowed), so these get golden-fixture +
+//!   property equivalence suites with derived tolerances instead of
+//!   `assert_eq!` — the same contract `accumulate_block` already ships
+//!   under (its block fold reassociates relative to sequential folds).
+//!
+//! Selection ([`Kernels::try_select`]): `Off` → scalar, `Force` → AVX2
+//! or a typed [`SimdError`] (never UB — the table is only built after
+//! `is_x86_feature_detected!`), `Auto` → a benchmark-at-boot probe races
+//! the two cascade kernels on a synthetic batch and keeps the winner.
+//! Non-x86-64 targets compile the scalar table only; `Force` errors.
+//!
+//! Process-wide default: [`global_kernels`] (the `DFR_SIMD` env knob or
+//! [`set_global_kernels`] from the CLI's `--engine simd` / `--simd`
+//! flags). Engines additionally carry their own copy so selection is
+//! per shard ([`crate::coordinator::NativeEngine::with_kernels`]).
+//!
+//! All `unsafe` lives in the [`avx2`] submodule, every block carries a
+//! SAFETY comment (`#![deny(clippy::undocumented_unsafe_blocks)]`), and
+//! the crate adds **zero dependencies** — `core::arch` +
+//! `#[target_feature]` on stable only.
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+use std::fmt;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::dfr::reservoir::Nonlinearity;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod scalar;
+
+/// One virtual-node row of the batched Eq.-14 cascade over the lane
+/// dimension: for every active lane `l`,
+/// `x[l] = p[l]·f(j[l] + x[l]) + q[l]·cascade[l]`, then
+/// `cascade[l] = x[l]`. `active` is empty (all lanes active) or one
+/// word per lane (`!0` = active, `0` = frozen: both outputs keep their
+/// old value bit-for-bit).
+pub type CascadeRowFn =
+    fn(f: Nonlinearity, ps: &[f32], qs: &[f32], x_row: &mut [f32], j_row: &[f32], cascade: &mut [f32], active: &[u32]);
+
+/// One DPRR element row over lanes: `acc[l] += xi[l]·xm[l]` for active
+/// lanes (same `active` contract as [`CascadeRowFn`]).
+pub type DprrRowFn = fn(acc_row: &mut [f32], xi: &[f32], xm: &[f32], active: &[u32]);
+
+/// DPRR bias-column row over lanes: `acc[l] += xi[l]` for active lanes.
+pub type DprrBiasFn = fn(acc_row: &mut [f32], xi: &[f32], active: &[u32]);
+
+/// Packed-lower-triangle rank-k Gram update `P += Σ_b r_b r_bᵀ`
+/// (`rs` row-major B×s) — the `accumulate_block` hot loop.
+pub type GramRankkFn = fn(p: &mut [f32], rs: &[f32], s: usize);
+
+/// `row[j] += a·x[j]` — the per-row axpy of the packed rank-1 fold
+/// (`OnlineRidge`'s Gram-shadow update).
+pub type AxpyFn = fn(row: &mut [f32], a: f32, x: &[f32]);
+
+/// Dot product — the per-class score reduction of `scores_from_r_tilde`.
+pub type DotFn = fn(a: &[f32], b: &[f32]) -> f32;
+
+/// The dispatch table. `Copy` by design: engines, accumulators and the
+/// online-ridge factor each embed their own copy, so per-shard selection
+/// costs nothing and never chases a pointer on the hot path.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// implementation name for logs/metrics/benches ("scalar", "avx2")
+    pub name: &'static str,
+    pub cascade_row: CascadeRowFn,
+    pub dprr_row: DprrRowFn,
+    pub dprr_bias: DprrBiasFn,
+    pub gram_rankk: GramRankkFn,
+    pub axpy: AxpyFn,
+    pub dot: DotFn,
+}
+
+impl fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Kernels").field("name", &self.name).finish()
+    }
+}
+
+impl PartialEq for Kernels {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+    }
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        Kernels::scalar()
+    }
+}
+
+impl Kernels {
+    /// The portable scalar table — the reference implementation every
+    /// other table is pinned against. Always available on every target.
+    pub const fn scalar() -> Kernels {
+        Kernels {
+            name: "scalar",
+            cascade_row: scalar::cascade_row,
+            dprr_row: scalar::dprr_row,
+            dprr_bias: scalar::dprr_bias,
+            gram_rankk: scalar::gram_rankk,
+            axpy: scalar::axpy,
+            dot: scalar::dot,
+        }
+    }
+
+    /// The AVX2 table. Present only on x86-64 builds; callers go through
+    /// [`try_select`](Self::try_select), which guards construction with
+    /// CPU feature detection.
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_table() -> Kernels {
+        Kernels {
+            name: "avx2",
+            cascade_row: avx2::cascade_row,
+            dprr_row: avx2::dprr_row,
+            dprr_bias: avx2::dprr_bias,
+            gram_rankk: avx2::gram_rankk,
+            axpy: avx2::axpy,
+            dot: avx2::dot,
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_table_opt() -> Option<Kernels> {
+        Some(Self::avx2_table())
+    }
+
+    /// Non-x86-64 targets have no vector table: `Force` is a typed
+    /// error and `Auto` degrades to scalar (acceptance criterion: the
+    /// default build compiles and selects scalar everywhere else).
+    #[cfg(not(target_arch = "x86_64"))]
+    fn avx2_table_opt() -> Option<Kernels> {
+        None
+    }
+
+    /// Select a table for `mode` using live CPU detection.
+    pub fn try_select(mode: SimdMode) -> Result<Kernels, SimdError> {
+        Self::try_select_with(mode, avx2_available())
+    }
+
+    /// Selection with the detection result injected — the deterministic
+    /// seam the `--simd force`-without-AVX2 error path is tested through
+    /// on any host. `detected` is ANDed with compile-time availability,
+    /// so a forged `true` on a non-x86-64 target still errors instead of
+    /// fabricating an unusable table.
+    pub fn try_select_with(mode: SimdMode, detected: bool) -> Result<Kernels, SimdError> {
+        match mode {
+            SimdMode::Off => Ok(Self::scalar()),
+            SimdMode::Force => {
+                if !detected {
+                    return Err(SimdError::Unsupported {
+                        wanted: "avx2+fma",
+                        target: std::env::consts::ARCH,
+                    });
+                }
+                Self::avx2_table_opt().ok_or(SimdError::Unsupported {
+                    wanted: "avx2+fma",
+                    target: std::env::consts::ARCH,
+                })
+            }
+            SimdMode::Auto => Ok(match Self::avx2_table_opt() {
+                Some(simd) if detected => probe_pick(Self::scalar(), simd),
+                _ => Self::scalar(),
+            }),
+        }
+    }
+}
+
+/// Whether the running CPU supports every instruction the AVX2 table
+/// emits (AVX2 for the bitwise kernels, FMA for the Gram/score ones).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// SIMD selection policy (`--simd` / `DFR_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// benchmark-at-boot probe picks the faster table (scalar when the
+    /// CPU lacks AVX2)
+    Auto,
+    /// require the AVX2 table; typed error if the host cannot run it
+    Force,
+    /// scalar, unconditionally (the process default)
+    Off,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Result<SimdMode, SimdError> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "force" => Ok(SimdMode::Force),
+            "off" => Ok(SimdMode::Off),
+            other => Err(SimdError::BadMode(other.to_string())),
+        }
+    }
+}
+
+/// Typed selection failure — surfaced as a CLI error for `--simd force`
+/// on an unsupported host (graceful, never UB: the vector table is not
+/// constructed at all).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SimdError {
+    /// the host CPU (or compile target) cannot run the requested table
+    Unsupported {
+        wanted: &'static str,
+        target: &'static str,
+    },
+    /// unparseable `--simd` / `DFR_SIMD` value
+    BadMode(String),
+}
+
+impl fmt::Display for SimdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimdError::Unsupported { wanted, target } => write!(
+                f,
+                "--simd force: this host ({target}) does not support {wanted}; \
+                 use --simd auto (probe) or off (scalar)"
+            ),
+            SimdError::BadMode(m) => {
+                write!(f, "unknown SIMD mode {m:?} (expected force|off|auto)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimdError {}
+
+// ---------------------------------------------------------------------------
+// benchmark-at-boot probe
+// ---------------------------------------------------------------------------
+
+/// Probe workload shape: one jpvow-scale cascade row sweep (Nx = 30
+/// nodes × 64 lanes) plus a DPRR row — the actual hot loops, small
+/// enough to stay in L1 so the probe measures compute, not memory.
+const PROBE_NX: usize = 30;
+const PROBE_LANES: usize = 64;
+const PROBE_REPS: usize = 200;
+const PROBE_ROUNDS: usize = 3;
+
+fn probe_run(k: &Kernels, x: &mut [f32], j: &[f32], ps: &[f32], qs: &[f32], cascade: &mut [f32]) {
+    for n in 0..PROBE_NX {
+        let row = n * PROBE_LANES;
+        (k.cascade_row)(
+            Nonlinearity::Linear { alpha: 1.0 },
+            ps,
+            qs,
+            &mut x[row..row + PROBE_LANES],
+            &j[row..row + PROBE_LANES],
+            cascade,
+            &[],
+        );
+    }
+}
+
+fn probe_time(k: &Kernels) -> std::time::Duration {
+    let mut x = vec![0.0f32; PROBE_NX * PROBE_LANES];
+    let j: Vec<f32> = (0..PROBE_NX * PROBE_LANES)
+        .map(|i| (i as f32 * 0.37).sin() * 0.5)
+        .collect();
+    let ps = vec![0.2f32; PROBE_LANES];
+    let qs = vec![0.3f32; PROBE_LANES];
+    let mut cascade = vec![0.0f32; PROBE_LANES];
+    // warm-up round, then best-of-N to shrug off scheduler noise
+    probe_run(k, &mut x, &j, &ps, &qs, &mut cascade);
+    let mut best = std::time::Duration::MAX;
+    for _ in 0..PROBE_ROUNDS {
+        let t0 = Instant::now();
+        for _ in 0..PROBE_REPS {
+            probe_run(k, &mut x, &j, &ps, &qs, &mut cascade);
+        }
+        best = best.min(t0.elapsed());
+    }
+    // keep the state observable so the kernel calls cannot be elided
+    std::hint::black_box(&x);
+    best
+}
+
+/// The `Auto` selector: race the two cascade kernels on a synthetic
+/// batch and keep the winner. Runs once per selection (the global table
+/// caches its result), costs single-digit milliseconds at boot.
+fn probe_pick(scalar: Kernels, simd: Kernels) -> Kernels {
+    let t_scalar = probe_time(&scalar);
+    let t_simd = probe_time(&simd);
+    let win = if t_simd < t_scalar { simd } else { scalar };
+    crate::log_info!(
+        "simd boot probe: scalar {:?} vs {} {:?} -> {}",
+        t_scalar,
+        simd.name,
+        t_simd,
+        win.name
+    );
+    win
+}
+
+// ---------------------------------------------------------------------------
+// process-wide selection
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Kernels> = OnceLock::new();
+
+/// Pin the process-wide kernel table (the CLI calls this once, before
+/// any engine or accumulator is built). Returns `false` if the table was
+/// already resolved — later calls never flip kernels mid-process, which
+/// is what keeps checkpoint/hibernate round-trips bitwise reproducible.
+pub fn set_global_kernels(k: Kernels) -> bool {
+    GLOBAL.set(k).is_ok()
+}
+
+/// The process-wide kernel table. Resolved once, from the `DFR_SIMD`
+/// env knob (`force|off|auto`) — unset means scalar, so existing
+/// builds/tests/results are byte-for-byte unaffected unless SIMD is
+/// asked for. A `force` that the host cannot satisfy logs and falls
+/// back to scalar here (library context); the CLI's `--simd force`
+/// path surfaces the typed error instead of starting.
+pub fn global_kernels() -> Kernels {
+    *GLOBAL.get_or_init(|| match std::env::var("DFR_SIMD") {
+        Err(_) => Kernels::scalar(),
+        Ok(v) => match SimdMode::parse(&v).and_then(Kernels::try_select) {
+            Ok(k) => {
+                crate::log_info!("DFR_SIMD={v}: kernel table '{}'", k.name);
+                k
+            }
+            Err(e) => {
+                crate::log_warn!("DFR_SIMD={v}: {e}; falling back to scalar kernels");
+                Kernels::scalar()
+            }
+        },
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("force").unwrap(), SimdMode::Force);
+        assert_eq!(SimdMode::parse("off").unwrap(), SimdMode::Off);
+        assert!(matches!(
+            SimdMode::parse("fast"),
+            Err(SimdError::BadMode(_))
+        ));
+    }
+
+    #[test]
+    fn off_is_scalar_everywhere() {
+        assert_eq!(Kernels::try_select(SimdMode::Off).unwrap().name, "scalar");
+    }
+
+    #[test]
+    fn force_without_detection_is_a_typed_error() {
+        // the deterministic seam: regardless of the running host, a
+        // negative detection must produce the typed error (not UB, not
+        // a panic) — this is the `--simd force` no-AVX2 path
+        let err = Kernels::try_select_with(SimdMode::Force, false).unwrap_err();
+        assert!(matches!(err, SimdError::Unsupported { .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("--simd force"), "actionable message: {msg}");
+    }
+
+    #[test]
+    fn auto_never_fails() {
+        // on AVX2 hosts the probe picks a winner, elsewhere scalar —
+        // either way Auto must always return a table
+        let k = Kernels::try_select(SimdMode::Auto).unwrap();
+        assert!(k.name == "scalar" || k.name == "avx2");
+    }
+
+    #[test]
+    fn force_matches_detection() {
+        match Kernels::try_select(SimdMode::Force) {
+            Ok(k) => {
+                assert!(avx2_available());
+                assert_eq!(k.name, "avx2");
+            }
+            Err(e) => {
+                assert!(!avx2_available());
+                assert!(matches!(e, SimdError::Unsupported { .. }));
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Portable scalar kernels — the reference implementation of the
+//! [`Kernels`](super::Kernels) table and the tail path of the AVX2
+//! table (lane counts mod 8, Gram rows mod 8).
+//!
+//! Every function here executes, per lane / per element, **exactly** the
+//! operation sequence of the pre-SIMD code it replaced
+//! (`BatchScratch::forward_batch_into`'s inner loops, `rank1_fold_packed`'s
+//! axpy rows, `rankk_update_packed`, `scores_from_r_tilde`'s dot) — the
+//! bitwise and tolerance equivalence suites pin the vector tables against
+//! these functions, and these functions against the original per-call
+//! paths.
+
+use crate::dfr::reservoir::Nonlinearity;
+
+/// See [`CascadeRowFn`](super::CascadeRowFn). Per active lane this is the
+/// per-call `Reservoir::step` chain verbatim: `p·f(j+x) + q·prev`
+/// (two muls, one add — never fused).
+pub fn cascade_row(
+    f: Nonlinearity,
+    ps: &[f32],
+    qs: &[f32],
+    x_row: &mut [f32],
+    j_row: &[f32],
+    cascade: &mut [f32],
+    active: &[u32],
+) {
+    let b = x_row.len();
+    if active.is_empty() {
+        for l in 0..b {
+            let xn = ps[l] * f.eval(j_row[l] + x_row[l]) + qs[l] * cascade[l];
+            cascade[l] = xn;
+            x_row[l] = xn;
+        }
+    } else {
+        for l in 0..b {
+            if active[l] != 0 {
+                let xn = ps[l] * f.eval(j_row[l] + x_row[l]) + qs[l] * cascade[l];
+                cascade[l] = xn;
+                x_row[l] = xn;
+            }
+        }
+    }
+}
+
+/// See [`DprrRowFn`](super::DprrRowFn): one `acc += x_i·x'_m` per active
+/// lane — per-element identical to `DprrAccumulator::push`.
+pub fn dprr_row(acc_row: &mut [f32], xi: &[f32], xm: &[f32], active: &[u32]) {
+    let b = acc_row.len();
+    if active.is_empty() {
+        for l in 0..b {
+            acc_row[l] += xi[l] * xm[l];
+        }
+    } else {
+        for l in 0..b {
+            if active[l] != 0 {
+                acc_row[l] += xi[l] * xm[l];
+            }
+        }
+    }
+}
+
+/// See [`DprrBiasFn`](super::DprrBiasFn): the DPRR bias column,
+/// `acc += x_i` per active lane.
+pub fn dprr_bias(acc_row: &mut [f32], xi: &[f32], active: &[u32]) {
+    let b = acc_row.len();
+    if active.is_empty() {
+        for l in 0..b {
+            acc_row[l] += xi[l];
+        }
+    } else {
+        for l in 0..b {
+            if active[l] != 0 {
+                acc_row[l] += xi[l];
+            }
+        }
+    }
+}
+
+/// See [`GramRankkFn`](super::GramRankkFn): `P += Σ_b r_b r_bᵀ` on the
+/// packed lower triangle from a row-major B×s block.
+///
+/// Register-blocked micro-kernel (moved verbatim from
+/// `linalg::ridge::rankk_update_packed`, which now dispatches here):
+/// each triangle row is processed for **4 samples at a time** (one
+/// load-modify-store of the row per quad instead of per sample), and
+/// within a quad the column loop is a pure axpy with no loop-carried
+/// reduction, so LLVM vectorizes it without fast-math. Total MAC count
+/// is identical to B rank-1 passes; the memory traffic over `P` drops
+/// by ~B (the row stays in L1 across the whole block, `P` is streamed
+/// once per block).
+pub fn gram_rankk(p: &mut [f32], rs: &[f32], s: usize) {
+    debug_assert_eq!(rs.len() % s.max(1), 0);
+    let mut idx = 0;
+    for i in 0..s {
+        let n = i + 1;
+        let row = &mut p[idx..idx + n];
+        let mut quads = rs.chunks_exact(4 * s);
+        for quad in quads.by_ref() {
+            let (q0, rest) = quad.split_at(s);
+            let (q1, rest) = rest.split_at(s);
+            let (q2, q3) = rest.split_at(s);
+            let (a0, a1, a2, a3) = (q0[i], q1[i], q2[i], q3[i]);
+            let (r0, r1, r2, r3) = (&q0[..n], &q1[..n], &q2[..n], &q3[..n]);
+            for j in 0..n {
+                row[j] += a0 * r0[j] + a1 * r1[j] + a2 * r2[j] + a3 * r3[j];
+            }
+        }
+        for r in quads.remainder().chunks_exact(s) {
+            let ri = r[i];
+            for (pe, &re) in row.iter_mut().zip(&r[..n]) {
+                *pe += ri * re;
+            }
+        }
+        idx += n;
+    }
+}
+
+/// See [`AxpyFn`](super::AxpyFn): `row[j] += a·x[j]` — the 4-wide
+/// chunked axpy `rank1_fold_packed` has always used (per-element
+/// mul+add; chunking does not change per-element math).
+pub fn axpy(row: &mut [f32], a: f32, x: &[f32]) {
+    let mut rc = row.chunks_exact_mut(4);
+    let mut xc = x.chunks_exact(4);
+    for (p4, x4) in rc.by_ref().zip(xc.by_ref()) {
+        p4[0] += a * x4[0];
+        p4[1] += a * x4[1];
+        p4[2] += a * x4[2];
+        p4[3] += a * x4[3];
+    }
+    for (pe, &re) in rc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *pe += a * re;
+    }
+}
+
+/// See [`DotFn`](super::DotFn): the sequential left-to-right reduction
+/// `scores_from_r_tilde` has always used.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}

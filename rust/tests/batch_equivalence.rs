@@ -35,8 +35,9 @@ use std::time::Duration;
 use anyhow::Result;
 
 use dfr_edge::coordinator::engine::{
-    scores_from_r_tilde, Engine, FeatureRequest, NativeEngine, ReservoirUpdate,
+    scores_from_r_tilde_with, Engine, FeatureRequest, NativeEngine, ReservoirUpdate,
 };
+use dfr_edge::simd::{Kernels, SimdMode};
 use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
 use dfr_edge::coordinator::{Request, Response, Server, ServerConfig};
 use dfr_edge::data::dataset::{Dataset, Sample};
@@ -252,13 +253,67 @@ fn native_engine_batch_matches_per_call_across_sessions() {
             assert_eq!(outs[l], want, "batch size {b}, lane {l}");
 
             // scoring batched features == per-call infer_into, bitwise
-            // (the contract behind scores_from_features_exact)
+            // (the contract behind scores_from_features_exact; the dot
+            // must run through the engine's own kernel table)
             let mut from_batch = Vec::new();
-            scores_from_r_tilde(&w_tilde, &outs[l], &mut from_batch);
+            scores_from_r_tilde_with(&w_tilde, &outs[l], &mut from_batch, &eng.kernels());
             let mut per_call = Vec::new();
             eng.infer_into(&samples[l], &lane.mask, lane.p, lane.q, &w_tilde, &mut per_call)
                 .unwrap();
             assert_eq!(from_batch, per_call, "batch size {b}, lane {l}: scores");
+        }
+    }
+}
+
+#[test]
+fn simd_pinned_engine_batch_matches_per_call_bitwise() {
+    // The tentpole contract at engine level: an engine pinned to the
+    // AVX2 table produces batched features bitwise equal to its own
+    // per-call path (`features_into` runs the scalar `forward_into` —
+    // kernel-independent by construction — so this pins vector against
+    // scalar, not vector against itself). Skips gracefully where the
+    // host has no AVX2+FMA.
+    let k = match Kernels::try_select(SimdMode::Force) {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("(simd engine equivalence skipped: {e})");
+            return;
+        }
+    };
+    let (nx, n_c, v) = (6usize, 3usize, 3usize);
+    let eng = NativeEngine::with_kernels(nx, n_c, Nonlinearity::Tanh, k);
+    let s_dim = nx * nx + nx + 1;
+    let mut rng = Pcg32::seed(0x51AD);
+    let w_tilde: Vec<f32> = (0..n_c * s_dim).map(|_| 0.01 * rng.normal()).collect();
+    // {1, 2, 7, 8, 9, 64}: degenerate, minimal, around the 8-lane AVX2
+    // width (full vector, one-short, one-over tail lane) and deep
+    for &b in &[1usize, 2, 7, 8, 9, 64] {
+        let lanes = lane_fixtures(b, nx, v, 0x51AD00 + b as u64, true);
+        let samples = mixed_samples(&lanes);
+        let reqs: Vec<FeatureRequest<'_>> = lanes
+            .iter()
+            .zip(&samples)
+            .map(|(lane, sample)| FeatureRequest {
+                sample,
+                mask: &lane.mask,
+                p: lane.p,
+                q: lane.q,
+            })
+            .collect();
+        let mut outs = vec![Vec::new(); b];
+        eng.features_batch_into(&reqs, &mut outs).unwrap();
+        for (l, lane) in lanes.iter().enumerate() {
+            let mut want = Vec::new();
+            eng.features_into(&samples[l], &lane.mask, lane.p, lane.q, &mut want)
+                .unwrap();
+            assert_eq!(outs[l], want, "simd batch size {b}, lane {l}");
+            // scoring through the engine's table == its per-call infer
+            let mut from_batch = Vec::new();
+            scores_from_r_tilde_with(&w_tilde, &outs[l], &mut from_batch, &eng.kernels());
+            let mut per_call = Vec::new();
+            eng.infer_into(&samples[l], &lane.mask, lane.p, lane.q, &w_tilde, &mut per_call)
+                .unwrap();
+            assert_eq!(from_batch, per_call, "simd batch size {b}, lane {l}: scores");
         }
     }
 }
@@ -475,6 +530,9 @@ impl Engine for GenEngine {
     fn name(&self) -> &'static str {
         "gen"
     }
+    fn kernels(&self) -> Kernels {
+        self.inner.kernels()
+    }
     fn generation(&self) -> u64 {
         self.gen.get()
     }
@@ -553,6 +611,9 @@ impl Engine for SlowAdaptEngine {
     }
     fn scores_from_features_exact(&self) -> bool {
         self.inner.scores_from_features_exact()
+    }
+    fn kernels(&self) -> Kernels {
+        self.inner.kernels()
     }
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
         self.inner.infer(s, mask, p, q, w)

@@ -187,6 +187,10 @@ impl Engine for SlowInfer {
         false
     }
 
+    fn kernels(&self) -> dfr_edge::simd::Kernels {
+        self.inner.kernels()
+    }
+
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w_tilde: &[f32]) -> Result<Vec<f32>> {
         thread::sleep(self.delay);
         self.inner.infer(s, mask, p, q, w_tilde)

@@ -259,6 +259,10 @@ impl Engine for RollingEngine {
         true
     }
 
+    fn kernels(&self) -> dfr_edge::simd::Kernels {
+        self.inner.kernels()
+    }
+
     fn name(&self) -> &'static str {
         "rolling"
     }

@@ -460,6 +460,9 @@ impl Engine for SlowAdaptEngine {
     fn scores_from_features_exact(&self) -> bool {
         self.inner.scores_from_features_exact()
     }
+    fn kernels(&self) -> dfr_edge::simd::Kernels {
+        self.inner.kernels()
+    }
     fn infer(&self, s: &Sample, mask: &Mask, p: f32, q: f32, w: &[f32]) -> Result<Vec<f32>> {
         self.inner.infer(s, mask, p, q, w)
     }

@@ -1,0 +1,476 @@
+//! SIMD kernel-table equivalence suite (DESIGN.md §18).
+//!
+//! Two equivalence classes, tested separately:
+//!
+//! * **bitwise** — the batched forward sweep kernels (`cascade_row`,
+//!   `dprr_row`, `dprr_bias`) preserve each lane's scalar op order
+//!   exactly, so the AVX2 table must reproduce the scalar table (and
+//!   the per-call `Reservoir::forward`) bit for bit at every batch
+//!   size, ragged mixes and frozen lanes included;
+//! * **tolerance-bounded** — the Gram/axpy/dot kernels reassociate and
+//!   use FMA, so they are pinned within a standard floating-point
+//!   accumulation bound (γ_n · Σ|terms|) instead.
+//!
+//! AVX2-dependent tests skip with a note on hosts without AVX2+FMA; the
+//! typed `--simd force` error path runs everywhere (the detection
+//! result is injected through `Kernels::try_select_with`).
+
+use dfr_edge::coordinator::{
+    scores_from_r_tilde_with, Engine, FeatureRequest, NativeEngine, ReservoirUpdate,
+};
+use dfr_edge::data::dataset::Sample;
+use dfr_edge::data::npz;
+use dfr_edge::dfr::mask::Mask;
+use dfr_edge::dfr::reservoir::{BatchLane, BatchScratch, Nonlinearity, Reservoir};
+use dfr_edge::quant::QuantEngine;
+use dfr_edge::simd::{avx2_available, Kernels, SimdError, SimdMode};
+use dfr_edge::util::prng::Pcg32;
+
+/// The AVX2 table, or `None` (with a skip note) on hosts that cannot
+/// run it — mirrors how CI forces the table only where supported.
+fn avx2_table(test: &str) -> Option<Kernels> {
+    match Kernels::try_select(SimdMode::Force) {
+        Ok(k) => Some(k),
+        Err(e) => {
+            eprintln!("{test}: skipped — {e}");
+            None
+        }
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x} vs {y} differ in bits"
+        );
+    }
+}
+
+/// Per-lane workload generator shared by the bitwise batch tests:
+/// ragged lengths, per-lane masks/(p, q) — everything the batch
+/// contract allows to vary.
+struct Lanes {
+    us: Vec<Vec<f32>>,
+    ts: Vec<usize>,
+    masks: Vec<Mask>,
+    ps: Vec<f32>,
+    qs: Vec<f32>,
+}
+
+impl Lanes {
+    fn random(rng: &mut Pcg32, b: usize, nx: usize) -> Lanes {
+        let mut l = Lanes {
+            us: Vec::with_capacity(b),
+            ts: Vec::with_capacity(b),
+            masks: Vec::with_capacity(b),
+            ps: Vec::with_capacity(b),
+            qs: Vec::with_capacity(b),
+        };
+        for _ in 0..b {
+            let v = 1 + rng.below(3) as usize;
+            let t = 1 + rng.below(24) as usize;
+            l.us.push((0..t * v).map(|_| 2.0 * (rng.uniform() - 0.5)).collect());
+            l.ts.push(t);
+            l.masks.push(Mask::random(nx, v, rng));
+            l.ps.push(0.1 + 0.5 * rng.uniform());
+            let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            l.qs.push(sign * 0.4 * rng.uniform());
+        }
+        l
+    }
+
+    fn lane(&self, l: usize) -> BatchLane<'_> {
+        BatchLane {
+            u: &self.us[l],
+            t: self.ts[l],
+            mask: &self.masks[l],
+            p: self.ps[l],
+            q: self.qs[l],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bitwise class: the batched forward sweep
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_forward_bitwise_scalar_vs_avx2_across_batch_sizes() {
+    let Some(vk) = avx2_table("batched_forward_bitwise_scalar_vs_avx2_across_batch_sizes")
+    else {
+        return;
+    };
+    let sk = Kernels::scalar();
+    let mut rng = Pcg32::seed(0x51D0_0001);
+    let nx = 7;
+    // Tanh exercises the scalar-libm round-trip lanes; Mackey–Glass
+    // (p_exp = 2) exercises the vectorized mul/div op chain.
+    for f in [
+        Nonlinearity::Tanh,
+        Nonlinearity::MackeyGlass { eta: 0.9, p_exp: 2.0 },
+    ] {
+        for &b in &[1usize, 2, 7, 8, 9, 64] {
+            let lanes = Lanes::random(&mut rng, b, nx);
+            let mut sc_s = BatchScratch::new();
+            let mut sc_v = BatchScratch::new();
+            sc_s.forward_batch_into_with(f, b, |l| lanes.lane(l), &sk);
+            sc_v.forward_batch_into_with(f, b, |l| lanes.lane(l), &vk);
+            for l in 0..b {
+                let a = sc_s.lane(l);
+                let c = sc_v.lane(l);
+                let tag = format!("{f:?} b={b} lane {l}");
+                assert_eq!(a.t_len, c.t_len, "{tag}: t_len");
+                assert_bits_eq(a.r_mat, c.r_mat, &format!("{tag}: r_mat"));
+                assert_bits_eq(a.x_t, c.x_t, &format!("{tag}: x_t"));
+                assert_bits_eq(a.x_tm1, c.x_tm1, &format!("{tag}: x_tm1"));
+                assert_bits_eq(a.j_t, c.j_t, &format!("{tag}: j_t"));
+                // and both equal the per-call reference forward
+                let res = Reservoir {
+                    mask: lanes.masks[l].clone(),
+                    p: lanes.ps[l],
+                    q: lanes.qs[l],
+                    f,
+                };
+                let fwd = res.forward(&lanes.us[l], lanes.ts[l]);
+                assert_bits_eq(c.r_mat, &fwd.r_mat, &format!("{tag}: vs per-call r_mat"));
+                assert_bits_eq(c.x_t, &fwd.x_t, &format!("{tag}: vs per-call x_t"));
+                assert_bits_eq(c.x_tm1, &fwd.x_tm1, &format!("{tag}: vs per-call x_tm1"));
+                assert_bits_eq(c.j_t, &fwd.j_t, &format!("{tag}: vs per-call j_t"));
+            }
+        }
+    }
+}
+
+/// Frozen lanes must be *blended*, not add-zeroed: a stored `-0.0`
+/// keeps its sign bit through a frozen step under both tables. Driven
+/// at the kernel level with frozen lanes in the 8-wide vector body AND
+/// in the scalar tail (b = 19).
+#[test]
+fn frozen_lanes_preserve_negative_zero_bits() {
+    let Some(vk) = avx2_table("frozen_lanes_preserve_negative_zero_bits") else {
+        return;
+    };
+    let sk = Kernels::scalar();
+    let mut rng = Pcg32::seed(0x51D0_0002);
+    let b = 19; // 16 vector lanes + 3 tail lanes
+    let frozen = [3usize, 5, 17]; // body, body, tail
+    let mut active = vec![u32::MAX; b];
+    for &l in &frozen {
+        active[l] = 0;
+    }
+    let mk = |rng: &mut Pcg32| -> Vec<f32> {
+        (0..b).map(|_| 2.0 * (rng.uniform() - 0.5)).collect()
+    };
+
+    // cascade_row: frozen x and cascade keep their exact old bits
+    let mut x_s = mk(&mut rng);
+    let mut cas_s = mk(&mut rng);
+    for &l in &frozen {
+        x_s[l] = -0.0;
+        cas_s[l] = -0.0;
+    }
+    let j = mk(&mut rng);
+    let ps = mk(&mut rng);
+    let qs = mk(&mut rng);
+    let (mut x_v, mut cas_v) = (x_s.clone(), cas_s.clone());
+    (sk.cascade_row)(Nonlinearity::Tanh, &ps, &qs, &mut x_s, &j, &mut cas_s, &active);
+    (vk.cascade_row)(Nonlinearity::Tanh, &ps, &qs, &mut x_v, &j, &mut cas_v, &active);
+    assert_bits_eq(&x_s, &x_v, "cascade_row x");
+    assert_bits_eq(&cas_s, &cas_v, "cascade_row cascade");
+    for &l in &frozen {
+        assert!(
+            x_v[l] == 0.0 && x_v[l].is_sign_negative(),
+            "frozen lane {l} lost its -0.0 ({})",
+            x_v[l]
+        );
+    }
+
+    // dprr_row / dprr_bias: frozen accumulators keep their old bits
+    let mut acc_s = mk(&mut rng);
+    for &l in &frozen {
+        acc_s[l] = -0.0;
+    }
+    let xi = mk(&mut rng);
+    let xm = mk(&mut rng);
+    let mut acc_v = acc_s.clone();
+    (sk.dprr_row)(&mut acc_s, &xi, &xm, &active);
+    (vk.dprr_row)(&mut acc_v, &xi, &xm, &active);
+    assert_bits_eq(&acc_s, &acc_v, "dprr_row acc");
+    let mut bias_s = acc_s.clone();
+    let mut bias_v = acc_v.clone();
+    (sk.dprr_bias)(&mut bias_s, &xi, &active);
+    (vk.dprr_bias)(&mut bias_v, &xi, &active);
+    assert_bits_eq(&bias_s, &bias_v, "dprr_bias acc");
+    for &l in &frozen {
+        assert!(
+            acc_v[l] == 0.0 && acc_v[l].is_sign_negative(),
+            "frozen acc lane {l} lost its -0.0 ({})",
+            acc_v[l]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tolerance class: Gram / axpy / dot
+// ---------------------------------------------------------------------------
+
+/// Accumulation-error budget for an n-term f32 sum whose terms have
+/// absolute-value total `abs_sum`: both orderings satisfy the textbook
+/// |fl(Σ) − Σ| ≤ γ_n·Σ|t_i| bound, so their difference is within twice
+/// that (doubled again for headroom — failures we care about are ULP
+/// blowups, not 2× constants).
+fn accum_tol(n: usize, abs_sum: f32) -> f32 {
+    4.0 * n as f32 * f32::EPSILON * abs_sum + 1e-12
+}
+
+#[test]
+fn gram_rankk_avx2_within_accumulation_tolerance() {
+    let Some(vk) = avx2_table("gram_rankk_avx2_within_accumulation_tolerance") else {
+        return;
+    };
+    let sk = Kernels::scalar();
+    let mut rng = Pcg32::seed(0x51D0_0003);
+    for &s in &[1usize, 3, 8, 13, 40] {
+        for &bs in &[1usize, 4, 8, 9, 32] {
+            let tri = s * (s + 1) / 2;
+            let init: Vec<f32> = (0..tri).map(|_| rng.uniform() - 0.5).collect();
+            let rs: Vec<f32> = (0..bs * s).map(|_| 2.0 * (rng.uniform() - 0.5)).collect();
+            let mut p_s = init.clone();
+            let mut p_v = init;
+            (sk.gram_rankk)(&mut p_s, &rs, s);
+            (vk.gram_rankk)(&mut p_v, &rs, s);
+            let mut idx = 0;
+            for i in 0..s {
+                for j in 0..=i {
+                    let abs_sum: f32 = (0..bs)
+                        .map(|b| (rs[b * s + i] * rs[b * s + j]).abs())
+                        .sum::<f32>()
+                        + p_s[idx].abs();
+                    let tol = accum_tol(bs + 1, abs_sum);
+                    assert!(
+                        (p_s[idx] - p_v[idx]).abs() <= tol,
+                        "s={s} B={bs} P[{i},{j}]: scalar {} vs avx2 {} (tol {tol})",
+                        p_s[idx],
+                        p_v[idx]
+                    );
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn axpy_and_dot_avx2_within_accumulation_tolerance() {
+    let Some(vk) = avx2_table("axpy_and_dot_avx2_within_accumulation_tolerance") else {
+        return;
+    };
+    let sk = Kernels::scalar();
+    let mut rng = Pcg32::seed(0x51D0_0004);
+    for &n in &[1usize, 3, 7, 8, 9, 11, 64, 931] {
+        let a = 2.0 * (rng.uniform() - 0.5);
+        let x: Vec<f32> = (0..n).map(|_| 2.0 * (rng.uniform() - 0.5)).collect();
+        let y: Vec<f32> = (0..n).map(|_| 2.0 * (rng.uniform() - 0.5)).collect();
+
+        // axpy: per element one FMA vs mul+round+add — at most one
+        // extra rounding of each term
+        let mut row_s = y.clone();
+        let mut row_v = y.clone();
+        (sk.axpy)(&mut row_s, a, &x);
+        (vk.axpy)(&mut row_v, a, &x);
+        for j in 0..n {
+            let tol = accum_tol(2, (a * x[j]).abs() + y[j].abs());
+            assert!(
+                (row_s[j] - row_v[j]).abs() <= tol,
+                "axpy n={n} [{j}]: {} vs {} (tol {tol})",
+                row_s[j],
+                row_v[j]
+            );
+        }
+
+        // dot: fully reassociated n-term reduction
+        let d_s = (sk.dot)(&x, &y);
+        let d_v = (vk.dot)(&x, &y);
+        let abs_sum: f32 = x.iter().zip(&y).map(|(p, q)| (p * q).abs()).sum();
+        let tol = accum_tol(n, abs_sum);
+        assert!(
+            (d_s - d_v).abs() <= tol,
+            "dot n={n}: {d_s} vs {d_v} (tol {tol})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// selection: the --simd force error path (runs on every host)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn force_without_avx2_is_a_typed_error() {
+    // detection injected false: the deterministic seam the CLI error
+    // path rides on hosts that DO have AVX2
+    let err = Kernels::try_select_with(SimdMode::Force, false)
+        .expect_err("force without detection must not hand out a vector table");
+    match &err {
+        SimdError::Unsupported { wanted, .. } => assert_eq!(*wanted, "avx2+fma"),
+        other => panic!("expected Unsupported, got {other:?}"),
+    }
+    // the operator-facing message names the flag and the ways out
+    let msg = err.to_string();
+    assert!(msg.contains("--simd force"), "{msg}");
+    assert!(msg.contains("off"), "{msg}");
+
+    // live detection agrees with the injected seam on this host
+    match Kernels::try_select(SimdMode::Force) {
+        Ok(k) => {
+            assert!(avx2_available());
+            assert_eq!(k.name, "avx2");
+        }
+        Err(e) => {
+            assert!(!avx2_available());
+            assert!(matches!(e, SimdError::Unsupported { .. }), "{e:?}");
+        }
+    }
+
+    // Off never fails, anywhere
+    assert_eq!(
+        Kernels::try_select_with(SimdMode::Off, true).unwrap().name,
+        "scalar"
+    );
+    // and a bad --simd value is the other typed error
+    let bad = SimdMode::parse("neon").expect_err("unknown mode must not parse");
+    assert!(matches!(bad, SimdError::BadMode(_)), "{bad:?}");
+    assert!(bad.to_string().contains("force|off|auto"), "{bad}");
+}
+
+// ---------------------------------------------------------------------------
+// cross-backend golden-fixture equivalence
+// ---------------------------------------------------------------------------
+
+fn golden(name: &str) -> std::collections::BTreeMap<String, npz::Array> {
+    let path = format!("artifacts/golden/{name}.npz");
+    npz::read_npz(&path).unwrap_or_else(|e| panic!("golden fixture {path}: {e:#}"))
+}
+
+/// Every serving backend must agree on the committed golden workloads:
+/// the scalar-table native engine (batched AND per-call), the AVX2
+/// native engine where the host supports it (bitwise — forward kernels
+/// are in the bitwise class), and the quant engine in its f32 fallback
+/// (which routes through the same native datapath).
+#[test]
+fn cross_backend_agreement_on_golden_fixtures() {
+    let f = Nonlinearity::Linear { alpha: 1.0 };
+    let vk = Kernels::try_select(SimdMode::Force).ok();
+    if vk.is_none() {
+        eprintln!("cross_backend_agreement_on_golden_fixtures: no AVX2 — scalar/quant legs only");
+    }
+    for name in ["small", "padded", "paper_nx30"] {
+        let g = golden(name);
+        let t = g["length"].scalar().unwrap() as usize;
+        let v = g["v"].scalar().unwrap() as usize;
+        let nx = g["nx"].scalar().unwrap() as usize;
+        let c = g["c"].scalar().unwrap() as usize;
+        let p = g["p"].scalar().unwrap();
+        let q = g["q"].scalar().unwrap();
+        let u = Mask::golden_inputs(g["t"].scalar().unwrap() as usize, v);
+        let mask = Mask::golden(nx, v);
+
+        // a ragged batch of prefixes of the fixture series
+        let ts = [t, t.max(2) - 1, (t / 2).max(1), t];
+        let samples: Vec<Sample> = ts
+            .iter()
+            .map(|&tl| Sample {
+                u: u[..tl * v].to_vec(),
+                t: tl,
+                label: 0,
+            })
+            .collect();
+        let reqs: Vec<FeatureRequest<'_>> = samples
+            .iter()
+            .map(|s| FeatureRequest { sample: s, mask: &mask, p, q })
+            .collect();
+        let b = reqs.len();
+
+        let eng_scalar = NativeEngine::with_kernels(nx, c, f, Kernels::scalar());
+        let mut feats = vec![Vec::new(); b];
+        eng_scalar.features_batch_into(&reqs, &mut feats).unwrap();
+        // batched == per-call, bitwise
+        for (l, s) in samples.iter().enumerate() {
+            let per_call = eng_scalar.features(s, &mask, p, q).unwrap();
+            assert_bits_eq(&feats[l], &per_call, &format!("{name} lane {l}: scalar"));
+        }
+
+        // AVX2 native engine: bitwise-equal features
+        if let Some(k) = vk {
+            let eng_simd = NativeEngine::with_kernels(nx, c, f, k);
+            let mut feats_v = vec![Vec::new(); b];
+            eng_simd.features_batch_into(&reqs, &mut feats_v).unwrap();
+            for l in 0..b {
+                assert_bits_eq(
+                    &feats_v[l],
+                    &feats[l],
+                    &format!("{name} lane {l}: avx2 vs scalar"),
+                );
+            }
+        }
+
+        // quant engine, pushed into its f32 fallback (p·L_f + |q| ≥ 1
+        // → +∞ bound): serving IS the native datapath
+        let quant = QuantEngine::new(nx, c);
+        let r = quant
+            .recalibrate(&ReservoirUpdate {
+                p: 0.8,
+                q: 0.5,
+                n_v: v,
+                t_max: t,
+                u_max: 2.0,
+            })
+            .unwrap();
+        assert!(r.fell_back, "{name}: fallback recipe stopped working");
+        assert!(quant.is_fallback());
+        let mut feats_q = vec![Vec::new(); b];
+        quant.features_batch_into(&reqs, &mut feats_q).unwrap();
+        for l in 0..b {
+            assert_bits_eq(
+                &feats_q[l],
+                &feats[l],
+                &format!("{name} lane {l}: quant-fallback vs scalar"),
+            );
+        }
+
+        // scoring: scalar-table scores are bitwise the per-call infer;
+        // vector-table scores agree within the dot reduction budget
+        let sdim = feats[0].len();
+        let w_tilde: Vec<f32> = (0..c * sdim)
+            .map(|i| 0.01 * (0.05 * i as f32).sin())
+            .collect();
+        for (l, s) in samples.iter().enumerate() {
+            let mut z = Vec::new();
+            scores_from_r_tilde_with(&w_tilde, &feats[l], &mut z, &Kernels::scalar());
+            let per_call = eng_scalar.infer(s, &mask, p, q, &w_tilde).unwrap();
+            assert_bits_eq(&z, &per_call, &format!("{name} lane {l}: scalar scores"));
+            if let Some(k) = vk {
+                let mut zv = Vec::new();
+                scores_from_r_tilde_with(&w_tilde, &feats[l], &mut zv, &k);
+                for (i, (a, bb)) in z.iter().zip(&zv).enumerate() {
+                    assert!(
+                        (a - bb).abs() <= 1e-5,
+                        "{name} lane {l} score {i}: {a} vs {bb}"
+                    );
+                }
+            }
+            // quant fallback infer rides whatever table its inner
+            // native engine selected (env-dependent under DFR_SIMD), so
+            // the cross-check is tolerance-bounded, not bitwise
+            let zq = quant.infer(s, &mask, p, q, &w_tilde).unwrap();
+            for (i, (a, bb)) in z.iter().zip(&zq).enumerate() {
+                assert!(
+                    (a - bb).abs() <= 1e-5,
+                    "{name} lane {l} quant score {i}: {a} vs {bb}"
+                );
+            }
+        }
+    }
+}

@@ -200,6 +200,62 @@ fn batched_features_are_allocation_free_after_warmup() {
 }
 
 #[test]
+fn simd_batched_features_are_allocation_free_after_warmup() {
+    use dfr_edge::coordinator::engine::FeatureRequest;
+    use dfr_edge::dfr::reservoir::Nonlinearity;
+    use dfr_edge::simd::{Kernels, SimdMode};
+    // the AVX2 kernel table must not change the allocation story: the
+    // vector kernels work in place on the same grow-only BatchScratch
+    // buffers (no stack-to-heap spills, no per-sweep staging)
+    let Ok(k) = Kernels::try_select(SimdMode::Force) else {
+        eprintln!("simd_batched_features_are_allocation_free_after_warmup: no AVX2 — skipped");
+        return;
+    };
+    let (nx, v, n_c) = (30usize, 12usize, 9usize);
+    let mut rng = Pcg32::seed(0xBA7C1);
+    let eng = NativeEngine::with_kernels(nx, n_c, Nonlinearity::Linear { alpha: 1.0 }, k);
+    let masks: Vec<Mask> = (0..8).map(|_| Mask::random(nx, v, &mut rng)).collect();
+    let samples: Vec<Sample> = (0..8)
+        .map(|i| {
+            let t = 21 + i; // ragged lanes: the blend/tail paths run too
+            Sample {
+                u: (0..t * v).map(|_| rng.normal()).collect(),
+                t,
+                label: 0,
+            }
+        })
+        .collect();
+    let reqs: Vec<FeatureRequest<'_>> = masks
+        .iter()
+        .zip(&samples)
+        .enumerate()
+        .map(|(i, (mask, sample))| FeatureRequest {
+            sample,
+            mask,
+            p: 0.15 + 0.01 * i as f32,
+            q: 0.1,
+        })
+        .collect();
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); 8];
+    eng.features_batch_into(&reqs, &mut outs).unwrap();
+
+    let n = allocations_in(|| {
+        for _ in 0..25 {
+            eng.features_batch_into(&reqs, &mut outs).unwrap();
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "steady-state SIMD features_batch_into performed {n} heap allocations"
+    );
+    let s_dim = nx * nx + nx + 1;
+    for out in &outs {
+        assert_eq!(out.len(), s_dim);
+        assert_eq!(*out.last().unwrap(), 1.0);
+    }
+}
+
+#[test]
 fn session_batched_feed_is_allocation_free_after_warmup() {
     use dfr_edge::coordinator::session::{FeedOutcome, Session, SessionConfig};
     use dfr_edge::data::profiles::Profile;

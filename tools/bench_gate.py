@@ -21,8 +21,18 @@ legitimately omit rows. The gate therefore passes trivially on a
 null-only baseline while still arming itself the moment real numbers are
 committed.
 
+``--update`` flips the direction of the tool: instead of gating, it
+refreshes the committed root snapshots in place from the freshest
+results, overwriting only the *measurable* leaves (the same
+``leaf_direction`` classification the gate compares) and leaving
+structure, ``_comment`` strings and ``scale`` records untouched. This is
+how the null medians get replaced after the first bench run on a
+toolchain-bearing machine: ``cargo bench && python3 tools/bench_gate.py
+--update``, then commit the changed BENCH_*.json.
+
 Exit status: 0 = no regressions (possibly everything skipped), 1 = at
-least one regression, 2 = usage/IO error.
+least one regression, 2 = usage/IO error. ``--update`` exits 0 unless a
+snapshot or results file cannot be read (2).
 """
 
 from __future__ import annotations
@@ -113,6 +123,67 @@ def gate_file(baseline_path: Path, results_dirs, threshold: float):
     return regressions, compared, skipped
 
 
+def merge_update(baseline, fresh, path, changed):
+    """Overwrite baseline's measurable leaves in place with fresh values.
+
+    Mirrors ``walk``'s traversal: only keys the gate would compare are
+    touched, so comments, scale records and rows absent from the fresh
+    run survive unchanged.
+    """
+    if isinstance(baseline, dict) and isinstance(fresh, dict):
+        for key, old in baseline.items():
+            if key in SKIP_KEYS or key not in fresh:
+                continue
+            new = fresh[key]
+            if isinstance(old, (dict, list)):
+                merge_update(old, new, f"{path}.{key}", changed)
+            elif leaf_direction(key) is not None and is_number(new) and new != old:
+                baseline[key] = new
+                changed.append(f"{path}.{key}")
+    elif isinstance(baseline, list) and isinstance(fresh, list):
+        key = path.rsplit(".", 1)[-1].split("[", 1)[0]
+        for i, old in enumerate(baseline):
+            if i >= len(fresh):
+                continue
+            if isinstance(old, (dict, list)):
+                merge_update(old, fresh[i], f"{path}[{i}]", changed)
+            elif leaf_direction(key) is not None and is_number(fresh[i]) and fresh[i] != old:
+                baseline[i] = fresh[i]
+                changed.append(f"{path}[{i}]")
+
+
+def update_file(baseline_path: Path, results_dirs) -> int:
+    """Refresh one committed snapshot from results/. Returns leaves changed."""
+    fresh_path = None
+    for d in results_dirs:
+        cand = d / baseline_path.name
+        if cand.is_file():
+            fresh_path = cand
+            break
+    if fresh_path is None:
+        dirs = ", ".join(str(d) for d in results_dirs)
+        print(
+            f"  {baseline_path.name}: skipped — no fresh copy under {dirs}. "
+            f"Run `cargo bench` (in rust/) first; it writes the results file "
+            f"this mode copies medians from."
+        )
+        return 0
+
+    baseline = json.loads(baseline_path.read_text())
+    fresh = json.loads(fresh_path.read_text())
+    changed = []
+    merge_update(baseline, fresh, baseline_path.stem, changed)
+    if changed:
+        baseline_path.write_text(json.dumps(baseline, indent=2) + "\n")
+        for p in changed:
+            print(f"  updated {p}")
+    print(
+        f"  {baseline_path.name}: {len(changed)} median(s) refreshed "
+        f"from {fresh_path}"
+    )
+    return len(changed)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument(
@@ -135,6 +206,12 @@ def main() -> int:
         default=0.20,
         help="fractional regression tolerance on each median (default 0.20)",
     )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="refresh the committed snapshots' measurable medians in place "
+        "from the freshest results instead of gating",
+    )
     args = ap.parse_args()
 
     root = args.repo_root
@@ -143,6 +220,18 @@ def main() -> int:
     if not snapshots:
         print(f"no BENCH_*.json snapshots under {root}", file=sys.stderr)
         return 2
+
+    if args.update:
+        print(f"bench gate: refreshing committed medians in {root}")
+        total = 0
+        for snap in snapshots:
+            try:
+                total += update_file(snap, results_dirs)
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"  {snap.name}: {e}", file=sys.stderr)
+                return 2
+        print(f"bench gate: {total} median(s) refreshed — review and commit")
+        return 0
 
     print(f"bench gate: threshold {args.threshold:.0%}, baselines in {root}")
     total_reg = total_cmp = total_skip = 0
